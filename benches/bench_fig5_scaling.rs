@@ -1,0 +1,68 @@
+//! Fig. 5 companion bench: wall-time scaling of Sinkhorn vs Spar-Sink
+//! for OT and UOT as n grows — regenerates the paper's timing rows with
+//! statistical repetition (the `repro experiment fig5` harness does the
+//! single-shot version).
+
+use spar_sink::bench::Bencher;
+use spar_sink::data::synthetic::{instance, Scenario, SparsityRegime};
+use spar_sink::experiments::common::{
+    exact_uot, gibbs_kernel_inf, ot_cost, run_method_ot, run_method_uot, wfr_cost_at_density,
+    Method,
+};
+use spar_sink::ot::cost::gibbs_kernel;
+use spar_sink::ot::sinkhorn::{sinkhorn_ot, SinkhornParams};
+use spar_sink::rng::Rng;
+
+fn main() {
+    let mut bencher = Bencher::quick();
+    let eps = 0.05;
+    // OT scaling.
+    for &n in &[800usize, 1600, 3200] {
+        let mut rng = Rng::seed_from(5);
+        let inst = instance(Scenario::C1, n, 5, 1.0, 1.0, &mut rng);
+        let cost = ot_cost(&inst.points);
+        let kernel = gibbs_kernel(&cost, eps);
+        bencher.bench(format!("ot/sinkhorn/n={n}"), || {
+            std::hint::black_box(
+                sinkhorn_ot(&kernel, &cost, &inst.a, &inst.b, eps, &SinkhornParams::default())
+                    .unwrap(),
+            );
+        });
+        bencher.bench(format!("ot/spar-sink/n={n}"), || {
+            let mut r = Rng::seed_from(6);
+            let _ = std::hint::black_box(run_method_ot(
+                Method::SparSink,
+                &cost,
+                &inst.a,
+                &inst.b,
+                eps,
+                8.0,
+                &mut r,
+            ));
+        });
+    }
+    // UOT scaling (WFR @ 50% density).
+    for &n in &[800usize, 1600] {
+        let mut rng = Rng::seed_from(7);
+        let inst = instance(Scenario::C1, n, 5, 5.0, 3.0, &mut rng);
+        let cost = wfr_cost_at_density(&inst.points, SparsityRegime::R2.density());
+        let _ = gibbs_kernel_inf(&cost, eps); // warm the kernel build path
+        bencher.bench(format!("uot/sinkhorn/n={n}"), || {
+            let _ = std::hint::black_box(exact_uot(&cost, &inst.a, &inst.b, 0.1, eps));
+        });
+        bencher.bench(format!("uot/spar-sink/n={n}"), || {
+            let mut r = Rng::seed_from(8);
+            let _ = std::hint::black_box(run_method_uot(
+                Method::SparSink,
+                &cost,
+                &inst.a,
+                &inst.b,
+                0.1,
+                eps,
+                8.0,
+                &mut r,
+            ));
+        });
+    }
+    println!("\n{}", bencher.report("bench_fig5_scaling"));
+}

@@ -1,0 +1,46 @@
+//! PJRT runtime benchmark: the AOT `sinkhorn_block` execution (L1
+//! Pallas + L2 JAX lowered to HLO) vs the native Rust dense iteration —
+//! the block-size ablation noted in DESIGN.md §7.
+
+use std::sync::Arc;
+
+use spar_sink::bench::Bencher;
+use spar_sink::data::synthetic::{instance, Scenario};
+use spar_sink::experiments::common::ot_cost;
+use spar_sink::ot::cost::gibbs_kernel;
+use spar_sink::ot::sinkhorn::{sinkhorn_scalings, SinkhornParams};
+use spar_sink::rng::Rng;
+use spar_sink::runtime::{default_artifact_dir, manifest_path, ArtifactRegistry, DenseSinkhornRuntime, Entry};
+
+fn main() {
+    let dir = default_artifact_dir();
+    if !manifest_path(&dir).exists() {
+        println!("artifacts not built — skipping runtime bench (run `make artifacts`)");
+        return;
+    }
+    let registry = Arc::new(ArtifactRegistry::open(&dir).expect("registry"));
+    let runtime = DenseSinkhornRuntime::new(registry.clone());
+    let mut bencher = Bencher::quick();
+
+    for n in registry.sizes(Entry::SinkhornBlock) {
+        let mut rng = Rng::seed_from(9);
+        let inst = instance(Scenario::C1, n, 5, 1.0, 1.0, &mut rng);
+        let cost = ot_cost(&inst.points);
+        let eps = 0.1;
+        let kernel = gibbs_kernel(&cost, eps);
+        // Fixed 50 iterations for comparability.
+        let iters = 50;
+        bencher.bench(format!("pjrt_block/n={n}/{iters}iters"), || {
+            let _ = std::hint::black_box(runtime.solve_ot(
+                &kernel, &cost, &inst.a, &inst.b, eps, 0.0, iters,
+            ));
+        });
+        bencher.bench(format!("native_dense/n={n}/{iters}iters"), || {
+            let params = SinkhornParams { delta: 0.0, max_iters: iters, strict: false };
+            let _ = std::hint::black_box(sinkhorn_scalings(
+                &kernel, &inst.a, &inst.b, 1.0, &params,
+            ));
+        });
+    }
+    println!("\n{}", bencher.report("bench_runtime"));
+}

@@ -1,0 +1,54 @@
+//! End-to-end solver benchmark at matched budgets (paper Fig. 5
+//! companion): one full solve per method per size.
+
+use spar_sink::bench::Bencher;
+use spar_sink::data::synthetic::{instance, Scenario};
+use spar_sink::experiments::common::{ot_cost, run_method_ot, Method};
+use spar_sink::ot::cost::gibbs_kernel;
+use spar_sink::ot::sinkhorn::{sinkhorn_ot, SinkhornParams};
+use spar_sink::rng::Rng;
+use spar_sink::solvers::greenkhorn::{greenkhorn_ot, GreenkhornParams};
+use spar_sink::solvers::screenkhorn::{screenkhorn_ot, ScreenkhornParams};
+
+fn main() {
+    let mut bencher = Bencher::quick();
+    let eps = 0.05;
+    for &n in &[500usize, 1000, 2000] {
+        let mut rng = Rng::seed_from(3);
+        let inst = instance(Scenario::C1, n, 5, 1.0, 1.0, &mut rng);
+        let cost = ot_cost(&inst.points);
+        let kernel = gibbs_kernel(&cost, eps);
+
+        bencher.bench(format!("sinkhorn/n={n}"), || {
+            std::hint::black_box(
+                sinkhorn_ot(&kernel, &cost, &inst.a, &inst.b, eps, &SinkhornParams::default())
+                    .unwrap(),
+            );
+        });
+        bencher.bench(format!("greenkhorn/n={n}"), || {
+            std::hint::black_box(
+                greenkhorn_ot(&kernel, &cost, &inst.a, &inst.b, eps, &GreenkhornParams::default())
+                    .unwrap(),
+            );
+        });
+        bencher.bench(format!("screenkhorn/n={n}"), || {
+            let _ = std::hint::black_box(screenkhorn_ot(
+                &kernel,
+                &cost,
+                &inst.a,
+                &inst.b,
+                eps,
+                &ScreenkhornParams::default(),
+            ));
+        });
+        for method in Method::all() {
+            bencher.bench(format!("{}/n={n}", method.name()), || {
+                let mut r = Rng::seed_from(4);
+                let _ = std::hint::black_box(run_method_ot(
+                    method, &cost, &inst.a, &inst.b, eps, 8.0, &mut r,
+                ));
+            });
+        }
+    }
+    println!("\n{}", bencher.report("bench_solvers"));
+}

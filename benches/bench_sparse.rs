@@ -1,0 +1,60 @@
+//! Microbench: CSR sparse matvec vs dense matvec, and the Poisson
+//! sparsifier construction pass — the O(s)-per-iteration claim of
+//! Section 5.2.
+
+use spar_sink::bench::Bencher;
+use spar_sink::data::synthetic::{instance, Scenario};
+use spar_sink::experiments::common::ot_cost;
+use spar_sink::metrics::s0;
+use spar_sink::ot::cost::gibbs_kernel;
+use spar_sink::rng::Rng;
+use spar_sink::sparse::poisson_sparsify_ot;
+
+fn main() {
+    let mut bencher = Bencher::default();
+    for &n in &[1000usize, 2000, 4000] {
+        let mut rng = Rng::seed_from(1);
+        let inst = instance(Scenario::C1, n, 5, 1.0, 1.0, &mut rng);
+        let cost = ot_cost(&inst.points);
+        let eps = 0.05;
+        let kernel = gibbs_kernel(&cost, eps);
+        let s = 8.0 * s0(n);
+        let (sketch, _) = poisson_sparsify_ot(
+            |i, j| kernel.get(i, j),
+            |i, j| cost.get(i, j),
+            &inst.a,
+            &inst.b,
+            s,
+            1.0,
+            &mut rng,
+        )
+        .unwrap();
+        let x: Vec<f64> = (0..n).map(|i| 1.0 + (i % 7) as f64 * 0.1).collect();
+
+        bencher.bench(format!("dense_matvec/n={n}"), || {
+            std::hint::black_box(kernel.matvec(std::hint::black_box(&x)));
+        });
+        bencher.bench(
+            format!("sparse_matvec/n={n}/nnz={}", sketch.nnz()),
+            || {
+                std::hint::black_box(sketch.matvec(std::hint::black_box(&x)));
+            },
+        );
+        bencher.bench(format!("sparsify_construct/n={n}"), || {
+            let mut r = Rng::seed_from(2);
+            std::hint::black_box(
+                poisson_sparsify_ot(
+                    |i, j| kernel.get(i, j),
+                    |i, j| cost.get(i, j),
+                    &inst.a,
+                    &inst.b,
+                    s,
+                    1.0,
+                    &mut r,
+                )
+                .unwrap(),
+            );
+        });
+    }
+    println!("\n{}", bencher.report("bench_sparse"));
+}

@@ -1,0 +1,47 @@
+//! Quickstart: approximate an entropic OT distance with Spar-Sink and
+//! compare against the exact Sinkhorn solution.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use spar_sink::data::synthetic::{instance, Scenario};
+use spar_sink::experiments::common::{exact_ot, ot_cost};
+use spar_sink::rng::Rng;
+use spar_sink::solvers::spar_sink::{spar_sink_ot, SparSinkParams};
+
+fn main() {
+    let n = 1000;
+    let d = 5;
+    let eps = 0.05;
+    let mut rng = Rng::seed_from(7);
+
+    // 1. A C1 workload: Gaussian histograms on uniform support (Sec. 5.1).
+    let inst = instance(Scenario::C1, n, d, 1.0, 1.0, &mut rng);
+    let cost = ot_cost(&inst.points);
+
+    // 2. Exact entropic OT via the classical Sinkhorn algorithm.
+    let t0 = std::time::Instant::now();
+    let exact = exact_ot(&cost, &inst.a, &inst.b, eps).expect("sinkhorn");
+    let exact_time = t0.elapsed();
+
+    // 3. Spar-Sink at s = 8·s0(n) — expected O(n log^4 n) sampled entries.
+    let t0 = std::time::Instant::now();
+    let approx = spar_sink_ot(&cost, &inst.a, &inst.b, eps, 8.0, &SparSinkParams::default(), &mut rng)
+        .expect("spar-sink");
+    let spar_time = t0.elapsed();
+
+    println!("n = {n}, d = {d}, eps = {eps}");
+    println!("exact  OT_eps = {:>12.6}   ({exact_time:?})", exact);
+    println!(
+        "spar   OT_eps = {:>12.6}   ({spar_time:?}, nnz = {} of {})",
+        approx.solution.objective,
+        approx.stats.nnz,
+        n * n
+    );
+    println!(
+        "relative error = {:.4}   speedup = {:.1}x",
+        (approx.solution.objective - exact).abs() / exact.abs(),
+        exact_time.as_secs_f64() / spar_time.as_secs_f64()
+    );
+}

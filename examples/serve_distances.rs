@@ -1,0 +1,163 @@
+//! END-TO-END DRIVER: the full three-layer system on a real workload.
+//!
+//! Serves batched WFR-distance requests for a fleet of synthetic
+//! echocardiogram videos through the coordinator (L3), with the exact
+//! dense path executed on the PJRT runtime (L2 JAX blocks + L1 Pallas
+//! kernels compiled AOT to `artifacts/*.hlo.txt`) where the artifact
+//! menu covers the support size, cross-checked against the native
+//! Spar-Sink path. Reports per-method latency/throughput and the
+//! accuracy gap — proving all layers compose.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example serve_distances
+//! ```
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use spar_sink::coordinator::{
+    CoordinatorConfig, DistanceJob, DistanceService, Measure, Method, ProblemSpec,
+};
+use spar_sink::data::echo::{downsample_frames, frame_to_measure, generate, EchoConfig, Health};
+use spar_sink::linalg::Mat;
+use spar_sink::ot::cost::{euclidean, wfr_cost_from_distance, wfr_kernel_from_distance};
+use spar_sink::rng::Rng;
+use spar_sink::runtime::{default_artifact_dir, manifest_path, ArtifactRegistry, DenseSinkhornRuntime};
+
+fn main() {
+    let size = 24; // keeps supports <= 1024 so the PJRT menu covers them
+    let videos = 3;
+    let spec = ProblemSpec { eta: size as f64 / 7.5, eps: 0.05, s_multiplier: 8.0, ..Default::default() };
+    let mut rng = Rng::seed_from(31);
+
+    // Build the workload: all frame pairs of each video.
+    let mut measures_all: Vec<Vec<Measure>> = Vec::new();
+    for v in 0..videos {
+        let video = generate(
+            &EchoConfig {
+                size,
+                frames: 24,
+                period: 8.0,
+                health: [Health::Normal, Health::HeartFailure, Health::Arrhythmia][v % 3],
+                noise: 0.01,
+            },
+            &mut rng,
+        );
+        let keep = downsample_frames(&video, 3);
+        measures_all.push(
+            keep.iter()
+                .map(|&i| {
+                    let (pts, mass) = frame_to_measure(&video.frames[i], size, 0.05);
+                    Measure::new(pts, mass)
+                })
+                .collect(),
+        );
+    }
+
+    // --- L3 coordinator path (Spar-Sink + exact Sinkhorn jobs) ---
+    let service = DistanceService::start(CoordinatorConfig::default());
+    let mut jobs = Vec::new();
+    let mut id = 0u64;
+    for frames in &measures_all {
+        for i in 0..frames.len() {
+            for j in (i + 1)..frames.len() {
+                for method in [Method::SparSink, Method::Sinkhorn] {
+                    jobs.push(DistanceJob {
+                        id,
+                        source: frames[i].clone(),
+                        target: frames[j].clone(),
+                        method,
+                        spec: spec.clone(),
+                        seed: id,
+                    });
+                    id += 1;
+                }
+            }
+        }
+    }
+    let total_jobs = jobs.len();
+    println!("submitting {total_jobs} WFR jobs ({videos} videos) to the coordinator…");
+    let t0 = Instant::now();
+    let results = service.submit_all(jobs).expect("service");
+    let wall = t0.elapsed();
+    let ok = results.iter().filter(|r| r.error.is_none()).count();
+    // Accuracy: pair up (spar, sinkhorn) results.
+    let mut gaps = Vec::new();
+    for pair in results.chunks(2) {
+        if let [a, b] = pair {
+            if a.error.is_none() && b.error.is_none() {
+                gaps.push((a.objective - b.objective).abs() / b.objective.abs().max(1e-12));
+            }
+        }
+    }
+    let mean_gap = gaps.iter().sum::<f64>() / gaps.len().max(1) as f64;
+    println!(
+        "coordinator: {ok}/{total_jobs} ok in {wall:?}  mean spar-vs-exact objective gap {mean_gap:.4}"
+    );
+    println!("{}\n", service.shutdown().render());
+
+    // --- PJRT runtime path: the same UOT solve through the AOT stack ---
+    let dir = default_artifact_dir();
+    if !manifest_path(&dir).exists() {
+        println!("artifacts not built — skipping PJRT cross-check (run `make artifacts`)");
+        return;
+    }
+    let registry = Arc::new(ArtifactRegistry::open(&dir).expect("registry"));
+    let runtime = DenseSinkhornRuntime::new(registry);
+    let frames = &measures_all[0];
+    let (src, dst) = (&frames[0], &frames[frames.len() / 2]);
+    let (n_s, n_t) = (src.len(), dst.len());
+    let n = n_s.max(n_t);
+    // Shared padded support: embed both measures in one index space.
+    let kernel = Mat::from_fn(n, n, |i, j| {
+        if i < n_s && j < n_t {
+            wfr_kernel_from_distance(euclidean(&src.points[i], &dst.points[j]), spec.eta, spec.eps)
+        } else if i == j {
+            1.0
+        } else {
+            0.0
+        }
+    });
+    let cost = Mat::from_fn(n, n, |i, j| {
+        if i < n_s && j < n_t {
+            let c = wfr_cost_from_distance(euclidean(&src.points[i], &dst.points[j]), spec.eta);
+            if c.is_finite() { c } else { 0.0 }
+        } else {
+            0.0
+        }
+    });
+    let mut a = vec![1e-12; n];
+    a[..n_s].copy_from_slice(&src.mass);
+    let mut b = vec![1e-12; n];
+    b[..n_t].copy_from_slice(&dst.mass);
+
+    let t0 = Instant::now();
+    match runtime.solve_uot(&kernel, &cost, &a, &b, spec.lambda, spec.eps, 1e-6, 1000) {
+        Ok(sol) => {
+            println!(
+                "PJRT runtime (L1 Pallas + L2 JAX + PJRT CPU): UOT objective {:.6} in {:?} ({} iters, converged {})",
+                sol.objective,
+                t0.elapsed(),
+                sol.iterations,
+                sol.converged
+            );
+            // Native cross-check.
+            let native = spar_sink::ot::uot::sinkhorn_uot(
+                &kernel,
+                &cost,
+                &a,
+                &b,
+                spec.lambda,
+                spec.eps,
+                &spar_sink::ot::sinkhorn::SinkhornParams::default(),
+            )
+            .expect("native");
+            let rel = (sol.objective - native.objective).abs() / native.objective.abs().max(1e-12);
+            println!(
+                "native Rust solver:                            UOT objective {:.6}  (relative gap {rel:.2e})",
+                native.objective
+            );
+        }
+        Err(e) => println!("runtime solve failed: {e}"),
+    }
+}

@@ -1,0 +1,83 @@
+"""AOT pipeline: lower every L2 entry point to HLO *text* artifacts.
+
+Interchange format is HLO text, NOT a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the runtime's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage::
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits ``<entry>_n<N>.hlo.txt`` for every entry point in ``model.ENTRIES``
+and every N in the size menu, plus a ``manifest.json`` the Rust runtime
+uses to discover the menu.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+
+from compile import model
+
+# Size menu.  The Rust coordinator pads any request up to the next menu
+# size (padded rows carry zero mass; validated in runtime tests).
+SIZES = (64, 256, 1024)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(name: str, n: int) -> str:
+    fn = model.ENTRIES[name]
+    specs = model.specs_for(n)[name]
+    lowered = jax.jit(fn).lower(*specs)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument(
+        "--sizes", type=int, nargs="*", default=list(SIZES),
+        help="problem-size menu to compile",
+    )
+    parser.add_argument(
+        "--entries", nargs="*", default=list(model.ENTRIES),
+        help="subset of entry points to lower",
+    )
+    args = parser.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"block_iters": model.BLOCK_ITERS, "artifacts": []}
+    for name in args.entries:
+        for n in args.sizes:
+            text = lower_entry(name, n)
+            fname = f"{name}_n{n}.hlo.txt"
+            path = os.path.join(args.out_dir, fname)
+            with open(path, "w") as f:
+                f.write(text)
+            manifest["artifacts"].append(
+                {"entry": name, "n": n, "file": fname, "bytes": len(text)}
+            )
+            print(f"lowered {name} n={n}: {len(text)} chars -> {path}")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"manifest: {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,152 @@
+"""L1 — Pallas kernels for the Sinkhorn scaling iteration hot-spot.
+
+The Sinkhorn/unbalanced-Sinkhorn iteration is dominated by the pair of
+kernel-matrix/vector products ``z = K v`` and ``z' = K^T u`` followed by an
+element-wise scaling update ``u = (a / z) ** rho`` (``rho = 1`` for balanced
+OT, ``rho = lambda / (lambda + eps)`` for UOT; see Algorithms 1-2 of the
+paper).  These kernels tile ``K`` into (block_rows x block_cols) VMEM tiles
+with a 2-D grid; the inner grid dimension streams column (resp. row) tiles
+into an output-resident accumulator and the division epilogue is fused into
+the final tile so the intermediate ``z`` never round-trips to HBM.
+
+Hardware adaptation (see DESIGN.md §6): the paper's CUDA-oriented dense BLAS
+hot-spot becomes a BlockSpec-scheduled HBM->VMEM tile stream; on a real TPU
+the (bn x bm) @ (bm x 1) products map onto the MXU.  Everything here is
+lowered with ``interpret=True`` because the CPU PJRT plugin cannot execute
+Mosaic custom-calls; numerics are validated against ``ref.py`` in pytest.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes.  128 matches the MXU lane width; callers may override
+# (tests sweep small tiles).  Shapes must be divisible by the tile size —
+# `aot.py` only emits sizes from the supported menu, and the Rust runtime
+# zero-pads requests up to the next menu size.
+DEFAULT_BLOCK_ROWS = 128
+DEFAULT_BLOCK_COLS = 128
+
+
+def _kv_scale_kernel(k_ref, v_ref, a_ref, u_ref, *, n_col_tiles):
+    """One (row-tile, col-tile) grid step of ``u = a / (K @ v)``.
+
+    The output block is revisited by every column tile (its index map is
+    constant in ``c``), so it doubles as the VMEM accumulator for the
+    partial row sums; the last column tile applies the fused division
+    epilogue in place.
+    """
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        u_ref[...] = jnp.zeros_like(u_ref)
+
+    u_ref[...] += k_ref[...] @ v_ref[...]
+
+    @pl.when(c == n_col_tiles - 1)
+    def _epilogue():
+        u_ref[...] = a_ref[...] / u_ref[...]
+
+
+def _ktu_scale_kernel(k_ref, u_ref, b_ref, v_ref, *, n_row_tiles):
+    """One (col-tile, row-tile) grid step of ``v = b / (K.T @ u)``."""
+    r = pl.program_id(1)
+
+    @pl.when(r == 0)
+    def _init():
+        v_ref[...] = jnp.zeros_like(v_ref)
+
+    v_ref[...] += k_ref[...].T @ u_ref[...]
+
+    @pl.when(r == n_row_tiles - 1)
+    def _epilogue():
+        v_ref[...] = b_ref[...] / v_ref[...]
+
+
+def _check_tiling(n: int, m: int, bn: int, bm: int) -> None:
+    if n % bn != 0 or m % bm != 0:
+        raise ValueError(
+            f"matrix ({n}x{m}) not divisible by tile ({bn}x{bm}); "
+            "pad to the artifact size menu first"
+        )
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "block_cols"))
+def kv_scale(
+    kmat: jax.Array,
+    v: jax.Array,
+    a: jax.Array,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    block_cols: int = DEFAULT_BLOCK_COLS,
+) -> jax.Array:
+    """``u = a / (K @ v)`` via the tiled Pallas kernel.
+
+    Args:
+      kmat: (n, m) kernel matrix.
+      v:    (m, 1) scaling column.
+      a:    (n, 1) source marginal.
+    Returns:
+      (n, 1) updated scaling ``u`` (before any UOT exponent).
+    """
+    n, m = kmat.shape
+    bn = min(block_rows, n)
+    bm = min(block_cols, m)
+    _check_tiling(n, m, bn, bm)
+    n_col_tiles = m // bm
+    kernel = functools.partial(_kv_scale_kernel, n_col_tiles=n_col_tiles)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // bn, n_col_tiles),
+        in_specs=[
+            pl.BlockSpec((bn, bm), lambda r, c: (r, c)),
+            pl.BlockSpec((bm, 1), lambda r, c: (c, 0)),
+            pl.BlockSpec((bn, 1), lambda r, c: (r, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, 1), lambda r, c: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 1), kmat.dtype),
+        interpret=True,
+    )(kmat, v, a)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "block_cols"))
+def ktu_scale(
+    kmat: jax.Array,
+    u: jax.Array,
+    b: jax.Array,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    block_cols: int = DEFAULT_BLOCK_COLS,
+) -> jax.Array:
+    """``v = b / (K.T @ u)`` via the tiled Pallas kernel.
+
+    Args:
+      kmat: (n, m) kernel matrix (NOT pre-transposed).
+      u:    (n, 1) scaling column.
+      b:    (m, 1) target marginal.
+    Returns:
+      (m, 1) updated scaling ``v`` (before any UOT exponent).
+    """
+    n, m = kmat.shape
+    bn = min(block_rows, n)
+    bm = min(block_cols, m)
+    _check_tiling(n, m, bn, bm)
+    n_row_tiles = n // bn
+    kernel = functools.partial(_ktu_scale_kernel, n_row_tiles=n_row_tiles)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n_row_tiles),
+        in_specs=[
+            pl.BlockSpec((bn, bm), lambda c, r: (r, c)),
+            pl.BlockSpec((bn, 1), lambda c, r: (r, 0)),
+            pl.BlockSpec((bm, 1), lambda c, r: (c, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, 1), lambda c, r: (c, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, 1), kmat.dtype),
+        interpret=True,
+    )(kmat, u, b)

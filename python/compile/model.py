@@ -1,0 +1,154 @@
+"""L2 — JAX compute graph for the Sinkhorn / unbalanced-Sinkhorn blocks.
+
+This module defines the computations that `aot.py` lowers ONCE to HLO text
+(the build-time half of the three-layer stack).  The Rust runtime
+(`rust/src/runtime/`) loads the artifacts and drives the outer convergence
+loop; Python never runs on the request path.
+
+Entry points (all shapes static at lowering time, see `aot.py`):
+
+* ``sinkhorn_block``   — ``T`` fused scaling iterations of Algorithms 1/2.
+  ``rho`` is a *runtime* scalar: ``rho = 1`` gives balanced OT (Alg. 1) and
+  ``rho = lam / (lam + eps)`` gives unbalanced OT (Alg. 2), so a single
+  artifact serves both problems and any (lam, eps) pair.
+* ``ot_objective``     — entropic OT objective  <T,C> - eps H(T).
+* ``uot_objective``    — entropic UOT objective (Eq. 10).
+* ``kernel_from_cost`` — K = exp(-C / eps).
+
+The matvec+scale hot-spot inside ``sinkhorn_block`` is the L1 Pallas kernel
+(`kernels.sinkhorn_pallas`), so it lowers into the same HLO module.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import sinkhorn_pallas as kern
+
+# Iterations fused per HLO call.  The Rust driver checks the returned L1
+# displacement after each block and stops when it drops below delta, so the
+# effective iteration count is a multiple of BLOCK_ITERS (matching how the
+# paper's implementations check convergence every few sweeps).
+BLOCK_ITERS = 10
+
+
+import os
+
+# Tile size for the Pallas kernels inside the lowered block.  128 matches
+# the MXU lane width on real TPU; under interpret=True on CPU, larger
+# tiles amortize the interpreter's per-grid-step overhead (see
+# EXPERIMENTS.md §Perf for the sweep).  Overridable at `make artifacts`
+# time via SPAR_SINK_PALLAS_BLOCK.
+PALLAS_BLOCK = int(os.environ.get("SPAR_SINK_PALLAS_BLOCK", "512"))
+
+
+def _scaling_step(kmat, a, b, u, v, rho, *, block=None):
+    """One Sinkhorn scaling sweep using the Pallas matvec+scale kernels."""
+    block = block or PALLAS_BLOCK
+    bn = min(block, kmat.shape[0])
+    bm = min(block, kmat.shape[1])
+    u_new = kern.kv_scale(kmat, v, a, block_rows=bn, block_cols=bm) ** rho
+    v_new = kern.ktu_scale(kmat, u_new, b, block_rows=bn, block_cols=bm) ** rho
+    return u_new, v_new
+
+
+def sinkhorn_block(kmat, a, b, u, v, rho, *, n_iters: int = BLOCK_ITERS):
+    """Run ``n_iters`` scaling iterations; return (u', v', l1_displacement).
+
+    All vectors are (n, 1) columns.  The displacement is
+    ``||u' - u_prev||_1 + ||v' - v_prev||_1`` of the LAST iteration — the
+    stopping statistic of Algorithms 1-2.
+    """
+
+    def body(carry, _):
+        u_c, v_c = carry
+        u_n, v_n = _scaling_step(kmat, a, b, u_c, v_c, rho)
+        err = jnp.sum(jnp.abs(u_n - u_c)) + jnp.sum(jnp.abs(v_n - v_c))
+        return (u_n, v_n), err
+
+    (u_f, v_f), errs = jax.lax.scan(body, (u, v), None, length=n_iters)
+    return u_f, v_f, errs[-1]
+
+
+def plan(kmat, u, v):
+    """Transport plan ``T = diag(u) K diag(v)`` for (n,1) scalings."""
+    return u * kmat * v.reshape(1, -1)
+
+
+def _entropy(t):
+    # H(T) = -sum T (log T - 1), with 0 log 0 = 0.
+    return -jnp.sum(t * (jnp.log(jnp.where(t > 0, t, 1.0)) - 1.0))
+
+
+def ot_objective(kmat, cost, u, v, eps):
+    """Entropic OT objective (Eq. 6): <T,C> - eps H(T)."""
+    t = plan(kmat, u, v)
+    return jnp.sum(t * cost) - eps * _entropy(t)
+
+
+def _kl(x, y):
+    ratio = jnp.where(x > 0, x / y, 1.0)
+    return jnp.sum(jnp.where(x > 0, x * jnp.log(ratio), 0.0) - x + y)
+
+
+def uot_objective(kmat, cost, a, b, u, v, lam, eps):
+    """Entropic UOT objective (Eq. 10)."""
+    t = plan(kmat, u, v)
+    row = jnp.sum(t, axis=1, keepdims=True)
+    col = jnp.sum(t, axis=0, keepdims=True).T
+    return (
+        jnp.sum(t * cost)
+        + lam * _kl(row, a)
+        + lam * _kl(col, b)
+        - eps * _entropy(t)
+    )
+
+
+def kernel_from_cost(cost, eps):
+    """Gibbs kernel K = exp(-C / eps)."""
+    return jnp.exp(-cost / eps)
+
+
+# ---------------------------------------------------------------------------
+# Lowering-ready wrappers (tuple outputs, fixed signature order).
+# ---------------------------------------------------------------------------
+
+
+def sinkhorn_block_entry(kmat, a, b, u, v, rho):
+    """AOT entry: returns a 3-tuple (u', v', err)."""
+    u_f, v_f, err = sinkhorn_block(kmat, a, b, u, v, rho)
+    return (u_f, v_f, err)
+
+
+def ot_objective_entry(kmat, cost, u, v, eps):
+    return (ot_objective(kmat, cost, u, v, eps),)
+
+
+def uot_objective_entry(kmat, cost, a, b, u, v, lam, eps):
+    return (uot_objective(kmat, cost, a, b, u, v, lam, eps),)
+
+
+def kernel_from_cost_entry(cost, eps):
+    return (kernel_from_cost(cost, eps),)
+
+
+def specs_for(n: int, dtype=jnp.float32):
+    """ShapeDtypeStructs for each entry point at problem size ``n``."""
+    mat = jax.ShapeDtypeStruct((n, n), dtype)
+    col = jax.ShapeDtypeStruct((n, 1), dtype)
+    scal = jax.ShapeDtypeStruct((), dtype)
+    return {
+        "sinkhorn_block": (mat, col, col, col, col, scal),
+        "ot_objective": (mat, mat, col, col, scal),
+        "uot_objective": (mat, mat, col, col, col, col, scal, scal),
+        "kernel_from_cost": (mat, scal),
+    }
+
+
+ENTRIES = {
+    "sinkhorn_block": sinkhorn_block_entry,
+    "ot_objective": ot_objective_entry,
+    "uot_objective": uot_objective_entry,
+    "kernel_from_cost": kernel_from_cost_entry,
+}

@@ -1,0 +1,112 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+This is the CORE correctness signal for the compiled hot-spot: hypothesis
+sweeps shapes and tile sizes, asserting allclose against ``ref.py``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels import sinkhorn_pallas as kern
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _mk(rng, shape, lo=0.05, hi=1.0, dtype="float32"):
+    return jnp.asarray(rng.uniform(lo, hi, shape).astype(dtype))
+
+
+# Tile-divisible shape/tile combos: n = tiles_r * bn, m = tiles_c * bm.
+shape_strategy = st.tuples(
+    st.integers(1, 4),  # row tiles
+    st.integers(1, 4),  # col tiles
+    st.sampled_from([4, 8, 16]),  # bn
+    st.sampled_from([4, 8, 16]),  # bm
+    st.integers(0, 2**31 - 1),  # seed
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape_strategy)
+def test_kv_scale_matches_ref(params):
+    tr, tc, bn, bm, seed = params
+    n, m = tr * bn, tc * bm
+    rng = np.random.default_rng(seed)
+    kmat = _mk(rng, (n, m))
+    v = _mk(rng, (m, 1), 0.5, 2.0)
+    a = _mk(rng, (n, 1))
+    got = kern.kv_scale(kmat, v, a, block_rows=bn, block_cols=bm)
+    want = ref.kv_scale_ref(kmat, v, a)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape_strategy)
+def test_ktu_scale_matches_ref(params):
+    tr, tc, bn, bm, seed = params
+    n, m = tr * bn, tc * bm
+    rng = np.random.default_rng(seed)
+    kmat = _mk(rng, (n, m))
+    u = _mk(rng, (n, 1), 0.5, 2.0)
+    b = _mk(rng, (m, 1))
+    got = kern.ktu_scale(kmat, u, b, block_rows=bn, block_cols=bm)
+    want = ref.ktu_scale_ref(kmat, u, b)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("n", [8, 64, 128, 256])
+def test_kv_scale_default_tiles(n):
+    """Default (128-capped) tiles across the artifact size menu edge."""
+    rng = np.random.default_rng(n)
+    kmat = _mk(rng, (n, n))
+    v = _mk(rng, (n, 1), 0.5, 2.0)
+    a = _mk(rng, (n, 1))
+    got = kern.kv_scale(kmat, v, a)
+    np.testing.assert_allclose(got, ref.kv_scale_ref(kmat, v, a), rtol=1e-5)
+
+
+def test_rectangular_support():
+    """Kernels accept rectangular K (n != m), needed for padded requests."""
+    rng = np.random.default_rng(7)
+    kmat = _mk(rng, (32, 16))
+    v = _mk(rng, (16, 1))
+    a = _mk(rng, (32, 1))
+    b = _mk(rng, (16, 1))
+    u = kern.kv_scale(kmat, v, a, block_rows=8, block_cols=8)
+    np.testing.assert_allclose(u, ref.kv_scale_ref(kmat, v, a), rtol=1e-5)
+    vv = kern.ktu_scale(kmat, u, b, block_rows=8, block_cols=8)
+    np.testing.assert_allclose(vv, ref.ktu_scale_ref(kmat, u, b), rtol=1e-5)
+
+
+def test_indivisible_tiling_rejected():
+    rng = np.random.default_rng(1)
+    kmat = _mk(rng, (10, 10))
+    v = _mk(rng, (10, 1))
+    a = _mk(rng, (10, 1))
+    with pytest.raises(ValueError, match="not divisible"):
+        kern.kv_scale(kmat, v, a, block_rows=4, block_cols=4)
+
+
+def test_single_tile_degenerate():
+    """bn == n, bm == m: the grid collapses to one program."""
+    rng = np.random.default_rng(2)
+    kmat = _mk(rng, (8, 8))
+    v = _mk(rng, (8, 1))
+    a = _mk(rng, (8, 1))
+    got = kern.kv_scale(kmat, v, a, block_rows=8, block_cols=8)
+    np.testing.assert_allclose(got, ref.kv_scale_ref(kmat, v, a), rtol=1e-5)
+
+
+def test_float64_dtype():
+    """x64 round-trips when enabled (the oracle and kernel agree)."""
+    rng = np.random.default_rng(3)
+    with jax.experimental.enable_x64():
+        kmat = jnp.asarray(rng.uniform(0.05, 1.0, (16, 16)))
+        v = jnp.asarray(rng.uniform(0.5, 2.0, (16, 1)))
+        a = jnp.asarray(rng.uniform(0.05, 1.0, (16, 1)))
+        got = kern.kv_scale(kmat, v, a, block_rows=8, block_cols=8)
+        np.testing.assert_allclose(got, ref.kv_scale_ref(kmat, v, a), rtol=1e-12)

@@ -1,0 +1,122 @@
+"""L2 correctness: sinkhorn_block / objectives vs references and invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _problem(n, seed=0, eps=0.1):
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(0.0, 1.0, (n, 2)).astype("float32")
+    cost = np.asarray(ref.sqeuclid_cost_ref(jnp.asarray(x), jnp.asarray(x)))
+    a = rng.uniform(0.5, 1.5, n).astype("float32")
+    a /= a.sum()
+    b = rng.uniform(0.5, 1.5, n).astype("float32")
+    b /= b.sum()
+    kmat = np.exp(-cost / eps).astype("float32")
+    return (
+        jnp.asarray(kmat),
+        jnp.asarray(cost),
+        jnp.asarray(a).reshape(n, 1),
+        jnp.asarray(b).reshape(n, 1),
+    )
+
+
+def test_sinkhorn_block_matches_ref():
+    kmat, _, a, b = _problem(32)
+    u0 = jnp.ones_like(a)
+    v0 = jnp.ones_like(b)
+    u1, v1, err1 = model.sinkhorn_block(kmat, a, b, u0, v0, jnp.float32(1.0))
+    u2, v2, err2 = ref.sinkhorn_block_ref(kmat, a, b, u0, v0, 1.0, model.BLOCK_ITERS)
+    np.testing.assert_allclose(u1, u2, rtol=1e-4)
+    np.testing.assert_allclose(v1, v2, rtol=1e-4)
+    np.testing.assert_allclose(err1, err2, rtol=1e-3, atol=1e-6)
+
+
+def test_sinkhorn_block_uot_rho():
+    lam, eps = 1.0, 0.1
+    rho = lam / (lam + eps)
+    kmat, _, a, b = _problem(32, seed=5, eps=eps)
+    u0 = jnp.ones_like(a)
+    v0 = jnp.ones_like(b)
+    u1, v1, _ = model.sinkhorn_block(kmat, a, b, u0, v0, jnp.float32(rho))
+    u2, v2, _ = ref.sinkhorn_block_ref(kmat, a, b, u0, v0, rho, model.BLOCK_ITERS)
+    np.testing.assert_allclose(u1, u2, rtol=1e-4)
+    np.testing.assert_allclose(v1, v2, rtol=1e-4)
+
+
+def test_converged_plan_satisfies_marginals():
+    """After enough blocks, T = diag(u) K diag(v) matches the marginals."""
+    kmat, _, a, b = _problem(32, seed=1)
+    u = jnp.ones_like(a)
+    v = jnp.ones_like(b)
+    for _ in range(40):  # 400 iterations
+        u, v, err = model.sinkhorn_block(kmat, a, b, u, v, jnp.float32(1.0))
+        if float(err) < 1e-9:
+            break
+    t = model.plan(kmat, u, v)
+    np.testing.assert_allclose(t.sum(axis=1, keepdims=True), a, rtol=1e-4)
+    np.testing.assert_allclose(t.sum(axis=0, keepdims=True).T, b, rtol=1e-4)
+
+
+def test_ot_objective_matches_ref():
+    kmat, cost, a, b = _problem(16, seed=2)
+    u = a  # arbitrary positive scalings
+    v = b
+    got = model.ot_objective(kmat, cost, u, v, jnp.float32(0.1))
+    want = ref.ot_objective_ref(kmat, cost, u.ravel(), v.ravel(), 0.1)
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_uot_objective_matches_ref():
+    kmat, cost, a, b = _problem(16, seed=3)
+    u = 1.3 * a
+    v = 0.7 * b
+    got = model.uot_objective(
+        kmat, cost, a, b, u, v, jnp.float32(1.0), jnp.float32(0.1)
+    )
+    want = ref.uot_objective_ref(
+        kmat, cost, a.ravel(), b.ravel(), u.ravel(), v.ravel(), 1.0, 0.1
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_uot_degenerates_to_ot_as_lambda_grows():
+    """rho -> 1 as lam -> inf (Alg. 2 -> Alg. 1), Section 2.2."""
+    kmat, _, a, b = _problem(32, seed=4)
+    u0 = jnp.ones_like(a)
+    v0 = jnp.ones_like(b)
+    rho = 1e6 / (1e6 + 0.1)
+    u1, v1, _ = model.sinkhorn_block(kmat, a, b, u0, v0, jnp.float32(rho))
+    u2, v2, _ = model.sinkhorn_block(kmat, a, b, u0, v0, jnp.float32(1.0))
+    np.testing.assert_allclose(u1, u2, rtol=1e-3)
+    np.testing.assert_allclose(v1, v2, rtol=1e-3)
+
+
+def test_kernel_from_cost():
+    _, cost, _, _ = _problem(16, seed=6)
+    kmat = model.kernel_from_cost(cost, jnp.float32(0.5))
+    np.testing.assert_allclose(kmat, jnp.exp(-cost / 0.5), rtol=1e-6)
+
+
+def test_specs_cover_all_entries():
+    specs = model.specs_for(64)
+    assert set(specs) == set(model.ENTRIES)
+    for name, fn in model.ENTRIES.items():
+        # Abstract evaluation must succeed for every entry at menu sizes.
+        jax.eval_shape(fn, *specs[name])
+
+
+@pytest.mark.parametrize("n", [64, 256])
+def test_lowering_produces_hlo_text(n):
+    from compile import aot
+
+    text = aot.lower_entry("ot_objective", n)
+    assert "HloModule" in text
+    assert f"f32[{n},{n}]" in text

@@ -1,0 +1,153 @@
+//! From-scratch micro-benchmark harness (the offline image has no
+//! `criterion`). `cargo bench` runs the `benches/*.rs` targets, each of
+//! which uses this module: warmup, timed samples, mean/median/stddev,
+//! and a rendered report.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark's measurements.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Vec<Duration>,
+}
+
+impl BenchResult {
+    pub fn mean(&self) -> Duration {
+        let total: Duration = self.samples.iter().sum();
+        total / self.samples.len().max(1) as u32
+    }
+
+    pub fn median(&self) -> Duration {
+        let mut v = self.samples.clone();
+        v.sort();
+        v[v.len() / 2]
+    }
+
+    pub fn stddev(&self) -> Duration {
+        let mean = self.mean().as_secs_f64();
+        let var = self
+            .samples
+            .iter()
+            .map(|d| (d.as_secs_f64() - mean).powi(2))
+            .sum::<f64>()
+            / self.samples.len().max(1) as f64;
+        Duration::from_secs_f64(var.sqrt())
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "{:<44} mean {:>12.3?}  median {:>12.3?}  sd {:>10.3?}  ({} samples)",
+            self.name,
+            self.mean(),
+            self.median(),
+            self.stddev(),
+            self.samples.len()
+        )
+    }
+}
+
+/// Benchmark runner with warmup and a time budget per benchmark.
+pub struct Bencher {
+    pub warmup_iters: usize,
+    pub min_samples: usize,
+    pub max_samples: usize,
+    pub time_budget: Duration,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup_iters: 2,
+            min_samples: 5,
+            max_samples: 50,
+            time_budget: Duration::from_secs(5),
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher {
+            warmup_iters: 1,
+            min_samples: 3,
+            max_samples: 10,
+            time_budget: Duration::from_secs(2),
+            ..Default::default()
+        }
+    }
+
+    /// Run one benchmark. The closure is called repeatedly; use
+    /// [`std::hint::black_box`] on inputs/outputs inside it.
+    pub fn bench(&mut self, name: impl Into<String>, mut f: impl FnMut()) -> &BenchResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::new();
+        let started = Instant::now();
+        while samples.len() < self.max_samples
+            && (samples.len() < self.min_samples || started.elapsed() < self.time_budget)
+        {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed());
+        }
+        let result = BenchResult { name: name.into(), samples };
+        println!("{}", result.render());
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// All results so far.
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Render the final report.
+    pub fn report(&self, title: &str) -> String {
+        let mut out = format!("=== {title} ===\n");
+        for r in &self.results {
+            out.push_str(&r.render());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_samples_and_stats() {
+        let mut b = Bencher {
+            warmup_iters: 1,
+            min_samples: 3,
+            max_samples: 5,
+            time_budget: Duration::from_millis(50),
+            results: Vec::new(),
+        };
+        let r = b.bench("noop-ish", || {
+            std::hint::black_box((0..1000).sum::<usize>());
+        });
+        assert!(r.samples.len() >= 3);
+        assert!(r.mean() >= Duration::ZERO);
+        assert!(r.median() <= r.samples.iter().max().cloned().unwrap());
+        assert!(b.report("t").contains("noop-ish"));
+    }
+
+    #[test]
+    fn respects_max_samples() {
+        let mut b = Bencher {
+            warmup_iters: 0,
+            min_samples: 1,
+            max_samples: 4,
+            time_budget: Duration::from_secs(100),
+            results: Vec::new(),
+        };
+        let r = b.bench("capped", || {});
+        assert!(r.samples.len() <= 4);
+    }
+}

@@ -1,0 +1,125 @@
+//! From-scratch CLI argument parser (the offline image has no `clap`).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value`, and
+//! positional arguments, with generated usage text.
+
+use std::collections::HashMap;
+
+/// Parsed command line.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    /// First positional token (subcommand).
+    pub command: Option<String>,
+    /// Remaining positionals.
+    pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options.
+    pub options: HashMap<String, String>,
+    /// Bare `--flag`s.
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (usually `std::env::args().skip(1)`).
+    /// `value_keys` lists options that consume the following token.
+    pub fn parse(tokens: impl IntoIterator<Item = String>, value_keys: &[&str]) -> Args {
+        let mut args = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if value_keys.contains(&stripped)
+                    && it.peek().map(|n| !n.starts_with("--")).unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    args.options.insert(stripped.to_string(), v);
+                } else {
+                    args.flags.push(stripped.to_string());
+                }
+            } else if args.command.is_none() {
+                args.command = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+/// Usage text for the `repro` binary.
+pub fn usage() -> String {
+    "repro — Spar-Sink reproduction driver\n\
+     \n\
+     USAGE:\n\
+       repro <COMMAND> [OPTIONS]\n\
+     \n\
+     COMMANDS:\n\
+       experiment <id|all> [--full] [--out results/]   regenerate a paper figure/table\n\
+       solve --problem ot|uot [--n N] [--eps E] [--lambda L] [--method M] [--seed S]\n\
+                                                       one-off synthetic solve\n\
+       serve [--videos V] [--frames F] [--workers W] [--method M]\n\
+                                                       run the batched WFR distance service\n\
+       runtime-info                                    PJRT platform + artifact menu\n\
+       list                                            list available experiments\n\
+     \n\
+     OPTIONS:\n\
+       --full        paper-scale parameters (default: quick profile)\n\
+       --out DIR     also write JSON rows to DIR/<id>.json\n"
+        .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(tokens: &[&str]) -> Args {
+        Args::parse(
+            tokens.iter().map(|s| s.to_string()),
+            &[
+                "out", "n", "eps", "lambda", "method", "seed", "videos", "frames", "workers",
+                "problem", "s",
+            ],
+        )
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let a = parse(&["experiment", "fig2", "--full", "--out", "results"]);
+        assert_eq!(a.command.as_deref(), Some("experiment"));
+        assert_eq!(a.positional, vec!["fig2"]);
+        assert!(a.flag("full"));
+        assert_eq!(a.get("out"), Some("results"));
+    }
+
+    #[test]
+    fn parses_equals_form() {
+        let a = parse(&["solve", "--eps=0.05", "--n=500"]);
+        assert_eq!(a.get_parsed("eps", 0.0), 0.05);
+        assert_eq!(a.get_parsed("n", 0usize), 500);
+    }
+
+    #[test]
+    fn default_when_missing() {
+        let a = parse(&["solve"]);
+        assert_eq!(a.get_parsed("n", 123usize), 123);
+        assert!(!a.flag("full"));
+    }
+
+    #[test]
+    fn flag_does_not_swallow_positional() {
+        let a = parse(&["experiment", "--full", "fig3"]);
+        assert_eq!(a.positional, vec!["fig3"]);
+    }
+}

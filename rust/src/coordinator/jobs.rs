@@ -1,0 +1,138 @@
+//! Job and result types for the distance service.
+
+use std::sync::Arc;
+
+/// A discrete measure: support points + masses (shared across jobs via
+/// `Arc` so a video's frames are stored once).
+#[derive(Clone, Debug)]
+pub struct Measure {
+    pub points: Arc<Vec<Vec<f64>>>,
+    pub mass: Arc<Vec<f64>>,
+}
+
+impl Measure {
+    pub fn new(points: Vec<Vec<f64>>, mass: Vec<f64>) -> Self {
+        assert_eq!(points.len(), mass.len(), "support/mass length mismatch");
+        Measure { points: Arc::new(points), mass: Arc::new(mass) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.mass.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.mass.is_empty()
+    }
+}
+
+/// Which solver executes the job.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Method {
+    /// Exact unbalanced Sinkhorn (Algorithm 2), dense.
+    Sinkhorn,
+    /// The paper's Spar-Sink (Algorithm 4); payload = s multiplier
+    /// in units of s₀(n) is carried in [`ProblemSpec::s_multiplier`].
+    SparSink,
+    /// Uniform-sampling ablation.
+    RandSink,
+}
+
+impl Method {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Sinkhorn => "sinkhorn",
+            Method::SparSink => "spar-sink",
+            Method::RandSink => "rand-sink",
+        }
+    }
+}
+
+/// Problem parameters shared by a family of jobs.
+#[derive(Clone, Debug)]
+pub struct ProblemSpec {
+    /// Marginal relaxation λ (WFR distance).
+    pub lambda: f64,
+    /// Entropic regularization ε.
+    pub eps: f64,
+    /// WFR truncation radius η.
+    pub eta: f64,
+    /// Subsample budget in units of s₀(n) (ignored by `Sinkhorn`).
+    pub s_multiplier: f64,
+    /// Sinkhorn stopping threshold δ.
+    pub delta: f64,
+    /// Iteration cap.
+    pub max_iters: usize,
+}
+
+impl Default for ProblemSpec {
+    fn default() -> Self {
+        // Section 6 defaults: eps = 0.01 (scaled), lambda = 1, eta = 15.
+        ProblemSpec {
+            lambda: 1.0,
+            eps: 0.01,
+            eta: 15.0,
+            s_multiplier: 8.0,
+            delta: 1e-6,
+            max_iters: 1000,
+        }
+    }
+}
+
+/// A single WFR-distance job between two measures.
+#[derive(Clone, Debug)]
+pub struct DistanceJob {
+    /// Client-assigned id, echoed in the result.
+    pub id: u64,
+    pub source: Measure,
+    pub target: Measure,
+    pub method: Method,
+    pub spec: ProblemSpec,
+    /// RNG seed for the sparsifier (deterministic per job).
+    pub seed: u64,
+}
+
+/// Result of a distance job.
+#[derive(Clone, Debug)]
+pub struct DistanceResult {
+    pub id: u64,
+    /// WFR distance (sqrt of the UOT objective, clamped at 0).
+    pub distance: f64,
+    /// Raw entropic UOT objective.
+    pub objective: f64,
+    /// Solver iterations used.
+    pub iterations: usize,
+    /// End-to-end latency (queue + solve).
+    pub latency: std::time::Duration,
+    /// Which batch the job ran in (diagnostics).
+    pub batch_id: u64,
+    /// Error message if the solve failed.
+    pub error: Option<String>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_shares_storage() {
+        let m = Measure::new(vec![vec![0.0, 1.0]], vec![1.0]);
+        let m2 = m.clone();
+        assert!(Arc::ptr_eq(&m.points, &m2.points));
+        assert_eq!(m.len(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn measure_rejects_mismatch() {
+        Measure::new(vec![vec![0.0]], vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn default_spec_matches_paper_section6() {
+        let spec = ProblemSpec::default();
+        assert_eq!(spec.lambda, 1.0);
+        assert_eq!(spec.eps, 0.01);
+        assert_eq!(spec.eta, 15.0);
+        assert_eq!(spec.s_multiplier, 8.0);
+    }
+}

@@ -1,0 +1,165 @@
+//! Service metrics: lock-free counters plus a bucketed latency
+//! histogram with approximate quantiles.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Log-spaced latency buckets from 10 µs to ~100 s.
+const BUCKET_COUNT: usize = 32;
+
+fn bucket_for(d: Duration) -> usize {
+    let us = d.as_micros().max(1) as f64;
+    // bucket = log2(us / 10), clamped.
+    let b = (us / 10.0).log2().floor();
+    b.clamp(0.0, (BUCKET_COUNT - 1) as f64) as usize
+}
+
+fn bucket_upper_us(b: usize) -> f64 {
+    10.0 * 2f64.powi(b as i32 + 1)
+}
+
+/// Thread-safe latency histogram.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; BUCKET_COUNT],
+    count: AtomicU64,
+    total_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        LatencyHistogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            total_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, d: Duration) {
+        let us = d.as_micros() as u64;
+        self.buckets[bucket_for(d)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.total_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Mean latency.
+    pub fn mean(&self) -> Duration {
+        let c = self.count();
+        if c == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_micros(self.total_us.load(Ordering::Relaxed) / c)
+    }
+
+    /// Approximate quantile from the bucket upper bounds (q in [0,1]).
+    pub fn quantile(&self, q: f64) -> Duration {
+        let c = self.count();
+        if c == 0 {
+            return Duration::ZERO;
+        }
+        let target = (q.clamp(0.0, 1.0) * c as f64).ceil() as u64;
+        let mut seen = 0;
+        for (b, bucket) in self.buckets.iter().enumerate() {
+            seen += bucket.load(Ordering::Relaxed);
+            if seen >= target {
+                return Duration::from_micros(bucket_upper_us(b) as u64);
+            }
+        }
+        Duration::from_micros(self.max_us.load(Ordering::Relaxed))
+    }
+
+    pub fn max(&self) -> Duration {
+        Duration::from_micros(self.max_us.load(Ordering::Relaxed))
+    }
+}
+
+/// Point-in-time snapshot of service metrics.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub submitted: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub batches: u64,
+    pub mean_latency: Duration,
+    pub p50_latency: Duration,
+    pub p99_latency: Duration,
+    pub max_latency: Duration,
+    /// Jobs per second over the service lifetime.
+    pub throughput: f64,
+}
+
+impl MetricsSnapshot {
+    pub fn render(&self) -> String {
+        format!(
+            "jobs: {} submitted / {} completed / {} failed in {} batches\n\
+             latency: mean {:.1?}  p50 {:.1?}  p99 {:.1?}  max {:.1?}\n\
+             throughput: {:.2} jobs/s",
+            self.submitted,
+            self.completed,
+            self.failed,
+            self.batches,
+            self.mean_latency,
+            self.p50_latency,
+            self.p99_latency,
+            self.max_latency,
+            self.throughput
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_counts_and_mean() {
+        let h = LatencyHistogram::new();
+        h.record(Duration::from_millis(1));
+        h.record(Duration::from_millis(3));
+        assert_eq!(h.count(), 2);
+        let mean = h.mean();
+        assert!(mean >= Duration::from_millis(1) && mean <= Duration::from_millis(3));
+    }
+
+    #[test]
+    fn quantiles_are_monotone() {
+        let h = LatencyHistogram::new();
+        for i in 1..=100u64 {
+            h.record(Duration::from_micros(i * 100));
+        }
+        let p50 = h.quantile(0.5);
+        let p99 = h.quantile(0.99);
+        assert!(p50 <= p99, "{p50:?} vs {p99:?}");
+        assert!(p99 <= h.max() * 4, "bucket upper bound sanity");
+    }
+
+    #[test]
+    fn empty_histogram() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.mean(), Duration::ZERO);
+        assert_eq!(h.quantile(0.9), Duration::ZERO);
+    }
+
+    #[test]
+    fn bucket_mapping_monotone() {
+        let mut prev = 0;
+        for ms in [1u64, 2, 5, 10, 100, 1000, 10_000] {
+            let b = bucket_for(Duration::from_millis(ms));
+            assert!(b >= prev);
+            prev = b;
+        }
+    }
+}

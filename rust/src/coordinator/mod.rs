@@ -1,0 +1,33 @@
+//! The serving coordinator: a batched distance-computation service.
+//!
+//! The paper's echocardiogram pipeline (Section 6) reduces to computing
+//! many pairwise WFR distances between video frames. This module turns
+//! that into a production-shaped service:
+//!
+//! ```text
+//!   clients ── submit(job) ──▶ bounded queue (backpressure)
+//!                                  │
+//!                             batcher thread
+//!                      groups jobs by (method, size bucket)
+//!                                  │
+//!                          worker pool (N threads)
+//!                 solves each job via the requested solver
+//!                                  │
+//!                       per-job response channels + metrics
+//! ```
+//!
+//! * The submission queue is bounded: `submit` blocks once `queue_cap`
+//!   jobs are in flight (backpressure instead of unbounded memory).
+//! * The batcher flushes a batch when it reaches `max_batch` jobs or
+//!   `batch_window` elapses, whichever comes first — the same policy as
+//!   continuous-batching LLM servers, adapted to solver jobs.
+//! * Latency/throughput metrics are recorded per job and exposed as a
+//!   histogram snapshot ([`metrics::MetricsSnapshot`]).
+
+mod jobs;
+mod metrics;
+mod service;
+
+pub use jobs::{DistanceJob, DistanceResult, Measure, Method, ProblemSpec};
+pub use metrics::{LatencyHistogram, MetricsSnapshot};
+pub use service::{CoordinatorConfig, DistanceService};

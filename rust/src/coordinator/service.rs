@@ -1,0 +1,443 @@
+//! The distance service: bounded submission queue → batcher → worker
+//! pool, all on std threads (the image has no tokio; the architecture
+//! mirrors a continuous-batching server loop).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::jobs::{DistanceJob, DistanceResult, Method};
+use super::metrics::{LatencyHistogram, MetricsSnapshot};
+use crate::error::{Error, Result};
+use crate::ot::cost::{euclidean, wfr_cost_from_distance, wfr_kernel_from_distance};
+use crate::ot::sinkhorn::SinkhornParams;
+use crate::ot::uot::{sinkhorn_uot, wfr_distance_from_objective};
+use crate::rng::Rng;
+use crate::solvers::rand_sink::rand_sink_uot_oracle;
+use crate::solvers::spar_sink::{spar_sink_uot_oracle, SparSinkParams};
+
+/// Coordinator configuration.
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    /// Worker threads solving jobs.
+    pub workers: usize,
+    /// Maximum jobs in flight before `submit` blocks (backpressure).
+    pub queue_cap: usize,
+    /// Flush a batch at this many jobs…
+    pub max_batch: usize,
+    /// …or after this window since the first queued job.
+    pub batch_window: Duration,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            workers: crate::pool::num_threads().min(8),
+            queue_cap: 256,
+            max_batch: 16,
+            batch_window: Duration::from_millis(5),
+        }
+    }
+}
+
+struct QueuedJob {
+    job: DistanceJob,
+    enqueued: Instant,
+    respond: Sender<DistanceResult>,
+}
+
+struct Shared {
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    failed: AtomicU64,
+    batches: AtomicU64,
+    latency: LatencyHistogram,
+    started: Instant,
+    stopping: AtomicBool,
+}
+
+/// The batched WFR-distance service.
+pub struct DistanceService {
+    tx: Option<SyncSender<QueuedJob>>,
+    shared: Arc<Shared>,
+    batcher: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl DistanceService {
+    /// Start the service threads.
+    pub fn start(config: CoordinatorConfig) -> Self {
+        let (tx, rx) = sync_channel::<QueuedJob>(config.queue_cap);
+        let (batch_tx, batch_rx) = mpsc::channel::<Vec<QueuedJob>>();
+        let batch_rx = Arc::new(Mutex::new(batch_rx));
+        let shared = Arc::new(Shared {
+            submitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            latency: LatencyHistogram::new(),
+            started: Instant::now(),
+            stopping: AtomicBool::new(false),
+        });
+
+        // Batcher: collect jobs until max_batch or batch_window, group by
+        // (method, size bucket) so a batch has homogeneous cost.
+        let batcher = {
+            let shared = shared.clone();
+            let cfg = config.clone();
+            std::thread::spawn(move || batcher_loop(rx, batch_tx, cfg, shared))
+        };
+
+        // Workers.
+        let workers = (0..config.workers.max(1))
+            .map(|_| {
+                let shared = shared.clone();
+                let batch_rx = batch_rx.clone();
+                std::thread::spawn(move || loop {
+                    let batch = {
+                        let guard = batch_rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    match batch {
+                        Ok(batch) => run_batch(batch, &shared),
+                        Err(_) => break,
+                    }
+                })
+            })
+            .collect();
+
+        DistanceService { tx: Some(tx), shared, batcher: Some(batcher), workers }
+    }
+
+    /// Submit a job; blocks when the queue is full (backpressure).
+    /// Returns the channel on which the result will arrive.
+    pub fn submit(&self, job: DistanceJob) -> Result<Receiver<DistanceResult>> {
+        let (tx, rx) = mpsc::channel();
+        let queued = QueuedJob { job, enqueued: Instant::now(), respond: tx };
+        self.tx
+            .as_ref()
+            .ok_or_else(|| Error::Coordinator("service stopped".into()))?
+            .send(queued)
+            .map_err(|_| Error::Coordinator("queue closed".into()))?;
+        self.shared.submitted.fetch_add(1, Ordering::Relaxed);
+        Ok(rx)
+    }
+
+    /// Convenience: submit many jobs and wait for all results (order
+    /// matches input order).
+    pub fn submit_all(&self, jobs: Vec<DistanceJob>) -> Result<Vec<DistanceResult>> {
+        let receivers: Result<Vec<_>> = jobs.into_iter().map(|j| self.submit(j)).collect();
+        receivers?
+            .into_iter()
+            .map(|rx| {
+                rx.recv()
+                    .map_err(|_| Error::Coordinator("worker dropped response".into()))
+            })
+            .collect()
+    }
+
+    /// Metrics snapshot.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        let s = &self.shared;
+        let elapsed = s.started.elapsed().as_secs_f64().max(1e-9);
+        MetricsSnapshot {
+            submitted: s.submitted.load(Ordering::Relaxed),
+            completed: s.completed.load(Ordering::Relaxed),
+            failed: s.failed.load(Ordering::Relaxed),
+            batches: s.batches.load(Ordering::Relaxed),
+            mean_latency: s.latency.mean(),
+            p50_latency: s.latency.quantile(0.5),
+            p99_latency: s.latency.quantile(0.99),
+            max_latency: s.latency.max(),
+            throughput: s.completed.load(Ordering::Relaxed) as f64 / elapsed,
+        }
+    }
+
+    /// Drain and stop all threads.
+    pub fn shutdown(mut self) -> MetricsSnapshot {
+        self.stop_threads();
+        self.metrics()
+    }
+
+    fn stop_threads(&mut self) {
+        self.shared.stopping.store(true, Ordering::SeqCst);
+        self.tx.take(); // close the submission channel
+        if let Some(b) = self.batcher.take() {
+            let _ = b.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for DistanceService {
+    fn drop(&mut self) {
+        self.stop_threads();
+    }
+}
+
+/// Size bucket: log2 of support size — jobs in a batch have comparable
+/// cost, keeping batch latency predictable.
+fn size_bucket(job: &DistanceJob) -> u32 {
+    let n = job.source.len().max(job.target.len()).max(1);
+    usize::BITS - n.leading_zeros()
+}
+
+fn batcher_loop(
+    rx: Receiver<QueuedJob>,
+    batch_tx: Sender<Vec<QueuedJob>>,
+    cfg: CoordinatorConfig,
+    shared: Arc<Shared>,
+) {
+    let mut pending: Vec<QueuedJob> = Vec::new();
+    let mut window_start: Option<Instant> = None;
+    loop {
+        let timeout = match window_start {
+            Some(t0) => cfg
+                .batch_window
+                .checked_sub(t0.elapsed())
+                .unwrap_or(Duration::ZERO),
+            None => Duration::from_millis(50),
+        };
+        match rx.recv_timeout(timeout) {
+            Ok(job) => {
+                if pending.is_empty() {
+                    window_start = Some(Instant::now());
+                }
+                pending.push(job);
+                if pending.len() >= cfg.max_batch {
+                    flush(&mut pending, &batch_tx, &shared);
+                    window_start = None;
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                if !pending.is_empty() {
+                    flush(&mut pending, &batch_tx, &shared);
+                    window_start = None;
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                if !pending.is_empty() {
+                    flush(&mut pending, &batch_tx, &shared);
+                }
+                break;
+            }
+        }
+    }
+}
+
+fn flush(pending: &mut Vec<QueuedJob>, batch_tx: &Sender<Vec<QueuedJob>>, shared: &Arc<Shared>) {
+    // Group by (method, size bucket).
+    let mut groups: HashMap<(Method, u32), Vec<QueuedJob>> = HashMap::new();
+    for job in pending.drain(..) {
+        groups
+            .entry((job.job.method, size_bucket(&job.job)))
+            .or_default()
+            .push(job);
+    }
+    for (_, group) in groups {
+        shared.batches.fetch_add(1, Ordering::Relaxed);
+        let _ = batch_tx.send(group);
+    }
+}
+
+fn run_batch(batch: Vec<QueuedJob>, shared: &Arc<Shared>) {
+    let batch_id = shared.batches.load(Ordering::Relaxed);
+    for queued in batch {
+        let result = solve_job(&queued.job, batch_id, queued.enqueued);
+        let failed = result.error.is_some();
+        shared.latency.record(result.latency);
+        if failed {
+            shared.failed.fetch_add(1, Ordering::Relaxed);
+        } else {
+            shared.completed.fetch_add(1, Ordering::Relaxed);
+        }
+        let _ = queued.respond.send(result);
+    }
+}
+
+/// Solve one WFR-distance job with the requested method. Kernel and
+/// cost are exposed as oracles — never materialized densely for the
+/// sparsified methods.
+fn solve_job(job: &DistanceJob, batch_id: u64, enqueued: Instant) -> DistanceResult {
+    let spec = &job.spec;
+    let src_pts = &job.source.points;
+    let tgt_pts = &job.target.points;
+    let kernel = |i: usize, j: usize| {
+        wfr_kernel_from_distance(euclidean(&src_pts[i], &tgt_pts[j]), spec.eta, spec.eps)
+    };
+    let cost = |i: usize, j: usize| {
+        wfr_cost_from_distance(euclidean(&src_pts[i], &tgt_pts[j]), spec.eta)
+    };
+    let a = &job.source.mass;
+    let b = &job.target.mass;
+    let sink_params = SinkhornParams { delta: spec.delta, max_iters: spec.max_iters, strict: false };
+    let n = a.len().max(b.len());
+    let s_abs = spec.s_multiplier * crate::metrics::s0(n);
+    let mut rng = Rng::seed_from(job.seed);
+
+    let solved: Result<(f64, usize)> = match job.method {
+        Method::Sinkhorn => {
+            let kmat = crate::linalg::Mat::from_fn(a.len(), b.len(), kernel);
+            let cmat = crate::linalg::Mat::from_fn(a.len(), b.len(), cost);
+            sinkhorn_uot(&kmat, &cmat, a, b, spec.lambda, spec.eps, &sink_params)
+                .map(|s| (s.objective, s.iterations))
+        }
+        Method::SparSink => {
+            let params = SparSinkParams { sinkhorn: sink_params, shrinkage: 1.0 };
+            spar_sink_uot_oracle(
+                kernel, cost, a, b, spec.lambda, spec.eps, s_abs, &params, &mut rng,
+            )
+            .map(|s| (s.solution.objective, s.solution.iterations))
+        }
+        Method::RandSink => rand_sink_uot_oracle(
+            kernel, cost, a, b, spec.lambda, spec.eps, s_abs, &sink_params, &mut rng,
+        )
+        .map(|s| (s.solution.objective, s.solution.iterations)),
+    };
+
+    let latency = enqueued.elapsed();
+    match solved {
+        Ok((objective, iterations)) => DistanceResult {
+            id: job.id,
+            distance: wfr_distance_from_objective(objective),
+            objective,
+            iterations,
+            latency,
+            batch_id,
+            error: None,
+        },
+        Err(e) => DistanceResult {
+            id: job.id,
+            distance: f64::NAN,
+            objective: f64::NAN,
+            iterations: 0,
+            latency,
+            batch_id,
+            error: Some(e.to_string()),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::jobs::{Measure, ProblemSpec};
+
+    fn toy_measure(n: usize, seed: u64, mass: f64) -> Measure {
+        let mut rng = Rng::seed_from(seed);
+        let pts: Vec<Vec<f64>> = (0..n)
+            .map(|_| vec![rng.uniform() * 10.0, rng.uniform() * 10.0])
+            .collect();
+        let mut m: Vec<f64> = (0..n).map(|_| rng.uniform() + 0.1).collect();
+        let s: f64 = m.iter().sum();
+        m.iter_mut().for_each(|x| *x *= mass / s);
+        Measure::new(pts, m)
+    }
+
+    fn job(id: u64, method: Method, n: usize) -> DistanceJob {
+        DistanceJob {
+            id,
+            source: toy_measure(n, 1000 + id, 1.0),
+            target: toy_measure(n, 2000 + id, 1.2),
+            method,
+            spec: ProblemSpec { eta: 3.0, eps: 0.05, ..Default::default() },
+            seed: 42 + id,
+        }
+    }
+
+    #[test]
+    fn submits_and_completes_jobs() {
+        let service = DistanceService::start(CoordinatorConfig {
+            workers: 2,
+            ..Default::default()
+        });
+        let jobs: Vec<DistanceJob> = (0..8).map(|i| job(i, Method::SparSink, 60)).collect();
+        let results = service.submit_all(jobs).unwrap();
+        assert_eq!(results.len(), 8);
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+            assert!(r.error.is_none(), "job {i}: {:?}", r.error);
+            assert!(r.distance.is_finite() && r.distance >= 0.0);
+        }
+        let m = service.shutdown();
+        assert_eq!(m.completed, 8);
+        assert_eq!(m.failed, 0);
+        assert!(m.batches >= 1);
+    }
+
+    #[test]
+    fn spar_sink_jobs_approximate_sinkhorn_jobs() {
+        let service = DistanceService::start(CoordinatorConfig::default());
+        let mk = |method: Method, id: u64| DistanceJob {
+            id,
+            source: toy_measure(120, 7, 1.0),
+            target: toy_measure(120, 8, 1.3),
+            method,
+            spec: ProblemSpec { eta: 4.0, eps: 0.05, s_multiplier: 16.0, ..Default::default() },
+            seed: 99 + id,
+        };
+        let results = service
+            .submit_all(vec![mk(Method::Sinkhorn, 0), mk(Method::SparSink, 1)])
+            .unwrap();
+        let exact = results[0].distance;
+        let approx = results[1].distance;
+        let rel = (exact - approx).abs() / exact.max(1e-12);
+        assert!(rel < 0.5, "exact {exact} vs spar {approx} (rel {rel})");
+        drop(service);
+    }
+
+    #[test]
+    fn mixed_methods_are_batched_separately() {
+        let service = DistanceService::start(CoordinatorConfig {
+            workers: 2,
+            max_batch: 64,
+            batch_window: Duration::from_millis(30),
+            ..Default::default()
+        });
+        let mut jobs = Vec::new();
+        for i in 0..4 {
+            jobs.push(job(i, Method::SparSink, 40));
+            jobs.push(job(100 + i, Method::RandSink, 40));
+        }
+        let results = service.submit_all(jobs).unwrap();
+        assert_eq!(results.len(), 8);
+        let m = service.shutdown();
+        // At least two groups (one per method).
+        assert!(m.batches >= 2, "batches {}", m.batches);
+    }
+
+    #[test]
+    fn failure_is_reported_not_panicked() {
+        let service = DistanceService::start(CoordinatorConfig::default());
+        // eta so small the kernel is all-zero off-diagonal and masses
+        // disjoint -> solver should fail or produce NaN -> error path.
+        let bad = DistanceJob {
+            id: 0,
+            source: Measure::new(vec![vec![0.0, 0.0]], vec![1.0]),
+            target: Measure::new(vec![vec![100.0, 100.0]], vec![1.0]),
+            method: Method::SparSink,
+            spec: ProblemSpec { eta: 0.01, ..Default::default() },
+            seed: 1,
+        };
+        let results = service.submit_all(vec![bad]).unwrap();
+        assert!(results[0].error.is_some() || results[0].distance.is_nan() || results[0].distance >= 0.0);
+        let m = service.shutdown();
+        assert_eq!(m.submitted, 1);
+    }
+
+    #[test]
+    fn metrics_track_latency() {
+        let service = DistanceService::start(CoordinatorConfig::default());
+        let jobs: Vec<DistanceJob> = (0..4).map(|i| job(i, Method::RandSink, 30)).collect();
+        service.submit_all(jobs).unwrap();
+        let m = service.metrics();
+        assert!(m.mean_latency > Duration::ZERO);
+        assert!(m.p99_latency >= m.p50_latency);
+        assert!(m.throughput > 0.0);
+        assert!(!m.render().is_empty());
+    }
+}

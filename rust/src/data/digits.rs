@@ -1,0 +1,173 @@
+//! Procedurally rendered digit glyphs — the MNIST substitution for the
+//! barycenter experiment (Appendix C.3, Fig. 12; see DESIGN.md §3).
+//!
+//! Each digit 0-9 is drawn from a 7-segment-like stroke skeleton with
+//! Gaussian stroke thickness, then randomly rescaled (½×–2×) and
+//! translated inside a larger grid with a bias towards corners, exactly
+//! following the paper's preprocessing. Pixel values are normalized to
+//! the simplex.
+
+use crate::rng::Rng;
+
+/// Stroke segments per digit on a [0,1]×[0,1] canvas (x right, y down).
+/// Each stroke is a line segment (x0, y0, x1, y1).
+fn skeleton(digit: u8) -> &'static [(f64, f64, f64, f64)] {
+    // 7-segment layout corners.
+    const TL: (f64, f64) = (0.25, 0.15);
+    const TR: (f64, f64) = (0.75, 0.15);
+    const ML: (f64, f64) = (0.25, 0.5);
+    const MR: (f64, f64) = (0.75, 0.5);
+    const BL: (f64, f64) = (0.25, 0.85);
+    const BR: (f64, f64) = (0.75, 0.85);
+    macro_rules! seg {
+        ($a:ident, $b:ident) => {
+            ($a.0, $a.1, $b.0, $b.1)
+        };
+    }
+    const TOP: (f64, f64, f64, f64) = seg!(TL, TR);
+    const MID: (f64, f64, f64, f64) = seg!(ML, MR);
+    const BOT: (f64, f64, f64, f64) = seg!(BL, BR);
+    const LT: (f64, f64, f64, f64) = seg!(TL, ML);
+    const LB: (f64, f64, f64, f64) = seg!(ML, BL);
+    const RT: (f64, f64, f64, f64) = seg!(TR, MR);
+    const RB: (f64, f64, f64, f64) = seg!(MR, BR);
+    match digit {
+        0 => &[TOP, BOT, LT, LB, RT, RB],
+        1 => &[RT, RB],
+        2 => &[TOP, RT, MID, LB, BOT],
+        3 => &[TOP, RT, MID, RB, BOT],
+        4 => &[LT, MID, RT, RB],
+        5 => &[TOP, LT, MID, RB, BOT],
+        6 => &[TOP, LT, LB, MID, RB, BOT],
+        7 => &[TOP, RT, RB],
+        8 => &[TOP, MID, BOT, LT, LB, RT, RB],
+        9 => &[TOP, MID, BOT, LT, RT, RB],
+        _ => panic!("digit out of range"),
+    }
+}
+
+/// Distance from point to segment.
+fn seg_dist(px: f64, py: f64, seg: (f64, f64, f64, f64)) -> f64 {
+    let (x0, y0, x1, y1) = seg;
+    let (dx, dy) = (x1 - x0, y1 - y0);
+    let len2 = dx * dx + dy * dy;
+    let t = if len2 > 0.0 {
+        (((px - x0) * dx + (py - y0) * dy) / len2).clamp(0.0, 1.0)
+    } else {
+        0.0
+    };
+    let (cx, cy) = (x0 + t * dx, y0 + t * dy);
+    ((px - cx).powi(2) + (py - cy).powi(2)).sqrt()
+}
+
+/// Render a digit glyph on a `grid`×`grid` canvas.
+///
+/// * `scale` — glyph size relative to the grid (the paper rescales
+///   between half and double of the 28px base inside a 64px grid).
+/// * `(ox, oy)` — top-left offset of the glyph box in pixels.
+/// Returns a normalized histogram (sums to 1).
+pub fn render_digit(
+    digit: u8,
+    grid: usize,
+    scale: f64,
+    ox: f64,
+    oy: f64,
+    stroke: f64,
+) -> Vec<f64> {
+    let segs = skeleton(digit);
+    let size = scale * grid as f64;
+    let mut img = vec![0.0f64; grid * grid];
+    for y in 0..grid {
+        for x in 0..grid {
+            // Map pixel into glyph-local [0,1] coordinates.
+            let lx = (x as f64 - ox) / size;
+            let ly = (y as f64 - oy) / size;
+            if !(-0.2..=1.2).contains(&lx) || !(-0.2..=1.2).contains(&ly) {
+                continue;
+            }
+            let d = segs
+                .iter()
+                .map(|&s| seg_dist(lx, ly, s))
+                .fold(f64::INFINITY, f64::min);
+            let sigma = stroke / size.max(1.0);
+            let v = (-0.5 * (d / sigma).powi(2)).exp();
+            // Cut the Gaussian tail: keeps glyphs crisp and sparse
+            // (matching binarized MNIST density).
+            if v > 5e-2 {
+                img[y * grid + x] = v;
+            }
+        }
+    }
+    let total: f64 = img.iter().sum();
+    assert!(total > 0.0, "glyph rendered empty");
+    for v in img.iter_mut() {
+        *v /= total;
+    }
+    img
+}
+
+/// The paper's randomized variant: random scale in [0.5, 2]× base,
+/// random translation within the grid with a corner bias.
+pub fn random_digit(digit: u8, grid: usize, rng: &mut Rng) -> Vec<f64> {
+    let base = 28.0 / 64.0; // MNIST glyph inside the 64-grid
+    let scale = base * (0.5 + 1.5 * rng.uniform());
+    let size = scale * grid as f64;
+    let max_off = (grid as f64 - size).max(0.0);
+    // Corner bias: square the uniform draw and flip a corner coin.
+    let off = |r: &mut Rng| -> f64 {
+        let u = r.uniform();
+        let edge = u * u * max_off;
+        if r.bernoulli(0.5) {
+            edge
+        } else {
+            max_off - edge
+        }
+    };
+    let ox = off(rng);
+    let oy = off(rng);
+    render_digit(digit, grid, scale, ox, oy, 2.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_digits_render_normalized() {
+        for d in 0..10u8 {
+            let img = render_digit(d, 32, 0.8, 3.0, 3.0, 2.0);
+            let s: f64 = img.iter().sum();
+            assert!((s - 1.0).abs() < 1e-9, "digit {d} sum {s}");
+            let nnz = img.iter().filter(|&&v| v > 0.0).count();
+            assert!(nnz > 20, "digit {d} too few pixels: {nnz}");
+            assert!(nnz < 32 * 32 * 2 / 3, "digit {d} fills too much: {nnz}");
+        }
+    }
+
+    #[test]
+    fn digit_one_thinner_than_eight() {
+        let one = render_digit(1, 32, 0.8, 3.0, 3.0, 2.0);
+        let eight = render_digit(8, 32, 0.8, 3.0, 3.0, 2.0);
+        let nnz = |im: &[f64]| im.iter().filter(|&&v| v > 1e-6).count();
+        assert!(nnz(&one) < nnz(&eight));
+    }
+
+    #[test]
+    fn random_digit_stays_in_grid() {
+        let mut rng = Rng::seed_from(113);
+        for _ in 0..20 {
+            let img = random_digit(3, 48, &mut rng);
+            let s: f64 = img.iter().sum();
+            assert!((s - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn random_digits_differ() {
+        let mut rng = Rng::seed_from(115);
+        let a = random_digit(5, 48, &mut rng);
+        let b = random_digit(5, 48, &mut rng);
+        let diff: f64 = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).sum();
+        assert!(diff > 0.1, "translated/rescaled copies should differ, diff {diff}");
+    }
+}

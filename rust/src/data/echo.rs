@@ -1,0 +1,325 @@
+//! Synthetic echocardiogram videos — the Table 1 / Figs. 6-7 substrate.
+//!
+//! The EchoNet-Dynamic data set used by the paper is not available in
+//! this environment, so we simulate apical-four-chamber-like videos (see
+//! DESIGN.md §3 for the substitution argument): a bright myocardial
+//! annulus whose inner radius follows a two-phase cardiac waveform
+//! (rapid systolic contraction, slower diastolic relaxation), a darker
+//! chamber pool whose brightness co-varies with blood volume, speckle
+//! noise, and configurable pathologies:
+//!
+//! * `Health::Normal`      — fixed period, full ejection amplitude;
+//! * `Health::HeartFailure`— reduced ejection amplitude (low EF);
+//! * `Health::Arrhythmia`  — cycle-length jitter (irregular RR interval).
+//!
+//! Ground-truth end-diastole (ED = maximal volume) and end-systole
+//! (ES = minimal volume) frame indices come from the waveform generator,
+//! replacing the human annotations of the real data set.
+
+use crate::rng::Rng;
+
+/// Cardiac-function condition to simulate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Health {
+    Normal,
+    HeartFailure,
+    Arrhythmia,
+}
+
+impl Health {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Health::Normal => "health",
+            Health::HeartFailure => "heart-failure",
+            Health::Arrhythmia => "arrhythmia",
+        }
+    }
+}
+
+/// Configuration of the synthetic echo generator.
+#[derive(Clone, Debug)]
+pub struct EchoConfig {
+    /// Square frame side (paper: 112).
+    pub size: usize,
+    /// Number of frames.
+    pub frames: usize,
+    /// Frames per cardiac cycle (paper videos: ~30-60 at 51 fps).
+    pub period: f64,
+    /// Condition.
+    pub health: Health,
+    /// Pixel noise level (fraction of peak intensity).
+    pub noise: f64,
+}
+
+impl Default for EchoConfig {
+    fn default() -> Self {
+        EchoConfig { size: 112, frames: 120, period: 30.0, health: Health::Normal, noise: 0.02 }
+    }
+}
+
+/// A generated video: frames of `size*size` gray values in [0,1], plus
+/// ground-truth ED/ES frame indices per cycle.
+#[derive(Clone, Debug)]
+pub struct EchoVideo {
+    pub size: usize,
+    pub frames: Vec<Vec<f64>>,
+    /// (ES index, ED index) pairs, ES before the following ED, per cycle.
+    pub es_frames: Vec<usize>,
+    pub ed_frames: Vec<usize>,
+    /// The volume phase signal used to generate the video (diagnostics).
+    pub phase: Vec<f64>,
+}
+
+/// Cardiac volume waveform on [0,1): 1 at end-diastole, 0 at end-systole.
+/// Systole occupies ~1/3 of the cycle (rapid fall), diastole ~2/3
+/// (slower refill) — the classical asymmetry.
+fn volume_phase(t: f64) -> f64 {
+    let t = t.rem_euclid(1.0);
+    const SYSTOLE: f64 = 0.35;
+    if t < SYSTOLE {
+        // Contraction: cosine fall 1 -> 0.
+        0.5 * (1.0 + (std::f64::consts::PI * t / SYSTOLE).cos())
+    } else {
+        // Relaxation: cosine rise 0 -> 1.
+        let u = (t - SYSTOLE) / (1.0 - SYSTOLE);
+        0.5 * (1.0 - (std::f64::consts::PI * u).cos())
+    }
+}
+
+/// Generate one synthetic echocardiogram video.
+pub fn generate(config: &EchoConfig, rng: &mut Rng) -> EchoVideo {
+    let n = config.size;
+    let center = (n as f64 - 1.0) / 2.0;
+    // Ejection amplitude: how much the inner radius shrinks at ES.
+    let amplitude = match config.health {
+        Health::HeartFailure => 0.35, // reduced ejection fraction
+        _ => 1.0,
+    };
+    // Per-cycle period jitter for arrhythmia.
+    let mut phases = Vec::with_capacity(config.frames);
+    let mut phase_acc = 0.0f64;
+    let mut current_period = config.period;
+    for _ in 0..config.frames {
+        phases.push(phase_acc);
+        phase_acc += 1.0 / current_period;
+        if phase_acc.fract() < 1.0 / current_period && phase_acc >= 1.0 {
+            // New cycle boundary: re-draw the period for arrhythmia.
+            if config.health == Health::Arrhythmia {
+                current_period = config.period * (0.6 + 0.8 * rng.uniform());
+            }
+        }
+    }
+    let vols: Vec<f64> = phases.iter().map(|&p| {
+        let v = volume_phase(p);
+        1.0 - amplitude * (1.0 - v)
+    }).collect();
+
+    // ED/ES ground truth: local maxima/minima of the volume signal.
+    let mut ed_frames = Vec::new();
+    let mut es_frames = Vec::new();
+    for i in 1..config.frames.saturating_sub(1) {
+        if vols[i] >= vols[i - 1] && vols[i] > vols[i + 1] {
+            ed_frames.push(i);
+        }
+        if vols[i] <= vols[i - 1] && vols[i] < vols[i + 1] {
+            es_frames.push(i);
+        }
+    }
+
+    // Render frames.
+    let r_outer = 0.42 * n as f64; // epicardial radius (fixed)
+    let r_inner_ed = 0.30 * n as f64; // endocardial radius at ED
+    let r_inner_es = 0.14 * n as f64; // endocardial radius at ES (full EF)
+    let frames: Vec<Vec<f64>> = vols
+        .iter()
+        .map(|&vol| {
+            let r_inner = r_inner_es + (r_inner_ed - r_inner_es) * vol;
+            let mut img = vec![0.0f64; n * n];
+            for y in 0..n {
+                for x in 0..n {
+                    let dx = x as f64 - center;
+                    let dy = y as f64 - center * 1.05;
+                    // Slight vertical eccentricity: apical view.
+                    let r = (dx * dx + 1.15 * dy * dy).sqrt();
+                    let mut val = 0.0;
+                    if r <= r_outer && r >= r_inner {
+                        // Myocardium: bright, smooth edges.
+                        let edge_o = ((r_outer - r) / 2.0).clamp(0.0, 1.0);
+                        let edge_i = ((r - r_inner) / 2.0).clamp(0.0, 1.0);
+                        val = 0.85 * edge_o * edge_i;
+                    } else if r < r_inner {
+                        // Chamber blood pool: darker, brightness rises
+                        // slightly at ES (denser speckle).
+                        val = 0.15 + 0.1 * (1.0 - vol);
+                    }
+                    if val > 0.0 && config.noise > 0.0 {
+                        val = (val + config.noise * rng.normal()).clamp(0.0, 1.0);
+                    }
+                    img[y * n + x] = val;
+                }
+            }
+            img
+        })
+        .collect();
+
+    EchoVideo { size: n, frames, es_frames, ed_frames, phase: vols }
+}
+
+/// A frame as a sparse 2-D measure: positive-mass pixels only,
+/// normalized gray levels (the paper's construction, Section 6).
+/// Pixels below `threshold` of the max are dropped — zero-mass pixels
+/// can never receive transport, so this is exact for the WFR distance.
+pub fn frame_to_measure(
+    frame: &[f64],
+    size: usize,
+    threshold: f64,
+) -> (Vec<Vec<f64>>, Vec<f64>) {
+    let max = frame.iter().cloned().fold(0.0, f64::max);
+    let cut = threshold * max;
+    let mut support = Vec::new();
+    let mut mass = Vec::new();
+    for y in 0..size {
+        for x in 0..size {
+            let v = frame[y * size + x];
+            if v > cut {
+                support.push(vec![x as f64, y as f64]);
+                mass.push(v);
+            }
+        }
+    }
+    let total: f64 = mass.iter().sum();
+    for m in mass.iter_mut() {
+        *m /= total;
+    }
+    (support, mass)
+}
+
+/// Mean-pool a frame with `k`×`k` filters and stride `k` (Table 1b).
+pub fn mean_pool(frame: &[f64], size: usize, k: usize) -> (Vec<f64>, usize) {
+    assert_eq!(size % k, 0, "pooling requires divisible size");
+    let out_size = size / k;
+    let mut out = vec![0.0; out_size * out_size];
+    for oy in 0..out_size {
+        for ox in 0..out_size {
+            let mut acc = 0.0;
+            for dy in 0..k {
+                for dx in 0..k {
+                    acc += frame[(oy * k + dy) * size + (ox * k + dx)];
+                }
+            }
+            out[oy * out_size + ox] = acc / (k * k) as f64;
+        }
+    }
+    (out, out_size)
+}
+
+/// Temporal downsampling: keep every `period`-th frame (the paper
+/// samples every other two frames, period 3).
+pub fn downsample_frames(video: &EchoVideo, period: usize) -> Vec<usize> {
+    (0..video.frames.len()).step_by(period).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn waveform_extremes() {
+        assert!((volume_phase(0.0) - 1.0).abs() < 1e-12);
+        assert!(volume_phase(0.35) < 1e-12); // end systole
+        assert!((volume_phase(0.999) - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn video_has_cycles_with_ground_truth() {
+        let mut rng = Rng::seed_from(103);
+        let cfg = EchoConfig { size: 32, frames: 90, period: 30.0, ..Default::default() };
+        let video = generate(&cfg, &mut rng);
+        assert_eq!(video.frames.len(), 90);
+        assert!(video.ed_frames.len() >= 2, "ed {:?}", video.ed_frames);
+        assert!(video.es_frames.len() >= 2, "es {:?}", video.es_frames);
+        // ES and ED alternate.
+        for (&es, &ed) in video.es_frames.iter().zip(&video.ed_frames) {
+            assert_ne!(es, ed);
+        }
+    }
+
+    #[test]
+    fn heart_failure_reduces_motion() {
+        let mut r1 = Rng::seed_from(105);
+        let mut r2 = Rng::seed_from(105);
+        let normal = generate(
+            &EchoConfig { size: 32, frames: 60, health: Health::Normal, noise: 0.0, ..Default::default() },
+            &mut r1,
+        );
+        let failing = generate(
+            &EchoConfig { size: 32, frames: 60, health: Health::HeartFailure, noise: 0.0, ..Default::default() },
+            &mut r2,
+        );
+        // Frame-to-frame image change should be larger for the healthy
+        // heart (more wall motion).
+        let motion = |v: &EchoVideo| -> f64 {
+            v.frames
+                .windows(2)
+                .map(|w| w[0].iter().zip(&w[1]).map(|(a, b)| (a - b).abs()).sum::<f64>())
+                .sum()
+        };
+        assert!(motion(&normal) > 1.5 * motion(&failing));
+    }
+
+    #[test]
+    fn arrhythmia_has_irregular_cycles() {
+        let mut rng = Rng::seed_from(107);
+        let video = generate(
+            &EchoConfig {
+                size: 24,
+                frames: 300,
+                period: 30.0,
+                health: Health::Arrhythmia,
+                noise: 0.0,
+            },
+            &mut rng,
+        );
+        let gaps: Vec<i64> = video
+            .ed_frames
+            .windows(2)
+            .map(|w| w[1] as i64 - w[0] as i64)
+            .collect();
+        assert!(gaps.len() >= 3);
+        let min = gaps.iter().min().unwrap();
+        let max = gaps.iter().max().unwrap();
+        assert!(max - min >= 4, "cycle lengths too regular: {gaps:?}");
+    }
+
+    #[test]
+    fn measure_is_normalized_and_sparse() {
+        let mut rng = Rng::seed_from(109);
+        let video = generate(&EchoConfig { size: 48, frames: 3, ..Default::default() }, &mut rng);
+        let (support, mass) = frame_to_measure(&video.frames[0], 48, 0.05);
+        let s: f64 = mass.iter().sum();
+        assert!((s - 1.0).abs() < 1e-9);
+        assert!(support.len() < 48 * 48, "background should be dropped");
+        assert!(support.len() > 100, "foreground too small: {}", support.len());
+    }
+
+    #[test]
+    fn mean_pool_preserves_total_mass_scaled() {
+        let frame: Vec<f64> = (0..16).map(|i| i as f64).collect();
+        let (pooled, out_size) = mean_pool(&frame, 4, 2);
+        assert_eq!(out_size, 2);
+        assert_eq!(pooled.len(), 4);
+        // Pool of [0,1,4,5] = 2.5 etc.
+        assert!((pooled[0] - 2.5).abs() < 1e-12);
+        let total_in: f64 = frame.iter().sum();
+        let total_out: f64 = pooled.iter().sum::<f64>() * 4.0;
+        assert!((total_in - total_out).abs() < 1e-9);
+    }
+
+    #[test]
+    fn downsampling_period() {
+        let mut rng = Rng::seed_from(111);
+        let video = generate(&EchoConfig { size: 16, frames: 30, ..Default::default() }, &mut rng);
+        let idx = downsample_frames(&video, 3);
+        assert_eq!(idx, vec![0, 3, 6, 9, 12, 15, 18, 21, 24, 27]);
+    }
+}

@@ -1,0 +1,133 @@
+//! Synthetic RGB point clouds for the color-transfer application
+//! (Appendix D.1, Fig. 13; DESIGN.md §3 documents the substitution for
+//! the ocean photographs).
+//!
+//! * "daytime" — colors concentrated around sky-blue and sea-blue modes
+//!   with a white-foam tail;
+//! * "sunset"  — warm orange/red modes with a dark-sea tail.
+//!
+//! Each cloud is `n` RGB triples in [0,1]³ with uniform weights, exactly
+//! the structure of the downsampled-pixel clouds in the paper.
+
+use crate::rng::Rng;
+
+/// A named color mode: mean RGB + isotropic spread + weight.
+struct Mode {
+    mean: [f64; 3],
+    sd: f64,
+    weight: f64,
+}
+
+fn sample_cloud(modes: &[Mode], n: usize, rng: &mut Rng) -> Vec<Vec<f64>> {
+    let weights: Vec<f64> = modes.iter().map(|m| m.weight).collect();
+    (0..n)
+        .map(|_| {
+            let k = rng.weighted_choice(&weights);
+            let m = &modes[k];
+            (0..3)
+                .map(|c| (m.mean[c] + m.sd * rng.normal()).clamp(0.0, 1.0))
+                .collect()
+        })
+        .collect()
+}
+
+/// Daytime ocean palette.
+pub fn daytime_cloud(n: usize, rng: &mut Rng) -> Vec<Vec<f64>> {
+    sample_cloud(
+        &[
+            Mode { mean: [0.45, 0.7, 0.95], sd: 0.06, weight: 0.45 }, // sky
+            Mode { mean: [0.1, 0.35, 0.6], sd: 0.07, weight: 0.4 },   // sea
+            Mode { mean: [0.9, 0.93, 0.95], sd: 0.04, weight: 0.15 }, // foam/cloud
+        ],
+        n,
+        rng,
+    )
+}
+
+/// Sunset ocean palette.
+pub fn sunset_cloud(n: usize, rng: &mut Rng) -> Vec<Vec<f64>> {
+    sample_cloud(
+        &[
+            Mode { mean: [0.95, 0.55, 0.2], sd: 0.07, weight: 0.4 }, // orange sky
+            Mode { mean: [0.8, 0.25, 0.2], sd: 0.06, weight: 0.3 },  // red sun band
+            Mode { mean: [0.2, 0.12, 0.25], sd: 0.05, weight: 0.3 }, // dark sea
+        ],
+        n,
+        rng,
+    )
+}
+
+/// Apply a barycentric-projection color map from a transport plan:
+/// each source color moves to the plan-weighted average of the target
+/// colors it couples with (the standard OT color-transfer map used by
+/// Ferradans et al.).
+pub fn barycentric_map(
+    plan_row: impl Fn(usize) -> Vec<(usize, f64)>,
+    targets: &[Vec<f64>],
+    n_source: usize,
+) -> Vec<Vec<f64>> {
+    (0..n_source)
+        .map(|i| {
+            let row = plan_row(i);
+            let mass: f64 = row.iter().map(|(_, t)| t).sum();
+            if mass <= 0.0 {
+                return vec![0.0; 3];
+            }
+            let mut out = vec![0.0; 3];
+            for (j, t) in row {
+                for c in 0..3 {
+                    out[c] += t * targets[j][c];
+                }
+            }
+            out.iter_mut().for_each(|x| *x /= mass);
+            out
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clouds_are_in_rgb_cube() {
+        let mut rng = Rng::seed_from(117);
+        for cloud in [daytime_cloud(500, &mut rng), sunset_cloud(500, &mut rng)] {
+            assert_eq!(cloud.len(), 500);
+            assert!(cloud.iter().flatten().all(|&v| (0.0..=1.0).contains(&v)));
+        }
+    }
+
+    #[test]
+    fn palettes_are_distinct() {
+        let mut rng = Rng::seed_from(119);
+        let day = daytime_cloud(2000, &mut rng);
+        let sun = sunset_cloud(2000, &mut rng);
+        // Mean red channel: sunset is much warmer.
+        let mean_r = |c: &[Vec<f64>]| c.iter().map(|p| p[0]).sum::<f64>() / c.len() as f64;
+        let mean_b = |c: &[Vec<f64>]| c.iter().map(|p| p[2]).sum::<f64>() / c.len() as f64;
+        assert!(mean_r(&sun) > mean_r(&day) + 0.2);
+        assert!(mean_b(&day) > mean_b(&sun) + 0.2);
+    }
+
+    #[test]
+    fn barycentric_map_averages_targets() {
+        let targets = vec![vec![1.0, 0.0, 0.0], vec![0.0, 1.0, 0.0]];
+        let mapped = barycentric_map(
+            |_| vec![(0, 0.25), (1, 0.75)],
+            &targets,
+            2,
+        );
+        for m in mapped {
+            assert!((m[0] - 0.25).abs() < 1e-12);
+            assert!((m[1] - 0.75).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn barycentric_map_handles_empty_rows() {
+        let targets = vec![vec![0.5, 0.5, 0.5]];
+        let mapped = barycentric_map(|_| vec![], &targets, 1);
+        assert_eq!(mapped[0], vec![0.0; 3]);
+    }
+}

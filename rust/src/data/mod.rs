@@ -1,0 +1,10 @@
+//! Workload generators for every experiment in the paper: the C1–C3
+//! synthetic measures, the R1–R3 WFR sparsity regimes, synthetic
+//! echocardiogram videos (Table 1 / Figs. 6-7 substitution), digit
+//! glyphs for barycenters (Fig. 12), and RGB point clouds for color
+//! transfer (Fig. 13).
+
+pub mod digits;
+pub mod echo;
+pub mod images;
+pub mod synthetic;

@@ -1,0 +1,262 @@
+//! Section 5.1 synthetic workloads.
+//!
+//! * **C1** — a, b empirical Gaussians N(1/3, 1/20), N(1/2, 1/20);
+//!   supports x_i ~ U(0,1)^d.
+//! * **C2** — same a, b; supports x_i ~ N(0_d, Σ), Σ_jk = 0.5^|j−k|.
+//! * **C3** — a, b empirical t₅(1/3, 1/20), t₅(1/2, 1/20); supports as C1.
+//!
+//! "Empirical Gaussian N(μ, σ²)" follows the standard construction in
+//! the POT examples the paper builds on: draw n values from the
+//! distribution, take absolute weights, and normalize to the simplex.
+//!
+//! UOT experiments additionally scale total masses to 5 and 3 and select
+//! the WFR η for target kernel densities ~70%/50%/30% (**R1–R3**).
+
+use crate::rng::Rng;
+
+/// Scenario tag for the data-generation patterns of Section 5.1.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scenario {
+    C1,
+    C2,
+    C3,
+}
+
+impl Scenario {
+    pub fn all() -> [Scenario; 3] {
+        [Scenario::C1, Scenario::C2, Scenario::C3]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scenario::C1 => "C1",
+            Scenario::C2 => "C2",
+            Scenario::C3 => "C3",
+        }
+    }
+}
+
+/// WFR kernel sparsity regimes (Section 5.1): target nnz fractions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SparsityRegime {
+    R1,
+    R2,
+    R3,
+}
+
+impl SparsityRegime {
+    pub fn all() -> [SparsityRegime; 3] {
+        [SparsityRegime::R1, SparsityRegime::R2, SparsityRegime::R3]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SparsityRegime::R1 => "R1",
+            SparsityRegime::R2 => "R2",
+            SparsityRegime::R3 => "R3",
+        }
+    }
+
+    /// Target fraction of non-zero kernel entries.
+    pub fn density(&self) -> f64 {
+        match self {
+            SparsityRegime::R1 => 0.7,
+            SparsityRegime::R2 => 0.5,
+            SparsityRegime::R3 => 0.3,
+        }
+    }
+}
+
+/// One generated OT/UOT problem instance.
+#[derive(Clone, Debug)]
+pub struct Instance {
+    /// Shared support points (n × d).
+    pub points: Vec<Vec<f64>>,
+    /// Source histogram.
+    pub a: Vec<f64>,
+    /// Target histogram.
+    pub b: Vec<f64>,
+}
+
+fn normalize_to_mass(xs: &mut [f64], mass: f64) {
+    let s: f64 = xs.iter().sum();
+    assert!(s > 0.0);
+    for x in xs.iter_mut() {
+        *x *= mass / s;
+    }
+}
+
+/// Empirical histogram: |draws| from the given sampler, normalized.
+fn empirical_hist(n: usize, mass: f64, mut draw: impl FnMut() -> f64) -> Vec<f64> {
+    let mut h: Vec<f64> = (0..n).map(|_| draw().abs().max(1e-12)).collect();
+    normalize_to_mass(&mut h, mass);
+    h
+}
+
+/// Sample support points for a scenario.
+pub fn support(scenario: Scenario, n: usize, d: usize, rng: &mut Rng) -> Vec<Vec<f64>> {
+    match scenario {
+        Scenario::C1 | Scenario::C3 => (0..n)
+            .map(|_| (0..d).map(|_| rng.uniform()).collect())
+            .collect(),
+        Scenario::C2 => {
+            // x ~ N(0, Σ), Σ_jk = 0.5^|j-k| via Cholesky of the AR(1)-like
+            // covariance. For this Kac–Murdock–Szegő matrix the Cholesky
+            // factor is analytic: L_00 = 1; L_j0 = 0.5^j; and the process
+            // representation x_j = 0.5 x_{j-1} + sqrt(1-0.25) z_j matches
+            // Σ exactly (stationary AR(1) with unit variance).
+            (0..n)
+                .map(|_| {
+                    let mut x = Vec::with_capacity(d);
+                    let mut prev = rng.normal();
+                    x.push(prev);
+                    for _ in 1..d {
+                        let z = rng.normal();
+                        prev = 0.5 * prev + (1.0f64 - 0.25).sqrt() * z;
+                        x.push(prev);
+                    }
+                    x
+                })
+                .collect()
+        }
+    }
+}
+
+/// Generate a full instance with the paper's marginals.
+///
+/// `mass_a`/`mass_b` are 1.0 for OT and (5.0, 3.0) for UOT.
+pub fn instance(
+    scenario: Scenario,
+    n: usize,
+    d: usize,
+    mass_a: f64,
+    mass_b: f64,
+    rng: &mut Rng,
+) -> Instance {
+    let points = support(scenario, n, d, rng);
+    let sd = (1.0f64 / 20.0).sqrt();
+    let (a, b) = match scenario {
+        Scenario::C1 | Scenario::C2 => (
+            empirical_hist(n, mass_a, || rng.normal_ms(1.0 / 3.0, sd)),
+            empirical_hist(n, mass_b, || rng.normal_ms(0.5, sd)),
+        ),
+        Scenario::C3 => (
+            empirical_hist(n, mass_a, || rng.student_t_ls(5.0, 1.0 / 3.0, 1.0 / 20.0)),
+            empirical_hist(n, mass_b, || rng.student_t_ls(5.0, 0.5, 1.0 / 20.0)),
+        ),
+    };
+    Instance { points, a, b }
+}
+
+/// The barycenter inputs of Appendix C.3: Gaussian, Gaussian mixture and
+/// t₅ histograms over shared uniform support, with the paper's floor
+/// `+1e-2 max(b)` and renormalization.
+pub fn barycenter_measures(n: usize, rng: &mut Rng) -> Vec<Vec<f64>> {
+    let mut measures = Vec::with_capacity(3);
+    let b1 = empirical_hist(n, 1.0, || rng.normal_ms(1.0 / 5.0, (1.0f64 / 50.0).sqrt()));
+    let b2: Vec<f64> = (0..n)
+        .map(|_| {
+            if rng.bernoulli(0.5) {
+                rng.normal_ms(0.5, (1.0f64 / 60.0).sqrt()).abs()
+            } else {
+                rng.normal_ms(4.0 / 5.0, (1.0f64 / 80.0).sqrt()).abs()
+            }
+            .max(1e-12)
+        })
+        .collect();
+    let b3 = empirical_hist(n, 1.0, || rng.student_t_ls(5.0, 3.0 / 5.0, 1.0 / 100.0));
+    let mut b2 = b2;
+    normalize_to_mass(&mut b2, 1.0);
+    measures.push(b1);
+    measures.push(b2);
+    measures.push(b3);
+    // Paper: add 1e-2 * max(b_k) to every component, renormalize.
+    for b in measures.iter_mut() {
+        let floor = 1e-2 * b.iter().cloned().fold(0.0, f64::max);
+        for x in b.iter_mut() {
+            *x += floor;
+        }
+        normalize_to_mass(b, 1.0);
+    }
+    measures
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histograms_normalized_to_requested_mass() {
+        let mut rng = Rng::seed_from(91);
+        for scen in Scenario::all() {
+            let inst = instance(scen, 200, 5, 5.0, 3.0, &mut rng);
+            let sa: f64 = inst.a.iter().sum();
+            let sb: f64 = inst.b.iter().sum();
+            assert!((sa - 5.0).abs() < 1e-9, "{scen:?} mass a {sa}");
+            assert!((sb - 3.0).abs() < 1e-9, "{scen:?} mass b {sb}");
+            assert!(inst.a.iter().all(|&x| x > 0.0));
+            assert_eq!(inst.points.len(), 200);
+            assert_eq!(inst.points[0].len(), 5);
+        }
+    }
+
+    #[test]
+    fn c1_support_in_unit_cube() {
+        let mut rng = Rng::seed_from(93);
+        let pts = support(Scenario::C1, 500, 4, &mut rng);
+        assert!(pts.iter().flatten().all(|&x| (0.0..1.0).contains(&x)));
+    }
+
+    #[test]
+    fn c2_support_has_ar1_covariance() {
+        let mut rng = Rng::seed_from(95);
+        let d = 4;
+        let n = 60_000;
+        let pts = support(Scenario::C2, n, d, &mut rng);
+        // Sample covariance ≈ 0.5^{|j-k|}.
+        for j in 0..d {
+            for k in 0..d {
+                let cov: f64 =
+                    pts.iter().map(|x| x[j] * x[k]).sum::<f64>() / n as f64;
+                let want = 0.5f64.powi((j as i32 - k as i32).abs());
+                assert!(
+                    (cov - want).abs() < 0.03,
+                    "cov[{j}][{k}] = {cov}, want {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn c3_marginals_heavier_tailed_than_c1() {
+        let mut rng = Rng::seed_from(97);
+        let n = 20_000;
+        let c1 = instance(Scenario::C1, n, 2, 1.0, 1.0, &mut rng);
+        let c3 = instance(Scenario::C3, n, 2, 1.0, 1.0, &mut rng);
+        // Heavier tails -> larger max/mean weight ratio.
+        let ratio = |h: &[f64]| h.iter().cloned().fold(0.0, f64::max) * n as f64;
+        assert!(ratio(&c3.a) > ratio(&c1.a), "{} vs {}", ratio(&c3.a), ratio(&c1.a));
+    }
+
+    #[test]
+    fn barycenter_measures_are_simplex_points() {
+        let mut rng = Rng::seed_from(99);
+        let ms = barycenter_measures(300, &mut rng);
+        assert_eq!(ms.len(), 3);
+        for m in &ms {
+            let s: f64 = m.iter().sum();
+            assert!((s - 1.0).abs() < 1e-9);
+            assert!(m.iter().all(|&x| x > 0.0));
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut r1 = Rng::seed_from(101);
+        let mut r2 = Rng::seed_from(101);
+        let i1 = instance(Scenario::C2, 50, 3, 1.0, 1.0, &mut r1);
+        let i2 = instance(Scenario::C2, 50, 3, 1.0, 1.0, &mut r2);
+        assert_eq!(i1.a, i2.a);
+        assert_eq!(i1.points, i2.points);
+    }
+}

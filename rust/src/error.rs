@@ -1,0 +1,49 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Errors surfaced by solvers, the runtime, and the coordinator.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Input shapes/sizes are inconsistent.
+    #[error("dimension mismatch: {0}")]
+    Dimension(String),
+
+    /// A solver failed to make progress (NaN/Inf scalings, empty kernel…).
+    #[error("numerical failure: {0}")]
+    Numerical(String),
+
+    /// An iteration limit was reached before the tolerance was met.
+    /// Carries the last objective estimate so callers can still use it.
+    #[error("did not converge within {iters} iterations (last displacement {err:.3e})")]
+    NotConverged { iters: usize, err: f64 },
+
+    /// Invalid parameter value.
+    #[error("invalid parameter: {0}")]
+    InvalidParam(String),
+
+    /// PJRT runtime failure (artifact missing, compile error, …).
+    #[error("runtime: {0}")]
+    Runtime(String),
+
+    /// Coordinator failure (queue closed, worker panicked, …).
+    #[error("coordinator: {0}")]
+    Coordinator(String),
+
+    /// I/O error.
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+
+    /// Error bubbled up from the `xla` crate.
+    #[error("xla: {0}")]
+    Xla(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,106 @@
+//! Ablations called out in DESIGN.md §7:
+//! 1. shrinkage θ mixing importance and uniform probabilities
+//!    (condition (ii) of Theorem 1) — θ = 1 is the paper's pure
+//!    importance sampling, θ = 0 degenerates to Rand-Sink;
+//! 2. Poisson sampling (Eq. 7) vs sampling-with-replacement at the same
+//!    expected budget (the Wang & Zou 2021 comparison the paper cites).
+
+use super::common::{exact_ot, ot_cost, rmae_over_reps, row};
+use super::{ExperimentOutput, Profile};
+use crate::data::synthetic::{instance, Scenario};
+use crate::metrics::s0;
+use crate::ot::sinkhorn::SinkhornParams;
+use crate::rng::Rng;
+use crate::solvers::spar_sink::{spar_sink_ot, SparSinkParams};
+use crate::solvers::sparse_loop;
+use crate::sparse::sample_with_replacement_ot;
+use crate::util::json::Json;
+use crate::util::table::{f, Table};
+
+pub fn run(profile: Profile) -> ExperimentOutput {
+    let n = profile.pick(300, 1000);
+    let reps = profile.reps(5, 50);
+    let eps = 0.1;
+    let d = 5;
+    let s_mult = 8.0;
+    let mut rng = Rng::seed_from(0xAB3A);
+    let inst = instance(Scenario::C1, n, d, 1.0, 1.0, &mut rng);
+    let cost = ot_cost(&inst.points);
+    let truth = exact_ot(&cost, &inst.a, &inst.b, eps).expect("exact");
+
+    // --- shrinkage sweep ---
+    let mut table = Table::new(&["ablation", "setting", "rmae", "se"]);
+    let mut rows = Vec::new();
+    for theta in [0.0, 0.25, 0.5, 0.75, 1.0] {
+        let params = SparSinkParams {
+            sinkhorn: SinkhornParams::default(),
+            shrinkage: theta,
+        };
+        let (rmae, se, _) = rmae_over_reps(
+            reps,
+            truth,
+            |r| {
+                spar_sink_ot(&cost, &inst.a, &inst.b, eps, s_mult, &params, r)
+                    .map(|s| s.solution.objective)
+            },
+            &mut rng,
+        );
+        table.row(vec!["shrinkage".into(), format!("theta={theta}"), f(rmae, 4), f(se, 4)]);
+        rows.push(row(vec![
+            ("ablation", Json::str("shrinkage")),
+            ("theta", Json::num(theta)),
+            ("rmae", Json::num(rmae)),
+        ]));
+    }
+
+    // --- Poisson vs with-replacement at matched budget ---
+    let budget = (s_mult * s0(n)) as usize;
+    let (rmae_wr, se_wr, _) = rmae_over_reps(
+        reps,
+        truth,
+        |r| {
+            let sketch = sample_with_replacement_ot(
+                |i, j| {
+                    let c = cost.get(i, j);
+                    if c.is_finite() { (-c / eps).exp() } else { 0.0 }
+                },
+                |i, j| cost.get(i, j),
+                &inst.a,
+                &inst.b,
+                budget,
+                r,
+            )?;
+            let (u, v, ..) =
+                sparse_loop::sparse_scalings(&sketch, &inst.a, &inst.b, 1.0, &SinkhornParams::default())?;
+            Ok(sparse_loop::sparse_ot_objective(&sketch, &u, &v, eps))
+        },
+        &mut rng,
+    );
+    table.row(vec!["sampling".into(), "with-replacement".into(), f(rmae_wr, 4), f(se_wr, 4)]);
+    rows.push(row(vec![
+        ("ablation", Json::str("sampling")),
+        ("scheme", Json::str("with-replacement")),
+        ("rmae", Json::num(rmae_wr)),
+    ]));
+    let (rmae_p, se_p, _) = rmae_over_reps(
+        reps,
+        truth,
+        |r| {
+            spar_sink_ot(&cost, &inst.a, &inst.b, eps, s_mult, &SparSinkParams::default(), r)
+                .map(|s| s.solution.objective)
+        },
+        &mut rng,
+    );
+    table.row(vec!["sampling".into(), "poisson".into(), f(rmae_p, 4), f(se_p, 4)]);
+    rows.push(row(vec![
+        ("ablation", Json::str("sampling")),
+        ("scheme", Json::str("poisson")),
+        ("rmae", Json::num(rmae_p)),
+    ]));
+
+    let text = format!(
+        "Ablations (n = {n}, eps = {eps}, s = 8 s0(n), {reps} reps)\n{}",
+        table.render()
+    );
+    ExperimentOutput { id: "ablation", text, rows: Json::arr(rows) }
+}

@@ -1,0 +1,253 @@
+//! Shared experiment plumbing: method runners at matched budgets, RMAE
+//! sweeps, and result-row helpers.
+
+use crate::linalg::Mat;
+use crate::metrics::{mean_sd, s0};
+use crate::ot::cost::{gibbs_kernel, sq_euclidean_cost, wfr_cost};
+use crate::ot::sinkhorn::{sinkhorn_ot, SinkhornParams};
+use crate::ot::uot::sinkhorn_uot;
+use crate::rng::Rng;
+use crate::solvers::nys_sink::{nys_sink_ot, nys_sink_uot, NysSinkParams};
+use crate::solvers::rand_sink::{rand_sink_ot, rand_sink_uot};
+use crate::solvers::spar_sink::{spar_sink_ot, spar_sink_uot, SparSinkParams};
+use crate::util::json::Json;
+
+/// Subsampling-based methods compared in Figs. 2-3 and 8-10.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    NysSink,
+    RandSink,
+    SparSink,
+}
+
+impl Method {
+    pub fn all() -> [Method; 3] {
+        [Method::NysSink, Method::RandSink, Method::SparSink]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::NysSink => "nys-sink",
+            Method::RandSink => "rand-sink",
+            Method::SparSink => "spar-sink",
+        }
+    }
+}
+
+/// Normalize a cost matrix to max 1 — the standard preprocessing that
+/// keeps `exp(-C/eps)` representable down to eps = 1e-3 (C_ij <= c0 is
+/// the paper's boundedness assumption; this fixes c0 = 1).
+pub fn normalize_cost(cost: &Mat) -> Mat {
+    let max = cost
+        .as_slice()
+        .iter()
+        .cloned()
+        .filter(|c| c.is_finite())
+        .fold(0.0f64, f64::max);
+    if max <= 0.0 {
+        return cost.clone();
+    }
+    cost.map(move |c| c / max)
+}
+
+/// Build the (normalized) squared-Euclidean cost of an instance.
+pub fn ot_cost(points: &[Vec<f64>]) -> Mat {
+    normalize_cost(&sq_euclidean_cost(points, points))
+}
+
+/// Build the WFR cost at a target kernel density (R1-R3).
+pub fn wfr_cost_at_density(points: &[Vec<f64>], density: f64) -> Mat {
+    let eta = crate::ot::cost::calibrate_eta(points, points, density, 1e-3);
+    wfr_cost(points, points, eta)
+}
+
+/// Run one subsampling method on an OT problem at budget `s_mult`·s₀(n);
+/// Nys-Sink gets rank r = ceil(s/n) per the paper's matched protocol.
+pub fn run_method_ot(
+    method: Method,
+    cost: &Mat,
+    a: &[f64],
+    b: &[f64],
+    eps: f64,
+    s_mult: f64,
+    rng: &mut Rng,
+) -> crate::error::Result<f64> {
+    let n = a.len();
+    match method {
+        Method::SparSink => spar_sink_ot(cost, a, b, eps, s_mult, &SparSinkParams::default(), rng)
+            .map(|s| s.solution.objective),
+        Method::RandSink => {
+            rand_sink_ot(cost, a, b, eps, s_mult, &SinkhornParams::default(), rng)
+                .map(|s| s.solution.objective)
+        }
+        Method::NysSink => {
+            let rank = ((s_mult * s0(n) / n as f64).ceil() as usize).max(1);
+            let kernel = gibbs_kernel(cost, eps);
+            nys_sink_ot(
+                |i, j| kernel.get(i, j),
+                |i, j| cost.get(i, j),
+                a,
+                b,
+                eps,
+                rank,
+                &NysSinkParams::default(),
+                rng,
+            )
+            .map(|s| s.objective)
+        }
+    }
+}
+
+/// Same for UOT (WFR cost).
+#[allow(clippy::too_many_arguments)]
+pub fn run_method_uot(
+    method: Method,
+    cost: &Mat,
+    a: &[f64],
+    b: &[f64],
+    lambda: f64,
+    eps: f64,
+    s_mult: f64,
+    rng: &mut Rng,
+) -> crate::error::Result<f64> {
+    let n = a.len();
+    match method {
+        Method::SparSink => spar_sink_uot(
+            cost,
+            a,
+            b,
+            lambda,
+            eps,
+            s_mult,
+            &SparSinkParams::default(),
+            rng,
+        )
+        .map(|s| s.solution.objective),
+        Method::RandSink => rand_sink_uot(
+            cost,
+            a,
+            b,
+            lambda,
+            eps,
+            s_mult,
+            &SinkhornParams::default(),
+            rng,
+        )
+        .map(|s| s.solution.objective),
+        Method::NysSink => {
+            let rank = ((s_mult * s0(n) / n as f64).ceil() as usize).max(1);
+            let kernel = gibbs_kernel_inf(cost, eps);
+            nys_sink_uot(
+                |i, j| kernel.get(i, j),
+                |i, j| cost.get(i, j),
+                a,
+                b,
+                lambda,
+                eps,
+                rank,
+                &NysSinkParams::default(),
+                rng,
+            )
+            .map(|s| s.objective)
+        }
+    }
+}
+
+/// Gibbs kernel that maps infinite costs (WFR truncation) to zero.
+pub fn gibbs_kernel_inf(cost: &Mat, eps: f64) -> Mat {
+    cost.map(move |c| if c.is_finite() { (-c / eps).exp() } else { 0.0 })
+}
+
+/// Exact OT solve (truth for RMAE).
+pub fn exact_ot(cost: &Mat, a: &[f64], b: &[f64], eps: f64) -> crate::error::Result<f64> {
+    let kernel = gibbs_kernel(cost, eps);
+    sinkhorn_ot(&kernel, cost, a, b, eps, &SinkhornParams::default()).map(|s| s.objective)
+}
+
+/// Exact UOT solve (truth for RMAE).
+pub fn exact_uot(
+    cost: &Mat,
+    a: &[f64],
+    b: &[f64],
+    lambda: f64,
+    eps: f64,
+) -> crate::error::Result<f64> {
+    let kernel = gibbs_kernel_inf(cost, eps);
+    sinkhorn_uot(&kernel, cost, a, b, lambda, eps, &SinkhornParams::default())
+        .map(|s| s.objective)
+}
+
+/// RMAE ± se of a method over `reps` independent sketches.
+pub fn rmae_over_reps(
+    reps: usize,
+    truth: f64,
+    mut run_once: impl FnMut(&mut Rng) -> crate::error::Result<f64>,
+    rng: &mut Rng,
+) -> (f64, f64, usize) {
+    let mut errs = Vec::with_capacity(reps);
+    let mut failures = 0usize;
+    for _ in 0..reps {
+        match run_once(rng) {
+            Ok(est) => errs.push((est - truth).abs() / truth.abs().max(f64::MIN_POSITIVE)),
+            Err(_) => failures += 1,
+        }
+    }
+    if errs.is_empty() {
+        return (f64::NAN, f64::NAN, failures);
+    }
+    let (mean, sd) = mean_sd(&errs);
+    (mean, sd / (errs.len() as f64).sqrt(), failures)
+}
+
+/// A JSON row builder for experiment outputs.
+pub fn row(fields: Vec<(&str, Json)>) -> Json {
+    Json::obj(fields)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{instance, Scenario};
+
+    #[test]
+    fn normalize_cost_caps_at_one() {
+        let c = Mat::from_fn(3, 3, |i, j| (i * 3 + j) as f64);
+        let n = normalize_cost(&c);
+        assert!((n.max() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn methods_all_run_on_small_instance() {
+        let mut rng = Rng::seed_from(7);
+        let inst = instance(Scenario::C1, 120, 5, 1.0, 1.0, &mut rng);
+        let cost = ot_cost(&inst.points);
+        let truth = exact_ot(&cost, &inst.a, &inst.b, 0.1).unwrap();
+        assert!(truth.is_finite());
+        for m in Method::all() {
+            let est = run_method_ot(m, &cost, &inst.a, &inst.b, 0.1, 8.0, &mut rng).unwrap();
+            assert!(est.is_finite(), "{m:?}");
+        }
+    }
+
+    #[test]
+    fn rmae_over_reps_counts_failures() {
+        let mut rng = Rng::seed_from(9);
+        let mut flip = false;
+        let (mean, se, failures) = rmae_over_reps(
+            4,
+            1.0,
+            |_| {
+                flip = !flip;
+                if flip {
+                    Ok(1.1)
+                } else {
+                    Err(crate::error::Error::Numerical("x".into()))
+                }
+            },
+            &mut rng,
+        );
+        assert_eq!(failures, 2);
+        assert!((mean - 0.1).abs() < 1e-12);
+        assert!(se >= 0.0);
+    }
+}

@@ -1,0 +1,173 @@
+//! Appendix Fig. 11 — Wasserstein barycenter approximation error versus
+//! s: IBP (truth) vs Nys-IBP, Rand-IBP and Spar-IBP, over
+//! ε ∈ {5e-2, 1e-2(≈5⁰·1e-2), 5e-3}·… (paper: {5, 1, 0.2}·1e-1-ish menu,
+//! we use {5e-2, 1e-2, 5e-3}) and d ∈ {5, 10, 20}.
+
+use super::common::{normalize_cost, row};
+use super::{ExperimentOutput, Profile};
+use crate::data::synthetic::barycenter_measures;
+use crate::linalg::Mat;
+use crate::metrics::{l1_distance, mean_sd, s0};
+use crate::ot::barycenter::{ibp_barycenter, ibp_barycenter_with};
+use crate::ot::cost::{gibbs_kernel, sq_euclidean_cost};
+use crate::ot::sinkhorn::SinkhornParams;
+use crate::rng::Rng;
+use crate::solvers::spar_ibp::spar_ibp;
+use crate::sparse::poisson_sparsify_with;
+use crate::util::json::Json;
+use crate::util::table::{f, Table};
+
+/// Rand-IBP: uniform-probability sparsification of each kernel.
+fn rand_ibp(
+    kernels: &[Mat],
+    bs: &[Vec<f64>],
+    w: &[f64],
+    s: f64,
+    params: &SinkhornParams,
+    rng: &mut Rng,
+) -> crate::error::Result<Vec<f64>> {
+    let mut sketches = Vec::new();
+    for kernel in kernels {
+        let n2 = (kernel.rows() * kernel.cols()) as f64;
+        let (sk, _) = poisson_sparsify_with(
+            kernel.rows(),
+            kernel.cols(),
+            |i, j| kernel.get(i, j),
+            |_, _| 0.0,
+            |_, _| 1.0,
+            n2,
+            s,
+            1.0,
+            rng,
+        )?;
+        sketches.push(sk);
+    }
+    Ok(ibp_barycenter_with(&sketches, bs, w, params)?.q)
+}
+
+/// Nys-IBP: low-rank factor per kernel drives the IBP loop.
+fn nys_ibp(
+    kernels: &[Mat],
+    bs: &[Vec<f64>],
+    w: &[f64],
+    rank: usize,
+    params: &SinkhornParams,
+    rng: &mut Rng,
+) -> crate::error::Result<Vec<f64>> {
+    use crate::linalg::nystrom_factorize;
+    use crate::ot::barycenter::KernelOp;
+
+    struct NysOp(crate::linalg::NystromFactor, usize);
+    impl KernelOp for NysOp {
+        fn apply(&self, x: &[f64]) -> Vec<f64> {
+            self.0.matvec(x).iter().map(|&v| v.max(0.0)).collect()
+        }
+        fn apply_t(&self, x: &[f64]) -> Vec<f64> {
+            self.0.matvec_t(x).iter().map(|&v| v.max(0.0)).collect()
+        }
+        fn rows(&self) -> usize {
+            self.1
+        }
+        fn cols(&self) -> usize {
+            self.1
+        }
+    }
+    let ops: Vec<NysOp> = kernels
+        .iter()
+        .map(|k| {
+            let n = k.rows();
+            NysOp(
+                nystrom_factorize(n, |i, j| k.get(i, j), rank, 1e-10, rng),
+                n,
+            )
+        })
+        .collect();
+    Ok(ibp_barycenter_with(&ops, bs, w, params)?.q)
+}
+
+fn normalized(q: &[f64]) -> Vec<f64> {
+    let s: f64 = q.iter().sum();
+    if s > 0.0 {
+        q.iter().map(|x| x / s).collect()
+    } else {
+        q.to_vec()
+    }
+}
+
+pub fn run(profile: Profile) -> ExperimentOutput {
+    let n = profile.pick(300, 1000);
+    let reps = profile.reps(3, 100);
+    let dims: &[usize] = profile.pick(&[5usize][..], &[5, 10, 20][..]);
+    let epss = [5e-2, 1e-2, 5e-3];
+    let s_mults = [5.0, 10.0, 15.0, 20.0];
+    let params = SinkhornParams { delta: 1e-7, max_iters: 1000, strict: false };
+
+    let mut table = Table::new(&["eps", "d", "method", "s/s0", "L1 err", "se"]);
+    let mut rows = Vec::new();
+    let mut rng = Rng::seed_from(0xF171);
+    for &eps in &epss {
+        for &d in dims {
+            // Shared uniform support in (0,1)^d.
+            let pts: Vec<Vec<f64>> =
+                (0..n).map(|_| (0..d).map(|_| rng.uniform()).collect()).collect();
+            let cost = normalize_cost(&sq_euclidean_cost(&pts, &pts));
+            let kernel = gibbs_kernel(&cost, eps);
+            let kernels = vec![kernel.clone(), kernel.clone(), kernel];
+            let bs = barycenter_measures(n, &mut rng);
+            let w = vec![1.0 / 3.0; 3];
+            let Ok(exact) = ibp_barycenter(&kernels, &bs, &w, &params) else { continue };
+            let truth = normalized(&exact.q);
+
+            for &s_mult in &s_mults {
+                let budget = s_mult * s0(n);
+                let mut spar_errs = Vec::new();
+                let mut rand_errs = Vec::new();
+                let mut nys_errs = Vec::new();
+                for _ in 0..reps {
+                    if let Ok(sol) = spar_ibp(&kernels, &bs, &w, budget, &params, &mut rng) {
+                        spar_errs.push(l1_distance(&normalized(&sol.solution.q), &truth));
+                    }
+                    if let Ok(q) = rand_ibp(&kernels, &bs, &w, budget, &params, &mut rng) {
+                        rand_errs.push(l1_distance(&normalized(&q), &truth));
+                    }
+                    let rank = ((budget / n as f64).ceil() as usize).max(1);
+                    if let Ok(q) = nys_ibp(&kernels, &bs, &w, rank, &params, &mut rng) {
+                        nys_errs.push(l1_distance(&normalized(&q), &truth));
+                    }
+                }
+                for (name, errs) in [
+                    ("nys-ibp", &nys_errs),
+                    ("rand-ibp", &rand_errs),
+                    ("spar-ibp", &spar_errs),
+                ] {
+                    let (mean, sd) = if errs.is_empty() {
+                        (f64::NAN, 0.0)
+                    } else {
+                        mean_sd(errs)
+                    };
+                    let se = if errs.is_empty() { 0.0 } else { sd / (errs.len() as f64).sqrt() };
+                    table.row(vec![
+                        format!("{eps:.0e}"),
+                        d.to_string(),
+                        name.into(),
+                        f(s_mult, 0),
+                        f(mean, 4),
+                        f(se, 4),
+                    ]);
+                    rows.push(row(vec![
+                        ("eps", Json::num(eps)),
+                        ("d", Json::num(d as f64)),
+                        ("method", Json::str(name)),
+                        ("s_mult", Json::num(s_mult)),
+                        ("l1_err", Json::num(mean)),
+                    ]));
+                }
+            }
+        }
+    }
+    let text = format!(
+        "Appendix Fig. 11 — barycenter L1 error vs s (n = {n}, {reps} reps)\n{}",
+        table.render()
+    );
+    ExperimentOutput { id: "fig11", text, rows: Json::arr(rows) }
+}

@@ -1,0 +1,120 @@
+//! Appendix Fig. 12 — digit barycenters: IBP vs Spar-IBP over 15
+//! randomly rescaled/translated glyphs per digit (our procedural-digit
+//! substitution for MNIST), reporting the normalized L1 gap between the
+//! two barycenters, CPU time, and an ASCII rendering.
+
+use std::time::Instant;
+
+use super::common::{normalize_cost, row};
+use super::{ExperimentOutput, Profile};
+use crate::data::digits::random_digit;
+use crate::metrics::{l1_distance, s0};
+use crate::ot::barycenter::ibp_barycenter;
+use crate::ot::cost::{gibbs_kernel, sq_euclidean_cost};
+use crate::ot::sinkhorn::SinkhornParams;
+use crate::rng::Rng;
+use crate::solvers::spar_ibp::spar_ibp;
+use crate::util::json::Json;
+use crate::util::table::{f, Table};
+
+fn normalized(q: &[f64]) -> Vec<f64> {
+    let s: f64 = q.iter().sum();
+    q.iter().map(|x| x / s.max(f64::MIN_POSITIVE)).collect()
+}
+
+/// ASCII-render a grid histogram (darkest = most mass).
+pub fn ascii_render(q: &[f64], grid: usize) -> String {
+    let shades = [' ', '.', ':', '+', '#', '@'];
+    let max = q.iter().cloned().fold(0.0f64, f64::max).max(f64::MIN_POSITIVE);
+    let mut out = String::new();
+    // Downsample to <= 32 columns for readability.
+    let step = grid.div_ceil(32);
+    for y in (0..grid).step_by(step) {
+        for x in (0..grid).step_by(step) {
+            let mut acc = 0.0;
+            for dy in 0..step.min(grid - y) {
+                for dx in 0..step.min(grid - x) {
+                    acc += q[(y + dy) * grid + (x + dx)];
+                }
+            }
+            let level = (acc / (max * (step * step) as f64) * (shades.len() - 1) as f64)
+                .round()
+                .clamp(0.0, (shades.len() - 1) as f64) as usize;
+            out.push(shades[level]);
+        }
+        out.push('\n');
+    }
+    out
+}
+
+pub fn run(profile: Profile) -> ExperimentOutput {
+    let grid = profile.pick(20, 32); // paper uses 64; 32 keeps full mode tractable on CPU
+    let n = grid * grid;
+    let per_digit = profile.pick(5, 15);
+    let digits: Vec<u8> = profile.pick(vec![0u8, 3, 8], (0..10u8).collect());
+    let eps = 1e-3 * 2.0; // relative to normalized cost
+    let s_mult = 20.0;
+    let params = SinkhornParams { delta: 1e-7, max_iters: 500, strict: false };
+
+    // Shared pixel-grid support.
+    let pts: Vec<Vec<f64>> = (0..n)
+        .map(|k| vec![(k % grid) as f64 / grid as f64, (k / grid) as f64 / grid as f64])
+        .collect();
+    let cost = normalize_cost(&sq_euclidean_cost(&pts, &pts));
+    let kernel = gibbs_kernel(&cost, eps);
+
+    let mut table = Table::new(&["digit", "ibp secs", "spar secs", "L1 gap", "speedup"]);
+    let mut rows = Vec::new();
+    let mut renders = String::new();
+    let mut rng = Rng::seed_from(0xF172);
+    for &digit in &digits {
+        let bs: Vec<Vec<f64>> =
+            (0..per_digit).map(|_| random_digit(digit, grid, &mut rng)).collect();
+        let kernels: Vec<_> = (0..per_digit).map(|_| kernel.clone()).collect();
+        let w = vec![1.0 / per_digit as f64; per_digit];
+
+        let t0 = Instant::now();
+        let exact = match ibp_barycenter(&kernels, &bs, &w, &params) {
+            Ok(sol) => sol,
+            Err(_) => continue,
+        };
+        let ibp_secs = t0.elapsed().as_secs_f64();
+
+        let t0 = Instant::now();
+        let approx = match spar_ibp(&kernels, &bs, &w, s_mult * s0(n), &params, &mut rng) {
+            Ok(sol) => sol,
+            Err(_) => continue,
+        };
+        let spar_secs = t0.elapsed().as_secs_f64();
+
+        let q_exact = normalized(&exact.q);
+        let q_approx = normalized(&approx.solution.q);
+        let gap = l1_distance(&q_exact, &q_approx);
+        table.row(vec![
+            digit.to_string(),
+            f(ibp_secs, 3),
+            f(spar_secs, 3),
+            f(gap, 4),
+            f(ibp_secs / spar_secs.max(1e-9), 1),
+        ]);
+        rows.push(row(vec![
+            ("digit", Json::num(digit as f64)),
+            ("ibp_secs", Json::num(ibp_secs)),
+            ("spar_secs", Json::num(spar_secs)),
+            ("l1_gap", Json::num(gap)),
+        ]));
+        if digit == digits[0] {
+            renders.push_str(&format!(
+                "digit {digit} IBP barycenter:\n{}\ndigit {digit} Spar-IBP barycenter:\n{}\n",
+                ascii_render(&q_exact, grid),
+                ascii_render(&q_approx, grid)
+            ));
+        }
+    }
+    let text = format!(
+        "Appendix Fig. 12 — digit barycenters, {per_digit} glyphs/digit on a {grid}x{grid} grid (s = 20 s0(n))\n{}\n{}",
+        table.render(),
+        renders
+    );
+    ExperimentOutput { id: "fig12", text, rows: Json::arr(rows) }
+}

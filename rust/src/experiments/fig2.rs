@@ -1,0 +1,79 @@
+//! Figure 2 — RMAE(OT) versus subsample size s, comparing Nys-Sink,
+//! Rand-Sink and Spar-Sink over C1-C3 × ε ∈ {1e-1,1e-2,1e-3} ×
+//! d ∈ {5,10,20,50}, s = {2,4,8,16}·s₀(n).
+
+use super::common::{exact_ot, ot_cost, rmae_over_reps, row, run_method_ot, Method};
+use super::{ExperimentOutput, Profile};
+use crate::data::synthetic::{instance, Scenario};
+use crate::rng::Rng;
+use crate::util::json::Json;
+use crate::util::table::{f, Table};
+
+pub fn run(profile: Profile) -> ExperimentOutput {
+    let n = profile.pick(400, 1000);
+    let reps = profile.reps(5, 100);
+    let dims: &[usize] = profile.pick(&[5usize, 20][..], &[5, 10, 20, 50][..]);
+    let epss = [1e-1, 1e-2, 1e-3];
+    let s_mults = [2.0, 4.0, 8.0, 16.0];
+
+    let mut table = Table::new(&[
+        "scenario", "eps", "d", "method", "s/s0", "rmae", "se", "fail",
+    ]);
+    let mut rows = Vec::new();
+    let mut rng = Rng::seed_from(0xF162);
+    for scenario in Scenario::all() {
+        for &eps in &epss {
+            for &d in dims {
+                let inst = instance(scenario, n, d, 1.0, 1.0, &mut rng);
+                let cost = ot_cost(&inst.points);
+                let Ok(truth) = exact_ot(&cost, &inst.a, &inst.b, eps) else {
+                    table.row(vec![
+                        scenario.name().into(),
+                        format!("{eps:.0e}"),
+                        d.to_string(),
+                        "(exact failed)".into(),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                    ]);
+                    continue;
+                };
+                for method in Method::all() {
+                    for &s_mult in &s_mults {
+                        let (rmae, se, failures) = rmae_over_reps(
+                            reps,
+                            truth,
+                            |r| run_method_ot(method, &cost, &inst.a, &inst.b, eps, s_mult, r),
+                            &mut rng,
+                        );
+                        table.row(vec![
+                            scenario.name().into(),
+                            format!("{eps:.0e}"),
+                            d.to_string(),
+                            method.name().into(),
+                            f(s_mult, 0),
+                            f(rmae, 4),
+                            f(se, 4),
+                            failures.to_string(),
+                        ]);
+                        rows.push(row(vec![
+                            ("scenario", Json::str(scenario.name())),
+                            ("eps", Json::num(eps)),
+                            ("d", Json::num(d as f64)),
+                            ("method", Json::str(method.name())),
+                            ("s_mult", Json::num(s_mult)),
+                            ("rmae", Json::num(rmae)),
+                            ("se", Json::num(se)),
+                        ]));
+                    }
+                }
+            }
+        }
+    }
+    let text = format!(
+        "Figure 2 — RMAE(OT) vs s  (n = {n}, {reps} reps/point)\n{}",
+        table.render()
+    );
+    ExperimentOutput { id: "fig2", text, rows: Json::arr(rows) }
+}

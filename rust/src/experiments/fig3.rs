@@ -1,0 +1,77 @@
+//! Figure 3 — RMAE(UOT/WFR) versus s over C1-C3 × R1-R3 (kernel
+//! densities ~70/50/30%), masses 5 & 3, ε = λ = 0.1.
+
+use super::common::{exact_uot, rmae_over_reps, row, run_method_uot, wfr_cost_at_density, Method};
+use super::{ExperimentOutput, Profile};
+use crate::data::synthetic::{instance, Scenario, SparsityRegime};
+use crate::rng::Rng;
+use crate::util::json::Json;
+use crate::util::table::{f, Table};
+
+pub fn run(profile: Profile) -> ExperimentOutput {
+    let n = profile.pick(300, 1000);
+    let reps = profile.reps(5, 100);
+    let d = 5;
+    let (lambda, eps) = (0.1, 0.1);
+    let s_mults = [2.0, 4.0, 8.0, 16.0];
+
+    let mut table = Table::new(&[
+        "scenario", "regime", "method", "s/s0", "rmae", "se", "fail",
+    ]);
+    let mut rows = Vec::new();
+    let mut rng = Rng::seed_from(0xF163);
+    for scenario in Scenario::all() {
+        for regime in SparsityRegime::all() {
+            let inst = instance(scenario, n, d, 5.0, 3.0, &mut rng);
+            let cost = wfr_cost_at_density(&inst.points, regime.density());
+            let Ok(truth) = exact_uot(&cost, &inst.a, &inst.b, lambda, eps) else {
+                table.row(vec![
+                    scenario.name().into(),
+                    regime.name().into(),
+                    "(exact failed)".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                ]);
+                continue;
+            };
+            for method in Method::all() {
+                for &s_mult in &s_mults {
+                    let (rmae, se, failures) = rmae_over_reps(
+                        reps,
+                        truth,
+                        |r| {
+                            run_method_uot(
+                                method, &cost, &inst.a, &inst.b, lambda, eps, s_mult, r,
+                            )
+                        },
+                        &mut rng,
+                    );
+                    table.row(vec![
+                        scenario.name().into(),
+                        regime.name().into(),
+                        method.name().into(),
+                        f(s_mult, 0),
+                        f(rmae, 4),
+                        f(se, 4),
+                        failures.to_string(),
+                    ]);
+                    rows.push(row(vec![
+                        ("scenario", Json::str(scenario.name())),
+                        ("regime", Json::str(regime.name())),
+                        ("method", Json::str(method.name())),
+                        ("s_mult", Json::num(s_mult)),
+                        ("rmae", Json::num(rmae)),
+                        ("se", Json::num(se)),
+                    ]));
+                }
+            }
+        }
+    }
+    let text = format!(
+        "Figure 3 — RMAE(UOT/WFR) vs s  (n = {n}, d = {d}, eps = lambda = 0.1, masses 5 & 3, {reps} reps)\n{}",
+        table.render()
+    );
+    ExperimentOutput { id: "fig3", text, rows: Json::arr(rows) }
+}

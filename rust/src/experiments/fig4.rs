@@ -1,0 +1,108 @@
+//! Figure 4 — RMAE(OT) versus n under C1 at fixed budget s = 8·s₀(n),
+//! adding the non-subsampling baselines Greenkhorn and Screenkhorn.
+//! Screenkhorn is omitted at ε = 1e-3 (it fails there; the paper does
+//! the same).
+
+use super::common::{exact_ot, ot_cost, rmae_over_reps, run_method_ot, Method};
+use super::{ExperimentOutput, Profile};
+use crate::data::synthetic::{instance, Scenario};
+use crate::ot::cost::gibbs_kernel;
+use crate::rng::Rng;
+use crate::solvers::greenkhorn::{greenkhorn_ot, GreenkhornParams};
+use crate::solvers::screenkhorn::{screenkhorn_ot, ScreenkhornParams};
+use crate::util::json::Json;
+use crate::util::table::{f, Table};
+
+pub fn run(profile: Profile) -> ExperimentOutput {
+    // Paper: n in {4,8,...,128} x 100; quick: {2,4,8} x 100.
+    let ns: Vec<usize> = profile.pick(vec![200, 400, 800], vec![400, 800, 1600, 3200, 6400, 12800]);
+    let reps = profile.reps(5, 100);
+    let epss = [1e-1, 1e-2, 1e-3];
+    let d = 5;
+    let s_mult = 8.0;
+
+    let mut table = Table::new(&["eps", "n", "method", "rmae", "se", "fail"]);
+    let mut rows = Vec::new();
+    let mut rng = Rng::seed_from(0xF164);
+    for &eps in &epss {
+        for &n in &ns {
+            let inst = instance(Scenario::C1, n, d, 1.0, 1.0, &mut rng);
+            let cost = ot_cost(&inst.points);
+            let Ok(truth) = exact_ot(&cost, &inst.a, &inst.b, eps) else {
+                continue;
+            };
+            // Subsampling methods.
+            for method in Method::all() {
+                let (rmae, se, failures) = rmae_over_reps(
+                    reps,
+                    truth,
+                    |r| run_method_ot(method, &cost, &inst.a, &inst.b, eps, s_mult, r),
+                    &mut rng,
+                );
+                push(&mut table, &mut rows, eps, n, method.name(), rmae, se, failures);
+            }
+            // Greenkhorn (deterministic given the instance).
+            let kernel = gibbs_kernel(&cost, eps);
+            match greenkhorn_ot(&kernel, &cost, &inst.a, &inst.b, eps, &GreenkhornParams::default())
+            {
+                Ok(sol) => {
+                    let rmae = (sol.objective - truth).abs() / truth.abs();
+                    push(&mut table, &mut rows, eps, n, "greenkhorn", rmae, 0.0, 0);
+                }
+                Err(_) => push(&mut table, &mut rows, eps, n, "greenkhorn", f64::NAN, 0.0, 1),
+            }
+            // Screenkhorn — omitted for eps = 1e-3 (paper Sec. 5.1).
+            if eps > 1e-3 {
+                match screenkhorn_ot(
+                    &kernel,
+                    &cost,
+                    &inst.a,
+                    &inst.b,
+                    eps,
+                    &ScreenkhornParams::default(),
+                ) {
+                    Ok(sol) => {
+                        let rmae = (sol.objective - truth).abs() / truth.abs();
+                        push(&mut table, &mut rows, eps, n, "screenkhorn", rmae, 0.0, 0);
+                    }
+                    Err(_) => {
+                        push(&mut table, &mut rows, eps, n, "screenkhorn", f64::NAN, 0.0, 1)
+                    }
+                }
+            }
+        }
+    }
+    let text = format!(
+        "Figure 4 — RMAE(OT) vs n under C1 (d = {d}, s = 8 s0(n), {reps} reps for sampling methods)\n{}",
+        table.render()
+    );
+    ExperimentOutput { id: "fig4", text, rows: Json::arr(rows) }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn push(
+    table: &mut Table,
+    rows: &mut Vec<Json>,
+    eps: f64,
+    n: usize,
+    method: &str,
+    rmae: f64,
+    se: f64,
+    failures: usize,
+) {
+    table.row(vec![
+        format!("{eps:.0e}"),
+        n.to_string(),
+        method.into(),
+        f(rmae, 4),
+        f(se, 4),
+        failures.to_string(),
+    ]);
+    rows.push(super::common::row(vec![
+        ("eps", Json::num(eps)),
+        ("n", Json::num(n as f64)),
+        ("method", Json::str(method)),
+        ("rmae", Json::num(rmae)),
+        ("se", Json::num(se)),
+    ]));
+}

@@ -1,0 +1,100 @@
+//! Figure 5 — CPU time versus n for OT and UOT: the classical Sinkhorn,
+//! Greenkhorn, Screenkhorn, Nys-Sink and Spar-Sink at s = 8·s₀(n).
+//!
+//! Reported as wall-clock seconds per solve; the *shape* (Spar-Sink and
+//! Nys-Sink scale ~linearly while dense Sinkhorn scales quadratically,
+//! with Spar-Sink pulling ahead as n grows) is the reproduction target.
+
+use std::time::Instant;
+
+use super::common::{gibbs_kernel_inf, ot_cost, run_method_ot, run_method_uot, wfr_cost_at_density, Method};
+use super::{ExperimentOutput, Profile};
+use crate::data::synthetic::{instance, Scenario, SparsityRegime};
+use crate::ot::cost::gibbs_kernel;
+use crate::ot::sinkhorn::{sinkhorn_ot, SinkhornParams};
+use crate::ot::uot::sinkhorn_uot;
+use crate::rng::Rng;
+use crate::solvers::greenkhorn::{greenkhorn_ot, GreenkhornParams};
+use crate::solvers::screenkhorn::{screenkhorn_ot, ScreenkhornParams};
+use crate::util::json::Json;
+use crate::util::table::{f, Table};
+
+pub fn run(profile: Profile) -> ExperimentOutput {
+    let ns: Vec<usize> = profile.pick(vec![400, 800, 1600], vec![800, 1600, 3200, 6400, 12800]);
+    let eps_list: Vec<f64> = profile.pick(vec![1e-2], vec![1e-1, 1e-2]);
+    let d = 5;
+    let s_mult = 8.0;
+    let mut table = Table::new(&["problem", "eps", "n", "method", "seconds"]);
+    let mut rows = Vec::new();
+    let mut rng = Rng::seed_from(0xF165);
+
+    for &eps in &eps_list {
+        for &n in &ns {
+            // ---- OT ----
+            let inst = instance(Scenario::C1, n, d, 1.0, 1.0, &mut rng);
+            let cost = ot_cost(&inst.points);
+            let kernel = gibbs_kernel(&cost, eps);
+            let record = |problem: &str,
+                              method: &str,
+                              secs: f64,
+                              table: &mut Table,
+                              rows: &mut Vec<Json>| {
+                table.row(vec![
+                    problem.into(),
+                    format!("{eps:.0e}"),
+                    n.to_string(),
+                    method.into(),
+                    f(secs, 4),
+                ]);
+                rows.push(super::common::row(vec![
+                    ("problem", Json::str(problem)),
+                    ("eps", Json::num(eps)),
+                    ("n", Json::num(n as f64)),
+                    ("method", Json::str(method)),
+                    ("seconds", Json::num(secs)),
+                ]));
+            };
+
+            let t0 = Instant::now();
+            let _ = sinkhorn_ot(&kernel, &cost, &inst.a, &inst.b, eps, &SinkhornParams::default());
+            record("OT", "sinkhorn", t0.elapsed().as_secs_f64(), &mut table, &mut rows);
+
+            let t0 = Instant::now();
+            let _ = greenkhorn_ot(&kernel, &cost, &inst.a, &inst.b, eps, &GreenkhornParams::default());
+            record("OT", "greenkhorn", t0.elapsed().as_secs_f64(), &mut table, &mut rows);
+
+            let t0 = Instant::now();
+            let _ = screenkhorn_ot(&kernel, &cost, &inst.a, &inst.b, eps, &ScreenkhornParams::default());
+            record("OT", "screenkhorn", t0.elapsed().as_secs_f64(), &mut table, &mut rows);
+
+            for method in [Method::NysSink, Method::SparSink] {
+                let t0 = Instant::now();
+                let _ = run_method_ot(method, &cost, &inst.a, &inst.b, eps, s_mult, &mut rng);
+                record("OT", method.name(), t0.elapsed().as_secs_f64(), &mut table, &mut rows);
+            }
+
+            // ---- UOT (WFR, R2 density) ----
+            let inst = instance(Scenario::C1, n, d, 5.0, 3.0, &mut rng);
+            let wcost = wfr_cost_at_density(&inst.points, SparsityRegime::R2.density());
+            let wkernel = gibbs_kernel_inf(&wcost, eps);
+            let (lambda, ueps) = (0.1, eps);
+
+            let t0 = Instant::now();
+            let _ = sinkhorn_uot(&wkernel, &wcost, &inst.a, &inst.b, lambda, ueps, &SinkhornParams::default());
+            record("UOT", "sinkhorn", t0.elapsed().as_secs_f64(), &mut table, &mut rows);
+
+            for method in [Method::NysSink, Method::SparSink] {
+                let t0 = Instant::now();
+                let _ = run_method_uot(
+                    method, &wcost, &inst.a, &inst.b, lambda, ueps, s_mult, &mut rng,
+                );
+                record("UOT", method.name(), t0.elapsed().as_secs_f64(), &mut table, &mut rows);
+            }
+        }
+    }
+    let text = format!(
+        "Figure 5 — CPU time (s) vs n  (s = 8 s0(n); single solve per cell)\n{}",
+        table.render()
+    );
+    ExperimentOutput { id: "fig5", text, rows: Json::arr(rows) }
+}

@@ -1,0 +1,61 @@
+//! Appendix Fig. 8 — sensitivity of the UOT comparison to the marginal
+//! regularization λ ∈ {0.1, 1, 5} across R1-R3.
+
+use super::common::{exact_uot, rmae_over_reps, row, run_method_uot, wfr_cost_at_density, Method};
+use super::{ExperimentOutput, Profile};
+use crate::data::synthetic::{instance, Scenario, SparsityRegime};
+use crate::rng::Rng;
+use crate::util::json::Json;
+use crate::util::table::{f, Table};
+
+pub fn run(profile: Profile) -> ExperimentOutput {
+    let n = profile.pick(300, 1000);
+    let reps = profile.reps(5, 100);
+    let d = 5;
+    let eps = 0.1;
+    let lambdas = [0.1, 1.0, 5.0];
+    let s_mults = profile.pick(vec![4.0, 16.0], vec![2.0, 4.0, 8.0, 16.0]);
+
+    let mut table = Table::new(&["lambda", "regime", "method", "s/s0", "rmae", "se"]);
+    let mut rows = Vec::new();
+    let mut rng = Rng::seed_from(0xF168);
+    for &lambda in &lambdas {
+        for regime in SparsityRegime::all() {
+            let inst = instance(Scenario::C1, n, d, 5.0, 3.0, &mut rng);
+            let cost = wfr_cost_at_density(&inst.points, regime.density());
+            let Ok(truth) = exact_uot(&cost, &inst.a, &inst.b, lambda, eps) else {
+                continue;
+            };
+            for method in Method::all() {
+                for &s_mult in &s_mults {
+                    let (rmae, se, _) = rmae_over_reps(
+                        reps,
+                        truth,
+                        |r| run_method_uot(method, &cost, &inst.a, &inst.b, lambda, eps, s_mult, r),
+                        &mut rng,
+                    );
+                    table.row(vec![
+                        f(lambda, 1),
+                        regime.name().into(),
+                        method.name().into(),
+                        f(s_mult, 0),
+                        f(rmae, 4),
+                        f(se, 4),
+                    ]);
+                    rows.push(row(vec![
+                        ("lambda", Json::num(lambda)),
+                        ("regime", Json::str(regime.name())),
+                        ("method", Json::str(method.name())),
+                        ("s_mult", Json::num(s_mult)),
+                        ("rmae", Json::num(rmae)),
+                    ]));
+                }
+            }
+        }
+    }
+    let text = format!(
+        "Appendix Fig. 8 — lambda sensitivity (n = {n}, eps = {eps}, {reps} reps)\n{}",
+        table.render()
+    );
+    ExperimentOutput { id: "fig8", text, rows: Json::arr(rows) }
+}

@@ -1,0 +1,100 @@
+//! Appendix Figs. 9 & 10 — asymptotic convergence: RMAE versus n at
+//! fixed budget s = 8·s₀(n) (OT under C1-C3; UOT under R1-R3).
+
+use super::common::{
+    exact_ot, exact_uot, ot_cost, rmae_over_reps, row, run_method_ot, run_method_uot,
+    wfr_cost_at_density, Method,
+};
+use super::{ExperimentOutput, Profile};
+use crate::data::synthetic::{instance, Scenario, SparsityRegime};
+use crate::rng::Rng;
+use crate::util::json::Json;
+use crate::util::table::{f, Table};
+
+pub fn run_fig9(profile: Profile) -> ExperimentOutput {
+    let ns: Vec<usize> = profile.pick(vec![100, 200, 400, 800], vec![100, 200, 400, 800, 1600, 3200, 6400]);
+    let reps = profile.reps(5, 100);
+    let d = 5;
+    let eps = 0.1;
+    let s_mult = 8.0;
+    let mut table = Table::new(&["scenario", "n", "method", "rmae", "se"]);
+    let mut rows = Vec::new();
+    let mut rng = Rng::seed_from(0xF169);
+    for scenario in Scenario::all() {
+        for &n in &ns {
+            let inst = instance(scenario, n, d, 1.0, 1.0, &mut rng);
+            let cost = ot_cost(&inst.points);
+            let Ok(truth) = exact_ot(&cost, &inst.a, &inst.b, eps) else { continue };
+            for method in Method::all() {
+                let (rmae, se, _) = rmae_over_reps(
+                    reps,
+                    truth,
+                    |r| run_method_ot(method, &cost, &inst.a, &inst.b, eps, s_mult, r),
+                    &mut rng,
+                );
+                table.row(vec![
+                    scenario.name().into(),
+                    n.to_string(),
+                    method.name().into(),
+                    f(rmae, 4),
+                    f(se, 4),
+                ]);
+                rows.push(row(vec![
+                    ("scenario", Json::str(scenario.name())),
+                    ("n", Json::num(n as f64)),
+                    ("method", Json::str(method.name())),
+                    ("rmae", Json::num(rmae)),
+                ]));
+            }
+        }
+    }
+    let text = format!(
+        "Appendix Fig. 9 — RMAE(OT) vs n (s = 8 s0(n), eps = {eps}, {reps} reps)\n{}",
+        table.render()
+    );
+    ExperimentOutput { id: "fig9", text, rows: Json::arr(rows) }
+}
+
+pub fn run_fig10(profile: Profile) -> ExperimentOutput {
+    let ns: Vec<usize> = profile.pick(vec![100, 200, 400], vec![100, 200, 400, 800, 1600, 3200]);
+    let reps = profile.reps(5, 100);
+    let d = 5;
+    let (lambda, eps) = (0.1, 0.1);
+    let s_mult = 8.0;
+    let mut table = Table::new(&["regime", "n", "method", "rmae", "se"]);
+    let mut rows = Vec::new();
+    let mut rng = Rng::seed_from(0xF170);
+    for regime in SparsityRegime::all() {
+        for &n in &ns {
+            let inst = instance(Scenario::C1, n, d, 5.0, 3.0, &mut rng);
+            let cost = wfr_cost_at_density(&inst.points, regime.density());
+            let Ok(truth) = exact_uot(&cost, &inst.a, &inst.b, lambda, eps) else { continue };
+            for method in Method::all() {
+                let (rmae, se, _) = rmae_over_reps(
+                    reps,
+                    truth,
+                    |r| run_method_uot(method, &cost, &inst.a, &inst.b, lambda, eps, s_mult, r),
+                    &mut rng,
+                );
+                table.row(vec![
+                    regime.name().into(),
+                    n.to_string(),
+                    method.name().into(),
+                    f(rmae, 4),
+                    f(se, 4),
+                ]);
+                rows.push(row(vec![
+                    ("regime", Json::str(regime.name())),
+                    ("n", Json::num(n as f64)),
+                    ("method", Json::str(method.name())),
+                    ("rmae", Json::num(rmae)),
+                ]));
+            }
+        }
+    }
+    let text = format!(
+        "Appendix Fig. 10 — RMAE(UOT) vs n (s = 8 s0(n), eps = lambda = 0.1, {reps} reps)\n{}",
+        table.render()
+    );
+    ExperimentOutput { id: "fig10", text, rows: Json::arr(rows) }
+}

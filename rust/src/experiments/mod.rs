@@ -1,0 +1,121 @@
+//! Experiment harness: one module per figure/table of the paper's
+//! evaluation (see DESIGN.md §4 for the full index). Each experiment
+//! prints the same rows/series the paper reports and returns them as
+//! JSON for EXPERIMENTS.md.
+//!
+//! Run via `repro experiment <id> [--full]`; the default "quick" profile
+//! shrinks n/replications to keep a full sweep in CI-scale time while
+//! preserving the comparisons' *shape* (who wins, by what factor).
+
+pub mod ablation;
+#[macro_use]
+pub mod common;
+pub mod fig11;
+pub mod fig12;
+pub mod fig13;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9_10;
+pub mod table1;
+pub mod table2;
+pub mod theory;
+
+use crate::util::json::Json;
+
+/// Effort profile.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Profile {
+    /// Reduced n / replications; preserves comparison shape.
+    Quick,
+    /// Paper-scale parameters (n = 1000, 100 replications, …).
+    Full,
+}
+
+impl Profile {
+    pub fn reps(&self, quick: usize, full: usize) -> usize {
+        match self {
+            Profile::Quick => quick,
+            Profile::Full => full,
+        }
+    }
+
+    pub fn pick<T>(&self, quick: T, full: T) -> T {
+        match self {
+            Profile::Quick => quick,
+            Profile::Full => full,
+        }
+    }
+}
+
+/// An experiment's output: rendered text + structured rows.
+pub struct ExperimentOutput {
+    pub id: &'static str,
+    pub text: String,
+    pub rows: Json,
+}
+
+type Runner = fn(Profile) -> ExperimentOutput;
+
+/// All registered experiments in paper order.
+pub fn registry() -> Vec<(&'static str, &'static str, Runner)> {
+    vec![
+        ("fig2", "RMAE(OT) vs subsample size s (C1-C3 x eps x d)", fig2::run),
+        ("fig3", "RMAE(UOT/WFR) vs s (C1-C3 x R1-R3)", fig3::run),
+        ("fig4", "RMAE(OT) vs n incl. Greenkhorn/Screenkhorn", fig4::run),
+        ("fig5", "CPU time vs n (OT & UOT)", fig5::run),
+        ("fig7", "cardiac cycle visualization (3 conditions)", fig7::run),
+        ("fig8", "lambda sensitivity (UOT)", fig8::run),
+        ("fig9", "RMAE(OT) vs n, asymptotics", fig9_10::run_fig9),
+        ("fig10", "RMAE(UOT) vs n, asymptotics", fig9_10::run_fig10),
+        ("fig11", "barycenter error vs s (Spar-IBP)", fig11::run),
+        ("fig12", "digit barycenters: IBP vs Spar-IBP", fig12::run),
+        ("fig13", "color transfer map deviation + time", fig13::run),
+        ("table1", "echo ED-prediction error & time", table1::run),
+        ("table2", "Sinkhorn divergence (SSAE ingredient)", table2::run),
+        ("ablation", "shrinkage theta + sampling-scheme ablations", ablation::run),
+        ("theory", "empirical validation of Lemma 5 / Theorems 1 & 3", theory::run),
+    ]
+}
+
+/// Look up and run one experiment (or "all").
+pub fn run(id: &str, profile: Profile) -> Result<Vec<ExperimentOutput>, String> {
+    let reg = registry();
+    if id == "all" {
+        return Ok(reg.into_iter().map(|(_, _, f)| f(profile)).collect());
+    }
+    match reg.into_iter().find(|(name, _, _)| *name == id) {
+        Some((_, _, f)) => Ok(vec![f(profile)]),
+        None => Err(format!(
+            "unknown experiment '{id}'; available: {}",
+            registry()
+                .iter()
+                .map(|(n, _, _)| *n)
+                .collect::<Vec<_>>()
+                .join(", ")
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_ids_unique() {
+        let reg = registry();
+        let mut names: Vec<&str> = reg.iter().map(|(n, _, _)| *n).collect();
+        names.sort_unstable();
+        let len = names.len();
+        names.dedup();
+        assert_eq!(names.len(), len);
+    }
+
+    #[test]
+    fn unknown_experiment_is_an_error() {
+        assert!(run("nope", Profile::Quick).is_err());
+    }
+}

@@ -1,0 +1,143 @@
+//! Empirical validation of the theory (Theorems 1-3 and Lemma 5):
+//!
+//! 1. **Lemma 5** — the sketch's spectral error `‖K̃−K‖₂/‖K‖₂` decays
+//!    like √(n^{3−2α}/s); at fixed n it must scale ~s^{-1/2}.
+//! 2. **Theorem 1** — the objective error inherits the √(1/s) rate.
+//! 3. **Theorem 3** — Spar-Sink's iteration count stays within a
+//!    constant factor of Sinkhorn's.
+
+use super::common::{exact_ot, ot_cost, row};
+use super::{ExperimentOutput, Profile};
+use crate::data::synthetic::{instance, Scenario};
+use crate::linalg::{spectral_norm, Mat};
+use crate::metrics::{mean_sd, s0};
+use crate::ot::cost::gibbs_kernel;
+use crate::ot::sinkhorn::{sinkhorn_scalings, SinkhornParams};
+use crate::rng::Rng;
+use crate::solvers::spar_sink::{spar_sink_ot, SparSinkParams};
+use crate::sparse::poisson_sparsify_ot;
+use crate::util::json::Json;
+use crate::util::table::{f, Table};
+
+pub fn run(profile: Profile) -> ExperimentOutput {
+    let n = profile.pick(300, 800);
+    let reps = profile.reps(5, 30);
+    let eps = 0.1;
+    let mut rng = Rng::seed_from(0x7E01);
+    let inst = instance(Scenario::C1, n, 5, 1.0, 1.0, &mut rng);
+    let cost = ot_cost(&inst.points);
+    let kernel = gibbs_kernel(&cost, eps);
+    let k_norm = spectral_norm(&kernel, 300, 1e-10, &mut rng);
+    let truth = exact_ot(&cost, &inst.a, &inst.b, eps).expect("exact");
+
+    let s_mults = [2.0, 8.0, 32.0];
+    let mut table = Table::new(&[
+        "s/s0", "spectral err", "obj RMAE", "pred ratio (s^-1/2)", "meas ratio",
+    ]);
+    let mut rows = Vec::new();
+    let mut spectral = Vec::new();
+    let mut rmaes = Vec::new();
+    for &mult in &s_mults {
+        let s = mult * s0(n);
+        let mut spec_errs = Vec::new();
+        let mut obj_errs = Vec::new();
+        for _ in 0..reps {
+            let (sketch, _) = poisson_sparsify_ot(
+                |i, j| kernel.get(i, j),
+                |i, j| cost.get(i, j),
+                &inst.a,
+                &inst.b,
+                s,
+                1.0,
+                &mut rng,
+            )
+            .unwrap();
+            // Spectral error of the sketch.
+            let dense_sketch = sketch.to_dense_kernel();
+            let diff = Mat::from_fn(n, n, |i, j| dense_sketch.get(i, j) - kernel.get(i, j));
+            spec_errs.push(spectral_norm(&diff, 200, 1e-8, &mut rng) / k_norm);
+            // Objective error.
+            if let Ok(sol) =
+                spar_sink_ot(&cost, &inst.a, &inst.b, eps, mult, &SparSinkParams::default(), &mut rng)
+            {
+                obj_errs.push((sol.solution.objective - truth).abs() / truth.abs());
+            }
+        }
+        let (spec_mean, _) = mean_sd(&spec_errs);
+        let (obj_mean, _) = mean_sd(&obj_errs);
+        spectral.push(spec_mean);
+        rmaes.push(obj_mean);
+        let pred = (s_mults[0] / mult).sqrt();
+        let meas = spec_mean / spectral[0];
+        table.row(vec![
+            f(mult, 0),
+            f(spec_mean, 4),
+            f(obj_mean, 4),
+            f(pred, 3),
+            f(meas, 3),
+        ]);
+        rows.push(row(vec![
+            ("s_mult", Json::num(mult)),
+            ("spectral_err", Json::num(spec_mean)),
+            ("obj_rmae", Json::num(obj_mean)),
+        ]));
+    }
+
+    // Theorem 3 — iterations until the OBJECTIVE stabilizes (relative
+    // change < 1e-3 when doubling the iteration budget). The raw scaling
+    // displacement is the wrong statistic for the sketch: a sampled
+    // support generally admits no exactly-feasible plan, so u/v keep
+    // drifting at a floor even though the objective has long converged.
+    let stabilize_dense = |budgets: &[usize]| -> usize {
+        let mut prev = f64::NAN;
+        for &k in budgets {
+            let p = SinkhornParams { delta: 0.0, max_iters: k, strict: false };
+            let (u, v, ..) = sinkhorn_scalings(&kernel, &inst.a, &inst.b, 1.0, &p).unwrap();
+            let obj = crate::ot::objective::ot_objective_dense(&kernel, &cost, &u, &v, eps);
+            if prev.is_finite() && (obj - prev).abs() <= 1e-3 * prev.abs().max(1e-12) {
+                return k;
+            }
+            prev = obj;
+        }
+        *budgets.last().unwrap()
+    };
+    let budgets = [5usize, 10, 20, 40, 80, 160, 320];
+    let dense_iters = stabilize_dense(&budgets);
+    let (sketch, _) = poisson_sparsify_ot(
+        |i, j| kernel.get(i, j),
+        |i, j| cost.get(i, j),
+        &inst.a,
+        &inst.b,
+        8.0 * s0(n),
+        1.0,
+        &mut rng,
+    )
+    .unwrap();
+    let mut spar_iters = *budgets.last().unwrap();
+    let mut prev = f64::NAN;
+    for &k in &budgets {
+        let p = SinkhornParams { delta: 0.0, max_iters: k, strict: false };
+        let (u, v, ..) =
+            crate::solvers::sparse_loop::sparse_scalings(&sketch, &inst.a, &inst.b, 1.0, &p)
+                .unwrap();
+        let obj = crate::solvers::sparse_loop::sparse_ot_objective(&sketch, &u, &v, eps);
+        if prev.is_finite() && (obj - prev).abs() <= 1e-3 * prev.abs().max(1e-12) {
+            spar_iters = k;
+            break;
+        }
+        prev = obj;
+    }
+    let iter_ratio = spar_iters as f64 / dense_iters as f64;
+
+    let text = format!(
+        "Theory validation (n = {n}, eps = {eps}, {reps} reps)\n\
+         Lemma 5 / Theorem 1: spectral and objective errors vs s (expect ~s^-1/2 decay)\n{}\n\
+         Theorem 3: iterations to objective stabilization — Sinkhorn {dense_iters}, Spar-Sink {spar_iters} (ratio {iter_ratio:.2}; expected O(1))\n",
+        table.render(),
+    );
+    rows.push(row(vec![
+        ("dense_iters", Json::num(dense_iters as f64)),
+        ("spar_iters", Json::num(spar_iters as f64)),
+    ]));
+    ExperimentOutput { id: "theory", text, rows: Json::arr(rows) }
+}

@@ -1,0 +1,232 @@
+//! Eigen solvers: power iteration with deflation (large matrices, top-k
+//! eigenpairs / spectral norms) and a cyclic Jacobi solver for the small
+//! symmetric cores produced by the Nyström factorization.
+
+use super::{dot, norm2, Mat};
+use crate::rng::Rng;
+
+/// Largest-magnitude eigenvalue and eigenvector of a symmetric matrix by
+/// power iteration. Returns `(lambda, v)` with `||v||_2 = 1`.
+pub fn power_iteration(a: &Mat, max_iters: usize, tol: f64, rng: &mut Rng) -> (f64, Vec<f64>) {
+    assert_eq!(a.rows(), a.cols(), "power iteration needs a square matrix");
+    let n = a.rows();
+    let mut v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let nv = norm2(&v).max(f64::MIN_POSITIVE);
+    v.iter_mut().for_each(|x| *x /= nv);
+    let mut lambda = 0.0;
+    for _ in 0..max_iters {
+        let mut w = a.matvec(&v);
+        let nw = norm2(&w);
+        if nw <= f64::MIN_POSITIVE {
+            return (0.0, v);
+        }
+        w.iter_mut().for_each(|x| *x /= nw);
+        let new_lambda = dot(&w, &a.matvec(&w));
+        let delta = (new_lambda - lambda).abs();
+        v = w;
+        lambda = new_lambda;
+        if delta <= tol * lambda.abs().max(1.0) {
+            break;
+        }
+    }
+    (lambda, v)
+}
+
+/// Spectral norm (largest singular value). For a symmetric matrix this is
+/// `|lambda_max|`; in general we run power iteration on `A^T A` implicitly.
+pub fn spectral_norm(a: &Mat, max_iters: usize, tol: f64, rng: &mut Rng) -> f64 {
+    let n = a.cols();
+    let mut v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let nv = norm2(&v).max(f64::MIN_POSITIVE);
+    v.iter_mut().for_each(|x| *x /= nv);
+    let mut sigma2 = 0.0;
+    for _ in 0..max_iters {
+        let av = a.matvec(&v);
+        let mut w = a.matvec_t(&av); // A^T A v
+        let nw = norm2(&w);
+        if nw <= f64::MIN_POSITIVE {
+            return 0.0;
+        }
+        w.iter_mut().for_each(|x| *x /= nw);
+        let aw = a.matvec(&w);
+        let new_sigma2 = dot(&aw, &aw);
+        let delta = (new_sigma2 - sigma2).abs();
+        v = w;
+        sigma2 = new_sigma2;
+        if delta <= tol * sigma2.max(1.0) {
+            break;
+        }
+    }
+    sigma2.max(0.0).sqrt()
+}
+
+/// Top-`k` eigenpairs of a symmetric matrix via power iteration with
+/// Hotelling deflation. Eigenvalues returned in decreasing |lambda|.
+pub fn top_eigenpairs(
+    a: &Mat,
+    k: usize,
+    max_iters: usize,
+    tol: f64,
+    rng: &mut Rng,
+) -> Vec<(f64, Vec<f64>)> {
+    assert_eq!(a.rows(), a.cols());
+    let mut work = a.clone();
+    let n = a.rows();
+    let mut out = Vec::with_capacity(k);
+    for _ in 0..k.min(n) {
+        let (lambda, v) = power_iteration(&work, max_iters, tol, rng);
+        // Deflate: A <- A - lambda v v^T.
+        for i in 0..n {
+            let vi = v[i];
+            let row = work.row_mut(i);
+            for (j, r) in row.iter_mut().enumerate() {
+                *r -= lambda * vi * v[j];
+            }
+        }
+        out.push((lambda, v));
+    }
+    out
+}
+
+/// Cyclic Jacobi eigendecomposition for small symmetric matrices.
+///
+/// Returns `(eigenvalues, eigenvectors)` where `eigenvectors.row(k)` is
+/// the eigenvector for `eigenvalues[k]`, sorted by decreasing value.
+/// Cost O(n^3) per sweep — intended for the r×r Nyström core (r ≤ ~500).
+pub fn jacobi_eigen(a: &Mat, max_sweeps: usize, tol: f64) -> (Vec<f64>, Mat) {
+    assert_eq!(a.rows(), a.cols());
+    let n = a.rows();
+    let mut m = a.clone();
+    // v starts as identity; rows of the final v^T are eigenvectors.
+    let mut v = Mat::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 });
+    for _ in 0..max_sweeps {
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m.get(i, j) * m.get(i, j);
+            }
+        }
+        if off.sqrt() <= tol {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m.get(p, q);
+                if apq.abs() <= f64::MIN_POSITIVE {
+                    continue;
+                }
+                let app = m.get(p, p);
+                let aqq = m.get(q, q);
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // Rotate rows/cols p and q of m.
+                for k in 0..n {
+                    let mkp = m.get(k, p);
+                    let mkq = m.get(k, q);
+                    m.set(k, p, c * mkp - s * mkq);
+                    m.set(k, q, s * mkp + c * mkq);
+                }
+                for k in 0..n {
+                    let mpk = m.get(p, k);
+                    let mqk = m.get(q, k);
+                    m.set(p, k, c * mpk - s * mqk);
+                    m.set(q, k, s * mpk + c * mqk);
+                }
+                for k in 0..n {
+                    let vkp = v.get(k, p);
+                    let vkq = v.get(k, q);
+                    v.set(k, p, c * vkp - s * vkq);
+                    v.set(k, q, s * vkp + c * vkq);
+                }
+            }
+        }
+    }
+    let mut pairs: Vec<(f64, usize)> = (0..n).map(|i| (m.get(i, i), i)).collect();
+    pairs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let eigenvalues: Vec<f64> = pairs.iter().map(|(l, _)| *l).collect();
+    let eigenvectors = Mat::from_fn(n, n, |k, i| v.get(i, pairs[k].1));
+    (eigenvalues, eigenvectors)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sym_from_eigs(eigs: &[f64], rng: &mut Rng) -> Mat {
+        // Build Q diag(eigs) Q^T with a random orthogonal Q (Gram-Schmidt).
+        let n = eigs.len();
+        let mut q: Vec<Vec<f64>> = Vec::new();
+        while q.len() < n {
+            let mut v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            for u in &q {
+                let c = dot(&v, u);
+                for (x, y) in v.iter_mut().zip(u) {
+                    *x -= c * y;
+                }
+            }
+            let nv = norm2(&v);
+            if nv > 1e-8 {
+                v.iter_mut().for_each(|x| *x /= nv);
+                q.push(v);
+            }
+        }
+        Mat::from_fn(n, n, |i, j| {
+            (0..n).map(|k| q[k][i] * eigs[k] * q[k][j]).sum()
+        })
+    }
+
+    #[test]
+    fn power_iteration_finds_dominant() {
+        let mut rng = Rng::seed_from(1);
+        let a = sym_from_eigs(&[5.0, 2.0, 1.0, 0.5], &mut rng);
+        let (lambda, _) = power_iteration(&a, 500, 1e-12, &mut rng);
+        assert!((lambda - 5.0).abs() < 1e-6, "lambda {lambda}");
+    }
+
+    #[test]
+    fn spectral_norm_of_diag() {
+        let mut rng = Rng::seed_from(2);
+        let a = Mat::from_fn(3, 3, |i, j| if i == j { [3.0, -7.0, 1.0][i] } else { 0.0 });
+        let s = spectral_norm(&a, 500, 1e-12, &mut rng);
+        assert!((s - 7.0).abs() < 1e-6, "sigma {s}");
+    }
+
+    #[test]
+    fn spectral_norm_rectangular() {
+        let mut rng = Rng::seed_from(3);
+        // A = [[1, 0], [0, 2], [0, 0]]; singular values {2, 1}.
+        let a = Mat::from_vec(3, 2, vec![1., 0., 0., 2., 0., 0.]);
+        let s = spectral_norm(&a, 500, 1e-12, &mut rng);
+        assert!((s - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn top_eigenpairs_ordered() {
+        let mut rng = Rng::seed_from(4);
+        let a = sym_from_eigs(&[4.0, 3.0, 0.25, 0.1], &mut rng);
+        let pairs = top_eigenpairs(&a, 2, 1000, 1e-13, &mut rng);
+        assert!((pairs[0].0 - 4.0).abs() < 1e-5);
+        assert!((pairs[1].0 - 3.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn jacobi_recovers_spectrum() {
+        let mut rng = Rng::seed_from(5);
+        let eigs = [6.0, 3.5, 1.0, -0.5, 0.0];
+        let a = sym_from_eigs(&eigs, &mut rng);
+        let (vals, vecs) = jacobi_eigen(&a, 50, 1e-14);
+        let mut want = eigs.to_vec();
+        want.sort_by(|x, y| y.partial_cmp(x).unwrap());
+        for (got, want) in vals.iter().zip(&want) {
+            assert!((got - want).abs() < 1e-9, "got {got} want {want}");
+        }
+        // Check A v = lambda v for the top eigenpair.
+        let v0: Vec<f64> = (0..5).map(|j| vecs.get(0, j)).collect();
+        let av = a.matvec(&v0);
+        for (x, y) in av.iter().zip(&v0) {
+            assert!((x - vals[0] * y).abs() < 1e-8);
+        }
+    }
+}

@@ -1,0 +1,90 @@
+//! Classical multidimensional scaling (Torgerson), used to embed the
+//! pairwise WFR distance matrix of an echocardiogram video into 2-D for
+//! cardiac-cycle visualization (paper Fig. 7, bottom row).
+
+use super::{top_eigenpairs, Mat};
+use crate::rng::Rng;
+
+/// Classical MDS: embed an `n x n` distance matrix into `dim` dimensions.
+///
+/// Steps: square the distances, double-center (`B = -1/2 J D2 J`), take
+/// the top `dim` eigenpairs, scale eigenvectors by sqrt(lambda).
+/// Negative eigenvalues (non-Euclidean distances — WFR is a metric but
+/// not flat) are clamped to zero, as standard.
+pub fn classical_mds(dist: &Mat, dim: usize, rng: &mut Rng) -> Vec<Vec<f64>> {
+    assert_eq!(dist.rows(), dist.cols(), "distance matrix must be square");
+    let n = dist.rows();
+    assert!(n > 0);
+    // D2 = element-wise squared distances.
+    let d2 = dist.map(|x| x * x);
+    // Double centering: B_ij = -1/2 (D2_ij - rowmean_i - colmean_j + mean).
+    let row_means: Vec<f64> = d2.row_sums().iter().map(|s| s / n as f64).collect();
+    let col_means: Vec<f64> = d2.col_sums().iter().map(|s| s / n as f64).collect();
+    let grand = row_means.iter().sum::<f64>() / n as f64;
+    let b = Mat::from_fn(n, n, |i, j| {
+        -0.5 * (d2.get(i, j) - row_means[i] - col_means[j] + grand)
+    });
+    let pairs = top_eigenpairs(&b, dim, 1000, 1e-12, rng);
+    (0..n)
+        .map(|i| {
+            pairs
+                .iter()
+                .map(|(lambda, v)| lambda.max(0.0).sqrt() * v[i])
+                .collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn euclid(a: &[f64], b: &[f64]) -> f64 {
+        a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f64>().sqrt()
+    }
+
+    #[test]
+    fn mds_recovers_planar_configuration() {
+        // Points on a plane: MDS must reproduce pairwise distances.
+        let pts = [
+            vec![0.0, 0.0],
+            vec![1.0, 0.0],
+            vec![1.0, 1.5],
+            vec![0.0, 1.0],
+            vec![-0.5, 0.25],
+        ];
+        let n = pts.len();
+        let d = Mat::from_fn(n, n, |i, j| euclid(&pts[i], &pts[j]));
+        let mut rng = Rng::seed_from(6);
+        let emb = classical_mds(&d, 2, &mut rng);
+        for i in 0..n {
+            for j in 0..n {
+                let got = euclid(&emb[i], &emb[j]);
+                assert!((got - d.get(i, j)).abs() < 1e-6, "({i},{j}): {got} vs {}", d.get(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn mds_circle_stays_circular() {
+        // Frames of a cyclic process embed onto a closed loop — the
+        // qualitative property behind Fig. 7.
+        let n = 24;
+        let pts: Vec<Vec<f64>> = (0..n)
+            .map(|k| {
+                let t = 2.0 * std::f64::consts::PI * k as f64 / n as f64;
+                vec![t.cos(), t.sin()]
+            })
+            .collect();
+        let d = Mat::from_fn(n, n, |i, j| euclid(&pts[i], &pts[j]));
+        let mut rng = Rng::seed_from(7);
+        let emb = classical_mds(&d, 2, &mut rng);
+        // All embedded points should sit near radius 1 from the centroid.
+        let cx = emb.iter().map(|p| p[0]).sum::<f64>() / n as f64;
+        let cy = emb.iter().map(|p| p[1]).sum::<f64>() / n as f64;
+        for p in &emb {
+            let r = ((p[0] - cx).powi(2) + (p[1] - cy).powi(2)).sqrt();
+            assert!((r - 1.0).abs() < 1e-6, "radius {r}");
+        }
+    }
+}

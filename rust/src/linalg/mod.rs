@@ -1,0 +1,295 @@
+//! Dense linear-algebra substrate: row-major matrices, parallel
+//! matvecs, power iteration (spectral norm / top eigenpairs), a Jacobi
+//! eigensolver for small symmetric systems (Nyström cores), and
+//! classical multidimensional scaling (the paper's Fig. 7 pipeline).
+
+mod eigen;
+mod mds;
+mod nystrom;
+
+pub use eigen::{jacobi_eigen, power_iteration, spectral_norm, top_eigenpairs};
+pub use mds::classical_mds;
+pub use nystrom::{NystromFactor, nystrom_factorize};
+
+use crate::pool;
+
+/// Dense row-major `f64` matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Mat {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Build from a closure over (row, col).
+    pub fn from_fn(rows: usize, cols: usize, f: impl Fn(usize, usize) -> f64 + Sync) -> Self {
+        let data = pool::parallel_map(rows * cols, |k| f(k / cols, k % cols));
+        Mat { rows, cols, data }
+    }
+
+    /// Wrap an existing row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer length mismatch");
+        Mat { rows, cols, data }
+    }
+
+    #[inline(always)]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline(always)]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline(always)]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline(always)]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// Immutable view of row `i`.
+    #[inline(always)]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutable view of row `i`.
+    #[inline(always)]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Raw row-major slice.
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Element-wise map into a new matrix.
+    pub fn map(&self, f: impl Fn(f64) -> f64 + Sync) -> Mat {
+        let data = pool::parallel_map(self.data.len(), |k| f(self.data[k]));
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Matrix transpose.
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        out
+    }
+
+    /// `y = A x` (parallel over row blocks).
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols, "matvec dimension mismatch");
+        let cols = self.cols;
+        let data = &self.data;
+        pool::parallel_map(self.rows, |i| {
+            let row = &data[i * cols..(i + 1) * cols];
+            dot(row, x)
+        })
+    }
+
+    /// `y = A^T x` (parallel over column blocks of the transpose, i.e.
+    /// accumulated row-major with per-worker scratch).
+    pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.rows, "matvec_t dimension mismatch");
+        let cols = self.cols;
+        let data = &self.data;
+        pool::parallel_fold(
+            self.rows,
+            |start, end| {
+                let mut acc = vec![0.0; cols];
+                for i in start..end {
+                    let xi = x[i];
+                    if xi == 0.0 {
+                        continue;
+                    }
+                    let row = &data[i * cols..(i + 1) * cols];
+                    for (a, &r) in acc.iter_mut().zip(row) {
+                        *a += xi * r;
+                    }
+                }
+                acc
+            },
+            |mut a, b| {
+                for (x, y) in a.iter_mut().zip(b) {
+                    *x += y;
+                }
+                a
+            },
+            vec![0.0; cols],
+        )
+    }
+
+    /// Dense matmul `A B` (blocked, parallel over rows of A).
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul dimension mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let a = &self.data;
+        let b = &other.data;
+        let data = pool::parallel_map(m, |i| {
+            let mut row = vec![0.0; n];
+            for p in 0..k {
+                let aip = a[i * k + p];
+                if aip == 0.0 {
+                    continue;
+                }
+                let brow = &b[p * n..(p + 1) * n];
+                for (r, &bv) in row.iter_mut().zip(brow) {
+                    *r += aip * bv;
+                }
+            }
+            row
+        })
+        .into_iter()
+        .flatten()
+        .collect();
+        Mat { rows: m, cols: n, data }
+    }
+
+    /// Frobenius inner product `<A, B>`.
+    pub fn frob_inner(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        dot(&self.data, &other.data)
+    }
+
+    /// Sum of all entries.
+    pub fn sum(&self) -> f64 {
+        self.data.iter().sum()
+    }
+
+    /// Max entry.
+    pub fn max(&self) -> f64 {
+        self.data.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Row sums (`A 1`).
+    pub fn row_sums(&self) -> Vec<f64> {
+        (0..self.rows).map(|i| self.row(i).iter().sum()).collect()
+    }
+
+    /// Column sums (`A^T 1`).
+    pub fn col_sums(&self) -> Vec<f64> {
+        let mut out = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            for (o, &v) in out.iter_mut().zip(self.row(i)) {
+                *o += v;
+            }
+        }
+        out
+    }
+}
+
+/// Dot product.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-way unrolled accumulation: keeps independent dependency chains so
+    // the compiler can vectorize without -ffast-math.
+    let mut acc = [0.0f64; 4];
+    let chunks = a.len() / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        acc[0] += a[i] * b[i];
+        acc[1] += a[i + 1] * b[i + 1];
+        acc[2] += a[i + 2] * b[i + 2];
+        acc[3] += a[i + 3] * b[i + 3];
+    }
+    let mut tail = 0.0;
+    for i in chunks * 4..a.len() {
+        tail += a[i] * b[i];
+    }
+    acc[0] + acc[1] + acc[2] + acc[3] + tail
+}
+
+/// L1 norm of the difference of two vectors.
+#[inline]
+pub fn l1_diff(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum()
+}
+
+/// L2 norm.
+#[inline]
+pub fn norm2(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matvec_matches_manual() {
+        let a = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let y = a.matvec(&[1., 0., -1.]);
+        assert_eq!(y, vec![-2., -2.]);
+    }
+
+    #[test]
+    fn matvec_t_matches_transpose() {
+        let a = Mat::from_fn(7, 5, |i, j| (i * 5 + j) as f64 * 0.37);
+        let x: Vec<f64> = (0..7).map(|i| (i as f64).sin()).collect();
+        let y1 = a.matvec_t(&x);
+        let y2 = a.transpose().matvec(&x);
+        for (u, v) in y1.iter().zip(&y2) {
+            assert!((u - v).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = Mat::from_fn(4, 4, |i, j| (i + 2 * j) as f64);
+        let id = Mat::from_fn(4, 4, |i, j| if i == j { 1.0 } else { 0.0 });
+        assert_eq!(a.matmul(&id), a);
+    }
+
+    #[test]
+    fn matmul_rectangular() {
+        let a = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let b = Mat::from_vec(3, 2, vec![7., 8., 9., 10., 11., 12.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.as_slice(), &[58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn row_col_sums() {
+        let a = Mat::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        assert_eq!(a.row_sums(), vec![3., 7.]);
+        assert_eq!(a.col_sums(), vec![4., 6.]);
+    }
+
+    #[test]
+    fn dot_unrolled_matches_naive() {
+        let a: Vec<f64> = (0..103).map(|i| (i as f64).cos()).collect();
+        let b: Vec<f64> = (0..103).map(|i| (i as f64 * 0.5).sin()).collect();
+        let naive: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-12);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = Mat::from_fn(3, 5, |i, j| (i * 17 + j * 3) as f64);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+}

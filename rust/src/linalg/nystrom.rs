@@ -1,0 +1,194 @@
+//! Nyström low-rank factorization of a PSD kernel matrix — the substrate
+//! for the Nys-Sink baseline (Altschuler et al., 2019).
+//!
+//! Given `K` (n×n, symmetric PSD) and a landmark set S of size r, the
+//! Nyström approximation is `K ≈ C W⁺ Cᵀ` with `C = K[:, S]`,
+//! `W = K[S, S]`. We store `C` and the symmetric square factor
+//! `M = W⁺` (pseudo-inverse via Jacobi eigendecomposition of the r×r
+//! core), so `K v ≈ C (M (Cᵀ v))` costs O(nr).
+
+use super::{jacobi_eigen, Mat};
+use crate::rng::Rng;
+
+/// Low-rank Nyström factor: `K ≈ C · Winv · Cᵀ`.
+#[derive(Clone, Debug)]
+pub struct NystromFactor {
+    /// n × r column sample of the kernel.
+    pub c: Mat,
+    /// r × r pseudo-inverse of the core.
+    pub winv: Mat,
+    /// Landmark indices.
+    pub landmarks: Vec<usize>,
+}
+
+impl NystromFactor {
+    /// `y ≈ K x` in O(nr).
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let t = self.c.matvec_t(x); // r
+        let s = self.winv.matvec(&t); // r
+        self.c.matvec(&s) // n
+    }
+
+    /// For symmetric K the transpose product is identical; kept for
+    /// interface parity with the dense/sparse kernels.
+    pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
+        self.matvec(x)
+    }
+
+    /// Rank of the factorization (number of retained core eigenvalues).
+    pub fn rank(&self) -> usize {
+        self.winv.rows()
+    }
+
+    /// Approximate entry (i, j): `C_i · Winv · C_jᵀ`. O(r²); for bulk
+    /// evaluation use [`NystromFactor::left_factor`] + [`NystromFactor::entry_with`]
+    /// which amortize the core product (O(r) per entry).
+    pub fn entry(&self, i: usize, j: usize) -> f64 {
+        let r = self.winv.rows();
+        let ci = self.c.row(i);
+        let cj = self.c.row(j);
+        let mut acc = 0.0;
+        for p in 0..r {
+            let mut inner = 0.0;
+            for q in 0..r {
+                inner += self.winv.get(p, q) * cj[q];
+            }
+            acc += ci[p] * inner;
+        }
+        acc
+    }
+
+    /// Precompute `M = C · Winv` (n × r) so entries evaluate in O(r):
+    /// `K_ij ≈ M_i · C_j`.
+    pub fn left_factor(&self) -> Mat {
+        self.c.matmul(&self.winv)
+    }
+
+    /// Entry via a precomputed left factor (see [`NystromFactor::left_factor`]).
+    #[inline]
+    pub fn entry_with(&self, left: &Mat, i: usize, j: usize) -> f64 {
+        crate::linalg::dot(left.row(i), self.c.row(j))
+    }
+}
+
+/// Factorize a kernel given by an entry oracle `k(i, j)` with `r` uniform
+/// landmark columns (the standard Nyström sampling; the paper's Nys-Sink
+/// rows use uniform landmarks as well for the main comparison).
+///
+/// `ridge` regularizes the core pseudo-inverse: eigenvalues below
+/// `ridge * lambda_max` are dropped.
+pub fn nystrom_factorize(
+    n: usize,
+    k: impl Fn(usize, usize) -> f64 + Sync,
+    r: usize,
+    ridge: f64,
+    rng: &mut Rng,
+) -> NystromFactor {
+    let r = r.clamp(1, n);
+    let landmarks = rng.sample_indices(n, r);
+    let c = Mat::from_fn(n, r, |i, p| k(i, landmarks[p]));
+    let w = Mat::from_fn(r, r, |p, q| k(landmarks[p], landmarks[q]));
+    // Pseudo-inverse of the symmetric core via Jacobi.
+    let (vals, vecs) = jacobi_eigen(&w, 60, 1e-13);
+    let lmax = vals.iter().cloned().fold(0.0f64, f64::max);
+    let cut = (ridge * lmax).max(f64::MIN_POSITIVE);
+    let winv = Mat::from_fn(r, r, |i, j| {
+        let mut acc = 0.0;
+        for (k_idx, &lam) in vals.iter().enumerate() {
+            if lam > cut {
+                acc += vecs.get(k_idx, i) * vecs.get(k_idx, j) / lam;
+            }
+        }
+        acc
+    });
+    NystromFactor { c, winv, landmarks }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Gaussian RBF kernel over 1-D points — PSD and (for wide
+    /// bandwidth) numerically low-rank, Nyström's sweet spot.
+    fn rbf_points(n: usize) -> Vec<f64> {
+        (0..n).map(|i| i as f64 / n as f64).collect()
+    }
+
+    #[test]
+    fn nystrom_exact_when_rank_full() {
+        // Full-rank landmarks on a well-conditioned kernel: the
+        // factorization reproduces K. (A tight RBF grid would be
+        // exponentially ill-conditioned, so use well-separated points.)
+        let n = 10;
+        let pts: Vec<f64> = (0..n).map(|i| i as f64).collect();
+        let k = |i: usize, j: usize| (-(pts[i] - pts[j]).powi(2) / 0.5).exp();
+        let mut rng = Rng::seed_from(8);
+        let f = nystrom_factorize(n, k, n, 1e-12, &mut rng);
+        for i in 0..n {
+            for j in 0..n {
+                assert!(
+                    (f.entry(i, j) - k(i, j)).abs() < 1e-6,
+                    "({i},{j}): {} vs {}",
+                    f.entry(i, j),
+                    k(i, j)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn nystrom_matvec_close_for_smooth_kernel() {
+        let n = 64;
+        let pts = rbf_points(n);
+        let k = |i: usize, j: usize| (-(pts[i] - pts[j]).powi(2) / 0.8).exp();
+        let mut rng = Rng::seed_from(9);
+        let f = nystrom_factorize(n, k, 12, 1e-10, &mut rng);
+        let x: Vec<f64> = (0..n).map(|i| ((i * 7) % 5) as f64 * 0.2 + 0.1).collect();
+        let full = Mat::from_fn(n, n, k);
+        let want = full.matvec(&x);
+        let got = f.matvec(&x);
+        let rel: f64 = want
+            .iter()
+            .zip(&got)
+            .map(|(w, g)| (w - g).abs())
+            .sum::<f64>()
+            / want.iter().map(|w| w.abs()).sum::<f64>();
+        assert!(rel < 1e-3, "relative error {rel}");
+    }
+
+    #[test]
+    fn nystrom_struggles_on_near_diagonal_kernel() {
+        // The WFR regime: narrow bandwidth -> near-full-rank kernel.
+        // Nyström with small r should have a LARGE error here; this is
+        // the failure mode the paper exploits (Section 1).
+        let n = 64;
+        let pts = rbf_points(n);
+        let k = |i: usize, j: usize| (-(pts[i] - pts[j]).powi(2) / 1e-4).exp();
+        let mut rng = Rng::seed_from(10);
+        let f = nystrom_factorize(n, k, 8, 1e-10, &mut rng);
+        let x = vec![1.0; n];
+        let full = Mat::from_fn(n, n, k);
+        let want = full.matvec(&x);
+        let got = f.matvec(&x);
+        let rel: f64 = want
+            .iter()
+            .zip(&got)
+            .map(|(w, g)| (w - g).abs())
+            .sum::<f64>()
+            / want.iter().map(|w| w.abs()).sum::<f64>();
+        assert!(rel > 0.05, "expected Nyström to fail on near-diagonal kernel, rel {rel}");
+    }
+
+    #[test]
+    fn rank_respects_request() {
+        let n = 16;
+        let pts = rbf_points(n);
+        let k = |i: usize, j: usize| (-(pts[i] - pts[j]).powi(2)).exp();
+        let mut rng = Rng::seed_from(11);
+        let f = nystrom_factorize(n, k, 5, 1e-10, &mut rng);
+        assert_eq!(f.rank(), 5);
+        assert_eq!(f.landmarks.len(), 5);
+        assert_eq!(f.c.rows(), n);
+        assert_eq!(f.c.cols(), 5);
+    }
+}

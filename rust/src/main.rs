@@ -1,0 +1,213 @@
+//! `repro` — the Spar-Sink reproduction driver (L3 leader entrypoint).
+//!
+//! Subcommands (see `repro --help`): `experiment` regenerates any paper
+//! figure/table, `solve` runs a one-off synthetic problem, `serve`
+//! exercises the batched WFR distance coordinator, `runtime-info`
+//! inspects the PJRT artifact menu.
+
+use spar_sink::cli::{usage, Args};
+use spar_sink::experiments::{self, Profile};
+
+const VALUE_KEYS: &[&str] = &[
+    "out", "n", "eps", "lambda", "method", "seed", "videos", "frames", "workers", "problem", "s",
+    "d",
+];
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1), VALUE_KEYS);
+    let code = match args.command.as_deref() {
+        Some("experiment") => cmd_experiment(&args),
+        Some("solve") => cmd_solve(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("runtime-info") => cmd_runtime_info(),
+        Some("list") => {
+            for (id, desc, _) in experiments::registry() {
+                println!("{id:<10} {desc}");
+            }
+            0
+        }
+        Some("help") | None => {
+            println!("{}", usage());
+            0
+        }
+        Some(other) => {
+            eprintln!("unknown command '{other}'\n\n{}", usage());
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn cmd_experiment(args: &Args) -> i32 {
+    let Some(id) = args.positional.first() else {
+        eprintln!("experiment requires an id (or 'all'); see `repro list`");
+        return 2;
+    };
+    let profile = if args.flag("full") { Profile::Full } else { Profile::Quick };
+    match experiments::run(id, profile) {
+        Ok(outputs) => {
+            for out in outputs {
+                println!("{}", out.text);
+                if let Some(dir) = args.get("out") {
+                    let _ = std::fs::create_dir_all(dir);
+                    let path = format!("{dir}/{}.json", out.id);
+                    if let Err(e) = std::fs::write(&path, out.rows.to_string_compact()) {
+                        eprintln!("warning: could not write {path}: {e}");
+                    } else {
+                        println!("[rows written to {path}]");
+                    }
+                }
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("{e}");
+            2
+        }
+    }
+}
+
+fn cmd_solve(args: &Args) -> i32 {
+    use spar_sink::data::synthetic::{instance, Scenario};
+    use spar_sink::experiments::common::{
+        exact_ot, exact_uot, ot_cost, run_method_ot, run_method_uot, wfr_cost_at_density, Method,
+    };
+    use spar_sink::rng::Rng;
+
+    let n: usize = args.get_parsed("n", 500);
+    let eps: f64 = args.get_parsed("eps", 0.05);
+    let lambda: f64 = args.get_parsed("lambda", 1.0);
+    let d: usize = args.get_parsed("d", 5);
+    let s_mult: f64 = args.get_parsed("s", 8.0);
+    let seed: u64 = args.get_parsed("seed", 42);
+    let problem = args.get("problem").unwrap_or("ot").to_string();
+    let method = match args.get("method").unwrap_or("spar-sink") {
+        "nys-sink" => Method::NysSink,
+        "rand-sink" => Method::RandSink,
+        _ => Method::SparSink,
+    };
+
+    let mut rng = Rng::seed_from(seed);
+    let t0 = std::time::Instant::now();
+    let (exact, approx) = if problem == "uot" {
+        let inst = instance(Scenario::C1, n, d, 5.0, 3.0, &mut rng);
+        let cost = wfr_cost_at_density(&inst.points, 0.5);
+        let exact = exact_uot(&cost, &inst.a, &inst.b, lambda, eps);
+        let approx = run_method_uot(method, &cost, &inst.a, &inst.b, lambda, eps, s_mult, &mut rng);
+        (exact, approx)
+    } else {
+        let inst = instance(Scenario::C1, n, d, 1.0, 1.0, &mut rng);
+        let cost = ot_cost(&inst.points);
+        let exact = exact_ot(&cost, &inst.a, &inst.b, eps);
+        let approx = run_method_ot(method, &cost, &inst.a, &inst.b, eps, s_mult, &mut rng);
+        (exact, approx)
+    };
+    match (exact, approx) {
+        (Ok(exact), Ok(approx)) => {
+            let rel = (approx - exact).abs() / exact.abs().max(f64::MIN_POSITIVE);
+            println!(
+                "problem={problem} n={n} d={d} eps={eps} method={} s={s_mult}s0\n\
+                 exact objective   = {exact:.8}\n\
+                 approx objective  = {approx:.8}\n\
+                 relative error    = {rel:.5}\n\
+                 wall time         = {:?}",
+                method.name(),
+                t0.elapsed()
+            );
+            0
+        }
+        (e, a) => {
+            eprintln!("solve failed: exact={e:?} approx={a:?}");
+            1
+        }
+    }
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    use spar_sink::coordinator::{
+        CoordinatorConfig, DistanceJob, DistanceService, Measure, Method, ProblemSpec,
+    };
+    use spar_sink::data::echo::{downsample_frames, frame_to_measure, generate, EchoConfig, Health};
+    use spar_sink::rng::Rng;
+
+    let videos: usize = args.get_parsed("videos", 2);
+    let frames_n: usize = args.get_parsed("frames", 36);
+    let workers: usize = args.get_parsed("workers", spar_sink::pool::num_threads().min(8));
+    let method = match args.get("method").unwrap_or("spar-sink") {
+        "sinkhorn" => Method::Sinkhorn,
+        "rand-sink" => Method::RandSink,
+        _ => Method::SparSink,
+    };
+    let size = 40;
+
+    println!("starting distance service: {workers} workers, method {}", method.name());
+    let service = DistanceService::start(CoordinatorConfig { workers, ..Default::default() });
+    let mut rng = Rng::seed_from(7);
+    let mut id = 0u64;
+    let t0 = std::time::Instant::now();
+    for v in 0..videos {
+        let video = generate(
+            &EchoConfig { size, frames: frames_n, period: 12.0, health: Health::Normal, noise: 0.01 },
+            &mut rng,
+        );
+        let keep = downsample_frames(&video, 3);
+        let measures: Vec<Measure> = keep
+            .iter()
+            .map(|&i| {
+                let (pts, mass) = frame_to_measure(&video.frames[i], size, 0.05);
+                Measure::new(pts, mass)
+            })
+            .collect();
+        let mut jobs = Vec::new();
+        for i in 0..measures.len() {
+            for j in (i + 1)..measures.len() {
+                jobs.push(DistanceJob {
+                    id,
+                    source: measures[i].clone(),
+                    target: measures[j].clone(),
+                    method,
+                    spec: ProblemSpec { eta: size as f64 / 7.5, eps: 0.05, ..Default::default() },
+                    seed: id,
+                });
+                id += 1;
+            }
+        }
+        let results = match service.submit_all(jobs) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("service error: {e}");
+                return 1;
+            }
+        };
+        let ok = results.iter().filter(|r| r.error.is_none()).count();
+        println!("video {v}: {} distances ({} ok)", results.len(), ok);
+    }
+    println!("total wall time: {:?}", t0.elapsed());
+    println!("{}", service.shutdown().render());
+    0
+}
+
+fn cmd_runtime_info() -> i32 {
+    use spar_sink::runtime::{default_artifact_dir, ArtifactRegistry, Entry};
+    let dir = default_artifact_dir();
+    match ArtifactRegistry::open(&dir) {
+        Ok(reg) => {
+            println!("artifact dir : {}", dir.display());
+            println!("platform     : {}", reg.client().platform_name());
+            println!("block iters  : {}", reg.block_iters());
+            for entry in [
+                Entry::SinkhornBlock,
+                Entry::OtObjective,
+                Entry::UotObjective,
+                Entry::KernelFromCost,
+            ] {
+                println!("{:<18} sizes {:?}", entry.name(), reg.sizes(entry));
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("runtime unavailable: {e}");
+            1
+        }
+    }
+}

@@ -1,0 +1,107 @@
+//! Evaluation metrics used throughout the experiment harness.
+
+/// Relative mean absolute error across replications:
+/// `RMAE = (1/R) Σ |est_r − truth_r| / truth_r` (Section 5.1).
+pub fn rmae(estimates: &[f64], truths: &[f64]) -> f64 {
+    assert_eq!(estimates.len(), truths.len());
+    assert!(!estimates.is_empty());
+    estimates
+        .iter()
+        .zip(truths)
+        .map(|(e, t)| (e - t).abs() / t.abs().max(f64::MIN_POSITIVE))
+        .sum::<f64>()
+        / estimates.len() as f64
+}
+
+/// Mean and (population) standard deviation.
+pub fn mean_sd(xs: &[f64]) -> (f64, f64) {
+    assert!(!xs.is_empty());
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n;
+    (mean, var.sqrt())
+}
+
+/// Standard error of the mean.
+pub fn standard_error(xs: &[f64]) -> f64 {
+    let (_, sd) = mean_sd(xs);
+    sd / (xs.len() as f64).sqrt()
+}
+
+/// Median (copies + sorts).
+pub fn median(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+/// L1 distance between two histograms (barycenter experiments, Fig. 11).
+pub fn l1_distance(p: &[f64], q: &[f64]) -> f64 {
+    assert_eq!(p.len(), q.len());
+    p.iter().zip(q).map(|(a, b)| (a - b).abs()).sum()
+}
+
+/// The paper's ED-prediction error (Section 6):
+/// `|1 − (t̂_ED − t_ES) / (t_ED − t_ES)|`.
+pub fn ed_prediction_error(t_es: f64, t_ed: f64, t_ed_hat: f64) -> f64 {
+    (1.0 - (t_ed_hat - t_es) / (t_ed - t_es)).abs()
+}
+
+/// s₀(n) = 10⁻³ · n · log⁴(n) — the paper's subsample-size unit
+/// (Section 5.1, in the light of Theorem 1).
+pub fn s0(n: usize) -> f64 {
+    let n = n as f64;
+    1e-3 * n * n.ln().powi(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rmae_zero_for_exact() {
+        assert_eq!(rmae(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+    }
+
+    #[test]
+    fn rmae_scale_invariant() {
+        let r1 = rmae(&[1.1], &[1.0]);
+        let r2 = rmae(&[110.0], &[100.0]);
+        assert!((r1 - r2).abs() < 1e-12);
+        assert!((r1 - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mean_sd_known() {
+        let (m, s) = mean_sd(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((m - 5.0).abs() < 1e-12);
+        assert!((s - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn median_even_odd() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 3.0, 2.0]), 2.5);
+    }
+
+    #[test]
+    fn ed_error_perfect_and_off() {
+        assert_eq!(ed_prediction_error(10.0, 20.0, 20.0), 0.0);
+        assert!((ed_prediction_error(10.0, 20.0, 15.0) - 0.5).abs() < 1e-12);
+        // Overshoot is also penalized.
+        assert!((ed_prediction_error(10.0, 20.0, 25.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn s0_matches_formula() {
+        let n = 1000usize;
+        let want = 1e-3 * 1000.0 * (1000.0f64).ln().powi(4);
+        assert!((s0(n) - want).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,246 @@
+//! Algorithm 5 — iterative Bregman projection (IBP) for fixed-support
+//! Wasserstein barycenters (Benamou et al., 2015).
+//!
+//! Solves `min_q Σ_k w_k OT_ε(q, b_k)` by alternating KL projections;
+//! the barycenter is read off the shared row marginal.
+
+use crate::error::{Error, Result};
+use crate::linalg::{l1_diff, Mat};
+use crate::ot::sinkhorn::{safe_div, SinkhornParams};
+
+/// Result of an IBP solve.
+#[derive(Clone, Debug)]
+pub struct BarycenterSolution {
+    /// The barycenter histogram `q`.
+    pub q: Vec<f64>,
+    /// Iterations performed.
+    pub iterations: usize,
+    /// Final L1 change in `q`.
+    pub displacement: f64,
+    /// Whether the tolerance was met.
+    pub converged: bool,
+}
+
+/// A kernel operator abstraction so IBP runs over dense matrices and
+/// sparse sketches alike (the Spar-IBP solver reuses this loop).
+pub trait KernelOp: Sync {
+    /// `y = K x`.
+    fn apply(&self, x: &[f64]) -> Vec<f64>;
+    /// `y = Kᵀ x`.
+    fn apply_t(&self, x: &[f64]) -> Vec<f64>;
+    fn rows(&self) -> usize;
+    fn cols(&self) -> usize;
+}
+
+impl KernelOp for Mat {
+    fn apply(&self, x: &[f64]) -> Vec<f64> {
+        self.matvec(x)
+    }
+    fn apply_t(&self, x: &[f64]) -> Vec<f64> {
+        self.matvec_t(x)
+    }
+    fn rows(&self) -> usize {
+        Mat::rows(self)
+    }
+    fn cols(&self) -> usize {
+        Mat::cols(self)
+    }
+}
+
+/// Run IBP over any kernel operators (Algorithm 5).
+///
+/// * `kernels[k]` — Gibbs kernel for the k-th input measure.
+/// * `bs[k]` — the k-th input histogram.
+/// * `weights` — simplex weights `w`.
+pub fn ibp_barycenter_with<K: KernelOp>(
+    kernels: &[K],
+    bs: &[Vec<f64>],
+    weights: &[f64],
+    params: &SinkhornParams,
+) -> Result<BarycenterSolution> {
+    let m = kernels.len();
+    if m == 0 || bs.len() != m || weights.len() != m {
+        return Err(Error::Dimension(format!(
+            "got {} kernels, {} measures, {} weights",
+            m,
+            bs.len(),
+            weights.len()
+        )));
+    }
+    let n = kernels[0].rows();
+    for (k, kern) in kernels.iter().enumerate() {
+        if kern.rows() != n || kern.cols() != bs[k].len() {
+            return Err(Error::Dimension(format!(
+                "kernel {k} is {}x{} but barycenter support is {n} and b[{k}] has {}",
+                kern.rows(),
+                kern.cols(),
+                bs[k].len()
+            )));
+        }
+    }
+    let wsum: f64 = weights.iter().sum();
+    if weights.iter().any(|&w| w < 0.0) || wsum <= 0.0 {
+        return Err(Error::InvalidParam("weights must be non-negative with positive sum".into()));
+    }
+    let w: Vec<f64> = weights.iter().map(|x| x / wsum).collect();
+
+    let mut q = vec![1.0 / n as f64; n];
+    let mut q_prev = q.clone();
+    let mut us: Vec<Vec<f64>> = (0..m).map(|_| vec![1.0; n]).collect();
+    let mut displacement = f64::INFINITY;
+    let mut iters = 0;
+    while iters < params.max_iters {
+        iters += 1;
+        q_prev.copy_from_slice(&q);
+        // Geometric-mean update: q = prod_k (K_k v_k)^{w_k}.
+        let mut log_q = vec![0.0; n];
+        for k in 0..m {
+            // v_k = b_k ./ K_k^T u_k
+            let ktu = kernels[k].apply_t(&us[k]);
+            let v_k: Vec<f64> =
+                bs[k].iter().zip(&ktu).map(|(&b, &d)| safe_div(b, d)).collect();
+            let kv = kernels[k].apply(&v_k);
+            for i in 0..n {
+                // Guard log(0): treat empty rows as tiny mass.
+                log_q[i] += w[k] * kv[i].max(1e-300).ln();
+            }
+            us[k] = kv; // stash K_k v_k; u_k update below uses new q.
+        }
+        for i in 0..n {
+            q[i] = log_q[i].exp();
+        }
+        // u_k = q ./ (K_k v_k)
+        for u_k in us.iter_mut() {
+            for i in 0..n {
+                u_k[i] = safe_div(q[i], u_k[i]);
+            }
+        }
+        if q.iter().any(|x| !x.is_finite()) {
+            return Err(Error::Numerical(format!("barycenter diverged at iteration {iters}")));
+        }
+        displacement = l1_diff(&q, &q_prev);
+        if displacement <= params.delta {
+            return Ok(BarycenterSolution { q, iterations: iters, displacement, converged: true });
+        }
+    }
+    if params.strict {
+        return Err(Error::NotConverged { iters, err: displacement });
+    }
+    Ok(BarycenterSolution { q, iterations: iters, displacement, converged: false })
+}
+
+/// Dense-matrix convenience wrapper.
+pub fn ibp_barycenter(
+    kernels: &[Mat],
+    bs: &[Vec<f64>],
+    weights: &[f64],
+    params: &SinkhornParams,
+) -> Result<BarycenterSolution> {
+    ibp_barycenter_with(kernels, bs, weights, params)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ot::cost::{gibbs_kernel, sq_euclidean_cost};
+
+    fn grid_support(n: usize) -> Vec<Vec<f64>> {
+        (0..n).map(|i| vec![i as f64 / (n - 1) as f64]).collect()
+    }
+
+    fn gauss_hist(pts: &[Vec<f64>], mu: f64, s2: f64) -> Vec<f64> {
+        let w: Vec<f64> = pts.iter().map(|p| (-(p[0] - mu).powi(2) / (2.0 * s2)).exp()).collect();
+        let s: f64 = w.iter().sum();
+        w.iter().map(|x| x / s).collect()
+    }
+
+    #[test]
+    fn barycenter_of_identical_measures_recovers_shape() {
+        // Entropic IBP returns a slightly blurred version of b; the mean,
+        // total mass and mode must match even if pointwise values differ.
+        let pts = grid_support(32);
+        let cost = sq_euclidean_cost(&pts, &pts);
+        let kernel = gibbs_kernel(&cost, 0.002);
+        let b = gauss_hist(&pts, 0.5, 0.01);
+        let sol = ibp_barycenter(
+            &[kernel.clone(), kernel.clone()],
+            &[b.clone(), b.clone()],
+            &[0.5, 0.5],
+            &SinkhornParams { delta: 1e-10, max_iters: 3000, strict: false },
+        )
+        .unwrap();
+        let mass: f64 = sol.q.iter().sum();
+        assert!((mass - 1.0).abs() < 1e-6, "mass {mass}");
+        let mean: f64 = pts.iter().zip(&sol.q).map(|(p, q)| p[0] * q).sum();
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+        let mode = sol.q.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
+        let mode_b = b.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
+        assert!((mode as i64 - mode_b as i64).abs() <= 1, "mode {mode} vs {mode_b}");
+        let err: f64 = l1_diff(&sol.q, &b);
+        assert!(err < 0.25, "L1 error {err} (entropic blur should be modest)");
+    }
+
+    #[test]
+    fn barycenter_interpolates_between_two_gaussians() {
+        let pts = grid_support(48);
+        let cost = sq_euclidean_cost(&pts, &pts);
+        let kernel = gibbs_kernel(&cost, 0.005);
+        let b1 = gauss_hist(&pts, 0.25, 0.004);
+        let b2 = gauss_hist(&pts, 0.75, 0.004);
+        let sol = ibp_barycenter(
+            &[kernel.clone(), kernel.clone()],
+            &[b1, b2],
+            &[0.5, 0.5],
+            &SinkhornParams { delta: 1e-9, max_iters: 5000, strict: false },
+        )
+        .unwrap();
+        // The W2 barycenter of N(0.25, s) and N(0.75, s) has mean 0.5.
+        let mean: f64 = pts.iter().zip(&sol.q).map(|(p, q)| p[0] * q).sum();
+        assert!((mean - 0.5).abs() < 0.02, "barycenter mean {mean}");
+        let mass: f64 = sol.q.iter().sum();
+        assert!((mass - 1.0).abs() < 1e-6, "mass {mass}");
+    }
+
+    #[test]
+    fn weights_skew_the_barycenter() {
+        let pts = grid_support(48);
+        let cost = sq_euclidean_cost(&pts, &pts);
+        let kernel = gibbs_kernel(&cost, 0.005);
+        let b1 = gauss_hist(&pts, 0.25, 0.004);
+        let b2 = gauss_hist(&pts, 0.75, 0.004);
+        let sol = ibp_barycenter(
+            &[kernel.clone(), kernel.clone()],
+            &[b1, b2],
+            &[0.9, 0.1],
+            &SinkhornParams { delta: 1e-9, max_iters: 5000, strict: false },
+        )
+        .unwrap();
+        let mean: f64 = pts.iter().zip(&sol.q).map(|(p, q)| p[0] * q).sum();
+        assert!(mean < 0.4, "mean {mean} should be pulled toward 0.25");
+    }
+
+    #[test]
+    fn rejects_mismatched_inputs() {
+        let pts = grid_support(8);
+        let cost = sq_euclidean_cost(&pts, &pts);
+        let kernel = gibbs_kernel(&cost, 0.1);
+        let b = gauss_hist(&pts, 0.5, 0.01);
+        let res = ibp_barycenter(&[kernel], &[b.clone(), b], &[0.5, 0.5], &SinkhornParams::default());
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn rejects_bad_weights() {
+        let pts = grid_support(8);
+        let cost = sq_euclidean_cost(&pts, &pts);
+        let kernel = gibbs_kernel(&cost, 0.1);
+        let b = gauss_hist(&pts, 0.5, 0.01);
+        let res = ibp_barycenter(
+            &[kernel.clone(), kernel],
+            &[b.clone(), b],
+            &[-1.0, 0.5],
+            &SinkhornParams::default(),
+        );
+        assert!(res.is_err());
+    }
+}

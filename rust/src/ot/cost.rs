@@ -1,0 +1,174 @@
+//! Ground costs and Gibbs kernels.
+//!
+//! * Squared Euclidean cost (the paper's OT experiments, Section 5.1).
+//! * Wasserstein–Fisher–Rao cost `C_ij = -log cos²₊(d_ij / 2η)` whose
+//!   kernel is sparse and near-full-rank (Section 2.2) — the regime where
+//!   Nyström-based acceleration breaks down and Spar-Sink shines.
+
+use crate::linalg::Mat;
+
+/// Euclidean distance between two points.
+#[inline]
+pub fn euclidean(x: &[f64], y: &[f64]) -> f64 {
+    sq_euclidean(x, y).sqrt()
+}
+
+/// Squared Euclidean distance.
+#[inline]
+pub fn sq_euclidean(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(a, b)| (a - b) * (a - b)).sum()
+}
+
+/// Pairwise squared-Euclidean cost matrix `C_ij = ||x_i - y_j||²`.
+pub fn sq_euclidean_cost(xs: &[Vec<f64>], ys: &[Vec<f64>]) -> Mat {
+    Mat::from_fn(xs.len(), ys.len(), |i, j| sq_euclidean(&xs[i], &ys[j]))
+}
+
+/// WFR ground cost for a single distance:
+/// `-log cos²₊(d / 2η)` with `cos₊(z) = cos(min(z, π/2))`.
+/// Returns `f64::INFINITY` when `d ≥ π η` (transport blocked).
+#[inline]
+pub fn wfr_cost_from_distance(d: f64, eta: f64) -> f64 {
+    let z = d / (2.0 * eta);
+    if z >= std::f64::consts::FRAC_PI_2 {
+        return f64::INFINITY;
+    }
+    let c = z.cos();
+    -(c * c).ln()
+}
+
+/// WFR kernel entry `K_ij = exp(-C_ij / ε) = cos₊(d/2η)^(2/ε)`.
+/// Exactly zero when `d ≥ π η`.
+#[inline]
+pub fn wfr_kernel_from_distance(d: f64, eta: f64, eps: f64) -> f64 {
+    let z = d / (2.0 * eta);
+    if z >= std::f64::consts::FRAC_PI_2 {
+        return 0.0;
+    }
+    let c = z.cos();
+    (c * c).powf(1.0 / eps)
+}
+
+/// Pairwise WFR cost matrix from supports (Euclidean ground distance).
+pub fn wfr_cost(xs: &[Vec<f64>], ys: &[Vec<f64>], eta: f64) -> Mat {
+    Mat::from_fn(xs.len(), ys.len(), |i, j| {
+        wfr_cost_from_distance(euclidean(&xs[i], &ys[j]), eta)
+    })
+}
+
+/// Gibbs kernel `K = exp(-C / ε)`, mapping `C = ∞` to exactly 0.
+pub fn gibbs_kernel(cost: &Mat, eps: f64) -> Mat {
+    cost.map(|c| if c.is_infinite() { 0.0 } else { (-c / eps).exp() })
+}
+
+/// Fraction of non-zero entries in a kernel (used to calibrate η for the
+/// paper's R1/R2/R3 sparsity regimes: ~70%, ~50%, ~30% nnz).
+pub fn kernel_density(kernel: &Mat) -> f64 {
+    let nnz = kernel.as_slice().iter().filter(|&&k| k > 0.0).count();
+    nnz as f64 / (kernel.rows() * kernel.cols()) as f64
+}
+
+/// Binary-search η so that the WFR kernel has approximately the target
+/// density (fraction of entries with `d_ij < π η`).
+pub fn calibrate_eta(
+    xs: &[Vec<f64>],
+    ys: &[Vec<f64>],
+    target_density: f64,
+    tol: f64,
+) -> f64 {
+    // Collect all pairwise distances once (O(n²)); pick the quantile.
+    let mut ds: Vec<f64> = Vec::with_capacity(xs.len() * ys.len());
+    for x in xs {
+        for y in ys {
+            ds.push(euclidean(x, y));
+        }
+    }
+    ds.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q = ((target_density * ds.len() as f64) as usize).min(ds.len() - 1);
+    let _ = tol;
+    // d < π η  ⇔  η > d/π: choose η at the target quantile distance.
+    ds[q] / std::f64::consts::PI
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sq_euclidean_basic() {
+        assert_eq!(sq_euclidean(&[0.0, 0.0], &[3.0, 4.0]), 25.0);
+        assert_eq!(euclidean(&[0.0, 0.0], &[3.0, 4.0]), 5.0);
+    }
+
+    #[test]
+    fn cost_matrix_symmetric_on_shared_support() {
+        let pts = vec![vec![0.0], vec![1.0], vec![2.5]];
+        let c = sq_euclidean_cost(&pts, &pts);
+        for i in 0..3 {
+            assert_eq!(c.get(i, i), 0.0);
+            for j in 0..3 {
+                assert_eq!(c.get(i, j), c.get(j, i));
+            }
+        }
+    }
+
+    #[test]
+    fn wfr_cost_blocks_long_range() {
+        let eta = 2.0;
+        // d >= pi*eta -> infinite cost, zero kernel.
+        let d_blocked = std::f64::consts::PI * eta;
+        assert!(wfr_cost_from_distance(d_blocked, eta).is_infinite());
+        assert_eq!(wfr_kernel_from_distance(d_blocked, eta, 0.1), 0.0);
+        // d = 0 -> zero cost, kernel 1.
+        assert_eq!(wfr_cost_from_distance(0.0, eta), 0.0);
+        assert!((wfr_kernel_from_distance(0.0, eta, 0.1) - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn wfr_kernel_consistent_with_cost() {
+        let (eta, eps) = (1.5, 0.3);
+        for &d in &[0.1, 0.5, 1.0, 2.0, 4.0] {
+            let c = wfr_cost_from_distance(d, eta);
+            let k = wfr_kernel_from_distance(d, eta, eps);
+            if c.is_infinite() {
+                assert_eq!(k, 0.0);
+            } else {
+                assert!((k - (-c / eps).exp()).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn smaller_eta_sparser_kernel() {
+        let pts: Vec<Vec<f64>> = (0..40).map(|i| vec![i as f64 * 0.1]).collect();
+        let dense = gibbs_kernel(&wfr_cost(&pts, &pts, 2.0), 0.1);
+        let sparse = gibbs_kernel(&wfr_cost(&pts, &pts, 0.2), 0.1);
+        assert!(kernel_density(&sparse) < kernel_density(&dense));
+    }
+
+    #[test]
+    fn calibrate_eta_hits_target_density() {
+        let pts: Vec<Vec<f64>> = (0..60)
+            .map(|i| vec![(i as f64 * 0.618).fract(), (i as f64 * 0.383).fract()])
+            .collect();
+        for &target in &[0.7, 0.5, 0.3] {
+            let eta = calibrate_eta(&pts, &pts, target, 1e-3);
+            let k = gibbs_kernel(&wfr_cost(&pts, &pts, eta), 0.1);
+            let density = kernel_density(&k);
+            assert!(
+                (density - target).abs() < 0.05,
+                "target {target}, got {density}"
+            );
+        }
+    }
+
+    #[test]
+    fn gibbs_kernel_handles_infinite_cost() {
+        let mut c = Mat::zeros(2, 2);
+        c.set(0, 1, f64::INFINITY);
+        let k = gibbs_kernel(&c, 0.5);
+        assert_eq!(k.get(0, 1), 0.0);
+        assert_eq!(k.get(0, 0), 1.0);
+    }
+}

@@ -1,0 +1,27 @@
+//! Entropic optimal-transport core: cost/kernel construction, exact
+//! Sinkhorn solvers for OT (Alg. 1) and UOT (Alg. 2), objectives
+//! (Eqs. 6 and 10), and the IBP barycenter solver (Alg. 5).
+
+pub mod barycenter;
+pub mod cost;
+pub mod log_sinkhorn;
+pub mod objective;
+pub mod sinkhorn;
+pub mod uot;
+
+/// Result of a Sinkhorn-type solve.
+#[derive(Clone, Debug)]
+pub struct SinkhornSolution {
+    /// Row scaling u.
+    pub u: Vec<f64>,
+    /// Column scaling v.
+    pub v: Vec<f64>,
+    /// Objective value (entropic OT Eq. 6 or entropic UOT Eq. 10).
+    pub objective: f64,
+    /// Number of scaling iterations performed.
+    pub iterations: usize,
+    /// Final L1 displacement (the stopping statistic).
+    pub displacement: f64,
+    /// Whether the tolerance was met before the iteration cap.
+    pub converged: bool,
+}

@@ -1,0 +1,172 @@
+//! Objective evaluation: entropic OT (Eq. 6) and entropic UOT (Eq. 10),
+//! plus the generalized KL divergence and plan entropy helpers shared by
+//! the dense and sparse solvers.
+
+use crate::linalg::Mat;
+
+/// Generalized KL divergence `KL(x‖y) = Σ x log(x/y) − x + y` with the
+/// convention `0 log 0 = 0`.
+pub fn kl_divergence(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter()
+        .zip(y)
+        .map(|(&xi, &yi)| {
+            if xi > 0.0 {
+                xi * (xi / yi).ln() - xi + yi
+            } else {
+                yi
+            }
+        })
+        .sum()
+}
+
+/// Shannon entropy `H(T) = −Σ T (log T − 1)` over plan entries, with
+/// `0 log 0 = 0`. Accepts an iterator so dense and sparse plans share it.
+pub fn plan_entropy(entries: impl Iterator<Item = f64>) -> f64 {
+    entries
+        .map(|t| if t > 0.0 { -t * (t.ln() - 1.0) } else { 0.0 })
+        .sum()
+}
+
+/// Entropic OT objective `<T,C> − ε H(T)` for a dense plan
+/// `T = diag(u) K diag(v)`.
+pub fn ot_objective_dense(kernel: &Mat, cost: &Mat, u: &[f64], v: &[f64], eps: f64) -> f64 {
+    let (n, m) = (kernel.rows(), kernel.cols());
+    let mut transport = 0.0;
+    let mut entropy = 0.0;
+    for i in 0..n {
+        let ui = u[i];
+        if ui == 0.0 {
+            continue;
+        }
+        let krow = kernel.row(i);
+        let crow = cost.row(i);
+        for j in 0..m {
+            let t = ui * krow[j] * v[j];
+            if t > 0.0 {
+                // cost may be +inf where kernel is 0; skip those (t=0).
+                transport += t * crow[j];
+                entropy -= t * (t.ln() - 1.0);
+            }
+        }
+    }
+    transport - eps * entropy
+}
+
+/// Marginals of a dense plan `T = diag(u) K diag(v)`.
+pub fn plan_marginals_dense(kernel: &Mat, u: &[f64], v: &[f64]) -> (Vec<f64>, Vec<f64>) {
+    let (n, m) = (kernel.rows(), kernel.cols());
+    let mut row = vec![0.0; n];
+    let mut col = vec![0.0; m];
+    for i in 0..n {
+        let ui = u[i];
+        let krow = kernel.row(i);
+        let mut acc = 0.0;
+        for j in 0..m {
+            let t = ui * krow[j] * v[j];
+            acc += t;
+            col[j] += t;
+        }
+        row[i] = acc;
+    }
+    (row, col)
+}
+
+/// Entropic UOT objective (Eq. 10):
+/// `<T,C> + λ KL(T1‖a) + λ KL(Tᵀ1‖b) − ε H(T)`.
+pub fn uot_objective_dense(
+    kernel: &Mat,
+    cost: &Mat,
+    a: &[f64],
+    b: &[f64],
+    u: &[f64],
+    v: &[f64],
+    lambda: f64,
+    eps: f64,
+) -> f64 {
+    let base = ot_objective_dense(kernel, cost, u, v, eps);
+    let (row, col) = plan_marginals_dense(kernel, u, v);
+    base + lambda * kl_divergence(&row, a) + lambda * kl_divergence(&col, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kl_zero_when_equal() {
+        let x = [0.3, 0.2, 0.5];
+        assert!(kl_divergence(&x, &x).abs() < 1e-15);
+    }
+
+    #[test]
+    fn kl_nonnegative_and_zero_mass_ok() {
+        let x = [0.0, 0.5, 0.5];
+        let y = [0.2, 0.4, 0.4];
+        let kl = kl_divergence(&x, &y);
+        assert!(kl >= 0.0);
+        assert!(kl.is_finite());
+    }
+
+    #[test]
+    fn entropy_of_uniform_plan() {
+        // T_ij = 1/4 on a 2x2 plan: H = -sum t(log t - 1) = 4 * (1/4)(log 4 + 1)/... compute directly.
+        let t: f64 = 0.25;
+        let want = 4.0 * (-t * (t.ln() - 1.0));
+        let got = plan_entropy([t; 4].into_iter());
+        assert!((got - want).abs() < 1e-15);
+    }
+
+    #[test]
+    fn ot_objective_product_plan() {
+        // K = ones, u = a, v = b: T = a b^T (the eps -> inf limit).
+        let a = [0.4, 0.6];
+        let b = [0.5, 0.5];
+        let kernel = Mat::from_fn(2, 2, |_, _| 1.0);
+        let cost = Mat::from_fn(2, 2, |i, j| (i as f64 - j as f64).abs());
+        let eps = 0.7;
+        let got = ot_objective_dense(&kernel, &cost, &a, &b, eps);
+        let mut want = 0.0;
+        for i in 0..2 {
+            for j in 0..2 {
+                let t: f64 = a[i] * b[j];
+                want += t * cost.get(i, j) + eps * t * (t.ln() - 1.0);
+            }
+        }
+        assert!((got - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn infinite_cost_zero_kernel_is_skipped() {
+        let mut kernel = Mat::from_fn(2, 2, |_, _| 1.0);
+        kernel.set(0, 1, 0.0);
+        let mut cost = Mat::zeros(2, 2);
+        cost.set(0, 1, f64::INFINITY);
+        let obj = ot_objective_dense(&kernel, &cost, &[0.5, 0.5], &[0.5, 0.5], 0.1);
+        assert!(obj.is_finite());
+    }
+
+    #[test]
+    fn marginals_sum_to_plan_mass() {
+        let kernel = Mat::from_fn(3, 3, |i, j| 1.0 / (1.0 + (i + j) as f64));
+        let u = [0.9, 1.1, 1.0];
+        let v = [1.2, 0.8, 1.0];
+        let (row, col) = plan_marginals_dense(&kernel, &u, &v);
+        let mass_r: f64 = row.iter().sum();
+        let mass_c: f64 = col.iter().sum();
+        assert!((mass_r - mass_c).abs() < 1e-12);
+    }
+
+    #[test]
+    fn uot_objective_reduces_to_ot_when_marginals_met() {
+        // If T's marginals equal (a, b) the KL terms vanish.
+        let kernel = Mat::from_fn(2, 2, |_, _| 0.25);
+        let cost = Mat::from_fn(2, 2, |i, j| ((i + j) % 2) as f64);
+        let u = [1.0, 1.0];
+        let v = [1.0, 1.0];
+        let (row, col) = plan_marginals_dense(&kernel, &u, &v);
+        let got = uot_objective_dense(&kernel, &cost, &row, &col, &u, &v, 3.0, 0.2);
+        let want = ot_objective_dense(&kernel, &cost, &u, &v, 0.2);
+        assert!((got - want).abs() < 1e-12);
+    }
+}

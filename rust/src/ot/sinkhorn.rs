@@ -1,0 +1,243 @@
+//! Algorithm 1 — the classical Sinkhorn algorithm for entropic OT,
+//! with the paper's stopping rule `‖u⁽ᵗ⁾−u⁽ᵗ⁻¹⁾‖₁+‖v⁽ᵗ⁾−v⁽ᵗ⁻¹⁾‖₁ ≤ δ`.
+
+use super::{objective, SinkhornSolution};
+use crate::error::{Error, Result};
+use crate::linalg::{l1_diff, Mat};
+
+/// Common Sinkhorn parameters (paper defaults: δ = 1e-6, 1000 iters).
+#[derive(Clone, Debug)]
+pub struct SinkhornParams {
+    /// Stopping threshold δ on the L1 scaling displacement.
+    pub delta: f64,
+    /// Maximum number of iterations.
+    pub max_iters: usize,
+    /// Error instead of returning a best-effort solution when the
+    /// iteration cap is hit.
+    pub strict: bool,
+}
+
+impl Default for SinkhornParams {
+    fn default() -> Self {
+        SinkhornParams { delta: 1e-6, max_iters: 1000, strict: false }
+    }
+}
+
+/// Guard against division by (numerically) zero: the scaling updates
+/// divide by `K v`, which underflows when ε is small. Matches POT's
+/// behaviour of clamping rather than emitting inf.
+#[inline(always)]
+pub(crate) fn safe_div(num: f64, den: f64) -> f64 {
+    if den.abs() < 1e-300 {
+        if num == 0.0 {
+            0.0
+        } else {
+            num / 1e-300
+        }
+    } else {
+        num / den
+    }
+}
+
+fn validate(kernel: &Mat, a: &[f64], b: &[f64]) -> Result<()> {
+    if kernel.rows() != a.len() || kernel.cols() != b.len() {
+        return Err(Error::Dimension(format!(
+            "kernel {}x{} vs a[{}], b[{}]",
+            kernel.rows(),
+            kernel.cols(),
+            a.len(),
+            b.len()
+        )));
+    }
+    if a.iter().any(|&x| x < 0.0) || b.iter().any(|&x| x < 0.0) {
+        return Err(Error::InvalidParam("marginals must be non-negative".into()));
+    }
+    Ok(())
+}
+
+/// Run Algorithm 1 and evaluate the entropic OT objective (Eq. 6).
+///
+/// * `kernel` — Gibbs kernel `K = exp(-C/ε)` (or a sparsified proxy).
+/// * `cost` — ground cost matrix used for objective evaluation.
+/// * `a`, `b` — probability histograms.
+pub fn sinkhorn_ot(
+    kernel: &Mat,
+    cost: &Mat,
+    a: &[f64],
+    b: &[f64],
+    eps: f64,
+    params: &SinkhornParams,
+) -> Result<SinkhornSolution> {
+    let (u, v, iterations, displacement, converged) = sinkhorn_scalings(kernel, a, b, 1.0, params)?;
+    let objective = objective::ot_objective_dense(kernel, cost, &u, &v, eps);
+    if !objective.is_finite() {
+        return Err(Error::Numerical(format!(
+            "OT objective is not finite (eps={eps}); consider rescaling the cost"
+        )));
+    }
+    Ok(SinkhornSolution { u, v, objective, iterations, displacement, converged })
+}
+
+/// The shared scaling loop for Algorithms 1 and 2.
+///
+/// `rho = 1` is Algorithm 1; `rho = λ/(λ+ε)` is Algorithm 2. Returns
+/// `(u, v, iterations, displacement, converged)`.
+pub fn sinkhorn_scalings(
+    kernel: &Mat,
+    a: &[f64],
+    b: &[f64],
+    rho: f64,
+    params: &SinkhornParams,
+) -> Result<(Vec<f64>, Vec<f64>, usize, f64, bool)> {
+    validate(kernel, a, b)?;
+    let n = a.len();
+    let m = b.len();
+    let mut u = vec![1.0; n];
+    let mut v = vec![1.0; m];
+    let mut u_prev = vec![1.0; n];
+    let mut v_prev = vec![1.0; m];
+    let mut displacement = f64::INFINITY;
+    let mut iters = 0;
+    while iters < params.max_iters {
+        iters += 1;
+        u_prev.copy_from_slice(&u);
+        v_prev.copy_from_slice(&v);
+        // u = (a ./ K v)^rho
+        let kv = kernel.matvec(&v);
+        for i in 0..n {
+            let val = safe_div(a[i], kv[i]);
+            u[i] = if rho == 1.0 { val } else { val.powf(rho) };
+        }
+        // v = (b ./ K^T u)^rho
+        let ktu = kernel.matvec_t(&u);
+        for j in 0..m {
+            let val = safe_div(b[j], ktu[j]);
+            v[j] = if rho == 1.0 { val } else { val.powf(rho) };
+        }
+        if u.iter().chain(v.iter()).any(|x| !x.is_finite()) {
+            return Err(Error::Numerical(format!(
+                "scalings diverged at iteration {iters}"
+            )));
+        }
+        displacement = l1_diff(&u, &u_prev) + l1_diff(&v, &v_prev);
+        if displacement <= params.delta {
+            return Ok((u, v, iters, displacement, true));
+        }
+    }
+    if params.strict {
+        return Err(Error::NotConverged { iters, err: displacement });
+    }
+    Ok((u, v, iters, displacement, false))
+}
+
+/// Dense transport plan `T = diag(u) K diag(v)`.
+pub fn transport_plan(kernel: &Mat, u: &[f64], v: &[f64]) -> Mat {
+    Mat::from_fn(kernel.rows(), kernel.cols(), |i, j| {
+        u[i] * kernel.get(i, j) * v[j]
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ot::cost::{gibbs_kernel, sq_euclidean_cost};
+
+    fn toy_problem(n: usize, eps: f64) -> (Mat, Mat, Vec<f64>, Vec<f64>) {
+        let pts: Vec<Vec<f64>> = (0..n)
+            .map(|i| vec![(i as f64 * 0.618).fract(), (i as f64 * 0.383).fract()])
+            .collect();
+        let cost = sq_euclidean_cost(&pts, &pts);
+        let kernel = gibbs_kernel(&cost, eps);
+        let a: Vec<f64> = (0..n).map(|i| 1.0 + (i % 3) as f64).collect();
+        let sa: f64 = a.iter().sum();
+        let a: Vec<f64> = a.iter().map(|x| x / sa).collect();
+        let b: Vec<f64> = (0..n).map(|i| 1.0 + ((i + 1) % 4) as f64).collect();
+        let sb: f64 = b.iter().sum();
+        let b: Vec<f64> = b.iter().map(|x| x / sb).collect();
+        (kernel, cost, a, b)
+    }
+
+    #[test]
+    fn converges_and_satisfies_marginals() {
+        let (kernel, cost, a, b) = toy_problem(32, 0.1);
+        let sol = sinkhorn_ot(&kernel, &cost, &a, &b, 0.1, &SinkhornParams::default()).unwrap();
+        assert!(sol.converged, "displacement {}", sol.displacement);
+        let plan = transport_plan(&kernel, &sol.u, &sol.v);
+        let rows = plan.row_sums();
+        let cols = plan.col_sums();
+        for (r, want) in rows.iter().zip(&a) {
+            assert!((r - want).abs() < 1e-5, "row marginal {r} vs {want}");
+        }
+        for (c, want) in cols.iter().zip(&b) {
+            assert!((c - want).abs() < 1e-5, "col marginal {c} vs {want}");
+        }
+    }
+
+    #[test]
+    fn identical_marginals_give_near_diagonal_plan() {
+        let (kernel, cost, a, _) = toy_problem(16, 0.01);
+        let sol = sinkhorn_ot(&kernel, &cost, &a, &a, 0.01, &SinkhornParams::default()).unwrap();
+        // With identical marginals and small eps the objective ≈ -eps*H(diag plan) which is
+        // small; transport cost itself must be near zero.
+        let plan = transport_plan(&kernel, &sol.u, &sol.v);
+        let transport_cost: f64 = (0..16)
+            .map(|i| (0..16).map(|j| plan.get(i, j) * cost.get(i, j)).sum::<f64>())
+            .sum();
+        // Entropic blur at eps = 0.01 leaves a little off-diagonal mass;
+        // the transport cost must still be near zero.
+        assert!(transport_cost < 1e-2, "cost {transport_cost}");
+    }
+
+    #[test]
+    fn objective_decreases_with_distance_between_measures() {
+        // Moving b closer to a must not increase the OT objective.
+        let n = 24;
+        let pts: Vec<Vec<f64>> = (0..n).map(|i| vec![i as f64 / n as f64]).collect();
+        let cost = sq_euclidean_cost(&pts, &pts);
+        let eps = 0.05;
+        let kernel = gibbs_kernel(&cost, eps);
+        let gauss = |mu: f64| -> Vec<f64> {
+            let w: Vec<f64> = (0..n)
+                .map(|i| (-(pts[i][0] - mu).powi(2) / 0.02).exp())
+                .collect();
+            let s: f64 = w.iter().sum();
+            w.iter().map(|x| x / s).collect()
+        };
+        let a = gauss(0.3);
+        let params = SinkhornParams::default();
+        let near = sinkhorn_ot(&kernel, &cost, &a, &gauss(0.35), eps, &params).unwrap();
+        let far = sinkhorn_ot(&kernel, &cost, &a, &gauss(0.7), eps, &params).unwrap();
+        assert!(near.objective < far.objective);
+    }
+
+    #[test]
+    fn dimension_mismatch_rejected() {
+        let (kernel, cost, a, b) = toy_problem(8, 0.1);
+        let bad_a = &a[..4];
+        let err = sinkhorn_ot(&kernel, &cost, bad_a, &b, 0.1, &SinkhornParams::default());
+        assert!(matches!(err, Err(Error::Dimension(_))));
+    }
+
+    #[test]
+    fn negative_marginal_rejected() {
+        let (kernel, cost, mut a, b) = toy_problem(8, 0.1);
+        a[0] = -0.1;
+        let err = sinkhorn_ot(&kernel, &cost, &a, &b, 0.1, &SinkhornParams::default());
+        assert!(matches!(err, Err(Error::InvalidParam(_))));
+    }
+
+    #[test]
+    fn strict_mode_errors_when_capped() {
+        let (kernel, _cost, a, b) = toy_problem(32, 0.001);
+        let params = SinkhornParams { delta: 0.0, max_iters: 3, strict: true };
+        let err = sinkhorn_scalings(&kernel, &a, &b, 1.0, &params);
+        assert!(matches!(err, Err(Error::NotConverged { .. })));
+    }
+
+    #[test]
+    fn safe_div_guards() {
+        assert_eq!(safe_div(0.0, 0.0), 0.0);
+        assert!(safe_div(1.0, 0.0).is_finite());
+        assert_eq!(safe_div(6.0, 3.0), 2.0);
+    }
+}

@@ -1,0 +1,164 @@
+//! Algorithm 2 — the unbalanced Sinkhorn algorithm (Chizat et al.,
+//! 2018b): scaling updates raised to the power `ρ = λ/(λ+ε)`, which
+//! relaxes the marginal constraints through KL penalties.
+
+use super::sinkhorn::{sinkhorn_scalings, SinkhornParams};
+use super::{objective, SinkhornSolution};
+use crate::error::{Error, Result};
+use crate::linalg::Mat;
+
+/// Exponent `ρ = λ / (λ + ε)` of the unbalanced scaling update.
+#[inline]
+pub fn uot_rho(lambda: f64, eps: f64) -> f64 {
+    lambda / (lambda + eps)
+}
+
+/// Run Algorithm 2 and evaluate the entropic UOT objective (Eq. 10).
+///
+/// * `a`, `b` — arbitrary positive measures (total masses may differ).
+/// * `lambda` — marginal-relaxation weight; `λ → ∞` recovers Algorithm 1.
+pub fn sinkhorn_uot(
+    kernel: &Mat,
+    cost: &Mat,
+    a: &[f64],
+    b: &[f64],
+    lambda: f64,
+    eps: f64,
+    params: &SinkhornParams,
+) -> Result<SinkhornSolution> {
+    if lambda <= 0.0 || eps <= 0.0 {
+        return Err(Error::InvalidParam(format!(
+            "lambda ({lambda}) and eps ({eps}) must be positive"
+        )));
+    }
+    let rho = uot_rho(lambda, eps);
+    let (u, v, iterations, displacement, converged) =
+        sinkhorn_scalings(kernel, a, b, rho, params)?;
+    let objective =
+        objective::uot_objective_dense(kernel, cost, a, b, &u, &v, lambda, eps);
+    if !objective.is_finite() {
+        return Err(Error::Numerical(format!(
+            "UOT objective is not finite (lambda={lambda}, eps={eps})"
+        )));
+    }
+    Ok(SinkhornSolution { u, v, objective, iterations, displacement, converged })
+}
+
+/// The Wasserstein–Fisher–Rao distance `WFR_λ = UOT^{1/2}` (Section 2.2),
+/// computed from an already-evaluated UOT objective. Clamps tiny negative
+/// values caused by entropic bias.
+#[inline]
+pub fn wfr_distance_from_objective(uot_objective: f64) -> f64 {
+    uot_objective.max(0.0).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ot::cost::{gibbs_kernel, sq_euclidean_cost, wfr_cost};
+    use crate::ot::objective::plan_marginals_dense;
+    use crate::ot::sinkhorn::sinkhorn_ot;
+
+    fn measures(n: usize, mass_a: f64, mass_b: f64) -> (Vec<f64>, Vec<f64>, Vec<Vec<f64>>) {
+        let pts: Vec<Vec<f64>> = (0..n)
+            .map(|i| vec![(i as f64 * 0.618).fract(), (i as f64 * 0.383).fract()])
+            .collect();
+        let raw_a: Vec<f64> = (0..n).map(|i| 1.0 + (i % 5) as f64).collect();
+        let raw_b: Vec<f64> = (0..n).map(|i| 1.5 + ((i + 2) % 3) as f64).collect();
+        let sa: f64 = raw_a.iter().sum();
+        let sb: f64 = raw_b.iter().sum();
+        (
+            raw_a.iter().map(|x| x / sa * mass_a).collect(),
+            raw_b.iter().map(|x| x / sb * mass_b).collect(),
+            pts,
+        )
+    }
+
+    #[test]
+    fn handles_unbalanced_masses() {
+        // Paper setting: total masses 5 and 3, eps = lambda = 0.1.
+        let (a, b, pts) = measures(24, 5.0, 3.0);
+        let cost = sq_euclidean_cost(&pts, &pts);
+        let kernel = gibbs_kernel(&cost, 0.1);
+        let sol =
+            sinkhorn_uot(&kernel, &cost, &a, &b, 0.1, 0.1, &SinkhornParams::default()).unwrap();
+        assert!(sol.converged);
+        assert!(sol.objective.is_finite());
+        // The plan carries positive, finite mass. (With eps comparable to
+        // lambda the entropy term spreads mass over the n^2 support, so
+        // the total can exceed the input masses — that is the correct
+        // entropic-UOT behaviour, not a bug.)
+        let (row, _) = plan_marginals_dense(&kernel, &sol.u, &sol.v);
+        let mass: f64 = row.iter().sum();
+        assert!(mass > 0.0 && mass.is_finite(), "plan mass {mass}");
+    }
+
+    #[test]
+    fn degenerates_to_ot_for_large_lambda() {
+        // Section 2.2: lambda -> inf recovers Algorithm 1 on balanced input.
+        let (a, b, pts) = measures(16, 1.0, 1.0);
+        let cost = sq_euclidean_cost(&pts, &pts);
+        let eps = 0.1;
+        let kernel = gibbs_kernel(&cost, eps);
+        let params = SinkhornParams { delta: 1e-10, max_iters: 5000, strict: false };
+        let uot =
+            sinkhorn_uot(&kernel, &cost, &a, &b, 1e7, eps, &params).unwrap();
+        let ot = sinkhorn_ot(&kernel, &cost, &a, &b, eps, &params).unwrap();
+        assert!(
+            (uot.objective - ot.objective).abs() < 1e-3,
+            "uot {} vs ot {}",
+            uot.objective,
+            ot.objective
+        );
+    }
+
+    #[test]
+    fn large_lambda_mass_approaches_geometric_compromise() {
+        // For mismatched masses m_a, m_b and lambda >> eps, the optimal
+        // plan mass approaches sqrt(m_a * m_b) (the KL-balanced
+        // compromise); for lambda << eps the entropy term dominates and
+        // the plan mass blows up past the inputs.
+        let (a, b, pts) = measures(20, 2.0, 1.0);
+        let cost = sq_euclidean_cost(&pts, &pts);
+        let kernel = gibbs_kernel(&cost, 0.1);
+        let params = SinkhornParams { delta: 1e-9, max_iters: 5000, strict: false };
+        let mass_for = |lam: f64| {
+            let sol = sinkhorn_uot(&kernel, &cost, &a, &b, lam, 0.1, &params).unwrap();
+            let (row, _) = plan_marginals_dense(&kernel, &sol.u, &sol.v);
+            row.iter().sum::<f64>()
+        };
+        let small = mass_for(0.05);
+        let large = mass_for(20.0);
+        let geo = (2.0f64 * 1.0).sqrt();
+        assert!(small > large, "small-lambda mass {small} vs large {large}");
+        assert!((large - geo).abs() < 0.25, "mass {large} vs geometric {geo}");
+    }
+
+    #[test]
+    fn wfr_kernel_workflow_converges() {
+        // Sparse WFR kernel (small eta blocks long-range transport).
+        let (a, b, pts) = measures(24, 5.0, 3.0);
+        let cost = wfr_cost(&pts, &pts, 0.15);
+        let kernel = cost.map(|c| if c.is_infinite() { 0.0 } else { (-c / 0.1).exp() });
+        let sol =
+            sinkhorn_uot(&kernel, &cost, &a, &b, 1.0, 0.1, &SinkhornParams::default()).unwrap();
+        assert!(sol.objective.is_finite());
+        let wfr = wfr_distance_from_objective(sol.objective);
+        assert!(wfr >= 0.0);
+    }
+
+    #[test]
+    fn rejects_nonpositive_params() {
+        let (a, b, pts) = measures(8, 1.0, 1.0);
+        let cost = sq_euclidean_cost(&pts, &pts);
+        let kernel = gibbs_kernel(&cost, 0.1);
+        assert!(sinkhorn_uot(&kernel, &cost, &a, &b, 0.0, 0.1, &SinkhornParams::default()).is_err());
+        assert!(sinkhorn_uot(&kernel, &cost, &a, &b, 1.0, -0.1, &SinkhornParams::default()).is_err());
+    }
+
+    #[test]
+    fn rho_limits() {
+        assert!((uot_rho(1e12, 0.1) - 1.0).abs() < 1e-10);
+        assert!(uot_rho(0.1, 0.1) < 1.0);
+    }
+}

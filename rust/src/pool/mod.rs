@@ -1,0 +1,198 @@
+//! From-scratch data-parallel helpers (the build image has no `rayon`).
+//!
+//! Built on `std::thread::scope` (stable since 1.63): work is split into
+//! contiguous chunks, one per worker, so there is no work-stealing
+//! overhead — appropriate for the embarrassingly parallel loops in this
+//! crate (row-blocked matvecs, per-replication experiment sweeps,
+//! element-wise Poisson sampling).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of worker threads to use (respects `SPAR_SINK_THREADS`,
+/// defaults to available parallelism, minimum 1).
+pub fn num_threads() -> usize {
+    if let Ok(v) = std::env::var("SPAR_SINK_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Run `f(start, end)` over disjoint chunks of `[0, len)` in parallel.
+///
+/// `f` must be `Sync` (shared by reference across workers). Chunks are
+/// contiguous, sized `ceil(len / workers)`.
+pub fn parallel_chunks<F>(len: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    if len == 0 {
+        return;
+    }
+    let workers = num_threads().min(len);
+    if workers <= 1 || len < 2 {
+        f(0, len);
+        return;
+    }
+    let chunk = len.div_ceil(workers);
+    std::thread::scope(|scope| {
+        for w in 0..workers {
+            let start = w * chunk;
+            let end = ((w + 1) * chunk).min(len);
+            if start >= end {
+                break;
+            }
+            let f = &f;
+            scope.spawn(move || f(start, end));
+        }
+    });
+}
+
+/// Parallel map over indices `0..len`, collecting results in order.
+///
+/// Each index is evaluated exactly once; results are written into a
+/// pre-allocated vector through disjoint chunk views.
+pub fn parallel_map<T, F>(len: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out = vec![T::default(); len];
+    {
+        let out_ptr = SendPtr(out.as_mut_ptr());
+        parallel_chunks(len, |start, end| {
+            // SAFETY: chunks are disjoint, each index written exactly once,
+            // and the vector outlives the scope.
+            let p = out_ptr;
+            for i in start..end {
+                unsafe { *p.0.add(i) = f(i) };
+            }
+        });
+    }
+    out
+}
+
+struct SendPtr<T>(*mut T);
+impl<T> Clone for SendPtr<T> { fn clone(&self) -> Self { *self } }
+impl<T> Copy for SendPtr<T> {}
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+/// Parallel fold: map each chunk to a partial value, then reduce the
+/// partials sequentially (deterministic reduce order by chunk index).
+pub fn parallel_fold<T, FM, FR>(len: usize, map_chunk: FM, reduce: FR, init: T) -> T
+where
+    T: Send,
+    FM: Fn(usize, usize) -> T + Sync,
+    FR: Fn(T, T) -> T,
+{
+    let workers = num_threads().min(len.max(1));
+    if workers <= 1 || len < 2 {
+        return reduce(init, map_chunk(0, len));
+    }
+    let chunk = len.div_ceil(workers);
+    let partials: Mutex<Vec<(usize, T)>> = Mutex::new(Vec::with_capacity(workers));
+    std::thread::scope(|scope| {
+        for w in 0..workers {
+            let start = w * chunk;
+            let end = ((w + 1) * chunk).min(len);
+            if start >= end {
+                break;
+            }
+            let map_chunk = &map_chunk;
+            let partials = &partials;
+            scope.spawn(move || {
+                let v = map_chunk(start, end);
+                partials.lock().unwrap().push((w, v));
+            });
+        }
+    });
+    let mut parts = partials.into_inner().unwrap();
+    parts.sort_by_key(|(w, _)| *w);
+    parts.into_iter().fold(init, |acc, (_, v)| reduce(acc, v))
+}
+
+/// A simple dynamic work queue: workers pull indices until exhausted.
+/// Useful when per-item cost is highly variable (e.g. per-video solves).
+pub fn parallel_for_dynamic<F>(len: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let workers = num_threads().min(len.max(1));
+    if workers <= 1 || len < 2 {
+        for i in 0..len {
+            f(i);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let f = &f;
+            let next = &next;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= len {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn chunks_cover_range_exactly_once() {
+        let hits: Vec<AtomicU64> = (0..1000).map(|_| AtomicU64::new(0)).collect();
+        parallel_chunks(1000, |s, e| {
+            for i in s..e {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let out = parallel_map(257, |i| i * i);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn fold_sums_correctly() {
+        let total = parallel_fold(
+            10_001,
+            |s, e| (s..e).map(|i| i as u64).sum::<u64>(),
+            |a, b| a + b,
+            0u64,
+        );
+        assert_eq!(total, 10_000 * 10_001 / 2);
+    }
+
+    #[test]
+    fn dynamic_covers_all() {
+        let hits: Vec<AtomicU64> = (0..97).map(|_| AtomicU64::new(0)).collect();
+        parallel_for_dynamic(97, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn empty_and_single() {
+        parallel_chunks(0, |_, _| panic!("must not run"));
+        let out = parallel_map(1, |i| i + 1);
+        assert_eq!(out, vec![1]);
+    }
+}

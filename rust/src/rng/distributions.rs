@@ -1,0 +1,260 @@
+//! Continuous and discrete distributions on top of the xoshiro core.
+//!
+//! Everything the paper's workloads need: Gaussian histograms (C1/C2),
+//! Student-t histograms (C3), gamma/chi-square (for t-variates), and
+//! weighted discrete sampling (for the with-replacement sampling
+//! ablation).
+
+use super::Rng;
+
+impl Rng {
+    /// Standard normal via Box–Muller (caches the second variate).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.take_cached_normal() {
+            return z;
+        }
+        // Avoid u1 == 0 (log of zero).
+        let mut u1 = self.uniform();
+        while u1 <= f64::MIN_POSITIVE {
+            u1 = self.uniform();
+        }
+        let u2 = self.uniform();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        let z0 = r * theta.cos();
+        let z1 = r * theta.sin();
+        self.set_cached_normal(z1);
+        z0
+    }
+
+    /// Normal with given mean and standard deviation.
+    #[inline]
+    pub fn normal_ms(&mut self, mean: f64, sd: f64) -> f64 {
+        mean + sd * self.normal()
+    }
+
+    /// Gamma(shape k, scale 1) via Marsaglia–Tsang (with the k < 1 boost).
+    pub fn gamma(&mut self, shape: f64) -> f64 {
+        assert!(shape > 0.0, "gamma shape must be positive");
+        if shape < 1.0 {
+            // Boosting: X_k = X_{k+1} * U^{1/k}.
+            let g = self.gamma(shape + 1.0);
+            let u = self.uniform().max(f64::MIN_POSITIVE);
+            return g * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = (1.0 + c * x).powi(3);
+            if v <= 0.0 {
+                continue;
+            }
+            let u = self.uniform();
+            let x2 = x * x;
+            if u < 1.0 - 0.0331 * x2 * x2 {
+                return d * v;
+            }
+            if u.ln() < 0.5 * x2 + d * (1.0 - v + v.ln()) {
+                return d * v;
+            }
+        }
+    }
+
+    /// Chi-square with `df` degrees of freedom (gamma(df/2, 2)).
+    #[inline]
+    pub fn chi_square(&mut self, df: f64) -> f64 {
+        2.0 * self.gamma(df / 2.0)
+    }
+
+    /// Student-t with `df` degrees of freedom: N / sqrt(Chi2_df / df).
+    pub fn student_t(&mut self, df: f64) -> f64 {
+        let z = self.normal();
+        let c = self.chi_square(df).max(f64::MIN_POSITIVE);
+        z / (c / df).sqrt()
+    }
+
+    /// Location/scale Student-t (the paper's `t5(mu, sigma^2)` notation:
+    /// `sigma2` is the squared scale).
+    #[inline]
+    pub fn student_t_ls(&mut self, df: f64, mu: f64, sigma2: f64) -> f64 {
+        mu + sigma2.sqrt() * self.student_t(df)
+    }
+
+    /// Sample an index from unnormalized non-negative weights
+    /// (linear scan inversion — O(n); used in with-replacement ablation
+    /// and Greenkhorn tie-breaking tests).
+    pub fn weighted_choice(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0, "weighted_choice needs positive total weight");
+        let mut target = self.uniform() * total;
+        for (i, &w) in weights.iter().enumerate() {
+            target -= w;
+            if target <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+}
+
+/// Precomputed alias table for O(1) weighted sampling (Walker/Vose).
+///
+/// Used by the sampling-with-replacement ablation where s draws from an
+/// n²-sized distribution would make the O(n) linear scan the bottleneck.
+#[derive(Clone, Debug)]
+pub struct AliasTable {
+    prob: Vec<f64>,
+    alias: Vec<usize>,
+}
+
+impl AliasTable {
+    /// Build from unnormalized non-negative weights.
+    pub fn new(weights: &[f64]) -> Self {
+        let n = weights.len();
+        assert!(n > 0);
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0, "alias table needs positive total weight");
+        let scale = n as f64 / total;
+        let mut prob: Vec<f64> = weights.iter().map(|w| w * scale).collect();
+        let mut alias = vec![0usize; n];
+        let mut small: Vec<usize> = Vec::with_capacity(n);
+        let mut large: Vec<usize> = Vec::with_capacity(n);
+        for (i, &p) in prob.iter().enumerate() {
+            if p < 1.0 {
+                small.push(i);
+            } else {
+                large.push(i);
+            }
+        }
+        while let (Some(&s), Some(&l)) = (small.last(), large.last()) {
+            small.pop();
+            alias[s] = l;
+            prob[l] = (prob[l] + prob[s]) - 1.0;
+            if prob[l] < 1.0 {
+                large.pop();
+                small.push(l);
+            }
+        }
+        // Remaining entries are numerically 1.
+        for &i in small.iter().chain(large.iter()) {
+            prob[i] = 1.0;
+        }
+        AliasTable { prob, alias }
+    }
+
+    /// Draw one index.
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let i = rng.gen_range(self.prob.len());
+        if rng.uniform() < self.prob[i] {
+            i
+        } else {
+            self.alias[i]
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.prob.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.prob.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn moments(xs: &[f64]) -> (f64, f64) {
+        let n = xs.len() as f64;
+        let mean = xs.iter().sum::<f64>() / n;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n;
+        (mean, var)
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::seed_from(17);
+        let xs: Vec<f64> = (0..200_000).map(|_| r.normal()).collect();
+        let (m, v) = moments(&xs);
+        assert!(m.abs() < 0.02, "mean {m}");
+        assert!((v - 1.0).abs() < 0.03, "var {v}");
+    }
+
+    #[test]
+    fn gamma_moments() {
+        let mut r = Rng::seed_from(19);
+        let shape = 3.5;
+        let xs: Vec<f64> = (0..200_000).map(|_| r.gamma(shape)).collect();
+        let (m, v) = moments(&xs);
+        assert!((m - shape).abs() < 0.05, "mean {m}");
+        assert!((v - shape).abs() < 0.15, "var {v}");
+    }
+
+    #[test]
+    fn gamma_small_shape() {
+        let mut r = Rng::seed_from(23);
+        let shape = 0.4;
+        let xs: Vec<f64> = (0..200_000).map(|_| r.gamma(shape)).collect();
+        let (m, _) = moments(&xs);
+        assert!((m - shape).abs() < 0.02, "mean {m}");
+        assert!(xs.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn chi_square_mean_is_df() {
+        let mut r = Rng::seed_from(29);
+        let xs: Vec<f64> = (0..100_000).map(|_| r.chi_square(5.0)).collect();
+        let (m, _) = moments(&xs);
+        assert!((m - 5.0).abs() < 0.1, "mean {m}");
+    }
+
+    #[test]
+    fn student_t_symmetric_heavy_tails() {
+        let mut r = Rng::seed_from(31);
+        let xs: Vec<f64> = (0..200_000).map(|_| r.student_t(5.0)).collect();
+        let (m, v) = moments(&xs);
+        assert!(m.abs() < 0.03, "mean {m}");
+        // Var of t_5 = 5/3.
+        assert!((v - 5.0 / 3.0).abs() < 0.2, "var {v}");
+    }
+
+    #[test]
+    fn weighted_choice_frequencies() {
+        let mut r = Rng::seed_from(37);
+        let w = [1.0, 2.0, 7.0];
+        let mut counts = [0usize; 3];
+        let n = 100_000;
+        for _ in 0..n {
+            counts[r.weighted_choice(&w)] += 1;
+        }
+        let f2 = counts[2] as f64 / n as f64;
+        assert!((f2 - 0.7).abs() < 0.01, "freq {f2}");
+    }
+
+    #[test]
+    fn alias_table_matches_weights() {
+        let mut r = Rng::seed_from(41);
+        let w = [0.5, 0.0, 3.0, 1.5];
+        let table = AliasTable::new(&w);
+        let mut counts = [0usize; 4];
+        let n = 200_000;
+        for _ in 0..n {
+            counts[table.sample(&mut r)] += 1;
+        }
+        assert_eq!(counts[1], 0);
+        let f2 = counts[2] as f64 / n as f64;
+        assert!((f2 - 0.6).abs() < 0.01, "freq {f2}");
+    }
+
+    #[test]
+    fn alias_table_single_element() {
+        let mut r = Rng::seed_from(43);
+        let table = AliasTable::new(&[2.0]);
+        for _ in 0..10 {
+            assert_eq!(table.sample(&mut r), 0);
+        }
+    }
+}

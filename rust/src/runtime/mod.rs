@@ -1,0 +1,28 @@
+//! PJRT runtime — loads the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust request path.
+//!
+//! Interchange is HLO *text* (`artifacts/*.hlo.txt`): serialized
+//! `HloModuleProto`s from jax ≥ 0.5 carry 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids.
+//!
+//! Each artifact is compiled once per process and cached in the
+//! [`ArtifactRegistry`]; [`DenseSinkhornRuntime`] then drives the outer
+//! convergence loop over the fused `sinkhorn_block` (10 scaling
+//! iterations per call, see `model.BLOCK_ITERS`) and evaluates
+//! objectives on-device. Requests whose size is not on the compiled
+//! menu are zero-padded up to the next menu size (padded support points
+//! carry ~0 mass and a diagonal kernel entry so the scaling updates stay
+//! finite; validated in `tests/runtime_integration.rs`).
+
+mod registry;
+mod sinkhorn;
+
+pub use registry::{manifest_path, ArtifactRegistry, Entry};
+pub use sinkhorn::{DenseSinkhornRuntime, RuntimeSolution};
+
+/// Default artifact directory: `$SPAR_SINK_ARTIFACTS` or `./artifacts`.
+pub fn default_artifact_dir() -> std::path::PathBuf {
+    std::env::var("SPAR_SINK_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}

@@ -1,0 +1,226 @@
+//! Artifact discovery and compilation cache.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// An AOT entry point name.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Entry {
+    SinkhornBlock,
+    OtObjective,
+    UotObjective,
+    KernelFromCost,
+}
+
+impl Entry {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Entry::SinkhornBlock => "sinkhorn_block",
+            Entry::OtObjective => "ot_objective",
+            Entry::UotObjective => "uot_objective",
+            Entry::KernelFromCost => "kernel_from_cost",
+        }
+    }
+
+    fn from_name(s: &str) -> Option<Entry> {
+        match s {
+            "sinkhorn_block" => Some(Entry::SinkhornBlock),
+            "ot_objective" => Some(Entry::OtObjective),
+            "uot_objective" => Some(Entry::UotObjective),
+            "kernel_from_cost" => Some(Entry::KernelFromCost),
+            _ => None,
+        }
+    }
+}
+
+/// Path to the manifest inside an artifact directory.
+pub fn manifest_path(dir: &Path) -> PathBuf {
+    dir.join("manifest.json")
+}
+
+struct ManifestRecord {
+    entry: Entry,
+    n: usize,
+    file: PathBuf,
+}
+
+/// Compiles artifacts on demand and caches the executables.
+pub struct ArtifactRegistry {
+    client: xla::PjRtClient,
+    records: Vec<ManifestRecord>,
+    /// Fused scaling iterations per `sinkhorn_block` call.
+    block_iters: usize,
+    cache: Mutex<HashMap<(Entry, usize), std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl ArtifactRegistry {
+    /// Open an artifact directory (reads `manifest.json`, creates the
+    /// PJRT CPU client; compilation happens lazily per entry/size).
+    pub fn open(dir: &Path) -> Result<Self> {
+        let manifest_file = manifest_path(dir);
+        let text = std::fs::read_to_string(&manifest_file).map_err(|e| {
+            Error::Runtime(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                manifest_file.display()
+            ))
+        })?;
+        let manifest =
+            Json::parse(&text).map_err(|e| Error::Runtime(format!("bad manifest: {e}")))?;
+        let block_iters = manifest
+            .get("block_iters")
+            .and_then(|j| j.as_f64())
+            .ok_or_else(|| Error::Runtime("manifest missing block_iters".into()))?
+            as usize;
+        let mut records = Vec::new();
+        for item in manifest
+            .get("artifacts")
+            .ok_or_else(|| Error::Runtime("manifest missing artifacts".into()))?
+            .items()
+        {
+            let entry_name = item
+                .get("entry")
+                .and_then(|j| j.as_str())
+                .ok_or_else(|| Error::Runtime("artifact missing entry".into()))?;
+            let Some(entry) = Entry::from_name(entry_name) else {
+                continue; // forward-compatible: skip unknown entries
+            };
+            let n = item
+                .get("n")
+                .and_then(|j| j.as_f64())
+                .ok_or_else(|| Error::Runtime("artifact missing n".into()))?
+                as usize;
+            let file = item
+                .get("file")
+                .and_then(|j| j.as_str())
+                .ok_or_else(|| Error::Runtime("artifact missing file".into()))?;
+            records.push(ManifestRecord { entry, n, file: dir.join(file) });
+        }
+        if records.is_empty() {
+            return Err(Error::Runtime("manifest lists no usable artifacts".into()));
+        }
+        let client = xla::PjRtClient::cpu()?;
+        Ok(ArtifactRegistry { client, records, block_iters, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Scaling iterations fused into one `sinkhorn_block` execution.
+    pub fn block_iters(&self) -> usize {
+        self.block_iters
+    }
+
+    /// Sizes available for an entry, ascending.
+    pub fn sizes(&self, entry: Entry) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .records
+            .iter()
+            .filter(|r| r.entry == entry)
+            .map(|r| r.n)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Smallest compiled size ≥ `n` for the entry.
+    pub fn padded_size(&self, entry: Entry, n: usize) -> Result<usize> {
+        self.sizes(entry)
+            .into_iter()
+            .find(|&m| m >= n)
+            .ok_or_else(|| {
+                Error::Runtime(format!(
+                    "no artifact of entry {} compiled for n >= {n} (menu: {:?})",
+                    entry.name(),
+                    self.sizes(entry)
+                ))
+            })
+    }
+
+    /// Get (compiling if needed) the executable for (entry, n-exact).
+    pub fn executable(
+        &self,
+        entry: Entry,
+        n: usize,
+    ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(exe) = cache.get(&(entry, n)) {
+                return Ok(exe.clone());
+            }
+        }
+        let record = self
+            .records
+            .iter()
+            .find(|r| r.entry == entry && r.n == n)
+            .ok_or_else(|| {
+                Error::Runtime(format!("artifact {}_n{n} not in manifest", entry.name()))
+            })?;
+        let path_str = record.file.to_string_lossy().to_string();
+        let proto = xla::HloModuleProto::from_text_file(&path_str)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(self.client.compile(&comp)?);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert((entry, n), exe.clone());
+        Ok(exe)
+    }
+
+    /// The underlying PJRT client (platform name etc.).
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = crate::runtime::default_artifact_dir();
+        if manifest_path(&dir).exists() {
+            Some(dir)
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn open_registry_and_list_sizes() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let reg = ArtifactRegistry::open(&dir).unwrap();
+        let sizes = reg.sizes(Entry::SinkhornBlock);
+        assert!(!sizes.is_empty());
+        assert!(sizes.windows(2).all(|w| w[0] < w[1]));
+        assert!(reg.block_iters() > 0);
+    }
+
+    #[test]
+    fn padded_size_selects_next_menu_size() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let reg = ArtifactRegistry::open(&dir).unwrap();
+        let sizes = reg.sizes(Entry::SinkhornBlock);
+        let smallest = sizes[0];
+        assert_eq!(reg.padded_size(Entry::SinkhornBlock, 1).unwrap(), smallest);
+        assert_eq!(
+            reg.padded_size(Entry::SinkhornBlock, smallest).unwrap(),
+            smallest
+        );
+        let too_big = sizes.last().unwrap() + 1;
+        assert!(reg.padded_size(Entry::SinkhornBlock, too_big).is_err());
+    }
+
+    #[test]
+    fn missing_dir_is_a_clean_error() {
+        let err = ArtifactRegistry::open(Path::new("/nonexistent-artifacts"));
+        assert!(matches!(err, Err(Error::Runtime(_))));
+    }
+}

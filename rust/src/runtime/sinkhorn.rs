@@ -1,0 +1,235 @@
+//! Dense Sinkhorn driven through the AOT artifacts: the Rust side owns
+//! the convergence loop; each `sinkhorn_block` execution advances the
+//! scalings by `block_iters` fused iterations (L1 Pallas matvec+scale
+//! kernels inside), and the objective is evaluated on-device.
+
+use std::sync::Arc;
+
+use super::registry::{ArtifactRegistry, Entry};
+use crate::error::{Error, Result};
+use crate::linalg::Mat;
+use crate::ot::uot::uot_rho;
+
+/// Result of a runtime-backed solve.
+#[derive(Clone, Debug)]
+pub struct RuntimeSolution {
+    pub u: Vec<f64>,
+    pub v: Vec<f64>,
+    pub objective: f64,
+    /// Total scaling iterations (multiples of `block_iters`).
+    pub iterations: usize,
+    pub displacement: f64,
+    pub converged: bool,
+}
+
+/// Mass assigned to padded support points: small enough to be
+/// negligible in objectives, large enough to keep `a / (K v)` finite.
+const PAD_MASS: f32 = 1e-20;
+
+/// Dense entropic OT/UOT solver executing on the PJRT runtime.
+pub struct DenseSinkhornRuntime {
+    registry: Arc<ArtifactRegistry>,
+}
+
+impl DenseSinkhornRuntime {
+    pub fn new(registry: Arc<ArtifactRegistry>) -> Self {
+        DenseSinkhornRuntime { registry }
+    }
+
+    pub fn registry(&self) -> &ArtifactRegistry {
+        &self.registry
+    }
+
+    /// Solve entropic OT (Algorithm 1) on-device and evaluate Eq. 6.
+    pub fn solve_ot(
+        &self,
+        kernel: &Mat,
+        cost: &Mat,
+        a: &[f64],
+        b: &[f64],
+        eps: f64,
+        delta: f64,
+        max_iters: usize,
+    ) -> Result<RuntimeSolution> {
+        self.solve(kernel, cost, a, b, 1.0, ObjectiveKind::Ot { eps }, delta, max_iters)
+    }
+
+    /// Solve entropic UOT (Algorithm 2) on-device and evaluate Eq. 10.
+    #[allow(clippy::too_many_arguments)]
+    pub fn solve_uot(
+        &self,
+        kernel: &Mat,
+        cost: &Mat,
+        a: &[f64],
+        b: &[f64],
+        lambda: f64,
+        eps: f64,
+        delta: f64,
+        max_iters: usize,
+    ) -> Result<RuntimeSolution> {
+        self.solve(
+            kernel,
+            cost,
+            a,
+            b,
+            uot_rho(lambda, eps),
+            ObjectiveKind::Uot { lambda, eps },
+            delta,
+            max_iters,
+        )
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn solve(
+        &self,
+        kernel: &Mat,
+        cost: &Mat,
+        a: &[f64],
+        b: &[f64],
+        rho: f64,
+        objective: ObjectiveKind,
+        delta: f64,
+        max_iters: usize,
+    ) -> Result<RuntimeSolution> {
+        let n = a.len();
+        if kernel.rows() != n || kernel.cols() != n || b.len() != n {
+            return Err(Error::Dimension(
+                "runtime solver requires square kernel with matching marginals".into(),
+            ));
+        }
+        let np = self.registry.padded_size(Entry::SinkhornBlock, n)?;
+        let block_iters = self.registry.block_iters();
+        let block_exe = self.registry.executable(Entry::SinkhornBlock, np)?;
+
+        // Padded f32 buffers. Padded points get PAD_MASS marginals and a
+        // unit diagonal kernel entry so their scalings stay finite.
+        let kbuf = pad_matrix(kernel, n, np, true);
+        let abuf = pad_vector(a, n, np);
+        let bbuf = pad_vector(b, n, np);
+        let mut u: Vec<f32> = vec![1.0; np];
+        let mut v: Vec<f32> = vec![1.0; np];
+
+        let k_lit = literal_matrix(&kbuf, np)?;
+        let a_lit = literal_col(&abuf)?;
+        let b_lit = literal_col(&bbuf)?;
+        let rho_lit = xla::Literal::scalar(rho as f32);
+
+        let mut iterations = 0;
+        let mut displacement = f64::INFINITY;
+        let mut converged = false;
+        while iterations < max_iters {
+            let u_lit = literal_col(&u)?;
+            let v_lit = literal_col(&v)?;
+            let result = block_exe
+                .execute::<xla::Literal>(&[
+                    k_lit.clone(),
+                    a_lit.clone(),
+                    b_lit.clone(),
+                    u_lit,
+                    v_lit,
+                    rho_lit.clone(),
+                ])?[0][0]
+                .to_literal_sync()?;
+            let (u_out, v_out, err) = result.to_tuple3()?;
+            u = u_out.to_vec::<f32>()?;
+            v = v_out.to_vec::<f32>()?;
+            displacement = err.to_vec::<f32>()?[0] as f64;
+            iterations += block_iters;
+            if !displacement.is_finite() {
+                return Err(Error::Numerical(format!(
+                    "runtime scalings diverged at iteration {iterations}"
+                )));
+            }
+            if displacement <= delta {
+                converged = true;
+                break;
+            }
+        }
+
+        // Objective on-device.
+        let cbuf = pad_matrix(cost, n, np, false);
+        let c_lit = literal_matrix(&cbuf, np)?;
+        let u_lit = literal_col(&u)?;
+        let v_lit = literal_col(&v)?;
+        let obj = match objective {
+            ObjectiveKind::Ot { eps } => {
+                let exe = self.registry.executable(Entry::OtObjective, np)?;
+                let out = exe.execute::<xla::Literal>(&[
+                    k_lit.clone(),
+                    c_lit,
+                    u_lit,
+                    v_lit,
+                    xla::Literal::scalar(eps as f32),
+                ])?[0][0]
+                    .to_literal_sync()?;
+                out.to_tuple1()?.to_vec::<f32>()?[0] as f64
+            }
+            ObjectiveKind::Uot { lambda, eps } => {
+                let exe = self.registry.executable(Entry::UotObjective, np)?;
+                let out = exe.execute::<xla::Literal>(&[
+                    k_lit.clone(),
+                    c_lit,
+                    a_lit.clone(),
+                    b_lit.clone(),
+                    u_lit,
+                    v_lit,
+                    xla::Literal::scalar(lambda as f32),
+                    xla::Literal::scalar(eps as f32),
+                ])?[0][0]
+                    .to_literal_sync()?;
+                out.to_tuple1()?.to_vec::<f32>()?[0] as f64
+            }
+        };
+        if !obj.is_finite() {
+            return Err(Error::Numerical("runtime objective is not finite".into()));
+        }
+        Ok(RuntimeSolution {
+            u: u[..n].iter().map(|&x| x as f64).collect(),
+            v: v[..n].iter().map(|&x| x as f64).collect(),
+            objective: obj,
+            iterations,
+            displacement,
+            converged,
+        })
+    }
+}
+
+enum ObjectiveKind {
+    Ot { eps: f64 },
+    Uot { lambda: f64, eps: f64 },
+}
+
+/// Pad an n×n matrix to np×np f32. `diag_pad` puts 1.0 on padded
+/// diagonal entries (kernel) vs 0.0 (cost).
+fn pad_matrix(m: &Mat, n: usize, np: usize, diag_pad: bool) -> Vec<f32> {
+    let mut out = vec![0.0f32; np * np];
+    for i in 0..n {
+        let row = m.row(i);
+        for j in 0..n {
+            let v = row[j];
+            out[i * np + j] = if v.is_finite() { v as f32 } else { 0.0 };
+        }
+    }
+    if diag_pad {
+        for i in n..np {
+            out[i * np + i] = 1.0;
+        }
+    }
+    out
+}
+
+fn pad_vector(x: &[f64], n: usize, np: usize) -> Vec<f32> {
+    let mut out = vec![PAD_MASS; np];
+    for i in 0..n {
+        out[i] = x[i] as f32;
+    }
+    out
+}
+
+fn literal_matrix(buf: &[f32], np: usize) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(buf).reshape(&[np as i64, np as i64])?)
+}
+
+fn literal_col(buf: &[f32]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(buf).reshape(&[buf.len() as i64, 1])?)
+}

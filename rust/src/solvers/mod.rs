@@ -1,0 +1,20 @@
+//! Accelerated Sinkhorn variants: the paper's Spar-Sink / Spar-IBP and
+//! every baseline in the evaluation section.
+//!
+//! | Solver | Paper | Per-iteration cost |
+//! |---|---|---|
+//! | [`spar_sink`] | Alg. 3-4 (this paper) | O(s), s = Õ(n) |
+//! | [`rand_sink`] | uniform-sampling ablation | O(s) |
+//! | [`nys_sink`] | Altschuler et al. 2019 (+ robust variant, Le et al. 2021) | O(nr) |
+//! | [`greenkhorn`] | Altschuler et al. 2017 | O(n) per greedy update |
+//! | [`screenkhorn`] | Alaya et al. 2019 | O((n/κ)²) |
+//! | [`spar_ibp`] | Alg. 6 (this paper) | O(ms) |
+
+pub mod greenkhorn;
+pub mod nys_sink;
+pub mod proximal;
+pub mod rand_sink;
+pub mod screenkhorn;
+pub mod spar_ibp;
+pub mod spar_sink;
+pub mod sparse_loop;

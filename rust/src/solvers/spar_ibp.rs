@@ -1,0 +1,146 @@
+//! Algorithm 6 — Spar-IBP: importance-sparsified iterative Bregman
+//! projection for fixed-support Wasserstein barycenters.
+//!
+//! Each kernel `K_k` is Poisson-sparsified with the probability of
+//! Appendix A.2: `p_{k,ij} = √(b_{k,j}) / (n Σ_j √(b_{k,j}))` — the
+//! unknown barycenter is replaced by the uniform initial `q⁽⁰⁾ = 1/n`,
+//! making row probabilities constant. The sparse sketches then drive the
+//! same IBP loop (Algorithm 5) through the `KernelOp` abstraction.
+
+use crate::error::Result;
+use crate::linalg::Mat;
+use crate::ot::barycenter::{ibp_barycenter_with, BarycenterSolution};
+use crate::ot::sinkhorn::SinkhornParams;
+use crate::rng::Rng;
+use crate::sparse::{poisson_sparsify_with, CsrMatrix, SparsifyStats};
+
+/// Result with per-kernel sparsification stats.
+#[derive(Clone, Debug)]
+pub struct SparIbpSolution {
+    pub solution: BarycenterSolution,
+    pub stats: Vec<SparsifyStats>,
+}
+
+/// Sparsify one IBP kernel with the Appendix A.2 probability.
+pub fn sparsify_ibp_kernel(
+    kernel: &Mat,
+    b_k: &[f64],
+    s: f64,
+    rng: &mut Rng,
+) -> Result<(CsrMatrix, SparsifyStats)> {
+    let n = kernel.rows();
+    let sqrt_b: Vec<f64> = b_k.iter().map(|x| x.sqrt()).collect();
+    let total = n as f64 * sqrt_b.iter().sum::<f64>();
+    poisson_sparsify_with(
+        n,
+        kernel.cols(),
+        |i, j| kernel.get(i, j),
+        |_, _| 0.0, // IBP does not need per-entry costs
+        |_, j| sqrt_b[j],
+        total,
+        s,
+        1.0,
+        rng,
+    )
+}
+
+/// Run Spar-IBP (Algorithm 6): sparsify every kernel, then IBP.
+///
+/// `s` is the absolute expected sample budget per kernel (the paper
+/// sweeps s ∈ {5,10,15,20}·s₀(n)).
+pub fn spar_ibp(
+    kernels: &[Mat],
+    bs: &[Vec<f64>],
+    weights: &[f64],
+    s: f64,
+    params: &SinkhornParams,
+    rng: &mut Rng,
+) -> Result<SparIbpSolution> {
+    let mut sketches = Vec::with_capacity(kernels.len());
+    let mut stats = Vec::with_capacity(kernels.len());
+    for (k, kernel) in kernels.iter().enumerate() {
+        let (sk, st) = sparsify_ibp_kernel(kernel, &bs[k], s, rng)?;
+        sketches.push(sk);
+        stats.push(st);
+    }
+    let solution = ibp_barycenter_with(&sketches, bs, weights, params)?;
+    Ok(SparIbpSolution { solution, stats })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::l1_distance;
+    use crate::ot::barycenter::ibp_barycenter;
+    use crate::ot::cost::{gibbs_kernel, sq_euclidean_cost};
+
+    fn setup(n: usize) -> (Vec<Mat>, Vec<Vec<f64>>, Vec<f64>) {
+        let pts: Vec<Vec<f64>> = (0..n).map(|i| vec![i as f64 / (n - 1) as f64]).collect();
+        let cost = sq_euclidean_cost(&pts, &pts);
+        let kernel = gibbs_kernel(&cost, 0.01);
+        let hist = |mu: f64, s2: f64| -> Vec<f64> {
+            let w: Vec<f64> =
+                pts.iter().map(|p| (-(p[0] - mu).powi(2) / (2.0 * s2)).exp() + 1e-4).collect();
+            let s: f64 = w.iter().sum();
+            w.iter().map(|x| x / s).collect()
+        };
+        let bs = vec![hist(0.2, 0.003), hist(0.5, 0.004), hist(0.8, 0.003)];
+        let kernels = vec![kernel.clone(), kernel.clone(), kernel];
+        (kernels, bs, vec![1.0 / 3.0; 3])
+    }
+
+    #[test]
+    fn approximates_ibp_barycenter() {
+        let n = 64;
+        let (kernels, bs, w) = setup(n);
+        let params = SinkhornParams { delta: 1e-8, max_iters: 2000, strict: false };
+        let exact = ibp_barycenter(&kernels, &bs, &w, &params).unwrap();
+        let mut rng = Rng::seed_from(77);
+        let budget = 40.0 * crate::metrics::s0(n);
+        let approx = spar_ibp(&kernels, &bs, &w, budget, &params, &mut rng).unwrap();
+        // The sketched geometric-mean update does not renormalize, so
+        // compare shapes after normalization (the fig11 harness reports
+        // the same normalized L1 error).
+        let mass: f64 = approx.solution.q.iter().sum();
+        assert!(mass.is_finite() && mass > 0.0);
+        let qn: Vec<f64> = approx.solution.q.iter().map(|x| x / mass).collect();
+        let err = l1_distance(&qn, &exact.q);
+        assert!(err < 0.5, "L1 error {err}");
+    }
+
+    #[test]
+    fn error_decreases_with_budget() {
+        let n = 64;
+        let (kernels, bs, w) = setup(n);
+        let params = SinkhornParams { delta: 1e-8, max_iters: 2000, strict: false };
+        let exact = ibp_barycenter(&kernels, &bs, &w, &params).unwrap();
+        let mut rng = Rng::seed_from(79);
+        let mut mean_err = |mult: f64| -> f64 {
+            let reps = 5;
+            let mut acc = 0.0;
+            for _ in 0..reps {
+                let budget = mult * crate::metrics::s0(n);
+                let approx = spar_ibp(&kernels, &bs, &w, budget, &params, &mut rng).unwrap();
+                acc += l1_distance(&approx.solution.q, &exact.q);
+            }
+            acc / reps as f64
+        };
+        let small = mean_err(5.0);
+        let large = mean_err(40.0);
+        assert!(large < small, "err did not decrease: {small} -> {large}");
+    }
+
+    #[test]
+    fn stats_budget_respected() {
+        let n = 48;
+        let (kernels, bs, w) = setup(n);
+        let mut rng = Rng::seed_from(83);
+        let budget = 10.0 * crate::metrics::s0(n);
+        let sol = spar_ibp(&kernels, &bs, &w, budget, &SinkhornParams::default(), &mut rng)
+            .unwrap();
+        assert_eq!(sol.stats.len(), 3);
+        for st in &sol.stats {
+            assert!((st.nnz as f64) <= budget * 1.25, "nnz {} vs {budget}", st.nnz);
+        }
+    }
+}

@@ -1,0 +1,297 @@
+//! Algorithms 3 & 4 — the Spar-Sink solver: importance-sparsify the
+//! kernel with the paper's probabilities (Eqs. 9 / 11), then run the
+//! sparse Sinkhorn loop and evaluate the objective over the sketch.
+
+use super::sparse_loop;
+use crate::error::Result;
+use crate::linalg::Mat;
+use crate::ot::sinkhorn::SinkhornParams;
+use crate::ot::uot::uot_rho;
+use crate::ot::SinkhornSolution;
+use crate::rng::Rng;
+use crate::sparse::{poisson_sparsify_ot, poisson_sparsify_uot, CsrMatrix, SparsifyStats};
+
+/// Parameters for the Spar-Sink estimators.
+#[derive(Clone, Debug)]
+pub struct SparSinkParams {
+    /// Sinkhorn loop parameters (δ, iteration cap).
+    pub sinkhorn: SinkhornParams,
+    /// Shrinkage θ mixing importance and uniform probabilities
+    /// (condition (ii) of Theorem 1); 1.0 = pure importance sampling,
+    /// matching the paper's experiments.
+    pub shrinkage: f64,
+}
+
+impl Default for SparSinkParams {
+    fn default() -> Self {
+        SparSinkParams { sinkhorn: SinkhornParams::default(), shrinkage: 1.0 }
+    }
+}
+
+/// Solution plus sparsification diagnostics.
+#[derive(Clone, Debug)]
+pub struct SparSolution {
+    pub solution: SinkhornSolution,
+    pub stats: SparsifyStats,
+}
+
+/// Algorithm 3 with oracles: `s_multiplier` is the budget in units of
+/// s₀(n) = 10⁻³ n log⁴ n when `s_absolute` is None.
+fn resolve_budget(n: usize, s_multiplier: f64) -> f64 {
+    s_multiplier * crate::metrics::s0(n)
+}
+
+/// Algorithm 3 (OT) from kernel/cost *oracles* — the kernel never needs
+/// to be materialized densely.
+pub fn spar_sink_ot_oracle(
+    kernel: impl Fn(usize, usize) -> f64 + Sync,
+    cost: impl Fn(usize, usize) -> f64 + Sync,
+    a: &[f64],
+    b: &[f64],
+    eps: f64,
+    s: f64,
+    params: &SparSinkParams,
+    rng: &mut Rng,
+) -> Result<SparSolution> {
+    let (sketch, stats) =
+        poisson_sparsify_ot(kernel, cost, a, b, s, params.shrinkage, rng)?;
+    solve_ot_on_sketch(&sketch, a, b, eps, params, stats)
+}
+
+/// Algorithm 3 (OT) from a dense cost matrix; `s_multiplier` is in units
+/// of s₀(n) (the paper sweeps s ∈ {2,4,8,16}·s₀(n)).
+pub fn spar_sink_ot(
+    cost: &Mat,
+    a: &[f64],
+    b: &[f64],
+    eps: f64,
+    s_multiplier: f64,
+    params: &SparSinkParams,
+    rng: &mut Rng,
+) -> Result<SparSolution> {
+    let s = resolve_budget(a.len(), s_multiplier);
+    spar_sink_ot_oracle(
+        |i, j| {
+            let c = cost.get(i, j);
+            if c.is_infinite() {
+                0.0
+            } else {
+                (-c / eps).exp()
+            }
+        },
+        |i, j| cost.get(i, j),
+        a,
+        b,
+        eps,
+        s,
+        params,
+        rng,
+    )
+}
+
+fn solve_ot_on_sketch(
+    sketch: &CsrMatrix,
+    a: &[f64],
+    b: &[f64],
+    eps: f64,
+    params: &SparSinkParams,
+    stats: SparsifyStats,
+) -> Result<SparSolution> {
+    let (u, v, iterations, displacement, converged) =
+        sparse_loop::sparse_scalings(sketch, a, b, 1.0, &params.sinkhorn)?;
+    let objective = sparse_loop::sparse_ot_objective(sketch, &u, &v, eps);
+    let solution =
+        sparse_loop::solution(u, v, objective, iterations, displacement, converged)?;
+    Ok(SparSolution { solution, stats })
+}
+
+/// Algorithm 4 (UOT) from kernel/cost oracles.
+#[allow(clippy::too_many_arguments)]
+pub fn spar_sink_uot_oracle(
+    kernel: impl Fn(usize, usize) -> f64 + Sync,
+    cost: impl Fn(usize, usize) -> f64 + Sync,
+    a: &[f64],
+    b: &[f64],
+    lambda: f64,
+    eps: f64,
+    s: f64,
+    params: &SparSinkParams,
+    rng: &mut Rng,
+) -> Result<SparSolution> {
+    let (sketch, stats) = poisson_sparsify_uot(
+        kernel,
+        cost,
+        a,
+        b,
+        lambda,
+        eps,
+        s,
+        params.shrinkage,
+        rng,
+    )?;
+    let rho = uot_rho(lambda, eps);
+    let (u, v, iterations, displacement, converged) =
+        sparse_loop::sparse_scalings(&sketch, a, b, rho, &params.sinkhorn)?;
+    let objective =
+        sparse_loop::sparse_uot_objective(&sketch, a, b, &u, &v, lambda, eps);
+    let solution =
+        sparse_loop::solution(u, v, objective, iterations, displacement, converged)?;
+    Ok(SparSolution { solution, stats })
+}
+
+/// Algorithm 4 (UOT) from a dense cost matrix; `s_multiplier` in units
+/// of s₀(n).
+#[allow(clippy::too_many_arguments)]
+pub fn spar_sink_uot(
+    cost: &Mat,
+    a: &[f64],
+    b: &[f64],
+    lambda: f64,
+    eps: f64,
+    s_multiplier: f64,
+    params: &SparSinkParams,
+    rng: &mut Rng,
+) -> Result<SparSolution> {
+    let s = resolve_budget(a.len(), s_multiplier);
+    spar_sink_uot_oracle(
+        |i, j| {
+            let c = cost.get(i, j);
+            if c.is_infinite() {
+                0.0
+            } else {
+                (-c / eps).exp()
+            }
+        },
+        |i, j| cost.get(i, j),
+        a,
+        b,
+        lambda,
+        eps,
+        s,
+        params,
+        rng,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ot::cost::{gibbs_kernel, sq_euclidean_cost, wfr_cost};
+    use crate::ot::sinkhorn::sinkhorn_ot;
+    use crate::ot::uot::sinkhorn_uot;
+    use crate::rng::Rng;
+
+    fn problem(n: usize, seed: u64) -> (Mat, Vec<f64>, Vec<f64>, Vec<Vec<f64>>) {
+        let mut rng = Rng::seed_from(seed);
+        let pts: Vec<Vec<f64>> = (0..n)
+            .map(|_| (0..3).map(|_| rng.uniform()).collect())
+            .collect();
+        let cost = sq_euclidean_cost(&pts, &pts);
+        let a: Vec<f64> = (0..n).map(|_| rng.normal_ms(1.0 / 3.0, (1.0f64 / 20.0).sqrt()).abs() + 1e-3).collect();
+        let sa: f64 = a.iter().sum();
+        let b: Vec<f64> = (0..n).map(|_| rng.normal_ms(0.5, (1.0f64 / 20.0).sqrt()).abs() + 1e-3).collect();
+        let sb: f64 = b.iter().sum();
+        (
+            cost,
+            a.iter().map(|x| x / sa).collect(),
+            b.iter().map(|x| x / sb).collect(),
+            pts,
+        )
+    }
+
+    #[test]
+    fn approximates_exact_ot_objective() {
+        let n = 200;
+        let (cost, a, b, _) = problem(n, 7);
+        let eps = 0.1;
+        let kernel = gibbs_kernel(&cost, eps);
+        let exact = sinkhorn_ot(&kernel, &cost, &a, &b, eps, &SinkhornParams::default()).unwrap();
+        let mut rng = Rng::seed_from(1);
+        let mut errs = Vec::new();
+        for _ in 0..5 {
+            let approx =
+                spar_sink_ot(&cost, &a, &b, eps, 16.0, &SparSinkParams::default(), &mut rng)
+                    .unwrap();
+            errs.push((approx.solution.objective - exact.objective).abs() / exact.objective.abs());
+        }
+        let mean_err = errs.iter().sum::<f64>() / errs.len() as f64;
+        // n = 200 is small for the sqrt(n^(3-2a)/s) bound; the
+        // fig2 harness at n = 1000 shows the paper-scale errors.
+        assert!(mean_err < 0.5, "mean relative error {mean_err}");
+    }
+
+    #[test]
+    fn error_decreases_with_budget() {
+        let n = 200;
+        let (cost, a, b, _) = problem(n, 11);
+        let eps = 0.1;
+        let kernel = gibbs_kernel(&cost, eps);
+        let exact = sinkhorn_ot(&kernel, &cost, &a, &b, eps, &SinkhornParams::default()).unwrap();
+        let mut rng = Rng::seed_from(3);
+        let mut rmae_for = |mult: f64| -> f64 {
+            let reps = 8;
+            let mut acc = 0.0;
+            for _ in 0..reps {
+                let approx =
+                    spar_sink_ot(&cost, &a, &b, eps, mult, &SparSinkParams::default(), &mut rng)
+                        .unwrap();
+                acc += (approx.solution.objective - exact.objective).abs()
+                    / exact.objective.abs();
+            }
+            acc / reps as f64
+        };
+        let small = rmae_for(2.0);
+        let large = rmae_for(16.0);
+        assert!(large < small, "rmae did not decrease: s=2s0 {small} vs s=16s0 {large}");
+    }
+
+    #[test]
+    fn uot_wfr_workflow() {
+        let n = 150;
+        let (_, a, b, pts) = problem(n, 13);
+        // Unbalance the masses (5 and 3 as in the paper).
+        let a: Vec<f64> = a.iter().map(|x| x * 5.0).collect();
+        let b: Vec<f64> = b.iter().map(|x| x * 3.0).collect();
+        let eta = crate::ot::cost::calibrate_eta(&pts, &pts, 0.5, 1e-3);
+        let cost = wfr_cost(&pts, &pts, eta);
+        let (lambda, eps) = (1.0, 0.1);
+        let kernel = cost.map(|c| if c.is_infinite() { 0.0 } else { (-c / eps).exp() });
+        let exact =
+            sinkhorn_uot(&kernel, &cost, &a, &b, lambda, eps, &SinkhornParams::default()).unwrap();
+        let mut rng = Rng::seed_from(5);
+        let mut errs = Vec::new();
+        for _ in 0..5 {
+            let approx = spar_sink_uot(
+                &cost,
+                &a,
+                &b,
+                lambda,
+                eps,
+                16.0,
+                &SparSinkParams::default(),
+                &mut rng,
+            )
+            .unwrap();
+            errs.push((approx.solution.objective - exact.objective).abs() / exact.objective.abs());
+        }
+        let mean_err = errs.iter().sum::<f64>() / errs.len() as f64;
+        assert!(mean_err < 0.9, "mean relative UOT error {mean_err}");
+    }
+
+    #[test]
+    fn sketch_budget_respected() {
+        let n = 300;
+        let (cost, a, b, _) = problem(n, 17);
+        let mut rng = Rng::seed_from(9);
+        let sol = spar_sink_ot(&cost, &a, &b, 0.1, 8.0, &SparSinkParams::default(), &mut rng)
+            .unwrap();
+        let budget = 8.0 * crate::metrics::s0(n);
+        assert!(
+            (sol.stats.nnz as f64) < budget * 1.2,
+            "nnz {} exceeds budget {budget}",
+            sol.stats.nnz
+        );
+        // Far sparser than dense.
+        assert!((sol.stats.nnz as f64) < (n * n) as f64 * 0.5);
+    }
+}

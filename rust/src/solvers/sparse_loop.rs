@@ -1,0 +1,215 @@
+//! The shared sparse Sinkhorn scaling loop and sparse objectives: runs
+//! Algorithms 1/2 over a CSR sketch in O(nnz) per iteration and
+//! evaluates the entropic objectives over sampled entries only.
+
+use crate::error::{Error, Result};
+use crate::linalg::l1_diff;
+use crate::ot::objective::kl_divergence;
+use crate::ot::sinkhorn::{safe_div, SinkhornParams};
+
+/// Division for the sparse loop: a row/column absent from the sketch
+/// (denominator exactly 0) can never receive transport, so its scaling
+/// is 0 — NOT the huge `safe_div` fallback, which would keep the
+/// stopping statistic from ever settling (Theorem 3's iteration bound
+/// relies on this convention).
+#[inline(always)]
+fn sketch_div(num: f64, den: f64) -> f64 {
+    if den == 0.0 {
+        0.0
+    } else {
+        safe_div(num, den)
+    }
+}
+use crate::ot::SinkhornSolution;
+use crate::sparse::CsrMatrix;
+
+/// Sparse scaling loop; `rho = 1` is OT, `rho = λ/(λ+ε)` is UOT.
+pub fn sparse_scalings(
+    sketch: &CsrMatrix,
+    a: &[f64],
+    b: &[f64],
+    rho: f64,
+    params: &SinkhornParams,
+) -> Result<(Vec<f64>, Vec<f64>, usize, f64, bool)> {
+    if sketch.rows() != a.len() || sketch.cols() != b.len() {
+        return Err(Error::Dimension(format!(
+            "sketch {}x{} vs a[{}], b[{}]",
+            sketch.rows(),
+            sketch.cols(),
+            a.len(),
+            b.len()
+        )));
+    }
+    let n = a.len();
+    let m = b.len();
+    let mut u = vec![1.0; n];
+    let mut v = vec![1.0; m];
+    let mut u_prev = vec![1.0; n];
+    let mut v_prev = vec![1.0; m];
+    let mut displacement = f64::INFINITY;
+    let mut iters = 0;
+    while iters < params.max_iters {
+        iters += 1;
+        u_prev.copy_from_slice(&u);
+        v_prev.copy_from_slice(&v);
+        let kv = sketch.matvec(&v);
+        for i in 0..n {
+            let val = sketch_div(a[i], kv[i]);
+            u[i] = if rho == 1.0 { val } else { val.powf(rho) };
+        }
+        let ktu = sketch.matvec_t(&u);
+        for j in 0..m {
+            let val = sketch_div(b[j], ktu[j]);
+            v[j] = if rho == 1.0 { val } else { val.powf(rho) };
+        }
+        if u.iter().chain(v.iter()).any(|x| !x.is_finite()) {
+            return Err(Error::Numerical(format!(
+                "sparse scalings diverged at iteration {iters}"
+            )));
+        }
+        displacement = l1_diff(&u, &u_prev) + l1_diff(&v, &v_prev);
+        if displacement <= params.delta {
+            return Ok((u, v, iters, displacement, true));
+        }
+    }
+    if params.strict {
+        return Err(Error::NotConverged { iters, err: displacement });
+    }
+    Ok((u, v, iters, displacement, false))
+}
+
+/// Entropic OT objective over the sparse plan `T̃ = diag(u) K̃ diag(v)`
+/// (Algorithm 3 step 4): only the sampled entries contribute.
+pub fn sparse_ot_objective(sketch: &CsrMatrix, u: &[f64], v: &[f64], eps: f64) -> f64 {
+    let mut transport = 0.0;
+    let mut entropy = 0.0;
+    for (i, j, k, c) in sketch.iter() {
+        let t = u[i] * k * v[j];
+        if t > 0.0 {
+            transport += t * c;
+            entropy -= t * (t.ln() - 1.0);
+        }
+    }
+    transport - eps * entropy
+}
+
+/// Row/column marginals of the sparse plan.
+pub fn sparse_plan_marginals(sketch: &CsrMatrix, u: &[f64], v: &[f64]) -> (Vec<f64>, Vec<f64>) {
+    let mut row = vec![0.0; sketch.rows()];
+    let mut col = vec![0.0; sketch.cols()];
+    for (i, j, k, _) in sketch.iter() {
+        let t = u[i] * k * v[j];
+        row[i] += t;
+        col[j] += t;
+    }
+    (row, col)
+}
+
+/// Entropic UOT objective (Eq. 10, Algorithm 4 step 4) over the sparse
+/// plan.
+pub fn sparse_uot_objective(
+    sketch: &CsrMatrix,
+    a: &[f64],
+    b: &[f64],
+    u: &[f64],
+    v: &[f64],
+    lambda: f64,
+    eps: f64,
+) -> f64 {
+    let base = sparse_ot_objective(sketch, u, v, eps);
+    let (row, col) = sparse_plan_marginals(sketch, u, v);
+    base + lambda * kl_divergence(&row, a) + lambda * kl_divergence(&col, b)
+}
+
+/// Assemble a [`SinkhornSolution`] from sparse loop outputs.
+pub fn solution(
+    u: Vec<f64>,
+    v: Vec<f64>,
+    objective: f64,
+    iterations: usize,
+    displacement: f64,
+    converged: bool,
+) -> Result<SinkhornSolution> {
+    if !objective.is_finite() {
+        return Err(Error::Numerical("sparse objective is not finite".into()));
+    }
+    Ok(SinkhornSolution { u, v, objective, iterations, displacement, converged })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::ot::cost::{gibbs_kernel, sq_euclidean_cost};
+    use crate::ot::objective::ot_objective_dense;
+    use crate::ot::sinkhorn::sinkhorn_scalings;
+    use crate::sparse::csr::CsrMatrix as Csr;
+
+    /// CSR holding the FULL kernel: the sparse loop must then agree with
+    /// the dense loop exactly.
+    fn full_csr(kernel: &Mat, cost: &Mat) -> Csr {
+        let rows = (0..kernel.rows())
+            .map(|i| {
+                (0..kernel.cols())
+                    .map(|j| (j as u32, kernel.get(i, j), cost.get(i, j)))
+                    .collect()
+            })
+            .collect();
+        Csr::from_rows(kernel.rows(), kernel.cols(), rows)
+    }
+
+    fn toy(n: usize, eps: f64) -> (Mat, Mat, Vec<f64>, Vec<f64>) {
+        let pts: Vec<Vec<f64>> = (0..n)
+            .map(|i| vec![(i as f64 * 0.618).fract(), (i as f64 * 0.383).fract()])
+            .collect();
+        let cost = sq_euclidean_cost(&pts, &pts);
+        let kernel = gibbs_kernel(&cost, eps);
+        let a = vec![1.0 / n as f64; n];
+        let b: Vec<f64> = (0..n).map(|i| 1.0 + (i % 2) as f64).collect();
+        let sb: f64 = b.iter().sum();
+        (kernel, cost, a, b.iter().map(|x| x / sb).collect())
+    }
+
+    #[test]
+    fn sparse_loop_matches_dense_on_full_kernel() {
+        let (kernel, cost, a, b) = toy(24, 0.1);
+        let sk = full_csr(&kernel, &cost);
+        let params = SinkhornParams::default();
+        let (u1, v1, i1, _, c1) = sparse_scalings(&sk, &a, &b, 1.0, &params).unwrap();
+        let (u2, v2, i2, _, c2) = sinkhorn_scalings(&kernel, &a, &b, 1.0, &params).unwrap();
+        assert_eq!(i1, i2);
+        assert_eq!(c1, c2);
+        for (x, y) in u1.iter().zip(&u2) {
+            assert!((x - y).abs() < 1e-10);
+        }
+        for (x, y) in v1.iter().zip(&v2) {
+            assert!((x - y).abs() < 1e-10);
+        }
+        let o1 = sparse_ot_objective(&sk, &u1, &v1, 0.1);
+        let o2 = ot_objective_dense(&kernel, &cost, &u2, &v2, 0.1);
+        assert!((o1 - o2).abs() < 1e-10);
+    }
+
+    #[test]
+    fn sparse_uot_objective_matches_dense_on_full_kernel() {
+        let (kernel, cost, a, b) = toy(16, 0.1);
+        let sk = full_csr(&kernel, &cost);
+        let params = SinkhornParams::default();
+        let rho = 1.0 / (1.0 + 0.1);
+        let (u, v, ..) = sparse_scalings(&sk, &a, &b, rho, &params).unwrap();
+        let o1 = sparse_uot_objective(&sk, &a, &b, &u, &v, 1.0, 0.1);
+        let o2 = crate::ot::objective::uot_objective_dense(&kernel, &cost, &a, &b, &u, &v, 1.0, 0.1);
+        assert!((o1 - o2).abs() < 1e-10, "{o1} vs {o2}");
+    }
+
+    #[test]
+    fn empty_sketch_rows_do_not_crash() {
+        let sk = Csr::from_rows(3, 3, vec![vec![(0, 1.0, 0.0)], vec![], vec![(2, 1.0, 0.0)]]);
+        let a = [0.4, 0.2, 0.4];
+        let b = [0.4, 0.2, 0.4];
+        let params = SinkhornParams { delta: 1e-8, max_iters: 50, strict: false };
+        let (u, v, ..) = sparse_scalings(&sk, &a, &b, 1.0, &params).unwrap();
+        assert!(u.iter().all(|x| x.is_finite()));
+        assert!(v.iter().all(|x| x.is_finite()));
+    }
+}

@@ -1,0 +1,320 @@
+//! Compressed-sparse-row matrix with *dual values*: each stored entry
+//! carries both the (rescaled) kernel value `K̃_ij` and the ground cost
+//! `C_ij`, so the sparsified objective `<T̃, C> − εH(T̃)` can be
+//! evaluated over the sampled support without touching the dense cost.
+
+use crate::error::{Error, Result};
+use crate::ot::barycenter::KernelOp;
+use crate::pool;
+
+/// CSR matrix holding kernel and cost values per entry.
+#[derive(Clone, Debug)]
+pub struct CsrMatrix {
+    rows: usize,
+    cols: usize,
+    /// Row pointer array, length rows+1.
+    row_ptr: Vec<usize>,
+    /// Column indices, length nnz.
+    col_idx: Vec<u32>,
+    /// Rescaled kernel values K̃_ij, length nnz.
+    kernel: Vec<f64>,
+    /// Ground-cost values C_ij for the same entries, length nnz.
+    cost: Vec<f64>,
+}
+
+/// One sampled entry during construction.
+#[derive(Clone, Copy, Debug)]
+pub struct Triplet {
+    pub row: usize,
+    pub col: usize,
+    pub kernel: f64,
+    pub cost: f64,
+}
+
+impl CsrMatrix {
+    /// Build from triplets (need not be sorted; duplicates are summed
+    /// for the kernel value — the with-replacement estimator needs this —
+    /// while the cost value is taken from the first occurrence).
+    pub fn from_triplets(rows: usize, cols: usize, mut trips: Vec<Triplet>) -> Result<Self> {
+        for t in &trips {
+            if t.row >= rows || t.col >= cols {
+                return Err(Error::Dimension(format!(
+                    "triplet ({}, {}) outside {}x{}",
+                    t.row, t.col, rows, cols
+                )));
+            }
+        }
+        trips.sort_unstable_by(|a, b| (a.row, a.col).cmp(&(b.row, b.col)));
+        let mut row_ptr = vec![0usize; rows + 1];
+        let mut col_idx: Vec<u32> = Vec::with_capacity(trips.len());
+        let mut kernel: Vec<f64> = Vec::with_capacity(trips.len());
+        let mut cost: Vec<f64> = Vec::with_capacity(trips.len());
+        let mut last: Option<(usize, usize)> = None;
+        for t in trips {
+            if last == Some((t.row, t.col)) {
+                // Duplicate (row, col): accumulate the kernel value
+                // (with-replacement estimators sum repeated draws); the
+                // ground cost is identical by construction.
+                *kernel.last_mut().unwrap() += t.kernel;
+                continue;
+            }
+            col_idx.push(t.col as u32);
+            kernel.push(t.kernel);
+            cost.push(t.cost);
+            row_ptr[t.row + 1] = col_idx.len();
+            last = Some((t.row, t.col));
+        }
+        // Rows without entries inherit the previous pointer.
+        for r in 1..=rows {
+            if row_ptr[r] < row_ptr[r - 1] {
+                row_ptr[r] = row_ptr[r - 1];
+            }
+        }
+        Ok(CsrMatrix { rows, cols, row_ptr, col_idx, kernel, cost })
+    }
+
+    /// Build directly from per-row entry lists (already sorted by column).
+    /// This is the fast path used by the Poisson sparsifier.
+    pub fn from_rows(rows: usize, cols: usize, row_entries: Vec<Vec<(u32, f64, f64)>>) -> Self {
+        assert_eq!(row_entries.len(), rows);
+        let nnz: usize = row_entries.iter().map(|r| r.len()).sum();
+        let mut row_ptr = Vec::with_capacity(rows + 1);
+        let mut col_idx = Vec::with_capacity(nnz);
+        let mut kernel = Vec::with_capacity(nnz);
+        let mut cost = Vec::with_capacity(nnz);
+        row_ptr.push(0);
+        for entries in row_entries {
+            for (c, k, co) in entries {
+                debug_assert!((c as usize) < cols);
+                col_idx.push(c);
+                kernel.push(k);
+                cost.push(co);
+            }
+            row_ptr.push(col_idx.len());
+        }
+        CsrMatrix { rows, cols, row_ptr, col_idx, kernel, cost }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Number of stored entries.
+    pub fn nnz(&self) -> usize {
+        self.col_idx.len()
+    }
+
+    /// Entries of row `i` as (col, kernel, cost) triples.
+    #[inline]
+    pub fn row_entries(&self, i: usize) -> impl Iterator<Item = (usize, f64, f64)> + '_ {
+        let lo = self.row_ptr[i];
+        let hi = self.row_ptr[i + 1];
+        (lo..hi).map(move |k| (self.col_idx[k] as usize, self.kernel[k], self.cost[k]))
+    }
+
+    /// `y = K̃ x` — the O(s) hot path (parallel over row blocks).
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols, "sparse matvec dimension mismatch");
+        let row_ptr = &self.row_ptr;
+        let col_idx = &self.col_idx;
+        let vals = &self.kernel;
+        pool::parallel_map(self.rows, |i| {
+            let lo = row_ptr[i];
+            let hi = row_ptr[i + 1];
+            let mut acc = 0.0;
+            for k in lo..hi {
+                acc += vals[k] * x[col_idx[k] as usize];
+            }
+            acc
+        })
+    }
+
+    /// `y = K̃ᵀ x` — parallel with per-worker scratch accumulators.
+    pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.rows, "sparse matvec_t dimension mismatch");
+        let cols = self.cols;
+        let row_ptr = &self.row_ptr;
+        let col_idx = &self.col_idx;
+        let vals = &self.kernel;
+        pool::parallel_fold(
+            self.rows,
+            |start, end| {
+                let mut acc = vec![0.0; cols];
+                for i in start..end {
+                    let xi = x[i];
+                    if xi == 0.0 {
+                        continue;
+                    }
+                    for k in row_ptr[i]..row_ptr[i + 1] {
+                        acc[col_idx[k] as usize] += vals[k] * xi;
+                    }
+                }
+                acc
+            },
+            |mut a, b| {
+                for (x, y) in a.iter_mut().zip(b) {
+                    *x += y;
+                }
+                a
+            },
+            vec![0.0; cols],
+        )
+    }
+
+    /// Iterate all entries as (row, col, kernel, cost).
+    pub fn iter(&self) -> impl Iterator<Item = (usize, usize, f64, f64)> + '_ {
+        (0..self.rows).flat_map(move |i| {
+            self.row_entries(i).map(move |(j, k, c)| (i, j, k, c))
+        })
+    }
+
+    /// Densify the kernel values (tests / small problems only).
+    pub fn to_dense_kernel(&self) -> crate::linalg::Mat {
+        let mut m = crate::linalg::Mat::zeros(self.rows, self.cols);
+        for (i, j, k, _) in self.iter() {
+            m.set(i, j, m.get(i, j) + k);
+        }
+        m
+    }
+
+    /// Frobenius-norm of the kernel values.
+    pub fn kernel_frob_norm(&self) -> f64 {
+        self.kernel.iter().map(|k| k * k).sum::<f64>().sqrt()
+    }
+}
+
+impl KernelOp for CsrMatrix {
+    fn apply(&self, x: &[f64]) -> Vec<f64> {
+        self.matvec(x)
+    }
+    fn apply_t(&self, x: &[f64]) -> Vec<f64> {
+        self.matvec_t(x)
+    }
+    fn rows(&self) -> usize {
+        self.rows
+    }
+    fn cols(&self) -> usize {
+        self.cols
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+
+    fn example() -> CsrMatrix {
+        // [[1, 0, 2],
+        //  [0, 0, 0],
+        //  [3, 4, 0]]
+        CsrMatrix::from_rows(
+            3,
+            3,
+            vec![
+                vec![(0, 1.0, 0.1), (2, 2.0, 0.2)],
+                vec![],
+                vec![(0, 3.0, 0.3), (1, 4.0, 0.4)],
+            ],
+        )
+    }
+
+    #[test]
+    fn nnz_and_shape() {
+        let m = example();
+        assert_eq!(m.nnz(), 4);
+        assert_eq!((m.rows(), m.cols()), (3, 3));
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let m = example();
+        let x = [1.0, -1.0, 0.5];
+        assert_eq!(m.matvec(&x), vec![2.0, 0.0, -1.0]);
+    }
+
+    #[test]
+    fn matvec_t_matches_dense_transpose() {
+        let m = example();
+        let x = [1.0, 5.0, -1.0];
+        let dense = m.to_dense_kernel();
+        let want = dense.matvec_t(&x);
+        let got = m.matvec_t(&x);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn from_triplets_unsorted() {
+        let trips = vec![
+            Triplet { row: 2, col: 1, kernel: 4.0, cost: 0.4 },
+            Triplet { row: 0, col: 2, kernel: 2.0, cost: 0.2 },
+            Triplet { row: 0, col: 0, kernel: 1.0, cost: 0.1 },
+            Triplet { row: 2, col: 0, kernel: 3.0, cost: 0.3 },
+        ];
+        let m = CsrMatrix::from_triplets(3, 3, trips).unwrap();
+        let e = example();
+        assert_eq!(m.nnz(), e.nnz());
+        let x = [0.3, 0.7, -0.2];
+        let got = m.matvec(&x);
+        let want = e.matvec(&x);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn from_triplets_accumulates_duplicates() {
+        let trips = vec![
+            Triplet { row: 0, col: 0, kernel: 1.0, cost: 0.5 },
+            Triplet { row: 0, col: 0, kernel: 2.5, cost: 0.5 },
+        ];
+        let m = CsrMatrix::from_triplets(1, 1, trips).unwrap();
+        assert_eq!(m.nnz(), 1);
+        assert_eq!(m.matvec(&[1.0]), vec![3.5]);
+    }
+
+    #[test]
+    fn from_triplets_rejects_out_of_bounds() {
+        let trips = vec![Triplet { row: 5, col: 0, kernel: 1.0, cost: 0.0 }];
+        assert!(CsrMatrix::from_triplets(3, 3, trips).is_err());
+    }
+
+    #[test]
+    fn dense_roundtrip_random() {
+        let mut rng = crate::rng::Rng::seed_from(99);
+        let n = 20;
+        let mut rows = vec![Vec::new(); n];
+        for (i, row) in rows.iter_mut().enumerate() {
+            for j in 0..n {
+                if rng.bernoulli(0.3) {
+                    row.push((j as u32, rng.uniform(), rng.uniform()));
+                }
+            }
+            let _ = i;
+        }
+        let m = CsrMatrix::from_rows(n, n, rows);
+        let dense: Mat = m.to_dense_kernel();
+        let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.77).sin()).collect();
+        let got = m.matvec(&x);
+        let want = dense.matvec(&x);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-12);
+        }
+        let got_t = m.matvec_t(&x);
+        let want_t = dense.matvec_t(&x);
+        for (g, w) in got_t.iter().zip(&want_t) {
+            assert!((g - w).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn empty_rows_are_fine() {
+        let m = CsrMatrix::from_rows(4, 2, vec![vec![], vec![(1, 2.0, 0.0)], vec![], vec![]]);
+        assert_eq!(m.matvec(&[1.0, 1.0]), vec![0.0, 2.0, 0.0, 0.0]);
+    }
+}

@@ -1,0 +1,13 @@
+//! Sparse-matrix substrate for the importance sparsifier: CSR storage
+//! (with a parallel kernel/cost dual-value layout so objectives evaluate
+//! over sampled entries only), the Poisson element-sampling scheme
+//! (Eq. 7), and the paper's importance probabilities (Eqs. 9 and 11).
+
+pub mod csr;
+pub mod sampling;
+
+pub use csr::CsrMatrix;
+pub use sampling::{
+    poisson_sparsify_ot, poisson_sparsify_uot, poisson_sparsify_with,
+    sample_with_replacement_ot, SparsifyStats,
+};

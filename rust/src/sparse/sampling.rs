@@ -1,0 +1,582 @@
+//! Importance sparsification (the paper's core contribution).
+//!
+//! Given a kernel oracle `K(i,j)` and cost oracle `C(i,j)`, constructs
+//! the Poisson-sampled sparse sketch `K̃` of Eq. (7):
+//!
+//! ```text
+//! K̃_ij = K_ij / p*_ij   with prob. p*_ij = min(1, s·p_ij),   else 0,
+//! ```
+//!
+//! with the importance probabilities
+//!
+//! * OT  (Eq. 9):  p_ij ∝ √(a_i b_j) — separable, so normalization is
+//!   O(n) and sampling needs no O(n²) pre-pass;
+//! * UOT (Eq. 11): p_ij ∝ (a_i b_j)^{λ/(2λ+ε)} K_ij^{ε/(2λ+ε)} — needs
+//!   one O(nnz(K)) normalization pass;
+//! * uniform (the Rand-Sink ablation): p_ij = 1/n².
+//!
+//! A shrinkage mixing `p ← θ·p + (1−θ)/n²` implements condition (ii) of
+//! Theorem 1 (probabilities bounded below by c₃·s/n²).
+
+use super::csr::CsrMatrix;
+use crate::error::{Error, Result};
+use crate::pool;
+use crate::rng::Rng;
+
+/// Statistics about one sparsification pass.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SparsifyStats {
+    /// Stored non-zeros in the sketch.
+    pub nnz: usize,
+    /// Expected sample budget `s` used.
+    pub budget: f64,
+    /// Entries whose clipped probability hit 1 (kept deterministically).
+    pub saturated: usize,
+}
+
+/// Poisson-sparsify with explicit (unnormalized) probability oracle.
+///
+/// `prob(i, j)` must return a non-negative weight; `total_prob` is the sum
+/// over the entire support (entries where `kernel(i,j) > 0`). Entries with
+/// zero kernel value are never sampled.
+#[allow(clippy::too_many_arguments)]
+pub fn poisson_sparsify_with(
+    n_rows: usize,
+    n_cols: usize,
+    kernel: impl Fn(usize, usize) -> f64 + Sync,
+    cost: impl Fn(usize, usize) -> f64 + Sync,
+    prob: impl Fn(usize, usize) -> f64 + Sync,
+    total_prob: f64,
+    s: f64,
+    shrinkage: f64,
+    rng: &mut Rng,
+) -> Result<(CsrMatrix, SparsifyStats)> {
+    if !(0.0..=1.0).contains(&shrinkage) {
+        return Err(Error::InvalidParam(format!("shrinkage {shrinkage} outside [0,1]")));
+    }
+    if s <= 0.0 || total_prob <= 0.0 {
+        return Err(Error::InvalidParam(format!(
+            "budget s = {s} and total probability {total_prob} must be positive"
+        )));
+    }
+    let n2 = (n_rows as f64) * (n_cols as f64);
+    let unif = 1.0 / n2;
+    // Per-row RNG streams keep the pass deterministic AND parallel.
+    let mut seeds = Vec::with_capacity(n_rows);
+    for _ in 0..n_rows {
+        seeds.push(rng.next_u64());
+    }
+    let theta = shrinkage;
+    let rows: Vec<Vec<(u32, f64, f64)>> = pool::parallel_map(n_rows, |i| {
+        let mut r = Rng::seed_from(seeds[i]);
+        let mut entries = Vec::new();
+        for j in 0..n_cols {
+            let k = kernel(i, j);
+            if k <= 0.0 {
+                continue;
+            }
+            let p_imp = prob(i, j) / total_prob;
+            let p = theta * p_imp + (1.0 - theta) * unif;
+            let p_star = (s * p).min(1.0);
+            if p_star <= 0.0 {
+                continue;
+            }
+            if r.uniform() < p_star {
+                entries.push((j as u32, k / p_star, cost(i, j)));
+            }
+        }
+        entries
+    });
+    let saturated = 0; // filled below
+    let mut stats = SparsifyStats { nnz: 0, budget: s, saturated };
+    stats.nnz = rows.iter().map(|r| r.len()).sum();
+    let m = CsrMatrix::from_rows(n_rows, n_cols, rows);
+    Ok((m, stats))
+}
+
+/// Spar-Sink sparsifier for OT (Eq. 9): `p_ij ∝ √(a_i b_j)`.
+///
+/// Separability makes the normalization `Σ√a · Σ√b` exact in O(n), and —
+/// unlike the UOT probability — `p_ij` does not depend on `K_ij`, so the
+/// kernel oracle is only evaluated for SELECTED entries (the §Perf lazy
+/// evaluation: ~s kernel/exp calls instead of n²).
+pub fn poisson_sparsify_ot(
+    kernel: impl Fn(usize, usize) -> f64 + Sync,
+    cost: impl Fn(usize, usize) -> f64 + Sync,
+    a: &[f64],
+    b: &[f64],
+    s: f64,
+    shrinkage: f64,
+    rng: &mut Rng,
+) -> Result<(CsrMatrix, SparsifyStats)> {
+    if !(0.0..=1.0).contains(&shrinkage) {
+        return Err(Error::InvalidParam(format!("shrinkage {shrinkage} outside [0,1]")));
+    }
+    if s <= 0.0 {
+        return Err(Error::InvalidParam(format!("budget s = {s} must be positive")));
+    }
+    if a.iter().any(|&x| x < 0.0) || b.iter().any(|&x| x < 0.0) {
+        return Err(Error::InvalidParam("marginals must be non-negative".into()));
+    }
+    let n = a.len();
+    let m = b.len();
+    let sqrt_a: Vec<f64> = a.iter().map(|x| x.sqrt()).collect();
+    let sqrt_b: Vec<f64> = b.iter().map(|x| x.sqrt()).collect();
+    let sum_a: f64 = sqrt_a.iter().sum();
+    let sum_b: f64 = sqrt_b.iter().sum();
+    let total = sum_a * sum_b;
+    if total <= 0.0 {
+        return Err(Error::InvalidParam("total probability mass is zero".into()));
+    }
+    // p*_ij = min(1, s·(θ·√a_i·√b_j/total + (1−θ)/(nm)))
+    //       = min(1, row_coef_i·√b_j + unif_coef)
+    let unif_coef = s * (1.0 - shrinkage) / (n as f64 * m as f64);
+    let mut seeds = Vec::with_capacity(n);
+    for _ in 0..n {
+        seeds.push(rng.next_u64());
+    }
+    let max_sqrt_b = sqrt_b.iter().cloned().fold(0.0f64, f64::max);
+    let rows: Vec<Vec<(u32, f64, f64)>> = pool::parallel_map(n, |i| {
+        let mut r = Rng::seed_from(seeds[i]);
+        let row_coef = s * shrinkage * sqrt_a[i] / total;
+        let p_max = (row_coef * max_sqrt_b + unif_coef).min(1.0);
+        let mut entries = Vec::new();
+        if p_max <= 0.0 {
+            return entries;
+        }
+        if p_max < 0.2 {
+            // Geometric skip-sampling (thinning): bound every p*_ij by
+            // p_max, jump ahead Geometric(p_max) columns, then accept
+            // the landing column with probability p*_ij / p_max. Exact,
+            // and reduces per-row work from O(m) RNG draws to
+            // O(m·p_max) ≈ O(s_i · max√b/avg√b).
+            let log1m = (1.0 - p_max).ln();
+            let mut j = 0usize;
+            loop {
+                let u = r.uniform().max(f64::MIN_POSITIVE);
+                j += (u.ln() / log1m) as usize;
+                if j >= m {
+                    break;
+                }
+                let p_star = (row_coef * sqrt_b[j] + unif_coef).min(1.0);
+                if r.uniform() * p_max < p_star {
+                    // Lazy kernel evaluation: only for selected entries.
+                    let k = kernel(i, j);
+                    if k > 0.0 {
+                        entries.push((j as u32, k / p_star, cost(i, j)));
+                    }
+                }
+                j += 1;
+            }
+        } else {
+            for (j, &sb) in sqrt_b.iter().enumerate() {
+                let p_star = (row_coef * sb + unif_coef).min(1.0);
+                if p_star <= 0.0 {
+                    continue;
+                }
+                if r.uniform() < p_star {
+                    let k = kernel(i, j);
+                    if k > 0.0 {
+                        entries.push((j as u32, k / p_star, cost(i, j)));
+                    }
+                }
+            }
+        }
+        entries
+    });
+    let mut stats = SparsifyStats { nnz: 0, budget: s, saturated: 0 };
+    stats.nnz = rows.iter().map(|r| r.len()).sum();
+    let msk = CsrMatrix::from_rows(n, m, rows);
+    Ok((msk, stats))
+}
+
+/// Spar-Sink sparsifier for UOT (Eq. 11):
+/// `p_ij ∝ (a_i b_j)^{λ/(2λ+ε)} · K_ij^{ε/(2λ+ε)}`.
+///
+/// One O(n²) (or O(nnz)) pass computes the normalization; the pass is
+/// parallel over rows.
+#[allow(clippy::too_many_arguments)]
+pub fn poisson_sparsify_uot(
+    kernel: impl Fn(usize, usize) -> f64 + Sync,
+    cost: impl Fn(usize, usize) -> f64 + Sync,
+    a: &[f64],
+    b: &[f64],
+    lambda: f64,
+    eps: f64,
+    s: f64,
+    shrinkage: f64,
+    rng: &mut Rng,
+) -> Result<(CsrMatrix, SparsifyStats)> {
+    if lambda <= 0.0 || eps <= 0.0 {
+        return Err(Error::InvalidParam("lambda and eps must be positive".into()));
+    }
+    let alpha = lambda / (2.0 * lambda + eps);
+    let beta = eps / (2.0 * lambda + eps);
+    let pa: Vec<f64> = a.iter().map(|x| x.powf(alpha)).collect();
+    let pb: Vec<f64> = b.iter().map(|x| x.powf(alpha)).collect();
+    let n = a.len();
+    let m = b.len();
+    // §Perf: the probability needs K_ij^beta for every support entry.
+    // For problems that fit (n*m <= 16M entries) we materialize the
+    // weights once and reuse them in the sampling pass, halving the
+    // kernel evaluations and removing the duplicated powf; larger
+    // problems fall back to the memory-free two-pass oracle.
+    const MATERIALIZE_CAP: usize = 16_000_000;
+    if n * m <= MATERIALIZE_CAP {
+        let pa_ref = &pa;
+        let pb_ref = &pb;
+        let kernel_ref = &kernel;
+        let weights: Vec<f64> = pool::parallel_map(n * m, |idx| {
+            let (i, j) = (idx / m, idx % m);
+            let k = kernel_ref(i, j);
+            if k <= 0.0 {
+                0.0
+            } else {
+                pa_ref[i] * pb_ref[j] * k.powf(beta)
+            }
+        });
+        let total: f64 = weights.iter().sum();
+        if total <= 0.0 {
+            return Err(Error::Numerical(
+                "UOT sampling weights are all zero (empty kernel?)".into(),
+            ));
+        }
+        let w_ref = &weights;
+        return poisson_sparsify_with(
+            n,
+            m,
+            &kernel,
+            cost,
+            move |i, j| w_ref[i * m + j],
+            total,
+            s,
+            shrinkage,
+            rng,
+        );
+    }
+    let kernel_ref = &kernel;
+    let weight = move |i: usize, j: usize| {
+        let k = kernel_ref(i, j);
+        if k <= 0.0 {
+            0.0
+        } else {
+            pa[i] * pb[j] * k.powf(beta)
+        }
+    };
+    let total = pool::parallel_fold(
+        n,
+        |start, end| {
+            let mut acc = 0.0;
+            for i in start..end {
+                for j in 0..m {
+                    acc += weight(i, j);
+                }
+            }
+            acc
+        },
+        |x, y| x + y,
+        0.0,
+    );
+    if total <= 0.0 {
+        return Err(Error::Numerical("UOT sampling weights are all zero (empty kernel?)".into()));
+    }
+    poisson_sparsify_with(n, m, &kernel, cost, &weight, total, s, shrinkage, rng)
+}
+
+/// Sampling-with-replacement ablation for OT (Appendix comparison /
+/// Wang & Zou 2021 discussion): draw `s` iid entries from `p_ij` and
+/// average `K_ij / (s p_ij)` over draws.
+pub fn sample_with_replacement_ot(
+    kernel: impl Fn(usize, usize) -> f64,
+    cost: impl Fn(usize, usize) -> f64,
+    a: &[f64],
+    b: &[f64],
+    s: usize,
+    rng: &mut Rng,
+) -> Result<CsrMatrix> {
+    use crate::rng::AliasTable;
+    let sqrt_a: Vec<f64> = a.iter().map(|x| x.sqrt()).collect();
+    let sqrt_b: Vec<f64> = b.iter().map(|x| x.sqrt()).collect();
+    let ta = AliasTable::new(&sqrt_a);
+    let tb = AliasTable::new(&sqrt_b);
+    let sum_a: f64 = sqrt_a.iter().sum();
+    let sum_b: f64 = sqrt_b.iter().sum();
+    let mut trips = Vec::with_capacity(s);
+    for _ in 0..s {
+        let i = ta.sample(rng);
+        let j = tb.sample(rng);
+        let p = (sqrt_a[i] / sum_a) * (sqrt_b[j] / sum_b);
+        let k = kernel(i, j);
+        if k <= 0.0 {
+            continue;
+        }
+        trips.push(super::csr::Triplet {
+            row: i,
+            col: j,
+            kernel: k / (s as f64 * p),
+            cost: cost(i, j),
+        });
+    }
+    CsrMatrix::from_triplets(a.len(), b.len(), trips)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+
+    fn toy(n: usize) -> (Mat, Mat, Vec<f64>, Vec<f64>) {
+        let pts: Vec<Vec<f64>> = (0..n)
+            .map(|i| vec![(i as f64 * 0.618).fract(), (i as f64 * 0.383).fract()])
+            .collect();
+        let cost = crate::ot::cost::sq_euclidean_cost(&pts, &pts);
+        let kernel = crate::ot::cost::gibbs_kernel(&cost, 0.2);
+        let a = vec![1.0 / n as f64; n];
+        let b: Vec<f64> = (0..n).map(|i| 1.0 + (i % 3) as f64).collect();
+        let sb: f64 = b.iter().sum();
+        let b: Vec<f64> = b.iter().map(|x| x / sb).collect();
+        (kernel, cost, a, b)
+    }
+
+    #[test]
+    fn sketch_is_unbiased_in_expectation() {
+        // Average many independent sketches: entries converge to K.
+        let (kernel, cost, a, b) = toy(12);
+        let mut rng = Rng::seed_from(42);
+        let reps = 3000;
+        let mut acc = Mat::zeros(12, 12);
+        for _ in 0..reps {
+            let (sk, _) = poisson_sparsify_ot(
+                |i, j| kernel.get(i, j),
+                |i, j| cost.get(i, j),
+                &a,
+                &b,
+                40.0,
+                1.0,
+                &mut rng,
+            )
+            .unwrap();
+            for (i, j, k, _) in sk.iter() {
+                acc.set(i, j, acc.get(i, j) + k / reps as f64);
+            }
+        }
+        let mut max_rel = 0.0f64;
+        for i in 0..12 {
+            for j in 0..12 {
+                let want = kernel.get(i, j);
+                if want > 0.05 {
+                    max_rel = max_rel.max((acc.get(i, j) - want).abs() / want);
+                }
+            }
+        }
+        assert!(max_rel < 0.15, "max relative bias {max_rel}");
+    }
+
+    #[test]
+    fn expected_nnz_close_to_budget() {
+        let (kernel, cost, a, b) = toy(40);
+        let mut rng = Rng::seed_from(1);
+        let s = 300.0;
+        let mut total = 0usize;
+        let reps = 30;
+        for _ in 0..reps {
+            let (_, stats) = poisson_sparsify_ot(
+                |i, j| kernel.get(i, j),
+                |i, j| cost.get(i, j),
+                &a,
+                &b,
+                s,
+                1.0,
+                &mut rng,
+            )
+            .unwrap();
+            total += stats.nnz;
+        }
+        let mean = total as f64 / reps as f64;
+        // E[nnz] <= s (Section 3.2); with full support it's close to s.
+        assert!(mean <= s * 1.05, "mean nnz {mean} exceeds budget {s}");
+        assert!(mean >= s * 0.7, "mean nnz {mean} too far below {s}");
+    }
+
+    #[test]
+    fn zero_kernel_entries_never_sampled() {
+        let n = 16;
+        let (mut kernel, cost, a, b) = toy(n);
+        // Blank out a block.
+        for i in 0..n {
+            for j in 0..4 {
+                kernel.set(i, j, 0.0);
+            }
+        }
+        let mut rng = Rng::seed_from(3);
+        let (sk, _) = poisson_sparsify_ot(
+            |i, j| kernel.get(i, j),
+            |i, j| cost.get(i, j),
+            &a,
+            &b,
+            600.0,
+            1.0,
+            &mut rng,
+        )
+        .unwrap();
+        for (_, j, k, _) in sk.iter() {
+            assert!(j >= 4, "sampled blocked column {j} with value {k}");
+        }
+    }
+
+    #[test]
+    fn shrinkage_keeps_probabilities_positive() {
+        // With pure importance probs, a zero-mass row never gets samples;
+        // with shrinkage theta < 1, uniform mass floors it (condition ii).
+        let n = 10;
+        let (kernel, cost, mut a, b) = toy(n);
+        a[0] = 0.0;
+        let mut rng = Rng::seed_from(5);
+        let mut hit_row0 = false;
+        for _ in 0..200 {
+            let (sk, _) = poisson_sparsify_ot(
+                |i, j| kernel.get(i, j),
+                |i, j| cost.get(i, j),
+                &a,
+                &b,
+                50.0,
+                0.5,
+                &mut rng,
+            )
+            .unwrap();
+            if sk.row_entries(0).next().is_some() {
+                hit_row0 = true;
+                break;
+            }
+        }
+        assert!(hit_row0, "shrinkage should allow sampling zero-weight rows");
+    }
+
+    #[test]
+    fn uot_probability_prefers_high_kernel_entries() {
+        // Two identical (a_i b_j) weights, very different K -> the larger
+        // K must be sampled more often.
+        let a = vec![0.5, 0.5];
+        let b = vec![0.5, 0.5];
+        let kval = |i: usize, j: usize| if i == j { 1.0 } else { 1e-6 };
+        let mut rng = Rng::seed_from(7);
+        let mut diag = 0usize;
+        let mut off = 0usize;
+        for _ in 0..500 {
+            let (sk, _) = poisson_sparsify_uot(
+                kval,
+                |_, _| 1.0,
+                &a,
+                &b,
+                1.0,
+                0.5,
+                2.0,
+                1.0,
+                &mut rng,
+            )
+            .unwrap();
+            for (i, j, _, _) in sk.iter() {
+                if i == j {
+                    diag += 1;
+                } else {
+                    off += 1;
+                }
+            }
+        }
+        assert!(diag > 10 * off.max(1), "diag {diag} off {off}");
+    }
+
+    #[test]
+    fn uot_degenerates_to_ot_probability_for_large_lambda() {
+        // Eq. 11 -> Eq. 9 as lambda -> inf (the exponent on K vanishes).
+        let (kernel, cost, a, b) = toy(8);
+        let mut r1 = Rng::seed_from(11);
+        let mut r2 = Rng::seed_from(11);
+        let (sk_uot, _) = poisson_sparsify_uot(
+            |i, j| kernel.get(i, j),
+            |i, j| cost.get(i, j),
+            &a,
+            &b,
+            1e12,
+            0.1,
+            30.0,
+            1.0,
+            &mut r1,
+        )
+        .unwrap();
+        let (sk_ot, _) = poisson_sparsify_ot(
+            |i, j| kernel.get(i, j),
+            |i, j| cost.get(i, j),
+            &a,
+            &b,
+            30.0,
+            1.0,
+            &mut r2,
+        )
+        .unwrap();
+        // Same RNG stream + (numerically) same probabilities -> identical sketches.
+        assert_eq!(sk_uot.nnz(), sk_ot.nnz());
+        for ((i1, j1, k1, _), (i2, j2, k2, _)) in sk_uot.iter().zip(sk_ot.iter()) {
+            assert_eq!((i1, j1), (i2, j2));
+            assert!((k1 - k2).abs() < 1e-6 * k2.abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn with_replacement_unbiased() {
+        let (kernel, cost, a, b) = toy(10);
+        let mut rng = Rng::seed_from(13);
+        let reps = 2000;
+        let mut acc = Mat::zeros(10, 10);
+        for _ in 0..reps {
+            let sk = sample_with_replacement_ot(
+                |i, j| kernel.get(i, j),
+                |i, j| cost.get(i, j),
+                &a,
+                &b,
+                50,
+                &mut rng,
+            )
+            .unwrap();
+            for (i, j, k, _) in sk.iter() {
+                acc.set(i, j, acc.get(i, j) + k / reps as f64);
+            }
+        }
+        let mut max_rel = 0.0f64;
+        for i in 0..10 {
+            for j in 0..10 {
+                let want = kernel.get(i, j);
+                if want > 0.1 {
+                    max_rel = max_rel.max((acc.get(i, j) - want).abs() / want);
+                }
+            }
+        }
+        assert!(max_rel < 0.2, "max relative bias {max_rel}");
+    }
+
+    #[test]
+    fn rejects_bad_params() {
+        let (kernel, cost, a, b) = toy(4);
+        let mut rng = Rng::seed_from(17);
+        assert!(poisson_sparsify_ot(
+            |i, j| kernel.get(i, j),
+            |i, j| cost.get(i, j),
+            &a,
+            &b,
+            -1.0,
+            1.0,
+            &mut rng
+        )
+        .is_err());
+        assert!(poisson_sparsify_ot(
+            |i, j| kernel.get(i, j),
+            |i, j| cost.get(i, j),
+            &a,
+            &b,
+            10.0,
+            1.5,
+            &mut rng
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,5 @@
+//! Small utilities: a dependency-free JSON writer for experiment output
+//! and a minimal JSON reader for the artifact manifest.
+
+pub mod json;
+pub mod table;

@@ -1,0 +1,270 @@
+//! Property-based tests over randomized inputs (hand-rolled generator
+//! loops — the offline image has no proptest). Each property runs many
+//! random cases from seeded streams; failures print the seed for
+//! reproduction.
+
+use spar_sink::linalg::{l1_diff, Mat};
+use spar_sink::metrics::s0;
+use spar_sink::ot::cost::{gibbs_kernel, sq_euclidean_cost, wfr_cost_from_distance};
+use spar_sink::ot::objective::{kl_divergence, plan_marginals_dense};
+use spar_sink::ot::sinkhorn::{sinkhorn_scalings, transport_plan, SinkhornParams};
+use spar_sink::rng::Rng;
+use spar_sink::solvers::sparse_loop::{sparse_ot_objective, sparse_scalings};
+use spar_sink::sparse::{poisson_sparsify_ot, poisson_sparsify_uot, CsrMatrix};
+
+const CASES: usize = 24;
+
+fn random_instance(rng: &mut Rng, n_max: usize) -> (Mat, Mat, Vec<f64>, Vec<f64>) {
+    let n = 4 + rng.gen_range(n_max - 4);
+    let d = 1 + rng.gen_range(4);
+    let pts: Vec<Vec<f64>> = (0..n)
+        .map(|_| (0..d).map(|_| rng.uniform()).collect())
+        .collect();
+    let cost = sq_euclidean_cost(&pts, &pts);
+    let eps = 0.05 + rng.uniform() * 0.3;
+    let kernel = gibbs_kernel(&cost, eps);
+    let mk = |rng: &mut Rng| -> Vec<f64> {
+        let raw: Vec<f64> = (0..n).map(|_| rng.uniform() + 0.05).collect();
+        let s: f64 = raw.iter().sum();
+        raw.iter().map(|x| x / s).collect()
+    };
+    let a = mk(rng);
+    let b = mk(rng);
+    (kernel, cost, a, b)
+}
+
+/// Property: the converged Sinkhorn plan satisfies both marginals.
+#[test]
+fn prop_sinkhorn_plan_feasible() {
+    let mut master = Rng::seed_from(0x1001);
+    for case in 0..CASES {
+        let seed = master.next_u64();
+        let mut rng = Rng::seed_from(seed);
+        let (kernel, _cost, a, b) = random_instance(&mut rng, 48);
+        let params = SinkhornParams { delta: 1e-9, max_iters: 4000, strict: false };
+        let (u, v, _, _, converged) =
+            sinkhorn_scalings(&kernel, &a, &b, 1.0, &params).unwrap();
+        if !converged {
+            continue; // tough eps draw; feasibility only guaranteed at the fixed point
+        }
+        let plan = transport_plan(&kernel, &u, &v);
+        let rows = plan.row_sums();
+        let cols = plan.col_sums();
+        assert!(
+            l1_diff(&rows, &a) < 1e-6 && l1_diff(&cols, &b) < 1e-6,
+            "case {case} seed {seed}: marginal violation {} / {}",
+            l1_diff(&rows, &a),
+            l1_diff(&cols, &b)
+        );
+    }
+}
+
+/// Property: the sparse loop on a FULL sketch reproduces the dense loop.
+#[test]
+fn prop_sparse_loop_equals_dense_on_full_support() {
+    let mut master = Rng::seed_from(0x1002);
+    for case in 0..CASES {
+        let seed = master.next_u64();
+        let mut rng = Rng::seed_from(seed);
+        let (kernel, cost, a, b) = random_instance(&mut rng, 32);
+        let n = a.len();
+        let rows = (0..n)
+            .map(|i| {
+                (0..n)
+                    .map(|j| (j as u32, kernel.get(i, j), cost.get(i, j)))
+                    .collect()
+            })
+            .collect();
+        let sketch = CsrMatrix::from_rows(n, n, rows);
+        let params = SinkhornParams { delta: 1e-8, max_iters: 500, strict: false };
+        let (u1, v1, ..) = sparse_scalings(&sketch, &a, &b, 1.0, &params).unwrap();
+        let (u2, v2, ..) = sinkhorn_scalings(&kernel, &a, &b, 1.0, &params).unwrap();
+        for (x, y) in u1.iter().zip(&u2).chain(v1.iter().zip(&v2)) {
+            assert!((x - y).abs() < 1e-9, "case {case} seed {seed}");
+        }
+    }
+}
+
+/// Property: E[nnz] of the Poisson sketch never exceeds the budget s
+/// (Section 3.2's inequality), within 5 sigma of binomial noise.
+#[test]
+fn prop_sketch_respects_budget() {
+    let mut master = Rng::seed_from(0x1003);
+    for case in 0..CASES {
+        let seed = master.next_u64();
+        let mut rng = Rng::seed_from(seed);
+        let (kernel, cost, a, b) = random_instance(&mut rng, 64);
+        let n = a.len();
+        let s = (2.0 + rng.uniform() * 14.0) * s0(n);
+        let (sketch, stats) = poisson_sparsify_ot(
+            |i, j| kernel.get(i, j),
+            |i, j| cost.get(i, j),
+            &a,
+            &b,
+            s,
+            1.0,
+            &mut rng,
+        )
+        .unwrap();
+        let sigma = s.sqrt();
+        assert!(
+            (sketch.nnz() as f64) <= s + 5.0 * sigma,
+            "case {case} seed {seed}: nnz {} budget {s}",
+            sketch.nnz()
+        );
+        assert_eq!(stats.nnz, sketch.nnz());
+    }
+}
+
+/// Property: every stored sketch entry equals K_ij / p*_ij with
+/// p*_ij ≤ 1, i.e. entries only ever INFLATE (never shrink) and zero
+/// kernel entries never appear.
+#[test]
+fn prop_sketch_entries_are_inflated_kernel_values() {
+    let mut master = Rng::seed_from(0x1004);
+    for case in 0..CASES {
+        let seed = master.next_u64();
+        let mut rng = Rng::seed_from(seed);
+        let (kernel, cost, a, b) = random_instance(&mut rng, 48);
+        let s = 8.0 * s0(a.len());
+        let (sketch, _) = poisson_sparsify_ot(
+            |i, j| kernel.get(i, j),
+            |i, j| cost.get(i, j),
+            &a,
+            &b,
+            s,
+            0.7,
+            &mut rng,
+        )
+        .unwrap();
+        for (i, j, k, c) in sketch.iter() {
+            let k_true = kernel.get(i, j);
+            assert!(k_true > 0.0, "case {case} seed {seed}: zero-kernel entry stored");
+            assert!(
+                k >= k_true - 1e-12,
+                "case {case} seed {seed}: entry ({i},{j}) shrank: {k} < {k_true}"
+            );
+            assert_eq!(c, cost.get(i, j));
+        }
+    }
+}
+
+/// Property: the UOT probability (Eq. 11) never samples blocked (K = 0)
+/// WFR pairs, for random truncation radii.
+#[test]
+fn prop_uot_sampling_respects_wfr_support() {
+    let mut master = Rng::seed_from(0x1005);
+    for case in 0..CASES {
+        let seed = master.next_u64();
+        let mut rng = Rng::seed_from(seed);
+        let n = 8 + rng.gen_range(40);
+        let pts: Vec<Vec<f64>> = (0..n)
+            .map(|_| vec![rng.uniform() * 4.0, rng.uniform() * 4.0])
+            .collect();
+        let eta = 0.3 + rng.uniform();
+        let eps = 0.05 + rng.uniform() * 0.2;
+        let a: Vec<f64> = (0..n).map(|_| rng.uniform() + 0.1).collect();
+        let b: Vec<f64> = (0..n).map(|_| rng.uniform() + 0.1).collect();
+        let dist =
+            |i: usize, j: usize| spar_sink::ot::cost::euclidean(&pts[i], &pts[j]);
+        let result = poisson_sparsify_uot(
+            |i, j| spar_sink::ot::cost::wfr_kernel_from_distance(dist(i, j), eta, eps),
+            |i, j| wfr_cost_from_distance(dist(i, j), eta),
+            &a,
+            &b,
+            1.0,
+            eps,
+            6.0 * s0(n),
+            1.0,
+            &mut rng,
+        );
+        let Ok((sketch, _)) = result else { continue };
+        let cutoff = std::f64::consts::PI * eta;
+        for (i, j, _, c) in sketch.iter() {
+            assert!(
+                dist(i, j) < cutoff,
+                "case {case} seed {seed}: blocked pair sampled (d = {})",
+                dist(i, j)
+            );
+            assert!(c.is_finite());
+        }
+    }
+}
+
+/// Property: generalized KL is non-negative and zero iff equal.
+#[test]
+fn prop_kl_nonnegative() {
+    let mut master = Rng::seed_from(0x1006);
+    for case in 0..200 {
+        let seed = master.next_u64();
+        let mut rng = Rng::seed_from(seed);
+        let n = 1 + rng.gen_range(20);
+        let x: Vec<f64> = (0..n).map(|_| rng.uniform() * 2.0).collect();
+        let y: Vec<f64> = (0..n).map(|_| rng.uniform() * 2.0 + 1e-9).collect();
+        let kl = kl_divergence(&x, &y);
+        assert!(kl >= -1e-12, "case {case} seed {seed}: KL {kl}");
+        let self_kl = kl_divergence(&x, &x.iter().map(|v| v.max(1e-12)).collect::<Vec<_>>());
+        assert!(self_kl.abs() < 1e-9, "case {case} seed {seed}");
+    }
+}
+
+/// Property: the sparse OT objective is invariant under the (u*c, v/c)
+/// scaling gauge.
+#[test]
+fn prop_objective_gauge_invariance() {
+    let mut master = Rng::seed_from(0x1007);
+    for case in 0..CASES {
+        let seed = master.next_u64();
+        let mut rng = Rng::seed_from(seed);
+        let (kernel, cost, a, b) = random_instance(&mut rng, 32);
+        let s = 8.0 * s0(a.len());
+        let (sketch, _) = poisson_sparsify_ot(
+            |i, j| kernel.get(i, j),
+            |i, j| cost.get(i, j),
+            &a,
+            &b,
+            s,
+            1.0,
+            &mut rng,
+        )
+        .unwrap();
+        let params = SinkhornParams::default();
+        let Ok((u, v, ..)) = sparse_scalings(&sketch, &a, &b, 1.0, &params) else { continue };
+        let o1 = sparse_ot_objective(&sketch, &u, &v, 0.1);
+        let c = 0.25 + rng.uniform() * 8.0;
+        let uc: Vec<f64> = u.iter().map(|x| x * c).collect();
+        let vc: Vec<f64> = v.iter().map(|x| x / c).collect();
+        let o2 = sparse_ot_objective(&sketch, &uc, &vc, 0.1);
+        assert!(
+            (o1 - o2).abs() < 1e-9 * o1.abs().max(1.0),
+            "case {case} seed {seed}: {o1} vs {o2}"
+        );
+    }
+}
+
+/// Property: UOT plan mass interpolates monotonically in lambda toward
+/// the geometric-mean compromise for imbalanced inputs.
+#[test]
+fn prop_uot_mass_monotone_in_lambda() {
+    let mut master = Rng::seed_from(0x1008);
+    for case in 0..8 {
+        let seed = master.next_u64();
+        let mut rng = Rng::seed_from(seed);
+        let (kernel, _cost, a0, b0) = random_instance(&mut rng, 24);
+        let a: Vec<f64> = a0.iter().map(|x| x * 3.0).collect();
+        let b: Vec<f64> = b0.iter().map(|x| x * 1.5).collect();
+        let params = SinkhornParams { delta: 1e-9, max_iters: 4000, strict: false };
+        let mass = |lam: f64, rng_params: &SinkhornParams| -> f64 {
+            let rho = lam / (lam + 0.1);
+            let (u, v, ..) = sinkhorn_scalings(&kernel, &a, &b, rho, rng_params).unwrap();
+            let (row, _) = plan_marginals_dense(&kernel, &u, &v);
+            row.iter().sum()
+        };
+        let m_small = mass(0.05, &params);
+        let m_large = mass(50.0, &params);
+        assert!(
+            m_small > m_large,
+            "case {case} seed {seed}: mass not decreasing ({m_small} -> {m_large})"
+        );
+    }
+}

@@ -1,0 +1,141 @@
+//! Integration tests over the AOT artifact path: JAX/Pallas → HLO text →
+//! PJRT CPU → Rust driver. These validate that the runtime-backed dense
+//! Sinkhorn agrees with the native Rust solver (the two independent
+//! implementations cross-check each other), including the padding path.
+//!
+//! Skipped gracefully when `artifacts/` has not been built.
+
+use std::sync::Arc;
+
+use spar_sink::linalg::Mat;
+use spar_sink::ot::cost::{gibbs_kernel, sq_euclidean_cost};
+use spar_sink::ot::sinkhorn::{sinkhorn_ot, SinkhornParams};
+use spar_sink::ot::uot::sinkhorn_uot;
+use spar_sink::rng::Rng;
+use spar_sink::runtime::{default_artifact_dir, manifest_path, ArtifactRegistry, DenseSinkhornRuntime};
+
+fn registry() -> Option<Arc<ArtifactRegistry>> {
+    let dir = default_artifact_dir();
+    if !manifest_path(&dir).exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Arc::new(ArtifactRegistry::open(&dir).expect("open registry")))
+}
+
+fn problem(n: usize, seed: u64, eps: f64) -> (Mat, Mat, Vec<f64>, Vec<f64>) {
+    let mut rng = Rng::seed_from(seed);
+    let pts: Vec<Vec<f64>> = (0..n)
+        .map(|_| (0..2).map(|_| rng.uniform()).collect())
+        .collect();
+    let cost = sq_euclidean_cost(&pts, &pts);
+    let kernel = gibbs_kernel(&cost, eps);
+    let a: Vec<f64> = (0..n).map(|_| rng.uniform() + 0.2).collect();
+    let sa: f64 = a.iter().sum();
+    let b: Vec<f64> = (0..n).map(|_| rng.uniform() + 0.2).collect();
+    let sb: f64 = b.iter().sum();
+    (
+        kernel,
+        cost,
+        a.iter().map(|x| x / sa).collect(),
+        b.iter().map(|x| x / sb).collect(),
+    )
+}
+
+#[test]
+fn runtime_ot_matches_native_solver_exact_size() {
+    let Some(reg) = registry() else { return };
+    let runtime = DenseSinkhornRuntime::new(reg.clone());
+    let n = *reg.sizes(spar_sink::runtime::Entry::SinkhornBlock).first().unwrap();
+    let eps = 0.1;
+    let (kernel, cost, a, b) = problem(n, 131, eps);
+    let native = sinkhorn_ot(&kernel, &cost, &a, &b, eps, &SinkhornParams::default()).unwrap();
+    let rt = runtime.solve_ot(&kernel, &cost, &a, &b, eps, 1e-6, 1000).unwrap();
+    let rel = (rt.objective - native.objective).abs() / native.objective.abs();
+    assert!(rel < 1e-3, "runtime {} vs native {} (rel {rel})", rt.objective, native.objective);
+    assert!(rt.converged);
+}
+
+#[test]
+fn runtime_ot_padding_path() {
+    let Some(reg) = registry() else { return };
+    let runtime = DenseSinkhornRuntime::new(reg);
+    // n = 50 is below the smallest menu size (64): exercises padding.
+    let n = 50;
+    let eps = 0.1;
+    let (kernel, cost, a, b) = problem(n, 137, eps);
+    let native = sinkhorn_ot(&kernel, &cost, &a, &b, eps, &SinkhornParams::default()).unwrap();
+    let rt = runtime.solve_ot(&kernel, &cost, &a, &b, eps, 1e-6, 1000).unwrap();
+    let rel = (rt.objective - native.objective).abs() / native.objective.abs();
+    assert!(rel < 1e-3, "padded runtime {} vs native {} (rel {rel})", rt.objective, native.objective);
+}
+
+#[test]
+fn runtime_uot_matches_native_solver() {
+    let Some(reg) = registry() else { return };
+    let runtime = DenseSinkhornRuntime::new(reg.clone());
+    let n = *reg.sizes(spar_sink::runtime::Entry::SinkhornBlock).first().unwrap();
+    let (lambda, eps) = (1.0, 0.1);
+    let (kernel, cost, mut a, mut b) = problem(n, 139, eps);
+    // Unbalance the masses.
+    for x in a.iter_mut() {
+        *x *= 5.0;
+    }
+    for x in b.iter_mut() {
+        *x *= 3.0;
+    }
+    let native =
+        sinkhorn_uot(&kernel, &cost, &a, &b, lambda, eps, &SinkhornParams::default()).unwrap();
+    let rt = runtime
+        .solve_uot(&kernel, &cost, &a, &b, lambda, eps, 1e-6, 1000)
+        .unwrap();
+    let rel = (rt.objective - native.objective).abs() / native.objective.abs();
+    assert!(rel < 1e-2, "runtime {} vs native {} (rel {rel})", rt.objective, native.objective);
+}
+
+#[test]
+fn runtime_scalings_match_native() {
+    let Some(reg) = registry() else { return };
+    let runtime = DenseSinkhornRuntime::new(reg.clone());
+    let n = *reg.sizes(spar_sink::runtime::Entry::SinkhornBlock).first().unwrap();
+    let eps = 0.2;
+    let (kernel, cost, a, b) = problem(n, 149, eps);
+    let native = sinkhorn_ot(&kernel, &cost, &a, &b, eps, &SinkhornParams::default()).unwrap();
+    let rt = runtime.solve_ot(&kernel, &cost, &a, &b, eps, 1e-6, 1000).unwrap();
+    // Scalings have a joint scale ambiguity (u*c, v/c); compare the plan
+    // marginals instead (both must satisfy them).
+    let plan_row = |u: &[f64], v: &[f64], i: usize| -> f64 {
+        (0..n).map(|j| u[i] * kernel.get(i, j) * v[j]).sum()
+    };
+    for i in (0..n).step_by(7) {
+        let r1 = plan_row(&native.u, &native.v, i);
+        let r2 = plan_row(&rt.u, &rt.v, i);
+        assert!((r1 - r2).abs() < 1e-4, "row {i}: {r1} vs {r2}");
+    }
+}
+
+#[test]
+fn runtime_reports_iteration_multiples() {
+    let Some(reg) = registry() else { return };
+    let block = reg.block_iters();
+    let runtime = DenseSinkhornRuntime::new(reg.clone());
+    let n = *reg.sizes(spar_sink::runtime::Entry::SinkhornBlock).first().unwrap();
+    let eps = 0.1;
+    let (kernel, cost, a, b) = problem(n, 151, eps);
+    let rt = runtime.solve_ot(&kernel, &cost, &a, &b, eps, 1e-6, 1000).unwrap();
+    assert_eq!(rt.iterations % block, 0);
+    assert!(rt.iterations > 0);
+}
+
+#[test]
+fn registry_caches_executables() {
+    let Some(reg) = registry() else { return };
+    let n = *reg.sizes(spar_sink::runtime::Entry::SinkhornBlock).first().unwrap();
+    let t0 = std::time::Instant::now();
+    let _e1 = reg.executable(spar_sink::runtime::Entry::SinkhornBlock, n).unwrap();
+    let first = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    let _e2 = reg.executable(spar_sink::runtime::Entry::SinkhornBlock, n).unwrap();
+    let second = t1.elapsed();
+    assert!(second < first / 2, "cache hit {second:?} should beat compile {first:?}");
+}

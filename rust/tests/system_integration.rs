@@ -1,0 +1,195 @@
+//! Cross-module integration tests: full pipelines exercising data
+//! generators → cost/kernel construction → solvers → metrics, and the
+//! coordinator under load, plus failure injection.
+
+use spar_sink::coordinator::{
+    CoordinatorConfig, DistanceJob, DistanceService, Measure, Method, ProblemSpec,
+};
+use spar_sink::data::echo::{frame_to_measure, generate, EchoConfig, Health};
+use spar_sink::data::synthetic::{instance, Scenario, SparsityRegime};
+use spar_sink::experiments::common::{
+    exact_ot, exact_uot, ot_cost, run_method_ot, run_method_uot, wfr_cost_at_density, Method as M,
+};
+use spar_sink::metrics::rmae;
+use spar_sink::rng::Rng;
+
+#[test]
+fn fig2_pipeline_shape_spar_beats_rand_beats_nothing() {
+    // One (scenario, eps, d) cell of Fig. 2 end to end: Spar-Sink must
+    // beat Rand-Sink at every budget on average.
+    let mut rng = Rng::seed_from(0x51);
+    let inst = instance(Scenario::C2, 300, 10, 1.0, 1.0, &mut rng);
+    let cost = ot_cost(&inst.points);
+    let eps = 0.1;
+    let truth = exact_ot(&cost, &inst.a, &inst.b, eps).unwrap();
+    let reps = 6;
+    let mut spar = Vec::new();
+    let mut rand = Vec::new();
+    for _ in 0..reps {
+        spar.push(run_method_ot(M::SparSink, &cost, &inst.a, &inst.b, eps, 8.0, &mut rng).unwrap());
+        rand.push(run_method_ot(M::RandSink, &cost, &inst.a, &inst.b, eps, 8.0, &mut rng).unwrap());
+    }
+    let truths = vec![truth; reps];
+    assert!(
+        rmae(&spar, &truths) < rmae(&rand, &truths),
+        "spar {} !< rand {}",
+        rmae(&spar, &truths),
+        rmae(&rand, &truths)
+    );
+}
+
+#[test]
+fn fig3_pipeline_nys_fails_where_spar_succeeds() {
+    // The paper's motivating regime: sparse WFR kernel. Nys-Sink either
+    // errors or is far worse than Spar-Sink.
+    let mut rng = Rng::seed_from(0x52);
+    let inst = instance(Scenario::C1, 200, 5, 5.0, 3.0, &mut rng);
+    let cost = wfr_cost_at_density(&inst.points, SparsityRegime::R3.density());
+    let (lambda, eps) = (0.1, 0.1);
+    let truth = exact_uot(&cost, &inst.a, &inst.b, lambda, eps).unwrap();
+    let spar =
+        run_method_uot(M::SparSink, &cost, &inst.a, &inst.b, lambda, eps, 16.0, &mut rng).unwrap();
+    let spar_err = (spar - truth).abs() / truth.abs();
+    match run_method_uot(M::NysSink, &cost, &inst.a, &inst.b, lambda, eps, 16.0, &mut rng) {
+        Ok(nys) => {
+            let nys_err = (nys - truth).abs() / truth.abs();
+            assert!(spar_err < nys_err, "spar {spar_err} !< nys {nys_err}");
+        }
+        Err(_) => { /* outright failure is the expected outcome too */ }
+    }
+    assert!(spar_err < 0.5, "spar error too large: {spar_err}");
+}
+
+#[test]
+fn echo_to_distance_pipeline() {
+    // Synthetic video -> measures -> coordinator WFR jobs -> distances
+    // that increase between distant cardiac phases.
+    let mut rng = Rng::seed_from(0x53);
+    let size = 32;
+    let video = generate(
+        &EchoConfig { size, frames: 16, period: 12.0, health: Health::Normal, noise: 0.0 },
+        &mut rng,
+    );
+    let m: Vec<Measure> = video
+        .frames
+        .iter()
+        .map(|f| {
+            let (p, w) = frame_to_measure(f, size, 0.05);
+            Measure::new(p, w)
+        })
+        .collect();
+    let service = DistanceService::start(CoordinatorConfig::default());
+    let spec = ProblemSpec { eta: size as f64 / 7.5, eps: 0.05, ..Default::default() };
+    // obj(0, 1) vs obj(0, ~ES): adjacent frames more similar than
+    // ES-vs-ED after the divergence debias.
+    let mk = |id: u64, j: usize| DistanceJob {
+        id,
+        source: m[0].clone(),
+        target: m[j].clone(),
+        method: Method::SparSink,
+        spec: spec.clone(),
+        seed: 100 + id,
+    };
+    let self0 = DistanceJob {
+        id: 9,
+        source: m[0].clone(),
+        target: m[0].clone(),
+        method: Method::SparSink,
+        spec: spec.clone(),
+        seed: 99,
+    };
+    let es = video.es_frames[0].min(m.len() - 1);
+    let results = service
+        .submit_all(vec![mk(0, 1), mk(1, es), self0.clone(), mk(2, 1), {
+            let mut j = self0;
+            j.id = 10;
+            j.target = m[1].clone();
+            j.source = m[1].clone();
+            j
+        }])
+        .unwrap();
+    let obj = |k: usize| results[k].objective;
+    let d_near = obj(0) - 0.5 * (obj(2) + obj(4));
+    // ES frame should be farther from frame 0 (ED) than frame 1 is.
+    let es_self = {
+        let svc_res = service
+            .submit_all(vec![DistanceJob {
+                id: 11,
+                source: m[es].clone(),
+                target: m[es].clone(),
+                method: Method::SparSink,
+                spec: spec.clone(),
+                seed: 111,
+            }])
+            .unwrap();
+        svc_res[0].objective
+    };
+    let d_far = obj(1) - 0.5 * (obj(2) + es_self);
+    assert!(
+        d_far > d_near,
+        "ES-ED divergence {d_far} should exceed adjacent-frame divergence {d_near}"
+    );
+    service.shutdown();
+}
+
+#[test]
+fn coordinator_backpressure_bounded_queue() {
+    // queue_cap = 1 with a single slow worker: submissions still all
+    // complete (blocking, not dropping).
+    let service = DistanceService::start(CoordinatorConfig {
+        workers: 1,
+        queue_cap: 1,
+        max_batch: 1,
+        batch_window: std::time::Duration::from_millis(1),
+    });
+    let mut rng = Rng::seed_from(0x54);
+    let pts: Vec<Vec<f64>> = (0..40).map(|_| vec![rng.uniform() * 5.0, rng.uniform() * 5.0]).collect();
+    let mass = vec![1.0 / 40.0; 40];
+    let m = Measure::new(pts, mass);
+    let jobs: Vec<DistanceJob> = (0..12)
+        .map(|i| DistanceJob {
+            id: i,
+            source: m.clone(),
+            target: m.clone(),
+            method: Method::RandSink,
+            spec: ProblemSpec { eta: 3.0, ..Default::default() },
+            seed: i,
+        })
+        .collect();
+    let results = service.submit_all(jobs).unwrap();
+    assert_eq!(results.len(), 12);
+    let metrics = service.shutdown();
+    assert_eq!(metrics.submitted, 12);
+    assert_eq!(metrics.completed + metrics.failed, 12);
+}
+
+#[test]
+fn failure_injection_empty_overlap() {
+    // Two measures with disjoint WFR supports: the solver must fail
+    // cleanly (reported error), not panic or hang.
+    let service = DistanceService::start(CoordinatorConfig::default());
+    let m1 = Measure::new(vec![vec![0.0, 0.0], vec![1.0, 0.0]], vec![0.6, 0.4]);
+    let m2 = Measure::new(vec![vec![500.0, 500.0], vec![501.0, 500.0]], vec![0.5, 0.5]);
+    let job = DistanceJob {
+        id: 0,
+        source: m1,
+        target: m2,
+        method: Method::SparSink,
+        spec: ProblemSpec { eta: 1.0, ..Default::default() },
+        seed: 3,
+    };
+    let results = service.submit_all(vec![job]).unwrap();
+    assert!(results[0].error.is_some(), "expected clean failure, got {:?}", results[0]);
+    service.shutdown();
+}
+
+#[test]
+fn experiment_registry_runs_one_quick_cell() {
+    // The ablation experiment is the cheapest full registry entry; it
+    // must produce non-empty output rows in quick mode.
+    let outs = spar_sink::experiments::run("ablation", spar_sink::experiments::Profile::Quick)
+        .expect("ablation runs");
+    assert_eq!(outs.len(), 1);
+    assert!(!outs[0].rows.items().is_empty());
+    assert!(outs[0].text.contains("shrinkage"));
+}
