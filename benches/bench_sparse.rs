@@ -1,14 +1,19 @@
-//! Microbench: CSR sparse matvec vs dense matvec, and the Poisson
+//! Microbench: CSR sparse matvec vs dense matvec, the Poisson
 //! sparsifier construction pass — the O(s)-per-iteration claim of
-//! Section 5.2.
+//! Section 5.2 — and the multiplicative vs log-domain sparse scaling
+//! iteration throughput (both are O(nnz)/iter; the log engine pays one
+//! exp per stored entry per half-iteration).
 
 use spar_sink::bench::Bencher;
 use spar_sink::data::synthetic::{instance, Scenario};
 use spar_sink::experiments::common::ot_cost;
 use spar_sink::metrics::s0;
 use spar_sink::ot::cost::gibbs_kernel;
+use spar_sink::ot::sinkhorn::SinkhornParams;
 use spar_sink::rng::Rng;
-use spar_sink::sparse::poisson_sparsify_ot;
+use spar_sink::solvers::log_sparse::log_sparse_scalings;
+use spar_sink::solvers::sparse_loop::sparse_scalings;
+use spar_sink::sparse::{poisson_sparsify_ot, poisson_sparsify_ot_logk};
 
 fn main() {
     let mut bencher = Bencher::default();
@@ -53,6 +58,33 @@ fn main() {
                     &mut r,
                 )
                 .unwrap(),
+            );
+        });
+
+        // Multiplicative vs log-domain sparse scaling-loop throughput at
+        // a fixed iteration count (delta = 0 disables early stopping) on
+        // a log-kernel sketch of the same budget.
+        let mut r = Rng::seed_from(3);
+        let (logk_sketch, _) = poisson_sparsify_ot_logk(
+            |i, j| -cost.get(i, j) / eps,
+            |i, j| cost.get(i, j),
+            &inst.a,
+            &inst.b,
+            s,
+            1.0,
+            &mut r,
+        )
+        .unwrap();
+        let iter_params = SinkhornParams { delta: 0.0, max_iters: 25, strict: false };
+        bencher.bench(format!("sparse_scalings_mult/n={n}/25it"), || {
+            std::hint::black_box(
+                sparse_scalings(&logk_sketch, &inst.a, &inst.b, 1.0, &iter_params).unwrap(),
+            );
+        });
+        bencher.bench(format!("sparse_scalings_log/n={n}/25it"), || {
+            std::hint::black_box(
+                log_sparse_scalings(&logk_sketch, &inst.a, &inst.b, 1.0, eps, &iter_params)
+                    .unwrap(),
             );
         });
     }

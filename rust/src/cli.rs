@@ -76,7 +76,11 @@ pub fn usage() -> String {
      \n\
      OPTIONS:\n\
        --full        paper-scale parameters (default: quick profile)\n\
-       --out DIR     also write JSON rows to DIR/<id>.json\n"
+       --out DIR     also write JSON rows to DIR/<id>.json\n\
+       --method M    solve: spar-sink|spar-sink-log|rand-sink|nys-sink\n\
+                     serve: spar-sink|spar-sink-log|rand-sink|sinkhorn\n\
+                     (spar-sink-log forces the log-domain sparse backend\n\
+                     for small-eps jobs; see `experiment smalleps`)\n"
         .to_string()
 }
 

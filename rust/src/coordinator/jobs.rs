@@ -32,7 +32,14 @@ pub enum Method {
     Sinkhorn,
     /// The paper's Spar-Sink (Algorithm 4); payload = s multiplier
     /// in units of s₀(n) is carried in [`ProblemSpec::s_multiplier`].
+    /// Escalates to the log-domain backend on numerical failure.
     SparSink,
+    /// Spar-Sink with the log-domain sparse engine forced on: the
+    /// sketch is built from log-kernel values and the scaling loop runs
+    /// on dual potentials, so jobs stay solvable at ε far below the
+    /// multiplicative underflow point (these previously came back as
+    /// NaN distances).
+    SparSinkLog,
     /// Uniform-sampling ablation.
     RandSink,
 }
@@ -42,6 +49,7 @@ impl Method {
         match self {
             Method::Sinkhorn => "sinkhorn",
             Method::SparSink => "spar-sink",
+            Method::SparSinkLog => "spar-sink-log",
             Method::RandSink => "rand-sink",
         }
     }

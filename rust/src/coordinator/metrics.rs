@@ -4,7 +4,9 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
-/// Log-spaced latency buckets from 10 µs to ~100 s.
+/// Log-spaced latency buckets from 10 µs up: 32 log₂ buckets, so the
+/// last one starts at 10 µs · 2³¹ ≈ 2×10⁴ s (anything slower clamps
+/// into it).
 const BUCKET_COUNT: usize = 32;
 
 fn bucket_for(d: Duration) -> usize {
@@ -70,10 +72,18 @@ impl LatencyHistogram {
         if c == 0 {
             return Duration::ZERO;
         }
-        let target = (q.clamp(0.0, 1.0) * c as f64).ceil() as u64;
+        // Floor the target at 1 sample and skip empty buckets: with a
+        // target of 0, `seen >= target` held at bucket 0 even when that
+        // bucket was empty, so q = 0 reported 20 µs regardless of the
+        // recorded data.
+        let target = ((q.clamp(0.0, 1.0) * c as f64).ceil() as u64).max(1);
         let mut seen = 0;
         for (b, bucket) in self.buckets.iter().enumerate() {
-            seen += bucket.load(Ordering::Relaxed);
+            let in_bucket = bucket.load(Ordering::Relaxed);
+            if in_bucket == 0 {
+                continue;
+            }
+            seen += in_bucket;
             if seen >= target {
                 return Duration::from_micros(bucket_upper_us(b) as u64);
             }
@@ -151,6 +161,20 @@ mod tests {
         let h = LatencyHistogram::new();
         assert_eq!(h.mean(), Duration::ZERO);
         assert_eq!(h.quantile(0.9), Duration::ZERO);
+        assert_eq!(h.quantile(0.0), Duration::ZERO);
+    }
+
+    #[test]
+    fn quantile_zero_skips_empty_buckets() {
+        // A single 1 s sample: every quantile, including q = 0, must
+        // land in that sample's bucket — not report bucket 0's 20 µs
+        // upper bound just because the target rounded down to 0.
+        let h = LatencyHistogram::new();
+        h.record(Duration::from_secs(1));
+        let q0 = h.quantile(0.0);
+        assert!(q0 >= Duration::from_secs(1), "q0 {q0:?}");
+        assert_eq!(q0, h.quantile(0.5));
+        assert_eq!(q0, h.quantile(1.0));
     }
 
     #[test]

@@ -15,8 +15,9 @@ use crate::ot::cost::{euclidean, wfr_cost_from_distance, wfr_kernel_from_distanc
 use crate::ot::sinkhorn::SinkhornParams;
 use crate::ot::uot::{sinkhorn_uot, wfr_distance_from_objective};
 use crate::rng::Rng;
+use crate::solvers::backend::ScalingBackend;
 use crate::solvers::rand_sink::rand_sink_uot_oracle;
-use crate::solvers::spar_sink::{spar_sink_uot_oracle, SparSinkParams};
+use crate::solvers::spar_sink::{spar_sink_uot_logk_oracle, SparSinkParams};
 
 /// Coordinator configuration.
 #[derive(Clone, Debug)]
@@ -48,6 +49,14 @@ struct QueuedJob {
     respond: Sender<DistanceResult>,
 }
 
+/// A flushed group of jobs. The id is assigned by the batcher at flush
+/// time and travels WITH the batch — workers must not re-read the global
+/// counter, which races when several batches are in flight.
+struct Batch {
+    id: u64,
+    jobs: Vec<QueuedJob>,
+}
+
 struct Shared {
     submitted: AtomicU64,
     completed: AtomicU64,
@@ -70,7 +79,7 @@ impl DistanceService {
     /// Start the service threads.
     pub fn start(config: CoordinatorConfig) -> Self {
         let (tx, rx) = sync_channel::<QueuedJob>(config.queue_cap);
-        let (batch_tx, batch_rx) = mpsc::channel::<Vec<QueuedJob>>();
+        let (batch_tx, batch_rx) = mpsc::channel::<Batch>();
         let batch_rx = Arc::new(Mutex::new(batch_rx));
         let shared = Arc::new(Shared {
             submitted: AtomicU64::new(0),
@@ -188,7 +197,7 @@ fn size_bucket(job: &DistanceJob) -> u32 {
 
 fn batcher_loop(
     rx: Receiver<QueuedJob>,
-    batch_tx: Sender<Vec<QueuedJob>>,
+    batch_tx: Sender<Batch>,
     cfg: CoordinatorConfig,
     shared: Arc<Shared>,
 ) {
@@ -229,7 +238,7 @@ fn batcher_loop(
     }
 }
 
-fn flush(pending: &mut Vec<QueuedJob>, batch_tx: &Sender<Vec<QueuedJob>>, shared: &Arc<Shared>) {
+fn flush(pending: &mut Vec<QueuedJob>, batch_tx: &Sender<Batch>, shared: &Arc<Shared>) {
     // Group by (method, size bucket).
     let mut groups: HashMap<(Method, u32), Vec<QueuedJob>> = HashMap::new();
     for job in pending.drain(..) {
@@ -239,14 +248,18 @@ fn flush(pending: &mut Vec<QueuedJob>, batch_tx: &Sender<Vec<QueuedJob>>, shared
             .push(job);
     }
     for (_, group) in groups {
-        shared.batches.fetch_add(1, Ordering::Relaxed);
-        let _ = batch_tx.send(group);
+        // Assign the id HERE and carry it with the batch: workers
+        // re-reading the counter would see whatever batch was flushed
+        // most recently, reporting wrong/duplicate ids under
+        // concurrency.
+        let id = shared.batches.fetch_add(1, Ordering::Relaxed) + 1;
+        let _ = batch_tx.send(Batch { id, jobs: group });
     }
 }
 
-fn run_batch(batch: Vec<QueuedJob>, shared: &Arc<Shared>) {
-    let batch_id = shared.batches.load(Ordering::Relaxed);
-    for queued in batch {
+fn run_batch(batch: Batch, shared: &Arc<Shared>) {
+    let Batch { id: batch_id, jobs } = batch;
+    for queued in jobs {
         let result = solve_job(&queued.job, batch_id, queued.enqueued);
         let failed = result.error.is_some();
         shared.latency.record(result.latency);
@@ -272,6 +285,14 @@ fn solve_job(job: &DistanceJob, batch_id: u64, enqueued: Instant) -> DistanceRes
     let cost = |i: usize, j: usize| {
         wfr_cost_from_distance(euclidean(&src_pts[i], &tgt_pts[j]), spec.eta)
     };
+    // Log-kernel oracle for the sparsified arms: the WFR cost is finite
+    // below the π·η cutoff, so `−C/ε` stays finite where the linear
+    // kernel underflows at small ε. Sampling through it keeps every
+    // selected entry usable by the log-domain backend — a sketch built
+    // from the linear oracle would silently DROP underflowed entries,
+    // and no later escalation could recover them.
+    let log_kernel =
+        |i: usize, j: usize| crate::ot::cost::log_gibbs_from_cost(cost(i, j), spec.eps);
     let a = &job.source.mass;
     let b = &job.target.mass;
     let sink_params = SinkhornParams { delta: spec.delta, max_iters: spec.max_iters, strict: false };
@@ -281,20 +302,31 @@ fn solve_job(job: &DistanceJob, batch_id: u64, enqueued: Instant) -> DistanceRes
 
     let solved: Result<(f64, usize)> = match job.method {
         Method::Sinkhorn => {
-            let kmat = crate::linalg::Mat::from_fn(a.len(), b.len(), kernel);
-            let cmat = crate::linalg::Mat::from_fn(a.len(), b.len(), cost);
+            let kmat = crate::linalg::Mat::from_fn(a.len(), b.len(), &kernel);
+            let cmat = crate::linalg::Mat::from_fn(a.len(), b.len(), &cost);
             sinkhorn_uot(&kmat, &cmat, a, b, spec.lambda, spec.eps, &sink_params)
                 .map(|s| (s.objective, s.iterations))
         }
         Method::SparSink => {
-            let params = SparSinkParams { sinkhorn: sink_params, shrinkage: 1.0 };
-            spar_sink_uot_oracle(
-                kernel, cost, a, b, spec.lambda, spec.eps, s_abs, &params, &mut rng,
+            let params = SparSinkParams { sinkhorn: sink_params, ..Default::default() };
+            spar_sink_uot_logk_oracle(
+                log_kernel, &cost, a, b, spec.lambda, spec.eps, s_abs, &params, &mut rng,
+            )
+            .map(|s| (s.solution.objective, s.solution.iterations))
+        }
+        Method::SparSinkLog => {
+            let params = SparSinkParams {
+                sinkhorn: sink_params,
+                backend: ScalingBackend::LogDomain,
+                ..Default::default()
+            };
+            spar_sink_uot_logk_oracle(
+                log_kernel, &cost, a, b, spec.lambda, spec.eps, s_abs, &params, &mut rng,
             )
             .map(|s| (s.solution.objective, s.solution.iterations))
         }
         Method::RandSink => rand_sink_uot_oracle(
-            kernel, cost, a, b, spec.lambda, spec.eps, s_abs, &sink_params, &mut rng,
+            &kernel, &cost, a, b, spec.lambda, spec.eps, s_abs, &sink_params, &mut rng,
         )
         .map(|s| (s.solution.objective, s.solution.iterations)),
     };
@@ -408,6 +440,65 @@ mod tests {
         let m = service.shutdown();
         // At least two groups (one per method).
         assert!(m.batches >= 2, "batches {}", m.batches);
+    }
+
+    #[test]
+    fn batch_ids_are_distinct_per_batch() {
+        // max_batch = 1: every job flushes as its own batch, so with the
+        // id carried by the batch the results must report one distinct
+        // id per batch. (The racy version re-read the global counter
+        // and reported duplicate/late ids.)
+        let service = DistanceService::start(CoordinatorConfig {
+            workers: 4,
+            max_batch: 1,
+            ..Default::default()
+        });
+        let jobs: Vec<DistanceJob> = (0..6).map(|i| job(i, Method::RandSink, 20)).collect();
+        let results = service.submit_all(jobs).unwrap();
+        let mut ids: Vec<u64> = results.iter().map(|r| r.batch_id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        let m = service.shutdown();
+        assert_eq!(m.batches, 6);
+        assert_eq!(ids.len() as u64, m.batches, "duplicate batch ids: {ids:?}");
+        assert!(ids.iter().all(|&id| id >= 1 && id <= m.batches), "{ids:?}");
+    }
+
+    #[test]
+    fn spar_sink_log_jobs_survive_small_eps() {
+        // ε far below the multiplicative underflow point: SparSink jobs
+        // used to come back as NaN distances here; SparSinkLog runs the
+        // log-domain engine end to end.
+        let service = DistanceService::start(CoordinatorConfig {
+            workers: 2,
+            ..Default::default()
+        });
+        let mk = |id: u64| DistanceJob {
+            id,
+            source: toy_measure(50, 31, 1.0),
+            target: toy_measure(50, 32, 1.2),
+            method: Method::SparSinkLog,
+            spec: ProblemSpec {
+                eta: 3.0,
+                eps: 5e-4,
+                s_multiplier: 16.0,
+                ..Default::default()
+            },
+            seed: 7 + id,
+        };
+        let results = service.submit_all(vec![mk(0), mk(1)]).unwrap();
+        for r in &results {
+            assert!(r.error.is_none(), "job {}: {:?}", r.id, r.error);
+            assert!(
+                r.distance.is_finite() && r.distance >= 0.0,
+                "job {}: distance {}",
+                r.id,
+                r.distance
+            );
+        }
+        let m = service.shutdown();
+        assert_eq!(m.completed, 2);
+        assert_eq!(m.failed, 0);
     }
 
     #[test]

@@ -35,6 +35,7 @@ pub fn run(profile: Profile) -> ExperimentOutput {
         let params = SparSinkParams {
             sinkhorn: SinkhornParams::default(),
             shrinkage: theta,
+            ..Default::default()
         };
         let (rmae, se, _) = rmae_over_reps(
             reps,

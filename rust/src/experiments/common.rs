@@ -7,20 +7,25 @@ use crate::ot::cost::{gibbs_kernel, sq_euclidean_cost, wfr_cost};
 use crate::ot::sinkhorn::{sinkhorn_ot, SinkhornParams};
 use crate::ot::uot::sinkhorn_uot;
 use crate::rng::Rng;
+use crate::solvers::backend::ScalingBackend;
 use crate::solvers::nys_sink::{nys_sink_ot, nys_sink_uot, NysSinkParams};
 use crate::solvers::rand_sink::{rand_sink_ot, rand_sink_uot};
 use crate::solvers::spar_sink::{spar_sink_ot, spar_sink_uot, SparSinkParams};
 use crate::util::json::Json;
 
-/// Subsampling-based methods compared in Figs. 2-3 and 8-10.
+/// Subsampling-based methods compared in Figs. 2-3 and 8-10, plus the
+/// log-domain Spar-Sink variant used by the small-ε harness.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Method {
     NysSink,
     RandSink,
     SparSink,
+    /// Spar-Sink with the log-domain sparse backend forced on.
+    SparSinkLog,
 }
 
 impl Method {
+    /// The three methods the paper's figures compare.
     pub fn all() -> [Method; 3] {
         [Method::NysSink, Method::RandSink, Method::SparSink]
     }
@@ -30,6 +35,7 @@ impl Method {
             Method::NysSink => "nys-sink",
             Method::RandSink => "rand-sink",
             Method::SparSink => "spar-sink",
+            Method::SparSinkLog => "spar-sink-log",
         }
     }
 }
@@ -76,6 +82,11 @@ pub fn run_method_ot(
     match method {
         Method::SparSink => spar_sink_ot(cost, a, b, eps, s_mult, &SparSinkParams::default(), rng)
             .map(|s| s.solution.objective),
+        Method::SparSinkLog => {
+            let params =
+                SparSinkParams { backend: ScalingBackend::LogDomain, ..Default::default() };
+            spar_sink_ot(cost, a, b, eps, s_mult, &params, rng).map(|s| s.solution.objective)
+        }
         Method::RandSink => {
             rand_sink_ot(cost, a, b, eps, s_mult, &SinkhornParams::default(), rng)
                 .map(|s| s.solution.objective)
@@ -123,6 +134,12 @@ pub fn run_method_uot(
             rng,
         )
         .map(|s| s.solution.objective),
+        Method::SparSinkLog => {
+            let params =
+                SparSinkParams { backend: ScalingBackend::LogDomain, ..Default::default() };
+            spar_sink_uot(cost, a, b, lambda, eps, s_mult, &params, rng)
+                .map(|s| s.solution.objective)
+        }
         Method::RandSink => rand_sink_uot(
             cost,
             a,
@@ -162,6 +179,15 @@ pub fn gibbs_kernel_inf(cost: &Mat, eps: f64) -> Mat {
 pub fn exact_ot(cost: &Mat, a: &[f64], b: &[f64], eps: f64) -> crate::error::Result<f64> {
     let kernel = gibbs_kernel(cost, eps);
     sinkhorn_ot(&kernel, cost, a, b, eps, &SinkhornParams::default()).map(|s| s.objective)
+}
+
+/// Exact OT truth that stays stable at small ε: routes through the
+/// backend abstraction — the multiplicative dense solve above the
+/// threshold, the dense log-domain solve below it or on failure.
+pub fn exact_ot_stable(cost: &Mat, a: &[f64], b: &[f64], eps: f64) -> crate::error::Result<f64> {
+    ScalingBackend::default()
+        .dense_ot(cost, a, b, eps, &SinkhornParams::default())
+        .map(|(s, _)| s.objective)
 }
 
 /// Exact UOT solve (truth for RMAE).

@@ -20,6 +20,7 @@ pub mod fig5;
 pub mod fig7;
 pub mod fig8;
 pub mod fig9_10;
+pub mod small_eps;
 pub mod table1;
 pub mod table2;
 pub mod theory;
@@ -78,6 +79,7 @@ pub fn registry() -> Vec<(&'static str, &'static str, Runner)> {
         ("table2", "Sinkhorn divergence (SSAE ingredient)", table2::run),
         ("ablation", "shrinkage theta + sampling-scheme ablations", ablation::run),
         ("theory", "empirical validation of Lemma 5 / Theorems 1 & 3", theory::run),
+        ("smalleps", "small-eps stability: multiplicative vs log-domain backend", small_eps::run),
     ]
 }
 

@@ -1,0 +1,109 @@
+//! Small-ε stability harness: sweeps ε across and below the
+//! multiplicative underflow point and reports, per scaling backend,
+//! failure counts and RMAE against the stable dense truth.
+//!
+//! With the cost normalized to c₀ = 1, `K = exp(−C/ε)` loses its last
+//! representable entries around ε ≈ c₀/708 ≈ 1.4×10⁻³ — below that,
+//! the multiplicative sparse loop either errors or collapses onto the
+//! degenerate all-zero plan, which is exactly what this sweep makes
+//! visible (`fail` counts plus RMAE ≈ 1). The log-domain backend (and
+//! `Auto`, which escalates to it) keeps solving.
+
+use super::common::{exact_ot_stable, ot_cost, rmae_over_reps, row};
+use super::{ExperimentOutput, Profile};
+use crate::data::synthetic::{instance, Scenario};
+use crate::rng::Rng;
+use crate::solvers::backend::ScalingBackend;
+use crate::solvers::spar_sink::{spar_sink_ot, SparSinkParams};
+use crate::util::json::Json;
+use crate::util::table::{f, Table};
+
+pub fn run(profile: Profile) -> ExperimentOutput {
+    let n = profile.pick(120, 500);
+    let reps = profile.reps(3, 20);
+    let s_mult = 16.0;
+    let mut rng = Rng::seed_from(0x5E95);
+    let inst = instance(Scenario::C1, n, 5, 1.0, 1.0, &mut rng);
+    let cost = ot_cost(&inst.points);
+
+    let backends: [(&str, ScalingBackend); 3] = [
+        ("multiplicative", ScalingBackend::Multiplicative),
+        ("log", ScalingBackend::LogDomain),
+        ("auto", ScalingBackend::default()),
+    ];
+    let mut table = Table::new(&["eps", "backend", "rmae", "se", "fail", "truth"]);
+    let mut rows = Vec::new();
+    for &eps in &[1e-1, 1e-2, 2e-3, 5e-4, 1e-4] {
+        let Ok(truth) = exact_ot_stable(&cost, &inst.a, &inst.b, eps) else {
+            table.row(vec![
+                format!("{eps:.0e}"),
+                "(truth failed)".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+            ]);
+            continue;
+        };
+        for (name, backend) in backends {
+            let params = SparSinkParams { backend, ..Default::default() };
+            let (rmae, se, failures) = rmae_over_reps(
+                reps,
+                truth,
+                |r| {
+                    spar_sink_ot(&cost, &inst.a, &inst.b, eps, s_mult, &params, r)
+                        .map(|s| s.solution.objective)
+                },
+                &mut rng,
+            );
+            table.row(vec![
+                format!("{eps:.0e}"),
+                name.into(),
+                f(rmae, 4),
+                f(se, 4),
+                failures.to_string(),
+                f(truth, 4),
+            ]);
+            rows.push(row(vec![
+                ("eps", Json::num(eps)),
+                ("backend", Json::str(name)),
+                ("rmae", Json::num(rmae)),
+                ("se", Json::num(se)),
+                ("failures", Json::num(failures as f64)),
+                ("truth", Json::num(truth)),
+            ]));
+        }
+    }
+    ExperimentOutput {
+        id: "smalleps",
+        text: format!(
+            "Small-eps backend stability (n={n}, s={s_mult}s0, {reps} reps)\n{}",
+            table.render()
+        ),
+        rows: Json::arr(rows),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_profile_runs_and_reports_all_backends() {
+        let out = run(Profile::Quick);
+        assert_eq!(out.id, "smalleps");
+        // 5 eps values x 3 backends.
+        assert_eq!(out.rows.items().len(), 15);
+        // At the smallest eps the log backend must have zero failures.
+        let log_small = out
+            .rows
+            .items()
+            .iter()
+            .find(|r| {
+                r.get("backend").and_then(|b| b.as_str()) == Some("log")
+                    && r.get("eps").and_then(|e| e.as_f64()) == Some(1e-4)
+            })
+            .expect("missing log row");
+        assert_eq!(log_small.get("failures").and_then(|x| x.as_f64()), Some(0.0));
+    }
+}

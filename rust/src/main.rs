@@ -84,6 +84,7 @@ fn cmd_solve(args: &Args) -> i32 {
     let method = match args.get("method").unwrap_or("spar-sink") {
         "nys-sink" => Method::NysSink,
         "rand-sink" => Method::RandSink,
+        "spar-sink-log" => Method::SparSinkLog,
         _ => Method::SparSink,
     };
 
@@ -136,6 +137,7 @@ fn cmd_serve(args: &Args) -> i32 {
     let method = match args.get("method").unwrap_or("spar-sink") {
         "sinkhorn" => Method::Sinkhorn,
         "rand-sink" => Method::RandSink,
+        "spar-sink-log" => Method::SparSinkLog,
         _ => Method::SparSink,
     };
     let size = 40;

@@ -62,6 +62,19 @@ pub fn gibbs_kernel(cost: &Mat, eps: f64) -> Mat {
     cost.map(|c| if c.is_infinite() { 0.0 } else { (-c / eps).exp() })
 }
 
+/// Log-Gibbs kernel entry `ln K = −C/ε`, mapping `C = ∞` (blocked
+/// transport) to −∞. The single blocked-entry convention shared by every
+/// log-kernel oracle — the Spar-Sink `_logk` entry points and the
+/// coordinator build their sketches through this.
+#[inline]
+pub fn log_gibbs_from_cost(c: f64, eps: f64) -> f64 {
+    if c.is_infinite() {
+        f64::NEG_INFINITY
+    } else {
+        -c / eps
+    }
+}
+
 /// Fraction of non-zero entries in a kernel (used to calibrate η for the
 /// paper's R1/R2/R3 sparsity regimes: ~70%, ~50%, ~30% nnz).
 pub fn kernel_density(kernel: &Mat) -> f64 {

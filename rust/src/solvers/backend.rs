@@ -1,0 +1,399 @@
+//! Scaling-loop backend selection: one switch for the four Sinkhorn
+//! iteration engines —
+//!
+//! | backend | dense | sparse |
+//! |---|---|---|
+//! | `Multiplicative` | `ot::sinkhorn` / `ot::uot` | `solvers::sparse_loop` |
+//! | `LogDomain` | `ot::log_sinkhorn` | `solvers::log_sparse` |
+//!
+//! `Auto` (the default) picks multiplicative above an ε threshold and
+//! the stabilized log-domain engine below it, and ESCALATES a
+//! multiplicative solve to the log engine when it fails numerically:
+//! an explicit [`Error::Numerical`] (diverged scalings, non-finite
+//! objective), a sketch whose stored kernel values materially
+//! underflowed (fully, or > 1% of entries on a log-built sketch —
+//! the multiplicative loop would silently iterate a biased
+//! sub-sketch), or a loop that "converged" to the degenerate all-zero
+//! plan.
+//!
+//! The default threshold is calibrated to costs normalized to
+//! `c₀ = max C = 1` (the standard preprocessing in
+//! `experiments::common::normalize_cost`): `exp(−c₀/ε)` hits f64's
+//! smallest positive normal at ε ≈ c₀/708 ≈ 1.4×10⁻³, so
+//! [`DEFAULT_LOG_EPS_THRESHOLD`] = 2×10⁻³ switches just above the
+//! cliff. Escalation-on-failure covers un-normalized costs, where the
+//! cliff sits at a different ε.
+
+use super::{log_sparse, sparse_loop};
+use crate::error::{Error, Result};
+use crate::linalg::Mat;
+use crate::ot::cost::gibbs_kernel;
+use crate::ot::log_sinkhorn::log_sinkhorn_ot;
+use crate::ot::sinkhorn::{sinkhorn_ot, SinkhornParams};
+use crate::ot::uot::uot_rho;
+use crate::ot::SinkhornSolution;
+use crate::sparse::CsrMatrix;
+
+/// ε below which `Auto` goes straight to the log-domain engine (for
+/// costs normalized to c₀ = 1; see the module docs).
+pub const DEFAULT_LOG_EPS_THRESHOLD: f64 = 2e-3;
+
+/// Which iteration engine runs the scaling loop.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ScalingBackend {
+    /// Classic multiplicative `u/v` updates — fastest, but underflows
+    /// for small ε.
+    Multiplicative,
+    /// Log-domain stabilized potentials — robust at any ε, roughly one
+    /// `exp` per stored entry per iteration instead of one multiply.
+    LogDomain,
+    /// Multiplicative above `eps_threshold`, log-domain below it or on
+    /// numerical failure of the multiplicative loop.
+    Auto {
+        /// ε below which the log engine is picked up front.
+        eps_threshold: f64,
+    },
+}
+
+impl Default for ScalingBackend {
+    fn default() -> Self {
+        ScalingBackend::Auto { eps_threshold: DEFAULT_LOG_EPS_THRESHOLD }
+    }
+}
+
+/// The engine that actually produced a solution.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    Multiplicative,
+    LogDomain,
+}
+
+/// The multiplicative loop cannot work when stored kernel values
+/// underflowed to 0. Fully underflowed sketches would silently
+/// "converge" to the all-zero plan; on a log-built sketch even a
+/// partial underflow means the loop iterates a biased sub-sketch
+/// (underflowed entries carry a finite log-kernel but are invisible to
+/// linear arithmetic), so escalate once that bias is material (> 1% of
+/// stored entries). One O(nnz) pass, paid only under the `Auto` policy.
+fn multiplicative_hopeless(sketch: &CsrMatrix, a: &[f64]) -> bool {
+    if sketch.nnz() == 0 || !a.iter().any(|&x| x > 0.0) {
+        return false;
+    }
+    let underflowed = sketch.iter().filter(|&(_, _, k, _)| k == 0.0).count();
+    if underflowed == sketch.nnz() {
+        return true;
+    }
+    sketch.has_log_kernel() && underflowed * 100 > sketch.nnz()
+}
+
+/// Partial-underflow collapse: the loop ran but every row scaling hit
+/// the `sketch_div` zero branch — the plan is empty while the problem
+/// is not. Treated as a failure worth escalating.
+fn degenerate_all_zero(sol: &SinkhornSolution, sketch: &CsrMatrix, a: &[f64]) -> bool {
+    sketch.nnz() > 0 && a.iter().any(|&x| x > 0.0) && sol.u.iter().all(|&x| x == 0.0)
+}
+
+fn mult_sparse_ot(
+    sketch: &CsrMatrix,
+    a: &[f64],
+    b: &[f64],
+    eps: f64,
+    params: &SinkhornParams,
+) -> Result<SinkhornSolution> {
+    let (u, v, iterations, displacement, converged) =
+        sparse_loop::sparse_scalings(sketch, a, b, 1.0, params)?;
+    let objective = sparse_loop::sparse_ot_objective(sketch, &u, &v, eps);
+    sparse_loop::solution(u, v, objective, iterations, displacement, converged)
+}
+
+fn mult_sparse_uot(
+    sketch: &CsrMatrix,
+    a: &[f64],
+    b: &[f64],
+    lambda: f64,
+    eps: f64,
+    params: &SinkhornParams,
+) -> Result<SinkhornSolution> {
+    let rho = uot_rho(lambda, eps);
+    let (u, v, iterations, displacement, converged) =
+        sparse_loop::sparse_scalings(sketch, a, b, rho, params)?;
+    let objective = sparse_loop::sparse_uot_objective(sketch, a, b, &u, &v, lambda, eps);
+    sparse_loop::solution(u, v, objective, iterations, displacement, converged)
+}
+
+fn log_sparse_ot_solve(
+    sketch: &CsrMatrix,
+    a: &[f64],
+    b: &[f64],
+    eps: f64,
+    params: &SinkhornParams,
+) -> Result<SinkhornSolution> {
+    let (phi, psi, iterations, displacement, converged) =
+        log_sparse::log_sparse_scalings(sketch, a, b, 1.0, eps, params)?;
+    let objective = log_sparse::log_sparse_ot_objective(sketch, &phi, &psi, eps);
+    log_sparse::solution(phi, psi, objective, iterations, displacement, converged)
+}
+
+fn log_sparse_uot_solve(
+    sketch: &CsrMatrix,
+    a: &[f64],
+    b: &[f64],
+    lambda: f64,
+    eps: f64,
+    params: &SinkhornParams,
+) -> Result<SinkhornSolution> {
+    let rho = uot_rho(lambda, eps);
+    let (phi, psi, iterations, displacement, converged) =
+        log_sparse::log_sparse_scalings(sketch, a, b, rho, eps, params)?;
+    let objective = log_sparse::log_sparse_uot_objective(sketch, a, b, &phi, &psi, lambda, eps);
+    log_sparse::solution(phi, psi, objective, iterations, displacement, converged)
+}
+
+impl ScalingBackend {
+    /// The default `Auto` policy.
+    pub fn auto() -> Self {
+        Self::default()
+    }
+
+    /// Whether this policy may fall back to the log engine after a
+    /// multiplicative failure.
+    fn escalates(&self) -> bool {
+        matches!(self, ScalingBackend::Auto { .. })
+    }
+
+    /// Which concrete engine runs at this ε (before any
+    /// failure-triggered escalation).
+    pub fn kind_for(&self, eps: f64) -> BackendKind {
+        match *self {
+            ScalingBackend::Multiplicative => BackendKind::Multiplicative,
+            ScalingBackend::LogDomain => BackendKind::LogDomain,
+            ScalingBackend::Auto { eps_threshold } => {
+                if eps < eps_threshold {
+                    BackendKind::LogDomain
+                } else {
+                    BackendKind::Multiplicative
+                }
+            }
+        }
+    }
+
+    /// Sparse entropic-OT solve over a sketch (scalings + objective),
+    /// escalating per the policy. Returns the solution and the engine
+    /// that produced it.
+    pub fn sparse_ot(
+        &self,
+        sketch: &CsrMatrix,
+        a: &[f64],
+        b: &[f64],
+        eps: f64,
+        params: &SinkhornParams,
+    ) -> Result<(SinkhornSolution, BackendKind)> {
+        let mut kind = self.kind_for(eps);
+        if kind == BackendKind::Multiplicative
+            && self.escalates()
+            && multiplicative_hopeless(sketch, a)
+        {
+            kind = BackendKind::LogDomain;
+        }
+        if kind == BackendKind::Multiplicative {
+            match mult_sparse_ot(sketch, a, b, eps, params) {
+                Ok(sol) if !(self.escalates() && degenerate_all_zero(&sol, sketch, a)) => {
+                    return Ok((sol, BackendKind::Multiplicative));
+                }
+                Ok(_) => {} // degenerate collapse -> escalate
+                Err(Error::Numerical(_)) if self.escalates() => {} // diverged -> escalate
+                Err(e) => return Err(e),
+            }
+        }
+        log_sparse_ot_solve(sketch, a, b, eps, params).map(|s| (s, BackendKind::LogDomain))
+    }
+
+    /// Sparse entropic-UOT solve over a sketch, escalating per the
+    /// policy.
+    #[allow(clippy::too_many_arguments)]
+    pub fn sparse_uot(
+        &self,
+        sketch: &CsrMatrix,
+        a: &[f64],
+        b: &[f64],
+        lambda: f64,
+        eps: f64,
+        params: &SinkhornParams,
+    ) -> Result<(SinkhornSolution, BackendKind)> {
+        let mut kind = self.kind_for(eps);
+        if kind == BackendKind::Multiplicative
+            && self.escalates()
+            && multiplicative_hopeless(sketch, a)
+        {
+            kind = BackendKind::LogDomain;
+        }
+        if kind == BackendKind::Multiplicative {
+            match mult_sparse_uot(sketch, a, b, lambda, eps, params) {
+                Ok(sol) if !(self.escalates() && degenerate_all_zero(&sol, sketch, a)) => {
+                    return Ok((sol, BackendKind::Multiplicative));
+                }
+                Ok(_) => {}
+                Err(Error::Numerical(_)) if self.escalates() => {}
+                Err(e) => return Err(e),
+            }
+        }
+        log_sparse_uot_solve(sketch, a, b, lambda, eps, params)
+            .map(|s| (s, BackendKind::LogDomain))
+    }
+
+    /// Dense entropic-OT solve from a cost matrix: the multiplicative
+    /// path materializes the Gibbs kernel, the log path works on the
+    /// cost directly. This is the dense side of the unification — use it
+    /// wherever an "exact" reference must stay stable at small ε.
+    pub fn dense_ot(
+        &self,
+        cost: &Mat,
+        a: &[f64],
+        b: &[f64],
+        eps: f64,
+        params: &SinkhornParams,
+    ) -> Result<(SinkhornSolution, BackendKind)> {
+        match self.kind_for(eps) {
+            BackendKind::Multiplicative => {
+                let kernel = gibbs_kernel(cost, eps);
+                match sinkhorn_ot(&kernel, cost, a, b, eps, params) {
+                    Ok(sol) => Ok((sol, BackendKind::Multiplicative)),
+                    Err(Error::Numerical(_)) if self.escalates() => {
+                        log_sinkhorn_ot(cost, a, b, eps, params)
+                            .map(|s| (s, BackendKind::LogDomain))
+                    }
+                    Err(e) => Err(e),
+                }
+            }
+            BackendKind::LogDomain => {
+                log_sinkhorn_ot(cost, a, b, eps, params).map(|s| (s, BackendKind::LogDomain))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ot::cost::sq_euclidean_cost;
+    use crate::sparse::csr::CsrMatrix as Csr;
+
+    fn toy(n: usize) -> (Mat, Vec<f64>, Vec<f64>) {
+        let pts: Vec<Vec<f64>> = (0..n)
+            .map(|i| vec![(i as f64 * 0.618).fract(), (i as f64 * 0.383).fract()])
+            .collect();
+        let cost = sq_euclidean_cost(&pts, &pts);
+        let a = vec![1.0 / n as f64; n];
+        let b: Vec<f64> = (0..n).map(|i| 1.0 + (i % 2) as f64).collect();
+        let sb: f64 = b.iter().sum();
+        (cost, a, b.iter().map(|x| x / sb).collect())
+    }
+
+    fn full_csr_logk(cost: &Mat, eps: f64) -> Csr {
+        let rows = (0..cost.rows())
+            .map(|i| {
+                (0..cost.cols())
+                    .map(|j| {
+                        let c = cost.get(i, j);
+                        let lk = -c / eps;
+                        (j as u32, lk.exp(), lk, c)
+                    })
+                    .collect()
+            })
+            .collect();
+        Csr::from_rows_logk(cost.rows(), cost.cols(), rows)
+    }
+
+    #[test]
+    fn auto_picks_engine_by_eps() {
+        let auto = ScalingBackend::default();
+        assert_eq!(auto.kind_for(0.1), BackendKind::Multiplicative);
+        assert_eq!(auto.kind_for(1e-4), BackendKind::LogDomain);
+        assert_eq!(
+            ScalingBackend::Multiplicative.kind_for(1e-9),
+            BackendKind::Multiplicative
+        );
+        assert_eq!(ScalingBackend::LogDomain.kind_for(1.0), BackendKind::LogDomain);
+    }
+
+    #[test]
+    fn backends_agree_at_moderate_eps() {
+        let (cost, a, b) = toy(20);
+        let eps = 0.1;
+        let sk = full_csr_logk(&cost, eps);
+        let params = SinkhornParams { delta: 0.0, max_iters: 300, strict: false };
+        let (mult, km) = ScalingBackend::Multiplicative
+            .sparse_ot(&sk, &a, &b, eps, &params)
+            .unwrap();
+        let (logd, kl) = ScalingBackend::LogDomain.sparse_ot(&sk, &a, &b, eps, &params).unwrap();
+        let (auto, ka) = ScalingBackend::default().sparse_ot(&sk, &a, &b, eps, &params).unwrap();
+        assert_eq!(km, BackendKind::Multiplicative);
+        assert_eq!(kl, BackendKind::LogDomain);
+        assert_eq!(ka, BackendKind::Multiplicative);
+        assert!((mult.objective - logd.objective).abs() < 1e-8);
+        assert!((mult.objective - auto.objective).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auto_escalates_on_fully_underflowed_sketch() {
+        // ε tiny but ABOVE the auto threshold would be the dangerous
+        // case; force it by using a zero threshold so Auto starts
+        // multiplicative, then sees the hopeless all-zero kernel. The
+        // cost is shifted by 1 so even the diagonal underflows.
+        let (cost, a, b) = toy(12);
+        let cost = cost.map(|c| c + 1.0);
+        let eps = 1e-6;
+        let sk = full_csr_logk(&cost, eps);
+        assert_eq!(sk.kernel_frob_norm(), 0.0, "expected full underflow");
+        let params = SinkhornParams { delta: 1e-8, max_iters: 300, strict: false };
+        let forced_mult = ScalingBackend::Auto { eps_threshold: 0.0 };
+        let (sol, kind) = forced_mult.sparse_ot(&sk, &a, &b, eps, &params).unwrap();
+        assert_eq!(kind, BackendKind::LogDomain, "should have escalated");
+        assert!(sol.objective.is_finite());
+        // The pure multiplicative backend on the same sketch collapses
+        // to the empty plan (objective 0) or errors — never a healthy
+        // positive objective.
+        match ScalingBackend::Multiplicative.sparse_ot(&sk, &a, &b, eps, &params) {
+            Ok(s) => assert!(s.objective <= 1e-12, "unexpectedly healthy: {}", s.objective),
+            Err(Error::Numerical(_)) => {}
+            Err(e) => panic!("unexpected error {e}"),
+        }
+    }
+
+    #[test]
+    fn dense_ot_unifies_both_loops() {
+        let (cost, a, b) = toy(16);
+        // Normalize so the documented threshold calibration applies.
+        let cost = crate::experiments::common::normalize_cost(&cost);
+        let params = SinkhornParams { delta: 1e-9, max_iters: 4000, strict: false };
+        // Moderate ε: auto runs multiplicative.
+        let (sol_m, kind_m) =
+            ScalingBackend::default().dense_ot(&cost, &a, &b, 0.1, &params).unwrap();
+        assert_eq!(kind_m, BackendKind::Multiplicative);
+        // Small ε: auto runs log-domain and stays finite.
+        let (sol_l, kind_l) =
+            ScalingBackend::default().dense_ot(&cost, &a, &b, 1e-4, &params).unwrap();
+        assert_eq!(kind_l, BackendKind::LogDomain);
+        assert!(sol_m.objective.is_finite());
+        assert!(sol_l.objective.is_finite());
+        // Both agree with the explicit log solver at moderate ε.
+        let reference = log_sinkhorn_ot(&cost, &a, &b, 0.1, &params).unwrap();
+        let rel = (sol_m.objective - reference.objective).abs() / reference.objective.abs();
+        assert!(rel < 1e-4, "mult {} vs log {}", sol_m.objective, reference.objective);
+    }
+
+    #[test]
+    fn uot_backends_agree_at_moderate_eps() {
+        let (cost, a, b) = toy(14);
+        let eps = 0.1;
+        let lambda = 1.0;
+        let sk = full_csr_logk(&cost, eps);
+        let params = SinkhornParams { delta: 0.0, max_iters: 400, strict: false };
+        let (mult, _) = ScalingBackend::Multiplicative
+            .sparse_uot(&sk, &a, &b, lambda, eps, &params)
+            .unwrap();
+        let (logd, _) =
+            ScalingBackend::LogDomain.sparse_uot(&sk, &a, &b, lambda, eps, &params).unwrap();
+        assert!((mult.objective - logd.objective).abs() < 1e-8, "{} vs {}", mult.objective, logd.objective);
+    }
+}

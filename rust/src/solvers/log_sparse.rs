@@ -1,0 +1,357 @@
+//! Log-domain stabilized sparse Sinkhorn: Algorithms 1/2 over a CSR
+//! sketch, iterated on the dual potentials `(φ, ψ) = (ln u, ln v)`:
+//!
+//! ```text
+//! φ_i ← ρ·(log a_i − LSE_j(ln K̃_ij + ψ_j))
+//! ψ_j ← ρ·(log b_j − LSE_i(ln K̃_ij + φ_i))
+//! ```
+//!
+//! with `ρ = 1` for OT and `ρ = λ/(λ+ε)` for UOT. The row/column
+//! log-sum-exp runs over STORED entries only ([`CsrMatrix::row_lse`] /
+//! [`CsrMatrix::col_lse`]), so the per-iteration cost is O(nnz) like the
+//! multiplicative sparse loop — but no kernel entry ever underflows:
+//! sketches built by the `_logk` sparsifiers carry exact `ln K̃` values
+//! even when `exp(−C/ε)` is below f64's minimum positive, the regime the
+//! paper flags citing Xie et al. (2020).
+//!
+//! Conventions mirror `sparse_loop::sketch_div`: a row/column with no
+//! stored entries (or a zero marginal) gets potential −∞ — scaling 0 —
+//! rather than a huge clamped value, preserving the stopping behaviour
+//! that Theorem 3's iteration bound relies on. The stopping rule is the
+//! dense log loop's: sup-norm displacement of the ε-scaled potentials
+//! at or below `δ·max(ε, 1e-12)`.
+
+use crate::error::{Error, Result};
+use crate::ot::objective::kl_divergence;
+use crate::ot::sinkhorn::SinkhornParams;
+use crate::ot::SinkhornSolution;
+use crate::sparse::CsrMatrix;
+
+/// Log-domain sparse scaling loop; `rho = 1` is OT, `rho = λ/(λ+ε)` is
+/// UOT. Returns `(φ, ψ, iterations, displacement, converged)` with the
+/// potentials in log-scaling space (`u = e^φ`, `v = e^ψ`; −∞ allowed).
+pub fn log_sparse_scalings(
+    sketch: &CsrMatrix,
+    a: &[f64],
+    b: &[f64],
+    rho: f64,
+    eps: f64,
+    params: &SinkhornParams,
+) -> Result<(Vec<f64>, Vec<f64>, usize, f64, bool)> {
+    if sketch.rows() != a.len() || sketch.cols() != b.len() {
+        return Err(Error::Dimension(format!(
+            "sketch {}x{} vs a[{}], b[{}]",
+            sketch.rows(),
+            sketch.cols(),
+            a.len(),
+            b.len()
+        )));
+    }
+    if eps <= 0.0 {
+        return Err(Error::InvalidParam("eps must be positive".into()));
+    }
+    let n = a.len();
+    let m = b.len();
+    let log_a: Vec<f64> =
+        a.iter().map(|&x| if x > 0.0 { x.ln() } else { f64::NEG_INFINITY }).collect();
+    let log_b: Vec<f64> =
+        b.iter().map(|&x| if x > 0.0 { x.ln() } else { f64::NEG_INFINITY }).collect();
+    let mut phi = vec![0.0; n];
+    let mut psi = vec![0.0; m];
+    let mut displacement = f64::INFINITY;
+    let mut iters = 0;
+    while iters < params.max_iters {
+        iters += 1;
+        let lse_rows = sketch.row_lse(&psi);
+        let new_phi: Vec<f64> = (0..n)
+            .map(|i| {
+                if log_a[i] == f64::NEG_INFINITY || lse_rows[i] == f64::NEG_INFINITY {
+                    f64::NEG_INFINITY
+                } else {
+                    rho * (log_a[i] - lse_rows[i])
+                }
+            })
+            .collect();
+        let lse_cols = sketch.col_lse(&new_phi);
+        let new_psi: Vec<f64> = (0..m)
+            .map(|j| {
+                if log_b[j] == f64::NEG_INFINITY || lse_cols[j] == f64::NEG_INFINITY {
+                    f64::NEG_INFINITY
+                } else {
+                    rho * (log_b[j] - lse_cols[j])
+                }
+            })
+            .collect();
+        if new_phi.iter().chain(new_psi.iter()).any(|x| x.is_nan()) {
+            return Err(Error::Numerical(format!(
+                "log-domain sparse potentials became NaN at iteration {iters}"
+            )));
+        }
+        // Sup-norm displacement of the ε-scaled potentials (α = ε·φ),
+        // matching the dense log loop's stopping statistic; pairs with a
+        // −∞ side count 0, as in the dense loop.
+        displacement = eps
+            * phi
+                .iter()
+                .zip(&new_phi)
+                .chain(psi.iter().zip(&new_psi))
+                .map(|(x, y)| if x.is_finite() && y.is_finite() { (x - y).abs() } else { 0.0 })
+                .fold(0.0f64, f64::max);
+        phi = new_phi;
+        psi = new_psi;
+        if displacement <= params.delta * eps.max(1e-12) {
+            return Ok((phi, psi, iters, displacement, true));
+        }
+    }
+    if params.strict {
+        return Err(Error::NotConverged { iters, err: displacement });
+    }
+    Ok((phi, psi, iters, displacement, false))
+}
+
+/// Entropic OT objective over the log-domain sparse plan
+/// `ln T̃_ij = φ_i + ln K̃_ij + ψ_j` (only sampled entries contribute).
+/// The entropy term uses the exact log-plan value, so no
+/// `ln(exp(·))` round trip can underflow.
+pub fn log_sparse_ot_objective(sketch: &CsrMatrix, phi: &[f64], psi: &[f64], eps: f64) -> f64 {
+    let mut transport = 0.0;
+    let mut entropy = 0.0;
+    for (i, j, lk, c) in sketch.iter_log() {
+        let lt = phi[i] + lk + psi[j];
+        if lt == f64::NEG_INFINITY {
+            continue;
+        }
+        let t = lt.exp();
+        if t > 0.0 {
+            transport += t * c;
+            entropy -= t * (lt - 1.0);
+        }
+    }
+    transport - eps * entropy
+}
+
+/// Row/column marginals of the log-domain sparse plan. The entry values
+/// `e^{φ+ln K̃+ψ}` are bounded by the marginal masses after a scaling
+/// pass, so the sums are safe in the linear domain.
+pub fn log_sparse_plan_marginals(
+    sketch: &CsrMatrix,
+    phi: &[f64],
+    psi: &[f64],
+) -> (Vec<f64>, Vec<f64>) {
+    let mut row = vec![0.0; sketch.rows()];
+    let mut col = vec![0.0; sketch.cols()];
+    for (i, j, lk, _) in sketch.iter_log() {
+        let lt = phi[i] + lk + psi[j];
+        if lt == f64::NEG_INFINITY {
+            continue;
+        }
+        let t = lt.exp();
+        row[i] += t;
+        col[j] += t;
+    }
+    (row, col)
+}
+
+/// Entropic UOT objective (Eq. 10) over the log-domain sparse plan.
+#[allow(clippy::too_many_arguments)]
+pub fn log_sparse_uot_objective(
+    sketch: &CsrMatrix,
+    a: &[f64],
+    b: &[f64],
+    phi: &[f64],
+    psi: &[f64],
+    lambda: f64,
+    eps: f64,
+) -> f64 {
+    let base = log_sparse_ot_objective(sketch, phi, psi, eps);
+    let (row, col) = log_sparse_plan_marginals(sketch, phi, psi);
+    base + lambda * kl_divergence(&row, a) + lambda * kl_divergence(&col, b)
+}
+
+/// Assemble a [`SinkhornSolution`] from log-domain outputs. The returned
+/// `u`/`v` scalings are `e^φ`/`e^ψ` and may overflow to +∞ for tiny ε —
+/// as in the dense log solver, the potentials are what is numerically
+/// meaningful and the objective is evaluated before exponentiation.
+pub fn solution(
+    phi: Vec<f64>,
+    psi: Vec<f64>,
+    objective: f64,
+    iterations: usize,
+    displacement: f64,
+    converged: bool,
+) -> Result<SinkhornSolution> {
+    if !objective.is_finite() {
+        return Err(Error::Numerical("log-domain sparse objective is not finite".into()));
+    }
+    let u = phi.iter().map(|&x| x.exp()).collect();
+    let v = psi.iter().map(|&x| x.exp()).collect();
+    Ok(SinkhornSolution { u, v, objective, iterations, displacement, converged })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::ot::cost::{gibbs_kernel, sq_euclidean_cost};
+    use crate::ot::log_sinkhorn::log_sinkhorn_ot;
+    use crate::solvers::sparse_loop::{
+        sparse_ot_objective, sparse_scalings, sparse_uot_objective,
+    };
+    use crate::sparse::csr::CsrMatrix as Csr;
+
+    /// CSR holding the FULL kernel with exact log values `−C/ε`.
+    fn full_csr_logk(cost: &Mat, eps: f64) -> Csr {
+        let rows = (0..cost.rows())
+            .map(|i| {
+                (0..cost.cols())
+                    .map(|j| {
+                        let c = cost.get(i, j);
+                        let lk = -c / eps;
+                        (j as u32, lk.exp(), lk, c)
+                    })
+                    .collect()
+            })
+            .collect();
+        Csr::from_rows_logk(cost.rows(), cost.cols(), rows)
+    }
+
+    /// CSR holding the FULL kernel from linear values (no log storage).
+    fn full_csr(kernel: &Mat, cost: &Mat) -> Csr {
+        let rows = (0..kernel.rows())
+            .map(|i| {
+                (0..kernel.cols())
+                    .map(|j| (j as u32, kernel.get(i, j), cost.get(i, j)))
+                    .collect()
+            })
+            .collect();
+        Csr::from_rows(kernel.rows(), kernel.cols(), rows)
+    }
+
+    fn toy(n: usize) -> (Mat, Vec<f64>, Vec<f64>) {
+        let pts: Vec<Vec<f64>> = (0..n)
+            .map(|i| vec![(i as f64 * 0.618).fract(), (i as f64 * 0.383).fract()])
+            .collect();
+        let cost = sq_euclidean_cost(&pts, &pts);
+        let a = vec![1.0 / n as f64; n];
+        let b: Vec<f64> = (0..n).map(|i| 1.0 + (i % 2) as f64).collect();
+        let sb: f64 = b.iter().sum();
+        (cost, a, b.iter().map(|x| x / sb).collect())
+    }
+
+    #[test]
+    fn matches_multiplicative_sparse_loop_at_moderate_eps() {
+        // Fixed iteration count on both loops: the update maps are
+        // mathematically identical, so the objectives must agree.
+        let (cost, a, b) = toy(24);
+        let eps = 0.1;
+        let kernel = gibbs_kernel(&cost, eps);
+        let sk_lin = full_csr(&kernel, &cost);
+        let sk_log = full_csr_logk(&cost, eps);
+        let params = SinkhornParams { delta: 0.0, max_iters: 300, strict: false };
+        let (u, v, ..) = sparse_scalings(&sk_lin, &a, &b, 1.0, &params).unwrap();
+        let (phi, psi, ..) = log_sparse_scalings(&sk_log, &a, &b, 1.0, eps, &params).unwrap();
+        let o_lin = sparse_ot_objective(&sk_lin, &u, &v, eps);
+        let o_log = log_sparse_ot_objective(&sk_log, &phi, &psi, eps);
+        assert!((o_lin - o_log).abs() < 1e-8, "{o_lin} vs {o_log}");
+        // Potentials agree with the multiplicative scalings where finite.
+        for (ui, pi) in u.iter().zip(&phi) {
+            assert!((ui.ln() - pi).abs() < 1e-8, "{} vs {pi}", ui.ln());
+        }
+    }
+
+    #[test]
+    fn matches_dense_log_loop_at_small_eps_on_full_kernel() {
+        // The acceptance bar: at ε below the multiplicative underflow
+        // point, the sparse log loop on a full-kernel sketch matches
+        // log_sinkhorn_ot to 1e-8.
+        let (cost, a, b) = toy(16);
+        let eps = 5e-4;
+        let sk = full_csr_logk(&cost, eps);
+        let params = SinkhornParams { delta: 0.0, max_iters: 2000, strict: false };
+        let (phi, psi, ..) = log_sparse_scalings(&sk, &a, &b, 1.0, eps, &params).unwrap();
+        let o_sparse = log_sparse_ot_objective(&sk, &phi, &psi, eps);
+        let dense = log_sinkhorn_ot(&cost, &a, &b, eps, &params).unwrap();
+        assert!(
+            (o_sparse - dense.objective).abs() < 1e-8,
+            "sparse {o_sparse} vs dense {}",
+            dense.objective
+        );
+    }
+
+    #[test]
+    fn uot_matches_multiplicative_sparse_loop_at_moderate_eps() {
+        let (cost, a, b) = toy(16);
+        let eps = 0.1;
+        let lambda = 1.0;
+        let rho = crate::ot::uot::uot_rho(lambda, eps);
+        let kernel = gibbs_kernel(&cost, eps);
+        let sk_lin = full_csr(&kernel, &cost);
+        let sk_log = full_csr_logk(&cost, eps);
+        let params = SinkhornParams { delta: 0.0, max_iters: 400, strict: false };
+        let (u, v, ..) = sparse_scalings(&sk_lin, &a, &b, rho, &params).unwrap();
+        let (phi, psi, ..) = log_sparse_scalings(&sk_log, &a, &b, rho, eps, &params).unwrap();
+        let o_lin = sparse_uot_objective(&sk_lin, &a, &b, &u, &v, lambda, eps);
+        let o_log = log_sparse_uot_objective(&sk_log, &a, &b, &phi, &psi, lambda, eps);
+        assert!((o_lin - o_log).abs() < 1e-8, "{o_lin} vs {o_log}");
+    }
+
+    #[test]
+    fn survives_tiny_eps_on_full_kernel() {
+        let (cost, a, b) = toy(16);
+        let eps = 1e-5;
+        let sk = full_csr_logk(&cost, eps);
+        // The bulk of the linear kernel underflowed (cost/ε reaches the
+        // tens of thousands), yet the log loop still produces a finite
+        // objective.
+        let underflowed = sk.iter().filter(|&(_, _, k, _)| k == 0.0).count();
+        assert!(underflowed > 16 * 16 / 2, "only {underflowed} entries underflowed");
+        let params = SinkhornParams { delta: 1e-8, max_iters: 500, strict: false };
+        let (phi, psi, iters, _, _) =
+            log_sparse_scalings(&sk, &a, &b, 1.0, eps, &params).unwrap();
+        assert!(iters >= 1);
+        let obj = log_sparse_ot_objective(&sk, &phi, &psi, eps);
+        assert!(obj.is_finite());
+        // At ε → 0 the entropic objective approaches the non-negative
+        // unregularized OT cost (the ε·H term bounds the slack).
+        assert!(obj > -1e-3, "objective {obj}");
+    }
+
+    #[test]
+    fn empty_rows_get_neg_infinity_potentials() {
+        let sk = Csr::from_rows_logk(
+            3,
+            3,
+            vec![
+                vec![(0, 1.0, 0.0, 0.0)],
+                vec![],
+                vec![(2, 1.0, 0.0, 0.0)],
+            ],
+        );
+        let a = [0.4, 0.2, 0.4];
+        let b = [0.4, 0.2, 0.4];
+        let params = SinkhornParams { delta: 1e-8, max_iters: 50, strict: false };
+        let (phi, psi, ..) = log_sparse_scalings(&sk, &a, &b, 1.0, 0.1, &params).unwrap();
+        assert_eq!(phi[1], f64::NEG_INFINITY, "empty row keeps scaling 0");
+        assert_eq!(psi[1], f64::NEG_INFINITY, "empty column keeps scaling 0");
+        assert!(phi[0].is_finite() && phi[2].is_finite());
+        let obj = log_sparse_ot_objective(&sk, &phi, &psi, 0.1);
+        assert!(obj.is_finite());
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        let (cost, a, b) = toy(8);
+        let sk = full_csr_logk(&cost, 0.1);
+        let params = SinkhornParams::default();
+        assert!(log_sparse_scalings(&sk, &a[..4], &b, 1.0, 0.1, &params).is_err());
+        assert!(log_sparse_scalings(&sk, &a, &b, 1.0, 0.0, &params).is_err());
+    }
+
+    #[test]
+    fn solution_rejects_non_finite_objective() {
+        assert!(solution(vec![0.0], vec![0.0], f64::NAN, 1, 0.0, true).is_err());
+        let sol = solution(vec![0.0, f64::NEG_INFINITY], vec![0.0], 1.0, 3, 0.0, true).unwrap();
+        assert_eq!(sol.u[1], 0.0, "e^{{-inf}} scaling is 0");
+        assert_eq!(sol.iterations, 3);
+    }
+}

@@ -9,8 +9,15 @@
 //! | [`greenkhorn`] | Altschuler et al. 2017 | O(n) per greedy update |
 //! | [`screenkhorn`] | Alaya et al. 2019 | O((n/κ)²) |
 //! | [`spar_ibp`] | Alg. 6 (this paper) | O(ms) |
+//!
+//! The multiplicative sparse loop ([`sparse_loop`]) and its log-domain
+//! stabilized twin ([`log_sparse`]) sit behind the
+//! [`backend::ScalingBackend`] switch, which auto-escalates to the log
+//! engine for small ε or on numerical failure.
 
+pub mod backend;
 pub mod greenkhorn;
+pub mod log_sparse;
 pub mod nys_sink;
 pub mod proximal;
 pub mod rand_sink;

@@ -3,6 +3,7 @@
 //! probability `p_ij = 1/n²`. Implemented as the θ = 0 shrinkage limit
 //! of the Poisson sparsifier so the code path is shared.
 
+use super::backend::BackendKind;
 use super::spar_sink::SparSolution;
 use super::sparse_loop;
 use crate::error::Result;
@@ -52,7 +53,7 @@ pub fn rand_sink_ot(
         sparse_loop::sparse_scalings(&sketch, a, b, 1.0, params)?;
     let objective = sparse_loop::sparse_ot_objective(&sketch, &u, &v, eps);
     let solution = sparse_loop::solution(u, v, objective, iterations, displacement, converged)?;
-    Ok(SparSolution { solution, stats })
+    Ok(SparSolution { solution, stats, backend: BackendKind::Multiplicative })
 }
 
 /// Rand-Sink for UOT.
@@ -87,7 +88,7 @@ pub fn rand_sink_uot(
         sparse_loop::sparse_scalings(&sketch, a, b, rho, params)?;
     let objective = sparse_loop::sparse_uot_objective(&sketch, a, b, &u, &v, lambda, eps);
     let solution = sparse_loop::solution(u, v, objective, iterations, displacement, converged)?;
-    Ok(SparSolution { solution, stats })
+    Ok(SparSolution { solution, stats, backend: BackendKind::Multiplicative })
 }
 
 /// Oracle variant of [`rand_sink_uot`] for problems whose kernel is
@@ -114,7 +115,7 @@ pub fn rand_sink_uot_oracle(
         sparse_loop::sparse_scalings(&sketch, a, b, rho, params)?;
     let objective = sparse_loop::sparse_uot_objective(&sketch, a, b, &u, &v, lambda, eps);
     let solution = sparse_loop::solution(u, v, objective, iterations, displacement, converged)?;
-    Ok(SparSolution { solution, stats })
+    Ok(SparSolution { solution, stats, backend: BackendKind::Multiplicative })
 }
 
 #[cfg(test)]

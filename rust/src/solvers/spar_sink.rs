@@ -1,15 +1,24 @@
 //! Algorithms 3 & 4 — the Spar-Sink solver: importance-sparsify the
 //! kernel with the paper's probabilities (Eqs. 9 / 11), then run the
 //! sparse Sinkhorn loop and evaluate the objective over the sketch.
+//!
+//! The dense-cost entry points build their sketches through the
+//! log-kernel samplers, so every sampled entry keeps an exact `ln K̃`
+//! even when `exp(−C/ε)` underflows — combined with the
+//! [`ScalingBackend`] escalation this makes `spar_sink_ot` /
+//! `spar_sink_uot` return finite objectives at ε orders of magnitude
+//! below the multiplicative loop's underflow point.
 
-use super::sparse_loop;
+use super::backend::{BackendKind, ScalingBackend};
 use crate::error::Result;
 use crate::linalg::Mat;
 use crate::ot::sinkhorn::SinkhornParams;
-use crate::ot::uot::uot_rho;
 use crate::ot::SinkhornSolution;
 use crate::rng::Rng;
-use crate::sparse::{poisson_sparsify_ot, poisson_sparsify_uot, CsrMatrix, SparsifyStats};
+use crate::sparse::{
+    poisson_sparsify_ot, poisson_sparsify_ot_logk, poisson_sparsify_uot,
+    poisson_sparsify_uot_logk, CsrMatrix, SparsifyStats,
+};
 
 /// Parameters for the Spar-Sink estimators.
 #[derive(Clone, Debug)]
@@ -20,11 +29,19 @@ pub struct SparSinkParams {
     /// (condition (ii) of Theorem 1); 1.0 = pure importance sampling,
     /// matching the paper's experiments.
     pub shrinkage: f64,
+    /// Scaling-loop backend; the default `Auto` escalates to the
+    /// stabilized log-domain engine for small ε or on numerical failure
+    /// of the multiplicative loop.
+    pub backend: ScalingBackend,
 }
 
 impl Default for SparSinkParams {
     fn default() -> Self {
-        SparSinkParams { sinkhorn: SinkhornParams::default(), shrinkage: 1.0 }
+        SparSinkParams {
+            sinkhorn: SinkhornParams::default(),
+            shrinkage: 1.0,
+            backend: ScalingBackend::default(),
+        }
     }
 }
 
@@ -33,6 +50,8 @@ impl Default for SparSinkParams {
 pub struct SparSolution {
     pub solution: SinkhornSolution,
     pub stats: SparsifyStats,
+    /// Which scaling engine actually produced the solution.
+    pub backend: BackendKind,
 }
 
 /// Algorithm 3 with oracles: `s_multiplier` is the budget in units of
@@ -58,8 +77,29 @@ pub fn spar_sink_ot_oracle(
     solve_ot_on_sketch(&sketch, a, b, eps, params, stats)
 }
 
+/// Algorithm 3 (OT) from a LOG-kernel oracle `ln K(i,j)` (−∞ = blocked
+/// entry) — the stable entry point for ε far below the multiplicative
+/// underflow threshold: sampled entries keep exact log-kernel values.
+#[allow(clippy::too_many_arguments)]
+pub fn spar_sink_ot_logk_oracle(
+    log_kernel: impl Fn(usize, usize) -> f64 + Sync,
+    cost: impl Fn(usize, usize) -> f64 + Sync,
+    a: &[f64],
+    b: &[f64],
+    eps: f64,
+    s: f64,
+    params: &SparSinkParams,
+    rng: &mut Rng,
+) -> Result<SparSolution> {
+    let (sketch, stats) =
+        poisson_sparsify_ot_logk(log_kernel, cost, a, b, s, params.shrinkage, rng)?;
+    solve_ot_on_sketch(&sketch, a, b, eps, params, stats)
+}
+
 /// Algorithm 3 (OT) from a dense cost matrix; `s_multiplier` is in units
-/// of s₀(n) (the paper sweeps s ∈ {2,4,8,16}·s₀(n)).
+/// of s₀(n) (the paper sweeps s ∈ {2,4,8,16}·s₀(n)). The sketch is
+/// built with exact log-kernel values `−C_ij/ε`, so small-ε problems
+/// stay solvable through the log-domain backend.
 pub fn spar_sink_ot(
     cost: &Mat,
     a: &[f64],
@@ -70,15 +110,8 @@ pub fn spar_sink_ot(
     rng: &mut Rng,
 ) -> Result<SparSolution> {
     let s = resolve_budget(a.len(), s_multiplier);
-    spar_sink_ot_oracle(
-        |i, j| {
-            let c = cost.get(i, j);
-            if c.is_infinite() {
-                0.0
-            } else {
-                (-c / eps).exp()
-            }
-        },
+    spar_sink_ot_logk_oracle(
+        |i, j| crate::ot::cost::log_gibbs_from_cost(cost.get(i, j), eps),
         |i, j| cost.get(i, j),
         a,
         b,
@@ -97,12 +130,22 @@ fn solve_ot_on_sketch(
     params: &SparSinkParams,
     stats: SparsifyStats,
 ) -> Result<SparSolution> {
-    let (u, v, iterations, displacement, converged) =
-        sparse_loop::sparse_scalings(sketch, a, b, 1.0, &params.sinkhorn)?;
-    let objective = sparse_loop::sparse_ot_objective(sketch, &u, &v, eps);
-    let solution =
-        sparse_loop::solution(u, v, objective, iterations, displacement, converged)?;
-    Ok(SparSolution { solution, stats })
+    let (solution, backend) = params.backend.sparse_ot(sketch, a, b, eps, &params.sinkhorn)?;
+    Ok(SparSolution { solution, stats, backend })
+}
+
+fn solve_uot_on_sketch(
+    sketch: &CsrMatrix,
+    a: &[f64],
+    b: &[f64],
+    lambda: f64,
+    eps: f64,
+    params: &SparSinkParams,
+    stats: SparsifyStats,
+) -> Result<SparSolution> {
+    let (solution, backend) =
+        params.backend.sparse_uot(sketch, a, b, lambda, eps, &params.sinkhorn)?;
+    Ok(SparSolution { solution, stats, backend })
 }
 
 /// Algorithm 4 (UOT) from kernel/cost oracles.
@@ -129,18 +172,41 @@ pub fn spar_sink_uot_oracle(
         params.shrinkage,
         rng,
     )?;
-    let rho = uot_rho(lambda, eps);
-    let (u, v, iterations, displacement, converged) =
-        sparse_loop::sparse_scalings(&sketch, a, b, rho, &params.sinkhorn)?;
-    let objective =
-        sparse_loop::sparse_uot_objective(&sketch, a, b, &u, &v, lambda, eps);
-    let solution =
-        sparse_loop::solution(u, v, objective, iterations, displacement, converged)?;
-    Ok(SparSolution { solution, stats })
+    solve_uot_on_sketch(&sketch, a, b, lambda, eps, params, stats)
+}
+
+/// Algorithm 4 (UOT) from a LOG-kernel oracle: both the Eq. 11 sampling
+/// probabilities and the stored sketch values are computed in the log
+/// domain, so the pipeline survives full kernel underflow end to end.
+#[allow(clippy::too_many_arguments)]
+pub fn spar_sink_uot_logk_oracle(
+    log_kernel: impl Fn(usize, usize) -> f64 + Sync,
+    cost: impl Fn(usize, usize) -> f64 + Sync,
+    a: &[f64],
+    b: &[f64],
+    lambda: f64,
+    eps: f64,
+    s: f64,
+    params: &SparSinkParams,
+    rng: &mut Rng,
+) -> Result<SparSolution> {
+    let (sketch, stats) = poisson_sparsify_uot_logk(
+        log_kernel,
+        cost,
+        a,
+        b,
+        lambda,
+        eps,
+        s,
+        params.shrinkage,
+        rng,
+    )?;
+    solve_uot_on_sketch(&sketch, a, b, lambda, eps, params, stats)
 }
 
 /// Algorithm 4 (UOT) from a dense cost matrix; `s_multiplier` in units
-/// of s₀(n).
+/// of s₀(n). Routes through the log-kernel pipeline like
+/// [`spar_sink_ot`].
 #[allow(clippy::too_many_arguments)]
 pub fn spar_sink_uot(
     cost: &Mat,
@@ -153,15 +219,8 @@ pub fn spar_sink_uot(
     rng: &mut Rng,
 ) -> Result<SparSolution> {
     let s = resolve_budget(a.len(), s_multiplier);
-    spar_sink_uot_oracle(
-        |i, j| {
-            let c = cost.get(i, j);
-            if c.is_infinite() {
-                0.0
-            } else {
-                (-c / eps).exp()
-            }
-        },
+    spar_sink_uot_logk_oracle(
+        |i, j| crate::ot::cost::log_gibbs_from_cost(cost.get(i, j), eps),
         |i, j| cost.get(i, j),
         a,
         b,
@@ -276,6 +335,79 @@ mod tests {
         }
         let mean_err = errs.iter().sum::<f64>() / errs.len() as f64;
         assert!(mean_err < 0.9, "mean relative UOT error {mean_err}");
+    }
+
+    #[test]
+    fn tiny_eps_ot_succeeds_with_default_backend() {
+        // ε two orders of magnitude below the multiplicative underflow
+        // cliff: the multiplicative backend errors or collapses; the
+        // default (Auto) backend routes to the log engine and returns a
+        // finite, positive objective.
+        let n = 120;
+        let (cost, a, b, _) = problem(n, 23);
+        let eps = 1e-5;
+        let mut rng = Rng::seed_from(71);
+        let sol = spar_sink_ot(&cost, &a, &b, eps, 16.0, &SparSinkParams::default(), &mut rng)
+            .unwrap();
+        assert_eq!(sol.backend, crate::solvers::backend::BackendKind::LogDomain);
+        assert!(sol.solution.objective.is_finite());
+        assert!(sol.solution.objective > 0.0, "objective {}", sol.solution.objective);
+        // The multiplicative backend on the same sketch either errors,
+        // stalls, or collapses onto the handful of entries whose kernel
+        // survived underflow — a gross underestimate of the transport.
+        let mult_params = SparSinkParams {
+            backend: crate::solvers::backend::ScalingBackend::Multiplicative,
+            ..Default::default()
+        };
+        let mut rng = Rng::seed_from(71);
+        match spar_sink_ot(&cost, &a, &b, eps, 16.0, &mult_params, &mut rng) {
+            Err(crate::error::Error::Numerical(_)) => {}
+            Err(e) => panic!("unexpected error kind: {e}"),
+            Ok(s) => assert!(
+                !s.solution.converged || s.solution.objective < 0.5 * sol.solution.objective,
+                "multiplicative loop unexpectedly healthy at eps={eps}: {} vs log {}",
+                s.solution.objective,
+                sol.solution.objective
+            ),
+        }
+    }
+
+    #[test]
+    fn tiny_eps_uot_succeeds_with_default_backend() {
+        let n = 100;
+        let (_, a, b, pts) = problem(n, 29);
+        let a: Vec<f64> = a.iter().map(|x| x * 5.0).collect();
+        let b: Vec<f64> = b.iter().map(|x| x * 3.0).collect();
+        let eta = crate::ot::cost::calibrate_eta(&pts, &pts, 0.5, 1e-3);
+        let cost = wfr_cost(&pts, &pts, eta);
+        let (lambda, eps) = (1.0, 1e-4);
+        let mut rng = Rng::seed_from(37);
+        let sol = spar_sink_uot(
+            &cost,
+            &a,
+            &b,
+            lambda,
+            eps,
+            16.0,
+            &SparSinkParams::default(),
+            &mut rng,
+        )
+        .unwrap();
+        assert_eq!(sol.backend, crate::solvers::backend::BackendKind::LogDomain);
+        assert!(sol.solution.objective.is_finite());
+        assert!(sol.stats.nnz > 0);
+    }
+
+    #[test]
+    fn moderate_eps_still_runs_multiplicative() {
+        // Above the threshold nothing changes: Auto uses the fast path.
+        let n = 150;
+        let (cost, a, b, _) = problem(n, 41);
+        let mut rng = Rng::seed_from(43);
+        let sol = spar_sink_ot(&cost, &a, &b, 0.1, 8.0, &SparSinkParams::default(), &mut rng)
+            .unwrap();
+        assert_eq!(sol.backend, crate::solvers::backend::BackendKind::Multiplicative);
+        assert!(sol.solution.objective.is_finite());
     }
 
     #[test]

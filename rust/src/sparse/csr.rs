@@ -2,6 +2,13 @@
 //! carries both the (rescaled) kernel value `K̃_ij` and the ground cost
 //! `C_ij`, so the sparsified objective `<T̃, C> − εH(T̃)` can be
 //! evaluated over the sampled support without touching the dense cost.
+//!
+//! Entries may additionally carry an explicit log-kernel value
+//! `ln K̃_ij` (see [`CsrMatrix::from_rows_logk`]): for small ε the linear
+//! kernel `exp(−C/ε)` underflows f64 while its logarithm stays finite,
+//! and the log-domain scaling loop iterates on those values through the
+//! [`CsrMatrix::row_lse`] / [`CsrMatrix::col_lse`] log-sum-exp
+//! primitives without ever forming a kernel entry.
 
 use crate::error::{Error, Result};
 use crate::ot::barycenter::KernelOp;
@@ -20,6 +27,10 @@ pub struct CsrMatrix {
     kernel: Vec<f64>,
     /// Ground-cost values C_ij for the same entries, length nnz.
     cost: Vec<f64>,
+    /// Explicit log-kernel values `ln K̃_ij`, length nnz when present.
+    /// `None` means "derive from `kernel`" — correct whenever the kernel
+    /// values did not underflow.
+    log_kernel: Option<Vec<f64>>,
 }
 
 /// One sampled entry during construction.
@@ -70,7 +81,7 @@ impl CsrMatrix {
                 row_ptr[r] = row_ptr[r - 1];
             }
         }
-        Ok(CsrMatrix { rows, cols, row_ptr, col_idx, kernel, cost })
+        Ok(CsrMatrix { rows, cols, row_ptr, col_idx, kernel, cost, log_kernel: None })
     }
 
     /// Build directly from per-row entry lists (already sorted by column).
@@ -92,7 +103,59 @@ impl CsrMatrix {
             }
             row_ptr.push(col_idx.len());
         }
-        CsrMatrix { rows, cols, row_ptr, col_idx, kernel, cost }
+        CsrMatrix { rows, cols, row_ptr, col_idx, kernel, cost, log_kernel: None }
+    }
+
+    /// Build from per-row entry lists carrying explicit log-kernel
+    /// values: each entry is `(col, kernel, log_kernel, cost)`. The
+    /// kernel value may be 0 (underflowed) as long as the log-kernel is
+    /// finite — the log-domain loop then still sees the entry.
+    pub fn from_rows_logk(
+        rows: usize,
+        cols: usize,
+        row_entries: Vec<Vec<(u32, f64, f64, f64)>>,
+    ) -> Self {
+        assert_eq!(row_entries.len(), rows);
+        let nnz: usize = row_entries.iter().map(|r| r.len()).sum();
+        let mut row_ptr = Vec::with_capacity(rows + 1);
+        let mut col_idx = Vec::with_capacity(nnz);
+        let mut kernel = Vec::with_capacity(nnz);
+        let mut log_kernel = Vec::with_capacity(nnz);
+        let mut cost = Vec::with_capacity(nnz);
+        row_ptr.push(0);
+        for entries in row_entries {
+            for (c, k, lk, co) in entries {
+                debug_assert!((c as usize) < cols);
+                col_idx.push(c);
+                kernel.push(k);
+                log_kernel.push(lk);
+                cost.push(co);
+            }
+            row_ptr.push(col_idx.len());
+        }
+        CsrMatrix { rows, cols, row_ptr, col_idx, kernel, cost, log_kernel: Some(log_kernel) }
+    }
+
+    /// Whether explicit log-kernel values are stored (vs derived).
+    pub fn has_log_kernel(&self) -> bool {
+        self.log_kernel.is_some()
+    }
+
+    /// `ln K̃` for stored entry index `e` (derived from `kernel` when no
+    /// explicit log values are stored).
+    #[inline(always)]
+    fn log_kernel_at(&self, e: usize) -> f64 {
+        match &self.log_kernel {
+            Some(lk) => lk[e],
+            None => {
+                let k = self.kernel[e];
+                if k > 0.0 {
+                    k.ln()
+                } else {
+                    f64::NEG_INFINITY
+                }
+            }
+        }
     }
 
     pub fn rows(&self) -> usize {
@@ -165,10 +228,115 @@ impl CsrMatrix {
         )
     }
 
+    /// Row-wise log-sum-exp over stored entries:
+    /// `y_i = log Σ_{j ∈ row i} exp(ln K̃_ij + g_j)` — the log-domain
+    /// analogue of `matvec` (`(K̃ e^g)_i = e^{y_i}`), O(nnz) and parallel
+    /// over row blocks. Rows with no entries (or whose every term is
+    /// −∞) yield −∞, mirroring the `sketch_div` empty-row convention.
+    /// `g` values may be −∞ (absent columns) but must not be +∞/NaN.
+    pub fn row_lse(&self, g: &[f64]) -> Vec<f64> {
+        assert_eq!(g.len(), self.cols, "sparse row_lse dimension mismatch");
+        pool::parallel_map(self.rows, |i| {
+            let lo = self.row_ptr[i];
+            let hi = self.row_ptr[i + 1];
+            let mut max = f64::NEG_INFINITY;
+            for e in lo..hi {
+                let t = self.log_kernel_at(e) + g[self.col_idx[e] as usize];
+                if t > max {
+                    max = t;
+                }
+            }
+            if max == f64::NEG_INFINITY {
+                return f64::NEG_INFINITY;
+            }
+            let mut acc = 0.0;
+            for e in lo..hi {
+                let t = self.log_kernel_at(e) + g[self.col_idx[e] as usize];
+                acc += (t - max).exp();
+            }
+            max + acc.ln()
+        })
+    }
+
+    /// Column-wise log-sum-exp over stored entries:
+    /// `y_j = log Σ_{i: (i,j) stored} exp(ln K̃_ij + f_i)` — the
+    /// transpose of [`CsrMatrix::row_lse`]. Parallel over row blocks
+    /// with per-worker `(max, scaled-sum)` accumulators merged by the
+    /// streaming log-sum-exp rule.
+    pub fn col_lse(&self, f: &[f64]) -> Vec<f64> {
+        assert_eq!(f.len(), self.rows, "sparse col_lse dimension mismatch");
+        let cols = self.cols;
+        let (mx, sm) = pool::parallel_fold(
+            self.rows,
+            |start, end| {
+                let mut mx = vec![f64::NEG_INFINITY; cols];
+                let mut sm = vec![0.0f64; cols];
+                for i in start..end {
+                    if f[i] == f64::NEG_INFINITY {
+                        continue;
+                    }
+                    for e in self.row_ptr[i]..self.row_ptr[i + 1] {
+                        let t = self.log_kernel_at(e) + f[i];
+                        if t == f64::NEG_INFINITY {
+                            continue;
+                        }
+                        let j = self.col_idx[e] as usize;
+                        if t > mx[j] {
+                            sm[j] = sm[j] * (mx[j] - t).exp() + 1.0;
+                            mx[j] = t;
+                        } else {
+                            sm[j] += (t - mx[j]).exp();
+                        }
+                    }
+                }
+                (mx, sm)
+            },
+            |(mut mx_a, mut sm_a), (mx_b, sm_b)| {
+                for j in 0..cols {
+                    if mx_b[j] == f64::NEG_INFINITY {
+                        continue;
+                    }
+                    if mx_b[j] > mx_a[j] {
+                        sm_a[j] = sm_a[j] * (mx_a[j] - mx_b[j]).exp() + sm_b[j];
+                        mx_a[j] = mx_b[j];
+                    } else {
+                        sm_a[j] += sm_b[j] * (mx_b[j] - mx_a[j]).exp();
+                    }
+                }
+                (mx_a, sm_a)
+            },
+            (vec![f64::NEG_INFINITY; cols], vec![0.0; cols]),
+        );
+        (0..cols)
+            .map(|j| {
+                if mx[j] == f64::NEG_INFINITY {
+                    f64::NEG_INFINITY
+                } else {
+                    mx[j] + sm[j].ln()
+                }
+            })
+            .collect()
+    }
+
+    /// Entries of row `i` as (col, log_kernel, cost) triples.
+    #[inline]
+    pub fn row_entries_log(&self, i: usize) -> impl Iterator<Item = (usize, f64, f64)> + '_ {
+        let lo = self.row_ptr[i];
+        let hi = self.row_ptr[i + 1];
+        (lo..hi).map(move |e| (self.col_idx[e] as usize, self.log_kernel_at(e), self.cost[e]))
+    }
+
     /// Iterate all entries as (row, col, kernel, cost).
     pub fn iter(&self) -> impl Iterator<Item = (usize, usize, f64, f64)> + '_ {
         (0..self.rows).flat_map(move |i| {
             self.row_entries(i).map(move |(j, k, c)| (i, j, k, c))
+        })
+    }
+
+    /// Iterate all entries as (row, col, log_kernel, cost).
+    pub fn iter_log(&self) -> impl Iterator<Item = (usize, usize, f64, f64)> + '_ {
+        (0..self.rows).flat_map(move |i| {
+            self.row_entries_log(i).map(move |(j, lk, c)| (i, j, lk, c))
         })
     }
 
@@ -316,5 +484,121 @@ mod tests {
     fn empty_rows_are_fine() {
         let m = CsrMatrix::from_rows(4, 2, vec![vec![], vec![(1, 2.0, 0.0)], vec![], vec![]]);
         assert_eq!(m.matvec(&[1.0, 1.0]), vec![0.0, 2.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn row_lse_matches_log_of_matvec() {
+        let m = example();
+        // g = ln x for positive x: row_lse(ln x) must equal ln(K x).
+        let x = [0.5, 2.0, 1.5];
+        let g: Vec<f64> = x.iter().map(|v| v.ln()).collect();
+        let want = m.matvec(&x);
+        let got = m.row_lse(&g);
+        for (i, (lse, w)) in got.iter().zip(&want).enumerate() {
+            if *w == 0.0 {
+                assert_eq!(*lse, f64::NEG_INFINITY, "row {i}");
+            } else {
+                assert!((lse.exp() - w).abs() < 1e-12, "row {i}: {} vs {w}", lse.exp());
+            }
+        }
+    }
+
+    #[test]
+    fn col_lse_matches_log_of_matvec_t() {
+        let m = example();
+        let x = [0.7, 1.3, 0.9];
+        let f_vals: Vec<f64> = x.iter().map(|v| v.ln()).collect();
+        let want = m.matvec_t(&x);
+        let got = m.col_lse(&f_vals);
+        for (j, (lse, w)) in got.iter().zip(&want).enumerate() {
+            if *w == 0.0 {
+                assert_eq!(*lse, f64::NEG_INFINITY, "col {j}");
+            } else {
+                assert!((lse.exp() - w).abs() < 1e-12, "col {j}: {} vs {w}", lse.exp());
+            }
+        }
+    }
+
+    #[test]
+    fn lse_handles_neg_infinity_potentials() {
+        let m = example();
+        // Column 0 masked out entirely.
+        let g = [f64::NEG_INFINITY, 0.0, 0.0];
+        let got = m.row_lse(&g);
+        // Row 0 keeps its (2, 2.0) entry; row 1 is empty; row 2 keeps (1, 4.0).
+        assert!((got[0] - 2.0f64.ln()).abs() < 1e-12);
+        assert_eq!(got[1], f64::NEG_INFINITY);
+        assert!((got[2] - 4.0f64.ln()).abs() < 1e-12);
+        let f_vals = [f64::NEG_INFINITY, 0.0, 0.0];
+        let cols = m.col_lse(&f_vals);
+        // Only row 2 contributes: col 0 gets 3.0, col 1 gets 4.0, col 2 empty.
+        assert!((cols[0] - 3.0f64.ln()).abs() < 1e-12);
+        assert!((cols[1] - 4.0f64.ln()).abs() < 1e-12);
+        assert_eq!(cols[2], f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn logk_storage_survives_underflowed_kernels() {
+        // Kernel values below f64's minimum positive: the linear value is
+        // stored as 0, the log value stays finite and drives the LSE.
+        let lk = -800.0; // exp(-800) underflows
+        let m = CsrMatrix::from_rows_logk(
+            2,
+            2,
+            vec![
+                vec![(0, 0.0, lk, 1.0), (1, 0.0, lk + 1.0, 2.0)],
+                vec![(1, 0.0, lk - 1.0, 3.0)],
+            ],
+        );
+        assert!(m.has_log_kernel());
+        assert_eq!(m.nnz(), 3);
+        let got = m.row_lse(&[0.0, 0.0]);
+        // LSE(lk, lk+1) = lk + 1 + ln(1 + e^{-1}).
+        let want0 = lk + 1.0 + (1.0 + (-1.0f64).exp()).ln();
+        assert!((got[0] - want0).abs() < 1e-10, "{} vs {want0}", got[0]);
+        assert!((got[1] - (lk - 1.0)).abs() < 1e-10);
+        // Entries iterate with their log values.
+        let entries: Vec<_> = m.iter_log().collect();
+        assert_eq!(entries.len(), 3);
+        assert!((entries[0].2 - lk).abs() < 1e-12);
+    }
+
+    #[test]
+    fn derived_log_kernel_matches_ln_of_values() {
+        let m = example();
+        assert!(!m.has_log_kernel());
+        for ((_, _, k, _), (_, _, lk, _)) in m.iter().zip(m.iter_log()) {
+            assert!((k.ln() - lk).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn random_lse_matches_dense_reference() {
+        let mut rng = crate::rng::Rng::seed_from(123);
+        let n = 30;
+        let mut rows = vec![Vec::new(); n];
+        for row in rows.iter_mut() {
+            for j in 0..n {
+                if rng.bernoulli(0.25) {
+                    let k = rng.uniform() + 1e-3;
+                    row.push((j as u32, k, k.ln(), rng.uniform()));
+                }
+            }
+        }
+        let m = CsrMatrix::from_rows_logk(n, n, rows);
+        let g: Vec<f64> = (0..n).map(|i| ((i as f64 * 0.31).sin()) * 3.0).collect();
+        let x: Vec<f64> = g.iter().map(|v| v.exp()).collect();
+        let want_r = m.matvec(&x);
+        for (lse, w) in m.row_lse(&g).iter().zip(&want_r) {
+            if *w > 0.0 {
+                assert!((lse.exp() - w).abs() < 1e-10 * w.max(1.0));
+            }
+        }
+        let want_c = m.matvec_t(&x);
+        for (lse, w) in m.col_lse(&g).iter().zip(&want_c) {
+            if *w > 0.0 {
+                assert!((lse.exp() - w).abs() < 1e-10 * w.max(1.0));
+            }
+        }
     }
 }

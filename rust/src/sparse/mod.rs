@@ -1,13 +1,15 @@
 //! Sparse-matrix substrate for the importance sparsifier: CSR storage
 //! (with a parallel kernel/cost dual-value layout so objectives evaluate
-//! over sampled entries only), the Poisson element-sampling scheme
-//! (Eq. 7), and the paper's importance probabilities (Eqs. 9 and 11).
+//! over sampled entries only, plus optional exact log-kernel values for
+//! the log-domain backend), the Poisson element-sampling scheme (Eq. 7),
+//! and the paper's importance probabilities (Eqs. 9 and 11) in both
+//! linear- and log-kernel-oracle forms.
 
 pub mod csr;
 pub mod sampling;
 
 pub use csr::CsrMatrix;
 pub use sampling::{
-    poisson_sparsify_ot, poisson_sparsify_uot, poisson_sparsify_with,
-    sample_with_replacement_ot, SparsifyStats,
+    poisson_sparsify_ot, poisson_sparsify_ot_logk, poisson_sparsify_uot,
+    poisson_sparsify_uot_logk, poisson_sparsify_with, sample_with_replacement_ot, SparsifyStats,
 };

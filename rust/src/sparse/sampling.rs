@@ -17,6 +17,12 @@
 //!
 //! A shrinkage mixing `p ← θ·p + (1−θ)/n²` implements condition (ii) of
 //! Theorem 1 (probabilities bounded below by c₃·s/n²).
+//!
+//! The `_logk` variants take a LOG-kernel oracle `ln K(i,j)` instead:
+//! they sample the same probabilities but store exact log-kernel values
+//! in the sketch (`CsrMatrix::from_rows_logk`), so entries whose linear
+//! kernel value underflows f64 — the small-ε regime — are preserved for
+//! the log-domain scaling loop instead of being silently dropped.
 
 use super::csr::CsrMatrix;
 use crate::error::{Error, Result};
@@ -32,6 +38,72 @@ pub struct SparsifyStats {
     pub budget: f64,
     /// Entries whose clipped probability hit 1 (kept deterministically).
     pub saturated: usize,
+}
+
+fn validate_common(s: f64, shrinkage: f64) -> Result<()> {
+    if !(0.0..=1.0).contains(&shrinkage) {
+        return Err(Error::InvalidParam(format!("shrinkage {shrinkage} outside [0,1]")));
+    }
+    if s <= 0.0 {
+        return Err(Error::InvalidParam(format!("budget s = {s} must be positive")));
+    }
+    Ok(())
+}
+
+/// Shared Poisson-sampling core. `entry` gates an (i, j) BEFORE any RNG
+/// is consumed (out-of-support entries return `None` and never draw,
+/// keeping per-row streams deterministic) and yields the normalized
+/// importance probability plus an oracle context `G` (e.g. the kernel
+/// value, so it is evaluated once); `make` turns an accepted entry into
+/// `(kernel, log_kernel, cost)` given its context and clipped
+/// probability `p*`. Saturated entries (`p* ≥ 1`, kept
+/// deterministically) are counted across the support.
+fn poisson_core<G>(
+    n_rows: usize,
+    n_cols: usize,
+    entry: impl Fn(usize, usize) -> Option<(f64, G)> + Sync,
+    make: impl Fn(usize, usize, G, f64) -> Option<(f64, f64, f64)> + Sync,
+    s: f64,
+    shrinkage: f64,
+    rng: &mut Rng,
+) -> Result<(CsrMatrix, SparsifyStats)> {
+    validate_common(s, shrinkage)?;
+    let unif = 1.0 / ((n_rows as f64) * (n_cols as f64));
+    // Per-row RNG streams keep the pass deterministic AND parallel.
+    let mut seeds = Vec::with_capacity(n_rows);
+    for _ in 0..n_rows {
+        seeds.push(rng.next_u64());
+    }
+    let theta = shrinkage;
+    let rows: Vec<(Vec<(u32, f64, f64, f64)>, usize)> = pool::parallel_map(n_rows, |i| {
+        let mut r = Rng::seed_from(seeds[i]);
+        let mut entries = Vec::new();
+        let mut saturated = 0usize;
+        for j in 0..n_cols {
+            let Some((p_imp, ctx)) = entry(i, j) else {
+                continue;
+            };
+            let p = theta * p_imp + (1.0 - theta) * unif;
+            let p_star = (s * p).min(1.0);
+            if p_star <= 0.0 {
+                continue;
+            }
+            if p_star >= 1.0 {
+                saturated += 1;
+            }
+            if r.uniform() < p_star {
+                if let Some(made) = make(i, j, ctx, p_star) {
+                    entries.push((j as u32, made.0, made.1, made.2));
+                }
+            }
+        }
+        (entries, saturated)
+    });
+    let saturated: usize = rows.iter().map(|(_, c)| *c).sum();
+    let nnz: usize = rows.iter().map(|(r, _)| r.len()).sum();
+    let m =
+        CsrMatrix::from_rows_logk(n_rows, n_cols, rows.into_iter().map(|(r, _)| r).collect());
+    Ok((m, SparsifyStats { nnz, budget: s, saturated }))
 }
 
 /// Poisson-sparsify with explicit (unnormalized) probability oracle.
@@ -51,70 +123,45 @@ pub fn poisson_sparsify_with(
     shrinkage: f64,
     rng: &mut Rng,
 ) -> Result<(CsrMatrix, SparsifyStats)> {
-    if !(0.0..=1.0).contains(&shrinkage) {
-        return Err(Error::InvalidParam(format!("shrinkage {shrinkage} outside [0,1]")));
-    }
-    if s <= 0.0 || total_prob <= 0.0 {
+    if s > 0.0 && total_prob <= 0.0 {
         return Err(Error::InvalidParam(format!(
             "budget s = {s} and total probability {total_prob} must be positive"
         )));
     }
-    let n2 = (n_rows as f64) * (n_cols as f64);
-    let unif = 1.0 / n2;
-    // Per-row RNG streams keep the pass deterministic AND parallel.
-    let mut seeds = Vec::with_capacity(n_rows);
-    for _ in 0..n_rows {
-        seeds.push(rng.next_u64());
-    }
-    let theta = shrinkage;
-    let rows: Vec<Vec<(u32, f64, f64)>> = pool::parallel_map(n_rows, |i| {
-        let mut r = Rng::seed_from(seeds[i]);
-        let mut entries = Vec::new();
-        for j in 0..n_cols {
+    poisson_core(
+        n_rows,
+        n_cols,
+        |i, j| {
             let k = kernel(i, j);
-            if k <= 0.0 {
-                continue;
+            if k > 0.0 {
+                Some((prob(i, j) / total_prob, k))
+            } else {
+                None
             }
-            let p_imp = prob(i, j) / total_prob;
-            let p = theta * p_imp + (1.0 - theta) * unif;
-            let p_star = (s * p).min(1.0);
-            if p_star <= 0.0 {
-                continue;
-            }
-            if r.uniform() < p_star {
-                entries.push((j as u32, k / p_star, cost(i, j)));
-            }
-        }
-        entries
-    });
-    let saturated = 0; // filled below
-    let mut stats = SparsifyStats { nnz: 0, budget: s, saturated };
-    stats.nnz = rows.iter().map(|r| r.len()).sum();
-    let m = CsrMatrix::from_rows(n_rows, n_cols, rows);
-    Ok((m, stats))
+        },
+        |i, j, k, p_star| {
+            let kt = k / p_star;
+            Some((kt, kt.ln(), cost(i, j)))
+        },
+        s,
+        shrinkage,
+        rng,
+    )
 }
 
-/// Spar-Sink sparsifier for OT (Eq. 9): `p_ij ∝ √(a_i b_j)`.
-///
-/// Separability makes the normalization `Σ√a · Σ√b` exact in O(n), and —
-/// unlike the UOT probability — `p_ij` does not depend on `K_ij`, so the
-/// kernel oracle is only evaluated for SELECTED entries (the §Perf lazy
-/// evaluation: ~s kernel/exp calls instead of n²).
-pub fn poisson_sparsify_ot(
-    kernel: impl Fn(usize, usize) -> f64 + Sync,
-    cost: impl Fn(usize, usize) -> f64 + Sync,
+/// Inner separable sampler shared by the kernel- and log-kernel-oracle
+/// OT sparsifiers: `p*_ij = min(1, s(θ√(a_i b_j)/total + (1−θ)/nm))`
+/// depends only on the marginals, so `make` is invoked lazily for
+/// SELECTED entries only (~s oracle evaluations instead of n²).
+fn separable_ot_core(
+    make: impl Fn(usize, usize, f64) -> Option<(f64, f64, f64)> + Sync,
     a: &[f64],
     b: &[f64],
     s: f64,
     shrinkage: f64,
     rng: &mut Rng,
 ) -> Result<(CsrMatrix, SparsifyStats)> {
-    if !(0.0..=1.0).contains(&shrinkage) {
-        return Err(Error::InvalidParam(format!("shrinkage {shrinkage} outside [0,1]")));
-    }
-    if s <= 0.0 {
-        return Err(Error::InvalidParam(format!("budget s = {s} must be positive")));
-    }
+    validate_common(s, shrinkage)?;
     if a.iter().any(|&x| x < 0.0) || b.iter().any(|&x| x < 0.0) {
         return Err(Error::InvalidParam("marginals must be non-negative".into()));
     }
@@ -136,20 +183,23 @@ pub fn poisson_sparsify_ot(
         seeds.push(rng.next_u64());
     }
     let max_sqrt_b = sqrt_b.iter().cloned().fold(0.0f64, f64::max);
-    let rows: Vec<Vec<(u32, f64, f64)>> = pool::parallel_map(n, |i| {
+    let make = &make;
+    let rows: Vec<(Vec<(u32, f64, f64, f64)>, usize)> = pool::parallel_map(n, |i| {
         let mut r = Rng::seed_from(seeds[i]);
         let row_coef = s * shrinkage * sqrt_a[i] / total;
         let p_max = (row_coef * max_sqrt_b + unif_coef).min(1.0);
         let mut entries = Vec::new();
+        let mut saturated = 0usize;
         if p_max <= 0.0 {
-            return entries;
+            return (entries, saturated);
         }
         if p_max < 0.2 {
             // Geometric skip-sampling (thinning): bound every p*_ij by
             // p_max, jump ahead Geometric(p_max) columns, then accept
             // the landing column with probability p*_ij / p_max. Exact,
             // and reduces per-row work from O(m) RNG draws to
-            // O(m·p_max) ≈ O(s_i · max√b/avg√b).
+            // O(m·p_max) ≈ O(s_i · max√b/avg√b). Every probability in
+            // this branch is below p_max < 1, so nothing can saturate.
             let log1m = (1.0 - p_max).ln();
             let mut j = 0usize;
             loop {
@@ -160,10 +210,8 @@ pub fn poisson_sparsify_ot(
                 }
                 let p_star = (row_coef * sqrt_b[j] + unif_coef).min(1.0);
                 if r.uniform() * p_max < p_star {
-                    // Lazy kernel evaluation: only for selected entries.
-                    let k = kernel(i, j);
-                    if k > 0.0 {
-                        entries.push((j as u32, k / p_star, cost(i, j)));
+                    if let Some(entry) = make(i, j, p_star) {
+                        entries.push((j as u32, entry.0, entry.1, entry.2));
                     }
                 }
                 j += 1;
@@ -175,19 +223,95 @@ pub fn poisson_sparsify_ot(
                     continue;
                 }
                 if r.uniform() < p_star {
-                    let k = kernel(i, j);
-                    if k > 0.0 {
-                        entries.push((j as u32, k / p_star, cost(i, j)));
+                    if let Some(entry) = make(i, j, p_star) {
+                        // p* ≥ 1 always passes the draw, so counting
+                        // stored entries here matches poisson_core's
+                        // support-gated count: blocked entries (make =
+                        // None) are kept out of the statistic.
+                        if p_star >= 1.0 {
+                            saturated += 1;
+                        }
+                        entries.push((j as u32, entry.0, entry.1, entry.2));
                     }
                 }
             }
         }
-        entries
+        (entries, saturated)
     });
-    let mut stats = SparsifyStats { nnz: 0, budget: s, saturated: 0 };
-    stats.nnz = rows.iter().map(|r| r.len()).sum();
-    let msk = CsrMatrix::from_rows(n, m, rows);
-    Ok((msk, stats))
+    let saturated: usize = rows.iter().map(|(_, c)| *c).sum();
+    let nnz: usize = rows.iter().map(|(r, _)| r.len()).sum();
+    let msk = CsrMatrix::from_rows_logk(n, m, rows.into_iter().map(|(r, _)| r).collect());
+    Ok((msk, SparsifyStats { nnz, budget: s, saturated }))
+}
+
+/// Spar-Sink sparsifier for OT (Eq. 9): `p_ij ∝ √(a_i b_j)`.
+///
+/// Separability makes the normalization `Σ√a · Σ√b` exact in O(n), and —
+/// unlike the UOT probability — `p_ij` does not depend on `K_ij`, so the
+/// kernel oracle is only evaluated for SELECTED entries (the §Perf lazy
+/// evaluation: ~s kernel/exp calls instead of n²).
+pub fn poisson_sparsify_ot(
+    kernel: impl Fn(usize, usize) -> f64 + Sync,
+    cost: impl Fn(usize, usize) -> f64 + Sync,
+    a: &[f64],
+    b: &[f64],
+    s: f64,
+    shrinkage: f64,
+    rng: &mut Rng,
+) -> Result<(CsrMatrix, SparsifyStats)> {
+    let kernel = &kernel;
+    let cost = &cost;
+    separable_ot_core(
+        |i, j, p_star| {
+            // Lazy kernel evaluation: only for selected entries.
+            let k = kernel(i, j);
+            if k > 0.0 {
+                let kt = k / p_star;
+                Some((kt, kt.ln(), cost(i, j)))
+            } else {
+                None
+            }
+        },
+        a,
+        b,
+        s,
+        shrinkage,
+        rng,
+    )
+}
+
+/// Spar-Sink sparsifier for OT from a LOG-kernel oracle `ln K(i,j)`
+/// (−∞ = blocked entry). Selection probabilities are identical to
+/// [`poisson_sparsify_ot`] — same RNG stream, same sketch support — but
+/// entries whose kernel underflows f64 (`ln K < −745`) are stored with
+/// their exact log value instead of being dropped, so the log-domain
+/// scaling loop can still iterate on them.
+pub fn poisson_sparsify_ot_logk(
+    log_kernel: impl Fn(usize, usize) -> f64 + Sync,
+    cost: impl Fn(usize, usize) -> f64 + Sync,
+    a: &[f64],
+    b: &[f64],
+    s: f64,
+    shrinkage: f64,
+    rng: &mut Rng,
+) -> Result<(CsrMatrix, SparsifyStats)> {
+    let log_kernel = &log_kernel;
+    let cost = &cost;
+    separable_ot_core(
+        |i, j, p_star| {
+            let lk = log_kernel(i, j);
+            if lk == f64::NEG_INFINITY {
+                None
+            } else {
+                Some((lk.exp() / p_star, lk - p_star.ln(), cost(i, j)))
+            }
+        },
+        a,
+        b,
+        s,
+        shrinkage,
+        rng,
+    )
 }
 
 /// Spar-Sink sparsifier for UOT (Eq. 11):
@@ -281,6 +405,136 @@ pub fn poisson_sparsify_uot(
         return Err(Error::Numerical("UOT sampling weights are all zero (empty kernel?)".into()));
     }
     poisson_sparsify_with(n, m, &kernel, cost, &weight, total, s, shrinkage, rng)
+}
+
+/// Spar-Sink sparsifier for UOT from a LOG-kernel oracle: Eq. 11
+/// computed entirely in the log domain. Log-weights
+/// `lw_ij = α(log a_i + log b_j) + β·ln K_ij` are normalized via a
+/// streaming log-sum-exp, so the probabilities stay meaningful even when
+/// every linear kernel entry underflows f64 — the regime where
+/// [`poisson_sparsify_uot`] fails with an "all zero" error.
+#[allow(clippy::too_many_arguments)]
+pub fn poisson_sparsify_uot_logk(
+    log_kernel: impl Fn(usize, usize) -> f64 + Sync,
+    cost: impl Fn(usize, usize) -> f64 + Sync,
+    a: &[f64],
+    b: &[f64],
+    lambda: f64,
+    eps: f64,
+    s: f64,
+    shrinkage: f64,
+    rng: &mut Rng,
+) -> Result<(CsrMatrix, SparsifyStats)> {
+    if lambda <= 0.0 || eps <= 0.0 {
+        return Err(Error::InvalidParam("lambda and eps must be positive".into()));
+    }
+    // Fail on bad s/shrinkage BEFORE the O(n·m) weight passes.
+    validate_common(s, shrinkage)?;
+    let alpha = lambda / (2.0 * lambda + eps);
+    let beta = eps / (2.0 * lambda + eps);
+    let la: Vec<f64> =
+        a.iter().map(|&x| if x > 0.0 { x.ln() } else { f64::NEG_INFINITY }).collect();
+    let lb: Vec<f64> =
+        b.iter().map(|&x| if x > 0.0 { x.ln() } else { f64::NEG_INFINITY }).collect();
+    let n = a.len();
+    let m = b.len();
+    let log_kernel = &log_kernel;
+    let la_ref = &la;
+    let lb_ref = &lb;
+    // Encoding: NaN = blocked entry (zero kernel, never sampled);
+    // −∞ = zero importance weight but positive kernel — still reachable
+    // through the shrinkage floor, like the linear sampler's zero-mass
+    // rows (condition (ii) of Theorem 1).
+    let lw_eval = move |i: usize, j: usize| -> f64 {
+        let lk = log_kernel(i, j);
+        if lk == f64::NEG_INFINITY {
+            return f64::NAN;
+        }
+        if la_ref[i] == f64::NEG_INFINITY || lb_ref[j] == f64::NEG_INFINITY {
+            return f64::NEG_INFINITY;
+        }
+        alpha * (la_ref[i] + lb_ref[j]) + beta * lk
+    };
+    // Materialize the log-weights when they fit (one oracle call per
+    // entry instead of three: normalization + support + probability).
+    const MATERIALIZE_CAP: usize = 16_000_000;
+    let lw_store: Option<Vec<f64>> = if n * m <= MATERIALIZE_CAP {
+        Some(pool::parallel_map(n * m, |idx| lw_eval(idx / m, idx % m)))
+    } else {
+        None
+    };
+    let lw_store = &lw_store;
+    let lw = move |i: usize, j: usize| -> f64 {
+        match lw_store {
+            Some(v) => v[i * m + j],
+            None => lw_eval(i, j),
+        }
+    };
+    // Streaming LSE of the log-weights over the whole support — one
+    // O(n·m) pass, parallel over row blocks, (max, scaled-sum) pairs
+    // merged associatively.
+    let (mx, sm) = pool::parallel_fold(
+        n,
+        |start, end| {
+            let mut mx = f64::NEG_INFINITY;
+            let mut sm = 0.0f64;
+            for i in start..end {
+                for j in 0..m {
+                    let w = lw(i, j);
+                    if w == f64::NEG_INFINITY || w.is_nan() {
+                        continue;
+                    }
+                    if w > mx {
+                        sm = sm * (mx - w).exp() + 1.0;
+                        mx = w;
+                    } else {
+                        sm += (w - mx).exp();
+                    }
+                }
+            }
+            (mx, sm)
+        },
+        |(mx_a, sm_a), (mx_b, sm_b)| {
+            if mx_b == f64::NEG_INFINITY {
+                (mx_a, sm_a)
+            } else if mx_a == f64::NEG_INFINITY {
+                (mx_b, sm_b)
+            } else if mx_b > mx_a {
+                (mx_b, sm_a * (mx_a - mx_b).exp() + sm_b)
+            } else {
+                (mx_a, sm_a + sm_b * (mx_b - mx_a).exp())
+            }
+        },
+        (f64::NEG_INFINITY, 0.0),
+    );
+    if mx == f64::NEG_INFINITY {
+        return Err(Error::Numerical(
+            "UOT sampling weights are all zero (empty kernel?)".into(),
+        ));
+    }
+    let log_total = mx + sm.ln();
+    let cost = &cost;
+    poisson_core(
+        n,
+        m,
+        |i, j| {
+            let w = lw(i, j);
+            if w.is_nan() {
+                None // blocked entry (zero kernel)
+            } else if w == f64::NEG_INFINITY {
+                Some((0.0, ())) // zero weight; shrinkage floor applies
+            } else {
+                Some(((w - log_total).exp(), ()))
+            }
+        },
+        |i, j, _ctx, p_star| {
+            let lk = log_kernel(i, j);
+            Some((lk.exp() / p_star, lk - p_star.ln(), cost(i, j)))
+        },
+        s,
+        shrinkage,
+        rng,
+    )
 }
 
 /// Sampling-with-replacement ablation for OT (Appendix comparison /
@@ -578,5 +832,160 @@ mod tests {
             &mut rng
         )
         .is_err());
+    }
+
+    #[test]
+    fn saturated_counted_in_all_sampler_paths() {
+        // Budget so large that every probability clips at 1: all n²
+        // entries are kept deterministically and counted as saturated.
+        let n = 6;
+        let a = vec![1.0 / n as f64; n];
+        let b = vec![1.0 / n as f64; n];
+        let s = 3.0 * (n * n) as f64; // p_imp = 1/n² uniform -> s·p = 3
+        let mut rng = Rng::seed_from(21);
+
+        // Path 1: separable OT sampler (dense branch, p_max = 1 >= 0.2).
+        let (sk, stats) =
+            poisson_sparsify_ot(|_, _| 1.0, |_, _| 0.5, &a, &b, s, 1.0, &mut rng).unwrap();
+        assert_eq!(stats.nnz, n * n);
+        assert_eq!(stats.saturated, n * n, "ot sampler saturated {}", stats.saturated);
+        assert_eq!(sk.nnz(), n * n);
+
+        // Path 1b: log-kernel OT sampler counts identically.
+        let (_, stats_logk) =
+            poisson_sparsify_ot_logk(|_, _| 0.0, |_, _| 0.5, &a, &b, s, 1.0, &mut rng).unwrap();
+        assert_eq!(stats_logk.saturated, n * n);
+
+        // Path 2: generic probability-oracle sampler.
+        let (_, stats_with) = poisson_sparsify_with(
+            n,
+            n,
+            |_, _| 1.0,
+            |_, _| 0.5,
+            |_, _| 1.0,
+            (n * n) as f64,
+            s,
+            1.0,
+            &mut rng,
+        )
+        .unwrap();
+        assert_eq!(stats_with.saturated, n * n, "with sampler saturated {}", stats_with.saturated);
+
+        // Path 3: UOT samplers (uniform weights -> p_imp = 1/n²).
+        let (_, stats_uot) =
+            poisson_sparsify_uot(|_, _| 1.0, |_, _| 0.5, &a, &b, 1.0, 0.1, s, 1.0, &mut rng)
+                .unwrap();
+        assert_eq!(stats_uot.saturated, n * n, "uot sampler saturated {}", stats_uot.saturated);
+        let (_, stats_uot_logk) = poisson_sparsify_uot_logk(
+            |_, _| 0.0,
+            |_, _| 0.5,
+            &a,
+            &b,
+            1.0,
+            0.1,
+            s,
+            1.0,
+            &mut rng,
+        )
+        .unwrap();
+        assert_eq!(stats_uot_logk.saturated, n * n);
+    }
+
+    #[test]
+    fn skip_sampling_branch_reports_zero_saturated() {
+        // Small budget on a larger problem drives p_max below the 0.2
+        // skip-sampling threshold: probabilities cannot clip there, so
+        // saturated must be 0 while nnz is still populated.
+        let (kernel, cost, a, b) = toy(40);
+        let mut rng = Rng::seed_from(23);
+        let (_, stats) = poisson_sparsify_ot(
+            |i, j| kernel.get(i, j),
+            |i, j| cost.get(i, j),
+            &a,
+            &b,
+            100.0,
+            1.0,
+            &mut rng,
+        )
+        .unwrap();
+        assert_eq!(stats.saturated, 0);
+        assert!(stats.nnz > 0);
+    }
+
+    #[test]
+    fn logk_sampler_matches_linear_sampler_at_moderate_eps() {
+        // With no underflow the two OT samplers consume identical RNG
+        // streams and must produce identical sketches.
+        let (kernel, cost, a, b) = toy(24);
+        let mut r1 = Rng::seed_from(29);
+        let mut r2 = Rng::seed_from(29);
+        let (sk_lin, st_lin) = poisson_sparsify_ot(
+            |i, j| kernel.get(i, j),
+            |i, j| cost.get(i, j),
+            &a,
+            &b,
+            200.0,
+            1.0,
+            &mut r1,
+        )
+        .unwrap();
+        let (sk_log, st_log) = poisson_sparsify_ot_logk(
+            |i, j| kernel.get(i, j).ln(),
+            |i, j| cost.get(i, j),
+            &a,
+            &b,
+            200.0,
+            1.0,
+            &mut r2,
+        )
+        .unwrap();
+        assert_eq!(st_lin.nnz, st_log.nnz);
+        assert!(sk_log.has_log_kernel());
+        for ((i1, j1, k1, _), (i2, j2, k2, _)) in sk_lin.iter().zip(sk_log.iter()) {
+            assert_eq!((i1, j1), (i2, j2));
+            assert!((k1 - k2).abs() < 1e-12 * k1.abs().max(1.0), "{k1} vs {k2}");
+        }
+    }
+
+    #[test]
+    fn uot_logk_sampler_survives_full_underflow() {
+        // ln K so negative that exp underflows everywhere: the linear
+        // UOT sampler errors ("weights all zero"), the log-domain one
+        // still samples and stores finite log-kernel values.
+        let n = 12;
+        let (_, cost, a, b) = toy(n);
+        let lk = |i: usize, j: usize| -2.0e4 * (1.0 + cost.get(i, j));
+        let mut rng = Rng::seed_from(31);
+        let err = poisson_sparsify_uot(
+            |i, j| lk(i, j).exp(),
+            |i, j| cost.get(i, j),
+            &a,
+            &b,
+            1.0,
+            1e-4,
+            60.0,
+            1.0,
+            &mut rng,
+        );
+        assert!(err.is_err(), "linear sampler should fail on full underflow");
+        let mut rng = Rng::seed_from(31);
+        let (sk, stats) = poisson_sparsify_uot_logk(
+            lk,
+            |i, j| cost.get(i, j),
+            &a,
+            &b,
+            1.0,
+            1e-4,
+            60.0,
+            1.0,
+            &mut rng,
+        )
+        .unwrap();
+        assert!(stats.nnz > 0, "log sampler produced an empty sketch");
+        for (_, _, lkv, _) in sk.iter_log() {
+            assert!(lkv.is_finite(), "stored log-kernel not finite: {lkv}");
+        }
+        // Linear kernel values all underflowed to 0 but entries remain.
+        assert_eq!(sk.kernel_frob_norm(), 0.0);
     }
 }
