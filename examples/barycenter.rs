@@ -1,49 +1,58 @@
 //! Wasserstein barycenters with IBP vs Spar-IBP (Appendix A / C.3):
-//! three 1-D measures (Gaussian, mixture, t5) and a digit-glyph demo.
+//! three 1-D measures (Gaussian, mixture, t5) and a digit-glyph demo —
+//! both solved from the same barycenter `OtProblem` through
+//! `api::solve` (`sinkhorn` = exact IBP, `spar-ibp` = Algorithm 6).
 //!
 //! ```sh
 //! cargo run --release --example barycenter
 //! ```
 
+use spar_sink::api::{self, Method, OtProblem, Solution, SolverSpec};
 use spar_sink::data::digits::random_digit;
 use spar_sink::data::synthetic::barycenter_measures;
 use spar_sink::experiments::common::normalize_cost;
 use spar_sink::experiments::fig12::ascii_render;
-use spar_sink::metrics::{l1_distance, s0};
-use spar_sink::ot::barycenter::ibp_barycenter;
-use spar_sink::ot::cost::{gibbs_kernel, sq_euclidean_cost};
-use spar_sink::ot::sinkhorn::SinkhornParams;
+use spar_sink::metrics::l1_distance;
+use spar_sink::ot::cost::sq_euclidean_cost;
 use spar_sink::rng::Rng;
-use spar_sink::solvers::spar_ibp::spar_ibp;
 
 fn normalized(q: &[f64]) -> Vec<f64> {
     let s: f64 = q.iter().sum();
     q.iter().map(|x| x / s).collect()
 }
 
+fn q(sol: &Solution) -> &[f64] {
+    sol.barycenter.as_deref().expect("barycenter solve returns q")
+}
+
 fn main() {
     let mut rng = Rng::seed_from(21);
-    let params = SinkhornParams { delta: 1e-7, max_iters: 1000, strict: false };
 
     // --- 1-D synthetic measures ---
     let n = 400;
     let pts: Vec<Vec<f64>> = (0..n).map(|i| vec![i as f64 / (n - 1) as f64]).collect();
     let cost = normalize_cost(&sq_euclidean_cost(&pts, &pts));
-    let kernel = gibbs_kernel(&cost, 5e-3);
     let bs = barycenter_measures(n, &mut rng);
-    let kernels = vec![kernel.clone(), kernel.clone(), kernel.clone()];
-    let w = vec![1.0 / 3.0; 3];
+    let problem = OtProblem::barycenter(cost, bs, vec![1.0 / 3.0; 3], 5e-3);
 
-    let t0 = std::time::Instant::now();
-    let exact = ibp_barycenter(&kernels, &bs, &w, &params).expect("ibp");
-    let ibp_time = t0.elapsed();
-    let t0 = std::time::Instant::now();
-    let approx =
-        spar_ibp(&kernels, &bs, &w, 20.0 * s0(n), &params, &mut rng).expect("spar-ibp");
-    let spar_time = t0.elapsed();
-    let gap = l1_distance(&normalized(&exact.q), &normalized(&approx.solution.q));
-    println!("1-D barycenter (n = {n}): IBP {ibp_time:?} vs Spar-IBP {spar_time:?}");
-    println!("normalized L1 gap = {gap:.4}  (IBP iters {}, Spar-IBP iters {})", exact.iterations, approx.solution.iterations);
+    let exact_spec = SolverSpec::new(Method::Sinkhorn).with_tolerance(1e-7);
+    let exact = api::solve(&problem, &exact_spec).expect("ibp");
+    let spar_spec = SolverSpec::new(Method::SparIbp)
+        .with_budget(20.0)
+        .with_tolerance(1e-7)
+        .with_seed(21);
+    let approx = api::solve(&problem, &spar_spec).expect("spar-ibp");
+    let gap = l1_distance(&normalized(q(&exact)), &normalized(q(&approx)));
+    println!(
+        "1-D barycenter (n = {n}): IBP {:?} vs Spar-IBP {:?} (sketch nnz {:?})",
+        exact.wall_time,
+        approx.wall_time,
+        approx.nnz()
+    );
+    println!(
+        "normalized L1 gap = {gap:.4}  (IBP iters {}, Spar-IBP iters {})",
+        exact.iterations, approx.iterations
+    );
 
     // --- digit glyphs (Fig. 12 style) ---
     let grid = 24;
@@ -52,16 +61,13 @@ fn main() {
         .map(|k| vec![(k % grid) as f64 / grid as f64, (k / grid) as f64 / grid as f64])
         .collect();
     let cost = normalize_cost(&sq_euclidean_cost(&pts, &pts));
-    let kernel = gibbs_kernel(&cost, 2e-3);
     let digit = 3u8;
     let bs: Vec<Vec<f64>> = (0..8).map(|_| random_digit(digit, grid, &mut rng)).collect();
-    let kernels: Vec<_> = (0..8).map(|_| kernel.clone()).collect();
-    let w = vec![1.0 / 8.0; 8];
-    let exact = ibp_barycenter(&kernels, &bs, &w, &params).expect("ibp digits");
-    let approx =
-        spar_ibp(&kernels, &bs, &w, 20.0 * s0(n), &params, &mut rng).expect("spar-ibp digits");
+    let problem = OtProblem::barycenter(cost, bs, vec![1.0 / 8.0; 8], 2e-3);
+    let exact = api::solve(&problem, &exact_spec).expect("ibp digits");
+    let approx = api::solve(&problem, &spar_spec).expect("spar-ibp digits");
     println!("\ndigit {digit} barycenter, IBP:");
-    println!("{}", ascii_render(&normalized(&exact.q), grid));
+    println!("{}", ascii_render(&normalized(q(&exact)), grid));
     println!("digit {digit} barycenter, Spar-IBP:");
-    println!("{}", ascii_render(&normalized(&approx.solution.q), grid));
+    println!("{}", ascii_render(&normalized(q(&approx)), grid));
 }

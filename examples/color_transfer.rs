@@ -1,18 +1,21 @@
 //! Color transfer (Appendix D.1): move the sunset palette onto the
 //! daytime point cloud with a Spar-Sink transport plan and compare the
-//! resulting color map against the exact Sinkhorn map.
+//! resulting color map against the exact Sinkhorn map. Both plans come
+//! from the same `OtProblem` via `api::solve`.
 //!
 //! ```sh
 //! cargo run --release --example color_transfer
 //! ```
 
+use std::sync::Arc;
+
+use spar_sink::api::{self, Method, OtProblem, SolverSpec};
 use spar_sink::data::images::{barycentric_map, daytime_cloud, sunset_cloud};
 use spar_sink::experiments::common::normalize_cost;
 use spar_sink::linalg::Mat;
 use spar_sink::ot::cost::{gibbs_kernel, sq_euclidean_cost};
-use spar_sink::ot::sinkhorn::{sinkhorn_ot, transport_plan, SinkhornParams};
+use spar_sink::ot::sinkhorn::transport_plan;
 use spar_sink::rng::Rng;
-use spar_sink::solvers::spar_sink::{spar_sink_ot, SparSinkParams};
 
 fn mean_rgb(cloud: &[Vec<f64>]) -> [f64; 3] {
     let n = cloud.len() as f64;
@@ -32,23 +35,19 @@ fn main() {
     let source = daytime_cloud(n, &mut rng);
     let target = sunset_cloud(n, &mut rng);
     let a = vec![1.0 / n as f64; n];
-    let cost = normalize_cost(&sq_euclidean_cost(&source, &target));
+    let cost = Arc::new(normalize_cost(&sq_euclidean_cost(&source, &target)));
     let kernel = gibbs_kernel(&cost, eps);
+    let problem = OtProblem::balanced(&cost, a.clone(), a, eps);
 
     // Exact plan.
-    let t0 = std::time::Instant::now();
-    let exact = sinkhorn_ot(&kernel, &cost, &a, &a, eps, &SinkhornParams::default()).unwrap();
-    let sink_time = t0.elapsed();
+    let exact = api::solve(&problem, &SolverSpec::new(Method::Sinkhorn)).unwrap();
     let plan = transport_plan(&kernel, &exact.u, &exact.v);
     let exact_map = barycentric_map(|i| (0..n).map(|j| (j, plan.get(i, j))).collect(), &target, n);
 
     // Spar-Sink plan at s = 8 s0(n).
-    let t0 = std::time::Instant::now();
-    let approx = spar_sink_ot(&cost, &a, &a, eps, 8.0, &SparSinkParams::default(), &mut rng).unwrap();
-    let spar_time = t0.elapsed();
-    let plan_s = Mat::from_fn(n, n, |i, j| {
-        approx.solution.u[i] * kernel.get(i, j) * approx.solution.v[j]
-    });
+    let spec = SolverSpec::new(Method::SparSink).with_budget(8.0).with_seed(13);
+    let approx = api::solve(&problem, &spec).unwrap();
+    let plan_s = Mat::from_fn(n, n, |i, j| approx.u[i] * kernel.get(i, j) * approx.v[j]);
     let spar_map =
         barycentric_map(|i| (0..n).map(|j| (j, plan_s.get(i, j))).collect(), &target, n);
 
@@ -64,10 +63,18 @@ fn main() {
     println!("n = {n} RGB samples, eps = {eps}");
     println!("source (daytime) mean RGB: {:?}", mean_rgb(&source));
     println!("target (sunset)  mean RGB: {:?}", mean_rgb(&target));
-    println!("sinkhorn transferred mean: {:?}  ({sink_time:?})", mean_rgb(&exact_map));
-    println!("spar-sink transferred mean: {:?}  ({spar_time:?})", mean_rgb(&spar_map));
+    println!(
+        "sinkhorn transferred mean: {:?}  ({:?})",
+        mean_rgb(&exact_map),
+        exact.wall_time
+    );
+    println!(
+        "spar-sink transferred mean: {:?}  ({:?})",
+        mean_rgb(&spar_map),
+        approx.wall_time
+    );
     println!(
         "mean RGB deviation from Sinkhorn map: {dev:.4}   speedup {:.1}x",
-        sink_time.as_secs_f64() / spar_time.as_secs_f64()
+        exact.wall_time.as_secs_f64() / approx.wall_time.as_secs_f64()
     );
 }

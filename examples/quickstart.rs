@@ -1,14 +1,15 @@
 //! Quickstart: approximate an entropic OT distance with Spar-Sink and
-//! compare against the exact Sinkhorn solution.
+//! compare against the exact Sinkhorn solution — one problem, two
+//! `SolverSpec`s, both dispatched through `api::solve`.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 
+use spar_sink::api::{self, Method, OtProblem, SolverSpec};
 use spar_sink::data::synthetic::{instance, Scenario};
-use spar_sink::experiments::common::{exact_ot, ot_cost};
+use spar_sink::experiments::common::ot_cost;
 use spar_sink::rng::Rng;
-use spar_sink::solvers::spar_sink::{spar_sink_ot, SparSinkParams};
 
 fn main() {
     let n = 1000;
@@ -16,32 +17,32 @@ fn main() {
     let eps = 0.05;
     let mut rng = Rng::seed_from(7);
 
-    // 1. A C1 workload: Gaussian histograms on uniform support (Sec. 5.1).
+    // 1. A C1 workload: Gaussian histograms on uniform support (Sec. 5.1),
+    //    described once as an OtProblem.
     let inst = instance(Scenario::C1, n, d, 1.0, 1.0, &mut rng);
     let cost = ot_cost(&inst.points);
+    let problem = OtProblem::balanced(&cost, inst.a, inst.b, eps);
 
-    // 2. Exact entropic OT via the classical Sinkhorn algorithm.
-    let t0 = std::time::Instant::now();
-    let exact = exact_ot(&cost, &inst.a, &inst.b, eps).expect("sinkhorn");
-    let exact_time = t0.elapsed();
+    // 2. Exact entropic OT via the registered dense Sinkhorn solver.
+    let exact = api::solve(&problem, &SolverSpec::new(Method::Sinkhorn)).expect("sinkhorn");
 
     // 3. Spar-Sink at s = 8·s0(n) — expected O(n log^4 n) sampled entries.
-    let t0 = std::time::Instant::now();
-    let approx = spar_sink_ot(&cost, &inst.a, &inst.b, eps, 8.0, &SparSinkParams::default(), &mut rng)
-        .expect("spar-sink");
-    let spar_time = t0.elapsed();
+    let spec = SolverSpec::new(Method::SparSink).with_budget(8.0).with_seed(7);
+    let approx = api::solve(&problem, &spec).expect("spar-sink");
 
     println!("n = {n}, d = {d}, eps = {eps}");
-    println!("exact  OT_eps = {:>12.6}   ({exact_time:?})", exact);
+    println!("exact  OT_eps = {:>12.6}   ({:?})", exact.objective, exact.wall_time);
     println!(
-        "spar   OT_eps = {:>12.6}   ({spar_time:?}, nnz = {} of {})",
-        approx.solution.objective,
-        approx.stats.nnz,
+        "spar   OT_eps = {:>12.6}   ({:?}, backend {:?}, nnz = {} of {})",
+        approx.objective,
+        approx.wall_time,
+        approx.backend.expect("sparse solve reports its engine"),
+        approx.nnz().expect("sparse solve reports its sketch size"),
         n * n
     );
     println!(
         "relative error = {:.4}   speedup = {:.1}x",
-        (approx.solution.objective - exact).abs() / exact.abs(),
-        exact_time.as_secs_f64() / spar_time.as_secs_f64()
+        (approx.objective - exact.objective).abs() / exact.objective.abs(),
+        exact.wall_time.as_secs_f64() / approx.wall_time.as_secs_f64()
     );
 }

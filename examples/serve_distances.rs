@@ -1,28 +1,26 @@
 //! END-TO-END DRIVER: the full three-layer system on a real workload.
 //!
 //! Serves batched WFR-distance requests for a fleet of synthetic
-//! echocardiogram videos through the coordinator (L3), with the exact
-//! dense path executed on the PJRT runtime (L2 JAX blocks + L1 Pallas
-//! kernels compiled AOT to `artifacts/*.hlo.txt`) where the artifact
-//! menu covers the support size, cross-checked against the native
-//! Spar-Sink path. Reports per-method latency/throughput and the
-//! accuracy gap — proving all layers compose.
+//! echocardiogram videos through the coordinator (L3) — every job
+//! dispatched through `api::solve` — and, when built with the `xla`
+//! feature, cross-checks the exact dense path on the PJRT runtime
+//! (L2 JAX blocks + L1 Pallas kernels compiled AOT to
+//! `artifacts/*.hlo.txt`) where the artifact menu covers the support
+//! size. Reports per-method latency/throughput, the accuracy gap, and
+//! the log-domain escalation metrics — proving all layers compose.
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example serve_distances
+//! make artifacts && cargo run --release --features xla --example serve_distances
+//! cargo run --release --example serve_distances   # coordinator only
 //! ```
 
-use std::sync::Arc;
 use std::time::Instant;
 
 use spar_sink::coordinator::{
     CoordinatorConfig, DistanceJob, DistanceService, Measure, Method, ProblemSpec,
 };
 use spar_sink::data::echo::{downsample_frames, frame_to_measure, generate, EchoConfig, Health};
-use spar_sink::linalg::Mat;
-use spar_sink::ot::cost::{euclidean, wfr_cost_from_distance, wfr_kernel_from_distance};
 use spar_sink::rng::Rng;
-use spar_sink::runtime::{default_artifact_dir, manifest_path, ArtifactRegistry, DenseSinkhornRuntime};
 
 fn main() {
     let size = 24; // keeps supports <= 1024 so the PJRT menu covers them
@@ -97,6 +95,19 @@ fn main() {
     println!("{}\n", service.shutdown().render());
 
     // --- PJRT runtime path: the same UOT solve through the AOT stack ---
+    pjrt_cross_check(&measures_all, &spec);
+}
+
+#[cfg(feature = "xla")]
+fn pjrt_cross_check(measures_all: &[Vec<Measure>], spec: &ProblemSpec) {
+    use std::sync::Arc;
+
+    use spar_sink::linalg::Mat;
+    use spar_sink::ot::cost::{euclidean, wfr_cost_from_distance, wfr_kernel_from_distance};
+    use spar_sink::runtime::{
+        default_artifact_dir, manifest_path, ArtifactRegistry, DenseSinkhornRuntime,
+    };
+
     let dir = default_artifact_dir();
     if !manifest_path(&dir).exists() {
         println!("artifacts not built — skipping PJRT cross-check (run `make artifacts`)");
@@ -160,4 +171,12 @@ fn main() {
         }
         Err(e) => println!("runtime solve failed: {e}"),
     }
+}
+
+#[cfg(not(feature = "xla"))]
+fn pjrt_cross_check(_measures_all: &[Vec<Measure>], _spec: &ProblemSpec) {
+    println!(
+        "built without the `xla` feature — skipping the PJRT cross-check \
+         (rebuild with `--features xla` after `make artifacts`)"
+    );
 }

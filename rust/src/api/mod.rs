@@ -1,0 +1,51 @@
+//! # The unified solver API
+//!
+//! One stable request/response surface over every solver in the crate:
+//!
+//! * [`OtProblem`] — WHAT to solve: marginals, a cost source (dense
+//!   [`Mat`](crate::linalg::Mat) or entry oracles), the entropic
+//!   regularization ε, and a [`Formulation`] (balanced OT, unbalanced
+//!   OT, or a fixed-support barycenter).
+//! * [`SolverSpec`] — HOW to solve it: a registered [`Method`], sample
+//!   budget, optional [`ScalingBackend`](crate::solvers::backend::ScalingBackend)
+//!   override, stopping rule, and seed.
+//! * [`Solution`] — what came back: objective (or barycenter), dual
+//!   scalings, sparsification stats, the
+//!   [`BackendKind`](crate::solvers::backend::BackendKind) that actually
+//!   ran, iteration count, and wall time.
+//!
+//! Dispatch goes through a [`Solver`] trait + static [`registry`]
+//! (name → adapter) covering Sinkhorn/IBP, Spar-Sink (± forced
+//! log-domain), Rand-Sink, Nys-Sink (± robust clip), Greenkhorn,
+//! Screenkhorn, and Spar-IBP. The coordinator, CLI, experiment harness,
+//! and examples all route through [`solve`]; the legacy free functions
+//! under [`crate::ot`] and [`crate::solvers`] remain as the thin
+//! paper-reproduction entry points the adapters call into.
+//!
+//! ```no_run
+//! use spar_sink::api::{self, Method, OtProblem, SolverSpec};
+//! use spar_sink::ot::cost::sq_euclidean_cost;
+//! use spar_sink::rng::Rng;
+//!
+//! let n = 256;
+//! let mut rng = Rng::seed_from(7);
+//! let pts: Vec<Vec<f64>> = (0..n).map(|_| vec![rng.uniform(), rng.uniform()]).collect();
+//! let a = vec![1.0 / n as f64; n];
+//! let problem = OtProblem::balanced(sq_euclidean_cost(&pts, &pts), a.clone(), a, 0.05);
+//!
+//! let exact = api::solve(&problem, &SolverSpec::new(Method::Sinkhorn)).unwrap();
+//! let spec = SolverSpec::new(Method::SparSink).with_budget(8.0).with_seed(7);
+//! let approx = api::solve(&problem, &spec).unwrap();
+//! println!("exact {:.6} sparse {:.6} ({:?}, nnz {:?})",
+//!          exact.objective, approx.objective, approx.wall_time, approx.nnz());
+//! ```
+
+pub mod problem;
+pub mod registry;
+pub mod solution;
+pub mod spec;
+
+pub use problem::{CostSource, EntryOracle, Formulation, OtProblem};
+pub use registry::{lookup, registry, solve, solve_with_rng, Solver};
+pub use solution::Solution;
+pub use spec::{parse_backend, Method, SolverSpec};

@@ -1,0 +1,331 @@
+//! Problem description for the unified solve surface: what to transport
+//! (marginals), over which geometry (a dense cost matrix or entry
+//! oracles), and under which formulation (balanced OT, unbalanced OT,
+//! or a fixed-support barycenter).
+
+use std::fmt;
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::linalg::Mat;
+use crate::ot::cost::log_gibbs_from_cost;
+
+/// A shared entry oracle `f(i, j)`. `Arc`'d so a problem built from
+/// closures stays cheap to clone across coordinator threads.
+pub type EntryOracle = Arc<dyn Fn(usize, usize) -> f64 + Send + Sync>;
+
+/// Where the ground cost (and the Gibbs kernel derived from it) comes
+/// from.
+///
+/// Every registered solver accepts both variants: solvers that need a
+/// dense matrix (Greenkhorn, Screenkhorn, dense Sinkhorn) materialize an
+/// oracle on demand, while the sparsified solvers sample oracles without
+/// ever materializing `n × m` entries.
+#[derive(Clone)]
+pub enum CostSource {
+    /// A materialized ground-cost matrix (`∞` entries = blocked
+    /// transport, e.g. the WFR truncation).
+    Dense(Arc<Mat>),
+    /// Entry oracles evaluated on demand.
+    Oracle {
+        rows: usize,
+        cols: usize,
+        /// Ground cost `C(i, j)` (may return `∞` for blocked entries).
+        cost: EntryOracle,
+        /// Optional exact log-kernel `ln K(i, j)` (−∞ = blocked) for the
+        /// SAME ε as [`OtProblem::eps`]. When absent it is derived as
+        /// `−C(i, j)/ε`, which is exact for Gibbs kernels.
+        log_kernel: Option<EntryOracle>,
+    },
+}
+
+impl CostSource {
+    /// Build an oracle source from a cost closure.
+    pub fn oracle(
+        rows: usize,
+        cols: usize,
+        cost: impl Fn(usize, usize) -> f64 + Send + Sync + 'static,
+    ) -> Self {
+        CostSource::Oracle { rows, cols, cost: Arc::new(cost), log_kernel: None }
+    }
+
+    /// Attach an exact log-kernel oracle (no-op on dense sources, whose
+    /// log-kernel is always derived from the stored cost).
+    pub fn with_log_kernel(
+        self,
+        log_kernel: impl Fn(usize, usize) -> f64 + Send + Sync + 'static,
+    ) -> Self {
+        match self {
+            CostSource::Oracle { rows, cols, cost, .. } => CostSource::Oracle {
+                rows,
+                cols,
+                cost,
+                log_kernel: Some(Arc::new(log_kernel)),
+            },
+            dense => dense,
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        match self {
+            CostSource::Dense(m) => m.rows(),
+            CostSource::Oracle { rows, .. } => *rows,
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            CostSource::Dense(m) => m.cols(),
+            CostSource::Oracle { cols, .. } => *cols,
+        }
+    }
+
+    /// Ground cost entry `C(i, j)`.
+    #[inline]
+    pub fn cost_at(&self, i: usize, j: usize) -> f64 {
+        match self {
+            CostSource::Dense(m) => m.get(i, j),
+            CostSource::Oracle { cost, .. } => cost(i, j),
+        }
+    }
+
+    /// Log-kernel entry `ln K(i, j)` at regularization `eps` (−∞ =
+    /// blocked). Uses the caller-provided oracle when present, else the
+    /// exact Gibbs value `−C(i, j)/ε`.
+    #[inline]
+    pub fn log_kernel_at(&self, i: usize, j: usize, eps: f64) -> f64 {
+        match self {
+            CostSource::Oracle { log_kernel: Some(lk), .. } => lk(i, j),
+            _ => log_gibbs_from_cost(self.cost_at(i, j), eps),
+        }
+    }
+
+    /// Linear kernel entry `K(i, j) = exp(ln K)` (exactly 0 for blocked
+    /// entries).
+    #[inline]
+    pub fn kernel_at(&self, i: usize, j: usize, eps: f64) -> f64 {
+        self.log_kernel_at(i, j, eps).exp()
+    }
+
+    /// The dense cost, materializing an oracle (O(rows·cols)); dense
+    /// sources are shared, not copied.
+    pub fn to_mat(&self) -> Arc<Mat> {
+        match self {
+            CostSource::Dense(m) => m.clone(),
+            CostSource::Oracle { rows, cols, cost, .. } => {
+                Arc::new(Mat::from_fn(*rows, *cols, |i, j| cost(i, j)))
+            }
+        }
+    }
+
+    /// Borrow the dense cost if this source already holds one.
+    pub fn as_dense(&self) -> Option<&Mat> {
+        match self {
+            CostSource::Dense(m) => Some(m),
+            CostSource::Oracle { .. } => None,
+        }
+    }
+}
+
+impl fmt::Debug for CostSource {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CostSource::Dense(m) => {
+                write!(f, "CostSource::Dense({}x{})", m.rows(), m.cols())
+            }
+            CostSource::Oracle { rows, cols, log_kernel, .. } => write!(
+                f,
+                "CostSource::Oracle({rows}x{cols}, log_kernel: {})",
+                if log_kernel.is_some() { "explicit" } else { "derived" }
+            ),
+        }
+    }
+}
+
+impl From<Mat> for CostSource {
+    fn from(m: Mat) -> Self {
+        CostSource::Dense(Arc::new(m))
+    }
+}
+
+impl From<Arc<Mat>> for CostSource {
+    fn from(m: Arc<Mat>) -> Self {
+        CostSource::Dense(m)
+    }
+}
+
+impl From<&Arc<Mat>> for CostSource {
+    fn from(m: &Arc<Mat>) -> Self {
+        CostSource::Dense(m.clone())
+    }
+}
+
+/// Which entropic transport problem is being solved.
+#[derive(Clone, Debug)]
+pub enum Formulation {
+    /// Balanced entropic OT (Eq. 6): marginals are matched exactly.
+    Balanced,
+    /// Unbalanced entropic OT (Eq. 10): marginal deviations penalized by
+    /// `lambda · KL` (the WFR distance when paired with the WFR cost).
+    Unbalanced { lambda: f64 },
+    /// Fixed-support Wasserstein barycenter of `marginals` with simplex
+    /// `weights` over the (square) cost's shared support; the problem's
+    /// `a`/`b` marginals are unused.
+    Barycenter { marginals: Vec<Vec<f64>>, weights: Vec<f64> },
+}
+
+/// An entropic transport problem: marginals + cost source + formulation
+/// + regularization ε. Cheap to clone (all heavy state is `Arc`-shared)
+/// and self-contained, so one problem can be solved by several
+/// [`SolverSpec`](crate::api::SolverSpec)s for comparison.
+#[derive(Clone, Debug)]
+pub struct OtProblem {
+    pub cost: CostSource,
+    /// Source marginal (row masses). Empty for barycenter problems.
+    pub a: Arc<Vec<f64>>,
+    /// Target marginal (column masses). Empty for barycenter problems.
+    pub b: Arc<Vec<f64>>,
+    /// Entropic regularization ε.
+    pub eps: f64,
+    pub formulation: Formulation,
+}
+
+impl OtProblem {
+    /// Balanced entropic OT between histograms `a` and `b`.
+    pub fn balanced(
+        cost: impl Into<CostSource>,
+        a: impl Into<Arc<Vec<f64>>>,
+        b: impl Into<Arc<Vec<f64>>>,
+        eps: f64,
+    ) -> Self {
+        OtProblem {
+            cost: cost.into(),
+            a: a.into(),
+            b: b.into(),
+            eps,
+            formulation: Formulation::Balanced,
+        }
+    }
+
+    /// Unbalanced entropic OT with marginal-relaxation strength `lambda`.
+    pub fn unbalanced(
+        cost: impl Into<CostSource>,
+        a: impl Into<Arc<Vec<f64>>>,
+        b: impl Into<Arc<Vec<f64>>>,
+        lambda: f64,
+        eps: f64,
+    ) -> Self {
+        OtProblem {
+            cost: cost.into(),
+            a: a.into(),
+            b: b.into(),
+            eps,
+            formulation: Formulation::Unbalanced { lambda },
+        }
+    }
+
+    /// Fixed-support barycenter of `marginals` (all living on the shared
+    /// support of the square `cost`) with simplex `weights`.
+    pub fn barycenter(
+        cost: impl Into<CostSource>,
+        marginals: Vec<Vec<f64>>,
+        weights: Vec<f64>,
+        eps: f64,
+    ) -> Self {
+        OtProblem {
+            cost: cost.into(),
+            a: Arc::new(Vec::new()),
+            b: Arc::new(Vec::new()),
+            eps,
+            formulation: Formulation::Barycenter { marginals, weights },
+        }
+    }
+
+    /// Structural validation shared by every solver (individual solvers
+    /// still run their own numerical checks).
+    pub fn validate(&self) -> Result<()> {
+        if !(self.eps.is_finite() && self.eps > 0.0) {
+            return Err(Error::InvalidParam(format!("eps = {} must be positive", self.eps)));
+        }
+        let (rows, cols) = (self.cost.rows(), self.cost.cols());
+        match &self.formulation {
+            Formulation::Balanced | Formulation::Unbalanced { .. } => {
+                if self.a.len() != rows || self.b.len() != cols {
+                    return Err(Error::Dimension(format!(
+                        "cost {rows}x{cols} vs a[{}], b[{}]",
+                        self.a.len(),
+                        self.b.len()
+                    )));
+                }
+                if let Formulation::Unbalanced { lambda } = self.formulation {
+                    if !(lambda.is_finite() && lambda > 0.0) {
+                        return Err(Error::InvalidParam(format!(
+                            "lambda = {lambda} must be positive"
+                        )));
+                    }
+                }
+                Ok(())
+            }
+            Formulation::Barycenter { marginals, weights } => {
+                if rows != cols {
+                    return Err(Error::Dimension(format!(
+                        "barycenter needs a square shared-support cost, got {rows}x{cols}"
+                    )));
+                }
+                if marginals.is_empty() || marginals.len() != weights.len() {
+                    return Err(Error::Dimension(format!(
+                        "{} marginals vs {} weights",
+                        marginals.len(),
+                        weights.len()
+                    )));
+                }
+                if let Some(bad) = marginals.iter().find(|m| m.len() != cols) {
+                    return Err(Error::Dimension(format!(
+                        "marginal of length {} on a support of size {cols}",
+                        bad.len()
+                    )));
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oracle_log_kernel_defaults_to_gibbs() {
+        let src = CostSource::oracle(2, 2, |i, j| (i + j) as f64);
+        let eps = 0.5;
+        assert_eq!(src.log_kernel_at(0, 1, eps), -1.0 / eps);
+        assert_eq!(src.kernel_at(0, 1, eps), (-1.0f64 / eps).exp());
+        let src = src.with_log_kernel(|_, _| -3.0);
+        assert_eq!(src.log_kernel_at(0, 1, eps), -3.0);
+    }
+
+    #[test]
+    fn dense_source_shares_storage() {
+        let m = Arc::new(Mat::from_fn(3, 3, |i, j| (i * 3 + j) as f64));
+        let src = CostSource::from(&m);
+        assert!(Arc::ptr_eq(&src.to_mat(), &m));
+        assert_eq!(src.cost_at(1, 2), 5.0);
+    }
+
+    #[test]
+    fn validate_catches_shape_errors() {
+        let cost = Mat::zeros(3, 3);
+        let ok = OtProblem::balanced(cost.clone(), vec![0.5; 3], vec![0.5; 3], 0.1);
+        assert!(ok.validate().is_ok());
+        let bad = OtProblem::balanced(cost.clone(), vec![0.5; 2], vec![0.5; 3], 0.1);
+        assert!(bad.validate().is_err());
+        let bad_eps = OtProblem::balanced(cost.clone(), vec![0.5; 3], vec![0.5; 3], 0.0);
+        assert!(bad_eps.validate().is_err());
+        let bad_lambda =
+            OtProblem::unbalanced(cost.clone(), vec![0.5; 3], vec![0.5; 3], 0.0, 0.1);
+        assert!(bad_lambda.validate().is_err());
+        let bary = OtProblem::barycenter(cost, vec![vec![0.5; 3]; 2], vec![0.5, 0.5], 0.1);
+        assert!(bary.validate().is_ok());
+    }
+}

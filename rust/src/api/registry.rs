@@ -1,0 +1,412 @@
+//! The solver registry: one [`Solver`] adapter per registered method,
+//! looked up by name, all dispatched through [`solve`] /
+//! [`solve_with_rng`].
+//!
+//! The adapters translate an ([`OtProblem`], [`SolverSpec`]) pair into
+//! the concrete solver's native entry point, so callers — coordinator,
+//! CLI, experiments, examples — never touch per-method argument lists.
+
+use std::time::Instant;
+
+use super::problem::{Formulation, OtProblem};
+use super::solution::Solution;
+use super::spec::SolverSpec;
+use crate::error::{Error, Result};
+use crate::linalg::Mat;
+use crate::metrics::s0;
+use crate::ot::barycenter::ibp_barycenter;
+use crate::ot::uot::sinkhorn_uot;
+use crate::rng::Rng;
+use crate::solvers::backend::{BackendKind, ScalingBackend};
+use crate::solvers::greenkhorn::{greenkhorn_ot, GreenkhornParams};
+use crate::solvers::nys_sink::{nys_sink_ot, nys_sink_uot, NysSinkParams};
+use crate::solvers::rand_sink::rand_sink_solve;
+use crate::solvers::screenkhorn::{screenkhorn_ot, ScreenkhornParams};
+use crate::solvers::spar_ibp::spar_ibp;
+use crate::solvers::spar_sink::spar_sink_solve;
+
+/// A registered solver: adapts one method to the unified problem/spec
+/// surface.
+pub trait Solver: Sync {
+    /// Registry key (matches [`super::spec::Method::name`]).
+    fn name(&self) -> &'static str;
+    /// Solve `problem` per `spec`, drawing randomness from `rng`.
+    fn solve(&self, problem: &OtProblem, spec: &SolverSpec, rng: &mut Rng) -> Result<Solution>;
+}
+
+fn unsupported(method: &str, problem: &OtProblem) -> Error {
+    let formulation = match problem.formulation {
+        Formulation::Balanced => "balanced OT",
+        Formulation::Unbalanced { .. } => "unbalanced OT",
+        Formulation::Barycenter { .. } => "barycenter",
+    };
+    Error::InvalidParam(format!("{method} does not solve {formulation} problems"))
+}
+
+/// Materialize the Gibbs kernel of `problem` (blocked entries → 0).
+fn kernel_mat(problem: &OtProblem) -> Mat {
+    let eps = problem.eps;
+    Mat::from_fn(problem.cost.rows(), problem.cost.cols(), |i, j| {
+        problem.cost.kernel_at(i, j, eps)
+    })
+}
+
+/// Shared-kernel stack for barycenter problems: every input measure
+/// lives on the same support, so each gets the same Gibbs kernel.
+fn barycenter_kernels(problem: &OtProblem, count: usize) -> Vec<Mat> {
+    vec![kernel_mat(problem); count]
+}
+
+struct SinkhornSolver;
+
+impl Solver for SinkhornSolver {
+    fn name(&self) -> &'static str {
+        "sinkhorn"
+    }
+
+    fn solve(&self, problem: &OtProblem, spec: &SolverSpec, _rng: &mut Rng) -> Result<Solution> {
+        let params = spec.sinkhorn_params();
+        match &problem.formulation {
+            Formulation::Balanced => {
+                let cost = problem.cost.to_mat();
+                let backend = spec.backend.unwrap_or_default();
+                let (sol, kind) =
+                    backend.dense_ot(&cost, &problem.a, &problem.b, problem.eps, &params)?;
+                Ok(Solution::from_sinkhorn(self.name(), sol, Some(kind)))
+            }
+            Formulation::Unbalanced { lambda } => {
+                if spec.backend == Some(ScalingBackend::LogDomain) {
+                    return Err(Error::InvalidParam(
+                        "dense log-domain UOT is not implemented yet; \
+                         use spar-sink-log for small-eps unbalanced problems"
+                            .into(),
+                    ));
+                }
+                let cost = problem.cost.to_mat();
+                let kernel = kernel_mat(problem);
+                let sol = sinkhorn_uot(
+                    &kernel,
+                    &cost,
+                    &problem.a,
+                    &problem.b,
+                    *lambda,
+                    problem.eps,
+                    &params,
+                )?;
+                Ok(Solution::from_sinkhorn(self.name(), sol, Some(BackendKind::Multiplicative)))
+            }
+            Formulation::Barycenter { marginals, weights } => {
+                if spec.backend == Some(ScalingBackend::LogDomain) {
+                    return Err(Error::InvalidParam(
+                        "log-domain IBP is not implemented yet (ROADMAP gap); \
+                         barycenters run the multiplicative engine only"
+                            .into(),
+                    ));
+                }
+                let kernels = barycenter_kernels(problem, marginals.len());
+                let sol = ibp_barycenter(&kernels, marginals, weights, &params)?;
+                Ok(Solution::from_barycenter(self.name(), sol, Vec::new()))
+            }
+        }
+    }
+}
+
+struct SparSinkSolver;
+
+impl Solver for SparSinkSolver {
+    fn name(&self) -> &'static str {
+        "spar-sink"
+    }
+
+    fn solve(&self, problem: &OtProblem, spec: &SolverSpec, rng: &mut Rng) -> Result<Solution> {
+        spar_sink_solve(problem, spec, rng).map(|s| Solution::from_spar(self.name(), s))
+    }
+}
+
+struct SparSinkLogSolver;
+
+impl Solver for SparSinkLogSolver {
+    fn name(&self) -> &'static str {
+        "spar-sink-log"
+    }
+
+    fn solve(&self, problem: &OtProblem, spec: &SolverSpec, rng: &mut Rng) -> Result<Solution> {
+        // This method IS the log-domain pin; a contradictory per-job
+        // override must fail loudly rather than be silently dropped.
+        if !matches!(spec.backend, None | Some(ScalingBackend::LogDomain)) {
+            return Err(Error::InvalidParam(
+                "spar-sink-log pins the log-domain engine; use method spar-sink \
+                 for a multiplicative or auto backend override"
+                    .into(),
+            ));
+        }
+        let spec = spec.clone().with_backend(ScalingBackend::LogDomain);
+        spar_sink_solve(problem, &spec, rng).map(|s| Solution::from_spar(self.name(), s))
+    }
+}
+
+struct RandSinkSolver;
+
+impl Solver for RandSinkSolver {
+    fn name(&self) -> &'static str {
+        "rand-sink"
+    }
+
+    fn solve(&self, problem: &OtProblem, spec: &SolverSpec, rng: &mut Rng) -> Result<Solution> {
+        rand_sink_solve(problem, spec, rng).map(|s| Solution::from_spar(self.name(), s))
+    }
+}
+
+struct NysSinkSolver;
+
+impl Solver for NysSinkSolver {
+    fn name(&self) -> &'static str {
+        "nys-sink"
+    }
+
+    fn solve(&self, problem: &OtProblem, spec: &SolverSpec, rng: &mut Rng) -> Result<Solution> {
+        let (a, b, eps) = (&problem.a[..], &problem.b[..], problem.eps);
+        let n = a.len();
+        // Matched-budget rank r = ceil(s/n): the paper's protocol for
+        // comparing at equal sampled-entry budgets.
+        let rank = spec
+            .rank
+            .unwrap_or_else(|| ((spec.s_multiplier * s0(n) / n.max(1) as f64).ceil() as usize).max(1));
+        let params = NysSinkParams {
+            sinkhorn: spec.sinkhorn_params(),
+            robust_clip: spec.robust_clip,
+            ..Default::default()
+        };
+        let kernel = |i: usize, j: usize| problem.cost.kernel_at(i, j, eps);
+        let cost = |i: usize, j: usize| problem.cost.cost_at(i, j);
+        let sol = match &problem.formulation {
+            Formulation::Balanced => nys_sink_ot(kernel, cost, a, b, eps, rank, &params, rng)?,
+            Formulation::Unbalanced { lambda } => {
+                nys_sink_uot(kernel, cost, a, b, *lambda, eps, rank, &params, rng)?
+            }
+            Formulation::Barycenter { .. } => return Err(unsupported(self.name(), problem)),
+        };
+        Ok(Solution::from_sinkhorn(self.name(), sol, None))
+    }
+}
+
+struct GreenkhornSolver;
+
+impl Solver for GreenkhornSolver {
+    fn name(&self) -> &'static str {
+        "greenkhorn"
+    }
+
+    fn solve(&self, problem: &OtProblem, spec: &SolverSpec, _rng: &mut Rng) -> Result<Solution> {
+        let Formulation::Balanced = &problem.formulation else {
+            return Err(unsupported(self.name(), problem));
+        };
+        let cost = problem.cost.to_mat();
+        let kernel = kernel_mat(problem);
+        let params = GreenkhornParams {
+            delta: spec.delta,
+            max_updates_factor: spec.max_updates_factor,
+        };
+        greenkhorn_ot(&kernel, &cost, &problem.a, &problem.b, problem.eps, &params)
+            .map(|s| Solution::from_sinkhorn(self.name(), s, None))
+    }
+}
+
+struct ScreenkhornSolver;
+
+impl Solver for ScreenkhornSolver {
+    fn name(&self) -> &'static str {
+        "screenkhorn"
+    }
+
+    fn solve(&self, problem: &OtProblem, spec: &SolverSpec, _rng: &mut Rng) -> Result<Solution> {
+        let Formulation::Balanced = &problem.formulation else {
+            return Err(unsupported(self.name(), problem));
+        };
+        let cost = problem.cost.to_mat();
+        let kernel = kernel_mat(problem);
+        let params = ScreenkhornParams {
+            sinkhorn: spec.sinkhorn_params(),
+            decimation: spec.decimation,
+        };
+        screenkhorn_ot(&kernel, &cost, &problem.a, &problem.b, problem.eps, &params)
+            .map(|s| Solution::from_sinkhorn(self.name(), s, None))
+    }
+}
+
+struct SparIbpSolver;
+
+impl Solver for SparIbpSolver {
+    fn name(&self) -> &'static str {
+        "spar-ibp"
+    }
+
+    fn solve(&self, problem: &OtProblem, spec: &SolverSpec, rng: &mut Rng) -> Result<Solution> {
+        let Formulation::Barycenter { marginals, weights } = &problem.formulation else {
+            return Err(unsupported(self.name(), problem));
+        };
+        let kernels = barycenter_kernels(problem, marginals.len());
+        let s = spec.s_multiplier * s0(problem.cost.rows());
+        let sol = spar_ibp(&kernels, marginals, weights, s, &spec.sinkhorn_params(), rng)?;
+        Ok(Solution::from_barycenter(self.name(), sol.solution, sol.stats))
+    }
+}
+
+/// The static solver registry, in [`super::spec::Method::ALL`] order.
+static REGISTRY: &[&dyn Solver] = &[
+    &SinkhornSolver,
+    &SparSinkSolver,
+    &SparSinkLogSolver,
+    &RandSinkSolver,
+    &NysSinkSolver,
+    &GreenkhornSolver,
+    &ScreenkhornSolver,
+    &SparIbpSolver,
+];
+
+/// All registered solvers.
+pub fn registry() -> &'static [&'static dyn Solver] {
+    REGISTRY
+}
+
+/// Look a solver up by registry name (see [`super::spec::Method::name`]).
+pub fn lookup(name: &str) -> Option<&'static dyn Solver> {
+    REGISTRY.iter().copied().find(|s| s.name() == name)
+}
+
+/// Solve `problem` per `spec`, seeding the solver's RNG from
+/// [`SolverSpec::seed`]. This is THE entry point: the coordinator, CLI,
+/// experiments, and examples all dispatch through it.
+pub fn solve(problem: &OtProblem, spec: &SolverSpec) -> Result<Solution> {
+    let mut rng = Rng::seed_from(spec.seed);
+    solve_with_rng(problem, spec, &mut rng)
+}
+
+/// [`solve`] with an external RNG — for replication sweeps that thread
+/// one generator across many solves (each draw advances the stream).
+pub fn solve_with_rng(
+    problem: &OtProblem,
+    spec: &SolverSpec,
+    rng: &mut Rng,
+) -> Result<Solution> {
+    problem.validate()?;
+    let solver = lookup(spec.method.name()).ok_or_else(|| {
+        Error::InvalidParam(format!("no registered solver named '{}'", spec.method.name()))
+    })?;
+    let t0 = Instant::now();
+    let mut solution = solver.solve(problem, spec, rng)?;
+    solution.wall_time = t0.elapsed();
+    Ok(solution)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::Method;
+    use crate::ot::cost::sq_euclidean_cost;
+
+    fn toy_problem(n: usize) -> OtProblem {
+        let pts: Vec<Vec<f64>> = (0..n)
+            .map(|i| vec![(i as f64 * 0.618).fract(), (i as f64 * 0.383).fract()])
+            .collect();
+        let cost = sq_euclidean_cost(&pts, &pts);
+        let a = vec![1.0 / n as f64; n];
+        let b: Vec<f64> = (0..n).map(|i| 1.0 + (i % 3) as f64).collect();
+        let sb: f64 = b.iter().sum();
+        let b: Vec<f64> = b.iter().map(|x| x / sb).collect();
+        OtProblem::balanced(cost, a, b, 0.1)
+    }
+
+    #[test]
+    fn every_method_variant_resolves() {
+        for method in Method::ALL {
+            let solver = lookup(method.name());
+            assert!(solver.is_some(), "no solver registered for {method:?}");
+            assert_eq!(solver.unwrap().name(), method.name());
+        }
+        assert_eq!(registry().len(), Method::ALL.len());
+        assert!(lookup("does-not-exist").is_none());
+    }
+
+    #[test]
+    fn balanced_ot_methods_agree_roughly() {
+        let problem = toy_problem(60);
+        let exact = solve(&problem, &SolverSpec::new(Method::Sinkhorn)).unwrap();
+        assert!(exact.objective.is_finite());
+        assert!(exact.wall_time > std::time::Duration::ZERO);
+        for method in [Method::SparSink, Method::RandSink, Method::Greenkhorn] {
+            let spec = SolverSpec::new(method).with_budget(16.0).with_seed(5);
+            let sol = solve(&problem, &spec).unwrap();
+            assert!(sol.objective.is_finite(), "{method:?}");
+            let rel = (sol.objective - exact.objective).abs() / exact.objective.abs();
+            assert!(rel < 1.0, "{method:?}: rel {rel}");
+        }
+    }
+
+    #[test]
+    fn unsupported_formulations_error_cleanly() {
+        let problem = toy_problem(20);
+        for method in [Method::Greenkhorn, Method::Screenkhorn] {
+            let mut p = problem.clone();
+            p.formulation = Formulation::Unbalanced { lambda: 1.0 };
+            assert!(matches!(
+                solve(&p, &SolverSpec::new(method)),
+                Err(Error::InvalidParam(_))
+            ));
+        }
+        assert!(matches!(
+            solve(&problem, &SolverSpec::new(Method::SparIbp)),
+            Err(Error::InvalidParam(_))
+        ));
+    }
+
+    #[test]
+    fn backend_override_is_honored() {
+        let problem = toy_problem(40);
+        let default = solve(&problem, &SolverSpec::new(Method::SparSink).with_seed(3)).unwrap();
+        assert_eq!(default.backend, Some(BackendKind::Multiplicative));
+        let forced = solve(
+            &problem,
+            &SolverSpec::new(Method::SparSink)
+                .with_seed(3)
+                .with_backend(ScalingBackend::LogDomain),
+        )
+        .unwrap();
+        assert_eq!(forced.backend, Some(BackendKind::LogDomain));
+        let via_method =
+            solve(&problem, &SolverSpec::new(Method::SparSinkLog).with_seed(3)).unwrap();
+        assert_eq!(via_method.backend, Some(BackendKind::LogDomain));
+        assert_eq!(via_method.objective.to_bits(), forced.objective.to_bits());
+    }
+
+    #[test]
+    fn barycenter_through_the_registry() {
+        let n = 32;
+        let pts: Vec<Vec<f64>> = (0..n).map(|i| vec![i as f64 / (n - 1) as f64]).collect();
+        let cost = sq_euclidean_cost(&pts, &pts);
+        let hist = |mu: f64| -> Vec<f64> {
+            let w: Vec<f64> =
+                pts.iter().map(|p| (-(p[0] - mu).powi(2) / 0.01).exp() + 1e-4).collect();
+            let s: f64 = w.iter().sum();
+            w.iter().map(|x| x / s).collect()
+        };
+        let problem = OtProblem::barycenter(
+            cost,
+            vec![hist(0.25), hist(0.75)],
+            vec![0.5, 0.5],
+            0.01,
+        );
+        let exact = solve(&problem, &SolverSpec::new(Method::Sinkhorn)).unwrap();
+        let q = exact.barycenter.as_ref().expect("barycenter histogram");
+        assert_eq!(q.len(), n);
+        assert!(q.iter().all(|x| x.is_finite() && *x >= 0.0));
+        let spar = solve(
+            &problem,
+            &SolverSpec::new(Method::SparIbp).with_budget(40.0).with_seed(11),
+        )
+        .unwrap();
+        assert_eq!(spar.stats.len(), 2);
+        assert!(spar.nnz().unwrap() > 0);
+        assert!(spar.barycenter.is_some());
+    }
+}

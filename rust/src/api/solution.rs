@@ -1,0 +1,113 @@
+//! The unified solver result: one shape for every registered method.
+
+use std::time::Duration;
+
+use crate::ot::barycenter::BarycenterSolution;
+use crate::ot::SinkhornSolution;
+use crate::solvers::backend::BackendKind;
+use crate::solvers::spar_sink::SparSolution;
+use crate::sparse::SparsifyStats;
+
+/// What a [`crate::api::solve`] call produced, independent of which
+/// solver ran: the objective, the dual scalings (or barycenter), the
+/// sparsification diagnostics when a sketch was built, the scaling
+/// engine that actually ran, and the wall time.
+#[derive(Clone, Debug)]
+pub struct Solution {
+    /// Registry name of the solver that produced this solution.
+    pub method: &'static str,
+    /// Entropic objective (Eq. 6 / Eq. 10). `NaN` for barycenter solves,
+    /// which report the histogram in [`Solution::barycenter`] instead.
+    pub objective: f64,
+    /// Row scalings `u` (empty for barycenter solves).
+    pub u: Vec<f64>,
+    /// Column scalings `v` (empty for barycenter solves).
+    pub v: Vec<f64>,
+    /// The barycenter histogram `q` (barycenter solves only).
+    pub barycenter: Option<Vec<f64>>,
+    /// Scaling iterations performed.
+    pub iterations: usize,
+    /// Final L1 displacement (the stopping statistic).
+    pub displacement: f64,
+    /// Whether the tolerance was met before the iteration cap.
+    pub converged: bool,
+    /// Sparsification diagnostics: empty for dense/low-rank solvers, one
+    /// entry for the sketch-based solvers, one per input kernel for
+    /// Spar-IBP.
+    pub stats: Vec<SparsifyStats>,
+    /// Which scaling engine actually produced the solution (`None` for
+    /// solvers outside the multiplicative/log-domain switch).
+    pub backend: Option<BackendKind>,
+    /// End-to-end solve wall time (filled by [`crate::api::solve`]).
+    pub wall_time: Duration,
+}
+
+impl Solution {
+    pub(crate) fn from_sinkhorn(
+        method: &'static str,
+        sol: SinkhornSolution,
+        backend: Option<BackendKind>,
+    ) -> Self {
+        Solution {
+            method,
+            objective: sol.objective,
+            u: sol.u,
+            v: sol.v,
+            barycenter: None,
+            iterations: sol.iterations,
+            displacement: sol.displacement,
+            converged: sol.converged,
+            stats: Vec::new(),
+            backend,
+            wall_time: Duration::ZERO,
+        }
+    }
+
+    pub(crate) fn from_spar(method: &'static str, sol: SparSolution) -> Self {
+        let backend = sol.backend;
+        let mut out = Solution::from_sinkhorn(method, sol.solution, Some(backend));
+        out.stats = vec![sol.stats];
+        out
+    }
+
+    pub(crate) fn from_barycenter(
+        method: &'static str,
+        sol: BarycenterSolution,
+        stats: Vec<SparsifyStats>,
+    ) -> Self {
+        Solution {
+            method,
+            objective: f64::NAN,
+            u: Vec::new(),
+            v: Vec::new(),
+            barycenter: Some(sol.q),
+            iterations: sol.iterations,
+            displacement: sol.displacement,
+            converged: sol.converged,
+            stats,
+            backend: None,
+            wall_time: Duration::ZERO,
+        }
+    }
+
+    /// The dual scalings `(u, v)` of the transport plan
+    /// `T = diag(u) K diag(v)`.
+    pub fn scalings(&self) -> (&[f64], &[f64]) {
+        (&self.u, &self.v)
+    }
+
+    /// Total stored non-zeros across every sketch this solve built
+    /// (`None` for dense/low-rank solvers).
+    pub fn nnz(&self) -> Option<usize> {
+        if self.stats.is_empty() {
+            None
+        } else {
+            Some(self.stats.iter().map(|s| s.nnz).sum())
+        }
+    }
+
+    /// First sketch's sparsification diagnostics, if any.
+    pub fn sparsify_stats(&self) -> Option<&SparsifyStats> {
+        self.stats.first()
+    }
+}

@@ -1,0 +1,239 @@
+//! How to solve an [`OtProblem`](crate::api::OtProblem): which
+//! registered method, at what sample budget, over which scaling
+//! backend, with which stopping rule and seed.
+
+use crate::ot::sinkhorn::SinkhornParams;
+use crate::solvers::backend::ScalingBackend;
+
+/// Every solver registered in [`crate::api::registry`]. The name
+/// returned by [`Method::name`] is the registry key and the spelling
+/// accepted by the CLI and coordinator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Method {
+    /// Exact dense Sinkhorn: Alg. 1 (balanced), Alg. 2 (unbalanced), or
+    /// IBP (Alg. 5) for barycenter problems.
+    Sinkhorn,
+    /// The paper's importance-sparsified Spar-Sink (Algs. 3-4).
+    SparSink,
+    /// Spar-Sink with the log-domain sparse engine forced on — stays
+    /// solvable at ε far below the multiplicative underflow point.
+    SparSinkLog,
+    /// Uniform-sampling ablation (same sparse loop, `p_ij = 1/n²`).
+    RandSink,
+    /// Nyström-factorized Sinkhorn (Altschuler et al. 2019); the robust
+    /// variant (Le et al. 2021) via [`SolverSpec::robust_clip`].
+    NysSink,
+    /// Greedy coordinate Sinkhorn (Altschuler et al. 2017). Balanced
+    /// dense problems only.
+    Greenkhorn,
+    /// Screened Sinkhorn (Alaya et al. 2019). Balanced dense problems
+    /// only.
+    Screenkhorn,
+    /// Importance-sparsified IBP (Alg. 6). Barycenter problems only.
+    SparIbp,
+}
+
+impl Method {
+    /// All registered methods, in registry order.
+    pub const ALL: [Method; 8] = [
+        Method::Sinkhorn,
+        Method::SparSink,
+        Method::SparSinkLog,
+        Method::RandSink,
+        Method::NysSink,
+        Method::Greenkhorn,
+        Method::Screenkhorn,
+        Method::SparIbp,
+    ];
+
+    /// The registry key / CLI spelling.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Sinkhorn => "sinkhorn",
+            Method::SparSink => "spar-sink",
+            Method::SparSinkLog => "spar-sink-log",
+            Method::RandSink => "rand-sink",
+            Method::NysSink => "nys-sink",
+            Method::Greenkhorn => "greenkhorn",
+            Method::Screenkhorn => "screenkhorn",
+            Method::SparIbp => "spar-ibp",
+        }
+    }
+
+    /// Inverse of [`Method::name`].
+    pub fn parse(name: &str) -> Option<Method> {
+        Method::ALL.iter().copied().find(|m| m.name() == name)
+    }
+
+    /// Position in [`Method::ALL`] (stable index for per-method metric
+    /// arrays).
+    pub fn index(&self) -> usize {
+        Method::ALL.iter().position(|m| m == self).expect("method in ALL")
+    }
+}
+
+/// Parse a scaling-backend spelling (`auto`, `multiplicative`/`mult`,
+/// `log-domain`/`log`).
+pub fn parse_backend(name: &str) -> Option<ScalingBackend> {
+    match name {
+        "auto" => Some(ScalingBackend::default()),
+        "multiplicative" | "mult" => Some(ScalingBackend::Multiplicative),
+        "log-domain" | "log" => Some(ScalingBackend::LogDomain),
+        _ => None,
+    }
+}
+
+/// Builder-style solver request. Defaults mirror the paper's Section 5-6
+/// setups: budget `s = 8·s₀(n)`, δ = 10⁻⁶, 1000 iterations, shrinkage
+/// θ = 1, `Auto` backend (multiplicative above the ε threshold,
+/// log-domain below it or on numerical failure).
+#[derive(Clone, Debug)]
+pub struct SolverSpec {
+    pub method: Method,
+    /// Sample budget in units of s₀(n) = 10⁻³ n log⁴ n (sparsified
+    /// methods; also sets the matched Nyström rank when `rank` is None).
+    pub s_multiplier: f64,
+    /// Scaling-backend override; `None` = the solver's default policy
+    /// (`Auto` for the sparse family).
+    pub backend: Option<ScalingBackend>,
+    /// Stopping threshold δ on the L1 scaling displacement.
+    pub delta: f64,
+    /// Iteration cap.
+    pub max_iters: usize,
+    /// Error instead of best-effort when the cap is hit.
+    pub strict: bool,
+    /// RNG seed used by [`crate::api::solve`] (sparsifier / pivot
+    /// sampling); ignored by deterministic dense solvers.
+    pub seed: u64,
+    /// Spar-Sink shrinkage θ mixing importance and uniform probabilities.
+    pub shrinkage: f64,
+    /// Nys-Sink rank override; `None` = matched budget `⌈s/n⌉`.
+    pub rank: Option<usize>,
+    /// Robust-Nys-Sink clip (scalings clamped to `[1/c, c]`); `None` =
+    /// plain Nys-Sink.
+    pub robust_clip: Option<f64>,
+    /// Screenkhorn decimation factor κ (keeps n/κ active points).
+    pub decimation: usize,
+    /// Greenkhorn update cap factor (max updates = factor · n).
+    pub max_updates_factor: usize,
+}
+
+impl SolverSpec {
+    pub fn new(method: Method) -> Self {
+        SolverSpec {
+            method,
+            s_multiplier: 8.0,
+            backend: None,
+            delta: 1e-6,
+            max_iters: 1000,
+            strict: false,
+            seed: 0,
+            shrinkage: 1.0,
+            rank: None,
+            robust_clip: None,
+            decimation: 3,
+            max_updates_factor: 5,
+        }
+    }
+
+    /// Sample budget in units of s₀(n).
+    pub fn with_budget(mut self, s_multiplier: f64) -> Self {
+        self.s_multiplier = s_multiplier;
+        self
+    }
+
+    /// Force a scaling backend (overrides the solver's `Auto` policy).
+    pub fn with_backend(mut self, backend: ScalingBackend) -> Self {
+        self.backend = backend.into();
+        self
+    }
+
+    pub fn with_tolerance(mut self, delta: f64) -> Self {
+        self.delta = delta;
+        self
+    }
+
+    pub fn with_max_iters(mut self, max_iters: usize) -> Self {
+        self.max_iters = max_iters;
+        self
+    }
+
+    pub fn with_strict(mut self, strict: bool) -> Self {
+        self.strict = strict;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_shrinkage(mut self, shrinkage: f64) -> Self {
+        self.shrinkage = shrinkage;
+        self
+    }
+
+    pub fn with_rank(mut self, rank: usize) -> Self {
+        self.rank = Some(rank);
+        self
+    }
+
+    pub fn with_robust_clip(mut self, clip: f64) -> Self {
+        self.robust_clip = Some(clip);
+        self
+    }
+
+    pub fn with_decimation(mut self, decimation: usize) -> Self {
+        self.decimation = decimation;
+        self
+    }
+
+    pub fn with_max_updates_factor(mut self, factor: usize) -> Self {
+        self.max_updates_factor = factor;
+        self
+    }
+
+    /// The inner Sinkhorn-loop parameters this spec describes.
+    pub fn sinkhorn_params(&self) -> SinkhornParams {
+        SinkhornParams { delta: self.delta, max_iters: self.max_iters, strict: self.strict }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_names_roundtrip() {
+        for m in Method::ALL {
+            assert_eq!(Method::parse(m.name()), Some(m));
+            assert_eq!(Method::ALL[m.index()], m);
+        }
+        assert_eq!(Method::parse("nope"), None);
+    }
+
+    #[test]
+    fn builder_chains() {
+        let spec = SolverSpec::new(Method::SparSink)
+            .with_budget(16.0)
+            .with_backend(ScalingBackend::LogDomain)
+            .with_tolerance(1e-8)
+            .with_max_iters(200)
+            .with_seed(7)
+            .with_shrinkage(0.9);
+        assert_eq!(spec.s_multiplier, 16.0);
+        assert_eq!(spec.backend, Some(ScalingBackend::LogDomain));
+        let p = spec.sinkhorn_params();
+        assert_eq!(p.delta, 1e-8);
+        assert_eq!(p.max_iters, 200);
+        assert!(!p.strict);
+    }
+
+    #[test]
+    fn backend_spellings() {
+        assert_eq!(parse_backend("mult"), Some(ScalingBackend::Multiplicative));
+        assert_eq!(parse_backend("log"), Some(ScalingBackend::LogDomain));
+        assert!(matches!(parse_backend("auto"), Some(ScalingBackend::Auto { .. })));
+        assert_eq!(parse_backend("nope"), None);
+    }
+}

@@ -67,20 +67,28 @@ pub fn usage() -> String {
      \n\
      COMMANDS:\n\
        experiment <id|all> [--full] [--out results/]   regenerate a paper figure/table\n\
-       solve --problem ot|uot [--n N] [--eps E] [--lambda L] [--method M] [--seed S]\n\
-                                                       one-off synthetic solve\n\
-       serve [--videos V] [--frames F] [--workers W] [--method M]\n\
-                                                       run the batched WFR distance service\n\
-       runtime-info                                    PJRT platform + artifact menu\n\
+       solve --problem ot|uot [--n N] [--eps E] [--lambda L] [--method M]\n\
+             [--backend B] [--seed S]                  one-off synthetic solve\n\
+       serve [--videos V] [--frames F] [--workers W] [--method M] [--eps E]\n\
+             [--backend B]                             run the batched WFR distance service\n\
+       runtime-info                                    PJRT platform + artifact menu (xla feature)\n\
        list                                            list available experiments\n\
      \n\
      OPTIONS:\n\
        --full        paper-scale parameters (default: quick profile)\n\
        --out DIR     also write JSON rows to DIR/<id>.json\n\
-       --method M    solve: spar-sink|spar-sink-log|rand-sink|nys-sink\n\
-                     serve: spar-sink|spar-sink-log|rand-sink|sinkhorn\n\
-                     (spar-sink-log forces the log-domain sparse backend\n\
-                     for small-eps jobs; see `experiment smalleps`)\n"
+       --method M    any solver registered in the unified API:\n\
+                     sinkhorn|spar-sink|spar-sink-log|rand-sink|nys-sink|\n\
+                     greenkhorn|screenkhorn|spar-ibp\n\
+                     (solve and serve dispatch through api::solve; methods\n\
+                     that do not support the requested formulation report\n\
+                     a per-job error)\n\
+       --backend B   scaling-loop override: auto|multiplicative|log-domain.\n\
+                     Defaults per method: spar-sink uses auto (multiplicative\n\
+                     above the eps threshold, log-domain below it or on\n\
+                     numerical failure; see `experiment smalleps`); rand-sink\n\
+                     is the multiplicative baseline unless overridden; dense\n\
+                     sinkhorn UOT and barycenters have no log engine yet\n"
         .to_string()
 }
 

@@ -2,6 +2,15 @@
 
 use std::sync::Arc;
 
+use crate::solvers::backend::{BackendKind, ScalingBackend};
+
+/// Which solver executes a job: the coordinator dispatches every method
+/// registered in [`crate::api`], so this is the unified [`Method`]
+/// re-exported. UOT-only jobs submitted to an OT-only solver (e.g.
+/// `greenkhorn`) come back with the registry's error in
+/// [`DistanceResult::error`] rather than failing the service.
+pub use crate::api::Method;
+
 /// A discrete measure: support points + masses (shared across jobs via
 /// `Arc` so a video's frames are stored once).
 #[derive(Clone, Debug)]
@@ -25,36 +34,6 @@ impl Measure {
     }
 }
 
-/// Which solver executes the job.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
-pub enum Method {
-    /// Exact unbalanced Sinkhorn (Algorithm 2), dense.
-    Sinkhorn,
-    /// The paper's Spar-Sink (Algorithm 4); payload = s multiplier
-    /// in units of s₀(n) is carried in [`ProblemSpec::s_multiplier`].
-    /// Escalates to the log-domain backend on numerical failure.
-    SparSink,
-    /// Spar-Sink with the log-domain sparse engine forced on: the
-    /// sketch is built from log-kernel values and the scaling loop runs
-    /// on dual potentials, so jobs stay solvable at ε far below the
-    /// multiplicative underflow point (these previously came back as
-    /// NaN distances).
-    SparSinkLog,
-    /// Uniform-sampling ablation.
-    RandSink,
-}
-
-impl Method {
-    pub fn name(&self) -> &'static str {
-        match self {
-            Method::Sinkhorn => "sinkhorn",
-            Method::SparSink => "spar-sink",
-            Method::SparSinkLog => "spar-sink-log",
-            Method::RandSink => "rand-sink",
-        }
-    }
-}
-
 /// Problem parameters shared by a family of jobs.
 #[derive(Clone, Debug)]
 pub struct ProblemSpec {
@@ -70,6 +49,10 @@ pub struct ProblemSpec {
     pub delta: f64,
     /// Iteration cap.
     pub max_iters: usize,
+    /// Per-job scaling-backend override: `None` = the solver's default
+    /// policy (`Auto` for the sparse family — multiplicative above the
+    /// ε threshold, log-domain below it or on numerical failure).
+    pub backend: Option<ScalingBackend>,
 }
 
 impl Default for ProblemSpec {
@@ -82,6 +65,7 @@ impl Default for ProblemSpec {
             s_multiplier: 8.0,
             delta: 1e-6,
             max_iters: 1000,
+            backend: None,
         }
     }
 }
@@ -109,6 +93,9 @@ pub struct DistanceResult {
     pub objective: f64,
     /// Solver iterations used.
     pub iterations: usize,
+    /// Which scaling engine actually produced the solution (`None` on
+    /// error, or for solvers outside the backend switch).
+    pub backend: Option<BackendKind>,
     /// End-to-end latency (queue + solve).
     pub latency: std::time::Duration,
     /// Which batch the job ran in (diagnostics).
@@ -142,5 +129,15 @@ mod tests {
         assert_eq!(spec.eps, 0.01);
         assert_eq!(spec.eta, 15.0);
         assert_eq!(spec.s_multiplier, 8.0);
+        assert!(spec.backend.is_none());
+    }
+
+    #[test]
+    fn coordinator_method_is_the_api_method() {
+        // One dispatch vocabulary end to end: the coordinator accepts
+        // exactly the registry's methods.
+        for m in Method::ALL {
+            assert!(crate::api::lookup(m.name()).is_some(), "{m:?}");
+        }
     }
 }

@@ -109,14 +109,33 @@ pub struct MetricsSnapshot {
     pub max_latency: Duration,
     /// Jobs per second over the service lifetime.
     pub throughput: f64,
+    /// Per-method log-domain escalation counters: completed jobs whose
+    /// solution reports `BackendKind::LogDomain` although neither the
+    /// method (`spar-sink-log`) nor the job's `ProblemSpec::backend`
+    /// forced the log engine — i.e. the `Auto` policy escalated, either
+    /// up front (small ε) or after a multiplicative failure. Only
+    /// methods with a non-zero count appear.
+    pub log_escalations: Vec<(&'static str, u64)>,
+    /// Gauge: escalated jobs / completed jobs.
+    pub log_escalation_rate: f64,
 }
 
 impl MetricsSnapshot {
     pub fn render(&self) -> String {
+        let escalations = if self.log_escalations.is_empty() {
+            "none".to_string()
+        } else {
+            self.log_escalations
+                .iter()
+                .map(|(method, count)| format!("{method}={count}"))
+                .collect::<Vec<_>>()
+                .join(" ")
+        };
         format!(
             "jobs: {} submitted / {} completed / {} failed in {} batches\n\
              latency: mean {:.1?}  p50 {:.1?}  p99 {:.1?}  max {:.1?}\n\
-             throughput: {:.2} jobs/s",
+             throughput: {:.2} jobs/s\n\
+             log-domain escalations: {} (rate {:.3})",
             self.submitted,
             self.completed,
             self.failed,
@@ -125,7 +144,9 @@ impl MetricsSnapshot {
             self.p50_latency,
             self.p99_latency,
             self.max_latency,
-            self.throughput
+            self.throughput,
+            escalations,
+            self.log_escalation_rate
         )
     }
 }

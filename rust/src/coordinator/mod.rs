@@ -11,7 +11,8 @@
 //!                      groups jobs by (method, size bucket)
 //!                                  │
 //!                          worker pool (N threads)
-//!                 solves each job via the requested solver
+//!              solves each job through `api::solve` (one
+//!            dispatch surface for every registered method)
 //!                                  │
 //!                       per-job response channels + metrics
 //! ```

@@ -1,6 +1,13 @@
 //! The distance service: bounded submission queue → batcher → worker
 //! pool, all on std threads (the image has no tokio; the architecture
 //! mirrors a continuous-batching server loop).
+//!
+//! Workers carry NO per-method solver plumbing: every job is expressed
+//! as an [`OtProblem`] (WFR cost/log-kernel oracles + unbalanced
+//! formulation) plus a [`SolverSpec`] derived from the job's
+//! [`ProblemSpec`], and dispatched through [`api::solve`]. The per-job
+//! [`ProblemSpec::backend`] override is honored end-to-end, and each
+//! result reports the [`BackendKind`] that actually ran.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -10,14 +17,13 @@ use std::time::{Duration, Instant};
 
 use super::jobs::{DistanceJob, DistanceResult, Method};
 use super::metrics::{LatencyHistogram, MetricsSnapshot};
+use crate::api::{self, CostSource, EntryOracle, Formulation, OtProblem, SolverSpec};
 use crate::error::{Error, Result};
-use crate::ot::cost::{euclidean, wfr_cost_from_distance, wfr_kernel_from_distance};
-use crate::ot::sinkhorn::SinkhornParams;
-use crate::ot::uot::{sinkhorn_uot, wfr_distance_from_objective};
-use crate::rng::Rng;
-use crate::solvers::backend::ScalingBackend;
-use crate::solvers::rand_sink::rand_sink_uot_oracle;
-use crate::solvers::spar_sink::{spar_sink_uot_logk_oracle, SparSinkParams};
+use crate::ot::cost::{euclidean, log_gibbs_from_cost, wfr_cost_from_distance};
+use crate::ot::uot::wfr_distance_from_objective;
+use crate::solvers::backend::{BackendKind, ScalingBackend};
+
+const N_METHODS: usize = Method::ALL.len();
 
 /// Coordinator configuration.
 #[derive(Clone, Debug)]
@@ -62,6 +68,11 @@ struct Shared {
     completed: AtomicU64,
     failed: AtomicU64,
     batches: AtomicU64,
+    /// Per-method count of completed jobs whose solution came back from
+    /// the log-domain engine WITHOUT the job forcing it (neither
+    /// `Method::SparSinkLog` nor a `ProblemSpec::backend` override) —
+    /// the `Auto` policy escalated. Indexed by [`Method::index`].
+    escalations: [AtomicU64; N_METHODS],
     latency: LatencyHistogram,
     started: Instant,
     stopping: AtomicBool,
@@ -86,6 +97,7 @@ impl DistanceService {
             completed: AtomicU64::new(0),
             failed: AtomicU64::new(0),
             batches: AtomicU64::new(0),
+            escalations: std::array::from_fn(|_| AtomicU64::new(0)),
             latency: LatencyHistogram::new(),
             started: Instant::now(),
             stopping: AtomicBool::new(false),
@@ -151,16 +163,27 @@ impl DistanceService {
     pub fn metrics(&self) -> MetricsSnapshot {
         let s = &self.shared;
         let elapsed = s.started.elapsed().as_secs_f64().max(1e-9);
+        let completed = s.completed.load(Ordering::Relaxed);
+        let log_escalations: Vec<(&'static str, u64)> = Method::ALL
+            .iter()
+            .filter_map(|m| {
+                let count = s.escalations[m.index()].load(Ordering::Relaxed);
+                (count > 0).then_some((m.name(), count))
+            })
+            .collect();
+        let escalated: u64 = log_escalations.iter().map(|(_, c)| c).sum();
         MetricsSnapshot {
             submitted: s.submitted.load(Ordering::Relaxed),
-            completed: s.completed.load(Ordering::Relaxed),
+            completed,
             failed: s.failed.load(Ordering::Relaxed),
             batches: s.batches.load(Ordering::Relaxed),
             mean_latency: s.latency.mean(),
             p50_latency: s.latency.quantile(0.5),
             p99_latency: s.latency.quantile(0.99),
             max_latency: s.latency.max(),
-            throughput: s.completed.load(Ordering::Relaxed) as f64 / elapsed,
+            throughput: completed as f64 / elapsed,
+            log_escalations,
+            log_escalation_rate: escalated as f64 / completed.max(1) as f64,
         }
     }
 
@@ -257,6 +280,13 @@ fn flush(pending: &mut Vec<QueuedJob>, batch_tx: &Sender<Batch>, shared: &Arc<Sh
     }
 }
 
+/// Whether this job pinned the log-domain engine itself (such jobs are
+/// not escalations when they report `BackendKind::LogDomain`).
+fn forces_log_domain(job: &DistanceJob) -> bool {
+    job.method == Method::SparSinkLog
+        || matches!(job.spec.backend, Some(ScalingBackend::LogDomain))
+}
+
 fn run_batch(batch: Batch, shared: &Arc<Shared>) {
     let Batch { id: batch_id, jobs } = batch;
     for queued in jobs {
@@ -267,77 +297,67 @@ fn run_batch(batch: Batch, shared: &Arc<Shared>) {
             shared.failed.fetch_add(1, Ordering::Relaxed);
         } else {
             shared.completed.fetch_add(1, Ordering::Relaxed);
+            if result.backend == Some(BackendKind::LogDomain) && !forces_log_domain(&queued.job)
+            {
+                shared.escalations[queued.job.method.index()]
+                    .fetch_add(1, Ordering::Relaxed);
+            }
         }
         let _ = queued.respond.send(result);
     }
 }
 
-/// Solve one WFR-distance job with the requested method. Kernel and
-/// cost are exposed as oracles — never materialized densely for the
-/// sparsified methods.
+/// Express one WFR-distance job as an [`OtProblem`] + [`SolverSpec`]
+/// and dispatch it through `api::solve` — the single method-agnostic
+/// solver surface. Kernel and cost are exposed as oracles, never
+/// materialized densely for the sparsified methods.
 fn solve_job(job: &DistanceJob, batch_id: u64, enqueued: Instant) -> DistanceResult {
     let spec = &job.spec;
-    let src_pts = &job.source.points;
-    let tgt_pts = &job.target.points;
-    let kernel = |i: usize, j: usize| {
-        wfr_kernel_from_distance(euclidean(&src_pts[i], &tgt_pts[j]), spec.eta, spec.eps)
-    };
-    let cost = |i: usize, j: usize| {
-        wfr_cost_from_distance(euclidean(&src_pts[i], &tgt_pts[j]), spec.eta)
-    };
+    let (eta, eps) = (spec.eta, spec.eps);
+    let src = job.source.points.clone();
+    let tgt = job.target.points.clone();
+    let cost: EntryOracle = Arc::new(move |i: usize, j: usize| {
+        wfr_cost_from_distance(euclidean(&src[i], &tgt[j]), eta)
+    });
     // Log-kernel oracle for the sparsified arms: the WFR cost is finite
     // below the π·η cutoff, so `−C/ε` stays finite where the linear
     // kernel underflows at small ε. Sampling through it keeps every
     // selected entry usable by the log-domain backend — a sketch built
     // from the linear oracle would silently DROP underflowed entries,
     // and no later escalation could recover them.
-    let log_kernel =
-        |i: usize, j: usize| crate::ot::cost::log_gibbs_from_cost(cost(i, j), spec.eps);
-    let a = &job.source.mass;
-    let b = &job.target.mass;
-    let sink_params = SinkhornParams { delta: spec.delta, max_iters: spec.max_iters, strict: false };
-    let n = a.len().max(b.len());
-    let s_abs = spec.s_multiplier * crate::metrics::s0(n);
-    let mut rng = Rng::seed_from(job.seed);
-
-    let solved: Result<(f64, usize)> = match job.method {
-        Method::Sinkhorn => {
-            let kmat = crate::linalg::Mat::from_fn(a.len(), b.len(), &kernel);
-            let cmat = crate::linalg::Mat::from_fn(a.len(), b.len(), &cost);
-            sinkhorn_uot(&kmat, &cmat, a, b, spec.lambda, spec.eps, &sink_params)
-                .map(|s| (s.objective, s.iterations))
-        }
-        Method::SparSink => {
-            let params = SparSinkParams { sinkhorn: sink_params, ..Default::default() };
-            spar_sink_uot_logk_oracle(
-                log_kernel, &cost, a, b, spec.lambda, spec.eps, s_abs, &params, &mut rng,
-            )
-            .map(|s| (s.solution.objective, s.solution.iterations))
-        }
-        Method::SparSinkLog => {
-            let params = SparSinkParams {
-                sinkhorn: sink_params,
-                backend: ScalingBackend::LogDomain,
-                ..Default::default()
-            };
-            spar_sink_uot_logk_oracle(
-                log_kernel, &cost, a, b, spec.lambda, spec.eps, s_abs, &params, &mut rng,
-            )
-            .map(|s| (s.solution.objective, s.solution.iterations))
-        }
-        Method::RandSink => rand_sink_uot_oracle(
-            &kernel, &cost, a, b, spec.lambda, spec.eps, s_abs, &sink_params, &mut rng,
-        )
-        .map(|s| (s.solution.objective, s.solution.iterations)),
+    let cost_for_lk = cost.clone();
+    let log_kernel: EntryOracle =
+        Arc::new(move |i: usize, j: usize| log_gibbs_from_cost(cost_for_lk(i, j), eps));
+    let problem = OtProblem {
+        cost: CostSource::Oracle {
+            rows: job.source.len(),
+            cols: job.target.len(),
+            cost,
+            log_kernel: Some(log_kernel),
+        },
+        a: job.source.mass.clone(),
+        b: job.target.mass.clone(),
+        eps,
+        formulation: Formulation::Unbalanced { lambda: spec.lambda },
     };
+    let mut solver_spec = SolverSpec::new(job.method)
+        .with_budget(spec.s_multiplier)
+        .with_tolerance(spec.delta)
+        .with_max_iters(spec.max_iters)
+        .with_seed(job.seed);
+    if let Some(backend) = spec.backend {
+        solver_spec = solver_spec.with_backend(backend);
+    }
 
+    let solved = api::solve(&problem, &solver_spec);
     let latency = enqueued.elapsed();
     match solved {
-        Ok((objective, iterations)) => DistanceResult {
+        Ok(solution) => DistanceResult {
             id: job.id,
-            distance: wfr_distance_from_objective(objective),
-            objective,
-            iterations,
+            distance: wfr_distance_from_objective(solution.objective),
+            objective: solution.objective,
+            iterations: solution.iterations,
+            backend: solution.backend,
             latency,
             batch_id,
             error: None,
@@ -347,6 +367,7 @@ fn solve_job(job: &DistanceJob, batch_id: u64, enqueued: Instant) -> DistanceRes
             distance: f64::NAN,
             objective: f64::NAN,
             iterations: 0,
+            backend: None,
             latency,
             batch_id,
             error: Some(e.to_string()),
@@ -358,6 +379,7 @@ fn solve_job(job: &DistanceJob, batch_id: u64, enqueued: Instant) -> DistanceRes
 mod tests {
     use super::*;
     use crate::coordinator::jobs::{Measure, ProblemSpec};
+    use crate::rng::Rng;
 
     fn toy_measure(n: usize, seed: u64, mass: f64) -> Measure {
         let mut rng = Rng::seed_from(seed);
@@ -394,11 +416,15 @@ mod tests {
             assert_eq!(r.id, i as u64);
             assert!(r.error.is_none(), "job {i}: {:?}", r.error);
             assert!(r.distance.is_finite() && r.distance >= 0.0);
+            // Moderate eps on the Auto policy: multiplicative engine.
+            assert_eq!(r.backend, Some(BackendKind::Multiplicative));
         }
         let m = service.shutdown();
         assert_eq!(m.completed, 8);
         assert_eq!(m.failed, 0);
         assert!(m.batches >= 1);
+        assert!(m.log_escalations.is_empty());
+        assert_eq!(m.log_escalation_rate, 0.0);
     }
 
     #[test]
@@ -465,10 +491,45 @@ mod tests {
     }
 
     #[test]
-    fn spar_sink_log_jobs_survive_small_eps() {
-        // ε far below the multiplicative underflow point: SparSink jobs
-        // used to come back as NaN distances here; SparSinkLog runs the
-        // log-domain engine end to end.
+    fn small_eps_spar_sink_reports_log_domain_and_escalation_metrics() {
+        // ε below the Auto threshold (2e-3): plain SparSink jobs must
+        // come back solved BY the log-domain engine, report that in the
+        // result, and show up in the per-method escalation counters.
+        let service = DistanceService::start(CoordinatorConfig {
+            workers: 2,
+            ..Default::default()
+        });
+        let mk = |id: u64| DistanceJob {
+            id,
+            source: toy_measure(50, 31, 1.0),
+            target: toy_measure(50, 32, 1.2),
+            method: Method::SparSink,
+            spec: ProblemSpec {
+                eta: 3.0,
+                eps: 5e-4,
+                s_multiplier: 16.0,
+                ..Default::default()
+            },
+            seed: 7 + id,
+        };
+        let results = service.submit_all(vec![mk(0), mk(1)]).unwrap();
+        for r in &results {
+            assert!(r.error.is_none(), "job {}: {:?}", r.id, r.error);
+            assert!(r.distance.is_finite() && r.distance >= 0.0);
+            assert_eq!(r.backend, Some(BackendKind::LogDomain), "job {}", r.id);
+        }
+        let m = service.shutdown();
+        assert_eq!(m.completed, 2);
+        assert_eq!(m.log_escalations, vec![("spar-sink", 2)]);
+        assert!((m.log_escalation_rate - 1.0).abs() < 1e-12);
+        assert!(m.render().contains("spar-sink=2"));
+    }
+
+    #[test]
+    fn spar_sink_log_jobs_survive_small_eps_without_counting_as_escalations() {
+        // ε far below the multiplicative underflow point: SparSinkLog
+        // pins the log engine itself, so the jobs succeed but are NOT
+        // escalations.
         let service = DistanceService::start(CoordinatorConfig {
             workers: 2,
             ..Default::default()
@@ -489,16 +550,56 @@ mod tests {
         let results = service.submit_all(vec![mk(0), mk(1)]).unwrap();
         for r in &results {
             assert!(r.error.is_none(), "job {}: {:?}", r.id, r.error);
-            assert!(
-                r.distance.is_finite() && r.distance >= 0.0,
-                "job {}: distance {}",
-                r.id,
-                r.distance
-            );
+            assert_eq!(r.backend, Some(BackendKind::LogDomain));
         }
         let m = service.shutdown();
         assert_eq!(m.completed, 2);
         assert_eq!(m.failed, 0);
+        assert!(m.log_escalations.is_empty());
+        assert_eq!(m.log_escalation_rate, 0.0);
+    }
+
+    #[test]
+    fn per_job_backend_override_is_honored_end_to_end() {
+        // Same moderate-eps problem twice: the default Auto policy runs
+        // multiplicative; a per-job LogDomain override must actually
+        // reach the scaling loop and be reported back.
+        let service = DistanceService::start(CoordinatorConfig {
+            workers: 2,
+            ..Default::default()
+        });
+        let mk = |id: u64, backend: Option<ScalingBackend>| DistanceJob {
+            id,
+            source: toy_measure(60, 11, 1.0),
+            target: toy_measure(60, 12, 1.2),
+            method: Method::SparSink,
+            spec: ProblemSpec { eta: 3.0, eps: 0.05, backend, ..Default::default() },
+            seed: 5,
+        };
+        let results = service
+            .submit_all(vec![mk(0, None), mk(1, Some(ScalingBackend::LogDomain))])
+            .unwrap();
+        assert!(results.iter().all(|r| r.error.is_none()), "{results:?}");
+        assert_eq!(results[0].backend, Some(BackendKind::Multiplicative));
+        assert_eq!(results[1].backend, Some(BackendKind::LogDomain));
+        // Forced-log job is not an escalation.
+        let m = service.shutdown();
+        assert!(m.log_escalations.is_empty(), "{:?}", m.log_escalations);
+    }
+
+    #[test]
+    fn ot_only_methods_report_errors_per_job() {
+        // Greenkhorn is balanced-OT-only: a WFR (unbalanced) job comes
+        // back with the registry's error instead of wedging the service.
+        let service = DistanceService::start(CoordinatorConfig::default());
+        let results = service
+            .submit_all(vec![job(0, Method::Greenkhorn, 20), job(1, Method::SparSink, 20)])
+            .unwrap();
+        assert!(results[0].error.is_some());
+        assert!(results[1].error.is_none());
+        let m = service.shutdown();
+        assert_eq!(m.failed, 1);
+        assert_eq!(m.completed, 1);
     }
 
     #[test]

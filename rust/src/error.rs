@@ -34,11 +34,14 @@ pub enum Error {
     #[error(transparent)]
     Io(#[from] std::io::Error),
 
-    /// Error bubbled up from the `xla` crate.
+    /// Error bubbled up from the `xla` crate (only with the `xla`
+    /// feature, which gates the PJRT runtime).
+    #[cfg(feature = "xla")]
     #[error("xla: {0}")]
     Xla(String),
 }
 
+#[cfg(feature = "xla")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())

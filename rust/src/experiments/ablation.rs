@@ -7,11 +7,11 @@
 
 use super::common::{exact_ot, ot_cost, rmae_over_reps, row};
 use super::{ExperimentOutput, Profile};
+use crate::api::{self, Method, OtProblem, SolverSpec};
 use crate::data::synthetic::{instance, Scenario};
 use crate::metrics::s0;
 use crate::ot::sinkhorn::SinkhornParams;
 use crate::rng::Rng;
-use crate::solvers::spar_sink::{spar_sink_ot, SparSinkParams};
 use crate::solvers::sparse_loop;
 use crate::sparse::sample_with_replacement_ot;
 use crate::util::json::Json;
@@ -29,21 +29,17 @@ pub fn run(profile: Profile) -> ExperimentOutput {
     let truth = exact_ot(&cost, &inst.a, &inst.b, eps).expect("exact");
 
     // --- shrinkage sweep ---
+    let problem = OtProblem::balanced(&cost, inst.a.clone(), inst.b.clone(), eps);
     let mut table = Table::new(&["ablation", "setting", "rmae", "se"]);
     let mut rows = Vec::new();
     for theta in [0.0, 0.25, 0.5, 0.75, 1.0] {
-        let params = SparSinkParams {
-            sinkhorn: SinkhornParams::default(),
-            shrinkage: theta,
-            ..Default::default()
-        };
+        let spec = SolverSpec::new(Method::SparSink)
+            .with_budget(s_mult)
+            .with_shrinkage(theta);
         let (rmae, se, _) = rmae_over_reps(
             reps,
             truth,
-            |r| {
-                spar_sink_ot(&cost, &inst.a, &inst.b, eps, s_mult, &params, r)
-                    .map(|s| s.solution.objective)
-            },
+            |r| api::solve_with_rng(&problem, &spec, r).map(|s| s.objective),
             &mut rng,
         );
         table.row(vec!["shrinkage".into(), format!("theta={theta}"), f(rmae, 4), f(se, 4)]);
@@ -83,13 +79,11 @@ pub fn run(profile: Profile) -> ExperimentOutput {
         ("scheme", Json::str("with-replacement")),
         ("rmae", Json::num(rmae_wr)),
     ]));
+    let spec = SolverSpec::new(Method::SparSink).with_budget(s_mult);
     let (rmae_p, se_p, _) = rmae_over_reps(
         reps,
         truth,
-        |r| {
-            spar_sink_ot(&cost, &inst.a, &inst.b, eps, s_mult, &SparSinkParams::default(), r)
-                .map(|s| s.solution.objective)
-        },
+        |r| api::solve_with_rng(&problem, &spec, r).map(|s| s.objective),
         &mut rng,
     );
     table.row(vec!["sampling".into(), "poisson".into(), f(rmae_p, 4), f(se_p, 4)]);

@@ -1,20 +1,22 @@
-//! Shared experiment plumbing: method runners at matched budgets, RMAE
-//! sweeps, and result-row helpers.
+//! Shared experiment plumbing: method runners at matched budgets (all
+//! dispatched through [`crate::api::solve_with_rng`]), RMAE sweeps, and
+//! result-row helpers.
 
+use std::sync::Arc;
+
+use crate::api::{self, OtProblem, SolverSpec};
 use crate::linalg::Mat;
-use crate::metrics::{mean_sd, s0};
+use crate::metrics::mean_sd;
 use crate::ot::cost::{gibbs_kernel, sq_euclidean_cost, wfr_cost};
 use crate::ot::sinkhorn::{sinkhorn_ot, SinkhornParams};
 use crate::ot::uot::sinkhorn_uot;
 use crate::rng::Rng;
 use crate::solvers::backend::ScalingBackend;
-use crate::solvers::nys_sink::{nys_sink_ot, nys_sink_uot, NysSinkParams};
-use crate::solvers::rand_sink::{rand_sink_ot, rand_sink_uot};
-use crate::solvers::spar_sink::{spar_sink_ot, spar_sink_uot, SparSinkParams};
 use crate::util::json::Json;
 
 /// Subsampling-based methods compared in Figs. 2-3 and 8-10, plus the
-/// log-domain Spar-Sink variant used by the small-ε harness.
+/// log-domain Spar-Sink variant used by the small-ε harness. A paper-
+/// figure-sized subset of the full [`api::Method`] registry.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Method {
     NysSink,
@@ -30,13 +32,18 @@ impl Method {
         [Method::NysSink, Method::RandSink, Method::SparSink]
     }
 
-    pub fn name(&self) -> &'static str {
+    /// The registry method this experiment arm dispatches to.
+    pub fn api(&self) -> api::Method {
         match self {
-            Method::NysSink => "nys-sink",
-            Method::RandSink => "rand-sink",
-            Method::SparSink => "spar-sink",
-            Method::SparSinkLog => "spar-sink-log",
+            Method::NysSink => api::Method::NysSink,
+            Method::RandSink => api::Method::RandSink,
+            Method::SparSink => api::Method::SparSink,
+            Method::SparSinkLog => api::Method::SparSinkLog,
         }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.api().name()
     }
 }
 
@@ -56,64 +63,41 @@ pub fn normalize_cost(cost: &Mat) -> Mat {
     cost.map(move |c| c / max)
 }
 
-/// Build the (normalized) squared-Euclidean cost of an instance.
-pub fn ot_cost(points: &[Vec<f64>]) -> Mat {
-    normalize_cost(&sq_euclidean_cost(points, points))
+/// Build the (normalized) squared-Euclidean cost of an instance,
+/// `Arc`-shared so replication sweeps reuse one allocation across
+/// every `api::solve` dispatch.
+pub fn ot_cost(points: &[Vec<f64>]) -> Arc<Mat> {
+    Arc::new(normalize_cost(&sq_euclidean_cost(points, points)))
 }
 
 /// Build the WFR cost at a target kernel density (R1-R3).
-pub fn wfr_cost_at_density(points: &[Vec<f64>], density: f64) -> Mat {
+pub fn wfr_cost_at_density(points: &[Vec<f64>], density: f64) -> Arc<Mat> {
     let eta = crate::ot::cost::calibrate_eta(points, points, density, 1e-3);
-    wfr_cost(points, points, eta)
+    Arc::new(wfr_cost(points, points, eta))
 }
 
-/// Run one subsampling method on an OT problem at budget `s_mult`·s₀(n);
-/// Nys-Sink gets rank r = ceil(s/n) per the paper's matched protocol.
+/// Run one subsampling method on an OT problem at budget `s_mult`·s₀(n)
+/// through the unified API; Nys-Sink gets rank r = ceil(s/n) per the
+/// paper's matched protocol (the registry's default).
 pub fn run_method_ot(
     method: Method,
-    cost: &Mat,
+    cost: &Arc<Mat>,
     a: &[f64],
     b: &[f64],
     eps: f64,
     s_mult: f64,
     rng: &mut Rng,
 ) -> crate::error::Result<f64> {
-    let n = a.len();
-    match method {
-        Method::SparSink => spar_sink_ot(cost, a, b, eps, s_mult, &SparSinkParams::default(), rng)
-            .map(|s| s.solution.objective),
-        Method::SparSinkLog => {
-            let params =
-                SparSinkParams { backend: ScalingBackend::LogDomain, ..Default::default() };
-            spar_sink_ot(cost, a, b, eps, s_mult, &params, rng).map(|s| s.solution.objective)
-        }
-        Method::RandSink => {
-            rand_sink_ot(cost, a, b, eps, s_mult, &SinkhornParams::default(), rng)
-                .map(|s| s.solution.objective)
-        }
-        Method::NysSink => {
-            let rank = ((s_mult * s0(n) / n as f64).ceil() as usize).max(1);
-            let kernel = gibbs_kernel(cost, eps);
-            nys_sink_ot(
-                |i, j| kernel.get(i, j),
-                |i, j| cost.get(i, j),
-                a,
-                b,
-                eps,
-                rank,
-                &NysSinkParams::default(),
-                rng,
-            )
-            .map(|s| s.objective)
-        }
-    }
+    let problem = OtProblem::balanced(cost, a.to_vec(), b.to_vec(), eps);
+    let spec = SolverSpec::new(method.api()).with_budget(s_mult);
+    api::solve_with_rng(&problem, &spec, rng).map(|s| s.objective)
 }
 
 /// Same for UOT (WFR cost).
 #[allow(clippy::too_many_arguments)]
 pub fn run_method_uot(
     method: Method,
-    cost: &Mat,
+    cost: &Arc<Mat>,
     a: &[f64],
     b: &[f64],
     lambda: f64,
@@ -121,53 +105,9 @@ pub fn run_method_uot(
     s_mult: f64,
     rng: &mut Rng,
 ) -> crate::error::Result<f64> {
-    let n = a.len();
-    match method {
-        Method::SparSink => spar_sink_uot(
-            cost,
-            a,
-            b,
-            lambda,
-            eps,
-            s_mult,
-            &SparSinkParams::default(),
-            rng,
-        )
-        .map(|s| s.solution.objective),
-        Method::SparSinkLog => {
-            let params =
-                SparSinkParams { backend: ScalingBackend::LogDomain, ..Default::default() };
-            spar_sink_uot(cost, a, b, lambda, eps, s_mult, &params, rng)
-                .map(|s| s.solution.objective)
-        }
-        Method::RandSink => rand_sink_uot(
-            cost,
-            a,
-            b,
-            lambda,
-            eps,
-            s_mult,
-            &SinkhornParams::default(),
-            rng,
-        )
-        .map(|s| s.solution.objective),
-        Method::NysSink => {
-            let rank = ((s_mult * s0(n) / n as f64).ceil() as usize).max(1);
-            let kernel = gibbs_kernel_inf(cost, eps);
-            nys_sink_uot(
-                |i, j| kernel.get(i, j),
-                |i, j| cost.get(i, j),
-                a,
-                b,
-                lambda,
-                eps,
-                rank,
-                &NysSinkParams::default(),
-                rng,
-            )
-            .map(|s| s.objective)
-        }
-    }
+    let problem = OtProblem::unbalanced(cost, a.to_vec(), b.to_vec(), lambda, eps);
+    let spec = SolverSpec::new(method.api()).with_budget(s_mult);
+    api::solve_with_rng(&problem, &spec, rng).map(|s| s.objective)
 }
 
 /// Gibbs kernel that maps infinite costs (WFR truncation) to zero.

@@ -5,11 +5,9 @@
 
 use super::common::{exact_ot, ot_cost, rmae_over_reps, run_method_ot, Method};
 use super::{ExperimentOutput, Profile};
+use crate::api::{self, OtProblem, SolverSpec};
 use crate::data::synthetic::{instance, Scenario};
-use crate::ot::cost::gibbs_kernel;
 use crate::rng::Rng;
-use crate::solvers::greenkhorn::{greenkhorn_ot, GreenkhornParams};
-use crate::solvers::screenkhorn::{screenkhorn_ot, ScreenkhornParams};
 use crate::util::json::Json;
 use crate::util::table::{f, Table};
 
@@ -41,32 +39,22 @@ pub fn run(profile: Profile) -> ExperimentOutput {
                 );
                 push(&mut table, &mut rows, eps, n, method.name(), rmae, se, failures);
             }
-            // Greenkhorn (deterministic given the instance).
-            let kernel = gibbs_kernel(&cost, eps);
-            match greenkhorn_ot(&kernel, &cost, &inst.a, &inst.b, eps, &GreenkhornParams::default())
-            {
-                Ok(sol) => {
-                    let rmae = (sol.objective - truth).abs() / truth.abs();
-                    push(&mut table, &mut rows, eps, n, "greenkhorn", rmae, 0.0, 0);
-                }
-                Err(_) => push(&mut table, &mut rows, eps, n, "greenkhorn", f64::NAN, 0.0, 1),
-            }
-            // Screenkhorn — omitted for eps = 1e-3 (paper Sec. 5.1).
+            // The non-subsampling baselines, through the same registry
+            // surface (deterministic given the instance). Screenkhorn is
+            // omitted for eps = 1e-3 (paper Sec. 5.1).
+            let problem = OtProblem::balanced(&cost, inst.a.clone(), inst.b.clone(), eps);
+            let mut baselines = vec![api::Method::Greenkhorn];
             if eps > 1e-3 {
-                match screenkhorn_ot(
-                    &kernel,
-                    &cost,
-                    &inst.a,
-                    &inst.b,
-                    eps,
-                    &ScreenkhornParams::default(),
-                ) {
+                baselines.push(api::Method::Screenkhorn);
+            }
+            for baseline in baselines {
+                match api::solve(&problem, &SolverSpec::new(baseline)) {
                     Ok(sol) => {
                         let rmae = (sol.objective - truth).abs() / truth.abs();
-                        push(&mut table, &mut rows, eps, n, "screenkhorn", rmae, 0.0, 0);
+                        push(&mut table, &mut rows, eps, n, baseline.name(), rmae, 0.0, 0);
                     }
                     Err(_) => {
-                        push(&mut table, &mut rows, eps, n, "screenkhorn", f64::NAN, 0.0, 1)
+                        push(&mut table, &mut rows, eps, n, baseline.name(), f64::NAN, 0.0, 1)
                     }
                 }
             }

@@ -7,15 +7,11 @@
 
 use std::time::Instant;
 
-use super::common::{gibbs_kernel_inf, ot_cost, run_method_ot, run_method_uot, wfr_cost_at_density, Method};
+use super::common::{ot_cost, run_method_ot, run_method_uot, wfr_cost_at_density, Method};
 use super::{ExperimentOutput, Profile};
+use crate::api::{self, OtProblem, SolverSpec};
 use crate::data::synthetic::{instance, Scenario, SparsityRegime};
-use crate::ot::cost::gibbs_kernel;
-use crate::ot::sinkhorn::{sinkhorn_ot, SinkhornParams};
-use crate::ot::uot::sinkhorn_uot;
 use crate::rng::Rng;
-use crate::solvers::greenkhorn::{greenkhorn_ot, GreenkhornParams};
-use crate::solvers::screenkhorn::{screenkhorn_ot, ScreenkhornParams};
 use crate::util::json::Json;
 use crate::util::table::{f, Table};
 
@@ -33,7 +29,6 @@ pub fn run(profile: Profile) -> ExperimentOutput {
             // ---- OT ----
             let inst = instance(Scenario::C1, n, d, 1.0, 1.0, &mut rng);
             let cost = ot_cost(&inst.points);
-            let kernel = gibbs_kernel(&cost, eps);
             let record = |problem: &str,
                               method: &str,
                               secs: f64,
@@ -55,17 +50,17 @@ pub fn run(profile: Profile) -> ExperimentOutput {
                 ]));
             };
 
-            let t0 = Instant::now();
-            let _ = sinkhorn_ot(&kernel, &cost, &inst.a, &inst.b, eps, &SinkhornParams::default());
-            record("OT", "sinkhorn", t0.elapsed().as_secs_f64(), &mut table, &mut rows);
-
-            let t0 = Instant::now();
-            let _ = greenkhorn_ot(&kernel, &cost, &inst.a, &inst.b, eps, &GreenkhornParams::default());
-            record("OT", "greenkhorn", t0.elapsed().as_secs_f64(), &mut table, &mut rows);
-
-            let t0 = Instant::now();
-            let _ = screenkhorn_ot(&kernel, &cost, &inst.a, &inst.b, eps, &ScreenkhornParams::default());
-            record("OT", "screenkhorn", t0.elapsed().as_secs_f64(), &mut table, &mut rows);
+            // Dense baselines through the registry (each solve includes
+            // its own kernel materialization — the full cost a fresh
+            // request pays).
+            let problem = OtProblem::balanced(&cost, inst.a.clone(), inst.b.clone(), eps);
+            for method in
+                [api::Method::Sinkhorn, api::Method::Greenkhorn, api::Method::Screenkhorn]
+            {
+                let t0 = Instant::now();
+                let _ = api::solve(&problem, &SolverSpec::new(method));
+                record("OT", method.name(), t0.elapsed().as_secs_f64(), &mut table, &mut rows);
+            }
 
             for method in [Method::NysSink, Method::SparSink] {
                 let t0 = Instant::now();
@@ -76,11 +71,12 @@ pub fn run(profile: Profile) -> ExperimentOutput {
             // ---- UOT (WFR, R2 density) ----
             let inst = instance(Scenario::C1, n, d, 5.0, 3.0, &mut rng);
             let wcost = wfr_cost_at_density(&inst.points, SparsityRegime::R2.density());
-            let wkernel = gibbs_kernel_inf(&wcost, eps);
             let (lambda, ueps) = (0.1, eps);
 
+            let uproblem =
+                OtProblem::unbalanced(&wcost, inst.a.clone(), inst.b.clone(), lambda, ueps);
             let t0 = Instant::now();
-            let _ = sinkhorn_uot(&wkernel, &wcost, &inst.a, &inst.b, lambda, ueps, &SinkhornParams::default());
+            let _ = api::solve(&uproblem, &SolverSpec::new(api::Method::Sinkhorn));
             record("UOT", "sinkhorn", t0.elapsed().as_secs_f64(), &mut table, &mut rows);
 
             for method in [Method::NysSink, Method::SparSink] {

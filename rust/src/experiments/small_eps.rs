@@ -11,10 +11,10 @@
 
 use super::common::{exact_ot_stable, ot_cost, rmae_over_reps, row};
 use super::{ExperimentOutput, Profile};
+use crate::api::{self, Method, OtProblem, SolverSpec};
 use crate::data::synthetic::{instance, Scenario};
 use crate::rng::Rng;
 use crate::solvers::backend::ScalingBackend;
-use crate::solvers::spar_sink::{spar_sink_ot, SparSinkParams};
 use crate::util::json::Json;
 use crate::util::table::{f, Table};
 
@@ -45,15 +45,14 @@ pub fn run(profile: Profile) -> ExperimentOutput {
             ]);
             continue;
         };
+        let problem = OtProblem::balanced(&cost, inst.a.clone(), inst.b.clone(), eps);
         for (name, backend) in backends {
-            let params = SparSinkParams { backend, ..Default::default() };
+            let spec =
+                SolverSpec::new(Method::SparSink).with_budget(s_mult).with_backend(backend);
             let (rmae, se, failures) = rmae_over_reps(
                 reps,
                 truth,
-                |r| {
-                    spar_sink_ot(&cost, &inst.a, &inst.b, eps, s_mult, &params, r)
-                        .map(|s| s.solution.objective)
-                },
+                |r| api::solve_with_rng(&problem, &spec, r).map(|s| s.objective),
                 &mut rng,
             );
             table.row(vec![

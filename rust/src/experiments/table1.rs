@@ -5,19 +5,16 @@
 //! mean-pooling.  Methods: Nys-Sink, Robust-Nys-Sink, Rand-Sink,
 //! Spar-Sink at s ∈ {1,2,4,8}·s₀(n), and exact Sinkhorn.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use super::common::row;
 use super::{ExperimentOutput, Profile};
+use crate::api::{self, CostSource, EntryOracle, Formulation, Method, OtProblem, SolverSpec};
 use crate::data::echo::{frame_to_measure, generate, mean_pool, EchoConfig, Health};
-use crate::metrics::{ed_prediction_error, mean_sd, s0};
-use crate::ot::cost::{euclidean, wfr_cost_from_distance, wfr_kernel_from_distance};
-use crate::ot::sinkhorn::SinkhornParams;
-use crate::ot::uot::sinkhorn_uot;
+use crate::metrics::{ed_prediction_error, mean_sd};
+use crate::ot::cost::{euclidean, log_gibbs_from_cost, wfr_cost_from_distance};
 use crate::rng::Rng;
-use crate::solvers::nys_sink::{nys_sink_uot, NysSinkParams};
-use crate::solvers::rand_sink::rand_sink_uot_oracle;
-use crate::solvers::spar_sink::{spar_sink_uot_oracle, SparSinkParams};
 use crate::util::json::Json;
 use crate::util::table::{f, pm, Table};
 
@@ -43,12 +40,14 @@ impl T1Method {
 }
 
 struct FrameMeasure {
-    pts: Vec<Vec<f64>>,
-    mass: Vec<f64>,
+    pts: Arc<Vec<Vec<f64>>>,
+    mass: Arc<Vec<f64>>,
 }
 
 /// Entropic UOT objective between two frames with the requested method
-/// (debiasing to a distance happens in the caller).
+/// (debiasing to a distance happens in the caller). The frame pair is
+/// expressed as an oracle-cost [`OtProblem`] and every arm dispatches
+/// through `api::solve_with_rng`.
 #[allow(clippy::too_many_arguments)]
 fn wfr_between(
     method: T1Method,
@@ -60,59 +59,40 @@ fn wfr_between(
     s_mult: f64,
     rng: &mut Rng,
 ) -> Option<f64> {
-    let kernel =
-        |i: usize, j: usize| wfr_kernel_from_distance(euclidean(&src.pts[i], &dst.pts[j]), eta, eps);
-    let cost =
-        |i: usize, j: usize| wfr_cost_from_distance(euclidean(&src.pts[i], &dst.pts[j]), eta);
-    let n = src.mass.len().max(dst.mass.len());
-    let s_abs = s_mult * s0(n);
-    let params = SinkhornParams::default();
-    let objective = match method {
-        T1Method::Sinkhorn => {
-            let kmat = crate::linalg::Mat::from_fn(src.mass.len(), dst.mass.len(), kernel);
-            let cmat = crate::linalg::Mat::from_fn(src.mass.len(), dst.mass.len(), cost);
-            sinkhorn_uot(&kmat, &cmat, &src.mass, &dst.mass, lambda, eps, &params)
-                .ok()?
-                .objective
-        }
-        T1Method::SparSink => spar_sink_uot_oracle(
-            kernel,
+    if matches!(method, T1Method::NysSink | T1Method::RobustNysSink)
+        && src.mass.len() != dst.mass.len()
+    {
+        return None; // Nyström needs shared support size
+    }
+    let (sp, tp) = (src.pts.clone(), dst.pts.clone());
+    let cost: EntryOracle = Arc::new(move |i: usize, j: usize| {
+        wfr_cost_from_distance(euclidean(&sp[i], &tp[j]), eta)
+    });
+    let cost_for_lk = cost.clone();
+    let log_kernel: EntryOracle =
+        Arc::new(move |i: usize, j: usize| log_gibbs_from_cost(cost_for_lk(i, j), eps));
+    let problem = OtProblem {
+        cost: CostSource::Oracle {
+            rows: src.mass.len(),
+            cols: dst.mass.len(),
             cost,
-            &src.mass,
-            &dst.mass,
-            lambda,
-            eps,
-            s_abs,
-            &SparSinkParams::default(),
-            rng,
-        )
-        .ok()?
-        .solution
-        .objective,
-        T1Method::RandSink => rand_sink_uot_oracle(
-            kernel, cost, &src.mass, &dst.mass, lambda, eps, s_abs, &params, rng,
-        )
-        .ok()?
-        .solution
-        .objective,
-        T1Method::NysSink | T1Method::RobustNysSink => {
-            if src.mass.len() != dst.mass.len() {
-                return None; // Nyström needs shared support size
-            }
-            let rank = ((s_abs / n as f64).ceil() as usize).max(1);
-            let nys_params = if method == T1Method::RobustNysSink {
-                NysSinkParams { robust_clip: Some(1e3), ..Default::default() }
-            } else {
-                NysSinkParams::default()
-            };
-            nys_sink_uot(
-                kernel, cost, &src.mass, &dst.mass, lambda, eps, rank, &nys_params, rng,
-            )
-            .ok()?
-            .objective
+            log_kernel: Some(log_kernel),
+        },
+        a: src.mass.clone(),
+        b: dst.mass.clone(),
+        eps,
+        formulation: Formulation::Unbalanced { lambda },
+    };
+    let spec = match method {
+        T1Method::Sinkhorn => SolverSpec::new(Method::Sinkhorn),
+        T1Method::SparSink => SolverSpec::new(Method::SparSink).with_budget(s_mult),
+        T1Method::RandSink => SolverSpec::new(Method::RandSink).with_budget(s_mult),
+        T1Method::NysSink => SolverSpec::new(Method::NysSink).with_budget(s_mult),
+        T1Method::RobustNysSink => {
+            SolverSpec::new(Method::NysSink).with_budget(s_mult).with_robust_clip(1e3)
         }
     };
-    Some(objective)
+    api::solve_with_rng(&problem, &spec, rng).ok().map(|s| s.objective)
 }
 
 /// Debiased squared distance between frames i (ES) and j: the
@@ -191,7 +171,7 @@ pub fn run(profile: Profile) -> ExperimentOutput {
                                 (fr.clone(), native)
                             };
                             let (pts, mass) = frame_to_measure(&img, sz, 0.05);
-                            FrameMeasure { pts, mass }
+                            FrameMeasure { pts: Arc::new(pts), mass: Arc::new(mass) }
                         })
                         .collect();
                     for &(t_es, t_ed) in &cycles(&video.es_frames, &video.ed_frames) {

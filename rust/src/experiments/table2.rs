@@ -8,15 +8,16 @@
 //! image (DESIGN.md §3); the divergence is the exact quantity SSAE
 //! replaces, so matching it at half the cost is the reproduction target.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use super::common::{exact_ot, normalize_cost, row};
 use super::{ExperimentOutput, Profile};
+use crate::api::{self, Method, OtProblem, SolverSpec};
 use crate::linalg::Mat;
 use crate::metrics::mean_sd;
 use crate::ot::cost::sq_euclidean_cost;
 use crate::rng::Rng;
-use crate::solvers::spar_sink::{spar_sink_ot, SparSinkParams};
 use crate::util::json::Json;
 use crate::util::table::{f, pm, Table};
 
@@ -39,12 +40,12 @@ fn latent_batches(n: usize, d: usize, rng: &mut Rng) -> (Vec<Vec<f64>>, Vec<Vec<
 }
 
 fn divergence(
-    xy: &Mat,
-    xx: &Mat,
-    yy: &Mat,
+    xy: &Arc<Mat>,
+    xx: &Arc<Mat>,
+    yy: &Arc<Mat>,
     a: &[f64],
     eps: f64,
-    mut solve: impl FnMut(&Mat) -> crate::error::Result<f64>,
+    mut solve: impl FnMut(&Arc<Mat>) -> crate::error::Result<f64>,
 ) -> crate::error::Result<f64> {
     let _ = a;
     let oxy = solve(xy)?;
@@ -68,9 +69,9 @@ pub fn run(profile: Profile) -> ExperimentOutput {
     for _ in 0..batches {
         let (post, prior) = latent_batches(n, d, &mut rng);
         let a = vec![1.0 / n as f64; n];
-        let cost_xy = normalize_cost(&sq_euclidean_cost(&post, &prior));
-        let cost_xx = normalize_cost(&sq_euclidean_cost(&post, &post));
-        let cost_yy = normalize_cost(&sq_euclidean_cost(&prior, &prior));
+        let cost_xy = Arc::new(normalize_cost(&sq_euclidean_cost(&post, &prior)));
+        let cost_xx = Arc::new(normalize_cost(&sq_euclidean_cost(&post, &post)));
+        let cost_yy = Arc::new(normalize_cost(&sq_euclidean_cost(&prior, &prior)));
 
         let t0 = Instant::now();
         let exact = divergence(&cost_xy, &cost_xx, &cost_yy, &a, eps, |c| {
@@ -80,9 +81,10 @@ pub fn run(profile: Profile) -> ExperimentOutput {
         let Ok(exact) = exact else { continue };
 
         let t0 = Instant::now();
+        let spec = SolverSpec::new(Method::SparSink).with_budget(s_mult);
         let approx = divergence(&cost_xy, &cost_xx, &cost_yy, &a, eps, |c| {
-            spar_sink_ot(c, &a, &a, eps, s_mult, &SparSinkParams::default(), &mut rng)
-                .map(|s| s.solution.objective)
+            let problem = OtProblem::balanced(c, a.clone(), a.clone(), eps);
+            api::solve_with_rng(&problem, &spec, &mut rng).map(|s| s.objective)
         });
         spar_times.push(t0.elapsed().as_secs_f64());
         if let Ok(approx) = approx {

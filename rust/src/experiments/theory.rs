@@ -8,13 +8,13 @@
 
 use super::common::{exact_ot, ot_cost, row};
 use super::{ExperimentOutput, Profile};
+use crate::api::{self, Method, OtProblem, SolverSpec};
 use crate::data::synthetic::{instance, Scenario};
 use crate::linalg::{spectral_norm, Mat};
 use crate::metrics::{mean_sd, s0};
 use crate::ot::cost::gibbs_kernel;
 use crate::ot::sinkhorn::{sinkhorn_scalings, SinkhornParams};
 use crate::rng::Rng;
-use crate::solvers::spar_sink::{spar_sink_ot, SparSinkParams};
 use crate::sparse::poisson_sparsify_ot;
 use crate::util::json::Json;
 use crate::util::table::{f, Table};
@@ -56,11 +56,11 @@ pub fn run(profile: Profile) -> ExperimentOutput {
             let dense_sketch = sketch.to_dense_kernel();
             let diff = Mat::from_fn(n, n, |i, j| dense_sketch.get(i, j) - kernel.get(i, j));
             spec_errs.push(spectral_norm(&diff, 200, 1e-8, &mut rng) / k_norm);
-            // Objective error.
-            if let Ok(sol) =
-                spar_sink_ot(&cost, &inst.a, &inst.b, eps, mult, &SparSinkParams::default(), &mut rng)
-            {
-                obj_errs.push((sol.solution.objective - truth).abs() / truth.abs());
+            // Objective error (through the unified API).
+            let problem = OtProblem::balanced(&cost, inst.a.clone(), inst.b.clone(), eps);
+            let spec = SolverSpec::new(Method::SparSink).with_budget(mult);
+            if let Ok(sol) = api::solve_with_rng(&problem, &spec, &mut rng) {
+                obj_errs.push((sol.objective - truth).abs() / truth.abs());
             }
         }
         let (spec_mean, _) = mean_sd(&spec_errs);

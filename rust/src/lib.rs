@@ -4,13 +4,18 @@
 //! Sinkhorn Algorithm”* (Li, Yu, Li & Meng, JMLR 2023) as a three-layer
 //! Rust + JAX + Pallas stack:
 //!
-//! * **L3 (this crate)** — the full solver library: exact entropic OT/UOT
-//!   Sinkhorn and IBP barycenter solvers, the paper's Spar-Sink /
-//!   Spar-IBP importance-sparsified solvers, every evaluated baseline
-//!   (Greenkhorn, Screenkhorn, Nys-Sink, Robust-Nys-Sink, Rand-Sink),
-//!   workload generators, a batched distance-matrix coordinator, the
-//!   experiment harness regenerating every figure/table, and the PJRT
-//!   runtime that executes the AOT-compiled L2/L1 artifacts.
+//! * **L3 (this crate)** — the solver library behind one stable surface:
+//!   describe a problem as an [`api::OtProblem`] (marginals + dense cost
+//!   or entry oracles + balanced/unbalanced/barycenter
+//!   [`api::Formulation`]), pick a registered method with an
+//!   [`api::SolverSpec`], and get an [`api::Solution`] back from
+//!   [`api::solve`]. The registry covers exact Sinkhorn/IBP, the paper's
+//!   Spar-Sink / Spar-IBP, and every evaluated baseline (Greenkhorn,
+//!   Screenkhorn, Nys-Sink ± robust clip, Rand-Sink). On top sit the
+//!   batched distance-matrix [`coordinator`], the [`experiments`]
+//!   harness regenerating every figure/table, and (behind the `xla`
+//!   feature) the PJRT runtime executing the AOT-compiled L2/L1
+//!   artifacts.
 //! * **L2 (python/compile/model.py)** — JAX definition of the fused
 //!   Sinkhorn scaling blocks and objectives, lowered once to HLO text.
 //! * **L1 (python/compile/kernels/)** — Pallas tile kernels for the
@@ -21,25 +26,35 @@
 //!
 //! ## Quick start
 //!
+//! Mirrors `examples/quickstart.rs`: one problem, two specs, one
+//! `solve` call each.
+//!
 //! ```no_run
+//! use spar_sink::api::{self, Method, OtProblem, SolverSpec};
 //! use spar_sink::ot::cost::sq_euclidean_cost;
-//! use spar_sink::ot::sinkhorn::{sinkhorn_ot, SinkhornParams};
-//! use spar_sink::solvers::spar_sink::{spar_sink_ot, SparSinkParams};
 //! use spar_sink::rng::Rng;
 //!
 //! let n = 256;
 //! let mut rng = Rng::seed_from(7);
 //! let pts: Vec<Vec<f64>> = (0..n).map(|_| vec![rng.uniform(), rng.uniform()]).collect();
-//! let cost = sq_euclidean_cost(&pts, &pts);
 //! let a = vec![1.0 / n as f64; n];
-//! let b = vec![1.0 / n as f64; n];
-//! let eps = 0.05;
-//! let kernel = cost.map(|c| (-c / eps).exp());
-//! let exact = sinkhorn_ot(&kernel, &cost, &a, &b, eps, &SinkhornParams::default()).unwrap();
-//! let approx = spar_sink_ot(&cost, &a, &b, eps, 8.0, &SparSinkParams::default(), &mut rng).unwrap();
-//! println!("exact {:.6} sparse {:.6}", exact.objective, approx.solution.objective);
+//! let problem = OtProblem::balanced(sq_euclidean_cost(&pts, &pts), a.clone(), a, 0.05);
+//!
+//! let exact = api::solve(&problem, &SolverSpec::new(Method::Sinkhorn)).unwrap();
+//! let spec = SolverSpec::new(Method::SparSink).with_budget(8.0).with_seed(7);
+//! let approx = api::solve(&problem, &spec).unwrap();
+//! println!(
+//!     "exact {:.6} sparse {:.6}  (backend {:?}, nnz {:?}, {:?})",
+//!     exact.objective, approx.objective, approx.backend, approx.nnz(), approx.wall_time
+//! );
 //! ```
+//!
+//! The per-paper free functions (`ot::sinkhorn::sinkhorn_ot`,
+//! `solvers::spar_sink::spar_sink_ot`, …) remain as thin entry points
+//! the registry adapters call into — use them when reproducing an
+//! algorithm line-by-line, and `api::solve` for everything else.
 
+pub mod api;
 pub mod bench;
 pub mod cli;
 pub mod coordinator;
@@ -51,6 +66,7 @@ pub mod metrics;
 pub mod ot;
 pub mod pool;
 pub mod rng;
+#[cfg(feature = "xla")]
 pub mod runtime;
 pub mod solvers;
 pub mod sparse;

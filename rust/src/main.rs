@@ -10,7 +10,7 @@ use spar_sink::experiments::{self, Profile};
 
 const VALUE_KEYS: &[&str] = &[
     "out", "n", "eps", "lambda", "method", "seed", "videos", "frames", "workers", "problem", "s",
-    "d",
+    "d", "backend",
 ];
 
 fn main() {
@@ -68,10 +68,9 @@ fn cmd_experiment(args: &Args) -> i32 {
 }
 
 fn cmd_solve(args: &Args) -> i32 {
+    use spar_sink::api::{self, parse_backend, Method, OtProblem, SolverSpec};
     use spar_sink::data::synthetic::{instance, Scenario};
-    use spar_sink::experiments::common::{
-        exact_ot, exact_uot, ot_cost, run_method_ot, run_method_uot, wfr_cost_at_density, Method,
-    };
+    use spar_sink::experiments::common::{ot_cost, wfr_cost_at_density};
     use spar_sink::rng::Rng;
 
     let n: usize = args.get_parsed("n", 500);
@@ -80,65 +79,103 @@ fn cmd_solve(args: &Args) -> i32 {
     let d: usize = args.get_parsed("d", 5);
     let s_mult: f64 = args.get_parsed("s", 8.0);
     let seed: u64 = args.get_parsed("seed", 42);
-    let problem = args.get("problem").unwrap_or("ot").to_string();
-    let method = match args.get("method").unwrap_or("spar-sink") {
-        "nys-sink" => Method::NysSink,
-        "rand-sink" => Method::RandSink,
-        "spar-sink-log" => Method::SparSinkLog,
-        _ => Method::SparSink,
+    let problem_kind = args.get("problem").unwrap_or("ot").to_string();
+    let method_name = args.get("method").unwrap_or("spar-sink");
+    let Some(method) = Method::parse(method_name) else {
+        eprintln!("unknown method '{method_name}'; available: {}", method_names());
+        return 2;
     };
 
+    // One synthetic problem, two specs, one dispatch surface: the exact
+    // reference and the requested method both go through `api::solve`.
     let mut rng = Rng::seed_from(seed);
-    let t0 = std::time::Instant::now();
-    let (exact, approx) = if problem == "uot" {
+    let problem = if problem_kind == "uot" {
         let inst = instance(Scenario::C1, n, d, 5.0, 3.0, &mut rng);
         let cost = wfr_cost_at_density(&inst.points, 0.5);
-        let exact = exact_uot(&cost, &inst.a, &inst.b, lambda, eps);
-        let approx = run_method_uot(method, &cost, &inst.a, &inst.b, lambda, eps, s_mult, &mut rng);
-        (exact, approx)
+        OtProblem::unbalanced(&cost, inst.a, inst.b, lambda, eps)
     } else {
         let inst = instance(Scenario::C1, n, d, 1.0, 1.0, &mut rng);
         let cost = ot_cost(&inst.points);
-        let exact = exact_ot(&cost, &inst.a, &inst.b, eps);
-        let approx = run_method_ot(method, &cost, &inst.a, &inst.b, eps, s_mult, &mut rng);
-        (exact, approx)
+        OtProblem::balanced(&cost, inst.a, inst.b, eps)
     };
+    let mut spec = SolverSpec::new(method).with_budget(s_mult).with_seed(seed);
+    if let Some(name) = args.get("backend") {
+        let Some(backend) = parse_backend(name) else {
+            eprintln!("unknown backend '{name}' (auto|multiplicative|log-domain)");
+            return 2;
+        };
+        spec = spec.with_backend(backend);
+    }
+
+    let exact = api::solve(&problem, &SolverSpec::new(Method::Sinkhorn));
+    let approx = api::solve(&problem, &spec);
     match (exact, approx) {
         (Ok(exact), Ok(approx)) => {
-            let rel = (approx - exact).abs() / exact.abs().max(f64::MIN_POSITIVE);
+            let rel = (approx.objective - exact.objective).abs()
+                / exact.objective.abs().max(f64::MIN_POSITIVE);
             println!(
-                "problem={problem} n={n} d={d} eps={eps} method={} s={s_mult}s0\n\
-                 exact objective   = {exact:.8}\n\
-                 approx objective  = {approx:.8}\n\
-                 relative error    = {rel:.5}\n\
-                 wall time         = {:?}",
+                "problem={problem_kind} n={n} d={d} eps={eps} method={} s={s_mult}s0\n\
+                 exact objective   = {:.8}   ({:?})\n\
+                 approx objective  = {:.8}   ({:?}, backend {:?}, nnz {:?})\n\
+                 relative error    = {rel:.5}",
                 method.name(),
-                t0.elapsed()
+                exact.objective,
+                exact.wall_time,
+                approx.objective,
+                approx.wall_time,
+                approx.backend,
+                approx.nnz(),
             );
             0
         }
         (e, a) => {
-            eprintln!("solve failed: exact={e:?} approx={a:?}");
+            eprintln!(
+                "solve failed: exact={:?} approx={:?}",
+                e.map(|s| s.objective),
+                a.map(|s| s.objective)
+            );
             1
         }
     }
 }
 
+fn method_names() -> String {
+    spar_sink::api::Method::ALL
+        .iter()
+        .map(|m| m.name())
+        .collect::<Vec<_>>()
+        .join("|")
+}
+
 fn cmd_serve(args: &Args) -> i32 {
+    use spar_sink::api::parse_backend;
     use spar_sink::coordinator::{
         CoordinatorConfig, DistanceJob, DistanceService, Measure, Method, ProblemSpec,
     };
     use spar_sink::data::echo::{downsample_frames, frame_to_measure, generate, EchoConfig, Health};
     use spar_sink::rng::Rng;
+    use spar_sink::solvers::backend::BackendKind;
 
     let videos: usize = args.get_parsed("videos", 2);
     let frames_n: usize = args.get_parsed("frames", 36);
     let workers: usize = args.get_parsed("workers", spar_sink::pool::num_threads().min(8));
-    let method = match args.get("method").unwrap_or("spar-sink") {
-        "sinkhorn" => Method::Sinkhorn,
-        "rand-sink" => Method::RandSink,
-        "spar-sink-log" => Method::SparSinkLog,
-        _ => Method::SparSink,
+    let eps: f64 = args.get_parsed("eps", 0.05);
+    let method_name = args.get("method").unwrap_or("spar-sink");
+    let Some(method) = Method::parse(method_name) else {
+        eprintln!("unknown method '{method_name}'; available: {}", method_names());
+        return 2;
+    };
+    // Per-job scaling-backend override, honored end-to-end by the
+    // workers and reported back in the result + escalation metrics.
+    let backend = match args.get("backend") {
+        None => None,
+        Some(name) => match parse_backend(name) {
+            Some(b) => Some(b),
+            None => {
+                eprintln!("unknown backend '{name}' (auto|multiplicative|log-domain)");
+                return 2;
+            }
+        },
     };
     let size = 40;
 
@@ -168,7 +205,12 @@ fn cmd_serve(args: &Args) -> i32 {
                     source: measures[i].clone(),
                     target: measures[j].clone(),
                     method,
-                    spec: ProblemSpec { eta: size as f64 / 7.5, eps: 0.05, ..Default::default() },
+                    spec: ProblemSpec {
+                        eta: size as f64 / 7.5,
+                        eps,
+                        backend,
+                        ..Default::default()
+                    },
                     seed: id,
                 });
                 id += 1;
@@ -182,13 +224,23 @@ fn cmd_serve(args: &Args) -> i32 {
             }
         };
         let ok = results.iter().filter(|r| r.error.is_none()).count();
-        println!("video {v}: {} distances ({} ok)", results.len(), ok);
+        let log_domain = results
+            .iter()
+            .filter(|r| r.backend == Some(BackendKind::LogDomain))
+            .count();
+        println!(
+            "video {v}: {} distances ({} ok, {} via log-domain engine)",
+            results.len(),
+            ok,
+            log_domain
+        );
     }
     println!("total wall time: {:?}", t0.elapsed());
     println!("{}", service.shutdown().render());
     0
 }
 
+#[cfg(feature = "xla")]
 fn cmd_runtime_info() -> i32 {
     use spar_sink::runtime::{default_artifact_dir, ArtifactRegistry, Entry};
     let dir = default_artifact_dir();
@@ -212,4 +264,13 @@ fn cmd_runtime_info() -> i32 {
             1
         }
     }
+}
+
+#[cfg(not(feature = "xla"))]
+fn cmd_runtime_info() -> i32 {
+    eprintln!(
+        "built without the `xla` feature — the PJRT runtime is unavailable.\n\
+         Rebuild with `cargo build --features xla` (requires the xla_extension toolchain)."
+    );
+    1
 }

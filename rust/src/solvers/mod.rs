@@ -1,19 +1,31 @@
 //! Accelerated Sinkhorn variants: the paper's Spar-Sink / Spar-IBP and
 //! every baseline in the evaluation section.
 //!
-//! | Solver | Paper | Per-iteration cost |
-//! |---|---|---|
-//! | [`spar_sink`] | Alg. 3-4 (this paper) | O(s), s = Õ(n) |
-//! | [`rand_sink`] | uniform-sampling ablation | O(s) |
-//! | [`nys_sink`] | Altschuler et al. 2019 (+ robust variant, Le et al. 2021) | O(nr) |
-//! | [`greenkhorn`] | Altschuler et al. 2017 | O(n) per greedy update |
-//! | [`screenkhorn`] | Alaya et al. 2019 | O((n/κ)²) |
-//! | [`spar_ibp`] | Alg. 6 (this paper) | O(ms) |
+//! All of these are registered behind the unified [`crate::api`]
+//! surface — describe the problem as an
+//! [`OtProblem`](crate::api::OtProblem), pick the method in a
+//! [`SolverSpec`](crate::api::SolverSpec), and call
+//! [`api::solve`](crate::api::solve). The per-module free functions
+//! below remain as the thin paper-reproduction entry points the
+//! registry adapters dispatch to.
+//!
+//! | Solver | Registry name | Paper | Per-iteration cost |
+//! |---|---|---|---|
+//! | [`spar_sink`] | `spar-sink` / `spar-sink-log` | Alg. 3-4 (this paper) | O(s), s = Õ(n) |
+//! | [`rand_sink`] | `rand-sink` | uniform-sampling ablation | O(s) |
+//! | [`nys_sink`] | `nys-sink` (± robust clip) | Altschuler et al. 2019 (+ Le et al. 2021) | O(nr) |
+//! | [`greenkhorn`] | `greenkhorn` | Altschuler et al. 2017 | O(n) per greedy update |
+//! | [`screenkhorn`] | `screenkhorn` | Alaya et al. 2019 | O((n/κ)²) |
+//! | [`spar_ibp`] | `spar-ibp` | Alg. 6 (this paper) | O(ms) |
 //!
 //! The multiplicative sparse loop ([`sparse_loop`]) and its log-domain
 //! stabilized twin ([`log_sparse`]) sit behind the
 //! [`backend::ScalingBackend`] switch, which auto-escalates to the log
-//! engine for small ε or on numerical failure.
+//! engine for small ε or on numerical failure;
+//! [`SolverSpec::backend`](crate::api::SolverSpec::backend) overrides
+//! the policy per solve, and every sparse
+//! [`Solution`](crate::api::Solution) reports the
+//! [`BackendKind`](backend::BackendKind) that actually ran.
 
 pub mod backend;
 pub mod greenkhorn;

@@ -265,20 +265,24 @@ mod tests {
             kfun, cfun, &a, &b, lambda, eps, 12, &NysSinkParams::default(), &mut rng,
         );
         // Either it errs out (numerical) or its error is large compared
-        // with Spar-Sink at matched budget (12 * n selected elements).
+        // with Spar-Sink at matched budget (12 * n selected elements),
+        // expressed as an oracle-cost problem through the unified API.
         let mut spar_rng = Rng::seed_from(9);
-        let spar = crate::solvers::spar_sink::spar_sink_uot_oracle(
-            kfun,
-            cfun,
-            &a,
-            &b,
-            lambda,
+        let pts_o = std::sync::Arc::new(pts.clone());
+        let problem = crate::api::OtProblem {
+            cost: crate::api::CostSource::oracle(n, n, move |i, j| {
+                wfr_cost_from_distance(euclidean(&pts_o[i], &pts_o[j]), eta)
+            }),
+            a: std::sync::Arc::new(a.clone()),
+            b: std::sync::Arc::new(b.clone()),
             eps,
-            (12 * n) as f64,
-            &crate::solvers::spar_sink::SparSinkParams::default(),
-            &mut spar_rng,
-        )
-        .unwrap();
+            formulation: crate::api::Formulation::Unbalanced { lambda },
+        };
+        let s_mult = (12 * n) as f64 / crate::metrics::s0(n);
+        let spec = crate::api::SolverSpec::new(crate::api::Method::SparSink)
+            .with_budget(s_mult);
+        let spar = crate::solvers::spar_sink::spar_sink_solve(&problem, &spec, &mut spar_rng)
+            .unwrap();
         let spar_rel = (spar.solution.objective - exact.objective).abs() / exact.objective.abs();
         match nys {
             Ok(sol) => {

@@ -2,16 +2,20 @@
 //! (Section 5): identical to Spar-Sink except every entry has the same
 //! probability `p_ij = 1/n²`. Implemented as the θ = 0 shrinkage limit
 //! of the Poisson sparsifier so the code path is shared.
+//!
+//! The dense entry points keep their paper signatures; the unified API
+//! dispatches through the [`SolverSpec`]-consuming adapter
+//! [`rand_sink_solve`], which also covers oracle costs (the sketch is
+//! sampled straight from the kernel oracle, never materialized).
 
-use super::backend::BackendKind;
-use super::spar_sink::SparSolution;
-use super::sparse_loop;
-use crate::error::Result;
+use super::backend::ScalingBackend;
+use super::spar_sink::{solve_sketch_ot, solve_sketch_uot, SparSolution};
+use crate::api::{CostSource, Formulation, OtProblem, SolverSpec};
+use crate::error::{Error, Result};
 use crate::linalg::Mat;
 use crate::ot::sinkhorn::SinkhornParams;
-use crate::ot::uot::uot_rho;
 use crate::rng::Rng;
-use crate::sparse::poisson_sparsify_with;
+use crate::sparse::{poisson_sparsify_with, CsrMatrix, SparsifyStats};
 
 fn oracle_kernel(cost: &Mat, eps: f64) -> impl Fn(usize, usize) -> f64 + Sync + '_ {
     move |i, j| {
@@ -24,7 +28,22 @@ fn oracle_kernel(cost: &Mat, eps: f64) -> impl Fn(usize, usize) -> f64 + Sync + 
     }
 }
 
-/// Rand-Sink for OT: uniform Poisson sampling + sparse Sinkhorn.
+/// Uniform Poisson sketch: every entry at probability ∝ 1 over the
+/// `n·m` grid, expected budget `s`.
+fn uniform_sketch(
+    n: usize,
+    m: usize,
+    kernel: impl Fn(usize, usize) -> f64 + Sync,
+    cost: impl Fn(usize, usize) -> f64 + Sync,
+    s: f64,
+    rng: &mut Rng,
+) -> Result<(CsrMatrix, SparsifyStats)> {
+    let n2 = (n * m) as f64;
+    poisson_sparsify_with(n, m, kernel, cost, |_, _| 1.0, n2, s, 1.0, rng)
+}
+
+/// Rand-Sink for OT: uniform Poisson sampling + multiplicative sparse
+/// Sinkhorn (the baseline as the paper defines it).
 pub fn rand_sink_ot(
     cost: &Mat,
     a: &[f64],
@@ -34,29 +53,17 @@ pub fn rand_sink_ot(
     params: &SinkhornParams,
     rng: &mut Rng,
 ) -> Result<SparSolution> {
-    let n = a.len();
-    let m = b.len();
+    let (n, m) = (a.len(), b.len());
     let s = s_multiplier * crate::metrics::s0(n);
-    let n2 = (n * m) as f64;
-    let (sketch, stats) = poisson_sparsify_with(
-        n,
-        m,
-        oracle_kernel(cost, eps),
-        |i, j| cost.get(i, j),
-        |_, _| 1.0,
-        n2,
-        s,
-        1.0,
-        rng,
-    )?;
-    let (u, v, iterations, displacement, converged) =
-        sparse_loop::sparse_scalings(&sketch, a, b, 1.0, params)?;
-    let objective = sparse_loop::sparse_ot_objective(&sketch, &u, &v, eps);
-    let solution = sparse_loop::solution(u, v, objective, iterations, displacement, converged)?;
-    Ok(SparSolution { solution, stats, backend: BackendKind::Multiplicative })
+    let (sketch, stats) =
+        uniform_sketch(n, m, oracle_kernel(cost, eps), |i, j| cost.get(i, j), s, rng)?;
+    solve_sketch_ot(&sketch, stats, a, b, eps, ScalingBackend::Multiplicative, params)
 }
 
 /// Rand-Sink for UOT.
+// 8 arguments: paper-reproduction entry point mirroring the Algorithm 4
+// baseline's parameter list; richer configurations go through
+// `rand_sink_solve`.
 #[allow(clippy::too_many_arguments)]
 pub fn rand_sink_uot(
     cost: &Mat,
@@ -68,54 +75,54 @@ pub fn rand_sink_uot(
     params: &SinkhornParams,
     rng: &mut Rng,
 ) -> Result<SparSolution> {
-    let n = a.len();
-    let m = b.len();
+    let (n, m) = (a.len(), b.len());
     let s = s_multiplier * crate::metrics::s0(n);
-    let n2 = (n * m) as f64;
-    let (sketch, stats) = poisson_sparsify_with(
-        n,
-        m,
-        oracle_kernel(cost, eps),
-        |i, j| cost.get(i, j),
-        |_, _| 1.0,
-        n2,
-        s,
-        1.0,
-        rng,
-    )?;
-    let rho = uot_rho(lambda, eps);
-    let (u, v, iterations, displacement, converged) =
-        sparse_loop::sparse_scalings(&sketch, a, b, rho, params)?;
-    let objective = sparse_loop::sparse_uot_objective(&sketch, a, b, &u, &v, lambda, eps);
-    let solution = sparse_loop::solution(u, v, objective, iterations, displacement, converged)?;
-    Ok(SparSolution { solution, stats, backend: BackendKind::Multiplicative })
+    let (sketch, stats) =
+        uniform_sketch(n, m, oracle_kernel(cost, eps), |i, j| cost.get(i, j), s, rng)?;
+    solve_sketch_uot(&sketch, stats, a, b, lambda, eps, ScalingBackend::Multiplicative, params)
 }
 
-/// Oracle variant of [`rand_sink_uot`] for problems whose kernel is
-/// never materialized densely (echo pipeline).
-#[allow(clippy::too_many_arguments)]
-pub fn rand_sink_uot_oracle(
-    kernel: impl Fn(usize, usize) -> f64 + Sync,
-    cost: impl Fn(usize, usize) -> f64 + Sync,
-    a: &[f64],
-    b: &[f64],
-    lambda: f64,
-    eps: f64,
-    s: f64,
-    params: &SinkhornParams,
+/// The [`SolverSpec`]-consuming adapter behind the `rand-sink` registry
+/// entry. Without a [`SolverSpec::backend`] override the scaling loop is
+/// multiplicative — the naive baseline exactly as the paper evaluates
+/// it; an explicit override (e.g. a per-job `ScalingBackend::LogDomain`
+/// from the distance service) is honored, with the log engine deriving
+/// `ln k` from the uniformly sampled linear values. Budgets: s₀(a.len())
+/// for dense costs (the paper's convention), s₀(max(n, m)) for oracle
+/// costs (the distance service's convention).
+pub fn rand_sink_solve(
+    problem: &OtProblem,
+    spec: &SolverSpec,
     rng: &mut Rng,
 ) -> Result<SparSolution> {
-    let n = a.len();
-    let m = b.len();
-    let n2 = (n * m) as f64;
-    let (sketch, stats) =
-        poisson_sparsify_with(n, m, kernel, cost, |_, _| 1.0, n2, s, 1.0, rng)?;
-    let rho = uot_rho(lambda, eps);
-    let (u, v, iterations, displacement, converged) =
-        sparse_loop::sparse_scalings(&sketch, a, b, rho, params)?;
-    let objective = sparse_loop::sparse_uot_objective(&sketch, a, b, &u, &v, lambda, eps);
-    let solution = sparse_loop::solution(u, v, objective, iterations, displacement, converged)?;
-    Ok(SparSolution { solution, stats, backend: BackendKind::Multiplicative })
+    let params = spec.sinkhorn_params();
+    let backend = spec.backend.unwrap_or(ScalingBackend::Multiplicative);
+    let (a, b, eps) = (&problem.a[..], &problem.b[..], problem.eps);
+    if matches!(problem.formulation, Formulation::Barycenter { .. }) {
+        return Err(Error::InvalidParam(
+            "rand-sink solves OT/UOT problems; use spar-ibp for barycenters".into(),
+        ));
+    }
+    let (n, m) = (a.len(), b.len());
+    let s = match &problem.cost {
+        CostSource::Dense(_) => spec.s_multiplier * crate::metrics::s0(n),
+        CostSource::Oracle { .. } => spec.s_multiplier * crate::metrics::s0(n.max(m)),
+    };
+    let (sketch, stats) = uniform_sketch(
+        n,
+        m,
+        |i, j| problem.cost.kernel_at(i, j, eps),
+        |i, j| problem.cost.cost_at(i, j),
+        s,
+        rng,
+    )?;
+    match &problem.formulation {
+        Formulation::Balanced => solve_sketch_ot(&sketch, stats, a, b, eps, backend, &params),
+        Formulation::Unbalanced { lambda } => {
+            solve_sketch_uot(&sketch, stats, a, b, *lambda, eps, backend, &params)
+        }
+        Formulation::Barycenter { .. } => unreachable!("rejected above"),
+    }
 }
 
 #[cfg(test)]
@@ -138,6 +145,32 @@ mod tests {
         let b: Vec<f64> = (0..n).map(|i| (((i + 5) % 10) as f64 + 0.1).powi(3)).collect();
         let sb: f64 = b.iter().sum();
         (cost, a.iter().map(|x| x / sa).collect(), b.iter().map(|x| x / sb).collect())
+    }
+
+    #[test]
+    fn backend_override_is_honored_through_the_adapter() {
+        // Default: the multiplicative baseline. Overridden: the log
+        // engine runs on the same uniform sketch (ln of stored values)
+        // and reports itself in the solution.
+        use crate::api::{Method, SolverSpec};
+        use crate::solvers::backend::BackendKind;
+        let n = 100;
+        let (cost, a, b) = problem(n, 51);
+        let eps = 0.1;
+        let prob = OtProblem::balanced(cost, a, b, eps);
+        let mut rng = Rng::seed_from(3);
+        let base = rand_sink_solve(&prob, &SolverSpec::new(Method::RandSink), &mut rng).unwrap();
+        assert_eq!(base.backend, BackendKind::Multiplicative);
+        let mut rng = Rng::seed_from(3);
+        let spec = SolverSpec::new(Method::RandSink).with_backend(ScalingBackend::LogDomain);
+        let logd = rand_sink_solve(&prob, &spec, &mut rng).unwrap();
+        assert_eq!(logd.backend, BackendKind::LogDomain);
+        // Same sketch, same fixed point (the engines stop on different
+        // displacement statistics, so agreement is tolerance-level, not
+        // bitwise).
+        let rel = (base.solution.objective - logd.solution.objective).abs()
+            / base.solution.objective.abs();
+        assert!(rel < 1e-3, "mult {} vs log {}", base.solution.objective, logd.solution.objective);
     }
 
     #[test]

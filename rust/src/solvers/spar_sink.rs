@@ -2,22 +2,27 @@
 //! kernel with the paper's probabilities (Eqs. 9 / 11), then run the
 //! sparse Sinkhorn loop and evaluate the objective over the sketch.
 //!
-//! The dense-cost entry points build their sketches through the
-//! log-kernel samplers, so every sampled entry keeps an exact `ln K̃`
-//! even when `exp(−C/ε)` underflows — combined with the
-//! [`ScalingBackend`] escalation this makes `spar_sink_ot` /
-//! `spar_sink_uot` return finite objectives at ε orders of magnitude
+//! Every entry point builds its sketch through the log-kernel samplers,
+//! so each sampled entry keeps an exact `ln K̃` even when `exp(−C/ε)`
+//! underflows — combined with the [`ScalingBackend`] escalation this
+//! makes Spar-Sink return finite objectives at ε orders of magnitude
 //! below the multiplicative loop's underflow point.
+//!
+//! The dense paper-reproduction entry points ([`spar_sink_ot`] /
+//! [`spar_sink_uot`]) keep their Algorithm 3/4 signatures; everything
+//! else — oracle costs, backend overrides, budget resolution — goes
+//! through the [`SolverSpec`]-consuming adapter [`spar_sink_solve`],
+//! which is what the [`crate::api`] registry dispatches to.
 
 use super::backend::{BackendKind, ScalingBackend};
-use crate::error::Result;
+use crate::api::{CostSource, Formulation, OtProblem, SolverSpec};
+use crate::error::{Error, Result};
 use crate::linalg::Mat;
 use crate::ot::sinkhorn::SinkhornParams;
 use crate::ot::SinkhornSolution;
 use crate::rng::Rng;
 use crate::sparse::{
-    poisson_sparsify_ot, poisson_sparsify_ot_logk, poisson_sparsify_uot,
-    poisson_sparsify_uot_logk, CsrMatrix, SparsifyStats,
+    poisson_sparsify_ot_logk, poisson_sparsify_uot_logk, CsrMatrix, SparsifyStats,
 };
 
 /// Parameters for the Spar-Sink estimators.
@@ -45,6 +50,18 @@ impl Default for SparSinkParams {
     }
 }
 
+impl SparSinkParams {
+    /// Adapter from the unified [`SolverSpec`]: stopping rule, shrinkage
+    /// θ, and the backend override (`None` → the `Auto` policy).
+    pub fn from_spec(spec: &SolverSpec) -> Self {
+        SparSinkParams {
+            sinkhorn: spec.sinkhorn_params(),
+            shrinkage: spec.shrinkage,
+            backend: spec.backend.unwrap_or_default(),
+        }
+    }
+}
+
 /// Solution plus sparsification diagnostics.
 #[derive(Clone, Debug)]
 pub struct SparSolution {
@@ -54,46 +71,91 @@ pub struct SparSolution {
     pub backend: BackendKind,
 }
 
-/// Algorithm 3 with oracles: `s_multiplier` is the budget in units of
-/// s₀(n) = 10⁻³ n log⁴ n when `s_absolute` is None.
+/// Budget in units of s₀(n) = 10⁻³ n log⁴ n.
 fn resolve_budget(n: usize, s_multiplier: f64) -> f64 {
     s_multiplier * crate::metrics::s0(n)
 }
 
-/// Algorithm 3 (OT) from kernel/cost *oracles* — the kernel never needs
-/// to be materialized densely.
-pub fn spar_sink_ot_oracle(
-    kernel: impl Fn(usize, usize) -> f64 + Sync,
-    cost: impl Fn(usize, usize) -> f64 + Sync,
-    a: &[f64],
-    b: &[f64],
+/// Scalar inputs of one balanced-OT sketch solve (grouped so the oracle
+/// helpers stay within a sane argument count).
+struct OtInputs<'a> {
+    a: &'a [f64],
+    b: &'a [f64],
+    eps: f64,
+    /// Absolute expected sample budget s.
+    s: f64,
+}
+
+/// Scalar inputs of one unbalanced-OT sketch solve.
+struct UotInputs<'a> {
+    a: &'a [f64],
+    b: &'a [f64],
+    lambda: f64,
     eps: f64,
     s: f64,
-    params: &SparSinkParams,
-    rng: &mut Rng,
-) -> Result<SparSolution> {
-    let (sketch, stats) =
-        poisson_sparsify_ot(kernel, cost, a, b, s, params.shrinkage, rng)?;
-    solve_ot_on_sketch(&sketch, a, b, eps, params, stats)
 }
 
 /// Algorithm 3 (OT) from a LOG-kernel oracle `ln K(i,j)` (−∞ = blocked
-/// entry) — the stable entry point for ε far below the multiplicative
-/// underflow threshold: sampled entries keep exact log-kernel values.
-#[allow(clippy::too_many_arguments)]
-pub fn spar_sink_ot_logk_oracle(
+/// entry): sampled entries keep exact log-kernel values, so the sketch
+/// stays solvable through the log-domain backend at any ε.
+fn ot_from_logk_oracle(
     log_kernel: impl Fn(usize, usize) -> f64 + Sync,
     cost: impl Fn(usize, usize) -> f64 + Sync,
-    a: &[f64],
-    b: &[f64],
-    eps: f64,
-    s: f64,
+    inputs: &OtInputs<'_>,
     params: &SparSinkParams,
     rng: &mut Rng,
 ) -> Result<SparSolution> {
-    let (sketch, stats) =
-        poisson_sparsify_ot_logk(log_kernel, cost, a, b, s, params.shrinkage, rng)?;
-    solve_ot_on_sketch(&sketch, a, b, eps, params, stats)
+    let (sketch, stats) = poisson_sparsify_ot_logk(
+        log_kernel,
+        cost,
+        inputs.a,
+        inputs.b,
+        inputs.s,
+        params.shrinkage,
+        rng,
+    )?;
+    solve_sketch_ot(
+        &sketch,
+        stats,
+        inputs.a,
+        inputs.b,
+        inputs.eps,
+        params.backend,
+        &params.sinkhorn,
+    )
+}
+
+/// Algorithm 4 (UOT) from a LOG-kernel oracle: both the Eq. 11 sampling
+/// probabilities and the stored sketch values are computed in the log
+/// domain, so the pipeline survives full kernel underflow end to end.
+fn uot_from_logk_oracle(
+    log_kernel: impl Fn(usize, usize) -> f64 + Sync,
+    cost: impl Fn(usize, usize) -> f64 + Sync,
+    inputs: &UotInputs<'_>,
+    params: &SparSinkParams,
+    rng: &mut Rng,
+) -> Result<SparSolution> {
+    let (sketch, stats) = poisson_sparsify_uot_logk(
+        log_kernel,
+        cost,
+        inputs.a,
+        inputs.b,
+        inputs.lambda,
+        inputs.eps,
+        inputs.s,
+        params.shrinkage,
+        rng,
+    )?;
+    solve_sketch_uot(
+        &sketch,
+        stats,
+        inputs.a,
+        inputs.b,
+        inputs.lambda,
+        inputs.eps,
+        params.backend,
+        &params.sinkhorn,
+    )
 }
 
 /// Algorithm 3 (OT) from a dense cost matrix; `s_multiplier` is in units
@@ -110,103 +172,58 @@ pub fn spar_sink_ot(
     rng: &mut Rng,
 ) -> Result<SparSolution> {
     let s = resolve_budget(a.len(), s_multiplier);
-    spar_sink_ot_logk_oracle(
+    ot_from_logk_oracle(
         |i, j| crate::ot::cost::log_gibbs_from_cost(cost.get(i, j), eps),
         |i, j| cost.get(i, j),
-        a,
-        b,
-        eps,
-        s,
+        &OtInputs { a, b, eps, s },
         params,
         rng,
     )
 }
 
-fn solve_ot_on_sketch(
+/// Run the sparse OT scaling loop over a sketch on `backend` and attach
+/// the sparsification diagnostics — the shared sketch→solution adapter
+/// for the whole sparse family (Spar-Sink here, Rand-Sink's uniform
+/// sketches too).
+pub(crate) fn solve_sketch_ot(
     sketch: &CsrMatrix,
+    stats: SparsifyStats,
     a: &[f64],
     b: &[f64],
     eps: f64,
-    params: &SparSinkParams,
-    stats: SparsifyStats,
+    backend: ScalingBackend,
+    sinkhorn: &SinkhornParams,
 ) -> Result<SparSolution> {
-    let (solution, backend) = params.backend.sparse_ot(sketch, a, b, eps, &params.sinkhorn)?;
+    let (solution, backend) = backend.sparse_ot(sketch, a, b, eps, sinkhorn)?;
     Ok(SparSolution { solution, stats, backend })
 }
 
-fn solve_uot_on_sketch(
+/// UOT twin of [`solve_sketch_ot`].
+// 8 arguments: λ joins the same flat scalar list the sparse kernels use;
+// grouping here would just re-wrap what the two call sites immediately
+// unwrap.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn solve_sketch_uot(
     sketch: &CsrMatrix,
-    a: &[f64],
-    b: &[f64],
-    lambda: f64,
-    eps: f64,
-    params: &SparSinkParams,
     stats: SparsifyStats,
+    a: &[f64],
+    b: &[f64],
+    lambda: f64,
+    eps: f64,
+    backend: ScalingBackend,
+    sinkhorn: &SinkhornParams,
 ) -> Result<SparSolution> {
-    let (solution, backend) =
-        params.backend.sparse_uot(sketch, a, b, lambda, eps, &params.sinkhorn)?;
+    let (solution, backend) = backend.sparse_uot(sketch, a, b, lambda, eps, sinkhorn)?;
     Ok(SparSolution { solution, stats, backend })
-}
-
-/// Algorithm 4 (UOT) from kernel/cost oracles.
-#[allow(clippy::too_many_arguments)]
-pub fn spar_sink_uot_oracle(
-    kernel: impl Fn(usize, usize) -> f64 + Sync,
-    cost: impl Fn(usize, usize) -> f64 + Sync,
-    a: &[f64],
-    b: &[f64],
-    lambda: f64,
-    eps: f64,
-    s: f64,
-    params: &SparSinkParams,
-    rng: &mut Rng,
-) -> Result<SparSolution> {
-    let (sketch, stats) = poisson_sparsify_uot(
-        kernel,
-        cost,
-        a,
-        b,
-        lambda,
-        eps,
-        s,
-        params.shrinkage,
-        rng,
-    )?;
-    solve_uot_on_sketch(&sketch, a, b, lambda, eps, params, stats)
-}
-
-/// Algorithm 4 (UOT) from a LOG-kernel oracle: both the Eq. 11 sampling
-/// probabilities and the stored sketch values are computed in the log
-/// domain, so the pipeline survives full kernel underflow end to end.
-#[allow(clippy::too_many_arguments)]
-pub fn spar_sink_uot_logk_oracle(
-    log_kernel: impl Fn(usize, usize) -> f64 + Sync,
-    cost: impl Fn(usize, usize) -> f64 + Sync,
-    a: &[f64],
-    b: &[f64],
-    lambda: f64,
-    eps: f64,
-    s: f64,
-    params: &SparSinkParams,
-    rng: &mut Rng,
-) -> Result<SparSolution> {
-    let (sketch, stats) = poisson_sparsify_uot_logk(
-        log_kernel,
-        cost,
-        a,
-        b,
-        lambda,
-        eps,
-        s,
-        params.shrinkage,
-        rng,
-    )?;
-    solve_uot_on_sketch(&sketch, a, b, lambda, eps, params, stats)
 }
 
 /// Algorithm 4 (UOT) from a dense cost matrix; `s_multiplier` in units
 /// of s₀(n). Routes through the log-kernel pipeline like
 /// [`spar_sink_ot`].
+// 8 arguments: this is the published Algorithm 4 entry point and its
+// parameter list mirrors the paper's; grouping would break the
+// reproduction call sites. Everything richer goes through
+// `spar_sink_solve`.
 #[allow(clippy::too_many_arguments)]
 pub fn spar_sink_uot(
     cost: &Mat,
@@ -219,17 +236,61 @@ pub fn spar_sink_uot(
     rng: &mut Rng,
 ) -> Result<SparSolution> {
     let s = resolve_budget(a.len(), s_multiplier);
-    spar_sink_uot_logk_oracle(
+    uot_from_logk_oracle(
         |i, j| crate::ot::cost::log_gibbs_from_cost(cost.get(i, j), eps),
         |i, j| cost.get(i, j),
-        a,
-        b,
-        lambda,
-        eps,
-        s,
+        &UotInputs { a, b, lambda, eps, s },
         params,
         rng,
     )
+}
+
+/// The [`SolverSpec`]-consuming adapter behind the `spar-sink` /
+/// `spar-sink-log` registry entries: resolves the budget, picks the
+/// log-kernel oracle (caller-provided or derived `−C/ε`), and runs
+/// Algorithm 3 or 4 per the problem's [`Formulation`].
+///
+/// Dense problems route through the paper entry points above (budget in
+/// units of s₀(a.len())); oracle problems resolve the budget against the
+/// larger support, matching the distance service's convention.
+pub fn spar_sink_solve(
+    problem: &OtProblem,
+    spec: &SolverSpec,
+    rng: &mut Rng,
+) -> Result<SparSolution> {
+    let params = SparSinkParams::from_spec(spec);
+    let (a, b, eps) = (&problem.a[..], &problem.b[..], problem.eps);
+    match (&problem.cost, &problem.formulation) {
+        (CostSource::Dense(cost), Formulation::Balanced) => {
+            spar_sink_ot(cost, a, b, eps, spec.s_multiplier, &params, rng)
+        }
+        (CostSource::Dense(cost), Formulation::Unbalanced { lambda }) => {
+            spar_sink_uot(cost, a, b, *lambda, eps, spec.s_multiplier, &params, rng)
+        }
+        (oracle @ CostSource::Oracle { .. }, Formulation::Balanced) => {
+            let s = resolve_budget(a.len().max(b.len()), spec.s_multiplier);
+            ot_from_logk_oracle(
+                |i, j| oracle.log_kernel_at(i, j, eps),
+                |i, j| oracle.cost_at(i, j),
+                &OtInputs { a, b, eps, s },
+                &params,
+                rng,
+            )
+        }
+        (oracle @ CostSource::Oracle { .. }, Formulation::Unbalanced { lambda }) => {
+            let s = resolve_budget(a.len().max(b.len()), spec.s_multiplier);
+            uot_from_logk_oracle(
+                |i, j| oracle.log_kernel_at(i, j, eps),
+                |i, j| oracle.cost_at(i, j),
+                &UotInputs { a, b, lambda: *lambda, eps, s },
+                &params,
+                rng,
+            )
+        }
+        (_, Formulation::Barycenter { .. }) => Err(Error::InvalidParam(
+            "spar-sink solves OT/UOT problems; use spar-ibp for barycenters".into(),
+        )),
+    }
 }
 
 #[cfg(test)]

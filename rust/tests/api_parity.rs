@@ -1,0 +1,311 @@
+//! Parity tests for the unified `api::solve` surface: for every
+//! registered method, dispatching through the registry must return a
+//! BITWISE-identical objective to the legacy free-function entry point
+//! it adapts — on OT and UOT formulations, from dense costs and from
+//! entry oracles. Plus registry-resolution coverage.
+
+use std::sync::Arc;
+
+use spar_sink::api::{self, CostSource, Formulation, Method, OtProblem, SolverSpec};
+use spar_sink::experiments::common::normalize_cost;
+use spar_sink::linalg::Mat;
+use spar_sink::metrics::s0;
+use spar_sink::ot::barycenter::ibp_barycenter;
+use spar_sink::ot::cost::{gibbs_kernel, sq_euclidean_cost};
+use spar_sink::ot::sinkhorn::{sinkhorn_ot, SinkhornParams};
+use spar_sink::ot::uot::sinkhorn_uot;
+use spar_sink::rng::Rng;
+use spar_sink::solvers::backend::ScalingBackend;
+use spar_sink::solvers::greenkhorn::{greenkhorn_ot, GreenkhornParams};
+use spar_sink::solvers::nys_sink::{nys_sink_ot, nys_sink_uot, NysSinkParams};
+use spar_sink::solvers::rand_sink::{rand_sink_ot, rand_sink_uot};
+use spar_sink::solvers::screenkhorn::{screenkhorn_ot, ScreenkhornParams};
+use spar_sink::solvers::spar_ibp::spar_ibp;
+use spar_sink::solvers::spar_sink::{spar_sink_ot, spar_sink_uot, SparSinkParams};
+
+const SEED: u64 = 77;
+const S_MULT: f64 = 8.0;
+
+/// Square instance with skewed marginals on a normalized cost.
+fn instance(n: usize, seed: u64) -> (Arc<Mat>, Vec<f64>, Vec<f64>) {
+    let mut rng = Rng::seed_from(seed);
+    let pts: Vec<Vec<f64>> = (0..n)
+        .map(|_| (0..3).map(|_| rng.uniform()).collect())
+        .collect();
+    let cost = Arc::new(normalize_cost(&sq_euclidean_cost(&pts, &pts)));
+    let mk = |rng: &mut Rng| -> Vec<f64> {
+        let raw: Vec<f64> = (0..n).map(|_| rng.uniform() + 0.05).collect();
+        let s: f64 = raw.iter().sum();
+        raw.iter().map(|x| x / s).collect()
+    };
+    let a = mk(&mut rng);
+    let b = mk(&mut rng);
+    (cost, a, b)
+}
+
+/// The same problem exposed through entry oracles instead of the dense
+/// matrix (log-kernel left to the derived `−C/ε`, exactly what the
+/// dense path samples through).
+fn as_oracle(problem: &OtProblem) -> OtProblem {
+    let dense = problem.cost.to_mat();
+    let mut out = problem.clone();
+    out.cost = CostSource::oracle(dense.rows(), dense.cols(), move |i, j| dense.get(i, j));
+    out
+}
+
+fn spec(method: Method) -> SolverSpec {
+    SolverSpec::new(method).with_budget(S_MULT).with_seed(SEED)
+}
+
+fn assert_bits(label: &str, api_obj: f64, legacy_obj: f64) {
+    assert_eq!(
+        api_obj.to_bits(),
+        legacy_obj.to_bits(),
+        "{label}: api {api_obj} != legacy {legacy_obj}"
+    );
+}
+
+/// Legacy objective for `method` on a balanced problem (the free
+/// functions the registry adapts).
+fn legacy_ot(method: Method, cost: &Mat, a: &[f64], b: &[f64], eps: f64) -> f64 {
+    let params = SinkhornParams::default();
+    let mut rng = Rng::seed_from(SEED);
+    match method {
+        Method::Sinkhorn => {
+            let kernel = gibbs_kernel(cost, eps);
+            sinkhorn_ot(&kernel, cost, a, b, eps, &params).unwrap().objective
+        }
+        Method::SparSink => {
+            spar_sink_ot(cost, a, b, eps, S_MULT, &SparSinkParams::default(), &mut rng)
+                .unwrap()
+                .solution
+                .objective
+        }
+        Method::SparSinkLog => {
+            let p = SparSinkParams { backend: ScalingBackend::LogDomain, ..Default::default() };
+            spar_sink_ot(cost, a, b, eps, S_MULT, &p, &mut rng).unwrap().solution.objective
+        }
+        Method::RandSink => rand_sink_ot(cost, a, b, eps, S_MULT, &params, &mut rng)
+            .unwrap()
+            .solution
+            .objective,
+        Method::NysSink => {
+            let n = a.len();
+            let rank = ((S_MULT * s0(n) / n as f64).ceil() as usize).max(1);
+            let kernel = gibbs_kernel(cost, eps);
+            nys_sink_ot(
+                |i, j| kernel.get(i, j),
+                |i, j| cost.get(i, j),
+                a,
+                b,
+                eps,
+                rank,
+                &NysSinkParams::default(),
+                &mut rng,
+            )
+            .unwrap()
+            .objective
+        }
+        Method::Greenkhorn => {
+            let kernel = gibbs_kernel(cost, eps);
+            greenkhorn_ot(&kernel, cost, a, b, eps, &GreenkhornParams::default())
+                .unwrap()
+                .objective
+        }
+        Method::Screenkhorn => {
+            let kernel = gibbs_kernel(cost, eps);
+            screenkhorn_ot(&kernel, cost, a, b, eps, &ScreenkhornParams::default())
+                .unwrap()
+                .objective
+        }
+        Method::SparIbp => unreachable!("barycenter-only"),
+    }
+}
+
+/// Legacy objective for `method` on an unbalanced problem.
+fn legacy_uot(method: Method, cost: &Mat, a: &[f64], b: &[f64], lambda: f64, eps: f64) -> f64 {
+    let params = SinkhornParams::default();
+    let mut rng = Rng::seed_from(SEED);
+    match method {
+        Method::Sinkhorn => {
+            let kernel = gibbs_kernel(cost, eps);
+            sinkhorn_uot(&kernel, cost, a, b, lambda, eps, &params).unwrap().objective
+        }
+        Method::SparSink => {
+            spar_sink_uot(cost, a, b, lambda, eps, S_MULT, &SparSinkParams::default(), &mut rng)
+                .unwrap()
+                .solution
+                .objective
+        }
+        Method::SparSinkLog => {
+            let p = SparSinkParams { backend: ScalingBackend::LogDomain, ..Default::default() };
+            spar_sink_uot(cost, a, b, lambda, eps, S_MULT, &p, &mut rng)
+                .unwrap()
+                .solution
+                .objective
+        }
+        Method::RandSink => rand_sink_uot(cost, a, b, lambda, eps, S_MULT, &params, &mut rng)
+            .unwrap()
+            .solution
+            .objective,
+        Method::NysSink => {
+            let n = a.len();
+            let rank = ((S_MULT * s0(n) / n as f64).ceil() as usize).max(1);
+            let kernel = gibbs_kernel(cost, eps);
+            nys_sink_uot(
+                |i, j| kernel.get(i, j),
+                |i, j| cost.get(i, j),
+                a,
+                b,
+                lambda,
+                eps,
+                rank,
+                &NysSinkParams::default(),
+                &mut rng,
+            )
+            .unwrap()
+            .objective
+        }
+        _ => unreachable!("not a UOT method"),
+    }
+}
+
+const OT_METHODS: [Method; 7] = [
+    Method::Sinkhorn,
+    Method::SparSink,
+    Method::SparSinkLog,
+    Method::RandSink,
+    Method::NysSink,
+    Method::Greenkhorn,
+    Method::Screenkhorn,
+];
+
+const UOT_METHODS: [Method; 5] = [
+    Method::Sinkhorn,
+    Method::SparSink,
+    Method::SparSinkLog,
+    Method::RandSink,
+    Method::NysSink,
+];
+
+#[test]
+fn every_method_resolves_in_the_registry() {
+    for method in Method::ALL {
+        let solver = api::lookup(method.name())
+            .unwrap_or_else(|| panic!("{method:?} has no registered solver"));
+        assert_eq!(solver.name(), method.name());
+        assert_eq!(Method::parse(method.name()), Some(method));
+    }
+    assert_eq!(api::registry().len(), Method::ALL.len());
+}
+
+#[test]
+fn dense_ot_objectives_are_bitwise_identical_to_legacy() {
+    let (cost, a, b) = instance(48, 101);
+    let eps = 0.1;
+    let problem = OtProblem::balanced(&cost, a.clone(), b.clone(), eps);
+    for method in OT_METHODS {
+        let sol = api::solve(&problem, &spec(method)).unwrap();
+        let legacy = legacy_ot(method, &cost, &a, &b, eps);
+        assert_bits(&format!("dense OT {method:?}"), sol.objective, legacy);
+    }
+}
+
+#[test]
+fn dense_uot_objectives_are_bitwise_identical_to_legacy() {
+    let (cost, a, b) = instance(40, 103);
+    // Unbalance the masses.
+    let a: Vec<f64> = a.iter().map(|x| x * 5.0).collect();
+    let b: Vec<f64> = b.iter().map(|x| x * 3.0).collect();
+    let (lambda, eps) = (1.0, 0.1);
+    let problem = OtProblem::unbalanced(&cost, a.clone(), b.clone(), lambda, eps);
+    for method in UOT_METHODS {
+        let sol = api::solve(&problem, &spec(method)).unwrap();
+        let legacy = legacy_uot(method, &cost, &a, &b, lambda, eps);
+        assert_bits(&format!("dense UOT {method:?}"), sol.objective, legacy);
+    }
+}
+
+#[test]
+fn oracle_ot_objectives_are_bitwise_identical_to_legacy() {
+    // Oracle costs over the SAME entries: every method must sample /
+    // materialize its way to the exact same objective as the dense
+    // legacy call (square problem, so the oracle budget convention
+    // s0(max(n, m)) coincides with the dense s0(n)).
+    let (cost, a, b) = instance(48, 107);
+    let eps = 0.1;
+    let dense = OtProblem::balanced(&cost, a.clone(), b.clone(), eps);
+    let oracle = as_oracle(&dense);
+    for method in OT_METHODS {
+        let sol = api::solve(&oracle, &spec(method)).unwrap();
+        let legacy = legacy_ot(method, &cost, &a, &b, eps);
+        assert_bits(&format!("oracle OT {method:?}"), sol.objective, legacy);
+    }
+}
+
+#[test]
+fn oracle_uot_objectives_are_bitwise_identical_to_legacy() {
+    let (cost, a, b) = instance(40, 109);
+    let a: Vec<f64> = a.iter().map(|x| x * 5.0).collect();
+    let b: Vec<f64> = b.iter().map(|x| x * 3.0).collect();
+    let (lambda, eps) = (1.0, 0.1);
+    let dense = OtProblem::unbalanced(&cost, a.clone(), b.clone(), lambda, eps);
+    let oracle = as_oracle(&dense);
+    for method in UOT_METHODS {
+        let sol = api::solve(&oracle, &spec(method)).unwrap();
+        let legacy = legacy_uot(method, &cost, &a, &b, lambda, eps);
+        assert_bits(&format!("oracle UOT {method:?}"), sol.objective, legacy);
+    }
+}
+
+#[test]
+fn barycenter_solves_are_bitwise_identical_to_legacy() {
+    let n = 32;
+    let pts: Vec<Vec<f64>> = (0..n).map(|i| vec![i as f64 / (n - 1) as f64]).collect();
+    let cost = Arc::new(normalize_cost(&sq_euclidean_cost(&pts, &pts)));
+    let eps = 0.01;
+    let hist = |mu: f64| -> Vec<f64> {
+        let w: Vec<f64> =
+            pts.iter().map(|p| (-(p[0] - mu).powi(2) / 0.01).exp() + 1e-4).collect();
+        let s: f64 = w.iter().sum();
+        w.iter().map(|x| x / s).collect()
+    };
+    let marginals = vec![hist(0.2), hist(0.5), hist(0.8)];
+    let weights = vec![1.0 / 3.0; 3];
+    let problem =
+        OtProblem::barycenter(&cost, marginals.clone(), weights.clone(), eps);
+    let kernels = vec![gibbs_kernel(&cost, eps); 3];
+    let params = SinkhornParams::default();
+
+    // Exact IBP through the registry's `sinkhorn` entry.
+    let exact = api::solve(&problem, &spec(Method::Sinkhorn)).unwrap();
+    let legacy = ibp_barycenter(&kernels, &marginals, &weights, &params).unwrap();
+    let q = exact.barycenter.as_ref().expect("q");
+    assert_eq!(q.len(), legacy.q.len());
+    for (i, (x, y)) in q.iter().zip(&legacy.q).enumerate() {
+        assert_bits(&format!("ibp q[{i}]"), *x, *y);
+    }
+
+    // Spar-IBP through the registry.
+    let sol = api::solve(&problem, &spec(Method::SparIbp)).unwrap();
+    let mut rng = Rng::seed_from(SEED);
+    let legacy =
+        spar_ibp(&kernels, &marginals, &weights, S_MULT * s0(n), &params, &mut rng).unwrap();
+    let q = sol.barycenter.as_ref().expect("q");
+    assert_eq!(sol.stats.len(), 3);
+    for (i, (x, y)) in q.iter().zip(&legacy.solution.q).enumerate() {
+        assert_bits(&format!("spar-ibp q[{i}]"), *x, *y);
+    }
+}
+
+#[test]
+fn formulation_mismatches_are_rejected() {
+    let (cost, a, b) = instance(16, 113);
+    let balanced = OtProblem::balanced(&cost, a, b, 0.1);
+    assert!(api::solve(&balanced, &spec(Method::SparIbp)).is_err());
+    let mut unbalanced = balanced.clone();
+    unbalanced.formulation = Formulation::Unbalanced { lambda: 1.0 };
+    for method in [Method::Greenkhorn, Method::Screenkhorn] {
+        assert!(api::solve(&unbalanced, &spec(method)).is_err(), "{method:?}");
+    }
+}

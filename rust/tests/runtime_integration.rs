@@ -3,7 +3,9 @@
 //! Sinkhorn agrees with the native Rust solver (the two independent
 //! implementations cross-check each other), including the padding path.
 //!
-//! Skipped gracefully when `artifacts/` has not been built.
+//! Skipped gracefully when `artifacts/` has not been built. The whole
+//! file is gated on the `xla` feature, which gates the PJRT runtime.
+#![cfg(feature = "xla")]
 
 use std::sync::Arc;
 
