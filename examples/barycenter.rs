@@ -12,14 +12,9 @@ use spar_sink::data::digits::random_digit;
 use spar_sink::data::synthetic::barycenter_measures;
 use spar_sink::experiments::common::normalize_cost;
 use spar_sink::experiments::fig12::ascii_render;
-use spar_sink::metrics::l1_distance;
+use spar_sink::metrics::{l1_distance, normalized_histogram};
 use spar_sink::ot::cost::sq_euclidean_cost;
 use spar_sink::rng::Rng;
-
-fn normalized(q: &[f64]) -> Vec<f64> {
-    let s: f64 = q.iter().sum();
-    q.iter().map(|x| x / s).collect()
-}
 
 fn q(sol: &Solution) -> &[f64] {
     sol.barycenter.as_deref().expect("barycenter solve returns q")
@@ -42,7 +37,7 @@ fn main() {
         .with_tolerance(1e-7)
         .with_seed(21);
     let approx = api::solve(&problem, &spar_spec).expect("spar-ibp");
-    let gap = l1_distance(&normalized(q(&exact)), &normalized(q(&approx)));
+    let gap = l1_distance(&normalized_histogram(q(&exact)), &normalized_histogram(q(&approx)));
     println!(
         "1-D barycenter (n = {n}): IBP {:?} vs Spar-IBP {:?} (sketch nnz {:?})",
         exact.wall_time,
@@ -67,7 +62,7 @@ fn main() {
     let exact = api::solve(&problem, &exact_spec).expect("ibp digits");
     let approx = api::solve(&problem, &spar_spec).expect("spar-ibp digits");
     println!("\ndigit {digit} barycenter, IBP:");
-    println!("{}", ascii_render(&normalized(q(&exact)), grid));
+    println!("{}", ascii_render(&normalized_histogram(q(&exact)), grid));
     println!("digit {digit} barycenter, Spar-IBP:");
-    println!("{}", ascii_render(&normalized(q(&approx)), grid));
+    println!("{}", ascii_render(&normalized_histogram(q(&approx)), grid));
 }

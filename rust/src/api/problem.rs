@@ -51,6 +51,13 @@ impl CostSource {
 
     /// Attach an exact log-kernel oracle (no-op on dense sources, whose
     /// log-kernel is always derived from the stored cost).
+    ///
+    /// Scope: the sparsified solvers sample through this oracle entry by
+    /// entry. The DENSE engines behind `Method::Sinkhorn` (balanced,
+    /// unbalanced and barycenter, multiplicative and log-domain alike)
+    /// materialize the cost and derive the Gibbs kernel as `−C/ε` — a
+    /// custom log-kernel that differs from `−C/ε` is not consulted on
+    /// those paths.
     pub fn with_log_kernel(
         self,
         log_kernel: impl Fn(usize, usize) -> f64 + Send + Sync + 'static,

@@ -14,15 +14,13 @@ use super::spec::SolverSpec;
 use crate::error::{Error, Result};
 use crate::linalg::Mat;
 use crate::metrics::s0;
-use crate::ot::barycenter::ibp_barycenter;
-use crate::ot::uot::sinkhorn_uot;
 use crate::rng::Rng;
-use crate::solvers::backend::{BackendKind, ScalingBackend};
+use crate::solvers::backend::ScalingBackend;
 use crate::solvers::greenkhorn::{greenkhorn_ot, GreenkhornParams};
 use crate::solvers::nys_sink::{nys_sink_ot, nys_sink_uot, NysSinkParams};
 use crate::solvers::rand_sink::rand_sink_solve;
 use crate::solvers::screenkhorn::{screenkhorn_ot, ScreenkhornParams};
-use crate::solvers::spar_ibp::spar_ibp;
+use crate::solvers::spar_ibp::spar_ibp_solve;
 use crate::solvers::spar_sink::spar_sink_solve;
 
 /// A registered solver: adapts one method to the unified problem/spec
@@ -51,12 +49,6 @@ fn kernel_mat(problem: &OtProblem) -> Mat {
     })
 }
 
-/// Shared-kernel stack for barycenter problems: every input measure
-/// lives on the same support, so each gets the same Gibbs kernel.
-fn barycenter_kernels(problem: &OtProblem, count: usize) -> Vec<Mat> {
-    vec![kernel_mat(problem); count]
-}
-
 struct SinkhornSolver;
 
 impl Solver for SinkhornSolver {
@@ -66,6 +58,11 @@ impl Solver for SinkhornSolver {
 
     fn solve(&self, problem: &OtProblem, spec: &SolverSpec, _rng: &mut Rng) -> Result<Solution> {
         let params = spec.sinkhorn_params();
+        // All three dense formulations materialize the cost and let the
+        // backend derive the Gibbs kernel as −C/ε (see
+        // `CostSource::with_log_kernel` for the scope of custom
+        // log-kernel oracles — they feed the sparsified samplers, not
+        // the dense engines).
         match &problem.formulation {
             Formulation::Balanced => {
                 let cost = problem.cost.to_mat();
@@ -75,17 +72,9 @@ impl Solver for SinkhornSolver {
                 Ok(Solution::from_sinkhorn(self.name(), sol, Some(kind)))
             }
             Formulation::Unbalanced { lambda } => {
-                if spec.backend == Some(ScalingBackend::LogDomain) {
-                    return Err(Error::InvalidParam(
-                        "dense log-domain UOT is not implemented yet; \
-                         use spar-sink-log for small-eps unbalanced problems"
-                            .into(),
-                    ));
-                }
                 let cost = problem.cost.to_mat();
-                let kernel = kernel_mat(problem);
-                let sol = sinkhorn_uot(
-                    &kernel,
+                let backend = spec.backend.unwrap_or_default();
+                let (sol, kind) = backend.dense_uot(
                     &cost,
                     &problem.a,
                     &problem.b,
@@ -93,19 +82,14 @@ impl Solver for SinkhornSolver {
                     problem.eps,
                     &params,
                 )?;
-                Ok(Solution::from_sinkhorn(self.name(), sol, Some(BackendKind::Multiplicative)))
+                Ok(Solution::from_sinkhorn(self.name(), sol, Some(kind)))
             }
             Formulation::Barycenter { marginals, weights } => {
-                if spec.backend == Some(ScalingBackend::LogDomain) {
-                    return Err(Error::InvalidParam(
-                        "log-domain IBP is not implemented yet (ROADMAP gap); \
-                         barycenters run the multiplicative engine only"
-                            .into(),
-                    ));
-                }
-                let kernels = barycenter_kernels(problem, marginals.len());
-                let sol = ibp_barycenter(&kernels, marginals, weights, &params)?;
-                Ok(Solution::from_barycenter(self.name(), sol, Vec::new()))
+                let cost = problem.cost.to_mat();
+                let backend = spec.backend.unwrap_or_default();
+                let (sol, kind) =
+                    backend.dense_ibp(&cost, marginals, weights, problem.eps, &params)?;
+                Ok(Solution::from_barycenter(self.name(), sol, Vec::new(), Some(kind)))
             }
         }
     }
@@ -242,13 +226,16 @@ impl Solver for SparIbpSolver {
     }
 
     fn solve(&self, problem: &OtProblem, spec: &SolverSpec, rng: &mut Rng) -> Result<Solution> {
-        let Formulation::Barycenter { marginals, weights } = &problem.formulation else {
+        if !matches!(problem.formulation, Formulation::Barycenter { .. }) {
             return Err(unsupported(self.name(), problem));
-        };
-        let kernels = barycenter_kernels(problem, marginals.len());
-        let s = spec.s_multiplier * s0(problem.cost.rows());
-        let sol = spar_ibp(&kernels, marginals, weights, s, &spec.sinkhorn_params(), rng)?;
-        Ok(Solution::from_barycenter(self.name(), sol.solution, sol.stats))
+        }
+        let sol = spar_ibp_solve(problem, spec, rng)?;
+        Ok(Solution::from_barycenter(
+            self.name(),
+            sol.solution,
+            sol.stats,
+            Some(sol.backend),
+        ))
     }
 }
 
@@ -304,6 +291,7 @@ mod tests {
     use super::*;
     use crate::api::Method;
     use crate::ot::cost::sq_euclidean_cost;
+    use crate::solvers::backend::BackendKind;
 
     fn toy_problem(n: usize) -> OtProblem {
         let pts: Vec<Vec<f64>> = (0..n)
@@ -379,9 +367,7 @@ mod tests {
         assert_eq!(via_method.objective.to_bits(), forced.objective.to_bits());
     }
 
-    #[test]
-    fn barycenter_through_the_registry() {
-        let n = 32;
+    fn toy_barycenter(n: usize, eps: f64) -> OtProblem {
         let pts: Vec<Vec<f64>> = (0..n).map(|i| vec![i as f64 / (n - 1) as f64]).collect();
         let cost = sq_euclidean_cost(&pts, &pts);
         let hist = |mu: f64| -> Vec<f64> {
@@ -390,16 +376,20 @@ mod tests {
             let s: f64 = w.iter().sum();
             w.iter().map(|x| x / s).collect()
         };
-        let problem = OtProblem::barycenter(
-            cost,
-            vec![hist(0.25), hist(0.75)],
-            vec![0.5, 0.5],
-            0.01,
-        );
+        OtProblem::barycenter(cost, vec![hist(0.25), hist(0.75)], vec![0.5, 0.5], eps)
+    }
+
+    #[test]
+    fn barycenter_through_the_registry() {
+        let n = 32;
+        let problem = toy_barycenter(n, 0.01);
         let exact = solve(&problem, &SolverSpec::new(Method::Sinkhorn)).unwrap();
         let q = exact.barycenter.as_ref().expect("barycenter histogram");
         assert_eq!(q.len(), n);
         assert!(q.iter().all(|x| x.is_finite() && *x >= 0.0));
+        // Moderate ε on the default Auto policy: multiplicative engine,
+        // and the barycenter Solution now reports it.
+        assert_eq!(exact.backend, Some(BackendKind::Multiplicative));
         let spar = solve(
             &problem,
             &SolverSpec::new(Method::SparIbp).with_budget(40.0).with_seed(11),
@@ -408,5 +398,76 @@ mod tests {
         assert_eq!(spar.stats.len(), 2);
         assert!(spar.nnz().unwrap() > 0);
         assert!(spar.barycenter.is_some());
+        assert_eq!(spar.backend, Some(BackendKind::Multiplicative));
+    }
+
+    #[test]
+    fn log_domain_override_is_served_for_dense_uot_and_barycenter() {
+        // These were hard InvalidParam rejections before the log
+        // engines existed; now the override must be ROUTED and reported.
+        let mut uot = toy_problem(20);
+        uot.formulation = Formulation::Unbalanced { lambda: 1.0 };
+        let sol = solve(
+            &uot,
+            &SolverSpec::new(Method::Sinkhorn).with_backend(ScalingBackend::LogDomain),
+        )
+        .unwrap();
+        assert_eq!(sol.backend, Some(BackendKind::LogDomain));
+        assert!(sol.objective.is_finite());
+
+        let bary = toy_barycenter(32, 0.01);
+        let sol = solve(
+            &bary,
+            &SolverSpec::new(Method::Sinkhorn).with_backend(ScalingBackend::LogDomain),
+        )
+        .unwrap();
+        assert_eq!(sol.backend, Some(BackendKind::LogDomain));
+        let q = sol.barycenter.as_ref().expect("q");
+        let mass: f64 = q.iter().sum();
+        assert!((mass - 1.0).abs() < 1e-9, "mass {mass}");
+
+        let sol = solve(
+            &bary,
+            &SolverSpec::new(Method::SparIbp)
+                .with_budget(40.0)
+                .with_seed(3)
+                .with_backend(ScalingBackend::LogDomain),
+        )
+        .unwrap();
+        assert_eq!(sol.backend, Some(BackendKind::LogDomain));
+        assert_eq!(sol.stats.len(), 2);
+        assert!(sol.barycenter.is_some());
+    }
+
+    #[test]
+    fn sub_threshold_eps_auto_routes_barycenter_and_uot_to_log_domain() {
+        // The acceptance bar: ε below DEFAULT_LOG_EPS_THRESHOLD, default
+        // spec — the multiplicative path used to error or be rejected;
+        // now Auto serves the log engine and the result is finite.
+        let eps = 5e-4;
+        let bary = toy_barycenter(32, eps);
+        let exact = solve(&bary, &SolverSpec::new(Method::Sinkhorn)).unwrap();
+        assert_eq!(exact.backend, Some(BackendKind::LogDomain));
+        let q = exact.barycenter.as_ref().expect("q");
+        assert!(q.iter().all(|x| x.is_finite() && *x >= 0.0));
+        let mass: f64 = q.iter().sum();
+        assert!((mass - 1.0).abs() < 1e-9, "mass {mass}");
+
+        let spar = solve(
+            &bary,
+            &SolverSpec::new(Method::SparIbp).with_budget(40.0).with_seed(9),
+        )
+        .unwrap();
+        assert_eq!(spar.backend, Some(BackendKind::LogDomain));
+        assert!(spar.nnz().unwrap() > 0);
+        let q = spar.barycenter.as_ref().expect("q");
+        assert!(q.iter().all(|x| x.is_finite() && *x >= 0.0));
+
+        let mut uot = toy_problem(20);
+        uot.eps = eps;
+        uot.formulation = Formulation::Unbalanced { lambda: 1.0 };
+        let sol = solve(&uot, &SolverSpec::new(Method::Sinkhorn)).unwrap();
+        assert_eq!(sol.backend, Some(BackendKind::LogDomain));
+        assert!(sol.objective.is_finite());
     }
 }

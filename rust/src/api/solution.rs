@@ -74,6 +74,7 @@ impl Solution {
         method: &'static str,
         sol: BarycenterSolution,
         stats: Vec<SparsifyStats>,
+        backend: Option<BackendKind>,
     ) -> Self {
         Solution {
             method,
@@ -85,7 +86,7 @@ impl Solution {
             displacement: sol.displacement,
             converged: sol.converged,
             stats,
-            backend: None,
+            backend,
             wall_time: Duration::ZERO,
         }
     }

@@ -67,8 +67,8 @@ pub fn usage() -> String {
      \n\
      COMMANDS:\n\
        experiment <id|all> [--full] [--out results/]   regenerate a paper figure/table\n\
-       solve --problem ot|uot [--n N] [--eps E] [--lambda L] [--method M]\n\
-             [--backend B] [--seed S]                  one-off synthetic solve\n\
+       solve --problem ot|uot|barycenter [--n N] [--eps E] [--lambda L]\n\
+             [--method M] [--backend B] [--seed S]     one-off synthetic solve\n\
        serve [--videos V] [--frames F] [--workers W] [--method M] [--eps E]\n\
              [--backend B]                             run the batched WFR distance service\n\
        runtime-info                                    PJRT platform + artifact menu (xla feature)\n\
@@ -83,12 +83,14 @@ pub fn usage() -> String {
                      (solve and serve dispatch through api::solve; methods\n\
                      that do not support the requested formulation report\n\
                      a per-job error)\n\
-       --backend B   scaling-loop override: auto|multiplicative|log-domain.\n\
-                     Defaults per method: spar-sink uses auto (multiplicative\n\
-                     above the eps threshold, log-domain below it or on\n\
-                     numerical failure; see `experiment smalleps`); rand-sink\n\
-                     is the multiplicative baseline unless overridden; dense\n\
-                     sinkhorn UOT and barycenters have no log engine yet\n"
+       --backend B   scaling-loop override: auto|multiplicative|log-domain,\n\
+                     valid for every formulation — balanced/unbalanced OT,\n\
+                     dense sinkhorn, and barycenters (spar-ibp included).\n\
+                     Defaults per method: the backend-switched solvers use\n\
+                     auto (multiplicative above the eps threshold, log-domain\n\
+                     below it or on numerical failure/collapse; see\n\
+                     `experiment smalleps`); rand-sink stays the\n\
+                     multiplicative baseline unless overridden\n"
         .to_string()
 }
 

@@ -83,6 +83,57 @@ pub struct DistanceJob {
     pub seed: u64,
 }
 
+/// A fixed-support Wasserstein-barycenter job: input histograms living
+/// on one shared support, combined with simplex weights. Dispatched to
+/// the barycenter-capable methods (`sinkhorn` = exact IBP, `spar-ibp` =
+/// Algorithm 6); per-job [`ProblemSpec::backend`] overrides are honored
+/// exactly as for distance jobs, and `Auto` escalations feed the same
+/// per-method counters in
+/// [`MetricsSnapshot`](super::MetricsSnapshot).
+#[derive(Clone, Debug)]
+pub struct BarycenterJob {
+    /// Client-assigned id, echoed in the result.
+    pub id: u64,
+    /// Shared support points (squared-Euclidean ground cost).
+    pub support: Arc<Vec<Vec<f64>>>,
+    /// Input histograms, each of the support's length.
+    pub marginals: Vec<Vec<f64>>,
+    /// Barycentric weights (normalized by the solver).
+    pub weights: Vec<f64>,
+    pub method: Method,
+    pub spec: ProblemSpec,
+    /// RNG seed for the sparsifier (deterministic per job).
+    pub seed: u64,
+}
+
+impl BarycenterJob {
+    /// Support size (the problem dimension n).
+    pub fn support_len(&self) -> usize {
+        self.support.len()
+    }
+}
+
+/// Result of a barycenter job.
+#[derive(Clone, Debug)]
+pub struct BarycenterResult {
+    pub id: u64,
+    /// The barycenter histogram `q` (empty on error).
+    pub q: Vec<f64>,
+    /// IBP iterations used.
+    pub iterations: usize,
+    /// Whether the stopping rule was met.
+    pub converged: bool,
+    /// Which scaling engine actually produced the solution (`None` on
+    /// error).
+    pub backend: Option<BackendKind>,
+    /// End-to-end latency (queue + solve).
+    pub latency: std::time::Duration,
+    /// Which batch the job ran in (diagnostics).
+    pub batch_id: u64,
+    /// Error message if the solve failed.
+    pub error: Option<String>,
+}
+
 /// Result of a distance job.
 #[derive(Clone, Debug)]
 pub struct DistanceResult {

@@ -109,11 +109,12 @@ pub struct MetricsSnapshot {
     pub max_latency: Duration,
     /// Jobs per second over the service lifetime.
     pub throughput: f64,
-    /// Per-method log-domain escalation counters: completed jobs whose
-    /// solution reports `BackendKind::LogDomain` although neither the
-    /// method (`spar-sink-log`) nor the job's `ProblemSpec::backend`
-    /// forced the log engine — i.e. the `Auto` policy escalated, either
-    /// up front (small ε) or after a multiplicative failure. Only
+    /// Per-method log-domain escalation counters: completed jobs —
+    /// distance and barycenter jobs alike — whose solution reports
+    /// `BackendKind::LogDomain` although neither the method
+    /// (`spar-sink-log`) nor the job's `ProblemSpec::backend` forced the
+    /// log engine — i.e. the `Auto` policy escalated, either up front
+    /// (small ε) or after a multiplicative failure/collapse. Only
     /// methods with a non-zero count appear.
     pub log_escalations: Vec<(&'static str, u64)>,
     /// Gauge: escalated jobs / completed jobs.

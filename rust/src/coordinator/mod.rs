@@ -17,6 +17,12 @@
 //!                       per-job response channels + metrics
 //! ```
 //!
+//! Distance (pairwise WFR) and fixed-support barycenter jobs share the
+//! same queue, batcher and worker pool — a [`BarycenterJob`] rides the
+//! identical path via [`DistanceService::submit_barycenter`], honoring
+//! per-job backend overrides and feeding the same per-method
+//! log-escalation counters.
+//!
 //! * The submission queue is bounded: `submit` blocks once `queue_cap`
 //!   jobs are in flight (backpressure instead of unbounded memory).
 //! * The batcher flushes a batch when it reaches `max_batch` jobs or
@@ -29,6 +35,8 @@ mod jobs;
 mod metrics;
 mod service;
 
-pub use jobs::{DistanceJob, DistanceResult, Measure, Method, ProblemSpec};
+pub use jobs::{
+    BarycenterJob, BarycenterResult, DistanceJob, DistanceResult, Measure, Method, ProblemSpec,
+};
 pub use metrics::{LatencyHistogram, MetricsSnapshot};
 pub use service::{CoordinatorConfig, DistanceService};

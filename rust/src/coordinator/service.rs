@@ -3,11 +3,14 @@
 //! mirrors a continuous-batching server loop).
 //!
 //! Workers carry NO per-method solver plumbing: every job is expressed
-//! as an [`OtProblem`] (WFR cost/log-kernel oracles + unbalanced
-//! formulation) plus a [`SolverSpec`] derived from the job's
-//! [`ProblemSpec`], and dispatched through [`api::solve`]. The per-job
-//! [`ProblemSpec::backend`] override is honored end-to-end, and each
-//! result reports the [`BackendKind`] that actually ran.
+//! as an [`OtProblem`] — distance jobs as WFR cost/log-kernel oracles +
+//! unbalanced formulation, barycenter jobs as a shared-support
+//! barycenter formulation — plus a [`SolverSpec`] derived from the
+//! job's [`ProblemSpec`], and dispatched through [`api::solve`]. The
+//! per-job [`ProblemSpec::backend`] override is honored end-to-end,
+//! each result reports the [`BackendKind`] that actually ran, and
+//! `Auto` escalations from either job shape feed the same per-method
+//! counters.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -15,11 +18,13 @@ use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, Sender, SyncSend
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use super::jobs::{DistanceJob, DistanceResult, Method};
+use super::jobs::{
+    BarycenterJob, BarycenterResult, DistanceJob, DistanceResult, Method, ProblemSpec,
+};
 use super::metrics::{LatencyHistogram, MetricsSnapshot};
 use crate::api::{self, CostSource, EntryOracle, Formulation, OtProblem, SolverSpec};
 use crate::error::{Error, Result};
-use crate::ot::cost::{euclidean, log_gibbs_from_cost, wfr_cost_from_distance};
+use crate::ot::cost::{euclidean, log_gibbs_from_cost, sq_euclidean, wfr_cost_from_distance};
 use crate::ot::uot::wfr_distance_from_objective;
 use crate::solvers::backend::{BackendKind, ScalingBackend};
 
@@ -49,10 +54,48 @@ impl Default for CoordinatorConfig {
     }
 }
 
-struct QueuedJob {
-    job: DistanceJob,
-    enqueued: Instant,
-    respond: Sender<DistanceResult>,
+/// One queued unit of work. Distance (pairwise WFR) and barycenter jobs
+/// share the queue, the batcher, and the worker pool — they differ only
+/// in how the worker expresses them as an [`OtProblem`].
+enum QueuedJob {
+    Distance {
+        job: DistanceJob,
+        enqueued: Instant,
+        respond: Sender<DistanceResult>,
+    },
+    Barycenter {
+        job: BarycenterJob,
+        enqueued: Instant,
+        respond: Sender<BarycenterResult>,
+    },
+}
+
+impl QueuedJob {
+    fn method(&self) -> Method {
+        match self {
+            QueuedJob::Distance { job, .. } => job.method,
+            QueuedJob::Barycenter { job, .. } => job.method,
+        }
+    }
+
+    /// Problem size driving the batching bucket.
+    fn size(&self) -> usize {
+        match self {
+            QueuedJob::Distance { job, .. } => job.source.len().max(job.target.len()),
+            QueuedJob::Barycenter { job, .. } => job.support_len(),
+        }
+    }
+
+    /// Whether this job pinned the log-domain engine itself (such jobs
+    /// are not escalations when they report `BackendKind::LogDomain`).
+    fn forces_log_domain(&self) -> bool {
+        let (method, spec) = match self {
+            QueuedJob::Distance { job, .. } => (job.method, &job.spec),
+            QueuedJob::Barycenter { job, .. } => (job.method, &job.spec),
+        };
+        method == Method::SparSinkLog
+            || matches!(spec.backend, Some(ScalingBackend::LogDomain))
+    }
 }
 
 /// A flushed group of jobs. The id is assigned by the batcher at flush
@@ -132,17 +175,29 @@ impl DistanceService {
         DistanceService { tx: Some(tx), shared, batcher: Some(batcher), workers }
     }
 
-    /// Submit a job; blocks when the queue is full (backpressure).
-    /// Returns the channel on which the result will arrive.
-    pub fn submit(&self, job: DistanceJob) -> Result<Receiver<DistanceResult>> {
-        let (tx, rx) = mpsc::channel();
-        let queued = QueuedJob { job, enqueued: Instant::now(), respond: tx };
+    fn enqueue(&self, queued: QueuedJob) -> Result<()> {
         self.tx
             .as_ref()
             .ok_or_else(|| Error::Coordinator("service stopped".into()))?
             .send(queued)
             .map_err(|_| Error::Coordinator("queue closed".into()))?;
         self.shared.submitted.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Submit a job; blocks when the queue is full (backpressure).
+    /// Returns the channel on which the result will arrive.
+    pub fn submit(&self, job: DistanceJob) -> Result<Receiver<DistanceResult>> {
+        let (tx, rx) = mpsc::channel();
+        self.enqueue(QueuedJob::Distance { job, enqueued: Instant::now(), respond: tx })?;
+        Ok(rx)
+    }
+
+    /// Submit a barycenter job; same queue, batcher and worker pool as
+    /// distance jobs (backpressure applies identically).
+    pub fn submit_barycenter(&self, job: BarycenterJob) -> Result<Receiver<BarycenterResult>> {
+        let (tx, rx) = mpsc::channel();
+        self.enqueue(QueuedJob::Barycenter { job, enqueued: Instant::now(), respond: tx })?;
         Ok(rx)
     }
 
@@ -150,6 +205,23 @@ impl DistanceService {
     /// matches input order).
     pub fn submit_all(&self, jobs: Vec<DistanceJob>) -> Result<Vec<DistanceResult>> {
         let receivers: Result<Vec<_>> = jobs.into_iter().map(|j| self.submit(j)).collect();
+        receivers?
+            .into_iter()
+            .map(|rx| {
+                rx.recv()
+                    .map_err(|_| Error::Coordinator("worker dropped response".into()))
+            })
+            .collect()
+    }
+
+    /// Convenience: submit many barycenter jobs and wait for all results
+    /// (order matches input order).
+    pub fn submit_all_barycenters(
+        &self,
+        jobs: Vec<BarycenterJob>,
+    ) -> Result<Vec<BarycenterResult>> {
+        let receivers: Result<Vec<_>> =
+            jobs.into_iter().map(|j| self.submit_barycenter(j)).collect();
         receivers?
             .into_iter()
             .map(|rx| {
@@ -213,8 +285,8 @@ impl Drop for DistanceService {
 
 /// Size bucket: log2 of support size — jobs in a batch have comparable
 /// cost, keeping batch latency predictable.
-fn size_bucket(job: &DistanceJob) -> u32 {
-    let n = job.source.len().max(job.target.len()).max(1);
+fn size_bucket(job: &QueuedJob) -> u32 {
+    let n = job.size().max(1);
     usize::BITS - n.leading_zeros()
 }
 
@@ -266,7 +338,7 @@ fn flush(pending: &mut Vec<QueuedJob>, batch_tx: &Sender<Batch>, shared: &Arc<Sh
     let mut groups: HashMap<(Method, u32), Vec<QueuedJob>> = HashMap::new();
     for job in pending.drain(..) {
         groups
-            .entry((job.job.method, size_bucket(&job.job)))
+            .entry((job.method(), size_bucket(&job)))
             .or_default()
             .push(job);
     }
@@ -280,30 +352,58 @@ fn flush(pending: &mut Vec<QueuedJob>, batch_tx: &Sender<Batch>, shared: &Arc<Sh
     }
 }
 
-/// Whether this job pinned the log-domain engine itself (such jobs are
-/// not escalations when they report `BackendKind::LogDomain`).
-fn forces_log_domain(job: &DistanceJob) -> bool {
-    job.method == Method::SparSinkLog
-        || matches!(job.spec.backend, Some(ScalingBackend::LogDomain))
+/// Book-keeping shared by both job shapes: latency, success/failure
+/// counters, and the per-method `Auto`-escalation counter (a completed
+/// job that came back from the log engine without having pinned it).
+fn record_outcome(
+    shared: &Arc<Shared>,
+    method: Method,
+    forced_log: bool,
+    backend: Option<BackendKind>,
+    latency: Duration,
+    failed: bool,
+) {
+    shared.latency.record(latency);
+    if failed {
+        shared.failed.fetch_add(1, Ordering::Relaxed);
+    } else {
+        shared.completed.fetch_add(1, Ordering::Relaxed);
+        if backend == Some(BackendKind::LogDomain) && !forced_log {
+            shared.escalations[method.index()].fetch_add(1, Ordering::Relaxed);
+        }
+    }
 }
 
 fn run_batch(batch: Batch, shared: &Arc<Shared>) {
     let Batch { id: batch_id, jobs } = batch;
     for queued in jobs {
-        let result = solve_job(&queued.job, batch_id, queued.enqueued);
-        let failed = result.error.is_some();
-        shared.latency.record(result.latency);
-        if failed {
-            shared.failed.fetch_add(1, Ordering::Relaxed);
-        } else {
-            shared.completed.fetch_add(1, Ordering::Relaxed);
-            if result.backend == Some(BackendKind::LogDomain) && !forces_log_domain(&queued.job)
-            {
-                shared.escalations[queued.job.method.index()]
-                    .fetch_add(1, Ordering::Relaxed);
+        let (method, forced_log) = (queued.method(), queued.forces_log_domain());
+        match queued {
+            QueuedJob::Distance { job, enqueued, respond } => {
+                let result = solve_job(&job, batch_id, enqueued);
+                record_outcome(
+                    shared,
+                    method,
+                    forced_log,
+                    result.backend,
+                    result.latency,
+                    result.error.is_some(),
+                );
+                let _ = respond.send(result);
+            }
+            QueuedJob::Barycenter { job, enqueued, respond } => {
+                let result = solve_barycenter_job(job, batch_id, enqueued);
+                record_outcome(
+                    shared,
+                    method,
+                    forced_log,
+                    result.backend,
+                    result.latency,
+                    result.error.is_some(),
+                );
+                let _ = respond.send(result);
             }
         }
-        let _ = queued.respond.send(result);
     }
 }
 
@@ -340,14 +440,7 @@ fn solve_job(job: &DistanceJob, batch_id: u64, enqueued: Instant) -> DistanceRes
         eps,
         formulation: Formulation::Unbalanced { lambda: spec.lambda },
     };
-    let mut solver_spec = SolverSpec::new(job.method)
-        .with_budget(spec.s_multiplier)
-        .with_tolerance(spec.delta)
-        .with_max_iters(spec.max_iters)
-        .with_seed(job.seed);
-    if let Some(backend) = spec.backend {
-        solver_spec = solver_spec.with_backend(backend);
-    }
+    let solver_spec = solver_spec_for(job.method, spec, job.seed);
 
     let solved = api::solve(&problem, &solver_spec);
     let latency = enqueued.elapsed();
@@ -367,6 +460,66 @@ fn solve_job(job: &DistanceJob, batch_id: u64, enqueued: Instant) -> DistanceRes
             distance: f64::NAN,
             objective: f64::NAN,
             iterations: 0,
+            backend: None,
+            latency,
+            batch_id,
+            error: Some(e.to_string()),
+        },
+    }
+}
+
+/// Translate the job-level [`ProblemSpec`] into the unified
+/// [`SolverSpec`] — shared by distance and barycenter workers so the
+/// per-job backend override is honored identically everywhere.
+fn solver_spec_for(method: Method, spec: &ProblemSpec, seed: u64) -> SolverSpec {
+    let mut solver_spec = SolverSpec::new(method)
+        .with_budget(spec.s_multiplier)
+        .with_tolerance(spec.delta)
+        .with_max_iters(spec.max_iters)
+        .with_seed(seed);
+    if let Some(backend) = spec.backend {
+        solver_spec = solver_spec.with_backend(backend);
+    }
+    solver_spec
+}
+
+/// Express one barycenter job as a barycenter [`OtProblem`] over the
+/// shared support's squared-Euclidean ground cost and dispatch it
+/// through `api::solve`, exactly like the distance path. The cost stays
+/// an entry oracle, so the sparsified method samples it without
+/// materializing n² entries; the job is consumed so its histograms move
+/// into the problem instead of being copied per solve.
+fn solve_barycenter_job(job: BarycenterJob, batch_id: u64, enqueued: Instant) -> BarycenterResult {
+    let BarycenterJob { id, support, marginals, weights, method, spec, seed } = job;
+    let n = support.len();
+    let cost: EntryOracle =
+        Arc::new(move |i: usize, j: usize| sq_euclidean(&support[i], &support[j]));
+    let problem = OtProblem {
+        cost: CostSource::Oracle { rows: n, cols: n, cost, log_kernel: None },
+        a: Arc::new(Vec::new()),
+        b: Arc::new(Vec::new()),
+        eps: spec.eps,
+        formulation: Formulation::Barycenter { marginals, weights },
+    };
+    let solver_spec = solver_spec_for(method, &spec, seed);
+    let solved = api::solve(&problem, &solver_spec);
+    let latency = enqueued.elapsed();
+    match solved {
+        Ok(solution) => BarycenterResult {
+            id,
+            q: solution.barycenter.unwrap_or_default(),
+            iterations: solution.iterations,
+            converged: solution.converged,
+            backend: solution.backend,
+            latency,
+            batch_id,
+            error: None,
+        },
+        Err(e) => BarycenterResult {
+            id,
+            q: Vec::new(),
+            iterations: 0,
+            converged: false,
             backend: None,
             latency,
             batch_id,
@@ -584,6 +737,104 @@ mod tests {
         assert_eq!(results[1].backend, Some(BackendKind::LogDomain));
         // Forced-log job is not an escalation.
         let m = service.shutdown();
+        assert!(m.log_escalations.is_empty(), "{:?}", m.log_escalations);
+    }
+
+    fn bary_job(
+        id: u64,
+        method: Method,
+        eps: f64,
+        backend: Option<ScalingBackend>,
+    ) -> BarycenterJob {
+        let n = 32;
+        let support: Vec<Vec<f64>> = (0..n).map(|i| vec![i as f64 / (n - 1) as f64]).collect();
+        let hist = |mu: f64| -> Vec<f64> {
+            let w: Vec<f64> = support
+                .iter()
+                .map(|p| (-(p[0] - mu).powi(2) / 0.01).exp() + 1e-4)
+                .collect();
+            let s: f64 = w.iter().sum();
+            w.iter().map(|x| x / s).collect()
+        };
+        BarycenterJob {
+            id,
+            marginals: vec![hist(0.25), hist(0.75)],
+            support: Arc::new(support),
+            weights: vec![0.5, 0.5],
+            method,
+            spec: ProblemSpec { eps, s_multiplier: 40.0, backend, ..Default::default() },
+            seed: 11 + id,
+        }
+    }
+
+    #[test]
+    fn barycenter_jobs_complete_alongside_distance_jobs() {
+        let service = DistanceService::start(CoordinatorConfig {
+            workers: 2,
+            ..Default::default()
+        });
+        let bary_rx = service
+            .submit_barycenter(bary_job(7, Method::SparIbp, 0.01, None))
+            .unwrap();
+        let dist = service.submit_all(vec![job(0, Method::SparSink, 40)]).unwrap();
+        let bary = bary_rx.recv().unwrap();
+        assert_eq!(bary.id, 7);
+        assert!(bary.error.is_none(), "{:?}", bary.error);
+        assert_eq!(bary.q.len(), 32);
+        // Moderate ε on the Auto policy: multiplicative, no escalation.
+        assert_eq!(bary.backend, Some(BackendKind::Multiplicative));
+        assert!(dist[0].error.is_none());
+        let m = service.shutdown();
+        assert_eq!(m.completed, 2);
+        assert!(m.log_escalations.is_empty());
+    }
+
+    #[test]
+    fn small_eps_barycenter_jobs_escalate_and_feed_the_counters() {
+        // ε below the Auto threshold: exact-IBP and Spar-IBP barycenter
+        // jobs must come back from the log engine and increment the
+        // per-method escalation counters, exactly like distance jobs.
+        let service = DistanceService::start(CoordinatorConfig {
+            workers: 2,
+            ..Default::default()
+        });
+        let results = service
+            .submit_all_barycenters(vec![
+                bary_job(0, Method::SparIbp, 5e-4, None),
+                bary_job(1, Method::Sinkhorn, 5e-4, None),
+            ])
+            .unwrap();
+        for r in &results {
+            assert!(r.error.is_none(), "job {}: {:?}", r.id, r.error);
+            assert_eq!(r.backend, Some(BackendKind::LogDomain), "job {}", r.id);
+            let mass: f64 = r.q.iter().sum();
+            assert!((mass - 1.0).abs() < 1e-9, "job {} mass {mass}", r.id);
+        }
+        let m = service.shutdown();
+        assert_eq!(m.completed, 2);
+        let mut escalations = m.log_escalations.clone();
+        escalations.sort_unstable();
+        assert_eq!(escalations, vec![("sinkhorn", 1), ("spar-ibp", 1)]);
+        assert!((m.log_escalation_rate - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn barycenter_backend_override_is_honored_and_not_counted() {
+        let service = DistanceService::start(CoordinatorConfig {
+            workers: 2,
+            ..Default::default()
+        });
+        let results = service
+            .submit_all_barycenters(vec![
+                bary_job(0, Method::SparIbp, 0.01, None),
+                bary_job(1, Method::SparIbp, 0.01, Some(ScalingBackend::LogDomain)),
+            ])
+            .unwrap();
+        assert!(results.iter().all(|r| r.error.is_none()), "{results:?}");
+        assert_eq!(results[0].backend, Some(BackendKind::Multiplicative));
+        assert_eq!(results[1].backend, Some(BackendKind::LogDomain));
+        let m = service.shutdown();
+        // The forced-log job pinned the engine itself: no escalation.
         assert!(m.log_escalations.is_empty(), "{:?}", m.log_escalations);
     }
 

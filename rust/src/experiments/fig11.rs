@@ -7,7 +7,7 @@ use super::common::{normalize_cost, row};
 use super::{ExperimentOutput, Profile};
 use crate::data::synthetic::barycenter_measures;
 use crate::linalg::Mat;
-use crate::metrics::{l1_distance, mean_sd, s0};
+use crate::metrics::{l1_distance, mean_sd, normalized_histogram, s0};
 use crate::ot::barycenter::{ibp_barycenter, ibp_barycenter_with};
 use crate::ot::cost::{gibbs_kernel, sq_euclidean_cost};
 use crate::ot::sinkhorn::SinkhornParams;
@@ -85,15 +85,6 @@ fn nys_ibp(
     Ok(ibp_barycenter_with(&ops, bs, w, params)?.q)
 }
 
-fn normalized(q: &[f64]) -> Vec<f64> {
-    let s: f64 = q.iter().sum();
-    if s > 0.0 {
-        q.iter().map(|x| x / s).collect()
-    } else {
-        q.to_vec()
-    }
-}
-
 pub fn run(profile: Profile) -> ExperimentOutput {
     let n = profile.pick(300, 1000);
     let reps = profile.reps(3, 100);
@@ -116,7 +107,7 @@ pub fn run(profile: Profile) -> ExperimentOutput {
             let bs = barycenter_measures(n, &mut rng);
             let w = vec![1.0 / 3.0; 3];
             let Ok(exact) = ibp_barycenter(&kernels, &bs, &w, &params) else { continue };
-            let truth = normalized(&exact.q);
+            let truth = normalized_histogram(&exact.q);
 
             for &s_mult in &s_mults {
                 let budget = s_mult * s0(n);
@@ -125,14 +116,15 @@ pub fn run(profile: Profile) -> ExperimentOutput {
                 let mut nys_errs = Vec::new();
                 for _ in 0..reps {
                     if let Ok(sol) = spar_ibp(&kernels, &bs, &w, budget, &params, &mut rng) {
-                        spar_errs.push(l1_distance(&normalized(&sol.solution.q), &truth));
+                        let qn = normalized_histogram(&sol.solution.q);
+                        spar_errs.push(l1_distance(&qn, &truth));
                     }
                     if let Ok(q) = rand_ibp(&kernels, &bs, &w, budget, &params, &mut rng) {
-                        rand_errs.push(l1_distance(&normalized(&q), &truth));
+                        rand_errs.push(l1_distance(&normalized_histogram(&q), &truth));
                     }
                     let rank = ((budget / n as f64).ceil() as usize).max(1);
                     if let Ok(q) = nys_ibp(&kernels, &bs, &w, rank, &params, &mut rng) {
-                        nys_errs.push(l1_distance(&normalized(&q), &truth));
+                        nys_errs.push(l1_distance(&normalized_histogram(&q), &truth));
                     }
                 }
                 for (name, errs) in [

@@ -8,7 +8,7 @@ use std::time::Instant;
 use super::common::{normalize_cost, row};
 use super::{ExperimentOutput, Profile};
 use crate::data::digits::random_digit;
-use crate::metrics::{l1_distance, s0};
+use crate::metrics::{l1_distance, normalized_histogram, s0};
 use crate::ot::barycenter::ibp_barycenter;
 use crate::ot::cost::{gibbs_kernel, sq_euclidean_cost};
 use crate::ot::sinkhorn::SinkhornParams;
@@ -16,11 +16,6 @@ use crate::rng::Rng;
 use crate::solvers::spar_ibp::spar_ibp;
 use crate::util::json::Json;
 use crate::util::table::{f, Table};
-
-fn normalized(q: &[f64]) -> Vec<f64> {
-    let s: f64 = q.iter().sum();
-    q.iter().map(|x| x / s.max(f64::MIN_POSITIVE)).collect()
-}
 
 /// ASCII-render a grid histogram (darkest = most mass).
 pub fn ascii_render(q: &[f64], grid: usize) -> String {
@@ -87,8 +82,8 @@ pub fn run(profile: Profile) -> ExperimentOutput {
         };
         let spar_secs = t0.elapsed().as_secs_f64();
 
-        let q_exact = normalized(&exact.q);
-        let q_approx = normalized(&approx.solution.q);
+        let q_exact = normalized_histogram(&exact.q);
+        let q_approx = normalized_histogram(&approx.solution.q);
         let gap = l1_distance(&q_exact, &q_approx);
         table.row(vec![
             digit.to_string(),

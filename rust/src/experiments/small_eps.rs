@@ -1,22 +1,34 @@
 //! Small-ε stability harness: sweeps ε across and below the
 //! multiplicative underflow point and reports, per scaling backend,
-//! failure counts and RMAE against the stable dense truth.
+//! failure counts and error against the stable log-domain truth — for
+//! the balanced-OT sketch path AND the Spar-IBP barycenter path.
 //!
 //! With the cost normalized to c₀ = 1, `K = exp(−C/ε)` loses its last
 //! representable entries around ε ≈ c₀/708 ≈ 1.4×10⁻³ — below that,
-//! the multiplicative sparse loop either errors or collapses onto the
-//! degenerate all-zero plan, which is exactly what this sweep makes
-//! visible (`fail` counts plus RMAE ≈ 1). The log-domain backend (and
-//! `Auto`, which escalates to it) keeps solving.
+//! the multiplicative loops either error, collapse onto the degenerate
+//! all-zero plan, or (IBP's guarded geometric mean) converge onto a
+//! zero histogram, which is exactly what this sweep makes visible
+//! (`fail` counts plus error ≈ 1). The log-domain backends (and `Auto`,
+//! which escalates to them) keep solving every formulation.
 
 use super::common::{exact_ot_stable, ot_cost, rmae_over_reps, row};
 use super::{ExperimentOutput, Profile};
 use crate::api::{self, Method, OtProblem, SolverSpec};
-use crate::data::synthetic::{instance, Scenario};
+use crate::data::synthetic::{barycenter_measures, instance, Scenario};
+use crate::metrics::{l1_distance, mean_sd, normalized_histogram};
 use crate::rng::Rng;
 use crate::solvers::backend::ScalingBackend;
 use crate::util::json::Json;
 use crate::util::table::{f, Table};
+
+/// The backend sweep shared by the OT and barycenter legs.
+fn backends() -> [(&'static str, ScalingBackend); 3] {
+    [
+        ("multiplicative", ScalingBackend::Multiplicative),
+        ("log", ScalingBackend::LogDomain),
+        ("auto", ScalingBackend::default()),
+    ]
+}
 
 pub fn run(profile: Profile) -> ExperimentOutput {
     let n = profile.pick(120, 500);
@@ -26,16 +38,12 @@ pub fn run(profile: Profile) -> ExperimentOutput {
     let inst = instance(Scenario::C1, n, 5, 1.0, 1.0, &mut rng);
     let cost = ot_cost(&inst.points);
 
-    let backends: [(&str, ScalingBackend); 3] = [
-        ("multiplicative", ScalingBackend::Multiplicative),
-        ("log", ScalingBackend::LogDomain),
-        ("auto", ScalingBackend::default()),
-    ];
-    let mut table = Table::new(&["eps", "backend", "rmae", "se", "fail", "truth"]);
+    let mut table = Table::new(&["problem", "eps", "backend", "err", "se", "fail", "truth"]);
     let mut rows = Vec::new();
     for &eps in &[1e-1, 1e-2, 2e-3, 5e-4, 1e-4] {
         let Ok(truth) = exact_ot_stable(&cost, &inst.a, &inst.b, eps) else {
             table.row(vec![
+                "ot".into(),
                 format!("{eps:.0e}"),
                 "(truth failed)".into(),
                 "-".into(),
@@ -46,7 +54,7 @@ pub fn run(profile: Profile) -> ExperimentOutput {
             continue;
         };
         let problem = OtProblem::balanced(&cost, inst.a.clone(), inst.b.clone(), eps);
-        for (name, backend) in backends {
+        for (name, backend) in backends() {
             let spec =
                 SolverSpec::new(Method::SparSink).with_budget(s_mult).with_backend(backend);
             let (rmae, se, failures) = rmae_over_reps(
@@ -56,6 +64,7 @@ pub fn run(profile: Profile) -> ExperimentOutput {
                 &mut rng,
             );
             table.row(vec![
+                "ot".into(),
                 format!("{eps:.0e}"),
                 name.into(),
                 f(rmae, 4),
@@ -64,6 +73,7 @@ pub fn run(profile: Profile) -> ExperimentOutput {
                 f(truth, 4),
             ]);
             rows.push(row(vec![
+                ("problem", Json::str("ot")),
                 ("eps", Json::num(eps)),
                 ("backend", Json::str(name)),
                 ("rmae", Json::num(rmae)),
@@ -73,10 +83,86 @@ pub fn run(profile: Profile) -> ExperimentOutput {
             ]));
         }
     }
+
+    // Barycenter leg: the Spar-IBP path through the same backend sweep.
+    // Truth is the dense log-domain IBP histogram (stable at any ε);
+    // the error is the normalized L1 gap of the sketched q against it.
+    let bn = profile.pick(48, 200);
+    let bary_reps = profile.reps(3, 10);
+    let pts: Vec<Vec<f64>> =
+        (0..bn).map(|i| vec![i as f64 / (bn - 1) as f64]).collect();
+    let bcost = ot_cost(&pts);
+    let bs = barycenter_measures(bn, &mut rng);
+    let weights = vec![1.0 / 3.0; 3];
+    for &eps in &[1e-2, 5e-4] {
+        let problem = OtProblem::barycenter(&bcost, bs.clone(), weights.clone(), eps);
+        let truth_spec = SolverSpec::new(Method::Sinkhorn)
+            .with_backend(ScalingBackend::LogDomain)
+            .with_tolerance(1e-9)
+            .with_max_iters(5000);
+        let Ok(truth_sol) = api::solve(&problem, &truth_spec) else {
+            table.row(vec![
+                "barycenter".into(),
+                format!("{eps:.0e}"),
+                "(truth failed)".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+            ]);
+            continue;
+        };
+        let truth_q = normalized_histogram(truth_sol.barycenter.as_deref().unwrap_or(&[]));
+        for (name, backend) in backends() {
+            let spec =
+                SolverSpec::new(Method::SparIbp).with_budget(s_mult).with_backend(backend);
+            let mut errs = Vec::with_capacity(bary_reps);
+            let mut failures = 0usize;
+            for _ in 0..bary_reps {
+                match api::solve_with_rng(&problem, &spec, &mut rng) {
+                    Ok(sol) => {
+                        let q = normalized_histogram(sol.barycenter.as_deref().unwrap_or(&[]));
+                        let err = l1_distance(&q, &truth_q);
+                        if err.is_finite() {
+                            errs.push(err);
+                        } else {
+                            failures += 1;
+                        }
+                    }
+                    Err(_) => failures += 1,
+                }
+            }
+            let (mean, se) = if errs.is_empty() {
+                (f64::NAN, f64::NAN)
+            } else {
+                let (mean, sd) = mean_sd(&errs);
+                (mean, sd / (errs.len() as f64).sqrt())
+            };
+            table.row(vec![
+                "barycenter".into(),
+                format!("{eps:.0e}"),
+                name.into(),
+                f(mean, 4),
+                f(se, 4),
+                failures.to_string(),
+                "q(log)".into(),
+            ]);
+            rows.push(row(vec![
+                ("problem", Json::str("barycenter")),
+                ("eps", Json::num(eps)),
+                ("backend", Json::str(name)),
+                ("rmae", Json::num(mean)),
+                ("se", Json::num(se)),
+                ("failures", Json::num(failures as f64)),
+                ("truth", Json::num(f64::NAN)),
+            ]));
+        }
+    }
+
     ExperimentOutput {
         id: "smalleps",
         text: format!(
-            "Small-eps backend stability (n={n}, s={s_mult}s0, {reps} reps)\n{}",
+            "Small-eps backend stability (OT n={n}, barycenter n={bn}, s={s_mult}s0, {reps} reps)\n{}",
             table.render()
         ),
         rows: Json::arr(rows),
@@ -91,18 +177,45 @@ mod tests {
     fn quick_profile_runs_and_reports_all_backends() {
         let out = run(Profile::Quick);
         assert_eq!(out.id, "smalleps");
-        // 5 eps values x 3 backends.
-        assert_eq!(out.rows.items().len(), 15);
+        // OT: 5 eps values x 3 backends; barycenter: 2 eps x 3 backends.
+        assert_eq!(out.rows.items().len(), 21);
         // At the smallest eps the log backend must have zero failures.
         let log_small = out
             .rows
             .items()
             .iter()
             .find(|r| {
-                r.get("backend").and_then(|b| b.as_str()) == Some("log")
+                r.get("problem").and_then(|p| p.as_str()) == Some("ot")
+                    && r.get("backend").and_then(|b| b.as_str()) == Some("log")
                     && r.get("eps").and_then(|e| e.as_f64()) == Some(1e-4)
             })
             .expect("missing log row");
         assert_eq!(log_small.get("failures").and_then(|x| x.as_f64()), Some(0.0));
+    }
+
+    #[test]
+    fn barycenter_leg_solves_below_the_threshold_on_log_and_auto() {
+        let out = run(Profile::Quick);
+        for backend in ["log", "auto"] {
+            let r = out
+                .rows
+                .items()
+                .iter()
+                .find(|r| {
+                    r.get("problem").and_then(|p| p.as_str()) == Some("barycenter")
+                        && r.get("backend").and_then(|b| b.as_str()) == Some(backend)
+                        && r.get("eps").and_then(|e| e.as_f64()) == Some(5e-4)
+                })
+                .unwrap_or_else(|| panic!("missing barycenter {backend} row"));
+            assert_eq!(
+                r.get("failures").and_then(|x| x.as_f64()),
+                Some(0.0),
+                "{backend} failed below the threshold"
+            );
+            let err = r.get("rmae").and_then(|x| x.as_f64()).unwrap();
+            // L1 distance of two probability vectors is at most 2; a
+            // solved (non-collapsed) sketch stays clearly below that.
+            assert!(err.is_finite() && err < 1.5, "{backend} err {err}");
+        }
     }
 }

@@ -11,8 +11,12 @@
 //!   [`api::SolverSpec`], and get an [`api::Solution`] back from
 //!   [`api::solve`]. The registry covers exact Sinkhorn/IBP, the paper's
 //!   Spar-Sink / Spar-IBP, and every evaluated baseline (Greenkhorn,
-//!   Screenkhorn, Nys-Sink ± robust clip, Rand-Sink). On top sit the
-//!   batched distance-matrix [`coordinator`], the [`experiments`]
+//!   Screenkhorn, Nys-Sink ± robust clip, Rand-Sink). Every
+//!   formulation — balanced/unbalanced OT and barycenters, dense and
+//!   sketched — has both a multiplicative and a log-domain stabilized
+//!   engine behind the `ScalingBackend` switch, so small-ε problems
+//!   stay solvable across the board. On top sit the batched
+//!   distance-and-barycenter [`coordinator`], the [`experiments`]
 //!   harness regenerating every figure/table, and (behind the `xla`
 //!   feature) the PJRT runtime executing the AOT-compiled L2/L1
 //!   artifacts.

@@ -47,6 +47,20 @@ pub fn l1_distance(p: &[f64], q: &[f64]) -> f64 {
     p.iter().zip(q).map(|(a, b)| (a - b).abs()).sum()
 }
 
+/// Normalize a histogram to unit mass. The sketched multiplicative IBP
+/// update does not renormalize, so barycenter comparisons are made
+/// shape-to-shape through this ONE helper; a degenerate input (zero,
+/// negative or non-finite mass) is returned unchanged rather than
+/// amplified into huge or NaN values.
+pub fn normalized_histogram(q: &[f64]) -> Vec<f64> {
+    let mass: f64 = q.iter().sum();
+    if mass > 0.0 && mass.is_finite() {
+        q.iter().map(|x| x / mass).collect()
+    } else {
+        q.to_vec()
+    }
+}
+
 /// The paper's ED-prediction error (Section 6):
 /// `|1 − (t̂_ED − t_ES) / (t_ED − t_ES)|`.
 pub fn ed_prediction_error(t_es: f64, t_ed: f64, t_ed_hat: f64) -> f64 {

@@ -32,6 +32,21 @@ pub trait KernelOp: Sync {
     fn cols(&self) -> usize;
 }
 
+impl<K: KernelOp> KernelOp for &K {
+    fn apply(&self, x: &[f64]) -> Vec<f64> {
+        (**self).apply(x)
+    }
+    fn apply_t(&self, x: &[f64]) -> Vec<f64> {
+        (**self).apply_t(x)
+    }
+    fn rows(&self) -> usize {
+        (**self).rows()
+    }
+    fn cols(&self) -> usize {
+        (**self).cols()
+    }
+}
+
 impl KernelOp for Mat {
     fn apply(&self, x: &[f64]) -> Vec<f64> {
         self.matvec(x)

@@ -1,0 +1,399 @@
+//! Log-domain stabilized IBP for fixed-support Wasserstein barycenters —
+//! Algorithm 5 iterated entirely on log-potentials, so the geometric-mean
+//! update survives ε far below the `exp(−C/ε)` underflow cliff where the
+//! multiplicative loop silently collapses to a zero histogram.
+//!
+//! The multiplicative IBP state `(u_k, v_k, q)` maps to potentials
+//! `φ_k = ln u_k` and the log-histogram `ln q`:
+//!
+//! ```text
+//! ψ_k,j ← log b_k,j − LSE_i(ln K_k,ij + φ_k,i)        (v_k = b_k ./ K_kᵀ u_k)
+//! r_k,i ← LSE_j(ln K_k,ij + ψ_k,j)                    (r_k = ln K_k v_k)
+//! ln q  ← Σ_k w_k · r_k  −  LSE_i(Σ_k w_k · r_k,i)    (normalized geo-mean)
+//! φ_k,i ← ln q_i − r_k,i                              (u_k = q ./ K_k v_k)
+//! ```
+//!
+//! Unlike the multiplicative loop this engine NORMALIZES `q` every
+//! iteration (the subtracted log-partition). Scaling `q` by a constant
+//! scales the next `v_k` by its inverse and leaves the following `u_k`
+//! unchanged, so the normalized iterates are exactly the multiplicative
+//! iterates renormalized — same fixed point, but `q` is a probability
+//! vector by construction at every step, even when the solve is stopped
+//! before convergence at sub-threshold ε.
+//!
+//! Kernels enter through [`LogKernelOp`], the log-domain twin of
+//! [`KernelOp`](crate::ot::barycenter::KernelOp): a dense cost matrix
+//! wrapped in [`DenseLogKernel`] (entries `−C_ij/ε`, blocked = −∞), or a
+//! [`CsrMatrix`](crate::sparse::CsrMatrix) sketch whose stored `ln K̃`
+//! values drive the CSR row/col log-sum-exp — the sparse path used by
+//! [`log_spar_ibp`](crate::solvers::log_spar_ibp).
+
+use crate::error::{Error, Result};
+use crate::linalg::{l1_diff, Mat};
+use crate::ot::barycenter::BarycenterSolution;
+use crate::ot::cost::log_gibbs_from_cost;
+use crate::ot::sinkhorn::SinkhornParams;
+use crate::pool;
+use crate::sparse::CsrMatrix;
+
+/// A log-kernel operator: row/column log-sum-exp against a potential
+/// vector, the log-domain analogue of `apply`/`apply_t` on
+/// [`KernelOp`](crate::ot::barycenter::KernelOp). Entries and potentials
+/// may be −∞ (blocked / zero scaling); an all-−∞ row or column yields −∞.
+pub trait LogKernelOp: Sync {
+    /// `y_i = LSE_j(ln K_ij + g_j)`, i.e. `ln (K e^g)_i`.
+    fn row_lse(&self, g: &[f64]) -> Vec<f64>;
+    /// `y_j = LSE_i(ln K_ij + f_i)`, i.e. `ln (Kᵀ e^f)_j`.
+    fn col_lse(&self, f: &[f64]) -> Vec<f64>;
+    fn rows(&self) -> usize;
+    fn cols(&self) -> usize;
+}
+
+impl<K: LogKernelOp> LogKernelOp for &K {
+    fn row_lse(&self, g: &[f64]) -> Vec<f64> {
+        (**self).row_lse(g)
+    }
+    fn col_lse(&self, f: &[f64]) -> Vec<f64> {
+        (**self).col_lse(f)
+    }
+    fn rows(&self) -> usize {
+        (**self).rows()
+    }
+    fn cols(&self) -> usize {
+        (**self).cols()
+    }
+}
+
+impl LogKernelOp for CsrMatrix {
+    fn row_lse(&self, g: &[f64]) -> Vec<f64> {
+        CsrMatrix::row_lse(self, g)
+    }
+    fn col_lse(&self, f: &[f64]) -> Vec<f64> {
+        CsrMatrix::col_lse(self, f)
+    }
+    fn rows(&self) -> usize {
+        CsrMatrix::rows(self)
+    }
+    fn cols(&self) -> usize {
+        CsrMatrix::cols(self)
+    }
+}
+
+/// Dense Gibbs log-kernel `ln K_ij = −C_ij/ε` evaluated from the cost
+/// matrix on the fly (blocked `C = ∞` entries are −∞). Stores the
+/// transposed cost so the column LSE runs cache-friendly and parallel
+/// like the row pass.
+pub struct DenseLogKernel {
+    cost: Mat,
+    cost_t: Mat,
+    eps: f64,
+}
+
+impl DenseLogKernel {
+    pub fn new(cost: &Mat, eps: f64) -> Self {
+        DenseLogKernel { cost: cost.clone(), cost_t: cost.transpose(), eps }
+    }
+}
+
+/// Streaming LSE of `−c_j/ε + g_j` over one cost row.
+fn lse_cost_row(cost_row: &[f64], g: &[f64], eps: f64) -> f64 {
+    let mut max = f64::NEG_INFINITY;
+    for (c, gj) in cost_row.iter().zip(g) {
+        let t = log_gibbs_from_cost(*c, eps) + gj;
+        if t > max {
+            max = t;
+        }
+    }
+    if max == f64::NEG_INFINITY {
+        return f64::NEG_INFINITY;
+    }
+    let mut acc = 0.0;
+    for (c, gj) in cost_row.iter().zip(g) {
+        let t = log_gibbs_from_cost(*c, eps) + gj;
+        if t > f64::NEG_INFINITY {
+            acc += (t - max).exp();
+        }
+    }
+    max + acc.ln()
+}
+
+impl LogKernelOp for DenseLogKernel {
+    fn row_lse(&self, g: &[f64]) -> Vec<f64> {
+        assert_eq!(g.len(), self.cost.cols(), "dense row_lse dimension mismatch");
+        pool::parallel_map(self.cost.rows(), |i| lse_cost_row(self.cost.row(i), g, self.eps))
+    }
+    fn col_lse(&self, f: &[f64]) -> Vec<f64> {
+        assert_eq!(f.len(), self.cost.rows(), "dense col_lse dimension mismatch");
+        pool::parallel_map(self.cost_t.rows(), |j| lse_cost_row(self.cost_t.row(j), f, self.eps))
+    }
+    fn rows(&self) -> usize {
+        self.cost.rows()
+    }
+    fn cols(&self) -> usize {
+        self.cost.cols()
+    }
+}
+
+/// LSE of a full vector (the log-partition used to normalize `ln q`).
+fn lse_vec(x: &[f64]) -> f64 {
+    let max = x.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    if max == f64::NEG_INFINITY || !max.is_finite() {
+        return max; // −∞ (empty) propagates; NaN/+∞ caught by the caller
+    }
+    let acc: f64 = x.iter().map(|&v| (v - max).exp()).sum();
+    max + acc.ln()
+}
+
+/// Run log-domain IBP (Algorithm 5 on potentials) over any log-kernel
+/// operators. Same contract as
+/// [`ibp_barycenter_with`](crate::ot::barycenter::ibp_barycenter_with),
+/// except the returned `q` is normalized to a probability vector (see
+/// the module docs) and the displacement is measured on that normalized
+/// histogram.
+pub fn log_ibp_barycenter_with<K: LogKernelOp>(
+    kernels: &[K],
+    bs: &[Vec<f64>],
+    weights: &[f64],
+    params: &SinkhornParams,
+) -> Result<BarycenterSolution> {
+    let m = kernels.len();
+    if m == 0 || bs.len() != m || weights.len() != m {
+        return Err(Error::Dimension(format!(
+            "got {} kernels, {} measures, {} weights",
+            m,
+            bs.len(),
+            weights.len()
+        )));
+    }
+    let n = kernels[0].rows();
+    for (k, kern) in kernels.iter().enumerate() {
+        if kern.rows() != n || kern.cols() != bs[k].len() {
+            return Err(Error::Dimension(format!(
+                "kernel {k} is {}x{} but barycenter support is {n} and b[{k}] has {}",
+                kern.rows(),
+                kern.cols(),
+                bs[k].len()
+            )));
+        }
+    }
+    let wsum: f64 = weights.iter().sum();
+    if weights.iter().any(|&w| w < 0.0) || wsum <= 0.0 {
+        return Err(Error::InvalidParam("weights must be non-negative with positive sum".into()));
+    }
+    let w: Vec<f64> = weights.iter().map(|x| x / wsum).collect();
+    let log_bs: Vec<Vec<f64>> = bs
+        .iter()
+        .map(|b| {
+            b.iter().map(|&x| if x > 0.0 { x.ln() } else { f64::NEG_INFINITY }).collect()
+        })
+        .collect();
+
+    let mut phis: Vec<Vec<f64>> = (0..m).map(|_| vec![0.0; n]).collect();
+    let mut q = vec![1.0 / n as f64; n];
+    let mut q_prev = q.clone();
+    let mut log_q = vec![0.0; n];
+    let mut rs: Vec<Vec<f64>> = Vec::with_capacity(m);
+    let mut displacement = f64::INFINITY;
+    let mut iters = 0;
+    while iters < params.max_iters {
+        iters += 1;
+        q_prev.copy_from_slice(&q);
+        log_q.iter_mut().for_each(|x| *x = 0.0);
+        rs.clear();
+        for k in 0..m {
+            // ψ_k = log b_k − ln(K_kᵀ u_k); zero-mass columns keep v = 0.
+            let lse_cols = kernels[k].col_lse(&phis[k]);
+            let psi: Vec<f64> = log_bs[k]
+                .iter()
+                .zip(&lse_cols)
+                .map(|(&lb, &lse)| {
+                    if lb == f64::NEG_INFINITY || lse == f64::NEG_INFINITY {
+                        f64::NEG_INFINITY
+                    } else {
+                        lb - lse
+                    }
+                })
+                .collect();
+            // r_k = ln(K_k v_k).
+            let r = kernels[k].row_lse(&psi);
+            if w[k] > 0.0 {
+                // A −∞ row under a positively-weighted kernel pins
+                // q_i = 0 (the multiplicative loop's 1e-300 guard is the
+                // linear-domain shadow of the same convention).
+                for i in 0..n {
+                    if r[i] == f64::NEG_INFINITY {
+                        log_q[i] = f64::NEG_INFINITY;
+                    } else if log_q[i] != f64::NEG_INFINITY {
+                        log_q[i] += w[k] * r[i];
+                    }
+                }
+            }
+            rs.push(r);
+        }
+        // Normalize: ln q ← ln q − LSE(ln q). Keeps q on the simplex at
+        // every iteration without moving the fixed point (module docs).
+        let lz = lse_vec(&log_q);
+        if !lz.is_finite() {
+            return Err(Error::Numerical(format!(
+                "log-domain barycenter collapsed at iteration {iters} (log-partition {lz})"
+            )));
+        }
+        for i in 0..n {
+            if log_q[i] != f64::NEG_INFINITY {
+                log_q[i] -= lz;
+            }
+            q[i] = log_q[i].exp();
+        }
+        // φ_k = ln q − r_k.
+        for k in 0..m {
+            for i in 0..n {
+                let blocked = log_q[i] == f64::NEG_INFINITY || rs[k][i] == f64::NEG_INFINITY;
+                phis[k][i] = if blocked { f64::NEG_INFINITY } else { log_q[i] - rs[k][i] };
+            }
+        }
+        displacement = l1_diff(&q, &q_prev);
+        if displacement <= params.delta {
+            return Ok(BarycenterSolution { q, iterations: iters, displacement, converged: true });
+        }
+    }
+    if params.strict {
+        return Err(Error::NotConverged { iters, err: displacement });
+    }
+    Ok(BarycenterSolution { q, iterations: iters, displacement, converged: false })
+}
+
+/// Dense convenience wrapper: log-domain IBP over the shared-support
+/// Gibbs kernel `ln K = −C/ε` — the stable reference for barycenters at
+/// any ε, and the engine behind `BackendKind::LogDomain` barycenter
+/// solves in the registry.
+pub fn log_ibp_barycenter(
+    cost: &Mat,
+    bs: &[Vec<f64>],
+    weights: &[f64],
+    eps: f64,
+    params: &SinkhornParams,
+) -> Result<BarycenterSolution> {
+    if eps <= 0.0 {
+        return Err(Error::InvalidParam("eps must be positive".into()));
+    }
+    let op = DenseLogKernel::new(cost, eps);
+    let ops: Vec<&DenseLogKernel> = vec![&op; bs.len()];
+    log_ibp_barycenter_with(&ops, bs, weights, params)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ot::barycenter::ibp_barycenter;
+    use crate::ot::cost::{gibbs_kernel, sq_euclidean_cost};
+
+    fn grid_support(n: usize) -> Vec<Vec<f64>> {
+        (0..n).map(|i| vec![i as f64 / (n - 1) as f64]).collect()
+    }
+
+    fn gauss_hist(pts: &[Vec<f64>], mu: f64, s2: f64) -> Vec<f64> {
+        let w: Vec<f64> =
+            pts.iter().map(|p| (-(p[0] - mu).powi(2) / (2.0 * s2)).exp() + 1e-4).collect();
+        let s: f64 = w.iter().sum();
+        w.iter().map(|x| x / s).collect()
+    }
+
+    #[test]
+    fn matches_multiplicative_ibp_at_moderate_eps() {
+        // Same fixed point, and with the normalization argument the
+        // iterates correspond exactly — tight tolerances agree to 1e-8.
+        let pts = grid_support(40);
+        let cost = sq_euclidean_cost(&pts, &pts);
+        let eps = 0.01;
+        let kernel = gibbs_kernel(&cost, eps);
+        let bs = vec![gauss_hist(&pts, 0.3, 0.004), gauss_hist(&pts, 0.7, 0.004)];
+        let w = vec![0.5, 0.5];
+        let params = SinkhornParams { delta: 1e-11, max_iters: 20_000, strict: false };
+        let mult =
+            ibp_barycenter(&[kernel.clone(), kernel.clone()], &bs, &w, &params).unwrap();
+        let logd = log_ibp_barycenter(&cost, &bs, &w, eps, &params).unwrap();
+        assert!(mult.converged && logd.converged);
+        let mass: f64 = mult.q.iter().sum();
+        let sup = mult
+            .q
+            .iter()
+            .zip(&logd.q)
+            .map(|(x, y)| (x / mass - y).abs())
+            .fold(0.0f64, f64::max);
+        assert!(sup < 1e-8, "sup-norm gap {sup}");
+    }
+
+    #[test]
+    fn q_is_a_probability_vector_even_at_tiny_eps() {
+        // ε two orders below the multiplicative underflow cliff: the
+        // multiplicative IBP collapses toward zero mass, the log engine
+        // returns a normalized, finite histogram.
+        let pts = grid_support(32);
+        let cost = sq_euclidean_cost(&pts, &pts);
+        let eps = 1e-5;
+        let bs = vec![gauss_hist(&pts, 0.25, 0.003), gauss_hist(&pts, 0.75, 0.003)];
+        let params = SinkhornParams { delta: 1e-9, max_iters: 2000, strict: false };
+        let sol = log_ibp_barycenter(&cost, &bs, &[0.5, 0.5], eps, &params).unwrap();
+        assert!(sol.q.iter().all(|x| x.is_finite() && *x >= 0.0));
+        let mass: f64 = sol.q.iter().sum();
+        assert!((mass - 1.0).abs() < 1e-9, "mass {mass}");
+        // The ε → 0 barycenter of two symmetric Gaussians centers at 0.5.
+        let mean: f64 = pts.iter().zip(&sol.q).map(|(p, q)| p[0] * q).sum();
+        assert!((mean - 0.5).abs() < 0.05, "mean {mean}");
+    }
+
+    #[test]
+    fn sparse_sketch_kernels_run_through_the_same_loop() {
+        // Full-support CSR sketches with exact log-kernel values must
+        // reproduce the dense log engine bit-for-bit in shape terms.
+        let pts = grid_support(24);
+        let cost = sq_euclidean_cost(&pts, &pts);
+        let eps = 5e-4;
+        let rows: Vec<Vec<(u32, f64, f64, f64)>> = (0..24)
+            .map(|i| {
+                (0..24)
+                    .map(|j| {
+                        let lk = -cost.get(i, j) / eps;
+                        (j as u32, lk.exp(), lk, cost.get(i, j))
+                    })
+                    .collect()
+            })
+            .collect();
+        let sk = CsrMatrix::from_rows_logk(24, 24, rows);
+        let bs = vec![gauss_hist(&pts, 0.3, 0.004), gauss_hist(&pts, 0.6, 0.004)];
+        let params = SinkhornParams { delta: 1e-10, max_iters: 5000, strict: false };
+        let dense = log_ibp_barycenter(&cost, &bs, &[0.5, 0.5], eps, &params).unwrap();
+        let sparse =
+            log_ibp_barycenter_with(&[sk.clone(), sk], &bs, &[0.5, 0.5], &params).unwrap();
+        let sup = dense
+            .q
+            .iter()
+            .zip(&sparse.q)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f64, f64::max);
+        assert!(sup < 1e-8, "dense vs sparse-full sup gap {sup}");
+    }
+
+    #[test]
+    fn zero_weight_kernels_do_not_poison_q() {
+        let pts = grid_support(16);
+        let cost = sq_euclidean_cost(&pts, &pts);
+        let bs = vec![gauss_hist(&pts, 0.4, 0.01), gauss_hist(&pts, 0.8, 0.01)];
+        let params = SinkhornParams { delta: 1e-9, max_iters: 2000, strict: false };
+        let sol = log_ibp_barycenter(&cost, &bs, &[1.0, 0.0], 0.01, &params).unwrap();
+        let mass: f64 = sol.q.iter().sum();
+        assert!((mass - 1.0).abs() < 1e-9);
+        assert!(sol.q.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn rejects_mismatched_inputs_like_the_multiplicative_loop() {
+        let pts = grid_support(8);
+        let cost = sq_euclidean_cost(&pts, &pts);
+        let b = gauss_hist(&pts, 0.5, 0.01);
+        let params = SinkhornParams::default();
+        assert!(log_ibp_barycenter(&cost, &[b.clone(), b.clone()], &[0.5], 0.1, &params).is_err());
+        assert!(log_ibp_barycenter(&cost, &[b.clone()], &[-1.0], 0.1, &params).is_err());
+        assert!(log_ibp_barycenter(&cost, &[b], &[1.0], 0.0, &params).is_err());
+    }
+}

@@ -12,7 +12,7 @@
 //! the multiplicative updates, and exposed publicly as part of the
 //! library API.
 
-use super::objective::plan_entropy;
+use super::objective::{kl_divergence, plan_entropy};
 use super::SinkhornSolution;
 use crate::error::{Error, Result};
 use crate::linalg::Mat;
@@ -61,8 +61,10 @@ pub fn log_sinkhorn_ot(
     if eps <= 0.0 {
         return Err(Error::InvalidParam("eps must be positive".into()));
     }
-    let log_a: Vec<f64> = a.iter().map(|&x| if x > 0.0 { x.ln() } else { f64::NEG_INFINITY }).collect();
-    let log_b: Vec<f64> = b.iter().map(|&x| if x > 0.0 { x.ln() } else { f64::NEG_INFINITY }).collect();
+    let log_a: Vec<f64> =
+        a.iter().map(|&x| if x > 0.0 { x.ln() } else { f64::NEG_INFINITY }).collect();
+    let log_b: Vec<f64> =
+        b.iter().map(|&x| if x > 0.0 { x.ln() } else { f64::NEG_INFINITY }).collect();
     let cost_t = cost.transpose();
     let mut alpha = vec![0.0; n];
     let mut beta = vec![0.0; m];
@@ -150,6 +152,139 @@ pub fn log_sinkhorn_ot(
     }
     // Return the scalings for API parity (may overflow to inf for tiny
     // eps; the potentials are what is numerically meaningful).
+    let u: Vec<f64> = alpha.iter().map(|&x| (x / eps).exp()).collect();
+    let v: Vec<f64> = beta.iter().map(|&x| (x / eps).exp()).collect();
+    Ok(SinkhornSolution { u, v, objective, iterations: iters, displacement, converged })
+}
+
+/// Log-domain Sinkhorn for entropic UOT (Algorithm 2 on the dual
+/// potentials): the scaling exponent `ρ = λ/(λ+ε)` multiplies the
+/// potential updates, and the Eq. 10 objective — transport, entropy and
+/// both KL marginal penalties — is evaluated from the log-plan
+/// `ln T_ij = (α_i + β_j − C_ij)/ε` without ever forming a kernel entry.
+/// This is the dense engine behind a `LogDomain` backend override (or an
+/// `Auto` escalation) on unbalanced problems.
+pub fn log_sinkhorn_uot(
+    cost: &Mat,
+    a: &[f64],
+    b: &[f64],
+    lambda: f64,
+    eps: f64,
+    params: &SinkhornParams,
+) -> Result<SinkhornSolution> {
+    let n = a.len();
+    let m = b.len();
+    if cost.rows() != n || cost.cols() != m {
+        return Err(Error::Dimension(format!(
+            "cost {}x{} vs a[{n}], b[{m}]",
+            cost.rows(),
+            cost.cols()
+        )));
+    }
+    if lambda <= 0.0 || eps <= 0.0 {
+        return Err(Error::InvalidParam(format!(
+            "lambda ({lambda}) and eps ({eps}) must be positive"
+        )));
+    }
+    let rho = crate::ot::uot::uot_rho(lambda, eps);
+    let log_a: Vec<f64> =
+        a.iter().map(|&x| if x > 0.0 { x.ln() } else { f64::NEG_INFINITY }).collect();
+    let log_b: Vec<f64> =
+        b.iter().map(|&x| if x > 0.0 { x.ln() } else { f64::NEG_INFINITY }).collect();
+    let cost_t = cost.transpose();
+    let mut alpha = vec![0.0; n];
+    let mut beta = vec![0.0; m];
+    let mut displacement = f64::INFINITY;
+    let mut iters = 0;
+    let mut converged = false;
+    while iters < params.max_iters {
+        iters += 1;
+        // alpha_i = rho * eps * (log a_i - lse_j((-C_ij + beta_j)/eps)),
+        // the potential-space image of u = (a ./ K v)^rho.
+        let beta_ref = &beta;
+        let new_alpha: Vec<f64> = pool::parallel_map(n, |i| {
+            let lse = row_lse(cost.row(i), beta_ref, eps);
+            if log_a[i] == f64::NEG_INFINITY || lse == f64::NEG_INFINITY {
+                f64::NEG_INFINITY
+            } else {
+                rho * eps * (log_a[i] - lse)
+            }
+        });
+        let alpha_ref = &new_alpha;
+        let new_beta: Vec<f64> = pool::parallel_map(m, |j| {
+            let lse = row_lse(cost_t.row(j), alpha_ref, eps);
+            if log_b[j] == f64::NEG_INFINITY || lse == f64::NEG_INFINITY {
+                f64::NEG_INFINITY
+            } else {
+                rho * eps * (log_b[j] - lse)
+            }
+        });
+        displacement = alpha
+            .iter()
+            .zip(&new_alpha)
+            .chain(beta.iter().zip(&new_beta))
+            .map(|(x, y)| if x.is_finite() && y.is_finite() { (x - y).abs() } else { 0.0 })
+            .fold(0.0f64, f64::max);
+        alpha = new_alpha;
+        beta = new_beta;
+        if displacement <= params.delta * eps.max(1e-12) {
+            converged = true;
+            break;
+        }
+    }
+    if !converged && params.strict {
+        return Err(Error::NotConverged { iters, err: displacement });
+    }
+    // Eq. 10 from the log-plan: transport + entropy over entries, KL
+    // penalties from the plan marginals (safe in the linear domain —
+    // entries are bounded by the marginal masses after a scaling pass).
+    let alpha_ref = &alpha;
+    let beta_ref = &beta;
+    let (transport, entropy, row_marg, col_marg) = pool::parallel_fold(
+        n,
+        |start, end| {
+            let mut tr = 0.0;
+            let mut en = 0.0;
+            let mut row = vec![0.0; n];
+            let mut col = vec![0.0; m];
+            for i in start..end {
+                if alpha_ref[i] == f64::NEG_INFINITY {
+                    continue;
+                }
+                let crow = cost.row(i);
+                for j in 0..m {
+                    if !crow[j].is_finite() || beta_ref[j] == f64::NEG_INFINITY {
+                        continue;
+                    }
+                    let lt = (alpha_ref[i] + beta_ref[j] - crow[j]) / eps;
+                    let t = lt.exp();
+                    if t > 0.0 {
+                        tr += t * crow[j];
+                        en -= t * (lt - 1.0);
+                        row[i] += t;
+                        col[j] += t;
+                    }
+                }
+            }
+            (tr, en, row, col)
+        },
+        |(tr_a, en_a, mut row_a, mut col_a), (tr_b, en_b, row_b, col_b)| {
+            for (x, y) in row_a.iter_mut().zip(row_b) {
+                *x += y;
+            }
+            for (x, y) in col_a.iter_mut().zip(col_b) {
+                *x += y;
+            }
+            (tr_a + tr_b, en_a + en_b, row_a, col_a)
+        },
+        (0.0, 0.0, vec![0.0; n], vec![0.0; m]),
+    );
+    let objective = transport - eps * entropy
+        + lambda * kl_divergence(&row_marg, a)
+        + lambda * kl_divergence(&col_marg, b);
+    if !objective.is_finite() {
+        return Err(Error::Numerical("log-domain UOT objective is not finite".into()));
+    }
     let u: Vec<f64> = alpha.iter().map(|&x| (x / eps).exp()).collect();
     let v: Vec<f64> = beta.iter().map(|&x| (x / eps).exp()).collect();
     Ok(SinkhornSolution { u, v, objective, iterations: iters, displacement, converged })
@@ -246,5 +381,48 @@ mod tests {
         let (cost, a, b) = problem(8, 209);
         assert!(log_sinkhorn_ot(&cost, &a, &b, 0.0, &SinkhornParams::default()).is_err());
         assert!(log_sinkhorn_ot(&cost, &a[..4], &b, 0.1, &SinkhornParams::default()).is_err());
+    }
+
+    #[test]
+    fn uot_matches_multiplicative_at_moderate_eps() {
+        let (cost, a, b) = problem(24, 211);
+        // Unbalance the masses (paper setting 5 vs 3).
+        let a: Vec<f64> = a.iter().map(|x| x * 5.0).collect();
+        let b: Vec<f64> = b.iter().map(|x| x * 3.0).collect();
+        let (lambda, eps) = (1.0, 0.1);
+        let kernel = gibbs_kernel(&cost, eps);
+        let params = SinkhornParams { delta: 1e-10, max_iters: 5000, strict: false };
+        let classic =
+            crate::ot::uot::sinkhorn_uot(&kernel, &cost, &a, &b, lambda, eps, &params).unwrap();
+        let logd = log_sinkhorn_uot(&cost, &a, &b, lambda, eps, &params).unwrap();
+        let rel = (classic.objective - logd.objective).abs() / classic.objective.abs();
+        assert!(rel < 1e-6, "classic {} vs log {}", classic.objective, logd.objective);
+    }
+
+    #[test]
+    fn uot_survives_tiny_eps() {
+        let (cost, a, b) = problem(20, 213);
+        let a: Vec<f64> = a.iter().map(|x| x * 2.0).collect();
+        let eps = 1e-4; // multiplicative kernel underflows to all-zero rows
+        let sol = log_sinkhorn_uot(
+            &cost,
+            &a,
+            &b,
+            1.0,
+            eps,
+            &SinkhornParams { delta: 1e-8, max_iters: 5000, strict: false },
+        )
+        .unwrap();
+        assert!(sol.objective.is_finite());
+        assert!(sol.objective >= 0.0, "objective {}", sol.objective);
+    }
+
+    #[test]
+    fn uot_rejects_bad_params() {
+        let (cost, a, b) = problem(8, 217);
+        let p = SinkhornParams::default();
+        assert!(log_sinkhorn_uot(&cost, &a, &b, 0.0, 0.1, &p).is_err());
+        assert!(log_sinkhorn_uot(&cost, &a, &b, 1.0, 0.0, &p).is_err());
+        assert!(log_sinkhorn_uot(&cost, &a[..4], &b, 1.0, 0.1, &p).is_err());
     }
 }

@@ -1,9 +1,16 @@
 //! Entropic optimal-transport core: cost/kernel construction, exact
 //! Sinkhorn solvers for OT (Alg. 1) and UOT (Alg. 2), objectives
 //! (Eqs. 6 and 10), and the IBP barycenter solver (Alg. 5).
+//!
+//! Every formulation has a log-domain stabilized twin for the small-ε
+//! regime where `exp(−C/ε)` underflows: [`log_sinkhorn`] covers balanced
+//! and unbalanced OT, [`log_barycenter`] covers IBP barycenters — both
+//! reached through the [`ScalingBackend`](crate::solvers::backend)
+//! switch rather than called directly in most code.
 
 pub mod barycenter;
 pub mod cost;
+pub mod log_barycenter;
 pub mod log_sinkhorn;
 pub mod objective;
 pub mod sinkhorn;

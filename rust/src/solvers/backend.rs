@@ -1,20 +1,23 @@
-//! Scaling-loop backend selection: one switch for the four Sinkhorn
-//! iteration engines —
+//! Scaling-loop backend selection: one switch for every scaling-loop
+//! engine pair, across ALL formulations —
 //!
-//! | backend | dense | sparse |
-//! |---|---|---|
-//! | `Multiplicative` | `ot::sinkhorn` / `ot::uot` | `solvers::sparse_loop` |
-//! | `LogDomain` | `ot::log_sinkhorn` | `solvers::log_sparse` |
+//! | backend | dense OT | dense UOT | sparse OT/UOT | barycenter (dense / sketch) |
+//! |---|---|---|---|---|
+//! | `Multiplicative` | `ot::sinkhorn` | `ot::uot` | `solvers::sparse_loop` | `ot::barycenter` |
+//! | `LogDomain` | `ot::log_sinkhorn` | `ot::log_sinkhorn` | `solvers::log_sparse` | `ot::log_barycenter` |
 //!
 //! `Auto` (the default) picks multiplicative above an ε threshold and
 //! the stabilized log-domain engine below it, and ESCALATES a
-//! multiplicative solve to the log engine when it fails numerically:
-//! an explicit [`Error::Numerical`] (diverged scalings, non-finite
-//! objective), a sketch whose stored kernel values materially
-//! underflowed (fully, or > 1% of entries on a log-built sketch —
-//! the multiplicative loop would silently iterate a biased
-//! sub-sketch), or a loop that "converged" to the degenerate all-zero
-//! plan.
+//! multiplicative solve to the log engine when it fails numerically.
+//! The collapse signals are shared and formulation-aware: an explicit
+//! [`Error::Numerical`] (diverged scalings, non-finite objective), a
+//! sketch whose stored kernel values materially underflowed (fully, or
+//! > 1% of entries on a log-built sketch — the multiplicative loop would
+//! silently iterate a biased sub-sketch), a scaling loop that
+//! "converged" to the degenerate all-zero plan, or an IBP run whose
+//! histogram carries numerically no mass (the barycenter shape of the
+//! same collapse — without it a small-ε multiplicative IBP silently
+//! returns a zero `q` instead of failing).
 //!
 //! The default threshold is calibrated to costs normalized to
 //! `c₀ = max C = 1` (the standard preprocessing in
@@ -27,10 +30,12 @@
 use super::{log_sparse, sparse_loop};
 use crate::error::{Error, Result};
 use crate::linalg::Mat;
+use crate::ot::barycenter::{ibp_barycenter_with, BarycenterSolution};
 use crate::ot::cost::gibbs_kernel;
-use crate::ot::log_sinkhorn::log_sinkhorn_ot;
+use crate::ot::log_barycenter::{log_ibp_barycenter, log_ibp_barycenter_with};
+use crate::ot::log_sinkhorn::{log_sinkhorn_ot, log_sinkhorn_uot};
 use crate::ot::sinkhorn::{sinkhorn_ot, SinkhornParams};
-use crate::ot::uot::uot_rho;
+use crate::ot::uot::{sinkhorn_uot, uot_rho};
 use crate::ot::SinkhornSolution;
 use crate::sparse::CsrMatrix;
 
@@ -75,8 +80,13 @@ pub enum BackendKind {
 /// (underflowed entries carry a finite log-kernel but are invisible to
 /// linear arithmetic), so escalate once that bias is material (> 1% of
 /// stored entries). One O(nnz) pass, paid only under the `Auto` policy.
-fn multiplicative_hopeless(sketch: &CsrMatrix, a: &[f64]) -> bool {
-    if sketch.nnz() == 0 || !a.iter().any(|&x| x > 0.0) {
+///
+/// Formulation-aware: `mass` is whichever known marginal drives the
+/// scaling loop — `a` for OT/UOT rows, `b_k` for the k-th IBP kernel
+/// (the barycenter's own marginal is the unknown `q`). A sketch paired
+/// with an all-zero marginal is an empty problem, not a hopeless one.
+fn multiplicative_hopeless(sketch: &CsrMatrix, mass: &[f64]) -> bool {
+    if sketch.nnz() == 0 || !mass.iter().any(|&x| x > 0.0) {
         return false;
     }
     let underflowed = sketch.iter().filter(|&(_, _, k, _)| k == 0.0).count();
@@ -86,11 +96,30 @@ fn multiplicative_hopeless(sketch: &CsrMatrix, a: &[f64]) -> bool {
     sketch.has_log_kernel() && underflowed * 100 > sketch.nnz()
 }
 
+/// Dense shape of the same signal: a materialized Gibbs kernel whose
+/// every entry underflowed. The multiplicative dense loops either
+/// diverge (OT/UOT, caught via [`Error::Numerical`]) or — worse — the
+/// guarded IBP update "converges" onto a zero histogram, so `Auto` goes
+/// straight to the log engine instead of running them.
+fn dense_kernel_hopeless(kernel: &Mat) -> bool {
+    kernel.as_slice().iter().all(|&k| k == 0.0)
+}
+
 /// Partial-underflow collapse: the loop ran but every row scaling hit
 /// the `sketch_div` zero branch — the plan is empty while the problem
 /// is not. Treated as a failure worth escalating.
 fn degenerate_all_zero(sol: &SinkhornSolution, sketch: &CsrMatrix, a: &[f64]) -> bool {
     sketch.nnz() > 0 && a.iter().any(|&x| x > 0.0) && sol.u.iter().all(|&x| x == 0.0)
+}
+
+/// Barycenter shape of the degenerate collapse: the IBP loop returned,
+/// but the histogram carries numerically no mass (or non-finite
+/// entries). A healthy IBP fixed point has `Σq = Σb_k = 1`; an
+/// underflowed multiplicative run lands near `exp(Σ_k w_k ln 1e-300)`
+/// per component instead of failing, so anything below 1e-100 total is
+/// a collapse worth escalating, never a solution.
+fn degenerate_barycenter(q: &[f64]) -> bool {
+    !q.iter().all(|x| x.is_finite()) || q.iter().sum::<f64>() < 1e-100
 }
 
 fn mult_sparse_ot(
@@ -270,6 +299,119 @@ impl ScalingBackend {
             }
         }
     }
+
+    /// Dense entropic-UOT solve from a cost matrix — the unbalanced twin
+    /// of [`ScalingBackend::dense_ot`]. The multiplicative path
+    /// materializes the Gibbs kernel and runs Algorithm 2; the log path
+    /// iterates `ρ`-scaled potentials on the cost directly
+    /// ([`log_sinkhorn_uot`]), so a `LogDomain` override (or an `Auto`
+    /// escalation) keeps dense unbalanced problems solvable at any ε.
+    pub fn dense_uot(
+        &self,
+        cost: &Mat,
+        a: &[f64],
+        b: &[f64],
+        lambda: f64,
+        eps: f64,
+        params: &SinkhornParams,
+    ) -> Result<(SinkhornSolution, BackendKind)> {
+        match self.kind_for(eps) {
+            BackendKind::Multiplicative => {
+                let kernel = gibbs_kernel(cost, eps);
+                if self.escalates() && dense_kernel_hopeless(&kernel) {
+                    return log_sinkhorn_uot(cost, a, b, lambda, eps, params)
+                        .map(|s| (s, BackendKind::LogDomain));
+                }
+                match sinkhorn_uot(&kernel, cost, a, b, lambda, eps, params) {
+                    Ok(sol) => Ok((sol, BackendKind::Multiplicative)),
+                    Err(Error::Numerical(_)) if self.escalates() => {
+                        log_sinkhorn_uot(cost, a, b, lambda, eps, params)
+                            .map(|s| (s, BackendKind::LogDomain))
+                    }
+                    Err(e) => Err(e),
+                }
+            }
+            BackendKind::LogDomain => log_sinkhorn_uot(cost, a, b, lambda, eps, params)
+                .map(|s| (s, BackendKind::LogDomain)),
+        }
+    }
+
+    /// Dense IBP barycenter solve from the shared-support cost matrix.
+    /// The multiplicative path materializes one Gibbs kernel per input
+    /// measure and runs Algorithm 5; the log path runs the stabilized
+    /// log-IBP ([`log_ibp_barycenter`]). Escalation watches the
+    /// barycenter-shaped collapse ([`degenerate_barycenter`]) — the
+    /// guarded multiplicative update does NOT error on an underflowed
+    /// kernel, it silently converges onto a zero histogram.
+    pub fn dense_ibp(
+        &self,
+        cost: &Mat,
+        bs: &[Vec<f64>],
+        weights: &[f64],
+        eps: f64,
+        params: &SinkhornParams,
+    ) -> Result<(BarycenterSolution, BackendKind)> {
+        match self.kind_for(eps) {
+            BackendKind::Multiplicative => {
+                let kernel = gibbs_kernel(cost, eps);
+                if self.escalates() && dense_kernel_hopeless(&kernel) {
+                    return log_ibp_barycenter(cost, bs, weights, eps, params)
+                        .map(|s| (s, BackendKind::LogDomain));
+                }
+                // One shared kernel for every input measure (same
+                // support) — pass references instead of m dense clones.
+                let kernels: Vec<&Mat> = vec![&kernel; bs.len()];
+                match ibp_barycenter_with(&kernels, bs, weights, params) {
+                    Ok(sol) if !(self.escalates() && degenerate_barycenter(&sol.q)) => {
+                        Ok((sol, BackendKind::Multiplicative))
+                    }
+                    Ok(_) => log_ibp_barycenter(cost, bs, weights, eps, params)
+                        .map(|s| (s, BackendKind::LogDomain)),
+                    Err(Error::Numerical(_)) if self.escalates() => {
+                        log_ibp_barycenter(cost, bs, weights, eps, params)
+                            .map(|s| (s, BackendKind::LogDomain))
+                    }
+                    Err(e) => Err(e),
+                }
+            }
+            BackendKind::LogDomain => log_ibp_barycenter(cost, bs, weights, eps, params)
+                .map(|s| (s, BackendKind::LogDomain)),
+        }
+    }
+
+    /// Sketched IBP barycenter solve over per-measure sketches (the
+    /// Spar-IBP scaling stage). Sketches must carry exact log-kernel
+    /// values (the `_logk` samplers) for the log engine to add anything
+    /// over the multiplicative loop. `eps` only steers the `Auto`
+    /// threshold — the kernels' ε is baked into the sketches.
+    pub fn sparse_ibp(
+        &self,
+        sketches: &[CsrMatrix],
+        bs: &[Vec<f64>],
+        weights: &[f64],
+        eps: f64,
+        params: &SinkhornParams,
+    ) -> Result<(BarycenterSolution, BackendKind)> {
+        let mut kind = self.kind_for(eps);
+        if kind == BackendKind::Multiplicative
+            && self.escalates()
+            && sketches.iter().zip(bs).any(|(sk, b)| multiplicative_hopeless(sk, b))
+        {
+            kind = BackendKind::LogDomain;
+        }
+        if kind == BackendKind::Multiplicative {
+            match ibp_barycenter_with(sketches, bs, weights, params) {
+                Ok(sol) if !(self.escalates() && degenerate_barycenter(&sol.q)) => {
+                    return Ok((sol, BackendKind::Multiplicative));
+                }
+                Ok(_) => {} // zero-mass collapse -> escalate
+                Err(Error::Numerical(_)) if self.escalates() => {} // diverged -> escalate
+                Err(e) => return Err(e),
+            }
+        }
+        log_ibp_barycenter_with(sketches, bs, weights, params)
+            .map(|s| (s, BackendKind::LogDomain))
+    }
 }
 
 #[cfg(test)]
@@ -380,6 +522,124 @@ mod tests {
         let reference = log_sinkhorn_ot(&cost, &a, &b, 0.1, &params).unwrap();
         let rel = (sol_m.objective - reference.objective).abs() / reference.objective.abs();
         assert!(rel < 1e-4, "mult {} vs log {}", sol_m.objective, reference.objective);
+    }
+
+    fn bary_fixture(n: usize) -> (Mat, Vec<Vec<f64>>, Vec<f64>) {
+        let pts: Vec<Vec<f64>> = (0..n).map(|i| vec![i as f64 / (n - 1) as f64]).collect();
+        let cost = sq_euclidean_cost(&pts, &pts);
+        let hist = |mu: f64| -> Vec<f64> {
+            let w: Vec<f64> =
+                pts.iter().map(|p| (-(p[0] - mu).powi(2) / 0.01).exp() + 1e-4).collect();
+            let s: f64 = w.iter().sum();
+            w.iter().map(|x| x / s).collect()
+        };
+        (cost, vec![hist(0.25), hist(0.75)], vec![0.5, 0.5])
+    }
+
+    #[test]
+    fn dense_uot_unifies_both_loops() {
+        let (cost, a, b) = toy(16);
+        let cost = crate::experiments::common::normalize_cost(&cost);
+        let a: Vec<f64> = a.iter().map(|x| x * 2.0).collect();
+        let params = SinkhornParams { delta: 1e-10, max_iters: 5000, strict: false };
+        let lambda = 1.0;
+        // Moderate ε: auto runs multiplicative.
+        let (sol_m, kind_m) =
+            ScalingBackend::default().dense_uot(&cost, &a, &b, lambda, 0.1, &params).unwrap();
+        assert_eq!(kind_m, BackendKind::Multiplicative);
+        // Small ε: auto runs log-domain and stays finite.
+        let (sol_l, kind_l) =
+            ScalingBackend::default().dense_uot(&cost, &a, &b, lambda, 1e-4, &params).unwrap();
+        assert_eq!(kind_l, BackendKind::LogDomain);
+        assert!(sol_m.objective.is_finite() && sol_l.objective.is_finite());
+        // Forced log agrees with multiplicative at moderate ε.
+        let (logd, kl) = ScalingBackend::LogDomain
+            .dense_uot(&cost, &a, &b, lambda, 0.1, &params)
+            .unwrap();
+        assert_eq!(kl, BackendKind::LogDomain);
+        let rel = (sol_m.objective - logd.objective).abs() / logd.objective.abs();
+        assert!(rel < 1e-6, "mult {} vs log {}", sol_m.objective, logd.objective);
+    }
+
+    #[test]
+    fn dense_ibp_auto_switches_and_backends_agree() {
+        let (cost, bs, w) = bary_fixture(32);
+        let params = SinkhornParams { delta: 1e-11, max_iters: 20_000, strict: false };
+        let eps = 0.01;
+        let (mult, km) = ScalingBackend::Multiplicative
+            .dense_ibp(&cost, &bs, &w, eps, &params)
+            .unwrap();
+        let (logd, kl) =
+            ScalingBackend::LogDomain.dense_ibp(&cost, &bs, &w, eps, &params).unwrap();
+        let (auto, ka) =
+            ScalingBackend::default().dense_ibp(&cost, &bs, &w, eps, &params).unwrap();
+        assert_eq!(km, BackendKind::Multiplicative);
+        assert_eq!(kl, BackendKind::LogDomain);
+        assert_eq!(ka, BackendKind::Multiplicative);
+        let mass: f64 = mult.q.iter().sum();
+        let sup = mult
+            .q
+            .iter()
+            .zip(&logd.q)
+            .map(|(x, y)| (x / mass - y).abs())
+            .fold(0.0f64, f64::max);
+        assert!(sup < 1e-8, "normalized sup gap {sup}");
+        assert_eq!(auto.q.len(), mult.q.len());
+        // Sub-threshold ε: auto goes to the log engine and returns a
+        // probability vector where the multiplicative loop collapses.
+        let (small, ks) =
+            ScalingBackend::default().dense_ibp(&cost, &bs, &w, 1e-5, &params).unwrap();
+        assert_eq!(ks, BackendKind::LogDomain);
+        let mass: f64 = small.q.iter().sum();
+        assert!((mass - 1.0).abs() < 1e-9, "mass {mass}");
+    }
+
+    #[test]
+    fn sparse_ibp_escalates_on_underflowed_sketch() {
+        // Shift the cost by 1 so even the diagonal underflows at tiny ε,
+        // and force Auto to START multiplicative with a zero threshold:
+        // the hopeless-sketch check must reroute to the log engine
+        // instead of letting IBP "converge" onto a zero histogram.
+        let (cost, bs, w) = bary_fixture(16);
+        let cost = cost.map(|c| c + 1.0);
+        let eps = 1e-6;
+        let sk = full_csr_logk(&cost, eps);
+        assert_eq!(sk.kernel_frob_norm(), 0.0, "expected full underflow");
+        let sketches = vec![sk.clone(), sk];
+        let params = SinkhornParams { delta: 1e-8, max_iters: 500, strict: false };
+        let forced_mult = ScalingBackend::Auto { eps_threshold: 0.0 };
+        let (sol, kind) = forced_mult.sparse_ibp(&sketches, &bs, &w, eps, &params).unwrap();
+        assert_eq!(kind, BackendKind::LogDomain, "should have escalated");
+        let mass: f64 = sol.q.iter().sum();
+        assert!((mass - 1.0).abs() < 1e-9, "mass {mass}");
+        // The pinned multiplicative backend on the same sketches returns
+        // the collapsed histogram (or errors) — never a healthy q.
+        match ScalingBackend::Multiplicative.sparse_ibp(&sketches, &bs, &w, eps, &params) {
+            Ok((s, k)) => {
+                assert_eq!(k, BackendKind::Multiplicative);
+                assert!(
+                    s.q.iter().sum::<f64>() < 1e-100,
+                    "unexpectedly healthy mass {}",
+                    s.q.iter().sum::<f64>()
+                );
+            }
+            Err(Error::Numerical(_)) => {}
+            Err(e) => panic!("unexpected error {e}"),
+        }
+    }
+
+    #[test]
+    fn sparse_ibp_runs_multiplicative_at_moderate_eps() {
+        let (cost, bs, w) = bary_fixture(24);
+        let eps = 0.01;
+        let sk = full_csr_logk(&cost, eps);
+        let sketches = vec![sk.clone(), sk];
+        let params = SinkhornParams { delta: 1e-9, max_iters: 5000, strict: false };
+        let (sol, kind) =
+            ScalingBackend::default().sparse_ibp(&sketches, &bs, &w, eps, &params).unwrap();
+        assert_eq!(kind, BackendKind::Multiplicative);
+        let mass: f64 = sol.q.iter().sum();
+        assert!((mass - 1.0).abs() < 1e-6, "mass {mass}");
     }
 
     #[test]

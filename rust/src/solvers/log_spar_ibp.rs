@@ -1,0 +1,180 @@
+//! Log-domain Spar-IBP — Algorithm 6 with the sketch AND the scaling
+//! loop kept in the log domain end to end.
+//!
+//! Each kernel is Poisson-sparsified with the Appendix A.2 probabilities
+//! through [`poisson_sparsify_ibp_logk`], so every sampled entry carries
+//! its exact `ln K̃_ij = −C_ij/ε − ln p*` even when the linear kernel
+//! value underflows f64 — and the iteration is the stabilized log-IBP of
+//! [`log_ibp_barycenter_with`] driving the CSR row/column log-sum-exp
+//! primitives. Per-iteration cost stays O(nnz) like the multiplicative
+//! Spar-IBP; the returned `q` is a probability vector by construction.
+//!
+//! This is the pinned-log paper entry point (the barycenter analogue of
+//! `spar-sink-log`); policy-driven engine selection — multiplicative
+//! above the ε threshold, escalation on collapse — lives behind
+//! [`ScalingBackend::sparse_ibp`](super::backend::ScalingBackend), which
+//! the `spar-ibp` registry adapter dispatches to.
+
+use crate::error::Result;
+use crate::linalg::Mat;
+use crate::ot::cost::log_gibbs_from_cost;
+use crate::ot::log_barycenter::log_ibp_barycenter_with;
+use crate::ot::sinkhorn::SinkhornParams;
+use crate::rng::Rng;
+use crate::solvers::spar_ibp::SparIbpSolution;
+use crate::sparse::{poisson_sparsify_ibp_logk, CsrMatrix, SparsifyStats};
+
+/// Sparsify one IBP kernel from a LOG-kernel oracle (−∞ = blocked).
+/// Identical selection probabilities and RNG stream to
+/// [`sparsify_ibp_kernel`](super::spar_ibp::sparsify_ibp_kernel)
+/// wherever the linear kernel has not underflowed.
+pub fn sparsify_ibp_kernel_logk(
+    n: usize,
+    log_kernel: impl Fn(usize, usize) -> f64 + Sync,
+    b_k: &[f64],
+    s: f64,
+    rng: &mut Rng,
+) -> Result<(CsrMatrix, SparsifyStats)> {
+    poisson_sparsify_ibp_logk(n, log_kernel, b_k, s, 1.0, rng)
+}
+
+/// Run log-domain Spar-IBP from the shared-support cost matrix:
+/// sparsify every kernel with exact `ln K̃` values, then iterate the
+/// stabilized log-IBP. `s` is the absolute expected sample budget per
+/// kernel, as in [`spar_ibp`](super::spar_ibp::spar_ibp).
+///
+/// Unlike the multiplicative entry point this takes `(cost, eps)` rather
+/// than pre-materialized Gibbs kernels — materializing `exp(−C/ε)` is
+/// exactly what destroys the information the log engine needs.
+pub fn log_spar_ibp(
+    cost: &Mat,
+    bs: &[Vec<f64>],
+    weights: &[f64],
+    eps: f64,
+    s: f64,
+    params: &SinkhornParams,
+    rng: &mut Rng,
+) -> Result<SparIbpSolution> {
+    let n = cost.rows();
+    let mut sketches = Vec::with_capacity(bs.len());
+    let mut stats = Vec::with_capacity(bs.len());
+    for b_k in bs {
+        let (sk, st) = sparsify_ibp_kernel_logk(
+            n,
+            |i, j| log_gibbs_from_cost(cost.get(i, j), eps),
+            b_k,
+            s,
+            rng,
+        )?;
+        sketches.push(sk);
+        stats.push(st);
+    }
+    let solution = log_ibp_barycenter_with(&sketches, bs, weights, params)?;
+    Ok(SparIbpSolution { solution, stats })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::{l1_distance, s0};
+    use crate::ot::cost::{gibbs_kernel, sq_euclidean_cost};
+    use crate::solvers::spar_ibp::spar_ibp;
+
+    fn setup(n: usize) -> (Mat, Vec<Vec<f64>>, Vec<f64>) {
+        let pts: Vec<Vec<f64>> = (0..n).map(|i| vec![i as f64 / (n - 1) as f64]).collect();
+        let cost = sq_euclidean_cost(&pts, &pts);
+        let hist = |mu: f64, s2: f64| -> Vec<f64> {
+            let w: Vec<f64> =
+                pts.iter().map(|p| (-(p[0] - mu).powi(2) / (2.0 * s2)).exp() + 1e-4).collect();
+            let s: f64 = w.iter().sum();
+            w.iter().map(|x| x / s).collect()
+        };
+        let bs = vec![hist(0.2, 0.003), hist(0.5, 0.004), hist(0.8, 0.003)];
+        (cost, bs, vec![1.0 / 3.0; 3])
+    }
+
+    #[test]
+    fn matches_multiplicative_spar_ibp_at_moderate_eps() {
+        // Same seed → same sketch support and values; the two IBP loops
+        // are the same map modulo normalization, so the normalized
+        // multiplicative q and the log q agree tightly.
+        let n = 64;
+        let (cost, bs, w) = setup(n);
+        let eps = 0.01;
+        let kernel = gibbs_kernel(&cost, eps);
+        let kernels = vec![kernel.clone(), kernel.clone(), kernel];
+        let params = SinkhornParams { delta: 1e-11, max_iters: 20_000, strict: false };
+        let budget = 40.0 * s0(n);
+        let mut r1 = Rng::seed_from(91);
+        let mut r2 = Rng::seed_from(91);
+        let mult = spar_ibp(&kernels, &bs, &w, budget, &params, &mut r1).unwrap();
+        let logd = log_spar_ibp(&cost, &bs, &w, eps, budget, &params, &mut r2).unwrap();
+        assert_eq!(mult.stats.len(), logd.stats.len());
+        for (sm, sl) in mult.stats.iter().zip(&logd.stats) {
+            assert_eq!(sm.nnz, sl.nnz, "sketch supports diverged");
+        }
+        let mass: f64 = mult.solution.q.iter().sum();
+        assert!(mass > 0.0);
+        let sup = mult
+            .solution
+            .q
+            .iter()
+            .zip(&logd.solution.q)
+            .map(|(x, y)| (x / mass - y).abs())
+            .fold(0.0f64, f64::max);
+        assert!(sup < 1e-8, "normalized sup-norm gap {sup}");
+    }
+
+    #[test]
+    fn survives_tiny_eps_where_the_linear_sketch_is_empty() {
+        // ε far below the underflow cliff: the materialized Gibbs kernel
+        // keeps only a thin near-diagonal band, starving the linear
+        // sampler; the log pipeline samples the full support and still
+        // returns a probability vector.
+        let n = 48;
+        let (cost, bs, w) = setup(n);
+        let eps = 1e-5;
+        let kernel = gibbs_kernel(&cost, eps);
+        assert!(
+            kernel.as_slice().iter().filter(|&&k| k > 0.0).count() < n * n / 2,
+            "expected heavy underflow"
+        );
+        let params = SinkhornParams { delta: 1e-8, max_iters: 3000, strict: false };
+        let mut rng = Rng::seed_from(93);
+        let sol = log_spar_ibp(&cost, &bs, &w, eps, 30.0 * s0(n), &params, &mut rng).unwrap();
+        assert!(sol.stats.iter().all(|s| s.nnz > 0));
+        let mass: f64 = sol.solution.q.iter().sum();
+        assert!((mass - 1.0).abs() < 1e-9, "mass {mass}");
+        assert!(sol.solution.q.iter().all(|x| x.is_finite() && *x >= 0.0));
+    }
+
+    #[test]
+    fn approximates_the_exact_log_barycenter() {
+        let n = 64;
+        let (cost, bs, w) = setup(n);
+        let eps = 5e-4; // below the multiplicative threshold
+        let params = SinkhornParams { delta: 1e-9, max_iters: 4000, strict: false };
+        let exact =
+            crate::ot::log_barycenter::log_ibp_barycenter(&cost, &bs, &w, eps, &params).unwrap();
+        let mut rng = Rng::seed_from(97);
+        let approx =
+            log_spar_ibp(&cost, &bs, &w, eps, 40.0 * s0(n), &params, &mut rng).unwrap();
+        let err = l1_distance(&approx.solution.q, &exact.q);
+        assert!(err < 0.6, "L1 error {err}");
+    }
+
+    #[test]
+    fn budget_respected() {
+        let n = 48;
+        let (cost, bs, w) = setup(n);
+        let mut rng = Rng::seed_from(99);
+        let budget = 10.0 * s0(n);
+        let sol =
+            log_spar_ibp(&cost, &bs, &w, 0.01, budget, &SinkhornParams::default(), &mut rng)
+                .unwrap();
+        assert_eq!(sol.stats.len(), 3);
+        for st in &sol.stats {
+            assert!((st.nnz as f64) <= budget * 1.25, "nnz {} vs {budget}", st.nnz);
+        }
+    }
+}

@@ -18,17 +18,25 @@
 //! | [`screenkhorn`] | `screenkhorn` | Alaya et al. 2019 | O((n/κ)²) |
 //! | [`spar_ibp`] | `spar-ibp` | Alg. 6 (this paper) | O(ms) |
 //!
-//! The multiplicative sparse loop ([`sparse_loop`]) and its log-domain
-//! stabilized twin ([`log_sparse`]) sit behind the
-//! [`backend::ScalingBackend`] switch, which auto-escalates to the log
-//! engine for small ε or on numerical failure;
+//! The multiplicative loops and their log-domain stabilized twins sit
+//! behind the [`backend::ScalingBackend`] switch, which auto-escalates
+//! to the log engine for small ε or on numerical failure — and the
+//! coverage is now complete across EVERY formulation: sparse OT/UOT
+//! ([`sparse_loop`] / [`log_sparse`]), dense OT/UOT
+//! ([`crate::ot::sinkhorn`]+[`crate::ot::uot`] /
+//! [`crate::ot::log_sinkhorn`]), and IBP barycenters, dense and sketched
+//! ([`crate::ot::barycenter`]+[`spar_ibp`] /
+//! [`crate::ot::log_barycenter`]+[`log_spar_ibp`]). All engine pairs
+//! share the `DEFAULT_LOG_EPS_THRESHOLD` ε switch (calibrated for costs
+//! normalized to c₀ = 1) and formulation-aware collapse detection.
 //! [`SolverSpec::backend`](crate::api::SolverSpec::backend) overrides
-//! the policy per solve, and every sparse
+//! the policy per solve, and every backend-switched
 //! [`Solution`](crate::api::Solution) reports the
 //! [`BackendKind`](backend::BackendKind) that actually ran.
 
 pub mod backend;
 pub mod greenkhorn;
+pub mod log_spar_ibp;
 pub mod log_sparse;
 pub mod nys_sink;
 pub mod proximal;

@@ -7,12 +7,17 @@
 //! making row probabilities constant. The sparse sketches then drive the
 //! same IBP loop (Algorithm 5) through the `KernelOp` abstraction.
 
-use crate::error::Result;
+use super::backend::BackendKind;
+use crate::api::{Formulation, OtProblem, SolverSpec};
+use crate::error::{Error, Result};
 use crate::linalg::Mat;
+use crate::metrics::s0;
 use crate::ot::barycenter::{ibp_barycenter_with, BarycenterSolution};
 use crate::ot::sinkhorn::SinkhornParams;
 use crate::rng::Rng;
-use crate::sparse::{poisson_sparsify_with, CsrMatrix, SparsifyStats};
+use crate::sparse::{
+    poisson_sparsify_ibp_logk, poisson_sparsify_with, CsrMatrix, SparsifyStats,
+};
 
 /// Result with per-kernel sparsification stats.
 #[derive(Clone, Debug)]
@@ -67,12 +72,66 @@ pub fn spar_ibp(
     Ok(SparIbpSolution { solution, stats })
 }
 
+/// [`spar_ibp`] result routed through the backend switch: solution,
+/// per-kernel stats, and the engine that actually ran.
+#[derive(Clone, Debug)]
+pub struct SparIbpBackendSolution {
+    pub solution: BarycenterSolution,
+    pub stats: Vec<SparsifyStats>,
+    pub backend: BackendKind,
+}
+
+/// The [`SolverSpec`]-consuming adapter behind the `spar-ibp` registry
+/// entry (the barycenter sibling of
+/// [`spar_sink_solve`](super::spar_sink::spar_sink_solve)): resolves the
+/// per-kernel budget `s = s_multiplier · s₀(n)`, sparsifies every input
+/// kernel through the log-kernel Appendix A.2 sampler — identical RNG
+/// stream and stored kernel values to the linear sampler at moderate ε,
+/// but exact `ln K̃` per entry — and dispatches the IBP scaling stage
+/// through [`ScalingBackend::sparse_ibp`], honoring the
+/// [`SolverSpec::backend`] override and the shrinkage θ (condition (ii)
+/// mixing, default 1 = pure importance sampling like the paper entry
+/// points) end to end.
+pub fn spar_ibp_solve(
+    problem: &OtProblem,
+    spec: &SolverSpec,
+    rng: &mut Rng,
+) -> Result<SparIbpBackendSolution> {
+    let Formulation::Barycenter { marginals, weights } = &problem.formulation else {
+        return Err(Error::InvalidParam(
+            "spar-ibp solves barycenter problems; use spar-sink for OT/UOT".into(),
+        ));
+    };
+    let eps = problem.eps;
+    let n = problem.cost.rows();
+    let s = spec.s_multiplier * s0(n);
+    let backend = spec.backend.unwrap_or_default();
+    let mut sketches = Vec::with_capacity(marginals.len());
+    let mut stats = Vec::with_capacity(marginals.len());
+    for b_k in marginals {
+        let (sk, st) = poisson_sparsify_ibp_logk(
+            n,
+            |i, j| problem.cost.log_kernel_at(i, j, eps),
+            b_k,
+            s,
+            spec.shrinkage,
+            rng,
+        )?;
+        sketches.push(sk);
+        stats.push(st);
+    }
+    let (solution, kind) =
+        backend.sparse_ibp(&sketches, marginals, weights, eps, &spec.sinkhorn_params())?;
+    Ok(SparIbpBackendSolution { solution, stats, backend: kind })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::metrics::l1_distance;
     use crate::ot::barycenter::ibp_barycenter;
     use crate::ot::cost::{gibbs_kernel, sq_euclidean_cost};
+    use crate::solvers::backend::ScalingBackend;
 
     fn setup(n: usize) -> (Vec<Mat>, Vec<Vec<f64>>, Vec<f64>) {
         let pts: Vec<Vec<f64>> = (0..n).map(|i| vec![i as f64 / (n - 1) as f64]).collect();
@@ -128,6 +187,56 @@ mod tests {
         let small = mean_err(5.0);
         let large = mean_err(40.0);
         assert!(large < small, "err did not decrease: {small} -> {large}");
+    }
+
+    #[test]
+    fn solve_adapter_matches_legacy_bitwise_at_moderate_eps() {
+        // The adapter samples through the log-kernel sampler but must
+        // reproduce the legacy linear pipeline bit for bit wherever the
+        // kernel has not underflowed.
+        use crate::api::Method;
+        let n = 48;
+        let (kernels, bs, w) = setup(n);
+        let pts: Vec<Vec<f64>> = (0..n).map(|i| vec![i as f64 / (n - 1) as f64]).collect();
+        let cost = sq_euclidean_cost(&pts, &pts);
+        let eps = 0.01;
+        let problem = OtProblem::barycenter(cost, bs.clone(), w.clone(), eps);
+        let spec = SolverSpec::new(Method::SparIbp).with_budget(12.0).with_seed(55);
+        let mut r_api = Rng::seed_from(55);
+        let api = spar_ibp_solve(&problem, &spec, &mut r_api).unwrap();
+        assert_eq!(api.backend, BackendKind::Multiplicative);
+        let mut r_legacy = Rng::seed_from(55);
+        let legacy = spar_ibp(
+            &kernels,
+            &bs,
+            &w,
+            12.0 * s0(n),
+            &SinkhornParams::default(),
+            &mut r_legacy,
+        )
+        .unwrap();
+        assert_eq!(api.stats.len(), legacy.stats.len());
+        for (x, y) in api.solution.q.iter().zip(&legacy.solution.q) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn solve_adapter_honors_log_backend_override() {
+        use crate::api::Method;
+        let n = 48;
+        let (_, bs, w) = setup(n);
+        let pts: Vec<Vec<f64>> = (0..n).map(|i| vec![i as f64 / (n - 1) as f64]).collect();
+        let cost = sq_euclidean_cost(&pts, &pts);
+        let problem = OtProblem::barycenter(cost, bs, w, 0.01);
+        let spec = SolverSpec::new(Method::SparIbp)
+            .with_budget(12.0)
+            .with_backend(ScalingBackend::LogDomain);
+        let mut rng = Rng::seed_from(57);
+        let sol = spar_ibp_solve(&problem, &spec, &mut rng).unwrap();
+        assert_eq!(sol.backend, BackendKind::LogDomain);
+        let mass: f64 = sol.solution.q.iter().sum();
+        assert!((mass - 1.0).abs() < 1e-9, "mass {mass}");
     }
 
     #[test]

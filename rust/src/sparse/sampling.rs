@@ -537,6 +537,52 @@ pub fn poisson_sparsify_uot_logk(
     )
 }
 
+/// Spar-IBP sparsifier (Appendix A.2) from a LOG-kernel oracle:
+/// `p_{ij} ∝ √(b_j)` — row-uniform, the unknown barycenter replaced by
+/// the uniform `q⁽⁰⁾ = 1/n` exactly as in
+/// [`sparsify_ibp_kernel`](crate::solvers::spar_ibp::sparsify_ibp_kernel).
+/// Selection probabilities, normalization arithmetic and RNG consumption
+/// are identical to that linear sampler wherever the kernel has not
+/// underflowed, so the two produce the SAME sketch support at moderate ε;
+/// sampled entries here additionally keep their exact `ln K̃`, keeping the
+/// sketch solvable by the log-domain IBP engine at any ε.
+pub fn poisson_sparsify_ibp_logk(
+    n_rows: usize,
+    log_kernel: impl Fn(usize, usize) -> f64 + Sync,
+    b_k: &[f64],
+    s: f64,
+    shrinkage: f64,
+    rng: &mut Rng,
+) -> Result<(CsrMatrix, SparsifyStats)> {
+    let sqrt_b: Vec<f64> = b_k.iter().map(|x| x.sqrt()).collect();
+    let total = n_rows as f64 * sqrt_b.iter().sum::<f64>();
+    if s > 0.0 && total <= 0.0 {
+        return Err(Error::InvalidParam(format!(
+            "budget s = {s} and total probability {total} must be positive"
+        )));
+    }
+    let sqrt_b = &sqrt_b;
+    let log_kernel = &log_kernel;
+    poisson_core(
+        n_rows,
+        b_k.len(),
+        |i, j| {
+            let lk = log_kernel(i, j);
+            if lk == f64::NEG_INFINITY {
+                None
+            } else {
+                Some((sqrt_b[j] / total, lk))
+            }
+        },
+        // IBP needs no per-entry costs (cf. the linear sampler's zero
+        // cost oracle), so store 0.
+        |_, _, lk, p_star| Some((lk.exp() / p_star, lk - p_star.ln(), 0.0)),
+        s,
+        shrinkage,
+        rng,
+    )
+}
+
 /// Sampling-with-replacement ablation for OT (Appendix comparison /
 /// Wang & Zou 2021 discussion): draw `s` iid entries from `p_ij` and
 /// average `K_ij / (s p_ij)` over draws.
@@ -944,6 +990,63 @@ mod tests {
         for ((i1, j1, k1, _), (i2, j2, k2, _)) in sk_lin.iter().zip(sk_log.iter()) {
             assert_eq!((i1, j1), (i2, j2));
             assert!((k1 - k2).abs() < 1e-12 * k1.abs().max(1.0), "{k1} vs {k2}");
+        }
+    }
+
+    #[test]
+    fn ibp_logk_sampler_matches_linear_ibp_sampler_at_moderate_eps() {
+        // Same RNG stream and the same √b_j probabilities as the linear
+        // IBP sampler (poisson_sparsify_with + √b oracle): identical
+        // sketch support and bitwise-identical kernel values when the
+        // log oracle is the exact `−C/ε` the linear kernel exponentiates.
+        let (kernel, cost, _, b) = toy(20);
+        let n = 20;
+        let total = n as f64 * b.iter().map(|x: &f64| x.sqrt()).sum::<f64>();
+        let sqrt_b: Vec<f64> = b.iter().map(|x| x.sqrt()).collect();
+        let mut r1 = Rng::seed_from(37);
+        let mut r2 = Rng::seed_from(37);
+        let (sk_lin, st_lin) = poisson_sparsify_with(
+            n,
+            n,
+            |i, j| kernel.get(i, j),
+            |_, _| 0.0,
+            |_, j| sqrt_b[j],
+            total,
+            120.0,
+            1.0,
+            &mut r1,
+        )
+        .unwrap();
+        let (sk_log, st_log) = poisson_sparsify_ibp_logk(
+            n,
+            |i, j| -cost.get(i, j) / 0.2,
+            &b,
+            120.0,
+            1.0,
+            &mut r2,
+        )
+        .unwrap();
+        assert_eq!(st_lin.nnz, st_log.nnz);
+        assert!(sk_log.has_log_kernel());
+        for ((i1, j1, k1, _), (i2, j2, k2, _)) in sk_lin.iter().zip(sk_log.iter()) {
+            assert_eq!((i1, j1), (i2, j2));
+            assert_eq!(k1.to_bits(), k2.to_bits(), "{k1} vs {k2}");
+        }
+    }
+
+    #[test]
+    fn ibp_logk_sampler_survives_full_underflow() {
+        // Every linear kernel value underflows; the log sampler still
+        // stores finite ln K̃ and a usable support.
+        let n = 16;
+        let b = vec![1.0 / n as f64; n];
+        let mut rng = Rng::seed_from(41);
+        let lk = |i: usize, j: usize| -1.0e4 * (1.0 + (i + j) as f64);
+        let (sk, stats) = poisson_sparsify_ibp_logk(n, lk, &b, 80.0, 1.0, &mut rng).unwrap();
+        assert!(stats.nnz > 0);
+        assert_eq!(sk.kernel_frob_norm(), 0.0, "linear values should all underflow");
+        for (_, _, lk, _) in sk.iter_log() {
+            assert!(lk.is_finite());
         }
     }
 

@@ -1,22 +1,28 @@
 //! Parity tests for the unified `api::solve` surface: for every
 //! registered method, dispatching through the registry must return a
 //! BITWISE-identical objective to the legacy free-function entry point
-//! it adapts — on OT and UOT formulations, from dense costs and from
-//! entry oracles. Plus registry-resolution coverage.
+//! it adapts — on OT, UOT and barycenter formulations, from dense costs
+//! and from entry oracles, for the multiplicative AND the log-domain
+//! engines. Plus multiplicative-vs-log agreement pins (q within 1e-8
+//! sup-norm where both backends converge) and registry-resolution
+//! coverage.
 
 use std::sync::Arc;
 
 use spar_sink::api::{self, CostSource, Formulation, Method, OtProblem, SolverSpec};
 use spar_sink::experiments::common::normalize_cost;
 use spar_sink::linalg::Mat;
-use spar_sink::metrics::s0;
+use spar_sink::metrics::{normalized_histogram, s0};
 use spar_sink::ot::barycenter::ibp_barycenter;
 use spar_sink::ot::cost::{gibbs_kernel, sq_euclidean_cost};
+use spar_sink::ot::log_barycenter::log_ibp_barycenter;
+use spar_sink::ot::log_sinkhorn::log_sinkhorn_uot;
 use spar_sink::ot::sinkhorn::{sinkhorn_ot, SinkhornParams};
 use spar_sink::ot::uot::sinkhorn_uot;
 use spar_sink::rng::Rng;
-use spar_sink::solvers::backend::ScalingBackend;
+use spar_sink::solvers::backend::{BackendKind, ScalingBackend};
 use spar_sink::solvers::greenkhorn::{greenkhorn_ot, GreenkhornParams};
+use spar_sink::solvers::log_spar_ibp::log_spar_ibp;
 use spar_sink::solvers::nys_sink::{nys_sink_ot, nys_sink_uot, NysSinkParams};
 use spar_sink::solvers::rand_sink::{rand_sink_ot, rand_sink_uot};
 use spar_sink::solvers::screenkhorn::{screenkhorn_ot, ScreenkhornParams};
@@ -295,6 +301,180 @@ fn barycenter_solves_are_bitwise_identical_to_legacy() {
     assert_eq!(sol.stats.len(), 3);
     for (i, (x, y)) in q.iter().zip(&legacy.solution.q).enumerate() {
         assert_bits(&format!("spar-ibp q[{i}]"), *x, *y);
+    }
+}
+
+/// Barycenter fixture shared by the parity pins below.
+fn barycenter_fixture(n: usize, eps: f64) -> (Arc<Mat>, Vec<Vec<f64>>, Vec<f64>, OtProblem) {
+    let pts: Vec<Vec<f64>> = (0..n).map(|i| vec![i as f64 / (n - 1) as f64]).collect();
+    let cost = Arc::new(normalize_cost(&sq_euclidean_cost(&pts, &pts)));
+    let hist = |mu: f64| -> Vec<f64> {
+        let w: Vec<f64> =
+            pts.iter().map(|p| (-(p[0] - mu).powi(2) / 0.01).exp() + 1e-4).collect();
+        let s: f64 = w.iter().sum();
+        w.iter().map(|x| x / s).collect()
+    };
+    let marginals = vec![hist(0.2), hist(0.5), hist(0.8)];
+    let weights = vec![1.0 / 3.0; 3];
+    let problem = OtProblem::barycenter(&cost, marginals.clone(), weights.clone(), eps);
+    (cost, marginals, weights, problem)
+}
+
+fn sup_diff(x: &[f64], y: &[f64]) -> f64 {
+    x.iter().zip(y).map(|(a, b)| (a - b).abs()).fold(0.0f64, f64::max)
+}
+
+#[test]
+fn log_domain_barycenter_solves_are_bitwise_identical_to_legacy() {
+    // The LogDomain override on both barycenter methods must reproduce
+    // the legacy log engines bit for bit, exactly as the multiplicative
+    // parity test pins the multiplicative pipeline.
+    let n = 32;
+    let eps = 0.01;
+    let (cost, marginals, weights, problem) = barycenter_fixture(n, eps);
+    let params = SinkhornParams::default();
+
+    let exact = api::solve(
+        &problem,
+        &SolverSpec::new(Method::Sinkhorn).with_backend(ScalingBackend::LogDomain),
+    )
+    .unwrap();
+    assert_eq!(exact.backend, Some(BackendKind::LogDomain));
+    let legacy = log_ibp_barycenter(&cost, &marginals, &weights, eps, &params).unwrap();
+    let q = exact.barycenter.as_ref().expect("q");
+    for (i, (x, y)) in q.iter().zip(&legacy.q).enumerate() {
+        assert_bits(&format!("log ibp q[{i}]"), *x, *y);
+    }
+
+    let sol = api::solve(
+        &problem,
+        &SolverSpec::new(Method::SparIbp)
+            .with_budget(S_MULT)
+            .with_seed(SEED)
+            .with_backend(ScalingBackend::LogDomain),
+    )
+    .unwrap();
+    assert_eq!(sol.backend, Some(BackendKind::LogDomain));
+    let mut rng = Rng::seed_from(SEED);
+    let legacy =
+        log_spar_ibp(&cost, &marginals, &weights, eps, S_MULT * s0(n), &params, &mut rng)
+            .unwrap();
+    let q = sol.barycenter.as_ref().expect("q");
+    assert_eq!(sol.stats.len(), 3);
+    for (i, (x, y)) in q.iter().zip(&legacy.solution.q).enumerate() {
+        assert_bits(&format!("log spar-ibp q[{i}]"), *x, *y);
+    }
+}
+
+#[test]
+fn dense_uot_log_override_is_bitwise_identical_to_legacy() {
+    let (cost, a, b) = instance(32, 127);
+    let a: Vec<f64> = a.iter().map(|x| x * 5.0).collect();
+    let b: Vec<f64> = b.iter().map(|x| x * 3.0).collect();
+    let (lambda, eps) = (1.0, 0.1);
+    let problem = OtProblem::unbalanced(&cost, a.clone(), b.clone(), lambda, eps);
+    let sol = api::solve(
+        &problem,
+        &SolverSpec::new(Method::Sinkhorn).with_backend(ScalingBackend::LogDomain),
+    )
+    .unwrap();
+    assert_eq!(sol.backend, Some(BackendKind::LogDomain));
+    let legacy =
+        log_sinkhorn_uot(&cost, &a, &b, lambda, eps, &SinkhornParams::default()).unwrap();
+    assert_bits("dense UOT log", sol.objective, legacy.objective);
+}
+
+#[test]
+fn barycenter_backends_agree_at_moderate_eps() {
+    // The mult-vs-log wall: where both engines converge, the barycenter
+    // histograms agree to 1e-8 sup-norm (the multiplicative q compared
+    // after normalization — the log engine normalizes by construction).
+    let n = 32;
+    let eps = 0.01;
+    let (_, _, _, problem) = barycenter_fixture(n, eps);
+    let tight = |spec: SolverSpec| spec.with_tolerance(1e-11).with_max_iters(30_000);
+
+    // Dense IBP.
+    let mult = api::solve(
+        &problem,
+        &tight(SolverSpec::new(Method::Sinkhorn).with_backend(ScalingBackend::Multiplicative)),
+    )
+    .unwrap();
+    let logd = api::solve(
+        &problem,
+        &tight(SolverSpec::new(Method::Sinkhorn).with_backend(ScalingBackend::LogDomain)),
+    )
+    .unwrap();
+    assert!(mult.converged && logd.converged, "both engines must converge for the pin");
+    let gap = sup_diff(
+        &normalized_histogram(mult.barycenter.as_ref().unwrap()),
+        &normalized_histogram(logd.barycenter.as_ref().unwrap()),
+    );
+    assert!(gap < 1e-8, "dense IBP mult-vs-log sup gap {gap}");
+
+    // Spar-IBP over the SAME sketch (same seed -> same support).
+    let mult = api::solve(
+        &problem,
+        &tight(
+            SolverSpec::new(Method::SparIbp)
+                .with_budget(40.0)
+                .with_seed(SEED)
+                .with_backend(ScalingBackend::Multiplicative),
+        ),
+    )
+    .unwrap();
+    let logd = api::solve(
+        &problem,
+        &tight(
+            SolverSpec::new(Method::SparIbp)
+                .with_budget(40.0)
+                .with_seed(SEED)
+                .with_backend(ScalingBackend::LogDomain),
+        ),
+    )
+    .unwrap();
+    assert!(mult.converged && logd.converged, "both engines must converge for the pin");
+    assert_eq!(mult.nnz(), logd.nnz(), "sketch supports diverged");
+    let gap = sup_diff(
+        &normalized_histogram(mult.barycenter.as_ref().unwrap()),
+        &normalized_histogram(logd.barycenter.as_ref().unwrap()),
+    );
+    assert!(gap < 1e-8, "spar-ibp mult-vs-log sup gap {gap}");
+}
+
+#[test]
+fn dense_uot_backends_agree_at_moderate_eps() {
+    let (cost, a, b) = instance(28, 131);
+    let a: Vec<f64> = a.iter().map(|x| x * 2.0).collect();
+    let (lambda, eps) = (1.0, 0.1);
+    let problem = OtProblem::unbalanced(&cost, a, b, lambda, eps);
+    let tight = |backend| {
+        SolverSpec::new(Method::Sinkhorn)
+            .with_backend(backend)
+            .with_tolerance(1e-10)
+            .with_max_iters(20_000)
+    };
+    let mult = api::solve(&problem, &tight(ScalingBackend::Multiplicative)).unwrap();
+    let logd = api::solve(&problem, &tight(ScalingBackend::LogDomain)).unwrap();
+    assert!(mult.converged && logd.converged);
+    let rel = (mult.objective - logd.objective).abs() / logd.objective.abs();
+    assert!(rel < 1e-6, "mult {} vs log {}", mult.objective, logd.objective);
+}
+
+#[test]
+fn small_eps_barycenter_returns_log_domain_probability_vector() {
+    // Acceptance criterion: below DEFAULT_LOG_EPS_THRESHOLD the default
+    // spec serves the log engine and a finite, normalized q — where the
+    // multiplicative path previously errored, collapsed or was rejected.
+    let n = 32;
+    let (_, _, _, problem) = barycenter_fixture(n, 5e-4);
+    for method in [Method::Sinkhorn, Method::SparIbp] {
+        let sol = api::solve(&problem, &spec(method)).unwrap();
+        assert_eq!(sol.backend, Some(BackendKind::LogDomain), "{method:?}");
+        let q = sol.barycenter.as_ref().expect("q");
+        assert!(q.iter().all(|x| x.is_finite() && *x >= 0.0), "{method:?}");
+        let mass: f64 = q.iter().sum();
+        assert!((mass - 1.0).abs() < 1e-9, "{method:?} mass {mass}");
     }
 }
 

@@ -1,18 +1,32 @@
 //! Property-based tests over randomized inputs (hand-rolled generator
 //! loops — the offline image has no proptest). Each property runs many
 //! random cases from seeded streams; failures print the seed for
-//! reproduction.
+//! reproduction. The per-property case count defaults to 24 and is
+//! raised via the `PROPTEST_CASES` env var (the CI parity/property wall
+//! runs at higher intensity).
 
+use spar_sink::api::{self, Method, OtProblem, SolverSpec};
 use spar_sink::linalg::{l1_diff, Mat};
 use spar_sink::metrics::s0;
 use spar_sink::ot::cost::{gibbs_kernel, sq_euclidean_cost, wfr_cost_from_distance};
+use spar_sink::ot::log_barycenter::log_ibp_barycenter;
 use spar_sink::ot::objective::{kl_divergence, plan_marginals_dense};
 use spar_sink::ot::sinkhorn::{sinkhorn_scalings, transport_plan, SinkhornParams};
 use spar_sink::rng::Rng;
+use spar_sink::solvers::backend::ScalingBackend;
 use spar_sink::solvers::sparse_loop::{sparse_ot_objective, sparse_scalings};
 use spar_sink::sparse::{poisson_sparsify_ot, poisson_sparsify_uot, CsrMatrix};
 
 const CASES: usize = 24;
+
+/// Case count, overridable via `PROPTEST_CASES` (proptest's spelling, so
+/// the CI matrix leg and local runs share one knob).
+fn cases() -> usize {
+    std::env::var("PROPTEST_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(CASES)
+}
 
 fn random_instance(rng: &mut Rng, n_max: usize) -> (Mat, Mat, Vec<f64>, Vec<f64>) {
     let n = 4 + rng.gen_range(n_max - 4);
@@ -37,7 +51,7 @@ fn random_instance(rng: &mut Rng, n_max: usize) -> (Mat, Mat, Vec<f64>, Vec<f64>
 #[test]
 fn prop_sinkhorn_plan_feasible() {
     let mut master = Rng::seed_from(0x1001);
-    for case in 0..CASES {
+    for case in 0..cases() {
         let seed = master.next_u64();
         let mut rng = Rng::seed_from(seed);
         let (kernel, _cost, a, b) = random_instance(&mut rng, 48);
@@ -63,7 +77,7 @@ fn prop_sinkhorn_plan_feasible() {
 #[test]
 fn prop_sparse_loop_equals_dense_on_full_support() {
     let mut master = Rng::seed_from(0x1002);
-    for case in 0..CASES {
+    for case in 0..cases() {
         let seed = master.next_u64();
         let mut rng = Rng::seed_from(seed);
         let (kernel, cost, a, b) = random_instance(&mut rng, 32);
@@ -90,7 +104,7 @@ fn prop_sparse_loop_equals_dense_on_full_support() {
 #[test]
 fn prop_sketch_respects_budget() {
     let mut master = Rng::seed_from(0x1003);
-    for case in 0..CASES {
+    for case in 0..cases() {
         let seed = master.next_u64();
         let mut rng = Rng::seed_from(seed);
         let (kernel, cost, a, b) = random_instance(&mut rng, 64);
@@ -122,7 +136,7 @@ fn prop_sketch_respects_budget() {
 #[test]
 fn prop_sketch_entries_are_inflated_kernel_values() {
     let mut master = Rng::seed_from(0x1004);
-    for case in 0..CASES {
+    for case in 0..cases() {
         let seed = master.next_u64();
         let mut rng = Rng::seed_from(seed);
         let (kernel, cost, a, b) = random_instance(&mut rng, 48);
@@ -154,7 +168,7 @@ fn prop_sketch_entries_are_inflated_kernel_values() {
 #[test]
 fn prop_uot_sampling_respects_wfr_support() {
     let mut master = Rng::seed_from(0x1005);
-    for case in 0..CASES {
+    for case in 0..cases() {
         let seed = master.next_u64();
         let mut rng = Rng::seed_from(seed);
         let n = 8 + rng.gen_range(40);
@@ -213,7 +227,7 @@ fn prop_kl_nonnegative() {
 #[test]
 fn prop_objective_gauge_invariance() {
     let mut master = Rng::seed_from(0x1007);
-    for case in 0..CASES {
+    for case in 0..cases() {
         let seed = master.next_u64();
         let mut rng = Rng::seed_from(seed);
         let (kernel, cost, a, b) = random_instance(&mut rng, 32);
@@ -265,6 +279,117 @@ fn prop_uot_mass_monotone_in_lambda() {
         assert!(
             m_small > m_large,
             "case {case} seed {seed}: mass not decreasing ({m_small} -> {m_large})"
+        );
+    }
+}
+
+/// Random fixed-support barycenter instance: shared support in [0,1]^d,
+/// 2-4 strictly positive marginals, random simplex weights, and ε drawn
+/// log-uniformly across FOUR decades — deliberately straddling
+/// `DEFAULT_LOG_EPS_THRESHOLD` so sub-threshold draws exercise the log
+/// engine where the multiplicative kernel underflows.
+fn random_barycenter(
+    rng: &mut Rng,
+) -> (Mat, Vec<Vec<f64>>, Vec<f64>, f64) {
+    let n = 8 + rng.gen_range(24);
+    let d = 1 + rng.gen_range(2);
+    let pts: Vec<Vec<f64>> = (0..n)
+        .map(|_| (0..d).map(|_| rng.uniform()).collect())
+        .collect();
+    let cost = sq_euclidean_cost(&pts, &pts);
+    let m = 2 + rng.gen_range(3);
+    let marginals: Vec<Vec<f64>> = (0..m)
+        .map(|_| {
+            let raw: Vec<f64> = (0..n).map(|_| rng.uniform() + 1e-3).collect();
+            let s: f64 = raw.iter().sum();
+            raw.iter().map(|x| x / s).collect()
+        })
+        .collect();
+    let raw_w: Vec<f64> = (0..m).map(|_| rng.uniform() + 0.05).collect();
+    let ws: f64 = raw_w.iter().sum();
+    let weights: Vec<f64> = raw_w.iter().map(|x| x / ws).collect();
+    // log-uniform over [1e-5, 0.1]: roughly half the draws land below
+    // the 2e-3 auto threshold.
+    let eps = 10f64.powf(-5.0 + rng.uniform() * 4.0);
+    (cost, marginals, weights, eps)
+}
+
+/// Property: the log-domain IBP barycenter q is a probability vector —
+/// non-negative, finite, summing to 1 — across random marginals, costs
+/// and ε, INCLUDING sub-threshold ε, for both the dense engine and the
+/// Spar-IBP sketch path, converged or not.
+#[test]
+fn prop_log_ibp_q_is_probability_vector() {
+    let mut master = Rng::seed_from(0x1009);
+    for case in 0..cases() {
+        let seed = master.next_u64();
+        let mut rng = Rng::seed_from(seed);
+        let (cost, marginals, weights, eps) = random_barycenter(&mut rng);
+        let problem = OtProblem::barycenter(cost, marginals, weights, eps);
+        // Alternate dense IBP and Spar-IBP so both log engines face the
+        // random-instance wall.
+        let method = if case % 2 == 0 { Method::Sinkhorn } else { Method::SparIbp };
+        let spec = SolverSpec::new(method)
+            .with_budget(25.0)
+            .with_seed(seed)
+            .with_backend(ScalingBackend::LogDomain)
+            .with_max_iters(300);
+        let sol = match api::solve(&problem, &spec) {
+            Ok(s) => s,
+            // A sparse draw on a tiny instance can empty every row of a
+            // sketch; refusing with a numerical error is the correct
+            // behavior — the property is that any RETURNED q is a
+            // probability vector.
+            Err(spar_sink::Error::Numerical(_)) if method == Method::SparIbp => continue,
+            Err(e) => panic!("case {case} seed {seed} eps {eps:.2e}: {e}"),
+        };
+        let q = sol.barycenter.as_ref().expect("barycenter q");
+        assert!(
+            q.iter().all(|x| x.is_finite() && *x >= 0.0),
+            "case {case} seed {seed} eps {eps:.2e}: q has bad entries"
+        );
+        let mass: f64 = q.iter().sum();
+        assert!(
+            (mass - 1.0).abs() < 1e-9,
+            "case {case} seed {seed} eps {eps:.2e}: mass {mass}"
+        );
+    }
+}
+
+/// Property: the log-domain IBP barycenter is equivariant under a
+/// relabeling of the support points: permuting the cost matrix rows and
+/// columns together with every marginal permutes q the same way. Fixed
+/// iteration count on both runs, so the iterates correspond exactly
+/// (up to LSE summation-order rounding).
+#[test]
+fn prop_log_ibp_permutation_equivariant() {
+    let mut master = Rng::seed_from(0x100A);
+    for case in 0..cases() {
+        let seed = master.next_u64();
+        let mut rng = Rng::seed_from(seed);
+        let (cost, marginals, weights, eps) = random_barycenter(&mut rng);
+        let n = cost.rows();
+        // Random permutation via Fisher-Yates on the index vector.
+        let mut perm: Vec<usize> = (0..n).collect();
+        for i in (1..n).rev() {
+            let j = rng.gen_range(i + 1);
+            perm.swap(i, j);
+        }
+        let cost_p = Mat::from_fn(n, n, |i, j| cost.get(perm[i], perm[j]));
+        let marginals_p: Vec<Vec<f64>> = marginals
+            .iter()
+            .map(|b| (0..n).map(|i| b[perm[i]]).collect())
+            .collect();
+        let params = SinkhornParams { delta: 0.0, max_iters: 120, strict: false };
+        let base = log_ibp_barycenter(&cost, &marginals, &weights, eps, &params).unwrap();
+        let permuted =
+            log_ibp_barycenter(&cost_p, &marginals_p, &weights, eps, &params).unwrap();
+        let sup = (0..n)
+            .map(|i| (permuted.q[i] - base.q[perm[i]]).abs())
+            .fold(0.0f64, f64::max);
+        assert!(
+            sup < 1e-8,
+            "case {case} seed {seed} eps {eps:.2e}: equivariance sup gap {sup}"
         );
     }
 }
