@@ -4,11 +4,15 @@
 //! iteration throughput (both are O(nnz)/iter; the log engine pays one
 //! exp per stored entry per half-iteration).
 
+use std::sync::Arc;
+
+use spar_sink::api::{self, CostSource, EntryOracle, Method, OtProblem, SolverSpec};
 use spar_sink::bench::Bencher;
 use spar_sink::data::synthetic::{instance, Scenario};
+use spar_sink::engine::{ArtifactCache, CostArtifacts, Fingerprint, FormulationKey};
 use spar_sink::experiments::common::ot_cost;
 use spar_sink::metrics::s0;
-use spar_sink::ot::cost::gibbs_kernel;
+use spar_sink::ot::cost::{euclidean, gibbs_kernel, log_gibbs_from_cost, wfr_cost_from_distance};
 use spar_sink::ot::sinkhorn::SinkhornParams;
 use spar_sink::rng::Rng;
 use spar_sink::solvers::log_sparse::log_sparse_scalings;
@@ -88,5 +92,91 @@ fn main() {
             );
         });
     }
+
+    // Batch-vs-cold pairwise UOT on one shared support — the echo
+    // workload's shape. Cold re-derives the WFR cost oracle and the
+    // Eq. 11 sampling normalization per pair; the batch path builds
+    // CostArtifacts once per (eta, eps, lambda) in a fresh cache and
+    // every subsequent pair is "reuse + reweight".
+    {
+        let n = 400;
+        let frames = 6;
+        let (eta, eps, lambda) = (3.0, 0.05, 1.0);
+        let mut rng = Rng::seed_from(11);
+        let pts: Arc<Vec<Vec<f64>>> = Arc::new(
+            (0..n).map(|_| vec![rng.uniform() * 10.0, rng.uniform() * 10.0]).collect(),
+        );
+        let masses: Vec<Arc<Vec<f64>>> = (0..frames)
+            .map(|_| {
+                let mut m: Vec<f64> = (0..n).map(|_| rng.uniform() + 0.1).collect();
+                let s: f64 = m.iter().sum();
+                m.iter_mut().for_each(|x| *x /= s);
+                Arc::new(m)
+            })
+            .collect();
+        let mut pairs = Vec::new();
+        for i in 0..frames {
+            for j in (i + 1)..frames {
+                pairs.push((i, j));
+            }
+        }
+        let spec = SolverSpec::new(Method::SparSink).with_budget(8.0).with_seed(3);
+
+        let oracle_problem = |a: &Arc<Vec<f64>>, b: &Arc<Vec<f64>>| -> OtProblem {
+            let (src, tgt) = (pts.clone(), pts.clone());
+            let cost: EntryOracle = Arc::new(move |i: usize, j: usize| {
+                wfr_cost_from_distance(euclidean(&src[i], &tgt[j]), eta)
+            });
+            let cost_for_lk = cost.clone();
+            let log_kernel: EntryOracle =
+                Arc::new(move |i: usize, j: usize| log_gibbs_from_cost(cost_for_lk(i, j), eps));
+            OtProblem::unbalanced(
+                CostSource::Oracle { rows: n, cols: n, cost, log_kernel: Some(log_kernel) },
+                a.clone(),
+                b.clone(),
+                lambda,
+                eps,
+            )
+        };
+        bencher.bench(
+            format!("uot_pairwise_cold_oracle/n={n}/pairs={}", pairs.len()),
+            || {
+                for &(i, j) in &pairs {
+                    let problem = oracle_problem(&masses[i], &masses[j]);
+                    std::hint::black_box(api::solve(&problem, &spec).unwrap());
+                }
+            },
+        );
+        bencher.bench(
+            format!("uot_pairwise_batch_shared/n={n}/pairs={}", pairs.len()),
+            || {
+                // Fresh cache per iteration so the one-time artifact
+                // build is inside the measurement.
+                let cache = ArtifactCache::new(1 << 30);
+                let key = FormulationKey::unbalanced(lambda);
+                let problems: Vec<OtProblem> = pairs
+                    .iter()
+                    .map(|&(i, j)| {
+                        let fingerprint =
+                            Fingerprint::for_supports(&pts, &pts, Some(eta), eps, key);
+                        let handle = cache.get_or_build(fingerprint, || {
+                            CostArtifacts::for_wfr_supports(&pts, &pts, eta, eps, key)
+                        });
+                        OtProblem::unbalanced(
+                            CostSource::Shared(handle),
+                            masses[i].clone(),
+                            masses[j].clone(),
+                            lambda,
+                            eps,
+                        )
+                    })
+                    .collect();
+                for solution in api::solve_batch_with_cache(&problems, &spec, &cache) {
+                    std::hint::black_box(solution.unwrap());
+                }
+            },
+        );
+    }
+
     println!("\n{}", bencher.report("bench_sparse"));
 }

@@ -10,10 +10,9 @@
 use spar_sink::api::{self, Method, OtProblem, Solution, SolverSpec};
 use spar_sink::data::digits::random_digit;
 use spar_sink::data::synthetic::barycenter_measures;
-use spar_sink::experiments::common::normalize_cost;
 use spar_sink::experiments::fig12::ascii_render;
 use spar_sink::metrics::{l1_distance, normalized_histogram};
-use spar_sink::ot::cost::sq_euclidean_cost;
+use spar_sink::ot::cost::{normalize_cost, sq_euclidean_cost};
 use spar_sink::rng::Rng;
 
 fn q(sol: &Solution) -> &[f64] {

@@ -11,9 +11,8 @@ use std::sync::Arc;
 
 use spar_sink::api::{self, Method, OtProblem, SolverSpec};
 use spar_sink::data::images::{barycentric_map, daytime_cloud, sunset_cloud};
-use spar_sink::experiments::common::normalize_cost;
 use spar_sink::linalg::Mat;
-use spar_sink::ot::cost::{gibbs_kernel, sq_euclidean_cost};
+use spar_sink::ot::cost::{gibbs_kernel, normalize_cost, sq_euclidean_cost};
 use spar_sink::ot::sinkhorn::transport_plan;
 use spar_sink::rng::Rng;
 

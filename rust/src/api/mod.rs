@@ -14,6 +14,13 @@
 //!   [`BackendKind`](crate::solvers::backend::BackendKind) that actually
 //!   ran, iteration count, and wall time.
 //!
+//! Batched workloads go through [`solve_batch`]: dense costs are
+//! upgraded to [`CostSource::Shared`] handles over cache-resident
+//! [`CostArtifacts`](crate::engine::CostArtifacts) (content-addressed
+//! by support × η × ε × formulation), so a sweep over one support
+//! builds its cost/kernel/sampling-factor work exactly once and every
+//! warm solve is bitwise-identical to the cold path.
+//!
 //! Dispatch goes through a [`Solver`] trait + static [`registry`]
 //! (name → adapter) covering Sinkhorn/IBP, Spar-Sink (± forced
 //! log-domain), Rand-Sink, Nys-Sink (± robust clip), Greenkhorn,
@@ -45,7 +52,11 @@ pub mod registry;
 pub mod solution;
 pub mod spec;
 
+pub use crate::engine::CostHandle;
 pub use problem::{CostSource, EntryOracle, Formulation, OtProblem};
-pub use registry::{lookup, registry, solve, solve_with_rng, Solver};
+pub use registry::{
+    formulation_key, lookup, registry, share_via_cache, solve, solve_batch,
+    solve_batch_with_cache, solve_with_rng, Solver,
+};
 pub use solution::Solution;
 pub use spec::{parse_backend, Method, SolverSpec};

@@ -6,6 +6,7 @@
 use std::fmt;
 use std::sync::Arc;
 
+use crate::engine::CostHandle;
 use crate::error::{Error, Result};
 use crate::linalg::Mat;
 use crate::ot::cost::log_gibbs_from_cost;
@@ -37,6 +38,14 @@ pub enum CostSource {
         /// `−C(i, j)/ε`, which is exact for Gibbs kernels.
         log_kernel: Option<EntryOracle>,
     },
+    /// Shared, cache-resident cost/kernel artifacts
+    /// ([`crate::engine::CostArtifacts`]): many problems on one support
+    /// consume one materialization — the cost of each query drops from
+    /// "rebuild everything" to "reuse + reweight". The artifacts must
+    /// be built at the problem's ε ([`OtProblem::validate`] enforces
+    /// the bit-match); solutions are bitwise-identical to the
+    /// equivalent dense/oracle cold path.
+    Shared(CostHandle),
 }
 
 impl CostSource {
@@ -49,8 +58,9 @@ impl CostSource {
         CostSource::Oracle { rows, cols, cost: Arc::new(cost), log_kernel: None }
     }
 
-    /// Attach an exact log-kernel oracle (no-op on dense sources, whose
-    /// log-kernel is always derived from the stored cost).
+    /// Attach an exact log-kernel oracle (no-op on dense and shared
+    /// sources, whose log-kernel is always derived from the stored
+    /// cost).
     ///
     /// Scope: the sparsified solvers sample through this oracle entry by
     /// entry. The DENSE engines behind `Method::Sinkhorn` (balanced,
@@ -69,7 +79,7 @@ impl CostSource {
                 cost,
                 log_kernel: Some(Arc::new(log_kernel)),
             },
-            dense => dense,
+            dense_or_shared => dense_or_shared,
         }
     }
 
@@ -77,6 +87,7 @@ impl CostSource {
         match self {
             CostSource::Dense(m) => m.rows(),
             CostSource::Oracle { rows, .. } => *rows,
+            CostSource::Shared(h) => h.artifacts().rows(),
         }
     }
 
@@ -84,6 +95,7 @@ impl CostSource {
         match self {
             CostSource::Dense(m) => m.cols(),
             CostSource::Oracle { cols, .. } => *cols,
+            CostSource::Shared(h) => h.artifacts().cols(),
         }
     }
 
@@ -93,6 +105,7 @@ impl CostSource {
         match self {
             CostSource::Dense(m) => m.get(i, j),
             CostSource::Oracle { cost, .. } => cost(i, j),
+            CostSource::Shared(h) => h.artifacts().cost.get(i, j),
         }
     }
 
@@ -108,20 +121,29 @@ impl CostSource {
     }
 
     /// Linear kernel entry `K(i, j) = exp(ln K)` (exactly 0 for blocked
-    /// entries).
+    /// entries). Shared sources serve the materialized kernel directly
+    /// when `eps` bit-matches the artifacts' ε (the stored values are
+    /// the same `exp(−C/ε)` expression, so this is exact).
     #[inline]
     pub fn kernel_at(&self, i: usize, j: usize, eps: f64) -> f64 {
+        if let CostSource::Shared(h) = self {
+            let arts = h.artifacts();
+            if arts.eps.to_bits() == eps.to_bits() {
+                return arts.kernel.get(i, j);
+            }
+        }
         self.log_kernel_at(i, j, eps).exp()
     }
 
     /// The dense cost, materializing an oracle (O(rows·cols)); dense
-    /// sources are shared, not copied.
+    /// and shared sources are shared, not copied.
     pub fn to_mat(&self) -> Arc<Mat> {
         match self {
             CostSource::Dense(m) => m.clone(),
             CostSource::Oracle { rows, cols, cost, .. } => {
                 Arc::new(Mat::from_fn(*rows, *cols, |i, j| cost(i, j)))
             }
+            CostSource::Shared(h) => h.artifacts().cost.clone(),
         }
     }
 
@@ -130,6 +152,7 @@ impl CostSource {
         match self {
             CostSource::Dense(m) => Some(m),
             CostSource::Oracle { .. } => None,
+            CostSource::Shared(h) => Some(&h.artifacts().cost),
         }
     }
 }
@@ -145,7 +168,29 @@ impl fmt::Debug for CostSource {
                 "CostSource::Oracle({rows}x{cols}, log_kernel: {})",
                 if log_kernel.is_some() { "explicit" } else { "derived" }
             ),
+            CostSource::Shared(h) => {
+                let arts = h.artifacts();
+                write!(
+                    f,
+                    "CostSource::Shared({}x{}, eps {})",
+                    arts.rows(),
+                    arts.cols(),
+                    arts.eps
+                )
+            }
         }
+    }
+}
+
+impl From<CostHandle> for CostSource {
+    fn from(handle: CostHandle) -> Self {
+        CostSource::Shared(handle)
+    }
+}
+
+impl From<&CostHandle> for CostSource {
+    fn from(handle: &CostHandle) -> Self {
+        CostSource::Shared(handle.clone())
     }
 }
 
@@ -254,6 +299,18 @@ impl OtProblem {
         if !(self.eps.is_finite() && self.eps > 0.0) {
             return Err(Error::InvalidParam(format!("eps = {} must be positive", self.eps)));
         }
+        if let CostSource::Shared(handle) = &self.cost {
+            // The kernel-side artifacts are ε-specific; a mismatched
+            // handle would silently serve the wrong kernel statistics.
+            let built_at = handle.artifacts().eps;
+            if built_at.to_bits() != self.eps.to_bits() {
+                return Err(Error::InvalidParam(format!(
+                    "shared cost artifacts built at eps = {built_at} cannot serve a \
+                     problem at eps = {} (rebuild through the cache)",
+                    self.eps
+                )));
+            }
+        }
         let (rows, cols) = (self.cost.rows(), self.cost.cols());
         match &self.formulation {
             Formulation::Balanced | Formulation::Unbalanced { .. } => {
@@ -318,6 +375,31 @@ mod tests {
         let src = CostSource::from(&m);
         assert!(Arc::ptr_eq(&src.to_mat(), &m));
         assert_eq!(src.cost_at(1, 2), 5.0);
+    }
+
+    #[test]
+    fn shared_source_serves_cached_artifacts() {
+        use crate::engine::{CostArtifacts, CostHandle, FormulationKey};
+        let pts: Vec<Vec<f64>> = (0..6).map(|i| vec![i as f64 * 0.3]).collect();
+        let eps = 0.2;
+        let arts =
+            CostArtifacts::for_sq_euclidean_support(&pts, eps, FormulationKey::Balanced);
+        let handle = CostHandle::new(arts.clone());
+        let src = CostSource::from(&handle);
+        assert_eq!((src.rows(), src.cols()), (6, 6));
+        assert!(Arc::ptr_eq(&src.to_mat(), &arts.cost));
+        assert_eq!(src.cost_at(1, 2).to_bits(), arts.cost.get(1, 2).to_bits());
+        // Matching eps serves the materialized kernel; a mismatch falls
+        // back to the exact derived Gibbs value.
+        assert_eq!(src.kernel_at(1, 2, eps).to_bits(), arts.kernel.get(1, 2).to_bits());
+        let derived = (-arts.cost.get(1, 2) / 0.1f64).exp();
+        assert_eq!(src.kernel_at(1, 2, 0.1).to_bits(), derived.to_bits());
+        let a = vec![1.0 / 6.0; 6];
+        let ok = OtProblem::balanced(src.clone(), a.clone(), a.clone(), eps);
+        assert!(ok.validate().is_ok());
+        let mut bad = ok.clone();
+        bad.eps = 0.1;
+        assert!(matches!(bad.validate(), Err(Error::InvalidParam(_))));
     }
 
     #[test]

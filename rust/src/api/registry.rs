@@ -8,9 +8,12 @@
 
 use std::time::Instant;
 
-use super::problem::{Formulation, OtProblem};
+use super::problem::{CostSource, Formulation, OtProblem};
 use super::solution::Solution;
 use super::spec::SolverSpec;
+use crate::engine::{
+    self, ArtifactCache, CostArtifacts, Fingerprint, FormulationKey, SHARED_ARTIFACT_ENTRY_CAP,
+};
 use crate::error::{Error, Result};
 use crate::linalg::Mat;
 use crate::metrics::s0;
@@ -267,6 +270,107 @@ pub fn lookup(name: &str) -> Option<&'static dyn Solver> {
 pub fn solve(problem: &OtProblem, spec: &SolverSpec) -> Result<Solution> {
     let mut rng = Rng::seed_from(spec.seed);
     solve_with_rng(problem, spec, &mut rng)
+}
+
+/// The artifact-fingerprint component of a formulation (λ enters
+/// bit-exactly for unbalanced problems — the cost-dependent sampling
+/// factor depends on it).
+pub fn formulation_key(formulation: &Formulation) -> FormulationKey {
+    match formulation {
+        Formulation::Balanced => FormulationKey::Balanced,
+        Formulation::Unbalanced { lambda } => FormulationKey::unbalanced(*lambda),
+        Formulation::Barycenter { .. } => FormulationKey::Barycenter,
+    }
+}
+
+/// Upgrade a dense-cost problem to a [`CostSource::Shared`] handle via
+/// `cache`, so repeated solves on one cost reuse a single
+/// kernel/factor materialization. Pass-through cases (problem returned
+/// unchanged): oracle sources (un-fingerprintable without
+/// materializing), already-shared problems, grids beyond
+/// [`SHARED_ARTIFACT_ENTRY_CAP`], and RECTANGULAR dense costs — the
+/// shared solver arms resolve sketch budgets against `max(n, m)` (the
+/// distance service's convention) while the dense paper arms use
+/// `s₀(a.len())`, so upgrading a non-square problem would silently
+/// change its sketch; square problems (every paper workload this
+/// engine targets) are bitwise-unaffected.
+pub fn share_via_cache(problem: &OtProblem, cache: &ArtifactCache) -> OtProblem {
+    share_with_memo(problem, cache, &mut Vec::new())
+}
+
+/// Per-batch fingerprint memo entry: Arc identity × ε bits ×
+/// formulation key. Pointer identity is safe here because the memo
+/// never outlives the `problems` slice that keeps the Arcs alive.
+type FingerprintMemo = Vec<(*const Mat, u64, FormulationKey, Fingerprint)>;
+
+fn share_with_memo(
+    problem: &OtProblem,
+    cache: &ArtifactCache,
+    memo: &mut FingerprintMemo,
+) -> OtProblem {
+    let CostSource::Dense(cost) = &problem.cost else {
+        return problem.clone();
+    };
+    let (rows, cols) = (cost.rows(), cost.cols());
+    if rows != cols || rows * cols > SHARED_ARTIFACT_ENTRY_CAP || rows * cols == 0 {
+        return problem.clone();
+    }
+    let key = formulation_key(&problem.formulation);
+    let eps = problem.eps;
+    // Batches typically clone ONE cost Arc across slots: hash its
+    // contents once per (allocation, ε, formulation), not per slot.
+    let ptr = std::sync::Arc::as_ptr(cost);
+    let fingerprint = match memo
+        .iter()
+        .find(|(p, e, k, _)| *p == ptr && *e == eps.to_bits() && *k == key)
+    {
+        Some((_, _, _, fp)) => *fp,
+        None => {
+            let fp = Fingerprint::for_dense(cost, eps, key);
+            memo.push((ptr, eps.to_bits(), key, fp));
+            fp
+        }
+    };
+    let handle =
+        cache.get_or_build(fingerprint, || CostArtifacts::from_dense(cost.clone(), eps, key));
+    let mut shared = problem.clone();
+    shared.cost = CostSource::Shared(handle);
+    shared
+}
+
+/// Solve a batch of problems through the process-global
+/// [`ArtifactCache`](crate::engine::ArtifactCache): square dense costs
+/// are upgraded to shared artifacts (content-addressed, so problems on
+/// one support build the kernel-side work exactly once per (η, ε,
+/// formulation); see [`share_via_cache`] for the pass-through cases),
+/// then each problem dispatches through [`solve`].
+///
+/// Problem `i` is seeded with `spec.seed + i` (wrapping), so a batch of
+/// N clones of one problem is an N-replicate sweep and
+/// `solve_batch(&[p], spec)[0]` is bitwise-identical to
+/// `solve(&p, spec)`. Per-problem failures come back as per-slot `Err`
+/// without failing the batch.
+pub fn solve_batch(problems: &[OtProblem], spec: &SolverSpec) -> Vec<Result<Solution>> {
+    solve_batch_with_cache(problems, spec, engine::global_cache())
+}
+
+/// [`solve_batch`] against a caller-owned cache (isolated counters —
+/// what the tests and benches use).
+pub fn solve_batch_with_cache(
+    problems: &[OtProblem],
+    spec: &SolverSpec,
+    cache: &ArtifactCache,
+) -> Vec<Result<Solution>> {
+    let mut memo: FingerprintMemo = Vec::new();
+    problems
+        .iter()
+        .enumerate()
+        .map(|(i, problem)| {
+            let shared = share_with_memo(problem, cache, &mut memo);
+            let spec_i = spec.clone().with_seed(spec.seed.wrapping_add(i as u64));
+            solve(&shared, &spec_i)
+        })
+        .collect()
 }
 
 /// [`solve`] with an external RNG — for replication sweeps that thread

@@ -69,8 +69,17 @@ pub fn usage() -> String {
        experiment <id|all> [--full] [--out results/]   regenerate a paper figure/table\n\
        solve --problem ot|uot|barycenter [--n N] [--eps E] [--lambda L]\n\
              [--method M] [--backend B] [--seed S]     one-off synthetic solve\n\
+             (dispatches through api::solve_batch — the dense cost is\n\
+             upgraded to a shared artifact in the global cache, so the\n\
+             exact reference and the approx run share one kernel build)\n\
        serve [--videos V] [--frames F] [--workers W] [--method M] [--eps E]\n\
-             [--backend B]                             run the batched WFR distance service\n\
+             [--backend B] [--threshold T] [--shared-grid]\n\
+             run the batched WFR distance service; --shared-grid keeps\n\
+             every frame on the full pixel grid so all pairwise jobs\n\
+             share one support and the coordinator's artifact cache\n\
+             builds cost/kernel once per (eta, eps) — cache hit/miss\n\
+             gauges are reported in the final metrics; --threshold T\n\
+             (default 0.05) is the per-frame support cutoff otherwise\n\
        runtime-info                                    PJRT platform + artifact menu (xla feature)\n\
        list                                            list available experiments\n\
      \n\

@@ -4,6 +4,8 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
+use crate::engine::CacheStats;
+
 /// Log-spaced latency buckets from 10 µs up: 32 log₂ buckets, so the
 /// last one starts at 10 µs · 2³¹ ≈ 2×10⁴ s (anything slower clamps
 /// into it).
@@ -119,6 +121,11 @@ pub struct MetricsSnapshot {
     pub log_escalations: Vec<(&'static str, u64)>,
     /// Gauge: escalated jobs / completed jobs.
     pub log_escalation_rate: f64,
+    /// Shared-cost artifact cache counters/gauges: hits, misses,
+    /// evictions, resident entries/bytes, byte budget. A pairwise run
+    /// over T frames on one shared support shows exactly one miss per
+    /// (η, ε, formulation) and hits for every other job.
+    pub cache: CacheStats,
 }
 
 impl MetricsSnapshot {
@@ -136,7 +143,8 @@ impl MetricsSnapshot {
             "jobs: {} submitted / {} completed / {} failed in {} batches\n\
              latency: mean {:.1?}  p50 {:.1?}  p99 {:.1?}  max {:.1?}\n\
              throughput: {:.2} jobs/s\n\
-             log-domain escalations: {} (rate {:.3})",
+             log-domain escalations: {} (rate {:.3})\n\
+             artifact cache: {}",
             self.submitted,
             self.completed,
             self.failed,
@@ -147,7 +155,8 @@ impl MetricsSnapshot {
             self.max_latency,
             self.throughput,
             escalations,
-            self.log_escalation_rate
+            self.log_escalation_rate,
+            self.cache.render()
         )
     }
 }

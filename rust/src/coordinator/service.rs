@@ -23,6 +23,9 @@ use super::jobs::{
 };
 use super::metrics::{LatencyHistogram, MetricsSnapshot};
 use crate::api::{self, CostSource, EntryOracle, Formulation, OtProblem, SolverSpec};
+use crate::engine::{
+    ArtifactCache, CostArtifacts, Fingerprint, FormulationKey, SHARED_ARTIFACT_ENTRY_CAP,
+};
 use crate::error::{Error, Result};
 use crate::ot::cost::{euclidean, log_gibbs_from_cost, sq_euclidean, wfr_cost_from_distance};
 use crate::ot::uot::wfr_distance_from_objective;
@@ -41,6 +44,11 @@ pub struct CoordinatorConfig {
     pub max_batch: usize,
     /// …or after this window since the first queued job.
     pub batch_window: Duration,
+    /// Byte budget of the shared-cost artifact cache (LRU): pairwise
+    /// jobs on one support build their cost/kernel/sampling-factor
+    /// artifacts once per (η, ε, formulation) and reuse them across the
+    /// batch.
+    pub cache_bytes: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -50,6 +58,7 @@ impl Default for CoordinatorConfig {
             queue_cap: 256,
             max_batch: 16,
             batch_window: Duration::from_millis(5),
+            cache_bytes: crate::engine::DEFAULT_CACHE_BYTES,
         }
     }
 }
@@ -119,6 +128,9 @@ struct Shared {
     latency: LatencyHistogram,
     started: Instant,
     stopping: AtomicBool,
+    /// Shared-cost artifact cache (content-addressed, byte-budget LRU);
+    /// workers of both job shapes resolve their geometry through it.
+    cache: ArtifactCache,
 }
 
 /// The batched WFR-distance service.
@@ -144,6 +156,7 @@ impl DistanceService {
             latency: LatencyHistogram::new(),
             started: Instant::now(),
             stopping: AtomicBool::new(false),
+            cache: ArtifactCache::new(config.cache_bytes),
         });
 
         // Batcher: collect jobs until max_batch or batch_window, group by
@@ -256,6 +269,7 @@ impl DistanceService {
             throughput: completed as f64 / elapsed,
             log_escalations,
             log_escalation_rate: escalated as f64 / completed.max(1) as f64,
+            cache: s.cache.stats(),
         }
     }
 
@@ -380,7 +394,7 @@ fn run_batch(batch: Batch, shared: &Arc<Shared>) {
         let (method, forced_log) = (queued.method(), queued.forces_log_domain());
         match queued {
             QueuedJob::Distance { job, enqueued, respond } => {
-                let result = solve_job(&job, batch_id, enqueued);
+                let result = solve_job(&job, batch_id, enqueued, &shared.cache);
                 record_outcome(
                     shared,
                     method,
@@ -392,7 +406,7 @@ fn run_batch(batch: Batch, shared: &Arc<Shared>) {
                 let _ = respond.send(result);
             }
             QueuedJob::Barycenter { job, enqueued, respond } => {
-                let result = solve_barycenter_job(job, batch_id, enqueued);
+                let result = solve_barycenter_job(job, batch_id, enqueued, &shared.cache);
                 record_outcome(
                     shared,
                     method,
@@ -409,32 +423,64 @@ fn run_batch(batch: Batch, shared: &Arc<Shared>) {
 
 /// Express one WFR-distance job as an [`OtProblem`] + [`SolverSpec`]
 /// and dispatch it through `api::solve` — the single method-agnostic
-/// solver surface. Kernel and cost are exposed as oracles, never
-/// materialized densely for the sparsified methods.
-fn solve_job(job: &DistanceJob, batch_id: u64, enqueued: Instant) -> DistanceResult {
+/// solver surface.
+///
+/// Jobs whose grid fits [`SHARED_ARTIFACT_ENTRY_CAP`] resolve their
+/// geometry through the service's [`ArtifactCache`]: the WFR cost, the
+/// Gibbs kernel and the cost-dependent sampling factor are built once
+/// per (support pair, η, ε, λ) and every other job on the same
+/// fingerprint is a cache hit ("reuse + reweight"). Warm solutions are
+/// bitwise-identical to the oracle cold path, which oversized jobs keep
+/// (kernel and cost stay entry oracles, never materialized densely).
+fn solve_job(
+    job: &DistanceJob,
+    batch_id: u64,
+    enqueued: Instant,
+    cache: &ArtifactCache,
+) -> DistanceResult {
     let spec = &job.spec;
     let (eta, eps) = (spec.eta, spec.eps);
-    let src = job.source.points.clone();
-    let tgt = job.target.points.clone();
-    let cost: EntryOracle = Arc::new(move |i: usize, j: usize| {
-        wfr_cost_from_distance(euclidean(&src[i], &tgt[j]), eta)
-    });
-    // Log-kernel oracle for the sparsified arms: the WFR cost is finite
-    // below the π·η cutoff, so `−C/ε` stays finite where the linear
-    // kernel underflows at small ε. Sampling through it keeps every
-    // selected entry usable by the log-domain backend — a sketch built
-    // from the linear oracle would silently DROP underflowed entries,
-    // and no later escalation could recover them.
-    let cost_for_lk = cost.clone();
-    let log_kernel: EntryOracle =
-        Arc::new(move |i: usize, j: usize| log_gibbs_from_cost(cost_for_lk(i, j), eps));
+    let (rows, cols) = (job.source.len(), job.target.len());
+    let cost_source = if rows * cols > 0 && rows * cols <= SHARED_ARTIFACT_ENTRY_CAP {
+        let key = FormulationKey::unbalanced(spec.lambda);
+        let fingerprint = Fingerprint::for_supports(
+            &job.source.points,
+            &job.target.points,
+            Some(eta),
+            eps,
+            key,
+        );
+        let handle = cache.get_or_build(fingerprint, || {
+            CostArtifacts::for_wfr_supports(
+                &job.source.points,
+                &job.target.points,
+                eta,
+                eps,
+                key,
+            )
+        });
+        CostSource::Shared(handle)
+    } else {
+        let src = job.source.points.clone();
+        let tgt = job.target.points.clone();
+        let cost: EntryOracle = Arc::new(move |i: usize, j: usize| {
+            wfr_cost_from_distance(euclidean(&src[i], &tgt[j]), eta)
+        });
+        // Log-kernel oracle for the sparsified arms: the WFR cost is
+        // finite below the π·η cutoff, so `−C/ε` stays finite where the
+        // linear kernel underflows at small ε. Sampling through it keeps
+        // every selected entry usable by the log-domain backend — a
+        // sketch built from the linear oracle would silently DROP
+        // underflowed entries, and no later escalation could recover
+        // them. (The shared-artifact path derives the same `−C/ε` from
+        // the cached cost matrix.)
+        let cost_for_lk = cost.clone();
+        let log_kernel: EntryOracle =
+            Arc::new(move |i: usize, j: usize| log_gibbs_from_cost(cost_for_lk(i, j), eps));
+        CostSource::Oracle { rows, cols, cost, log_kernel: Some(log_kernel) }
+    };
     let problem = OtProblem {
-        cost: CostSource::Oracle {
-            rows: job.source.len(),
-            cols: job.target.len(),
-            cost,
-            log_kernel: Some(log_kernel),
-        },
+        cost: cost_source,
         a: job.source.mass.clone(),
         b: job.target.mass.clone(),
         eps,
@@ -485,17 +531,36 @@ fn solver_spec_for(method: Method, spec: &ProblemSpec, seed: u64) -> SolverSpec 
 
 /// Express one barycenter job as a barycenter [`OtProblem`] over the
 /// shared support's squared-Euclidean ground cost and dispatch it
-/// through `api::solve`, exactly like the distance path. The cost stays
-/// an entry oracle, so the sparsified method samples it without
-/// materializing n² entries; the job is consumed so its histograms move
-/// into the problem instead of being copied per solve.
-fn solve_barycenter_job(job: BarycenterJob, batch_id: u64, enqueued: Instant) -> BarycenterResult {
+/// through `api::solve`, exactly like the distance path. Jobs fitting
+/// the artifact cap share one cached cost materialization per
+/// (support, ε) — the Spar-IBP sampler otherwise re-derives the ground
+/// cost per (kernel, entry); oversized jobs keep the entry oracle. The
+/// job is consumed so its histograms move into the problem instead of
+/// being copied per solve.
+fn solve_barycenter_job(
+    job: BarycenterJob,
+    batch_id: u64,
+    enqueued: Instant,
+    cache: &ArtifactCache,
+) -> BarycenterResult {
     let BarycenterJob { id, support, marginals, weights, method, spec, seed } = job;
     let n = support.len();
-    let cost: EntryOracle =
-        Arc::new(move |i: usize, j: usize| sq_euclidean(&support[i], &support[j]));
+    let cost_source = if n > 0 && n * n <= SHARED_ARTIFACT_ENTRY_CAP {
+        let key = FormulationKey::Barycenter;
+        let fingerprint =
+            Fingerprint::for_supports(&support, &support, None, spec.eps, key);
+        let handle = cache.get_or_build(fingerprint, || {
+            CostArtifacts::for_sq_euclidean_support(&support, spec.eps, key)
+        });
+        CostSource::Shared(handle)
+    } else {
+        let support = support.clone();
+        let cost: EntryOracle =
+            Arc::new(move |i: usize, j: usize| sq_euclidean(&support[i], &support[j]));
+        CostSource::Oracle { rows: n, cols: n, cost, log_kernel: None }
+    };
     let problem = OtProblem {
-        cost: CostSource::Oracle { rows: n, cols: n, cost, log_kernel: None },
+        cost: cost_source,
         a: Arc::new(Vec::new()),
         b: Arc::new(Vec::new()),
         eps: spec.eps,
@@ -870,6 +935,114 @@ mod tests {
         assert!(results[0].error.is_some() || results[0].distance.is_nan() || results[0].distance >= 0.0);
         let m = service.shutdown();
         assert_eq!(m.submitted, 1);
+    }
+
+    #[test]
+    fn shared_support_pairwise_run_builds_artifacts_once() {
+        // The acceptance bar: a pairwise distance-matrix run over >= 10
+        // frames on ONE shared support constructs cost/kernel artifacts
+        // exactly once per (eta, eps) — every other job is a cache hit.
+        let frames = 12;
+        let n = 36;
+        let support: Arc<Vec<Vec<f64>>> =
+            Arc::new((0..n).map(|k| vec![(k % 6) as f64, (k / 6) as f64]).collect());
+        let measures: Vec<Measure> = (0..frames)
+            .map(|f| {
+                let mut rng = Rng::seed_from(500 + f as u64);
+                let mut mass: Vec<f64> = (0..n).map(|_| rng.uniform() + 0.05).collect();
+                let s: f64 = mass.iter().sum();
+                mass.iter_mut().for_each(|x| *x /= s);
+                Measure { points: support.clone(), mass: Arc::new(mass) }
+            })
+            .collect();
+        let mut jobs = Vec::new();
+        let mut id = 0u64;
+        for i in 0..frames {
+            for j in (i + 1)..frames {
+                jobs.push(DistanceJob {
+                    id,
+                    source: measures[i].clone(),
+                    target: measures[j].clone(),
+                    method: Method::SparSink,
+                    spec: ProblemSpec { eta: 3.0, eps: 0.05, ..Default::default() },
+                    seed: 100 + id,
+                });
+                id += 1;
+            }
+        }
+        let total = jobs.len() as u64; // 66 pairs
+        let service = DistanceService::start(CoordinatorConfig {
+            workers: 4,
+            ..Default::default()
+        });
+        let results = service.submit_all(jobs).unwrap();
+        for r in &results {
+            assert!(r.error.is_none(), "job {}: {:?}", r.id, r.error);
+            assert!(r.distance.is_finite() && r.distance >= 0.0);
+        }
+        let m = service.shutdown();
+        assert_eq!(m.completed, total);
+        assert_eq!(m.cache.misses, 1, "one build per (support, eta, eps): {:?}", m.cache);
+        assert_eq!(m.cache.hits, total - 1, "{:?}", m.cache);
+        assert_eq!(m.cache.evictions, 0);
+        assert_eq!(m.cache.entries, 1);
+        assert!(m.cache.bytes > 0 && m.cache.bytes <= m.cache.byte_budget);
+        assert!(m.render().contains("artifact cache"));
+    }
+
+    #[test]
+    fn distinct_eps_builds_distinct_artifacts() {
+        // Two (eta, eps) combos over one support: exactly two misses.
+        let n = 25;
+        let support: Arc<Vec<Vec<f64>>> =
+            Arc::new((0..n).map(|k| vec![(k % 5) as f64, (k / 5) as f64]).collect());
+        let measure = |seed: u64| {
+            let mut rng = Rng::seed_from(seed);
+            let mut mass: Vec<f64> = (0..n).map(|_| rng.uniform() + 0.05).collect();
+            let s: f64 = mass.iter().sum();
+            mass.iter_mut().for_each(|x| *x /= s);
+            Measure { points: support.clone(), mass: Arc::new(mass) }
+        };
+        let mut jobs = Vec::new();
+        for (id, eps) in [(0u64, 0.05), (1, 0.05), (2, 0.1), (3, 0.1)] {
+            jobs.push(DistanceJob {
+                id,
+                source: measure(10 + id),
+                target: measure(20 + id),
+                method: Method::SparSink,
+                spec: ProblemSpec { eta: 3.0, eps, ..Default::default() },
+                seed: id,
+            });
+        }
+        let service = DistanceService::start(CoordinatorConfig {
+            workers: 1,
+            ..Default::default()
+        });
+        let results = service.submit_all(jobs).unwrap();
+        assert!(results.iter().all(|r| r.error.is_none()), "{results:?}");
+        let m = service.shutdown();
+        assert_eq!(m.cache.misses, 2, "{:?}", m.cache);
+        assert_eq!(m.cache.hits, 2, "{:?}", m.cache);
+    }
+
+    #[test]
+    fn barycenter_jobs_share_support_artifacts() {
+        // Several barycenter jobs on one support: one artifact build.
+        let service = DistanceService::start(CoordinatorConfig {
+            workers: 2,
+            ..Default::default()
+        });
+        let results = service
+            .submit_all_barycenters(vec![
+                bary_job(0, Method::SparIbp, 0.01, None),
+                bary_job(1, Method::SparIbp, 0.01, None),
+                bary_job(2, Method::Sinkhorn, 0.01, None),
+            ])
+            .unwrap();
+        assert!(results.iter().all(|r| r.error.is_none()), "{results:?}");
+        let m = service.shutdown();
+        assert_eq!(m.cache.misses, 1, "{:?}", m.cache);
+        assert_eq!(m.cache.hits, 2, "{:?}", m.cache);
     }
 
     #[test]

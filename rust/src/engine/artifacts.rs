@@ -1,0 +1,510 @@
+//! Shared-cost artifacts: everything derivable from a support pair and
+//! the regularization knobs (η, ε, formulation) that does NOT depend on
+//! per-job marginals, materialized once and reused across a batch.
+//!
+//! The echocardiogram workload (paper §5, Figs. 11–12) computes O(T²)
+//! pairwise UOT distances between frames living on one pixel grid: the
+//! WFR cost, the Gibbs kernel, and the cost-dependent factor of the
+//! Spar-Sink sampling probabilities are identical for every pair, and
+//! only the marginal factor changes per job. [`CostArtifacts`] captures
+//! the amortizable part:
+//!
+//! * the dense ground cost (WFR or squared-Euclidean);
+//! * the linear Gibbs kernel `K = exp(−C/ε)`, plus its row/column sums
+//!   and Frobenius norm as LAZILY-computed kernel-side statistics
+//!   (available to kernel-aware sampling extensions and diagnostics;
+//!   they cost nothing until first accessed);
+//! * for unbalanced formulations, the cost-dependent factor `β·ln K` of
+//!   the Eq. 11 importance probability
+//!   `p_ij ∝ (a_i b_j)^α K_ij^β` — the per-job residual is the cheap
+//!   marginal factor `α(ln a_i + ln b_j)` (see
+//!   [`poisson_sparsify_uot_logk_amortized`](crate::sparse::sampling::poisson_sparsify_uot_logk_amortized));
+//! * the WFR truncation radius η used (optionally calibrated to a
+//!   target kernel density via [`CostArtifacts::for_wfr_supports_at_density`]).
+//!
+//! Artifacts are content-addressed by a [`Fingerprint`] — a 128-bit
+//! support hash × η × ε × formulation — so two different supports (or
+//! the same support at different knobs) never alias in the
+//! [`ArtifactCache`](super::ArtifactCache).
+
+use std::sync::{Arc, OnceLock};
+
+use crate::linalg::{dot, Mat};
+use crate::ot::cost::{calibrate_eta, gibbs_kernel, log_gibbs_from_cost, sq_euclidean_cost, wfr_cost};
+use crate::pool;
+
+/// Largest `rows × cols` grid routed through the artifact engine: above
+/// this the dense cost/kernel materialization would dominate memory, so
+/// callers (coordinator, `solve_batch`) keep the oracle cold path.
+/// Aliases the samplers' [`MATERIALIZE_CAP`](crate::sparse::sampling::MATERIALIZE_CAP)
+/// so the two memory policies cannot drift apart.
+pub const SHARED_ARTIFACT_ENTRY_CAP: usize = crate::sparse::sampling::MATERIALIZE_CAP;
+
+/// Formulation component of a [`Fingerprint`]. λ enters bit-exactly:
+/// the unbalanced sampling factor `β·ln K` depends on it.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum FormulationKey {
+    Balanced,
+    Unbalanced { lambda_bits: u64 },
+    Barycenter,
+}
+
+impl FormulationKey {
+    /// Key for an unbalanced formulation with relaxation strength λ.
+    pub fn unbalanced(lambda: f64) -> Self {
+        FormulationKey::Unbalanced { lambda_bits: lambda.to_bits() }
+    }
+}
+
+/// Content address of one [`CostArtifacts`]: support hash (128-bit, two
+/// independent streams) × dimensions × η × ε × formulation. Equal
+/// fingerprints ⇒ bitwise-identical artifacts; different supports get
+/// different fingerprints (up to the 128-bit collision bound).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct Fingerprint {
+    support: [u64; 2],
+    rows: u64,
+    cols: u64,
+    /// `η.to_bits()`, or `None` for non-WFR (squared-Euclidean / dense)
+    /// costs.
+    eta_bits: Option<u64>,
+    eps_bits: u64,
+    formulation: FormulationKey,
+}
+
+/// Two independent 64-bit streams over the same input: FNV-1a plus a
+/// multiply-rotate mix. Not cryptographic — the cache is trusted-input
+/// — but 128 bits make accidental support collisions negligible.
+struct Hash128 {
+    h1: u64,
+    h2: u64,
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+impl Hash128 {
+    fn new() -> Self {
+        Hash128 { h1: FNV_OFFSET, h2: FNV_OFFSET ^ 0x9e37_79b9_7f4a_7c15 }
+    }
+
+    fn write_u64(&mut self, v: u64) {
+        for byte in v.to_le_bytes() {
+            self.h1 = (self.h1 ^ u64::from(byte)).wrapping_mul(FNV_PRIME);
+        }
+        self.h2 = (self.h2 ^ v)
+            .wrapping_mul(0x2545_f491_4f6c_dd1d)
+            .rotate_left(27)
+            .wrapping_add(0x9e37_79b9_7f4a_7c15);
+    }
+
+    fn write_f64(&mut self, v: f64) {
+        self.write_u64(v.to_bits());
+    }
+
+    fn finish(self) -> [u64; 2] {
+        [self.h1, self.h2]
+    }
+}
+
+fn hash_points(h: &mut Hash128, pts: &[Vec<f64>]) {
+    h.write_u64(pts.len() as u64);
+    for p in pts {
+        h.write_u64(p.len() as u64);
+        for &x in p {
+            h.write_f64(x);
+        }
+    }
+}
+
+impl Fingerprint {
+    /// Fingerprint of a support pair (the coordinator's job shape):
+    /// hashes both point sets, so two jobs share artifacts exactly when
+    /// source AND target supports are bit-identical.
+    pub fn for_supports(
+        xs: &[Vec<f64>],
+        ys: &[Vec<f64>],
+        eta: Option<f64>,
+        eps: f64,
+        formulation: FormulationKey,
+    ) -> Fingerprint {
+        let mut h = Hash128::new();
+        h.write_u64(0x5355_5050); // "SUPP" domain separator
+        hash_points(&mut h, xs);
+        h.write_u64(0x2f2f); // xs/ys separator
+        hash_points(&mut h, ys);
+        Fingerprint {
+            support: h.finish(),
+            rows: xs.len() as u64,
+            cols: ys.len() as u64,
+            eta_bits: eta.map(f64::to_bits),
+            eps_bits: eps.to_bits(),
+            formulation,
+        }
+    }
+
+    /// Fingerprint of an already-materialized dense cost (the
+    /// `solve_batch` upgrade path): hashes the matrix contents, so two
+    /// problems share artifacts exactly when their costs are
+    /// bit-identical.
+    pub fn for_dense(cost: &Mat, eps: f64, formulation: FormulationKey) -> Fingerprint {
+        let mut h = Hash128::new();
+        h.write_u64(0x4445_4e53); // "DENS" domain separator
+        h.write_u64(cost.rows() as u64);
+        h.write_u64(cost.cols() as u64);
+        for &c in cost.as_slice() {
+            h.write_f64(c);
+        }
+        Fingerprint {
+            support: h.finish(),
+            rows: cost.rows() as u64,
+            cols: cost.cols() as u64,
+            eta_bits: None,
+            eps_bits: eps.to_bits(),
+            formulation,
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows as usize
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols as usize
+    }
+}
+
+/// The amortizable cost-dependent factor of the unbalanced (Eq. 11)
+/// importance probability `p_ij ∝ (a_i b_j)^α K_ij^β` in the log
+/// domain: `β·ln K̃_ij` per entry, with `NaN` marking blocked entries
+/// (`K = 0`). Per job only the marginal factor `α(ln a_i + ln b_j)`
+/// remains — O(n + m) instead of O(n·m) transcendental work.
+#[derive(Clone, Debug)]
+pub struct UotLogFactor {
+    /// Marginal relaxation λ this factor was built for (bit-matched at
+    /// consumption time).
+    pub lambda: f64,
+    /// `α = λ / (2λ + ε)`.
+    pub alpha: f64,
+    /// `β = ε / (2λ + ε)`.
+    pub beta: f64,
+    /// `β·ln K` per entry, row-major `rows × cols`; `NaN` = blocked.
+    pub beta_log_kernel: Arc<Vec<f64>>,
+}
+
+/// Shared cost/kernel artifacts for one fingerprint. See the module
+/// docs for what is amortized; construction is O(n·m) once, after which
+/// every consumer is "reuse + reweight".
+pub struct CostArtifacts {
+    fingerprint: Fingerprint,
+    /// Regularization ε the kernel-side artifacts were built at.
+    pub eps: f64,
+    /// WFR truncation radius η, when the cost is a WFR cost.
+    pub eta: Option<f64>,
+    /// Dense ground cost (`∞` = blocked transport).
+    pub cost: Arc<Mat>,
+    /// Linear Gibbs kernel `exp(−C/ε)` (blocked entries exactly 0) —
+    /// bitwise identical to what the entry oracles derive, so warm
+    /// solves reproduce cold solves exactly.
+    pub kernel: Arc<Mat>,
+    /// Lazily computed kernel row sums (see
+    /// [`CostArtifacts::kernel_row_sums`]).
+    row_sums: OnceLock<Vec<f64>>,
+    /// Lazily computed kernel column sums.
+    col_sums: OnceLock<Vec<f64>>,
+    /// Lazily computed kernel Frobenius norm.
+    frob_norm: OnceLock<f64>,
+    /// Cost-dependent unbalanced sampling factor (unbalanced
+    /// fingerprints only).
+    pub uot_factor: Option<UotLogFactor>,
+}
+
+impl CostArtifacts {
+    /// Build from an already-materialized dense cost (shared, not
+    /// copied). The `solve_batch` upgrade path.
+    pub fn from_dense(cost: Arc<Mat>, eps: f64, formulation: FormulationKey) -> Arc<Self> {
+        let fingerprint = Fingerprint::for_dense(&cost, eps, formulation);
+        Self::build(fingerprint, cost, None, eps, formulation)
+    }
+
+    /// Build WFR-cost artifacts for a support pair (the coordinator's
+    /// distance-job shape).
+    pub fn for_wfr_supports(
+        xs: &[Vec<f64>],
+        ys: &[Vec<f64>],
+        eta: f64,
+        eps: f64,
+        formulation: FormulationKey,
+    ) -> Arc<Self> {
+        let fingerprint = Fingerprint::for_supports(xs, ys, Some(eta), eps, formulation);
+        let cost = Arc::new(wfr_cost(xs, ys, eta));
+        Self::build(fingerprint, cost, Some(eta), eps, formulation)
+    }
+
+    /// [`CostArtifacts::for_wfr_supports`] with η calibrated so the WFR
+    /// kernel hits a target density (the paper's R1–R3 regimes).
+    pub fn for_wfr_supports_at_density(
+        xs: &[Vec<f64>],
+        ys: &[Vec<f64>],
+        target_density: f64,
+        eps: f64,
+        formulation: FormulationKey,
+    ) -> Arc<Self> {
+        let eta = calibrate_eta(xs, ys, target_density, 1e-3);
+        Self::for_wfr_supports(xs, ys, eta, eps, formulation)
+    }
+
+    /// Build squared-Euclidean artifacts on one shared support (the
+    /// coordinator's barycenter-job shape).
+    pub fn for_sq_euclidean_support(
+        points: &[Vec<f64>],
+        eps: f64,
+        formulation: FormulationKey,
+    ) -> Arc<Self> {
+        let fingerprint = Fingerprint::for_supports(points, points, None, eps, formulation);
+        let cost = Arc::new(sq_euclidean_cost(points, points));
+        Self::build(fingerprint, cost, None, eps, formulation)
+    }
+
+    fn build(
+        fingerprint: Fingerprint,
+        cost: Arc<Mat>,
+        eta: Option<f64>,
+        eps: f64,
+        formulation: FormulationKey,
+    ) -> Arc<Self> {
+        let kernel = Arc::new(gibbs_kernel(&cost, eps));
+        let uot_factor = match formulation {
+            FormulationKey::Unbalanced { lambda_bits } => {
+                let lambda = f64::from_bits(lambda_bits);
+                // Same α/β arithmetic as the cold sampler, so the
+                // composed log-weights are bitwise identical.
+                let alpha = lambda / (2.0 * lambda + eps);
+                let beta = eps / (2.0 * lambda + eps);
+                let (n, m) = (cost.rows(), cost.cols());
+                let cost_ref = &cost;
+                let beta_log_kernel: Vec<f64> = pool::parallel_map(n * m, |idx| {
+                    let lk = log_gibbs_from_cost(cost_ref.get(idx / m, idx % m), eps);
+                    if lk == f64::NEG_INFINITY {
+                        f64::NAN
+                    } else {
+                        beta * lk
+                    }
+                });
+                Some(UotLogFactor {
+                    lambda,
+                    alpha,
+                    beta,
+                    beta_log_kernel: Arc::new(beta_log_kernel),
+                })
+            }
+            _ => None,
+        };
+        Arc::new(CostArtifacts {
+            fingerprint,
+            eps,
+            eta,
+            cost,
+            kernel,
+            row_sums: OnceLock::new(),
+            col_sums: OnceLock::new(),
+            frob_norm: OnceLock::new(),
+            uot_factor,
+        })
+    }
+
+    /// Kernel row sums `K·1` — kernel-side statistics for kernel-aware
+    /// sampling extensions and diagnostics, computed on first access
+    /// and cached for the artifact's lifetime.
+    pub fn kernel_row_sums(&self) -> &[f64] {
+        self.row_sums.get_or_init(|| self.kernel.row_sums())
+    }
+
+    /// Kernel column sums `Kᵀ·1` (lazy, like
+    /// [`CostArtifacts::kernel_row_sums`]).
+    pub fn kernel_col_sums(&self) -> &[f64] {
+        self.col_sums.get_or_init(|| self.kernel.col_sums())
+    }
+
+    /// Kernel Frobenius norm `‖K‖_F` (lazy).
+    pub fn kernel_frob_norm(&self) -> f64 {
+        *self
+            .frob_norm
+            .get_or_init(|| dot(self.kernel.as_slice(), self.kernel.as_slice()).sqrt())
+    }
+
+    pub fn fingerprint(&self) -> Fingerprint {
+        self.fingerprint
+    }
+
+    pub fn rows(&self) -> usize {
+        self.cost.rows()
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cost.cols()
+    }
+
+    /// Exact log-Gibbs entry `ln K = −C/ε` at the artifact's own ε
+    /// (−∞ = blocked) — the oracle the samplers consume.
+    #[inline]
+    pub fn log_kernel_at(&self, i: usize, j: usize) -> f64 {
+        log_gibbs_from_cost(self.cost.get(i, j), self.eps)
+    }
+
+    /// Whether the kernel is identically zero (fully blocked/underflowed
+    /// — no linear-domain solve can make progress on it).
+    pub fn kernel_is_empty(&self) -> bool {
+        self.kernel_frob_norm() == 0.0
+    }
+
+    /// Resident size in bytes (the LRU accounting unit): the O(n·m)
+    /// parts — cost + kernel + the optional unbalanced factor. The lazy
+    /// O(n + m) statistics are accounting noise and excluded so the
+    /// figure is stable whether or not they have materialized.
+    pub fn bytes(&self) -> usize {
+        let grid = self.cost.rows() * self.cost.cols();
+        let factor = self
+            .uot_factor
+            .as_ref()
+            .map_or(0, |f| f.beta_log_kernel.len());
+        (2 * grid + factor) * std::mem::size_of::<f64>()
+    }
+}
+
+impl std::fmt::Debug for CostArtifacts {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "CostArtifacts({}x{}, eps {}, eta {:?}, uot_factor {}, {} B)",
+            self.rows(),
+            self.cols(),
+            self.eps,
+            self.eta,
+            self.uot_factor.is_some(),
+            self.bytes()
+        )
+    }
+}
+
+/// A cheap, clonable handle to cache-resident [`CostArtifacts`] — the
+/// payload of [`CostSource::Shared`](crate::api::CostSource::Shared).
+#[derive(Clone)]
+pub struct CostHandle(Arc<CostArtifacts>);
+
+impl CostHandle {
+    pub fn new(artifacts: Arc<CostArtifacts>) -> Self {
+        CostHandle(artifacts)
+    }
+
+    pub fn artifacts(&self) -> &CostArtifacts {
+        &self.0
+    }
+
+    /// The underlying shared artifacts.
+    pub fn share(&self) -> Arc<CostArtifacts> {
+        self.0.clone()
+    }
+}
+
+impl std::fmt::Debug for CostHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "CostHandle({:?})", self.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pts(n: usize, seed: u64) -> Vec<Vec<f64>> {
+        let mut rng = crate::rng::Rng::seed_from(seed);
+        (0..n).map(|_| vec![rng.uniform() * 5.0, rng.uniform() * 5.0]).collect()
+    }
+
+    #[test]
+    fn fingerprint_separates_supports_and_knobs() {
+        let a = pts(12, 1);
+        let b = pts(12, 2);
+        let key = FormulationKey::unbalanced(1.0);
+        let base = Fingerprint::for_supports(&a, &a, Some(3.0), 0.05, key);
+        assert_eq!(base, Fingerprint::for_supports(&a, &a, Some(3.0), 0.05, key));
+        assert_ne!(base, Fingerprint::for_supports(&a, &b, Some(3.0), 0.05, key));
+        assert_ne!(base, Fingerprint::for_supports(&b, &a, Some(3.0), 0.05, key));
+        assert_ne!(base, Fingerprint::for_supports(&a, &a, Some(3.1), 0.05, key));
+        assert_ne!(base, Fingerprint::for_supports(&a, &a, None, 0.05, key));
+        assert_ne!(base, Fingerprint::for_supports(&a, &a, Some(3.0), 0.06, key));
+        assert_ne!(
+            base,
+            Fingerprint::for_supports(&a, &a, Some(3.0), 0.05, FormulationKey::unbalanced(2.0))
+        );
+        assert_ne!(
+            base,
+            Fingerprint::for_supports(&a, &a, Some(3.0), 0.05, FormulationKey::Balanced)
+        );
+    }
+
+    #[test]
+    fn fingerprint_sensitive_to_single_ulp() {
+        let a = pts(8, 3);
+        let mut b = a.clone();
+        b[4][1] = f64::from_bits(b[4][1].to_bits() + 1);
+        let key = FormulationKey::Balanced;
+        assert_ne!(
+            Fingerprint::for_supports(&a, &a, None, 0.1, key),
+            Fingerprint::for_supports(&b, &b, None, 0.1, key)
+        );
+    }
+
+    #[test]
+    fn wfr_artifacts_match_cold_oracles_bitwise() {
+        let xs = pts(10, 5);
+        let ys = pts(9, 6);
+        let (eta, eps) = (2.5, 0.05);
+        let arts =
+            CostArtifacts::for_wfr_supports(&xs, &ys, eta, eps, FormulationKey::unbalanced(1.0));
+        assert_eq!(arts.rows(), 10);
+        assert_eq!(arts.cols(), 9);
+        let factor = arts.uot_factor.as_ref().expect("unbalanced factor");
+        for i in 0..10 {
+            for j in 0..9 {
+                let c = crate::ot::cost::wfr_cost_from_distance(
+                    crate::ot::cost::euclidean(&xs[i], &ys[j]),
+                    eta,
+                );
+                assert_eq!(arts.cost.get(i, j).to_bits(), c.to_bits());
+                let lk = log_gibbs_from_cost(c, eps);
+                assert_eq!(arts.log_kernel_at(i, j).to_bits(), lk.to_bits());
+                let k = if c.is_infinite() { 0.0 } else { (-c / eps).exp() };
+                assert_eq!(arts.kernel.get(i, j).to_bits(), k.to_bits());
+                let blk = factor.beta_log_kernel[i * 9 + j];
+                if lk == f64::NEG_INFINITY {
+                    assert!(blk.is_nan());
+                } else {
+                    assert_eq!(blk.to_bits(), (factor.beta * lk).to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_statistics_are_consistent() {
+        let xs = pts(14, 9);
+        let arts =
+            CostArtifacts::for_sq_euclidean_support(&xs, 0.2, FormulationKey::Balanced);
+        assert!(arts.uot_factor.is_none());
+        assert_eq!(arts.eta, None);
+        let total_rows: f64 = arts.kernel_row_sums().iter().sum();
+        let total_cols: f64 = arts.kernel_col_sums().iter().sum();
+        assert!((total_rows - total_cols).abs() < 1e-9 * total_rows.abs().max(1.0));
+        assert!(arts.kernel_frob_norm() > 0.0);
+        assert!(!arts.kernel_is_empty());
+        // Lazy statistics repeat bitwise and match a direct computation.
+        assert_eq!(
+            arts.kernel_frob_norm().to_bits(),
+            dot(arts.kernel.as_slice(), arts.kernel.as_slice()).sqrt().to_bits()
+        );
+        assert_eq!(arts.kernel_row_sums(), &arts.kernel.row_sums()[..]);
+        assert!(arts.bytes() >= 2 * 14 * 14 * 8);
+    }
+}

@@ -1,0 +1,266 @@
+//! Content-addressed artifact cache: [`Fingerprint`] →
+//! [`CostArtifacts`] with a byte-budget LRU and hit/miss/eviction
+//! counters.
+//!
+//! Consumers call [`ArtifactCache::get_or_build`]: the first caller for
+//! a fingerprint builds (under the lock, so artifacts are constructed
+//! exactly once per fingerprint even with many workers racing); every
+//! later caller gets the resident `Arc`. Eviction keeps resident bytes
+//! at or below the budget at all times — an artifact larger than the
+//! whole budget is handed to its caller but never retained.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::artifacts::{CostArtifacts, CostHandle, Fingerprint};
+
+/// Default byte budget for [`global_cache`] (overridable via the
+/// `SPAR_SINK_CACHE_BYTES` env var): 512 MiB.
+pub const DEFAULT_CACHE_BYTES: usize = 512 << 20;
+
+/// Point-in-time cache counters/gauges, surfaced through
+/// [`MetricsSnapshot`](crate::coordinator::MetricsSnapshot).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Lookups served from a resident artifact.
+    pub hits: u64,
+    /// Lookups that had to build.
+    pub misses: u64,
+    /// Artifacts dropped to respect the byte budget (including
+    /// oversized artifacts never retained).
+    pub evictions: u64,
+    /// Resident artifact count.
+    pub entries: usize,
+    /// Resident bytes (always ≤ `byte_budget`).
+    pub bytes: usize,
+    /// Configured byte budget.
+    pub byte_budget: usize,
+}
+
+impl CacheStats {
+    /// One-line rendering for service metrics output.
+    pub fn render(&self) -> String {
+        format!(
+            "{} hits / {} misses / {} evictions, {} entries ({} B / {} B budget)",
+            self.hits, self.misses, self.evictions, self.entries, self.bytes, self.byte_budget
+        )
+    }
+}
+
+struct Slot {
+    artifacts: Arc<CostArtifacts>,
+    bytes: usize,
+    last_used: u64,
+}
+
+struct Inner {
+    entries: HashMap<Fingerprint, Slot>,
+    bytes: usize,
+    tick: u64,
+}
+
+/// The content-addressed, byte-budgeted LRU artifact cache.
+pub struct ArtifactCache {
+    byte_budget: usize,
+    inner: Mutex<Inner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl ArtifactCache {
+    pub fn new(byte_budget: usize) -> Self {
+        ArtifactCache {
+            byte_budget,
+            inner: Mutex::new(Inner { entries: HashMap::new(), bytes: 0, tick: 0 }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// Budget from `SPAR_SINK_CACHE_BYTES`, else [`DEFAULT_CACHE_BYTES`].
+    pub fn with_default_budget() -> Self {
+        let budget = std::env::var("SPAR_SINK_CACHE_BYTES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(DEFAULT_CACHE_BYTES);
+        Self::new(budget)
+    }
+
+    /// Look up a resident artifact (refreshes its LRU position; counts
+    /// as neither hit nor miss — use [`ArtifactCache::get_or_build`] on
+    /// solve paths).
+    pub fn peek(&self, fingerprint: &Fingerprint) -> Option<CostHandle> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        inner.entries.get_mut(fingerprint).map(|slot| {
+            slot.last_used = tick;
+            CostHandle::new(slot.artifacts.clone())
+        })
+    }
+
+    /// Return the resident artifact for `fingerprint`, building it via
+    /// `build` on a miss. The build runs under the cache lock, so
+    /// concurrent workers construct each artifact exactly once — the
+    /// deliberate tradeoff being that a long O(n·m) build briefly
+    /// stalls hits on OTHER fingerprints too. That is still strictly
+    /// better than the cold path (where every worker paid the build),
+    /// and per-fingerprint single-flight is the noted follow-up for
+    /// many-ε workloads (see ROADMAP).
+    pub fn get_or_build(
+        &self,
+        fingerprint: Fingerprint,
+        build: impl FnOnce() -> Arc<CostArtifacts>,
+    ) -> CostHandle {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        if let Some(slot) = inner.entries.get_mut(&fingerprint) {
+            slot.last_used = tick;
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return CostHandle::new(slot.artifacts.clone());
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let artifacts = build();
+        debug_assert_eq!(artifacts.fingerprint(), fingerprint, "artifact/fingerprint mismatch");
+        let bytes = artifacts.bytes();
+        let handle = CostHandle::new(artifacts.clone());
+        if bytes > self.byte_budget {
+            // Oversized: the caller still gets it, but it is never
+            // resident (the budget invariant holds at all times).
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+            return handle;
+        }
+        inner.entries.insert(fingerprint, Slot { artifacts, bytes, last_used: tick });
+        inner.bytes += bytes;
+        while inner.bytes > self.byte_budget {
+            // Evict strictly least-recently-used; the just-inserted slot
+            // carries the newest tick, so it is evicted last — and the
+            // loop terminates because its bytes alone fit the budget.
+            let victim = inner
+                .entries
+                .iter()
+                .filter(|(fp, _)| **fp != fingerprint)
+                .min_by_key(|(_, slot)| slot.last_used)
+                .map(|(fp, _)| *fp);
+            let Some(fp) = victim else { break };
+            if let Some(slot) = inner.entries.remove(&fp) {
+                inner.bytes -= slot.bytes;
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        handle
+    }
+
+    /// Current counters and gauges.
+    pub fn stats(&self) -> CacheStats {
+        let inner = self.inner.lock().unwrap();
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            entries: inner.entries.len(),
+            bytes: inner.bytes,
+            byte_budget: self.byte_budget,
+        }
+    }
+
+    /// Drop every resident artifact (counters are preserved).
+    pub fn clear(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.entries.clear();
+        inner.bytes = 0;
+    }
+}
+
+/// The process-wide cache behind [`crate::api::solve_batch`] and the
+/// CLI. Services that need isolated counters (the coordinator, tests)
+/// hold their own [`ArtifactCache`].
+pub fn global_cache() -> &'static ArtifactCache {
+    static GLOBAL: OnceLock<ArtifactCache> = OnceLock::new();
+    GLOBAL.get_or_init(ArtifactCache::with_default_budget)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::artifacts::FormulationKey;
+    use super::*;
+
+    fn pts(n: usize, seed: u64) -> Vec<Vec<f64>> {
+        let mut rng = crate::rng::Rng::seed_from(seed);
+        (0..n).map(|_| vec![rng.uniform(), rng.uniform()]).collect()
+    }
+
+    fn build_for(seed: u64, eps: f64) -> (Fingerprint, Arc<CostArtifacts>) {
+        let p = pts(16, seed);
+        let key = FormulationKey::Balanced;
+        let arts = CostArtifacts::for_sq_euclidean_support(&p, eps, key);
+        (arts.fingerprint(), arts)
+    }
+
+    #[test]
+    fn hit_returns_the_same_artifacts() {
+        let cache = ArtifactCache::new(64 << 20);
+        let (fp, arts) = build_for(1, 0.1);
+        let first = cache.get_or_build(fp, || arts.clone());
+        let second = cache.get_or_build(fp, || panic!("must not rebuild on a hit"));
+        assert!(Arc::ptr_eq(&first.share(), &second.share()));
+        let stats = cache.stats();
+        assert_eq!((stats.hits, stats.misses, stats.evictions), (1, 1, 0));
+        assert_eq!(stats.entries, 1);
+        assert!(stats.bytes > 0 && stats.bytes <= stats.byte_budget);
+    }
+
+    #[test]
+    fn lru_eviction_respects_byte_budget() {
+        let (_, probe) = build_for(1, 0.1);
+        let one = probe.bytes();
+        // Room for two artifacts, not three.
+        let cache = ArtifactCache::new(2 * one + one / 2);
+        for seed in 1..=5u64 {
+            let (fp, arts) = build_for(seed, 0.1);
+            cache.get_or_build(fp, || arts);
+            let stats = cache.stats();
+            assert!(stats.bytes <= stats.byte_budget, "{stats:?}");
+            assert!(stats.entries <= 2, "{stats:?}");
+        }
+        let stats = cache.stats();
+        assert_eq!(stats.misses, 5);
+        assert_eq!(stats.evictions, 3);
+        // The most recent fingerprint must still be resident.
+        let (fp5, _) = build_for(5, 0.1);
+        assert!(cache.peek(&fp5).is_some());
+        let (fp1, _) = build_for(1, 0.1);
+        assert!(cache.peek(&fp1).is_none());
+    }
+
+    #[test]
+    fn oversized_artifact_is_served_but_not_retained() {
+        let (fp, arts) = build_for(7, 0.1);
+        let cache = ArtifactCache::new(arts.bytes() - 1);
+        let handle = cache.get_or_build(fp, || arts.clone());
+        assert!(Arc::ptr_eq(&handle.share(), &arts));
+        let stats = cache.stats();
+        assert_eq!(stats.entries, 0);
+        assert_eq!(stats.bytes, 0);
+        assert_eq!(stats.evictions, 1);
+    }
+
+    #[test]
+    fn clear_preserves_counters() {
+        let cache = ArtifactCache::new(64 << 20);
+        let (fp, arts) = build_for(9, 0.1);
+        cache.get_or_build(fp, || arts.clone());
+        cache.clear();
+        let stats = cache.stats();
+        assert_eq!(stats.entries, 0);
+        assert_eq!(stats.bytes, 0);
+        assert_eq!(stats.misses, 1);
+        // Next lookup rebuilds.
+        cache.get_or_build(fp, || arts);
+        assert_eq!(cache.stats().misses, 2);
+    }
+}

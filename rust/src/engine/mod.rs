@@ -1,0 +1,43 @@
+//! # The shared-cost artifact engine
+//!
+//! Batched workloads — the echocardiogram pairwise-distance matrix
+//! above all — solve many transport problems whose marginals differ but
+//! whose geometry (support × η × ε × formulation) is identical. Cold,
+//! every job re-derives the WFR cost oracle, the Gibbs kernel, and the
+//! cost-dependent part of its sampling probabilities from scratch; with
+//! this engine the cost-dependent work is materialized once as
+//! [`CostArtifacts`] behind a content-addressed [`ArtifactCache`]
+//! (fingerprint = support hash × η × ε × formulation, byte-budget LRU,
+//! hit/miss/eviction counters) and every later job is "reuse +
+//! reweight": only the per-job marginal factor is recomputed.
+//!
+//! The flow through the stack:
+//!
+//! ```text
+//!   supports (η, ε, formulation)
+//!        │ Fingerprint::for_supports / ::for_dense
+//!        ▼
+//!   ArtifactCache::get_or_build ──▶ CostArtifacts
+//!        │                           cost, kernel, row/col sums,
+//!        │                           ‖K‖_F, β·ln K (UOT factor)
+//!        ▼
+//!   CostSource::Shared(CostHandle)          (api layer)
+//!        ▼
+//!   samplers consume the amortized factor   (sparse layer)
+//!        ▼
+//!   api::solve_batch / coordinator workers  (serving layer)
+//! ```
+//!
+//! Warm solves are bitwise-identical to cold solves: the artifacts
+//! store exactly the values the entry oracles would have produced, and
+//! the factored samplers compose probabilities with the same arithmetic
+//! (pinned by `rust/tests/cache_parity.rs`).
+
+mod artifacts;
+mod cache;
+
+pub use artifacts::{
+    CostArtifacts, CostHandle, Fingerprint, FormulationKey, UotLogFactor,
+    SHARED_ARTIFACT_ENTRY_CAP,
+};
+pub use cache::{global_cache, ArtifactCache, CacheStats, DEFAULT_CACHE_BYTES};

@@ -47,21 +47,10 @@ impl Method {
     }
 }
 
-/// Normalize a cost matrix to max 1 — the standard preprocessing that
-/// keeps `exp(-C/eps)` representable down to eps = 1e-3 (C_ij <= c0 is
-/// the paper's boundedness assumption; this fixes c0 = 1).
-pub fn normalize_cost(cost: &Mat) -> Mat {
-    let max = cost
-        .as_slice()
-        .iter()
-        .cloned()
-        .filter(|c| c.is_finite())
-        .fold(0.0f64, f64::max);
-    if max <= 0.0 {
-        return cost.clone();
-    }
-    cost.map(move |c| c / max)
-}
+/// The shared cost-normalization helper now lives in
+/// [`crate::ot::cost::normalize_cost`]; re-exported so existing
+/// experiment imports keep resolving.
+pub use crate::ot::cost::normalize_cost;
 
 /// Build the (normalized) squared-Euclidean cost of an instance,
 /// `Arc`-shared so replication sweeps reuse one allocation across
@@ -174,13 +163,6 @@ pub fn row(fields: Vec<(&str, Json)>) -> Json {
 mod tests {
     use super::*;
     use crate::data::synthetic::{instance, Scenario};
-
-    #[test]
-    fn normalize_cost_caps_at_one() {
-        let c = Mat::from_fn(3, 3, |i, j| (i * 3 + j) as f64);
-        let n = normalize_cost(&c);
-        assert!((n.max() - 1.0).abs() < 1e-12);
-    }
 
     #[test]
     fn methods_all_run_on_small_instance() {

@@ -2,33 +2,46 @@
 //! s: IBP (truth) vs Nys-IBP, Rand-IBP and Spar-IBP, over
 //! ε ∈ {5e-2, 1e-2(≈5⁰·1e-2), 5e-3}·… (paper: {5, 1, 0.2}·1e-1-ish menu,
 //! we use {5e-2, 1e-2, 5e-3}) and d ∈ {5, 10, 20}.
+//!
+//! All arms share ONE cost/kernel materialization per (ε, d) through
+//! [`CostArtifacts`]: the exact IBP truth and the Rand/Nys ablations
+//! read the cached Gibbs kernel, and the Spar-IBP replication sweep
+//! dispatches through [`api::solve_batch`] on a
+//! [`CostSource::Shared`](crate::api::CostSource) handle — the
+//! per-(ε, pair) `sq_euclidean_cost` + `gibbs_kernel` rebuilds of the
+//! cold harness are gone.
 
-use super::common::{normalize_cost, row};
+use std::sync::Arc;
+
+use super::common::row;
 use super::{ExperimentOutput, Profile};
+use crate::api::{self, Method as ApiMethod, OtProblem, SolverSpec};
 use crate::data::synthetic::barycenter_measures;
+use crate::engine::{CostArtifacts, CostHandle, FormulationKey};
 use crate::linalg::Mat;
 use crate::metrics::{l1_distance, mean_sd, normalized_histogram, s0};
-use crate::ot::barycenter::{ibp_barycenter, ibp_barycenter_with};
-use crate::ot::cost::{gibbs_kernel, sq_euclidean_cost};
+use crate::ot::barycenter::ibp_barycenter_with;
+use crate::ot::cost::{normalize_cost, sq_euclidean_cost};
 use crate::ot::sinkhorn::SinkhornParams;
 use crate::rng::Rng;
-use crate::solvers::spar_ibp::spar_ibp;
 use crate::sparse::poisson_sparsify_with;
 use crate::util::json::Json;
 use crate::util::table::{f, Table};
 
-/// Rand-IBP: uniform-probability sparsification of each kernel.
+/// Rand-IBP: uniform-probability sparsification of the shared kernel,
+/// one sketch per input measure.
 fn rand_ibp(
-    kernels: &[Mat],
+    kernel: &Mat,
+    n_measures: usize,
     bs: &[Vec<f64>],
     w: &[f64],
     s: f64,
     params: &SinkhornParams,
     rng: &mut Rng,
 ) -> crate::error::Result<Vec<f64>> {
+    let n2 = (kernel.rows() * kernel.cols()) as f64;
     let mut sketches = Vec::new();
-    for kernel in kernels {
-        let n2 = (kernel.rows() * kernel.cols()) as f64;
+    for _ in 0..n_measures {
         let (sk, _) = poisson_sparsify_with(
             kernel.rows(),
             kernel.cols(),
@@ -45,9 +58,12 @@ fn rand_ibp(
     Ok(ibp_barycenter_with(&sketches, bs, w, params)?.q)
 }
 
-/// Nys-IBP: low-rank factor per kernel drives the IBP loop.
+/// Nys-IBP: ONE low-rank factor of the shared kernel drives the IBP
+/// loop for every input measure (the kernels are identical, so the
+/// per-kernel factorizations of the cold harness were pure waste).
 fn nys_ibp(
-    kernels: &[Mat],
+    kernel: &Mat,
+    n_measures: usize,
     bs: &[Vec<f64>],
     w: &[f64],
     rank: usize,
@@ -72,16 +88,9 @@ fn nys_ibp(
             self.1
         }
     }
-    let ops: Vec<NysOp> = kernels
-        .iter()
-        .map(|k| {
-            let n = k.rows();
-            NysOp(
-                nystrom_factorize(n, |i, j| k.get(i, j), rank, 1e-10, rng),
-                n,
-            )
-        })
-        .collect();
+    let n = kernel.rows();
+    let op = NysOp(nystrom_factorize(n, |i, j| kernel.get(i, j), rank, 1e-10, rng), n);
+    let ops: Vec<&NysOp> = vec![&op; n_measures];
     Ok(ibp_barycenter_with(&ops, bs, w, params)?.q)
 }
 
@@ -98,32 +107,50 @@ pub fn run(profile: Profile) -> ExperimentOutput {
     let mut rng = Rng::seed_from(0xF171);
     for &eps in &epss {
         for &d in dims {
-            // Shared uniform support in (0,1)^d.
+            // Shared uniform support in (0,1)^d; cost + kernel built
+            // exactly once and consumed by every arm below.
             let pts: Vec<Vec<f64>> =
                 (0..n).map(|_| (0..d).map(|_| rng.uniform()).collect()).collect();
-            let cost = normalize_cost(&sq_euclidean_cost(&pts, &pts));
-            let kernel = gibbs_kernel(&cost, eps);
-            let kernels = vec![kernel.clone(), kernel.clone(), kernel];
+            let cost = Arc::new(normalize_cost(&sq_euclidean_cost(&pts, &pts)));
+            let arts = CostArtifacts::from_dense(cost, eps, FormulationKey::Barycenter);
+            let handle = CostHandle::new(arts.clone());
+            let kernel: &Mat = &arts.kernel;
             let bs = barycenter_measures(n, &mut rng);
             let w = vec![1.0 / 3.0; 3];
-            let Ok(exact) = ibp_barycenter(&kernels, &bs, &w, &params) else { continue };
+            let kernel_refs: Vec<&Mat> = vec![kernel; 3];
+            let Ok(exact) = ibp_barycenter_with(&kernel_refs, &bs, &w, &params) else {
+                continue;
+            };
             let truth = normalized_histogram(&exact.q);
 
             for &s_mult in &s_mults {
                 let budget = s_mult * s0(n);
+                // Spar-IBP replicates ride the batch API on the shared
+                // handle (problem i is seeded spec.seed + i).
+                let problems: Vec<OtProblem> = (0..reps)
+                    .map(|_| {
+                        OtProblem::barycenter(handle.clone(), bs.clone(), w.clone(), eps)
+                    })
+                    .collect();
+                let spec = SolverSpec::new(ApiMethod::SparIbp)
+                    .with_budget(s_mult)
+                    .with_tolerance(params.delta)
+                    .with_max_iters(params.max_iters)
+                    .with_seed(rng.next_u64());
                 let mut spar_errs = Vec::new();
+                for sol in api::solve_batch(&problems, &spec).into_iter().flatten() {
+                    if let Some(q) = &sol.barycenter {
+                        spar_errs.push(l1_distance(&normalized_histogram(q), &truth));
+                    }
+                }
                 let mut rand_errs = Vec::new();
                 let mut nys_errs = Vec::new();
                 for _ in 0..reps {
-                    if let Ok(sol) = spar_ibp(&kernels, &bs, &w, budget, &params, &mut rng) {
-                        let qn = normalized_histogram(&sol.solution.q);
-                        spar_errs.push(l1_distance(&qn, &truth));
-                    }
-                    if let Ok(q) = rand_ibp(&kernels, &bs, &w, budget, &params, &mut rng) {
+                    if let Ok(q) = rand_ibp(kernel, 3, &bs, &w, budget, &params, &mut rng) {
                         rand_errs.push(l1_distance(&normalized_histogram(&q), &truth));
                     }
                     let rank = ((budget / n as f64).ceil() as usize).max(1);
-                    if let Ok(q) = nys_ibp(&kernels, &bs, &w, rank, &params, &mut rng) {
+                    if let Ok(q) = nys_ibp(kernel, 3, &bs, &w, rank, &params, &mut rng) {
                         nys_errs.push(l1_distance(&normalized_histogram(&q), &truth));
                     }
                 }
@@ -158,7 +185,7 @@ pub fn run(profile: Profile) -> ExperimentOutput {
         }
     }
     let text = format!(
-        "Appendix Fig. 11 — barycenter L1 error vs s (n = {n}, {reps} reps)\n{}",
+        "Appendix Fig. 11 — barycenter L1 error vs s (n = {n}, {reps} reps, shared-cost artifacts)\n{}",
         table.render()
     );
     ExperimentOutput { id: "fig11", text, rows: Json::arr(rows) }

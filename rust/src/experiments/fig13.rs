@@ -5,12 +5,12 @@
 
 use std::sync::Arc;
 
-use super::common::{normalize_cost, row};
+use super::common::row;
 use super::{ExperimentOutput, Profile};
 use crate::api::{self, Method, OtProblem, SolverSpec};
 use crate::data::images::{barycentric_map, daytime_cloud, sunset_cloud};
 use crate::linalg::Mat;
-use crate::ot::cost::{gibbs_kernel, sq_euclidean_cost};
+use crate::ot::cost::{gibbs_kernel, normalize_cost, sq_euclidean_cost};
 use crate::ot::sinkhorn::transport_plan;
 use crate::rng::Rng;
 use crate::util::json::Json;

@@ -11,12 +11,12 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use super::common::{exact_ot, normalize_cost, row};
+use super::common::{exact_ot, row};
 use super::{ExperimentOutput, Profile};
 use crate::api::{self, Method, OtProblem, SolverSpec};
 use crate::linalg::Mat;
 use crate::metrics::mean_sd;
-use crate::ot::cost::sq_euclidean_cost;
+use crate::ot::cost::{normalize_cost, sq_euclidean_cost};
 use crate::rng::Rng;
 use crate::util::json::Json;
 use crate::util::table::{f, pm, Table};

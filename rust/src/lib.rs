@@ -15,11 +15,23 @@
 //!   formulation — balanced/unbalanced OT and barycenters, dense and
 //!   sketched — has both a multiplicative and a log-domain stabilized
 //!   engine behind the `ScalingBackend` switch, so small-ε problems
-//!   stay solvable across the board. On top sit the batched
-//!   distance-and-barycenter [`coordinator`], the [`experiments`]
-//!   harness regenerating every figure/table, and (behind the `xla`
-//!   feature) the PJRT runtime executing the AOT-compiled L2/L1
-//!   artifacts.
+//!   stay solvable across the board. Batched workloads on one support
+//!   (the echocardiogram pairwise-distance matrix) route through the
+//!   shared-cost artifact [`engine`]: [`engine::CostArtifacts`]
+//!   (dense cost, Gibbs kernel + row/col sums + Frobenius norm, the
+//!   cost-dependent `β·ln K` factor of the UOT sampling probabilities)
+//!   live behind a content-addressed [`engine::ArtifactCache`]
+//!   (fingerprint = support hash × η × ε × formulation, byte-budget
+//!   LRU, hit/miss/eviction counters), are consumed as
+//!   [`api::CostSource::Shared`] handles by the factorized samplers
+//!   (cost factor amortized, marginal factor per job), and surface as
+//!   [`api::solve_batch`] — warm solves are bitwise-identical to cold
+//!   ones. On top sit the batched distance-and-barycenter
+//!   [`coordinator`] (whose workers share artifacts through the same
+//!   cache and report its gauges in `MetricsSnapshot`), the
+//!   [`experiments`] harness regenerating every figure/table, and
+//!   (behind the `xla` feature) the PJRT runtime executing the
+//!   AOT-compiled L2/L1 artifacts.
 //! * **L2 (python/compile/model.py)** — JAX definition of the fused
 //!   Sinkhorn scaling blocks and objectives, lowered once to HLO text.
 //! * **L1 (python/compile/kernels/)** — Pallas tile kernels for the
@@ -63,6 +75,7 @@ pub mod bench;
 pub mod cli;
 pub mod coordinator;
 pub mod data;
+pub mod engine;
 pub mod error;
 pub mod experiments;
 pub mod linalg;

@@ -6,6 +6,7 @@
 //!   Nyström-based acceleration breaks down and Spar-Sink shines.
 
 use crate::linalg::Mat;
+use crate::pool;
 
 /// Euclidean distance between two points.
 #[inline]
@@ -21,8 +22,20 @@ pub fn sq_euclidean(x: &[f64], y: &[f64]) -> f64 {
 }
 
 /// Pairwise squared-Euclidean cost matrix `C_ij = ||x_i - y_j||²`.
+///
+/// Row loops run on [`pool::parallel_fill_rows`]: each row is one
+/// worker's contiguous write and every entry is an independent function
+/// of (i, j), so the result is bit-identical for any thread count.
 pub fn sq_euclidean_cost(xs: &[Vec<f64>], ys: &[Vec<f64>]) -> Mat {
-    Mat::from_fn(xs.len(), ys.len(), |i, j| sq_euclidean(&xs[i], &ys[j]))
+    let (n, m) = (xs.len(), ys.len());
+    let mut data = vec![0.0; n * m];
+    pool::parallel_fill_rows(&mut data, m, |i, row| {
+        let x = &xs[i];
+        for (out, y) in row.iter_mut().zip(ys) {
+            *out = sq_euclidean(x, y);
+        }
+    });
+    Mat::from_vec(n, m, data)
 }
 
 /// WFR ground cost for a single distance:
@@ -51,15 +64,51 @@ pub fn wfr_kernel_from_distance(d: f64, eta: f64, eps: f64) -> f64 {
 }
 
 /// Pairwise WFR cost matrix from supports (Euclidean ground distance).
+/// Parallel over rows like [`sq_euclidean_cost`], bit-deterministic for
+/// any thread count.
 pub fn wfr_cost(xs: &[Vec<f64>], ys: &[Vec<f64>], eta: f64) -> Mat {
-    Mat::from_fn(xs.len(), ys.len(), |i, j| {
-        wfr_cost_from_distance(euclidean(&xs[i], &ys[j]), eta)
-    })
+    let (n, m) = (xs.len(), ys.len());
+    let mut data = vec![0.0; n * m];
+    pool::parallel_fill_rows(&mut data, m, |i, row| {
+        let x = &xs[i];
+        for (out, y) in row.iter_mut().zip(ys) {
+            *out = wfr_cost_from_distance(euclidean(x, y), eta);
+        }
+    });
+    Mat::from_vec(n, m, data)
 }
 
 /// Gibbs kernel `K = exp(-C / ε)`, mapping `C = ∞` to exactly 0.
+/// Parallel over rows, bit-deterministic for any thread count.
 pub fn gibbs_kernel(cost: &Mat, eps: f64) -> Mat {
-    cost.map(|c| if c.is_infinite() { 0.0 } else { (-c / eps).exp() })
+    let (n, m) = (cost.rows(), cost.cols());
+    let mut data = vec![0.0; n * m];
+    pool::parallel_fill_rows(&mut data, m, |i, row| {
+        for (out, &c) in row.iter_mut().zip(cost.row(i)) {
+            *out = if c.is_infinite() { 0.0 } else { (-c / eps).exp() };
+        }
+    });
+    Mat::from_vec(n, m, data)
+}
+
+/// Normalize a cost matrix to max 1 — the standard preprocessing that
+/// keeps `exp(-C/eps)` representable down to eps = 1e-3 (C_ij <= c0 is
+/// the paper's boundedness assumption; this fixes c0 = 1). Infinite
+/// (blocked) entries are ignored by the max and preserved by the scale.
+///
+/// THE shared helper: `experiments::common` re-exports it, and every
+/// call site (experiments, examples, backend tests) resolves here.
+pub fn normalize_cost(cost: &Mat) -> Mat {
+    let max = cost
+        .as_slice()
+        .iter()
+        .cloned()
+        .filter(|c| c.is_finite())
+        .fold(0.0f64, f64::max);
+    if max <= 0.0 {
+        return cost.clone();
+    }
+    cost.map(move |c| c / max)
 }
 
 /// Log-Gibbs kernel entry `ln K = −C/ε`, mapping `C = ∞` (blocked
@@ -174,6 +223,49 @@ mod tests {
                 "target {target}, got {density}"
             );
         }
+    }
+
+    #[test]
+    fn normalize_cost_caps_at_one() {
+        let c = Mat::from_fn(3, 3, |i, j| (i * 3 + j) as f64);
+        let n = normalize_cost(&c);
+        assert!((n.max() - 1.0).abs() < 1e-12);
+        // Blocked entries survive normalization; an all-blocked/zero
+        // matrix is returned unchanged.
+        let mut blocked = Mat::zeros(2, 2);
+        blocked.set(0, 1, f64::INFINITY);
+        blocked.set(1, 0, 2.0);
+        let nb = normalize_cost(&blocked);
+        assert!(nb.get(0, 1).is_infinite());
+        assert_eq!(nb.get(1, 0), 1.0);
+        let zeros = Mat::zeros(2, 2);
+        assert_eq!(normalize_cost(&zeros), zeros);
+    }
+
+    #[test]
+    fn parallel_builders_match_from_fn() {
+        let pts: Vec<Vec<f64>> = (0..23)
+            .map(|i| vec![(i as f64 * 0.618).fract(), (i as f64 * 0.383).fract()])
+            .collect();
+        let tgt: Vec<Vec<f64>> = (0..17).map(|i| vec![i as f64 * 0.1, 0.5]).collect();
+        let c = sq_euclidean_cost(&pts, &tgt);
+        let c_ref = Mat::from_fn(23, 17, |i, j| sq_euclidean(&pts[i], &tgt[j]));
+        assert_eq!(c.as_slice(), c_ref.as_slice());
+        let w = wfr_cost(&pts, &tgt, 0.4);
+        let w_ref = Mat::from_fn(23, 17, |i, j| {
+            wfr_cost_from_distance(euclidean(&pts[i], &tgt[j]), 0.4)
+        });
+        for (a, b) in w.as_slice().iter().zip(w_ref.as_slice()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let g = gibbs_kernel(&w, 0.2);
+        let g_ref = w_ref.map(|c| if c.is_infinite() { 0.0 } else { (-c / 0.2).exp() });
+        for (a, b) in g.as_slice().iter().zip(g_ref.as_slice()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // Empty shapes are fine.
+        assert_eq!(sq_euclidean_cost(&pts, &[]).cols(), 0);
+        assert_eq!(sq_euclidean_cost(&[], &tgt).rows(), 0);
     }
 
     #[test]

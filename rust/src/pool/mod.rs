@@ -82,6 +82,38 @@ impl<T> Copy for SendPtr<T> {}
 unsafe impl<T> Send for SendPtr<T> {}
 unsafe impl<T> Sync for SendPtr<T> {}
 
+/// Fill `out` (a whole number of `width`-sized rows) in parallel:
+/// `f(i, row)` writes row `i` into its disjoint slice. Built on
+/// [`parallel_chunks`], so rows are split into contiguous per-worker
+/// blocks; each row is written by exactly one worker and every entry is
+/// an independent function of its index, making the result identical
+/// for any thread count (pinned by the `thread_determinism` test wall).
+///
+/// This is the row-loop primitive behind the dense cost/kernel builders
+/// in [`crate::ot::cost`] — it avoids both the per-element index
+/// arithmetic of [`parallel_map`] and per-row allocations.
+pub fn parallel_fill_rows<T, F>(out: &mut [T], width: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    if width == 0 || out.is_empty() {
+        return;
+    }
+    assert_eq!(out.len() % width, 0, "buffer is not a whole number of rows");
+    let rows = out.len() / width;
+    let ptr = SendPtr(out.as_mut_ptr());
+    parallel_chunks(rows, |start, end| {
+        for i in start..end {
+            // SAFETY: rows are disjoint width-sized slices of `out`,
+            // each written by exactly one worker, and `out` outlives
+            // the scoped threads inside `parallel_chunks`.
+            let row = unsafe { std::slice::from_raw_parts_mut(ptr.0.add(i * width), width) };
+            f(i, row);
+        }
+    });
+}
+
 /// Parallel fold: map each chunk to a partial value, then reduce the
 /// partials sequentially (deterministic reduce order by chunk index).
 pub fn parallel_fold<T, FM, FR>(len: usize, map_chunk: FM, reduce: FR, init: T) -> T
@@ -194,5 +226,23 @@ mod tests {
         parallel_chunks(0, |_, _| panic!("must not run"));
         let out = parallel_map(1, |i| i + 1);
         assert_eq!(out, vec![1]);
+    }
+
+    #[test]
+    fn fill_rows_writes_each_row_once() {
+        let (rows, width) = (37, 11);
+        let mut out = vec![0usize; rows * width];
+        parallel_fill_rows(&mut out, width, |i, row| {
+            for (j, v) in row.iter_mut().enumerate() {
+                *v = i * width + j + 1;
+            }
+        });
+        for (k, v) in out.iter().enumerate() {
+            assert_eq!(*v, k + 1);
+        }
+        // Degenerate shapes are no-ops.
+        parallel_fill_rows(&mut [] as &mut [usize], 4, |_, _| panic!("must not run"));
+        let mut some = vec![0usize; 3];
+        parallel_fill_rows(&mut some, 0, |_, _| panic!("must not run"));
     }
 }

@@ -21,7 +21,7 @@
 //!
 //! The default threshold is calibrated to costs normalized to
 //! `c₀ = max C = 1` (the standard preprocessing in
-//! `experiments::common::normalize_cost`): `exp(−c₀/ε)` hits f64's
+//! `ot::cost::normalize_cost`): `exp(−c₀/ε)` hits f64's
 //! smallest positive normal at ε ≈ c₀/708 ≈ 1.4×10⁻³, so
 //! [`DEFAULT_LOG_EPS_THRESHOLD`] = 2×10⁻³ switches just above the
 //! cliff. Escalation-on-failure covers un-normalized costs, where the
@@ -506,7 +506,7 @@ mod tests {
     fn dense_ot_unifies_both_loops() {
         let (cost, a, b) = toy(16);
         // Normalize so the documented threshold calibration applies.
-        let cost = crate::experiments::common::normalize_cost(&cost);
+        let cost = crate::ot::cost::normalize_cost(&cost);
         let params = SinkhornParams { delta: 1e-9, max_iters: 4000, strict: false };
         // Moderate ε: auto runs multiplicative.
         let (sol_m, kind_m) =
@@ -539,7 +539,7 @@ mod tests {
     #[test]
     fn dense_uot_unifies_both_loops() {
         let (cost, a, b) = toy(16);
-        let cost = crate::experiments::common::normalize_cost(&cost);
+        let cost = crate::ot::cost::normalize_cost(&cost);
         let a: Vec<f64> = a.iter().map(|x| x * 2.0).collect();
         let params = SinkhornParams { delta: 1e-10, max_iters: 5000, strict: false };
         let lambda = 1.0;

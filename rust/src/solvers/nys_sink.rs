@@ -7,6 +7,12 @@
 //! The factorization requires K symmetric PSD and effectively low-rank —
 //! exactly the assumptions the paper shows fail for sparse near-full-rank
 //! WFR kernels (Section 1), which our experiments reproduce.
+//!
+//! Kernel entries are consumed through a closure, so a
+//! [`CostSource::Shared`](crate::api::CostSource) problem feeds the
+//! column sampling and the post-convergence objective pass from the
+//! cached [`CostArtifacts`](crate::engine::CostArtifacts) kernel
+//! instead of re-deriving `exp(−C/ε)` per probed entry.
 
 use crate::error::{Error, Result};
 use crate::linalg::{l1_diff, nystrom_factorize, NystromFactor};

@@ -104,9 +104,13 @@ pub fn rand_sink_solve(
         ));
     }
     let (n, m) = (a.len(), b.len());
+    // Dense costs keep the paper's s₀(n) convention; oracle and
+    // shared-artifact costs use the distance service's s₀(max(n, m)).
+    // Shared sources also serve `kernel_at` from the materialized
+    // kernel, so the uniform sketch samples without per-entry exp calls.
     let s = match &problem.cost {
         CostSource::Dense(_) => spec.s_multiplier * crate::metrics::s0(n),
-        CostSource::Oracle { .. } => spec.s_multiplier * crate::metrics::s0(n.max(m)),
+        _ => spec.s_multiplier * crate::metrics::s0(n.max(m)),
     };
     let (sketch, stats) = uniform_sketch(
         n,

@@ -92,6 +92,14 @@ pub struct SparIbpBackendSolution {
 /// [`SolverSpec::backend`] override and the shrinkage θ (condition (ii)
 /// mixing, default 1 = pure importance sampling like the paper entry
 /// points) end to end.
+///
+/// The A.2 probability `p ∝ √b_j` is purely marginal, so the
+/// cost-dependent factor of a
+/// [`CostSource::Shared`](crate::api::CostSource) problem is the
+/// cached cost matrix itself: the per-kernel log-kernel oracle reads
+/// `−C/ε` from the [`CostArtifacts`](crate::engine::CostArtifacts)
+/// instead of re-deriving the ground cost per (kernel, entry) —
+/// bitwise-identical sketches either way.
 pub fn spar_ibp_solve(
     problem: &OtProblem,
     spec: &SolverSpec,

@@ -22,7 +22,8 @@ use crate::ot::sinkhorn::SinkhornParams;
 use crate::ot::SinkhornSolution;
 use crate::rng::Rng;
 use crate::sparse::{
-    poisson_sparsify_ot_logk, poisson_sparsify_uot_logk, CsrMatrix, SparsifyStats,
+    poisson_sparsify_ot_logk, poisson_sparsify_uot_logk, poisson_sparsify_uot_logk_amortized,
+    CsrMatrix, SparsifyStats,
 };
 
 /// Parameters for the Spar-Sink estimators.
@@ -251,8 +252,12 @@ pub fn spar_sink_uot(
 /// Algorithm 3 or 4 per the problem's [`Formulation`].
 ///
 /// Dense problems route through the paper entry points above (budget in
-/// units of s₀(a.len())); oracle problems resolve the budget against the
-/// larger support, matching the distance service's convention.
+/// units of s₀(a.len())); oracle and shared-artifact problems resolve
+/// the budget against the larger support, matching the distance
+/// service's convention. Shared sources additionally consume the
+/// amortized cost-dependent UOT sampling factor from their
+/// [`CostArtifacts`](crate::engine::CostArtifacts), producing sketches
+/// bitwise-identical to the cold path.
 pub fn spar_sink_solve(
     problem: &OtProblem,
     spec: &SolverSpec,
@@ -286,6 +291,65 @@ pub fn spar_sink_solve(
                 &params,
                 rng,
             )
+        }
+        (CostSource::Shared(handle), Formulation::Balanced) => {
+            // OT probabilities are purely marginal (Eq. 9); the
+            // amortized part is the cached cost matrix itself, read by
+            // the lazy per-selected-entry oracles.
+            let s = resolve_budget(a.len().max(b.len()), spec.s_multiplier);
+            let arts = handle.artifacts();
+            let cmat: &Mat = &arts.cost;
+            ot_from_logk_oracle(
+                |i, j| crate::ot::cost::log_gibbs_from_cost(cmat.get(i, j), eps),
+                |i, j| cmat.get(i, j),
+                &OtInputs { a, b, eps, s },
+                &params,
+                rng,
+            )
+        }
+        (CostSource::Shared(handle), Formulation::Unbalanced { lambda }) => {
+            // Consume the precomputed cost-dependent factor β·ln K when
+            // it matches this job's (λ, ε) bit-exactly; the remaining
+            // per-job work is the O(n + m) marginal factor. Values,
+            // RNG stream and sketch are bitwise-identical to the cold
+            // oracle path either way.
+            let s = resolve_budget(a.len().max(b.len()), spec.s_multiplier);
+            let arts = handle.artifacts();
+            let cmat: &Mat = &arts.cost;
+            let factor = arts.uot_factor.as_ref().filter(|f| {
+                f.lambda.to_bits() == lambda.to_bits() && arts.eps.to_bits() == eps.to_bits()
+            });
+            if let Some(factor) = factor {
+                let (sketch, stats) = poisson_sparsify_uot_logk_amortized(
+                    &factor.beta_log_kernel,
+                    factor.alpha,
+                    |i, j| crate::ot::cost::log_gibbs_from_cost(cmat.get(i, j), eps),
+                    |i, j| cmat.get(i, j),
+                    a,
+                    b,
+                    s,
+                    params.shrinkage,
+                    rng,
+                )?;
+                solve_sketch_uot(
+                    &sketch,
+                    stats,
+                    a,
+                    b,
+                    *lambda,
+                    eps,
+                    params.backend,
+                    &params.sinkhorn,
+                )
+            } else {
+                uot_from_logk_oracle(
+                    |i, j| crate::ot::cost::log_gibbs_from_cost(cmat.get(i, j), eps),
+                    |i, j| cmat.get(i, j),
+                    &UotInputs { a, b, lambda: *lambda, eps, s },
+                    &params,
+                    rng,
+                )
+            }
         }
         (_, Formulation::Barycenter { .. }) => Err(Error::InvalidParam(
             "spar-sink solves OT/UOT problems; use spar-ibp for barycenters".into(),

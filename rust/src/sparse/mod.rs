@@ -11,6 +11,6 @@ pub mod sampling;
 pub use csr::CsrMatrix;
 pub use sampling::{
     poisson_sparsify_ibp_logk, poisson_sparsify_ot, poisson_sparsify_ot_logk,
-    poisson_sparsify_uot, poisson_sparsify_uot_logk, poisson_sparsify_with,
-    sample_with_replacement_ot, SparsifyStats,
+    poisson_sparsify_uot, poisson_sparsify_uot_logk, poisson_sparsify_uot_logk_amortized,
+    poisson_sparsify_with, sample_with_replacement_ot, SparsifyStats,
 };

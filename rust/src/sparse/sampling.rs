@@ -23,11 +23,39 @@
 //! in the sketch (`CsrMatrix::from_rows_logk`), so entries whose linear
 //! kernel value underflows f64 — the small-ε regime — are preserved for
 //! the log-domain scaling loop instead of being silently dropped.
+//!
+//! ## Probability factorization (the shared-cost artifact engine)
+//!
+//! Every importance probability splits into a cost-dependent factor and
+//! a per-job marginal factor:
+//!
+//! * OT (Eq. 9) and IBP (Appendix A.2) probabilities are purely
+//!   marginal — their amortizable part is the kernel/cost ORACLE itself,
+//!   which [`CostSource::Shared`](crate::api::CostSource) serves from
+//!   cached [`CostArtifacts`](crate::engine::CostArtifacts) matrices
+//!   instead of re-deriving per job;
+//! * the UOT probability (Eq. 11) additionally carries the
+//!   cost-dependent `K_ij^β` (log domain: `β·ln K_ij`), which
+//!   [`poisson_sparsify_uot_logk_amortized`] consumes precomputed from
+//!   the artifacts, leaving only the O(n + m) marginal factor
+//!   `α(ln a_i + ln b_j)` per job.
+//!
+//! The amortized paths compose probabilities with the same arithmetic
+//! and consume the same RNG streams as the cold samplers, so sketches
+//! are bitwise identical (pinned by `rust/tests/cache_parity.rs`).
 
 use super::csr::CsrMatrix;
 use crate::error::{Error, Result};
 use crate::pool;
 use crate::rng::Rng;
+
+/// Largest `rows × cols` grid the samplers materialize intermediate
+/// per-entry buffers for (UOT weight/log-weight stores); larger
+/// problems fall back to memory-free two-pass oracles. This is THE
+/// materialization cap — the artifact engine's
+/// [`SHARED_ARTIFACT_ENTRY_CAP`](crate::engine::SHARED_ARTIFACT_ENTRY_CAP)
+/// aliases it so the two memory policies cannot drift apart.
+pub const MATERIALIZE_CAP: usize = 16_000_000;
 
 /// Statistics about one sparsification pass.
 #[derive(Clone, Copy, Debug, Default)]
@@ -345,7 +373,6 @@ pub fn poisson_sparsify_uot(
     // weights once and reuse them in the sampling pass, halving the
     // kernel evaluations and removing the duplicated powf; larger
     // problems fall back to the memory-free two-pass oracle.
-    const MATERIALIZE_CAP: usize = 16_000_000;
     if n * m <= MATERIALIZE_CAP {
         let pa_ref = &pa;
         let pb_ref = &pb;
@@ -457,7 +484,6 @@ pub fn poisson_sparsify_uot_logk(
     };
     // Materialize the log-weights when they fit (one oracle call per
     // entry instead of three: normalization + support + probability).
-    const MATERIALIZE_CAP: usize = 16_000_000;
     let lw_store: Option<Vec<f64>> = if n * m <= MATERIALIZE_CAP {
         Some(pool::parallel_map(n * m, |idx| lw_eval(idx / m, idx % m)))
     } else {
@@ -470,6 +496,82 @@ pub fn poisson_sparsify_uot_logk(
             None => lw_eval(i, j),
         }
     };
+    uot_logk_from_lw(n, m, lw, log_kernel, cost, s, shrinkage, rng)
+}
+
+/// Spar-Sink sparsifier for UOT from a LOG-kernel oracle with the
+/// cost-dependent probability factor PRECOMPUTED: `beta_log_kernel`
+/// holds `β·ln K_ij` per entry (`NaN` = blocked entry, i.e. zero
+/// kernel), typically amortized across a batch from
+/// [`CostArtifacts::uot_factor`](crate::engine::CostArtifacts). Per job
+/// only the marginal factor `α(ln a_i + ln b_j)` is computed — O(n + m)
+/// transcendental work instead of O(n·m).
+///
+/// Log-weights, normalization, RNG consumption and the stored sketch
+/// are bitwise-identical to [`poisson_sparsify_uot_logk`] with the same
+/// oracle and the same (λ, ε): the cold path evaluates
+/// `α(ln a_i + ln b_j) + β·ln K_ij` with `β·ln K_ij` computed inline,
+/// this one reads the identical product from the factor.
+#[allow(clippy::too_many_arguments)]
+pub fn poisson_sparsify_uot_logk_amortized(
+    beta_log_kernel: &[f64],
+    alpha: f64,
+    log_kernel: impl Fn(usize, usize) -> f64 + Sync,
+    cost: impl Fn(usize, usize) -> f64 + Sync,
+    a: &[f64],
+    b: &[f64],
+    s: f64,
+    shrinkage: f64,
+    rng: &mut Rng,
+) -> Result<(CsrMatrix, SparsifyStats)> {
+    let (n, m) = (a.len(), b.len());
+    if beta_log_kernel.len() != n * m {
+        return Err(Error::Dimension(format!(
+            "amortized UOT factor has {} entries for a {n}x{m} problem",
+            beta_log_kernel.len()
+        )));
+    }
+    if !(alpha.is_finite() && alpha > 0.0) {
+        return Err(Error::InvalidParam(format!("alpha = {alpha} must be positive")));
+    }
+    validate_common(s, shrinkage)?;
+    let la: Vec<f64> =
+        a.iter().map(|&x| if x > 0.0 { x.ln() } else { f64::NEG_INFINITY }).collect();
+    let lb: Vec<f64> =
+        b.iter().map(|&x| if x > 0.0 { x.ln() } else { f64::NEG_INFINITY }).collect();
+    let la = &la;
+    let lb = &lb;
+    let lw = move |i: usize, j: usize| -> f64 {
+        let blk = beta_log_kernel[i * m + j];
+        if blk.is_nan() {
+            return f64::NAN; // blocked entry (zero kernel)
+        }
+        if la[i] == f64::NEG_INFINITY || lb[j] == f64::NEG_INFINITY {
+            return f64::NEG_INFINITY; // zero weight; shrinkage floor applies
+        }
+        alpha * (la[i] + lb[j]) + blk
+    };
+    uot_logk_from_lw(n, m, lw, log_kernel, cost, s, shrinkage, rng)
+}
+
+/// Shared tail of the log-domain UOT samplers: normalize the composed
+/// log-weights `lw(i, j)` (encoding: `NaN` = blocked entry, never
+/// sampled; `−∞` = zero importance weight but positive kernel, still
+/// reachable through the shrinkage floor) via a streaming log-sum-exp
+/// and run the Poisson core.
+#[allow(clippy::too_many_arguments)]
+fn uot_logk_from_lw(
+    n: usize,
+    m: usize,
+    lw: impl Fn(usize, usize) -> f64 + Sync,
+    log_kernel: impl Fn(usize, usize) -> f64 + Sync,
+    cost: impl Fn(usize, usize) -> f64 + Sync,
+    s: f64,
+    shrinkage: f64,
+    rng: &mut Rng,
+) -> Result<(CsrMatrix, SparsifyStats)> {
+    let lw = &lw;
+    let log_kernel = &log_kernel;
     // Streaming LSE of the log-weights over the whole support — one
     // O(n·m) pass, parallel over row blocks, (max, scaled-sum) pairs
     // merged associatively.
@@ -1048,6 +1150,100 @@ mod tests {
         for (_, _, lk, _) in sk.iter_log() {
             assert!(lk.is_finite());
         }
+    }
+
+    #[test]
+    fn amortized_uot_logk_matches_cold_sampler_bitwise() {
+        // Same oracle, same RNG stream: the amortized sampler (β·ln K
+        // precomputed, marginal factor per job) must reproduce the cold
+        // sampler's sketch bit for bit — including a zero-mass row
+        // reachable only through the shrinkage floor.
+        let n = 18;
+        let (_, cost, mut a, b) = toy(n);
+        a[0] = 0.0;
+        let (lambda, eps) = (1.0, 0.05);
+        let lk = |i: usize, j: usize| -cost.get(i, j) / eps;
+        let alpha = lambda / (2.0 * lambda + eps);
+        let beta = eps / (2.0 * lambda + eps);
+        let factor: Vec<f64> = (0..n * n)
+            .map(|idx| {
+                let v = lk(idx / n, idx % n);
+                if v == f64::NEG_INFINITY {
+                    f64::NAN
+                } else {
+                    beta * v
+                }
+            })
+            .collect();
+        let mut r1 = Rng::seed_from(101);
+        let mut r2 = Rng::seed_from(101);
+        let (sk_cold, st_cold) = poisson_sparsify_uot_logk(
+            lk,
+            |i, j| cost.get(i, j),
+            &a,
+            &b,
+            lambda,
+            eps,
+            80.0,
+            0.8,
+            &mut r1,
+        )
+        .unwrap();
+        let (sk_warm, st_warm) = poisson_sparsify_uot_logk_amortized(
+            &factor,
+            alpha,
+            lk,
+            |i, j| cost.get(i, j),
+            &a,
+            &b,
+            80.0,
+            0.8,
+            &mut r2,
+        )
+        .unwrap();
+        assert_eq!(st_cold.nnz, st_warm.nnz);
+        assert_eq!(st_cold.saturated, st_warm.saturated);
+        for ((i1, j1, k1, c1), (i2, j2, k2, c2)) in sk_cold.iter().zip(sk_warm.iter()) {
+            assert_eq!((i1, j1), (i2, j2));
+            assert_eq!(k1.to_bits(), k2.to_bits());
+            assert_eq!(c1.to_bits(), c2.to_bits());
+        }
+        for ((_, _, l1, _), (_, _, l2, _)) in sk_cold.iter_log().zip(sk_warm.iter_log()) {
+            assert_eq!(l1.to_bits(), l2.to_bits());
+        }
+    }
+
+    #[test]
+    fn amortized_uot_logk_rejects_bad_factor() {
+        let n = 6;
+        let a = vec![1.0 / n as f64; n];
+        let factor = vec![0.0; n * n - 1]; // wrong length
+        let mut rng = Rng::seed_from(7);
+        assert!(poisson_sparsify_uot_logk_amortized(
+            &factor,
+            0.3,
+            |_, _| 0.0,
+            |_, _| 0.5,
+            &a,
+            &a,
+            10.0,
+            1.0,
+            &mut rng
+        )
+        .is_err());
+        let factor = vec![0.0; n * n];
+        assert!(poisson_sparsify_uot_logk_amortized(
+            &factor,
+            f64::NAN,
+            |_, _| 0.0,
+            |_, _| 0.5,
+            &a,
+            &a,
+            10.0,
+            1.0,
+            &mut rng
+        )
+        .is_err());
     }
 
     #[test]

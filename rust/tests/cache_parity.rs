@@ -1,0 +1,461 @@
+//! The shared-cost artifact engine's contract wall:
+//!
+//! * warm solves (through `CostSource::Shared` / `api::solve_batch`)
+//!   are BITWISE-identical to the cold dense/oracle paths for every
+//!   sketch-based solver, OT + UOT + barycenter;
+//! * the `ArtifactCache` LRU never exceeds its byte budget and counts
+//!   hits/misses/evictions;
+//! * different supports never collide on a fingerprint;
+//! * the coordinator's pairwise warm path reproduces the legacy oracle
+//!   path bit for bit while building artifacts exactly once per
+//!   (support, η, ε).
+//!
+//! Case counts scale with `PROPTEST_CASES` (the CI cache-parity job
+//! runs at 96).
+
+use std::sync::Arc;
+
+use spar_sink::api::{self, CostSource, EntryOracle, Method, OtProblem, SolverSpec};
+use spar_sink::coordinator::{
+    CoordinatorConfig, DistanceJob, DistanceService, Measure, ProblemSpec,
+};
+use spar_sink::engine::{ArtifactCache, CostArtifacts, Fingerprint, FormulationKey};
+use spar_sink::linalg::Mat;
+use spar_sink::ot::cost::{
+    euclidean, log_gibbs_from_cost, normalize_cost, sq_euclidean_cost, wfr_cost,
+    wfr_cost_from_distance,
+};
+use spar_sink::rng::Rng;
+
+const CASES: usize = 6;
+
+fn cases() -> usize {
+    std::env::var("PROPTEST_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(CASES)
+}
+
+fn points(n: usize, rng: &mut Rng) -> Vec<Vec<f64>> {
+    (0..n).map(|_| vec![rng.uniform() * 4.0, rng.uniform() * 4.0]).collect()
+}
+
+fn histogram(n: usize, rng: &mut Rng) -> Vec<f64> {
+    let raw: Vec<f64> = (0..n).map(|_| rng.uniform() + 0.05).collect();
+    let s: f64 = raw.iter().sum();
+    raw.iter().map(|x| x / s).collect()
+}
+
+fn assert_bitwise(tag: &str, cold: &api::Solution, warm: &api::Solution) {
+    assert_eq!(
+        cold.objective.to_bits(),
+        warm.objective.to_bits(),
+        "{tag}: objective {} vs {}",
+        cold.objective,
+        warm.objective
+    );
+    assert_eq!(cold.iterations, warm.iterations, "{tag}: iterations");
+    assert_eq!(cold.backend, warm.backend, "{tag}: backend");
+    assert_eq!(cold.u.len(), warm.u.len(), "{tag}: u length");
+    for (x, y) in cold.u.iter().zip(&warm.u) {
+        assert_eq!(x.to_bits(), y.to_bits(), "{tag}: u entry {x} vs {y}");
+    }
+    for (x, y) in cold.v.iter().zip(&warm.v) {
+        assert_eq!(x.to_bits(), y.to_bits(), "{tag}: v entry {x} vs {y}");
+    }
+    match (&cold.barycenter, &warm.barycenter) {
+        (Some(qc), Some(qw)) => {
+            for (x, y) in qc.iter().zip(qw) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{tag}: q entry {x} vs {y}");
+            }
+        }
+        (None, None) => {}
+        _ => panic!("{tag}: barycenter presence mismatch"),
+    }
+    assert_eq!(cold.stats.len(), warm.stats.len(), "{tag}: stats length");
+    for (sc, sw) in cold.stats.iter().zip(&warm.stats) {
+        assert_eq!(sc.nnz, sw.nnz, "{tag}: nnz");
+        assert_eq!(sc.saturated, sw.saturated, "{tag}: saturated");
+    }
+}
+
+/// Warm-hit solutions bitwise-match the cold dense path: balanced OT
+/// across the sketch/low-rank family.
+#[test]
+fn warm_balanced_ot_matches_cold_bitwise() {
+    let mut master = Rng::seed_from(0xCA5E_0001);
+    for case in 0..cases() {
+        let seed = master.next_u64();
+        let mut rng = Rng::seed_from(seed);
+        let n = 20 + rng.gen_range(20);
+        let pts = points(n, &mut rng);
+        let cost = Arc::new(normalize_cost(&sq_euclidean_cost(&pts, &pts)));
+        let eps = 0.05 + rng.uniform() * 0.1;
+        let a = histogram(n, &mut rng);
+        let b = histogram(n, &mut rng);
+        let problem = OtProblem::balanced(cost, a, b, eps);
+        for method in [Method::SparSink, Method::RandSink, Method::NysSink] {
+            let spec = SolverSpec::new(method).with_budget(8.0).with_seed(seed ^ 0x55);
+            let cold = api::solve(&problem, &spec).unwrap();
+            let cache = ArtifactCache::new(1 << 30);
+            let warm = api::solve_batch_with_cache(std::slice::from_ref(&problem), &spec, &cache)
+                .pop()
+                .unwrap()
+                .unwrap();
+            assert_bitwise(&format!("case {case} seed {seed} {method:?} OT"), &cold, &warm);
+            assert_eq!(cache.stats().misses, 1);
+            // A second batch over the same problem is a pure hit and
+            // still bitwise-identical.
+            let warm2 = api::solve_batch_with_cache(std::slice::from_ref(&problem), &spec, &cache)
+                .pop()
+                .unwrap()
+                .unwrap();
+            assert_bitwise(&format!("case {case} {method:?} warm-hit"), &warm, &warm2);
+            assert_eq!(cache.stats().hits, 1);
+        }
+    }
+}
+
+/// Warm-hit solutions bitwise-match the cold dense path: unbalanced OT
+/// on a WFR cost (exercises the amortized β·ln K sampling factor and
+/// blocked entries).
+#[test]
+fn warm_unbalanced_ot_matches_cold_bitwise() {
+    let mut master = Rng::seed_from(0xCA5E_0002);
+    for case in 0..cases() {
+        let seed = master.next_u64();
+        let mut rng = Rng::seed_from(seed);
+        let n = 20 + rng.gen_range(20);
+        let pts = points(n, &mut rng);
+        let eta = 1.0 + rng.uniform() * 2.0;
+        let cost = Arc::new(wfr_cost(&pts, &pts, eta));
+        let eps = 0.03 + rng.uniform() * 0.1;
+        let lambda = 0.5 + rng.uniform();
+        let a: Vec<f64> = histogram(n, &mut rng).iter().map(|x| x * 5.0).collect();
+        let b: Vec<f64> = histogram(n, &mut rng).iter().map(|x| x * 3.0).collect();
+        let problem = OtProblem::unbalanced(cost, a, b, lambda, eps);
+        for method in [Method::SparSink, Method::RandSink] {
+            let spec = SolverSpec::new(method).with_budget(8.0).with_seed(seed ^ 0x77);
+            let cold = api::solve(&problem, &spec);
+            let cache = ArtifactCache::new(1 << 30);
+            let warm = api::solve_batch_with_cache(std::slice::from_ref(&problem), &spec, &cache)
+                .pop()
+                .unwrap();
+            match (cold, warm) {
+                (Ok(cold), Ok(warm)) => assert_bitwise(
+                    &format!("case {case} seed {seed} {method:?} UOT"),
+                    &cold,
+                    &warm,
+                ),
+                // Degenerate draws (fully blocked kernel) must fail the
+                // same way on both paths.
+                (Err(ec), Err(ew)) => assert_eq!(ec.to_string(), ew.to_string()),
+                (c, w) => panic!("cold/warm outcome mismatch: {c:?} vs {w:?}"),
+            }
+        }
+    }
+}
+
+/// Warm-hit barycenters bitwise-match the cold dense path (Spar-IBP and
+/// the exact dense IBP alike).
+#[test]
+fn warm_barycenter_matches_cold_bitwise() {
+    let mut master = Rng::seed_from(0xCA5E_0003);
+    for case in 0..cases() {
+        let seed = master.next_u64();
+        let mut rng = Rng::seed_from(seed);
+        let n = 24 + rng.gen_range(16);
+        let pts: Vec<Vec<f64>> = (0..n).map(|i| vec![i as f64 / (n - 1) as f64]).collect();
+        let cost = Arc::new(normalize_cost(&sq_euclidean_cost(&pts, &pts)));
+        let eps = 0.01 + rng.uniform() * 0.02;
+        let bs = vec![histogram(n, &mut rng), histogram(n, &mut rng), histogram(n, &mut rng)];
+        let w = vec![1.0 / 3.0; 3];
+        let problem = OtProblem::barycenter(cost, bs, w, eps);
+        for method in [Method::SparIbp, Method::Sinkhorn] {
+            let spec = SolverSpec::new(method).with_budget(12.0).with_seed(seed ^ 0x99);
+            let cold = api::solve(&problem, &spec).unwrap();
+            let cache = ArtifactCache::new(1 << 30);
+            let warm = api::solve_batch_with_cache(std::slice::from_ref(&problem), &spec, &cache)
+                .pop()
+                .unwrap()
+                .unwrap();
+            assert_bitwise(&format!("case {case} seed {seed} {method:?} bary"), &cold, &warm);
+        }
+    }
+}
+
+/// `solve_batch` seeding contract: slot 0 is bitwise `solve`, slot i is
+/// bitwise `solve` at seed + i.
+#[test]
+fn solve_batch_seed_derivation_is_stable() {
+    let mut rng = Rng::seed_from(0xCA5E_0004);
+    let n = 30;
+    let pts = points(n, &mut rng);
+    let cost = Arc::new(normalize_cost(&sq_euclidean_cost(&pts, &pts)));
+    let problem = OtProblem::balanced(cost, histogram(n, &mut rng), histogram(n, &mut rng), 0.08);
+    let spec = SolverSpec::new(Method::SparSink).with_budget(8.0).with_seed(41);
+    let cache = ArtifactCache::new(1 << 30);
+    let batch = api::solve_batch_with_cache(
+        &[problem.clone(), problem.clone(), problem.clone()],
+        &spec,
+        &cache,
+    );
+    assert_eq!(batch.len(), 3);
+    let solo0 = api::solve(&problem, &spec).unwrap();
+    let solo2 = api::solve(&problem, &spec.clone().with_seed(43)).unwrap();
+    assert_bitwise("batch[0] vs solve", &solo0, batch[0].as_ref().unwrap());
+    assert_bitwise("batch[2] vs solve(seed+2)", &solo2, batch[2].as_ref().unwrap());
+    let stats = cache.stats();
+    assert_eq!((stats.misses, stats.hits), (1, 2), "{stats:?}");
+}
+
+/// Eviction respects the byte budget while the cache is driven through
+/// the public batch API.
+#[test]
+fn eviction_respects_byte_budget_under_batch_load() {
+    let mut rng = Rng::seed_from(0xCA5E_0005);
+    let n = 24;
+    // One artifact's size, probed on an identical shape.
+    let probe = CostArtifacts::for_sq_euclidean_support(
+        &points(n, &mut rng),
+        0.1,
+        FormulationKey::Balanced,
+    );
+    let budget = probe.bytes() * 2 + probe.bytes() / 2; // room for two
+    let cache = ArtifactCache::new(budget);
+    let spec = SolverSpec::new(Method::SparSink).with_budget(6.0).with_seed(1);
+    for _ in 0..6 {
+        let pts = points(n, &mut rng);
+        let cost = Arc::new(sq_euclidean_cost(&pts, &pts));
+        let problem =
+            OtProblem::balanced(cost, histogram(n, &mut rng), histogram(n, &mut rng), 0.1);
+        api::solve_batch_with_cache(std::slice::from_ref(&problem), &spec, &cache)
+            .pop()
+            .unwrap()
+            .unwrap();
+        let stats = cache.stats();
+        assert!(stats.bytes <= stats.byte_budget, "{stats:?}");
+        assert!(stats.entries <= 2, "{stats:?}");
+    }
+    let stats = cache.stats();
+    assert_eq!(stats.misses, 6);
+    assert_eq!(stats.evictions, 4, "{stats:?}");
+}
+
+/// Distinct random supports never collide on a fingerprint, and the
+/// support hash covers both sides of a pair.
+#[test]
+fn distinct_supports_get_distinct_fingerprints() {
+    let mut master = Rng::seed_from(0xCA5E_0006);
+    let key = FormulationKey::Balanced;
+    let mut seen = std::collections::HashSet::new();
+    for _ in 0..(cases() * 16).max(64) {
+        let mut rng = Rng::seed_from(master.next_u64());
+        let n = 4 + rng.gen_range(12);
+        let pts = points(n, &mut rng);
+        let fp = Fingerprint::for_supports(&pts, &pts, None, 0.05, key);
+        assert!(seen.insert(fp), "fingerprint collision across supports");
+    }
+    // Dense fingerprints are content-addressed too: same values in two
+    // allocations collide ON PURPOSE, a one-entry change never does.
+    let mut rng = Rng::seed_from(7);
+    let pts = points(10, &mut rng);
+    let c1 = sq_euclidean_cost(&pts, &pts);
+    let c2 = c1.clone();
+    assert_eq!(
+        Fingerprint::for_dense(&c1, 0.05, key),
+        Fingerprint::for_dense(&c2, 0.05, key)
+    );
+    let mut c3 = c1.clone();
+    c3.set(3, 4, c3.get(3, 4) + 1e-12);
+    assert_ne!(
+        Fingerprint::for_dense(&c1, 0.05, key),
+        Fingerprint::for_dense(&c3, 0.05, key)
+    );
+}
+
+/// The acceptance bar, end to end: a pairwise distance-matrix run over
+/// 10 frames on one shared support builds artifacts once per (η, ε),
+/// reports it through the MetricsSnapshot cache gauges, and every warm
+/// objective is bitwise-identical to the legacy cold oracle path.
+#[test]
+fn coordinator_warm_path_matches_cold_oracle_path_bitwise() {
+    let frames = 10;
+    let n = 32;
+    let mut rng = Rng::seed_from(0xCA5E_0007);
+    let support: Arc<Vec<Vec<f64>>> = Arc::new(points(n, &mut rng));
+    let masses: Vec<Arc<Vec<f64>>> =
+        (0..frames).map(|_| Arc::new(histogram(n, &mut rng))).collect();
+    let problem_spec = ProblemSpec { eta: 3.0, eps: 0.05, ..Default::default() };
+
+    let mut jobs = Vec::new();
+    let mut id = 0u64;
+    for i in 0..frames {
+        for j in (i + 1)..frames {
+            jobs.push(DistanceJob {
+                id,
+                source: Measure { points: support.clone(), mass: masses[i].clone() },
+                target: Measure { points: support.clone(), mass: masses[j].clone() },
+                method: Method::SparSink,
+                spec: problem_spec.clone(),
+                seed: 1000 + id,
+            });
+            id += 1;
+        }
+    }
+    let total = jobs.len() as u64; // 45 pairs
+    let pair_of = |job_id: u64| -> (usize, usize) {
+        let mut k = 0u64;
+        for i in 0..frames {
+            for j in (i + 1)..frames {
+                if k == job_id {
+                    return (i, j);
+                }
+                k += 1;
+            }
+        }
+        unreachable!()
+    };
+
+    let service = DistanceService::start(CoordinatorConfig { workers: 4, ..Default::default() });
+    let results = service.submit_all(jobs).unwrap();
+    let metrics = service.shutdown();
+    assert_eq!(metrics.completed, total);
+    assert_eq!(metrics.cache.misses, 1, "{:?}", metrics.cache);
+    assert_eq!(metrics.cache.hits, total - 1, "{:?}", metrics.cache);
+
+    // Cold reference: the legacy oracle-cost problem, exactly as the
+    // pre-engine worker built it.
+    for r in &results {
+        assert!(r.error.is_none(), "job {}: {:?}", r.id, r.error);
+        let (i, j) = pair_of(r.id);
+        let (eta, eps) = (problem_spec.eta, problem_spec.eps);
+        let (src, tgt) = (support.clone(), support.clone());
+        let cost: EntryOracle = Arc::new(move |p: usize, q: usize| {
+            wfr_cost_from_distance(euclidean(&src[p], &tgt[q]), eta)
+        });
+        let cost_for_lk = cost.clone();
+        let log_kernel: EntryOracle =
+            Arc::new(move |p: usize, q: usize| log_gibbs_from_cost(cost_for_lk(p, q), eps));
+        let problem = OtProblem::unbalanced(
+            CostSource::Oracle { rows: n, cols: n, cost, log_kernel: Some(log_kernel) },
+            masses[i].clone(),
+            masses[j].clone(),
+            problem_spec.lambda,
+            eps,
+        );
+        let spec = SolverSpec::new(Method::SparSink)
+            .with_budget(problem_spec.s_multiplier)
+            .with_tolerance(problem_spec.delta)
+            .with_max_iters(problem_spec.max_iters)
+            .with_seed(1000 + r.id);
+        let cold = api::solve(&problem, &spec).unwrap();
+        assert_eq!(
+            cold.objective.to_bits(),
+            r.objective.to_bits(),
+            "job {} ({i},{j}): cold {} vs warm {}",
+            r.id,
+            cold.objective,
+            r.objective
+        );
+        assert_eq!(cold.iterations, r.iterations, "job {}", r.id);
+    }
+}
+
+/// Dense costs that are value-identical but separately allocated share
+/// one artifact through `solve_batch` (content addressing, not pointer
+/// identity).
+#[test]
+fn value_identical_dense_costs_share_artifacts() {
+    let mut rng = Rng::seed_from(0xCA5E_0008);
+    let n = 20;
+    let pts = points(n, &mut rng);
+    let build = || Arc::new(normalize_cost(&sq_euclidean_cost(&pts, &pts)));
+    let a = histogram(n, &mut rng);
+    let b = histogram(n, &mut rng);
+    let p1 = OtProblem::balanced(build(), a.clone(), b.clone(), 0.07);
+    let p2 = OtProblem::balanced(build(), a, b, 0.07);
+    let cache = ArtifactCache::new(1 << 30);
+    let spec = SolverSpec::new(Method::SparSink).with_budget(8.0).with_seed(5);
+    let out = api::solve_batch_with_cache(&[p1, p2], &spec, &cache);
+    assert!(out.iter().all(|r| r.is_ok()));
+    let stats = cache.stats();
+    assert_eq!((stats.misses, stats.hits), (1, 1), "{stats:?}");
+}
+
+/// A shared handle refuses to serve a problem at a different ε — the
+/// artifacts are ε-specific and silent reuse would be wrong.
+#[test]
+fn shared_handle_rejects_mismatched_eps() {
+    let mut rng = Rng::seed_from(0xCA5E_0009);
+    let n = 12;
+    let pts = points(n, &mut rng);
+    let arts = CostArtifacts::for_sq_euclidean_support(&pts, 0.05, FormulationKey::Balanced);
+    let handle = spar_sink::engine::CostHandle::new(arts);
+    let mut problem = OtProblem::balanced(
+        CostSource::Shared(handle),
+        histogram(n, &mut rng),
+        histogram(n, &mut rng),
+        0.05,
+    );
+    problem.eps = 0.1;
+    let err = api::solve(&problem, &SolverSpec::new(Method::SparSink)).unwrap_err();
+    assert!(err.to_string().contains("eps"), "{err}");
+}
+
+/// Rectangular dense problems are NOT upgraded: the shared solver arms
+/// resolve sketch budgets against max(n, m) while the dense paper arms
+/// use s₀(a.len()), so an upgrade would silently change the sketch.
+/// They pass through untouched and solve bitwise-identically cold.
+#[test]
+fn rectangular_dense_problems_pass_through_unchanged() {
+    let mut rng = Rng::seed_from(0xCA5E_000B);
+    let (n, m) = (18, 30);
+    let src = points(n, &mut rng);
+    let tgt = points(m, &mut rng);
+    let cost = Arc::new(normalize_cost(&sq_euclidean_cost(&src, &tgt)));
+    let problem =
+        OtProblem::balanced(cost, histogram(n, &mut rng), histogram(m, &mut rng), 0.08);
+    let cache = ArtifactCache::new(1 << 30);
+    let shared = api::share_via_cache(&problem, &cache);
+    assert!(matches!(shared.cost, CostSource::Dense(_)), "{:?}", shared.cost);
+    let stats = cache.stats();
+    assert_eq!((stats.hits, stats.misses), (0, 0), "{stats:?}");
+    let spec = SolverSpec::new(Method::SparSink).with_budget(8.0).with_seed(9);
+    let cold = api::solve(&problem, &spec).unwrap();
+    let batch = api::solve_batch_with_cache(std::slice::from_ref(&problem), &spec, &cache)
+        .pop()
+        .unwrap()
+        .unwrap();
+    assert_bitwise("rectangular batch[0] vs solve", &cold, &batch);
+}
+
+/// Sanity: warm solves still read a real matrix — spot-check the
+/// artifact against the dense source it was built from.
+#[test]
+fn upgraded_problem_reads_identical_cost_values() {
+    let mut rng = Rng::seed_from(0xCA5E_000A);
+    let n = 16;
+    let pts = points(n, &mut rng);
+    let cost: Arc<Mat> = Arc::new(normalize_cost(&sq_euclidean_cost(&pts, &pts)));
+    let problem =
+        OtProblem::balanced(cost.clone(), histogram(n, &mut rng), histogram(n, &mut rng), 0.05);
+    let cache = ArtifactCache::new(1 << 30);
+    let shared = api::share_via_cache(&problem, &cache);
+    let CostSource::Shared(handle) = &shared.cost else {
+        panic!("dense problem should upgrade to a shared handle");
+    };
+    assert!(Arc::ptr_eq(&handle.artifacts().cost, &cost), "cost must be shared, not copied");
+    for i in 0..n {
+        for j in 0..n {
+            assert_eq!(
+                shared.cost.cost_at(i, j).to_bits(),
+                problem.cost.cost_at(i, j).to_bits()
+            );
+            assert_eq!(
+                shared.cost.kernel_at(i, j, 0.05).to_bits(),
+                problem.cost.kernel_at(i, j, 0.05).to_bits()
+            );
+        }
+    }
+}

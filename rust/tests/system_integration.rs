@@ -141,6 +141,7 @@ fn coordinator_backpressure_bounded_queue() {
         queue_cap: 1,
         max_batch: 1,
         batch_window: std::time::Duration::from_millis(1),
+        ..Default::default()
     });
     let mut rng = Rng::seed_from(0x54);
     let pts: Vec<Vec<f64>> = (0..40).map(|_| vec![rng.uniform() * 5.0, rng.uniform() * 5.0]).collect();

@@ -1,0 +1,106 @@
+//! Thread-count determinism wall for the parallelized dense builders:
+//! with `SPAR_SINK_THREADS=1` versus the default worker count, the
+//! chunked row loops in `ot::cost` (squared-Euclidean cost, WFR cost,
+//! Gibbs kernel) and the artifact construction built on them must
+//! produce bit-identical matrices — each entry is an independent
+//! function of its index, and this wall keeps accidental
+//! accumulation-order dependence from creeping in.
+//!
+//! Lives in its own integration binary because it mutates the
+//! `SPAR_SINK_THREADS` process environment; case counts scale with
+//! `PROPTEST_CASES`.
+
+use spar_sink::engine::{CostArtifacts, FormulationKey};
+use spar_sink::linalg::Mat;
+use spar_sink::ot::cost::{gibbs_kernel, sq_euclidean_cost, wfr_cost};
+use spar_sink::rng::Rng;
+
+const CASES: usize = 12;
+
+fn cases() -> usize {
+    std::env::var("PROPTEST_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(CASES)
+}
+
+fn assert_same_bits(tag: &str, a: &Mat, b: &Mat) {
+    assert_eq!((a.rows(), a.cols()), (b.rows(), b.cols()), "{tag}: shape");
+    for (x, y) in a.as_slice().iter().zip(b.as_slice()) {
+        assert_eq!(x.to_bits(), y.to_bits(), "{tag}: {x} vs {y}");
+    }
+}
+
+/// One test function (not several) so the env-var mutation cannot race
+/// against a sibling test in this binary.
+#[test]
+fn parallel_builders_are_thread_count_invariant() {
+    let mut master = Rng::seed_from(0x7D_0001);
+    for case in 0..cases() {
+        let seed = master.next_u64();
+        let mut rng = Rng::seed_from(seed);
+        let n = 8 + rng.gen_range(40);
+        let m = 8 + rng.gen_range(40);
+        let d = 1 + rng.gen_range(3);
+        let xs: Vec<Vec<f64>> =
+            (0..n).map(|_| (0..d).map(|_| rng.uniform() * 3.0).collect()).collect();
+        let ys: Vec<Vec<f64>> =
+            (0..m).map(|_| (0..d).map(|_| rng.uniform() * 3.0).collect()).collect();
+        let eta = 0.3 + rng.uniform() * 2.0;
+        let eps = 0.01 + rng.uniform() * 0.2;
+        let lambda = 0.5 + rng.uniform();
+
+        let build = || {
+            let sq = sq_euclidean_cost(&xs, &ys);
+            let wfr = wfr_cost(&xs, &ys, eta);
+            let gibbs = gibbs_kernel(&wfr, eps);
+            let arts = CostArtifacts::for_wfr_supports(
+                &xs,
+                &ys,
+                eta,
+                eps,
+                FormulationKey::unbalanced(lambda),
+            );
+            (sq, wfr, gibbs, arts)
+        };
+
+        // Serial reference…
+        std::env::set_var("SPAR_SINK_THREADS", "1");
+        let (sq1, wfr1, gibbs1, arts1) = build();
+        // …a forced odd worker count (uneven chunk boundaries)…
+        std::env::set_var("SPAR_SINK_THREADS", "3");
+        let (sq3, wfr3, gibbs3, arts3) = build();
+        // …and the default (available parallelism).
+        std::env::remove_var("SPAR_SINK_THREADS");
+        let (sqd, wfrd, gibbsd, artsd) = build();
+
+        for (tag, other_sq, other_wfr, other_gibbs, other_arts) in [
+            ("3 threads", &sq3, &wfr3, &gibbs3, &arts3),
+            ("default threads", &sqd, &wfrd, &gibbsd, &artsd),
+        ] {
+            let tag = format!("case {case} seed {seed} ({tag})");
+            assert_same_bits(&format!("{tag}: sq_euclidean_cost"), &sq1, other_sq);
+            assert_same_bits(&format!("{tag}: wfr_cost"), &wfr1, other_wfr);
+            assert_same_bits(&format!("{tag}: gibbs_kernel"), &gibbs1, other_gibbs);
+            assert_same_bits(&format!("{tag}: artifacts.cost"), &arts1.cost, &other_arts.cost);
+            assert_same_bits(
+                &format!("{tag}: artifacts.kernel"),
+                &arts1.kernel,
+                &other_arts.kernel,
+            );
+            assert_eq!(
+                arts1.fingerprint(),
+                other_arts.fingerprint(),
+                "{tag}: fingerprints diverged"
+            );
+            let f1 = arts1.uot_factor.as_ref().unwrap();
+            let f2 = other_arts.uot_factor.as_ref().unwrap();
+            for (x, y) in f1.beta_log_kernel.iter().zip(f2.beta_log_kernel.iter()) {
+                assert!(
+                    x.to_bits() == y.to_bits() || (x.is_nan() && y.is_nan()),
+                    "{tag}: uot factor {x} vs {y}"
+                );
+            }
+        }
+    }
+}
