@@ -178,5 +178,69 @@ fn main() {
         );
     }
 
+    // Many-ε concurrent warm-up — the single-flight shape: worker
+    // threads sweep distinct ε values over ONE support against one
+    // shared cache. Each ε is its own fingerprint, so each kernel
+    // builds exactly once. With 6 threads over 4 ε offsets, two pairs
+    // of threads start on the SAME ε at every step (structural
+    // same-fingerprint coalescing on the building slot) while the
+    // remaining threads hold DISTINCT ε — whose builds overlap instead
+    // of serializing behind the cache mutex (the pre-single-flight
+    // behavior, which made this sweep effectively sequential).
+    {
+        let n = 300;
+        let threads = 6usize;
+        let eps_sweep = [0.02, 0.05, 0.08, 0.12];
+        let (eta, lambda) = (3.0, 1.0);
+        let mut rng = Rng::seed_from(17);
+        let pts: Arc<Vec<Vec<f64>>> = Arc::new(
+            (0..n).map(|_| vec![rng.uniform() * 10.0, rng.uniform() * 10.0]).collect(),
+        );
+        let mass = |rng: &mut Rng| -> Arc<Vec<f64>> {
+            let mut m: Vec<f64> = (0..n).map(|_| rng.uniform() + 0.1).collect();
+            let s: f64 = m.iter().sum();
+            m.iter_mut().for_each(|x| *x /= s);
+            Arc::new(m)
+        };
+        let (a, b) = (mass(&mut rng), mass(&mut rng));
+        let key = FormulationKey::unbalanced(lambda);
+        let spec = SolverSpec::new(Method::SparSink).with_budget(8.0).with_seed(5);
+        bencher.bench(
+            format!(
+                "uot_many_eps_concurrent_warm/n={n}/eps={}/threads={threads}",
+                eps_sweep.len()
+            ),
+            || {
+                // Fresh cache per iteration: every ε's one-time build is
+                // inside the measurement, overlapping across threads.
+                let cache = ArtifactCache::new(1 << 30);
+                std::thread::scope(|scope| {
+                    for t in 0..threads {
+                        let (cache, pts, a, b, spec) =
+                            (&cache, pts.clone(), a.clone(), b.clone(), spec.clone());
+                        scope.spawn(move || {
+                            for k in 0..eps_sweep.len() {
+                                let eps = eps_sweep[(k + t) % eps_sweep.len()];
+                                let fingerprint =
+                                    Fingerprint::for_supports(&pts, &pts, Some(eta), eps, key);
+                                let handle = cache.get_or_build(fingerprint, || {
+                                    CostArtifacts::for_wfr_supports(&pts, &pts, eta, eps, key)
+                                });
+                                let problem = OtProblem::unbalanced(
+                                    CostSource::Shared(handle),
+                                    a.clone(),
+                                    b.clone(),
+                                    lambda,
+                                    eps,
+                                );
+                                std::hint::black_box(api::solve(&problem, &spec).unwrap());
+                            }
+                        });
+                    }
+                });
+            },
+        );
+    }
+
     println!("\n{}", bencher.report("bench_sparse"));
 }

@@ -29,12 +29,12 @@
 //! under [`crate::ot`] and [`crate::solvers`] remain as the thin
 //! paper-reproduction entry points the adapters call into.
 //!
-//! ```no_run
+//! ```
 //! use spar_sink::api::{self, Method, OtProblem, SolverSpec};
 //! use spar_sink::ot::cost::sq_euclidean_cost;
 //! use spar_sink::rng::Rng;
 //!
-//! let n = 256;
+//! let n = 64;
 //! let mut rng = Rng::seed_from(7);
 //! let pts: Vec<Vec<f64>> = (0..n).map(|_| vec![rng.uniform(), rng.uniform()]).collect();
 //! let a = vec![1.0 / n as f64; n];
@@ -43,8 +43,45 @@
 //! let exact = api::solve(&problem, &SolverSpec::new(Method::Sinkhorn)).unwrap();
 //! let spec = SolverSpec::new(Method::SparSink).with_budget(8.0).with_seed(7);
 //! let approx = api::solve(&problem, &spec).unwrap();
+//! assert!(approx.nnz().unwrap() > 0);
 //! println!("exact {:.6} sparse {:.6} ({:?}, nnz {:?})",
 //!          exact.objective, approx.objective, approx.wall_time, approx.nnz());
+//! ```
+//!
+//! A batch over one support amortizes the kernel-side work through the
+//! global [`ArtifactCache`](crate::engine::ArtifactCache): slot `i`
+//! runs at seed `spec.seed + i`, and `solve_batch(&[p], spec)[0]` is
+//! bitwise-identical to `solve(&p, spec)`:
+//!
+//! ```
+//! use spar_sink::api::{self, Method, OtProblem, SolverSpec};
+//! use spar_sink::engine::ArtifactCache;
+//! use spar_sink::ot::cost::sq_euclidean_cost;
+//! use spar_sink::rng::Rng;
+//!
+//! let n = 48;
+//! let mut rng = Rng::seed_from(3);
+//! let pts: Vec<Vec<f64>> = (0..n).map(|_| vec![rng.uniform(), rng.uniform()]).collect();
+//! let cost = std::sync::Arc::new(sq_euclidean_cost(&pts, &pts));
+//! let a = vec![1.0 / n as f64; n];
+//! // Three replicates of one problem = a three-seed sweep.
+//! let problems: Vec<OtProblem> =
+//!     (0..3).map(|_| OtProblem::balanced(cost.clone(), a.clone(), a.clone(), 0.05)).collect();
+//! let spec = SolverSpec::new(Method::SparSink).with_budget(8.0).with_seed(41);
+//!
+//! let cache = ArtifactCache::new(64 << 20);
+//! let solutions = api::solve_batch_with_cache(&problems, &spec, &cache);
+//! assert_eq!(solutions.len(), 3);
+//! assert!(solutions.iter().all(|s| s.is_ok()));
+//! // One kernel materialization served all three solves.
+//! let stats = cache.stats();
+//! assert_eq!((stats.misses, stats.hits), (1, 2));
+//! // Slot 0 is bitwise the solo solve.
+//! let solo = api::solve(&problems[0], &spec).unwrap();
+//! assert_eq!(
+//!     solo.objective.to_bits(),
+//!     solutions[0].as_ref().unwrap().objective.to_bits()
+//! );
 //! ```
 
 pub mod problem;

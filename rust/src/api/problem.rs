@@ -83,6 +83,7 @@ impl CostSource {
         }
     }
 
+    /// Number of source-side support points (cost rows).
     pub fn rows(&self) -> usize {
         match self {
             CostSource::Dense(m) => m.rows(),
@@ -91,6 +92,7 @@ impl CostSource {
         }
     }
 
+    /// Number of target-side support points (cost columns).
     pub fn cols(&self) -> usize {
         match self {
             CostSource::Dense(m) => m.cols(),
@@ -232,6 +234,7 @@ pub enum Formulation {
 /// [`SolverSpec`](crate::api::SolverSpec)s for comparison.
 #[derive(Clone, Debug)]
 pub struct OtProblem {
+    /// Where the ground cost / Gibbs kernel comes from.
     pub cost: CostSource,
     /// Source marginal (row masses). Empty for barycenter problems.
     pub a: Arc<Vec<f64>>,
@@ -239,6 +242,7 @@ pub struct OtProblem {
     pub b: Arc<Vec<f64>>,
     /// Entropic regularization ε.
     pub eps: f64,
+    /// Which entropic transport problem is being solved.
     pub formulation: Formulation,
 }
 

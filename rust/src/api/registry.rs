@@ -16,9 +16,9 @@ use crate::engine::{
 };
 use crate::error::{Error, Result};
 use crate::linalg::Mat;
-use crate::metrics::s0;
 use crate::rng::Rng;
 use crate::solvers::backend::ScalingBackend;
+use crate::solvers::sketch_budget;
 use crate::solvers::greenkhorn::{greenkhorn_ot, GreenkhornParams};
 use crate::solvers::nys_sink::{nys_sink_ot, nys_sink_uot, NysSinkParams};
 use crate::solvers::rand_sink::rand_sink_solve;
@@ -153,12 +153,16 @@ impl Solver for NysSinkSolver {
 
     fn solve(&self, problem: &OtProblem, spec: &SolverSpec, rng: &mut Rng) -> Result<Solution> {
         let (a, b, eps) = (&problem.a[..], &problem.b[..], problem.eps);
-        let n = a.len();
-        // Matched-budget rank r = ceil(s/n): the paper's protocol for
-        // comparing at equal sampled-entry budgets.
-        let rank = spec
-            .rank
-            .unwrap_or_else(|| ((spec.s_multiplier * s0(n) / n.max(1) as f64).ceil() as usize).max(1));
+        // Matched-budget rank r = ceil(s / max(n, m)): the paper's
+        // protocol for comparing at equal sampled-entry budgets, with
+        // `s` resolved through the crate-wide `sketch_budget`
+        // convention (identical to the historical s₀(n)/n on the
+        // square supports the paper evaluates).
+        let dim = a.len().max(b.len()).max(1);
+        let rank = spec.rank.unwrap_or_else(|| {
+            ((sketch_budget(spec.s_multiplier, a.len(), b.len()) / dim as f64).ceil() as usize)
+                .max(1)
+        });
         let params = NysSinkParams {
             sinkhorn: spec.sinkhorn_params(),
             robust_clip: spec.robust_clip,
@@ -285,15 +289,14 @@ pub fn formulation_key(formulation: &Formulation) -> FormulationKey {
 
 /// Upgrade a dense-cost problem to a [`CostSource::Shared`] handle via
 /// `cache`, so repeated solves on one cost reuse a single
-/// kernel/factor materialization. Pass-through cases (problem returned
-/// unchanged): oracle sources (un-fingerprintable without
-/// materializing), already-shared problems, grids beyond
-/// [`SHARED_ARTIFACT_ENTRY_CAP`], and RECTANGULAR dense costs — the
-/// shared solver arms resolve sketch budgets against `max(n, m)` (the
-/// distance service's convention) while the dense paper arms use
-/// `s₀(a.len())`, so upgrading a non-square problem would silently
-/// change its sketch; square problems (every paper workload this
-/// engine targets) are bitwise-unaffected.
+/// kernel/factor materialization. Square AND rectangular dense costs
+/// upgrade — every sketch solver resolves its budget through the one
+/// [`sketch_budget`](crate::solvers::sketch_budget) convention
+/// `s₀(max(n, m))` in every cost arm, so the upgrade is
+/// bitwise-invisible regardless of shape. Pass-through cases (problem
+/// returned unchanged): oracle sources (un-fingerprintable without
+/// materializing), already-shared problems, and grids beyond
+/// [`SHARED_ARTIFACT_ENTRY_CAP`].
 pub fn share_via_cache(problem: &OtProblem, cache: &ArtifactCache) -> OtProblem {
     share_with_memo(problem, cache, &mut Vec::new())
 }
@@ -312,7 +315,7 @@ fn share_with_memo(
         return problem.clone();
     };
     let (rows, cols) = (cost.rows(), cost.cols());
-    if rows != cols || rows * cols > SHARED_ARTIFACT_ENTRY_CAP || rows * cols == 0 {
+    if rows * cols > SHARED_ARTIFACT_ENTRY_CAP || rows * cols == 0 {
         return problem.clone();
     }
     let key = formulation_key(&problem.formulation);
@@ -339,11 +342,12 @@ fn share_with_memo(
 }
 
 /// Solve a batch of problems through the process-global
-/// [`ArtifactCache`](crate::engine::ArtifactCache): square dense costs
-/// are upgraded to shared artifacts (content-addressed, so problems on
-/// one support build the kernel-side work exactly once per (η, ε,
-/// formulation); see [`share_via_cache`] for the pass-through cases),
-/// then each problem dispatches through [`solve`].
+/// [`ArtifactCache`](crate::engine::ArtifactCache): dense costs —
+/// square and rectangular alike — are upgraded to shared artifacts
+/// (content-addressed, so problems on one support build the
+/// kernel-side work exactly once per (η, ε, formulation); see
+/// [`share_via_cache`] for the pass-through cases), then each problem
+/// dispatches through [`solve`].
 ///
 /// Problem `i` is seeded with `spec.seed + i` (wrapping), so a batch of
 /// N clones of one problem is an N-replicate sweep and

@@ -89,9 +89,12 @@ pub fn parse_backend(name: &str) -> Option<ScalingBackend> {
 /// log-domain below it or on numerical failure).
 #[derive(Clone, Debug)]
 pub struct SolverSpec {
+    /// Which registered solver runs the problem.
     pub method: Method,
-    /// Sample budget in units of s₀(n) = 10⁻³ n log⁴ n (sparsified
-    /// methods; also sets the matched Nyström rank when `rank` is None).
+    /// Sample budget in units of the crate-wide
+    /// [`sketch_budget`](crate::solvers::sketch_budget) convention
+    /// `s₀(max(n, m))`, s₀(n) = 10⁻³ n log⁴ n (sparsified methods; also
+    /// sets the matched Nyström rank when `rank` is None).
     pub s_multiplier: f64,
     /// Scaling-backend override; `None` = the solver's default policy
     /// (`Auto` for the sparse family).
@@ -119,6 +122,8 @@ pub struct SolverSpec {
 }
 
 impl SolverSpec {
+    /// A spec for `method` with the paper-default knobs (see the struct
+    /// docs); refine it with the `with_*` builders.
     pub fn new(method: Method) -> Self {
         SolverSpec {
             method,
@@ -148,46 +153,55 @@ impl SolverSpec {
         self
     }
 
+    /// Stopping threshold δ on the L1 scaling displacement.
     pub fn with_tolerance(mut self, delta: f64) -> Self {
         self.delta = delta;
         self
     }
 
+    /// Iteration cap for the scaling loop.
     pub fn with_max_iters(mut self, max_iters: usize) -> Self {
         self.max_iters = max_iters;
         self
     }
 
+    /// Error instead of best-effort when the iteration cap is hit.
     pub fn with_strict(mut self, strict: bool) -> Self {
         self.strict = strict;
         self
     }
 
+    /// RNG seed for the sparsifier / pivot sampling.
     pub fn with_seed(mut self, seed: u64) -> Self {
         self.seed = seed;
         self
     }
 
+    /// Spar-Sink shrinkage θ (1 = pure importance sampling).
     pub fn with_shrinkage(mut self, shrinkage: f64) -> Self {
         self.shrinkage = shrinkage;
         self
     }
 
+    /// Explicit Nys-Sink rank (instead of the matched budget).
     pub fn with_rank(mut self, rank: usize) -> Self {
         self.rank = Some(rank);
         self
     }
 
+    /// Robust Nys-Sink: clamp scalings to `[1/clip, clip]`.
     pub fn with_robust_clip(mut self, clip: f64) -> Self {
         self.robust_clip = Some(clip);
         self
     }
 
+    /// Screenkhorn decimation factor κ (keeps n/κ active points).
     pub fn with_decimation(mut self, decimation: usize) -> Self {
         self.decimation = decimation;
         self
     }
 
+    /// Greenkhorn update cap factor (max updates = factor · n).
     pub fn with_max_updates_factor(mut self, factor: usize) -> Self {
         self.max_updates_factor = factor;
         self

@@ -8,22 +8,27 @@ use std::time::{Duration, Instant};
 /// One benchmark's measurements.
 #[derive(Clone, Debug)]
 pub struct BenchResult {
+    /// Benchmark label, as printed in the report.
     pub name: String,
+    /// Per-iteration wall times.
     pub samples: Vec<Duration>,
 }
 
 impl BenchResult {
+    /// Mean sample time.
     pub fn mean(&self) -> Duration {
         let total: Duration = self.samples.iter().sum();
         total / self.samples.len().max(1) as u32
     }
 
+    /// Median sample time.
     pub fn median(&self) -> Duration {
         let mut v = self.samples.clone();
         v.sort();
         v[v.len() / 2]
     }
 
+    /// Sample standard deviation.
     pub fn stddev(&self) -> Duration {
         let mean = self.mean().as_secs_f64();
         let var = self
@@ -35,6 +40,7 @@ impl BenchResult {
         Duration::from_secs_f64(var.sqrt())
     }
 
+    /// One-line rendering: name, mean, median, sd, sample count.
     pub fn render(&self) -> String {
         format!(
             "{:<44} mean {:>12.3?}  median {:>12.3?}  sd {:>10.3?}  ({} samples)",
@@ -49,9 +55,13 @@ impl BenchResult {
 
 /// Benchmark runner with warmup and a time budget per benchmark.
 pub struct Bencher {
+    /// Untimed warmup iterations before sampling.
     pub warmup_iters: usize,
+    /// Samples collected even past the time budget.
     pub min_samples: usize,
+    /// Hard cap on samples per benchmark.
     pub max_samples: usize,
+    /// Sampling stops after this much wall time (past `min_samples`).
     pub time_budget: Duration,
     results: Vec<BenchResult>,
 }
@@ -69,6 +79,7 @@ impl Default for Bencher {
 }
 
 impl Bencher {
+    /// A low-budget runner for smoke-testing bench targets.
     pub fn quick() -> Self {
         Bencher {
             warmup_iters: 1,

@@ -45,14 +45,18 @@ impl Args {
         args
     }
 
+    /// Whether bare `--name` was passed.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// The value of `--key value` / `--key=value`, if present.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.options.get(key).map(|s| s.as_str())
     }
 
+    /// Parse an option's value, falling back to `default` when absent
+    /// or unparsable.
     pub fn get_parsed<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
@@ -67,25 +71,37 @@ pub fn usage() -> String {
      \n\
      COMMANDS:\n\
        experiment <id|all> [--full] [--out results/]   regenerate a paper figure/table\n\
-       solve --problem ot|uot|barycenter [--n N] [--eps E] [--lambda L]\n\
-             [--method M] [--backend B] [--seed S]     one-off synthetic solve\n\
-             (dispatches through api::solve_batch — the dense cost is\n\
-             upgraded to a shared artifact in the global cache, so the\n\
-             exact reference and the approx run share one kernel build)\n\
+       solve --problem ot|uot|barycenter [--n N] [--d D] [--eps E] [--lambda L]\n\
+             [--s MULT] [--method M] [--backend B] [--seed S]\n\
+             one-off synthetic solve; dispatches through api::solve_batch —\n\
+             the dense cost (square or rectangular) is upgraded to a shared\n\
+             artifact in the global cache, so the exact reference and the\n\
+             approx run share one kernel build; prints the cache counters\n\
+             (hits/misses/evictions, resident entries + in-flight builds,\n\
+             bytes vs budget) after both solves\n\
        serve [--videos V] [--frames F] [--workers W] [--method M] [--eps E]\n\
              [--backend B] [--threshold T] [--shared-grid]\n\
              run the batched WFR distance service; --shared-grid keeps\n\
              every frame on the full pixel grid so all pairwise jobs\n\
              share one support and the coordinator's artifact cache\n\
-             builds cost/kernel once per (eta, eps) — cache hit/miss\n\
-             gauges are reported in the final metrics; --threshold T\n\
-             (default 0.05) is the per-frame support cutoff otherwise\n\
+             builds cost/kernel once per (eta, eps) — workers racing a\n\
+             build coalesce on its single-flight slot, distinct (eta,\n\
+             eps) builds overlap, and the final metrics include the full\n\
+             cache gauge line (hits / misses / evictions, resident\n\
+             entries, `building` = in-flight builds, bytes vs budget);\n\
+             --threshold T (default 0.05) is the per-frame support\n\
+             cutoff when --shared-grid is NOT set (pixels below T of\n\
+             the frame max are dropped, so each frame gets its own\n\
+             support and cache sharing across frames is incidental)\n\
        runtime-info                                    PJRT platform + artifact menu (xla feature)\n\
        list                                            list available experiments\n\
      \n\
      OPTIONS:\n\
        --full        paper-scale parameters (default: quick profile)\n\
        --out DIR     also write JSON rows to DIR/<id>.json\n\
+       --s MULT      sketch budget multiplier (default 8): every sketch\n\
+                     solver samples s = MULT * s0(max(n, m)) expected\n\
+                     entries, s0(n) = 1e-3 n ln^4 n\n\
        --method M    any solver registered in the unified API:\n\
                      sinkhorn|spar-sink|spar-sink-log|rand-sink|nys-sink|\n\
                      greenkhorn|screenkhorn|spar-ibp\n\
@@ -99,7 +115,15 @@ pub fn usage() -> String {
                      auto (multiplicative above the eps threshold, log-domain\n\
                      below it or on numerical failure/collapse; see\n\
                      `experiment smalleps`); rand-sink stays the\n\
-                     multiplicative baseline unless overridden\n"
+                     multiplicative baseline unless overridden\n\
+     \n\
+     ENVIRONMENT:\n\
+       SPAR_SINK_CACHE_BYTES   byte budget of the global artifact cache\n\
+                               (default 512 MiB); the coordinator's cache\n\
+                               is sized by CoordinatorConfig.cache_bytes\n\
+       SPAR_SINK_THREADS       worker threads for the parallel cost/kernel\n\
+                               builders (results are bit-identical at any\n\
+                               thread count)\n"
         .to_string()
 }
 

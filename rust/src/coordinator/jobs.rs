@@ -15,20 +15,25 @@ pub use crate::api::Method;
 /// `Arc` so a video's frames are stored once).
 #[derive(Clone, Debug)]
 pub struct Measure {
+    /// Support points (one coordinate vector per atom).
     pub points: Arc<Vec<Vec<f64>>>,
+    /// Mass at each support point (not necessarily normalized — UOT).
     pub mass: Arc<Vec<f64>>,
 }
 
 impl Measure {
+    /// Wrap a support and its masses (must have equal lengths).
     pub fn new(points: Vec<Vec<f64>>, mass: Vec<f64>) -> Self {
         assert_eq!(points.len(), mass.len(), "support/mass length mismatch");
         Measure { points: Arc::new(points), mass: Arc::new(mass) }
     }
 
+    /// Number of support points.
     pub fn len(&self) -> usize {
         self.mass.len()
     }
 
+    /// Whether the measure has no support points.
     pub fn is_empty(&self) -> bool {
         self.mass.is_empty()
     }
@@ -75,9 +80,13 @@ impl Default for ProblemSpec {
 pub struct DistanceJob {
     /// Client-assigned id, echoed in the result.
     pub id: u64,
+    /// Source measure (cost rows).
     pub source: Measure,
+    /// Target measure (cost columns).
     pub target: Measure,
+    /// Which registered solver runs the job.
     pub method: Method,
+    /// Problem parameters (ε, λ, η, budget, stopping rule, backend).
     pub spec: ProblemSpec,
     /// RNG seed for the sparsifier (deterministic per job).
     pub seed: u64,
@@ -100,7 +109,9 @@ pub struct BarycenterJob {
     pub marginals: Vec<Vec<f64>>,
     /// Barycentric weights (normalized by the solver).
     pub weights: Vec<f64>,
+    /// Which registered solver runs the job.
     pub method: Method,
+    /// Problem parameters (ε, budget, stopping rule, backend).
     pub spec: ProblemSpec,
     /// RNG seed for the sparsifier (deterministic per job).
     pub seed: u64,
@@ -116,6 +127,7 @@ impl BarycenterJob {
 /// Result of a barycenter job.
 #[derive(Clone, Debug)]
 pub struct BarycenterResult {
+    /// The id the job was submitted with.
     pub id: u64,
     /// The barycenter histogram `q` (empty on error).
     pub q: Vec<f64>,
@@ -137,6 +149,7 @@ pub struct BarycenterResult {
 /// Result of a distance job.
 #[derive(Clone, Debug)]
 pub struct DistanceResult {
+    /// The id the job was submitted with.
     pub id: u64,
     /// WFR distance (sqrt of the UOT objective, clamped at 0).
     pub distance: f64,

@@ -38,6 +38,7 @@ impl Default for LatencyHistogram {
 }
 
 impl LatencyHistogram {
+    /// An empty histogram.
     pub fn new() -> Self {
         LatencyHistogram {
             buckets: std::array::from_fn(|_| AtomicU64::new(0)),
@@ -47,6 +48,7 @@ impl LatencyHistogram {
         }
     }
 
+    /// Record one latency sample.
     pub fn record(&self, d: Duration) {
         let us = d.as_micros() as u64;
         self.buckets[bucket_for(d)].fetch_add(1, Ordering::Relaxed);
@@ -55,6 +57,7 @@ impl LatencyHistogram {
         self.max_us.fetch_max(us, Ordering::Relaxed);
     }
 
+    /// Number of recorded samples.
     pub fn count(&self) -> u64 {
         self.count.load(Ordering::Relaxed)
     }
@@ -93,6 +96,7 @@ impl LatencyHistogram {
         Duration::from_micros(self.max_us.load(Ordering::Relaxed))
     }
 
+    /// Largest recorded latency.
     pub fn max(&self) -> Duration {
         Duration::from_micros(self.max_us.load(Ordering::Relaxed))
     }
@@ -101,13 +105,21 @@ impl LatencyHistogram {
 /// Point-in-time snapshot of service metrics.
 #[derive(Clone, Debug)]
 pub struct MetricsSnapshot {
+    /// Jobs accepted into the queue.
     pub submitted: u64,
+    /// Jobs completed successfully.
     pub completed: u64,
+    /// Jobs that came back with a per-job error.
     pub failed: u64,
+    /// Batches flushed by the batcher.
     pub batches: u64,
+    /// Mean end-to-end job latency (queue + solve).
     pub mean_latency: Duration,
+    /// Median end-to-end job latency (bucket upper bound).
     pub p50_latency: Duration,
+    /// 99th-percentile end-to-end job latency (bucket upper bound).
     pub p99_latency: Duration,
+    /// Largest observed end-to-end job latency.
     pub max_latency: Duration,
     /// Jobs per second over the service lifetime.
     pub throughput: f64,
@@ -122,13 +134,17 @@ pub struct MetricsSnapshot {
     /// Gauge: escalated jobs / completed jobs.
     pub log_escalation_rate: f64,
     /// Shared-cost artifact cache counters/gauges: hits, misses,
-    /// evictions, resident entries/bytes, byte budget. A pairwise run
-    /// over T frames on one shared support shows exactly one miss per
-    /// (η, ε, formulation) and hits for every other job.
+    /// evictions, resident entries/bytes, in-flight builds (the
+    /// `building` gauge — single-flight slots under construction), and
+    /// the byte budget. A pairwise run over T frames on one shared
+    /// support shows exactly one miss per (η, ε, formulation) and hits
+    /// for every other job — including jobs that arrived while the
+    /// build was in flight and blocked on its slot.
     pub cache: CacheStats,
 }
 
 impl MetricsSnapshot {
+    /// Multi-line human-readable rendering (the `serve` summary).
     pub fn render(&self) -> String {
         let escalations = if self.log_escalations.is_empty() {
             "none".to_string()

@@ -128,8 +128,11 @@ struct Shared {
     latency: LatencyHistogram,
     started: Instant,
     stopping: AtomicBool,
-    /// Shared-cost artifact cache (content-addressed, byte-budget LRU);
-    /// workers of both job shapes resolve their geometry through it.
+    /// Shared-cost artifact cache (content-addressed, byte-budget LRU,
+    /// per-fingerprint single-flight); workers of both job shapes
+    /// resolve their geometry through it CONCURRENTLY — a long build on
+    /// one fingerprint (one ε, say) never stalls workers hitting or
+    /// building other fingerprints.
     cache: ArtifactCache,
 }
 
@@ -429,7 +432,10 @@ fn run_batch(batch: Batch, shared: &Arc<Shared>) {
 /// geometry through the service's [`ArtifactCache`]: the WFR cost, the
 /// Gibbs kernel and the cost-dependent sampling factor are built once
 /// per (support pair, η, ε, λ) and every other job on the same
-/// fingerprint is a cache hit ("reuse + reweight"). Warm solutions are
+/// fingerprint is a cache hit ("reuse + reweight") — jobs racing the
+/// build block on its single-flight slot, while jobs on other
+/// fingerprints (a many-ε sweep) build and hit unimpeded. Warm
+/// solutions are
 /// bitwise-identical to the oracle cold path, which oversized jobs keep
 /// (kernel and cost stay entry oracles, never materialized densely).
 fn solve_job(

@@ -21,12 +21,16 @@ use crate::rng::Rng;
 /// Cardiac-function condition to simulate.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Health {
+    /// Regular cycle with full contraction amplitude.
     Normal,
+    /// Reduced ejection fraction (damped contraction).
     HeartFailure,
+    /// Irregular cycle lengths.
     Arrhythmia,
 }
 
 impl Health {
+    /// Label used in experiment output rows.
     pub fn name(&self) -> &'static str {
         match self {
             Health::Normal => "health",
@@ -61,10 +65,13 @@ impl Default for EchoConfig {
 /// ground-truth ED/ES frame indices per cycle.
 #[derive(Clone, Debug)]
 pub struct EchoVideo {
+    /// Frame side length in pixels.
     pub size: usize,
+    /// One `size*size` gray-value buffer per frame.
     pub frames: Vec<Vec<f64>>,
     /// (ES index, ED index) pairs, ES before the following ED, per cycle.
     pub es_frames: Vec<usize>,
+    /// End-diastole frame indices, one per cycle.
     pub ed_frames: Vec<usize>,
     /// The volume phase signal used to generate the video (diagnostics).
     pub phase: Vec<f64>,

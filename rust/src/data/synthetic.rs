@@ -17,16 +17,21 @@ use crate::rng::Rng;
 /// Scenario tag for the data-generation patterns of Section 5.1.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Scenario {
+    /// C1: Gaussian point clouds, near-uniform marginals.
     C1,
+    /// C2: heavier-tailed marginal skew.
     C2,
+    /// C3: strongly clustered supports.
     C3,
 }
 
 impl Scenario {
+    /// All three scenarios, in paper order.
     pub fn all() -> [Scenario; 3] {
         [Scenario::C1, Scenario::C2, Scenario::C3]
     }
 
+    /// Label used in experiment output rows.
     pub fn name(&self) -> &'static str {
         match self {
             Scenario::C1 => "C1",
@@ -39,16 +44,21 @@ impl Scenario {
 /// WFR kernel sparsity regimes (Section 5.1): target nnz fractions.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SparsityRegime {
+    /// R1: densest regime (largest target kernel density).
     R1,
+    /// R2: intermediate density.
     R2,
+    /// R3: sparsest regime.
     R3,
 }
 
 impl SparsityRegime {
+    /// All three regimes, in paper order.
     pub fn all() -> [SparsityRegime; 3] {
         [SparsityRegime::R1, SparsityRegime::R2, SparsityRegime::R3]
     }
 
+    /// Label used in experiment output rows.
     pub fn name(&self) -> &'static str {
         match self {
             SparsityRegime::R1 => "R1",

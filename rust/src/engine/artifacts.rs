@@ -44,8 +44,14 @@ pub const SHARED_ARTIFACT_ENTRY_CAP: usize = crate::sparse::sampling::MATERIALIZ
 /// the unbalanced sampling factor `β·ln K` depends on it.
 #[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
 pub enum FormulationKey {
+    /// Balanced entropic OT.
     Balanced,
-    Unbalanced { lambda_bits: u64 },
+    /// Unbalanced entropic OT at a bit-exact λ.
+    Unbalanced {
+        /// `λ.to_bits()` — λ enters the fingerprint bit-exactly.
+        lambda_bits: u64,
+    },
+    /// Fixed-support barycenter (shared square support).
     Barycenter,
 }
 
@@ -165,10 +171,12 @@ impl Fingerprint {
         }
     }
 
+    /// Source-side support size (cost rows).
     pub fn rows(&self) -> usize {
         self.rows as usize
     }
 
+    /// Target-side support size (cost columns).
     pub fn cols(&self) -> usize {
         self.cols as usize
     }
@@ -333,14 +341,17 @@ impl CostArtifacts {
             .get_or_init(|| dot(self.kernel.as_slice(), self.kernel.as_slice()).sqrt())
     }
 
+    /// The content address these artifacts were built for.
     pub fn fingerprint(&self) -> Fingerprint {
         self.fingerprint
     }
 
+    /// Source-side support size (cost rows).
     pub fn rows(&self) -> usize {
         self.cost.rows()
     }
 
+    /// Target-side support size (cost columns).
     pub fn cols(&self) -> usize {
         self.cost.cols()
     }
@@ -393,10 +404,12 @@ impl std::fmt::Debug for CostArtifacts {
 pub struct CostHandle(Arc<CostArtifacts>);
 
 impl CostHandle {
+    /// Wrap shared artifacts in a handle.
     pub fn new(artifacts: Arc<CostArtifacts>) -> Self {
         CostHandle(artifacts)
     }
 
+    /// Borrow the underlying artifacts.
     pub fn artifacts(&self) -> &CostArtifacts {
         &self.0
     }

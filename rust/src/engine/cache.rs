@@ -1,17 +1,25 @@
 //! Content-addressed artifact cache: [`Fingerprint`] →
-//! [`CostArtifacts`] with a byte-budget LRU and hit/miss/eviction
-//! counters.
+//! [`CostArtifacts`] with a byte-budget LRU, per-fingerprint
+//! single-flight builds, and hit/miss/eviction counters.
 //!
 //! Consumers call [`ArtifactCache::get_or_build`]: the first caller for
-//! a fingerprint builds (under the lock, so artifacts are constructed
-//! exactly once per fingerprint even with many workers racing); every
-//! later caller gets the resident `Arc`. Eviction keeps resident bytes
-//! at or below the budget at all times — an artifact larger than the
-//! whole budget is handed to its caller but never retained.
+//! a fingerprint becomes its builder; everyone else either gets the
+//! resident `Arc` immediately (a hit) or — while the build is in
+//! flight — blocks on that fingerprint's slot and receives the built
+//! artifacts when they publish (also a hit: the build ran exactly once).
+//! Builds run OUTSIDE the map lock, so a long kernel build on one
+//! fingerprint never stalls lookups or builds on other fingerprints —
+//! the many-ε sweep shape (`fig11`, `smalleps`) where every ε is its own
+//! fingerprint. Eviction keeps resident bytes at or below the budget at
+//! all times: accounting happens at publish time, a building slot is
+//! never evicted, and an artifact larger than the whole budget is handed
+//! to its caller (and any waiters) but never retained. A build that
+//! panics poisons nothing permanently — the slot is cleared, waiters
+//! wake and retry, and the next caller builds afresh.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 use super::artifacts::{CostArtifacts, CostHandle, Fingerprint};
 
@@ -23,15 +31,19 @@ pub const DEFAULT_CACHE_BYTES: usize = 512 << 20;
 /// [`MetricsSnapshot`](crate::coordinator::MetricsSnapshot).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct CacheStats {
-    /// Lookups served from a resident artifact.
+    /// Lookups served from a resident artifact — including lookups that
+    /// blocked on an in-flight build and received its published result.
     pub hits: u64,
-    /// Lookups that had to build.
+    /// Lookups that had to build (exactly one per single-flight group).
     pub misses: u64,
     /// Artifacts dropped to respect the byte budget (including
     /// oversized artifacts never retained).
     pub evictions: u64,
-    /// Resident artifact count.
+    /// Resident artifact count (ready slots only).
     pub entries: usize,
+    /// In-flight builds (building slots; they hold no resident bytes
+    /// and are never evicted).
+    pub building: usize,
     /// Resident bytes (always ≤ `byte_budget`).
     pub bytes: usize,
     /// Configured byte budget.
@@ -42,25 +54,57 @@ impl CacheStats {
     /// One-line rendering for service metrics output.
     pub fn render(&self) -> String {
         format!(
-            "{} hits / {} misses / {} evictions, {} entries ({} B / {} B budget)",
-            self.hits, self.misses, self.evictions, self.entries, self.bytes, self.byte_budget
+            "{} hits / {} misses / {} evictions, {} entries + {} building ({} B / {} B budget)",
+            self.hits,
+            self.misses,
+            self.evictions,
+            self.entries,
+            self.building,
+            self.bytes,
+            self.byte_budget
         )
     }
 }
 
-struct Slot {
+/// Shared state of one in-flight build. Waiters grab an `Arc` to it
+/// under the map lock, then wait on `cond` (paired with the map mutex)
+/// until `outcome` is set: `Some(artifacts)` = published (possibly
+/// oversized, i.e. not resident), `None` = the build panicked and the
+/// slot was cleared — wake up and retry from the top.
+struct BuildState {
+    cond: Condvar,
+    outcome: OnceLock<Option<Arc<CostArtifacts>>>,
+}
+
+impl BuildState {
+    fn new() -> Self {
+        BuildState { cond: Condvar::new(), outcome: OnceLock::new() }
+    }
+}
+
+/// A resident (published) artifact plus its LRU accounting.
+struct ReadySlot {
     artifacts: Arc<CostArtifacts>,
     bytes: usize,
     last_used: u64,
 }
 
+/// One map slot: either an in-flight single-flight build or a resident
+/// artifact.
+enum Slot {
+    Building(Arc<BuildState>),
+    Ready(ReadySlot),
+}
+
 struct Inner {
     entries: HashMap<Fingerprint, Slot>,
+    /// Resident bytes across `Ready` slots (building slots hold none).
     bytes: usize,
     tick: u64,
 }
 
-/// The content-addressed, byte-budgeted LRU artifact cache.
+/// The content-addressed, byte-budgeted LRU artifact cache with
+/// per-fingerprint single-flight builds.
 pub struct ArtifactCache {
     byte_budget: usize,
     inner: Mutex<Inner>,
@@ -69,7 +113,38 @@ pub struct ArtifactCache {
     evictions: AtomicU64,
 }
 
+/// Clears a building slot if its build unwinds, so a panicking build
+/// never wedges later callers: the slot is removed, the outcome is
+/// marked poisoned, and every waiter is woken to retry. Defused (via
+/// `std::mem::forget`) on the successful publish path.
+struct BuildGuard<'a> {
+    cache: &'a ArtifactCache,
+    fingerprint: Fingerprint,
+    state: &'a Arc<BuildState>,
+}
+
+impl Drop for BuildGuard<'_> {
+    fn drop(&mut self) {
+        let mut inner = self.cache.inner.lock().unwrap();
+        if matches!(
+            inner.entries.get(&self.fingerprint),
+            Some(Slot::Building(s)) if Arc::ptr_eq(s, self.state)
+        ) {
+            inner.entries.remove(&self.fingerprint);
+        }
+        // Mark the outcome poisoned only AFTER the slot is out of the
+        // map, and under the map lock: lookups check the outcome while
+        // holding that lock, so none can ever observe a still-mapped
+        // building slot with a poisoned outcome — which would send its
+        // retry loop spinning without ever releasing the mutex.
+        let _ = self.state.outcome.set(None);
+        drop(inner);
+        self.state.cond.notify_all();
+    }
+}
+
 impl ArtifactCache {
+    /// A cache retaining at most `byte_budget` bytes of artifacts.
     pub fn new(byte_budget: usize) -> Self {
         ArtifactCache {
             byte_budget,
@@ -91,87 +166,166 @@ impl ArtifactCache {
 
     /// Look up a resident artifact (refreshes its LRU position; counts
     /// as neither hit nor miss — use [`ArtifactCache::get_or_build`] on
-    /// solve paths).
+    /// solve paths). Returns `None` for absent fingerprints AND for
+    /// builds still in flight — `peek` never blocks.
     pub fn peek(&self, fingerprint: &Fingerprint) -> Option<CostHandle> {
         let mut inner = self.inner.lock().unwrap();
         inner.tick += 1;
         let tick = inner.tick;
-        inner.entries.get_mut(fingerprint).map(|slot| {
-            slot.last_used = tick;
-            CostHandle::new(slot.artifacts.clone())
-        })
+        match inner.entries.get_mut(fingerprint) {
+            Some(Slot::Ready(slot)) => {
+                slot.last_used = tick;
+                Some(CostHandle::new(slot.artifacts.clone()))
+            }
+            _ => None,
+        }
     }
 
     /// Return the resident artifact for `fingerprint`, building it via
-    /// `build` on a miss. The build runs under the cache lock, so
-    /// concurrent workers construct each artifact exactly once — the
-    /// deliberate tradeoff being that a long O(n·m) build briefly
-    /// stalls hits on OTHER fingerprints too. That is still strictly
-    /// better than the cold path (where every worker paid the build),
-    /// and per-fingerprint single-flight is the noted follow-up for
-    /// many-ε workloads (see ROADMAP).
+    /// `build` on a miss.
+    ///
+    /// Single-flight, per fingerprint: the first caller inserts a
+    /// building slot, releases the map lock, builds OUTSIDE it, and
+    /// publishes; concurrent callers for the SAME fingerprint block on
+    /// the slot and receive the published `Arc` (counted as hits — the
+    /// build ran exactly once), while callers for OTHER fingerprints
+    /// hit, miss, and build entirely unimpeded. LRU accounting and
+    /// eviction happen at publish time; a building slot is never
+    /// evicted. If `build` panics, the slot is cleared and waiters
+    /// retry, so the next caller builds afresh instead of deadlocking
+    /// on a poisoned slot.
     pub fn get_or_build(
         &self,
         fingerprint: Fingerprint,
         build: impl FnOnce() -> Arc<CostArtifacts>,
     ) -> CostHandle {
         let mut inner = self.inner.lock().unwrap();
-        inner.tick += 1;
-        let tick = inner.tick;
-        if let Some(slot) = inner.entries.get_mut(&fingerprint) {
-            slot.last_used = tick;
-            self.hits.fetch_add(1, Ordering::Relaxed);
-            return CostHandle::new(slot.artifacts.clone());
+        loop {
+            inner.tick += 1;
+            let tick = inner.tick;
+            match inner.entries.get_mut(&fingerprint) {
+                Some(Slot::Ready(slot)) => {
+                    slot.last_used = tick;
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    return CostHandle::new(slot.artifacts.clone());
+                }
+                Some(Slot::Building(state)) => {
+                    let state = Arc::clone(state);
+                    loop {
+                        if let Some(outcome) = state.outcome.get() {
+                            match outcome {
+                                Some(artifacts) => {
+                                    // The in-flight build published
+                                    // (resident or oversized): share it.
+                                    self.hits.fetch_add(1, Ordering::Relaxed);
+                                    return CostHandle::new(artifacts.clone());
+                                }
+                                // Poisoned build: the slot is gone;
+                                // re-examine the map (someone else may
+                                // already be rebuilding).
+                                None => break,
+                            }
+                        }
+                        inner = state.cond.wait(inner).unwrap();
+                    }
+                }
+                None => break,
+            }
         }
+        // This caller is the builder for `fingerprint`.
         self.misses.fetch_add(1, Ordering::Relaxed);
-        let artifacts = build();
-        debug_assert_eq!(artifacts.fingerprint(), fingerprint, "artifact/fingerprint mismatch");
+        let state = Arc::new(BuildState::new());
+        inner.entries.insert(fingerprint, Slot::Building(Arc::clone(&state)));
+        drop(inner);
+
+        let artifacts = {
+            // The guard stays armed through the assert: a mismatch panic
+            // must clear the slot like any other failed build, not wedge
+            // the fingerprint's waiters forever.
+            let guard = BuildGuard { cache: self, fingerprint, state: &state };
+            let artifacts = build();
+            debug_assert_eq!(artifacts.fingerprint(), fingerprint, "artifact/fingerprint mismatch");
+            std::mem::forget(guard);
+            artifacts
+        };
+        let _ = state.outcome.set(Some(artifacts.clone()));
         let bytes = artifacts.bytes();
         let handle = CostHandle::new(artifacts.clone());
+
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
         if bytes > self.byte_budget {
-            // Oversized: the caller still gets it, but it is never
-            // resident (the budget invariant holds at all times).
+            // Oversized: the caller and any waiters still get it, but it
+            // is never resident (the budget invariant holds at all
+            // times) — remove the building slot so later lookups rebuild.
             self.evictions.fetch_add(1, Ordering::Relaxed);
+            if matches!(
+                inner.entries.get(&fingerprint),
+                Some(Slot::Building(s)) if Arc::ptr_eq(s, &state)
+            ) {
+                inner.entries.remove(&fingerprint);
+            }
+            drop(inner);
+            state.cond.notify_all();
             return handle;
         }
-        inner.entries.insert(fingerprint, Slot { artifacts, bytes, last_used: tick });
+        inner.entries.insert(
+            fingerprint,
+            Slot::Ready(ReadySlot { artifacts, bytes, last_used: tick }),
+        );
         inner.bytes += bytes;
         while inner.bytes > self.byte_budget {
-            // Evict strictly least-recently-used; the just-inserted slot
-            // carries the newest tick, so it is evicted last — and the
-            // loop terminates because its bytes alone fit the budget.
+            // Evict the strictly least-recently-used READY slot; the
+            // just-published slot carries the newest tick, so it is
+            // evicted last — and the loop terminates because its bytes
+            // alone fit the budget. Building slots are never victims.
             let victim = inner
                 .entries
                 .iter()
-                .filter(|(fp, _)| **fp != fingerprint)
-                .min_by_key(|(_, slot)| slot.last_used)
-                .map(|(fp, _)| *fp);
+                .filter_map(|(fp, slot)| match slot {
+                    Slot::Ready(ready) if *fp != fingerprint => Some((*fp, ready.last_used)),
+                    _ => None,
+                })
+                .min_by_key(|&(_, last_used)| last_used)
+                .map(|(fp, _)| fp);
             let Some(fp) = victim else { break };
-            if let Some(slot) = inner.entries.remove(&fp) {
+            if let Some(Slot::Ready(slot)) = inner.entries.remove(&fp) {
                 inner.bytes -= slot.bytes;
                 self.evictions.fetch_add(1, Ordering::Relaxed);
             }
         }
+        drop(inner);
+        state.cond.notify_all();
         handle
     }
 
     /// Current counters and gauges.
     pub fn stats(&self) -> CacheStats {
         let inner = self.inner.lock().unwrap();
+        let (mut entries, mut building) = (0, 0);
+        for slot in inner.entries.values() {
+            match slot {
+                Slot::Ready(_) => entries += 1,
+                Slot::Building(_) => building += 1,
+            }
+        }
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
             evictions: self.evictions.load(Ordering::Relaxed),
-            entries: inner.entries.len(),
+            entries,
+            building,
             bytes: inner.bytes,
             byte_budget: self.byte_budget,
         }
     }
 
-    /// Drop every resident artifact (counters are preserved).
+    /// Drop every resident artifact (counters are preserved; in-flight
+    /// builds keep their slot and publish normally).
     pub fn clear(&self) {
         let mut inner = self.inner.lock().unwrap();
-        inner.entries.clear();
+        inner.entries.retain(|_, slot| matches!(slot, Slot::Building(_)));
         inner.bytes = 0;
     }
 }
@@ -211,6 +365,7 @@ mod tests {
         let stats = cache.stats();
         assert_eq!((stats.hits, stats.misses, stats.evictions), (1, 1, 0));
         assert_eq!(stats.entries, 1);
+        assert_eq!(stats.building, 0);
         assert!(stats.bytes > 0 && stats.bytes <= stats.byte_budget);
     }
 
@@ -245,6 +400,7 @@ mod tests {
         assert!(Arc::ptr_eq(&handle.share(), &arts));
         let stats = cache.stats();
         assert_eq!(stats.entries, 0);
+        assert_eq!(stats.building, 0);
         assert_eq!(stats.bytes, 0);
         assert_eq!(stats.evictions, 1);
     }
@@ -262,5 +418,27 @@ mod tests {
         // Next lookup rebuilds.
         cache.get_or_build(fp, || arts);
         assert_eq!(cache.stats().misses, 2);
+    }
+
+    #[test]
+    fn panicking_build_clears_the_slot_for_retry() {
+        let cache = Arc::new(ArtifactCache::new(64 << 20));
+        let (fp, arts) = build_for(11, 0.1);
+        let poisoned = {
+            let cache = cache.clone();
+            std::thread::spawn(move || {
+                cache.get_or_build(fp, || panic!("simulated build failure"))
+            })
+            .join()
+        };
+        assert!(poisoned.is_err(), "the build panic must propagate to its caller");
+        let stats = cache.stats();
+        assert_eq!(stats.building, 0, "poisoned slot must be cleared: {stats:?}");
+        // The next caller rebuilds and publishes normally.
+        let handle = cache.get_or_build(fp, || arts.clone());
+        assert!(Arc::ptr_eq(&handle.share(), &arts));
+        let stats = cache.stats();
+        assert_eq!(stats.misses, 2, "{stats:?}");
+        assert_eq!(stats.entries, 1, "{stats:?}");
     }
 }

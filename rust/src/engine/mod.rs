@@ -28,10 +28,56 @@
 //!   api::solve_batch / coordinator workers  (serving layer)
 //! ```
 //!
+//! ## Cache semantics
+//!
+//! * **Content addressing.** A [`Fingerprint`] hashes the support pair
+//!   (or the dense cost's contents) with two independent 64-bit streams
+//!   and combines them with the dimensions, `η` (WFR truncation), `ε`,
+//!   and the [`FormulationKey`] (λ bit-exact for unbalanced problems).
+//!   Equal fingerprints ⇒ bitwise-identical artifacts; a single-ULP
+//!   perturbation of any coordinate changes the fingerprint.
+//! * **Single-flight builds.** [`ArtifactCache::get_or_build`] builds
+//!   each fingerprint exactly once, OUTSIDE the map lock: concurrent
+//!   misses on the same fingerprint block on that fingerprint's slot
+//!   and share the published `Arc` (counted as hits), while misses on
+//!   other fingerprints build in parallel — a long kernel build at one
+//!   ε never stalls a many-ε sweep. A build that panics clears its slot
+//!   so the next caller retries.
+//! * **Eviction.** A byte-budget LRU, accounted at publish time:
+//!   resident bytes never exceed the budget, a building slot is never
+//!   evicted, and an artifact larger than the whole budget is served to
+//!   its callers but never retained. [`global_cache`] (behind
+//!   [`solve_batch`](crate::api::solve_batch) and the CLI) reads its
+//!   budget from the `SPAR_SINK_CACHE_BYTES` env var, defaulting to
+//!   [`DEFAULT_CACHE_BYTES`].
+//!
 //! Warm solves are bitwise-identical to cold solves: the artifacts
 //! store exactly the values the entry oracles would have produced, and
 //! the factored samplers compose probabilities with the same arithmetic
-//! (pinned by `rust/tests/cache_parity.rs`).
+//! (pinned by `rust/tests/cache_parity.rs`; the single-flight contract
+//! by `rust/tests/cache_concurrency.rs`).
+//!
+//! ```
+//! use spar_sink::engine::{ArtifactCache, CostArtifacts, Fingerprint, FormulationKey};
+//!
+//! let pts: Vec<Vec<f64>> = (0..16).map(|i| vec![i as f64 * 0.25]).collect();
+//! let (eps, key) = (0.1, FormulationKey::Balanced);
+//! let fingerprint = Fingerprint::for_supports(&pts, &pts, None, eps, key);
+//!
+//! let cache = ArtifactCache::new(64 << 20);
+//! // First lookup builds (a miss)…
+//! let warm = cache.get_or_build(fingerprint, || {
+//!     CostArtifacts::for_sq_euclidean_support(&pts, eps, key)
+//! });
+//! // …every later lookup shares the resident artifacts (a hit).
+//! let hit = cache.get_or_build(fingerprint, || unreachable!("built above"));
+//! assert!(std::sync::Arc::ptr_eq(&warm.share(), &hit.share()));
+//!
+//! let stats = cache.stats();
+//! assert_eq!((stats.hits, stats.misses, stats.entries), (1, 1, 1));
+//! assert!(stats.bytes <= stats.byte_budget);
+//! println!("artifact cache: {}", stats.render());
+//! ```
 
 mod artifacts;
 mod cache;

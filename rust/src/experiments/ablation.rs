@@ -17,6 +17,7 @@ use crate::sparse::sample_with_replacement_ot;
 use crate::util::json::Json;
 use crate::util::table::{f, Table};
 
+/// Ablations: shrinkage θ and sampling-scheme variants at fixed budget.
 pub fn run(profile: Profile) -> ExperimentOutput {
     let n = profile.pick(300, 1000);
     let reps = profile.reps(5, 50);

@@ -19,8 +19,11 @@ use crate::util::json::Json;
 /// figure-sized subset of the full [`api::Method`] registry.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Method {
+    /// Nyström-factorized Sinkhorn baseline.
     NysSink,
+    /// Uniform-sampling baseline.
     RandSink,
+    /// The paper's importance-sparsified solver.
     SparSink,
     /// Spar-Sink with the log-domain sparse backend forced on.
     SparSinkLog,
@@ -42,6 +45,7 @@ impl Method {
         }
     }
 
+    /// The registry key / CLI spelling.
     pub fn name(&self) -> &'static str {
         self.api().name()
     }

@@ -94,6 +94,7 @@ fn nys_ibp(
     Ok(ibp_barycenter_with(&ops, bs, w, params)?.q)
 }
 
+/// Appendix Figure 11: barycenter error vs budget s for Spar-IBP, on shared-cost artifacts.
 pub fn run(profile: Profile) -> ExperimentOutput {
     let n = profile.pick(300, 1000);
     let reps = profile.reps(3, 100);

@@ -51,6 +51,7 @@ pub fn ascii_render(q: &[f64], grid: usize) -> String {
     out
 }
 
+/// Appendix Figure 12: digit barycenters, exact IBP vs Spar-IBP on one shared grid.
 pub fn run(profile: Profile) -> ExperimentOutput {
     let grid = profile.pick(20, 32); // paper uses 64; 32 keeps full mode tractable on CPU
     let n = grid * grid;

@@ -31,6 +31,7 @@ fn map_deviation(a: &[Vec<f64>], b: &[Vec<f64>]) -> f64 {
         / a.len() as f64
 }
 
+/// Appendix Figure 13: color-transfer map deviation and timing.
 pub fn run(profile: Profile) -> ExperimentOutput {
     let n = profile.pick(600, 5000);
     let eps = 1e-2;

@@ -9,6 +9,7 @@ use crate::rng::Rng;
 use crate::util::json::Json;
 use crate::util::table::{f, Table};
 
+/// Figure 2: RMAE(OT) vs subsample size s across the C1–C3 scenarios, ε and d sweeps.
 pub fn run(profile: Profile) -> ExperimentOutput {
     let n = profile.pick(400, 1000);
     let reps = profile.reps(5, 100);

@@ -8,6 +8,7 @@ use crate::rng::Rng;
 use crate::util::json::Json;
 use crate::util::table::{f, Table};
 
+/// Figure 3: RMAE(UOT/WFR) vs subsample size s across C1–C3 × R1–R3.
 pub fn run(profile: Profile) -> ExperimentOutput {
     let n = profile.pick(300, 1000);
     let reps = profile.reps(5, 100);

@@ -11,6 +11,7 @@ use crate::rng::Rng;
 use crate::util::json::Json;
 use crate::util::table::{f, Table};
 
+/// Figure 4: RMAE(OT) vs n under C1, including the Greenkhorn and Screenkhorn baselines.
 pub fn run(profile: Profile) -> ExperimentOutput {
     // Paper: n in {4,8,...,128} x 100; quick: {2,4,8} x 100.
     let ns: Vec<usize> = profile.pick(vec![200, 400, 800], vec![400, 800, 1600, 3200, 6400, 12800]);

@@ -15,6 +15,7 @@ use crate::rng::Rng;
 use crate::util::json::Json;
 use crate::util::table::{f, Table};
 
+/// Figure 5: CPU time vs n for OT and UOT across the solver family.
 pub fn run(profile: Profile) -> ExperimentOutput {
     let ns: Vec<usize> = profile.pick(vec![400, 800, 1600], vec![800, 1600, 3200, 6400, 12800]);
     let eps_list: Vec<f64> = profile.pick(vec![1e-2], vec![1e-1, 1e-2]);

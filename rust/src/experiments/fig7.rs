@@ -79,6 +79,7 @@ pub fn video_distance_matrix(
     Ok(dist)
 }
 
+/// Figure 7: cardiac-cycle WFR-distance curves for the three synthetic echo conditions.
 pub fn run(profile: Profile) -> ExperimentOutput {
     let size = profile.pick(40, 64);
     let frames_n = profile.pick(36, 90);

@@ -8,6 +8,7 @@ use crate::rng::Rng;
 use crate::util::json::Json;
 use crate::util::table::{f, Table};
 
+/// Figure 8: sensitivity of the UOT estimate to the marginal relaxation λ.
 pub fn run(profile: Profile) -> ExperimentOutput {
     let n = profile.pick(300, 1000);
     let reps = profile.reps(5, 100);

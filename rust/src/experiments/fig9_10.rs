@@ -11,6 +11,7 @@ use crate::rng::Rng;
 use crate::util::json::Json;
 use crate::util::table::{f, Table};
 
+/// Appendix Figure 9: RMAE(OT) vs n at fixed s = 8·s₀(n) (asymptotic rate check).
 pub fn run_fig9(profile: Profile) -> ExperimentOutput {
     let ns: Vec<usize> = profile.pick(vec![100, 200, 400, 800], vec![100, 200, 400, 800, 1600, 3200, 6400]);
     let reps = profile.reps(5, 100);
@@ -55,6 +56,7 @@ pub fn run_fig9(profile: Profile) -> ExperimentOutput {
     ExperimentOutput { id: "fig9", text, rows: Json::arr(rows) }
 }
 
+/// Appendix Figure 10: RMAE(UOT) vs n at fixed s = 8·s₀(n).
 pub fn run_fig10(profile: Profile) -> ExperimentOutput {
     let ns: Vec<usize> = profile.pick(vec![100, 200, 400], vec![100, 200, 400, 800, 1600, 3200]);
     let reps = profile.reps(5, 100);

@@ -37,6 +37,7 @@ pub enum Profile {
 }
 
 impl Profile {
+    /// Replication count for this profile.
     pub fn reps(&self, quick: usize, full: usize) -> usize {
         match self {
             Profile::Quick => quick,
@@ -44,6 +45,7 @@ impl Profile {
         }
     }
 
+    /// Pick the profile-appropriate value of any parameter.
     pub fn pick<T>(&self, quick: T, full: T) -> T {
         match self {
             Profile::Quick => quick,
@@ -54,8 +56,11 @@ impl Profile {
 
 /// An experiment's output: rendered text + structured rows.
 pub struct ExperimentOutput {
+    /// Registry id (e.g. `fig2`), used as the JSON output filename.
     pub id: &'static str,
+    /// Rendered table/series text, as printed by the CLI.
     pub text: String,
+    /// The same rows as structured JSON (for EXPERIMENTS.md).
     pub rows: Json,
 }
 

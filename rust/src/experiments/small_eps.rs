@@ -30,6 +30,7 @@ fn backends() -> [(&'static str, ScalingBackend); 3] {
     ]
 }
 
+/// Small-ε stability: multiplicative vs log-domain backend across formulations.
 pub fn run(profile: Profile) -> ExperimentOutput {
     let n = profile.pick(120, 500);
     let reps = profile.reps(3, 20);

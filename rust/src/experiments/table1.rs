@@ -115,6 +115,7 @@ fn cycles(es: &[usize], ed: &[usize]) -> Vec<(usize, usize)> {
     out
 }
 
+/// Table 1: echocardiogram ED-prediction error and wall time per method.
 pub fn run(profile: Profile) -> ExperimentOutput {
     let native = profile.pick(48, 112);
     let videos_n = profile.pick(4, 100);

@@ -55,6 +55,7 @@ fn divergence(
     Ok(oxy - 0.5 * (oxx + oyy))
 }
 
+/// Table 2 (recast): Sinkhorn divergence on SSAE-style minibatches.
 pub fn run(profile: Profile) -> ExperimentOutput {
     let n = profile.pick(300, 500);
     let d = 10;

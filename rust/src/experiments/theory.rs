@@ -19,6 +19,7 @@ use crate::sparse::poisson_sparsify_ot;
 use crate::util::json::Json;
 use crate::util::table::{f, Table};
 
+/// Empirical validation of Lemma 5 and Theorems 1 & 3 (concentration/rates).
 pub fn run(profile: Profile) -> ExperimentOutput {
     let n = profile.pick(300, 800);
     let reps = profile.reps(5, 30);

@@ -45,12 +45,12 @@
 //! Mirrors `examples/quickstart.rs`: one problem, two specs, one
 //! `solve` call each.
 //!
-//! ```no_run
+//! ```
 //! use spar_sink::api::{self, Method, OtProblem, SolverSpec};
 //! use spar_sink::ot::cost::sq_euclidean_cost;
 //! use spar_sink::rng::Rng;
 //!
-//! let n = 256;
+//! let n = 64;
 //! let mut rng = Rng::seed_from(7);
 //! let pts: Vec<Vec<f64>> = (0..n).map(|_| vec![rng.uniform(), rng.uniform()]).collect();
 //! let a = vec![1.0 / n as f64; n];
@@ -59,6 +59,7 @@
 //! let exact = api::solve(&problem, &SolverSpec::new(Method::Sinkhorn)).unwrap();
 //! let spec = SolverSpec::new(Method::SparSink).with_budget(8.0).with_seed(7);
 //! let approx = api::solve(&problem, &spec).unwrap();
+//! assert!(exact.objective.is_finite() && approx.objective.is_finite());
 //! println!(
 //!     "exact {:.6} sparse {:.6}  (backend {:?}, nnz {:?}, {:?})",
 //!     exact.objective, approx.objective, approx.backend, approx.nnz(), approx.wall_time
@@ -69,6 +70,8 @@
 //! `solvers::spar_sink::spar_sink_ot`, …) remain as thin entry points
 //! the registry adapters call into — use them when reproducing an
 //! algorithm line-by-line, and `api::solve` for everything else.
+
+#![warn(missing_docs)]
 
 pub mod api;
 pub mod bench;

@@ -39,22 +39,26 @@ impl Mat {
         Mat { rows, cols, data }
     }
 
+    /// Number of rows.
     #[inline(always)]
     pub fn rows(&self) -> usize {
         self.rows
     }
 
+    /// Number of columns.
     #[inline(always)]
     pub fn cols(&self) -> usize {
         self.cols
     }
 
+    /// Element `(i, j)`.
     #[inline(always)]
     pub fn get(&self, i: usize, j: usize) -> f64 {
         debug_assert!(i < self.rows && j < self.cols);
         self.data[i * self.cols + j]
     }
 
+    /// Set element `(i, j)`.
     #[inline(always)]
     pub fn set(&mut self, i: usize, j: usize, v: f64) {
         debug_assert!(i < self.rows && j < self.cols);
@@ -78,6 +82,7 @@ impl Mat {
         &self.data
     }
 
+    /// Mutable raw row-major slice.
     pub fn as_mut_slice(&mut self) -> &mut [f64] {
         &mut self.data
     }

@@ -134,10 +134,7 @@ fn cmd_solve(args: &Args) -> i32 {
         .expect("one problem in, one solution out");
     let approx = api::solve_batch(&problems, &spec).pop().expect("one problem in");
     let cache = spar_sink::engine::global_cache().stats();
-    println!(
-        "artifact cache: {} hits / {} misses ({} B resident)",
-        cache.hits, cache.misses, cache.bytes
-    );
+    println!("artifact cache: {}", cache.render());
     match (exact, approx) {
         (Ok(exact), Ok(approx)) => {
             if let (Some(q_exact), Some(q_approx)) =

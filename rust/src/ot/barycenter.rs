@@ -28,7 +28,9 @@ pub trait KernelOp: Sync {
     fn apply(&self, x: &[f64]) -> Vec<f64>;
     /// `y = Kᵀ x`.
     fn apply_t(&self, x: &[f64]) -> Vec<f64>;
+    /// Number of kernel rows.
     fn rows(&self) -> usize;
+    /// Number of kernel columns.
     fn cols(&self) -> usize;
 }
 

@@ -45,7 +45,9 @@ pub trait LogKernelOp: Sync {
     fn row_lse(&self, g: &[f64]) -> Vec<f64>;
     /// `y_j = LSE_i(ln K_ij + f_i)`, i.e. `ln (Kᵀ e^f)_j`.
     fn col_lse(&self, f: &[f64]) -> Vec<f64>;
+    /// Number of kernel rows.
     fn rows(&self) -> usize;
+    /// Number of kernel columns.
     fn cols(&self) -> usize;
 }
 
@@ -90,6 +92,7 @@ pub struct DenseLogKernel {
 }
 
 impl DenseLogKernel {
+    /// Wrap a dense kernel (and its log twin) for the log-IBP loop.
     pub fn new(cost: &Mat, eps: f64) -> Self {
         DenseLogKernel { cost: cost.clone(), cost_t: cost.transpose(), eps }
     }

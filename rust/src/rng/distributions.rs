@@ -154,10 +154,12 @@ impl AliasTable {
         }
     }
 
+    /// Number of outcomes in the table.
     pub fn len(&self) -> usize {
         self.prob.len()
     }
 
+    /// Whether the table has no outcomes.
     pub fn is_empty(&self) -> bool {
         self.prob.is_empty()
     }

@@ -69,7 +69,9 @@ impl Default for ScalingBackend {
 /// The engine that actually produced a solution.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum BackendKind {
+    /// The plain multiplicative scaling loop.
     Multiplicative,
+    /// The log-sum-exp stabilized engine.
     LogDomain,
 }
 

@@ -45,3 +45,26 @@ pub mod screenkhorn;
 pub mod spar_ibp;
 pub mod spar_sink;
 pub mod sparse_loop;
+
+/// THE sampling-budget convention, shared by every sketch-based solver
+/// (spar-sink, rand-sink, nys-sink's matched-budget rank, spar-ibp) in
+/// every cost arm (dense, oracle, shared-artifact):
+///
+/// ```text
+/// s = s_multiplier · s₀(max(rows, cols)),   s₀(n) = 10⁻³ n ln⁴ n
+/// ```
+///
+/// `s₀` is the paper's subsample-size unit (Section 5.1, in the light
+/// of Theorem 1); resolving it against the LARGER side of the support
+/// pair makes the convention shape-agnostic — square problems (every
+/// paper workload) are unchanged from the historical `s₀(a.len())`
+/// convention, and rectangular problems sample the same expected budget
+/// no matter which cost representation (dense, oracle, or cached
+/// artifact) carries them. That last property is what lets
+/// [`solve_batch`](crate::api::solve_batch) upgrade rectangular dense
+/// costs to [`CostSource::Shared`](crate::api::CostSource) without
+/// changing their sketches; it is also the contract future sharding PRs
+/// must preserve when splitting a support across nodes.
+pub fn sketch_budget(s_multiplier: f64, rows: usize, cols: usize) -> f64 {
+    s_multiplier * crate::metrics::s0(rows.max(cols))
+}

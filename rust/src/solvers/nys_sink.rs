@@ -25,6 +25,7 @@ use crate::rng::Rng;
 /// Nys-Sink configuration.
 #[derive(Clone, Debug)]
 pub struct NysSinkParams {
+    /// Scaling-loop parameters (δ, iteration cap).
     pub sinkhorn: SinkhornParams,
     /// Core eigenvalue cutoff (relative ridge) for the pseudo-inverse.
     pub ridge: f64,

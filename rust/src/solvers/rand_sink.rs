@@ -9,8 +9,9 @@
 //! sampled straight from the kernel oracle, never materialized).
 
 use super::backend::ScalingBackend;
+use super::sketch_budget;
 use super::spar_sink::{solve_sketch_ot, solve_sketch_uot, SparSolution};
-use crate::api::{CostSource, Formulation, OtProblem, SolverSpec};
+use crate::api::{Formulation, OtProblem, SolverSpec};
 use crate::error::{Error, Result};
 use crate::linalg::Mat;
 use crate::ot::sinkhorn::SinkhornParams;
@@ -54,7 +55,7 @@ pub fn rand_sink_ot(
     rng: &mut Rng,
 ) -> Result<SparSolution> {
     let (n, m) = (a.len(), b.len());
-    let s = s_multiplier * crate::metrics::s0(n);
+    let s = sketch_budget(s_multiplier, n, m);
     let (sketch, stats) =
         uniform_sketch(n, m, oracle_kernel(cost, eps), |i, j| cost.get(i, j), s, rng)?;
     solve_sketch_ot(&sketch, stats, a, b, eps, ScalingBackend::Multiplicative, params)
@@ -76,7 +77,7 @@ pub fn rand_sink_uot(
     rng: &mut Rng,
 ) -> Result<SparSolution> {
     let (n, m) = (a.len(), b.len());
-    let s = s_multiplier * crate::metrics::s0(n);
+    let s = sketch_budget(s_multiplier, n, m);
     let (sketch, stats) =
         uniform_sketch(n, m, oracle_kernel(cost, eps), |i, j| cost.get(i, j), s, rng)?;
     solve_sketch_uot(&sketch, stats, a, b, lambda, eps, ScalingBackend::Multiplicative, params)
@@ -87,9 +88,9 @@ pub fn rand_sink_uot(
 /// multiplicative — the naive baseline exactly as the paper evaluates
 /// it; an explicit override (e.g. a per-job `ScalingBackend::LogDomain`
 /// from the distance service) is honored, with the log engine deriving
-/// `ln k` from the uniformly sampled linear values. Budgets: s₀(a.len())
-/// for dense costs (the paper's convention), s₀(max(n, m)) for oracle
-/// costs (the distance service's convention).
+/// `ln k` from the uniformly sampled linear values. The budget follows
+/// the crate-wide [`sketch_budget`] convention `s₀(max(n, m))` in every
+/// cost arm (dense, oracle, and shared-artifact alike).
 pub fn rand_sink_solve(
     problem: &OtProblem,
     spec: &SolverSpec,
@@ -104,14 +105,10 @@ pub fn rand_sink_solve(
         ));
     }
     let (n, m) = (a.len(), b.len());
-    // Dense costs keep the paper's s₀(n) convention; oracle and
-    // shared-artifact costs use the distance service's s₀(max(n, m)).
-    // Shared sources also serve `kernel_at` from the materialized
-    // kernel, so the uniform sketch samples without per-entry exp calls.
-    let s = match &problem.cost {
-        CostSource::Dense(_) => spec.s_multiplier * crate::metrics::s0(n),
-        _ => spec.s_multiplier * crate::metrics::s0(n.max(m)),
-    };
+    // One budget convention for every cost arm. Shared sources also
+    // serve `kernel_at` from the materialized kernel, so the uniform
+    // sketch samples without per-entry exp calls.
+    let s = sketch_budget(spec.s_multiplier, n, m);
     let (sketch, stats) = uniform_sketch(
         n,
         m,

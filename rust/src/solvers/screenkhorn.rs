@@ -20,6 +20,7 @@ use crate::ot::SinkhornSolution;
 /// Screenkhorn configuration (paper default decimation 3).
 #[derive(Clone, Debug)]
 pub struct ScreenkhornParams {
+    /// Scaling-loop parameters (δ, iteration cap).
     pub sinkhorn: SinkhornParams,
     /// Decimation factor κ: keep n/κ active rows and columns.
     pub decimation: usize,

@@ -11,7 +11,6 @@ use super::backend::BackendKind;
 use crate::api::{Formulation, OtProblem, SolverSpec};
 use crate::error::{Error, Result};
 use crate::linalg::Mat;
-use crate::metrics::s0;
 use crate::ot::barycenter::{ibp_barycenter_with, BarycenterSolution};
 use crate::ot::sinkhorn::SinkhornParams;
 use crate::rng::Rng;
@@ -22,7 +21,9 @@ use crate::sparse::{
 /// Result with per-kernel sparsification stats.
 #[derive(Clone, Debug)]
 pub struct SparIbpSolution {
+    /// The barycenter histogram and IBP loop diagnostics.
     pub solution: BarycenterSolution,
+    /// One sparsifier diagnostic per input kernel.
     pub stats: Vec<SparsifyStats>,
 }
 
@@ -76,8 +77,11 @@ pub fn spar_ibp(
 /// per-kernel stats, and the engine that actually ran.
 #[derive(Clone, Debug)]
 pub struct SparIbpBackendSolution {
+    /// The barycenter histogram and IBP loop diagnostics.
     pub solution: BarycenterSolution,
+    /// One sparsifier diagnostic per input kernel.
     pub stats: Vec<SparsifyStats>,
+    /// Which scaling engine actually produced the solution.
     pub backend: BackendKind,
 }
 
@@ -112,7 +116,9 @@ pub fn spar_ibp_solve(
     };
     let eps = problem.eps;
     let n = problem.cost.rows();
-    let s = spec.s_multiplier * s0(n);
+    // Barycenter supports are square, so the crate-wide budget
+    // convention collapses to the paper's s₀(n).
+    let s = super::sketch_budget(spec.s_multiplier, n, n);
     let backend = spec.backend.unwrap_or_default();
     let mut sketches = Vec::with_capacity(marginals.len());
     let mut stats = Vec::with_capacity(marginals.len());
@@ -218,7 +224,7 @@ mod tests {
             &kernels,
             &bs,
             &w,
-            12.0 * s0(n),
+            12.0 * crate::metrics::s0(n),
             &SinkhornParams::default(),
             &mut r_legacy,
         )

@@ -15,6 +15,7 @@
 //! which is what the [`crate::api`] registry dispatches to.
 
 use super::backend::{BackendKind, ScalingBackend};
+use super::sketch_budget;
 use crate::api::{CostSource, Formulation, OtProblem, SolverSpec};
 use crate::error::{Error, Result};
 use crate::linalg::Mat;
@@ -66,15 +67,12 @@ impl SparSinkParams {
 /// Solution plus sparsification diagnostics.
 #[derive(Clone, Debug)]
 pub struct SparSolution {
+    /// Objective, scalings, iterations, convergence flag.
     pub solution: SinkhornSolution,
+    /// Sparsifier diagnostics (nnz, saturated entries, …).
     pub stats: SparsifyStats,
     /// Which scaling engine actually produced the solution.
     pub backend: BackendKind,
-}
-
-/// Budget in units of s₀(n) = 10⁻³ n log⁴ n.
-fn resolve_budget(n: usize, s_multiplier: f64) -> f64 {
-    s_multiplier * crate::metrics::s0(n)
 }
 
 /// Scalar inputs of one balanced-OT sketch solve (grouped so the oracle
@@ -159,10 +157,12 @@ fn uot_from_logk_oracle(
     )
 }
 
-/// Algorithm 3 (OT) from a dense cost matrix; `s_multiplier` is in units
-/// of s₀(n) (the paper sweeps s ∈ {2,4,8,16}·s₀(n)). The sketch is
-/// built with exact log-kernel values `−C_ij/ε`, so small-ε problems
-/// stay solvable through the log-domain backend.
+/// Algorithm 3 (OT) from a dense cost matrix; `s_multiplier` is in
+/// units of the crate-wide [`sketch_budget`] convention
+/// `s₀(max(n, m))` (the paper sweeps s ∈ {2,4,8,16}·s₀(n) on square
+/// supports, where the two conventions coincide). The sketch is built
+/// with exact log-kernel values `−C_ij/ε`, so small-ε problems stay
+/// solvable through the log-domain backend.
 pub fn spar_sink_ot(
     cost: &Mat,
     a: &[f64],
@@ -172,7 +172,7 @@ pub fn spar_sink_ot(
     params: &SparSinkParams,
     rng: &mut Rng,
 ) -> Result<SparSolution> {
-    let s = resolve_budget(a.len(), s_multiplier);
+    let s = sketch_budget(s_multiplier, a.len(), b.len());
     ot_from_logk_oracle(
         |i, j| crate::ot::cost::log_gibbs_from_cost(cost.get(i, j), eps),
         |i, j| cost.get(i, j),
@@ -219,8 +219,8 @@ pub(crate) fn solve_sketch_uot(
 }
 
 /// Algorithm 4 (UOT) from a dense cost matrix; `s_multiplier` in units
-/// of s₀(n). Routes through the log-kernel pipeline like
-/// [`spar_sink_ot`].
+/// of the [`sketch_budget`] convention `s₀(max(n, m))`. Routes through
+/// the log-kernel pipeline like [`spar_sink_ot`].
 // 8 arguments: this is the published Algorithm 4 entry point and its
 // parameter list mirrors the paper's; grouping would break the
 // reproduction call sites. Everything richer goes through
@@ -236,7 +236,7 @@ pub fn spar_sink_uot(
     params: &SparSinkParams,
     rng: &mut Rng,
 ) -> Result<SparSolution> {
-    let s = resolve_budget(a.len(), s_multiplier);
+    let s = sketch_budget(s_multiplier, a.len(), b.len());
     uot_from_logk_oracle(
         |i, j| crate::ot::cost::log_gibbs_from_cost(cost.get(i, j), eps),
         |i, j| cost.get(i, j),
@@ -251,10 +251,11 @@ pub fn spar_sink_uot(
 /// log-kernel oracle (caller-provided or derived `−C/ε`), and runs
 /// Algorithm 3 or 4 per the problem's [`Formulation`].
 ///
-/// Dense problems route through the paper entry points above (budget in
-/// units of s₀(a.len())); oracle and shared-artifact problems resolve
-/// the budget against the larger support, matching the distance
-/// service's convention. Shared sources additionally consume the
+/// Every cost arm — dense (through the paper entry points above),
+/// oracle, and shared-artifact — resolves its budget through the one
+/// crate-wide [`sketch_budget`] convention `s₀(max(n, m))`, so the
+/// sketch is identical no matter which representation carries the
+/// cost. Shared sources additionally consume the
 /// amortized cost-dependent UOT sampling factor from their
 /// [`CostArtifacts`](crate::engine::CostArtifacts), producing sketches
 /// bitwise-identical to the cold path.
@@ -273,7 +274,7 @@ pub fn spar_sink_solve(
             spar_sink_uot(cost, a, b, *lambda, eps, spec.s_multiplier, &params, rng)
         }
         (oracle @ CostSource::Oracle { .. }, Formulation::Balanced) => {
-            let s = resolve_budget(a.len().max(b.len()), spec.s_multiplier);
+            let s = sketch_budget(spec.s_multiplier, a.len(), b.len());
             ot_from_logk_oracle(
                 |i, j| oracle.log_kernel_at(i, j, eps),
                 |i, j| oracle.cost_at(i, j),
@@ -283,7 +284,7 @@ pub fn spar_sink_solve(
             )
         }
         (oracle @ CostSource::Oracle { .. }, Formulation::Unbalanced { lambda }) => {
-            let s = resolve_budget(a.len().max(b.len()), spec.s_multiplier);
+            let s = sketch_budget(spec.s_multiplier, a.len(), b.len());
             uot_from_logk_oracle(
                 |i, j| oracle.log_kernel_at(i, j, eps),
                 |i, j| oracle.cost_at(i, j),
@@ -296,7 +297,7 @@ pub fn spar_sink_solve(
             // OT probabilities are purely marginal (Eq. 9); the
             // amortized part is the cached cost matrix itself, read by
             // the lazy per-selected-entry oracles.
-            let s = resolve_budget(a.len().max(b.len()), spec.s_multiplier);
+            let s = sketch_budget(spec.s_multiplier, a.len(), b.len());
             let arts = handle.artifacts();
             let cmat: &Mat = &arts.cost;
             ot_from_logk_oracle(
@@ -313,7 +314,7 @@ pub fn spar_sink_solve(
             // per-job work is the O(n + m) marginal factor. Values,
             // RNG stream and sketch are bitwise-identical to the cold
             // oracle path either way.
-            let s = resolve_budget(a.len().max(b.len()), spec.s_multiplier);
+            let s = sketch_budget(spec.s_multiplier, a.len(), b.len());
             let arts = handle.artifacts();
             let cmat: &Mat = &arts.cost;
             let factor = arts.uot_factor.as_ref().filter(|f| {

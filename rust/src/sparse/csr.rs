@@ -36,9 +36,13 @@ pub struct CsrMatrix {
 /// One sampled entry during construction.
 #[derive(Clone, Copy, Debug)]
 pub struct Triplet {
+    /// Row index.
     pub row: usize,
+    /// Column index.
     pub col: usize,
+    /// Sampled (reweighted) kernel value `K̃_ij`.
     pub kernel: f64,
+    /// Ground-cost value `C_ij` at the same entry.
     pub cost: f64,
 }
 
@@ -158,10 +162,12 @@ impl CsrMatrix {
         }
     }
 
+    /// Number of rows.
     pub fn rows(&self) -> usize {
         self.rows
     }
 
+    /// Number of columns.
     pub fn cols(&self) -> usize {
         self.cols
     }

@@ -9,6 +9,7 @@ pub struct Table {
 }
 
 impl Table {
+    /// A table with the given column headers.
     pub fn new(header: &[&str]) -> Self {
         Table {
             header: header.iter().map(|s| s.to_string()).collect(),
@@ -16,6 +17,7 @@ impl Table {
         }
     }
 
+    /// Append one row (must match the header width).
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(cells.len(), self.header.len(), "row width mismatch");
         self.rows.push(cells);

@@ -236,8 +236,9 @@ fn dense_uot_objectives_are_bitwise_identical_to_legacy() {
 fn oracle_ot_objectives_are_bitwise_identical_to_legacy() {
     // Oracle costs over the SAME entries: every method must sample /
     // materialize its way to the exact same objective as the dense
-    // legacy call (square problem, so the oracle budget convention
-    // s0(max(n, m)) coincides with the dense s0(n)).
+    // legacy call (every cost arm resolves the one crate-wide
+    // sketch_budget convention s0(max(n, m)), so the representation
+    // cannot change the sketch).
     let (cost, a, b) = instance(48, 107);
     let eps = 0.1;
     let dense = OtProblem::balanced(&cost, a.clone(), b.clone(), eps);

@@ -1,0 +1,226 @@
+//! The single-flight contract of the [`ArtifactCache`]:
+//!
+//! * exactly ONE build per fingerprint no matter how many threads race
+//!   the first lookup — latecomers block on the building slot and share
+//!   the published `Arc` (counted as hits);
+//! * builds on DISTINCT fingerprints never serialize: while one ε's
+//!   kernel build is in flight, lookups and builds at other ε values
+//!   proceed (the many-ε sweep shape of `fig11`/`smalleps`);
+//! * a build that panics clears its slot — waiters wake and retry, the
+//!   next caller builds afresh, and nothing deadlocks on a poisoned
+//!   slot.
+//!
+//! These tests deadlock (and time out) under the old build-under-the-
+//! cache-mutex design, so a hang here IS the failure signal.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Barrier};
+use std::time::Duration;
+
+use spar_sink::engine::{ArtifactCache, CostArtifacts, Fingerprint, FormulationKey};
+use spar_sink::rng::Rng;
+
+fn pts(n: usize, seed: u64) -> Vec<Vec<f64>> {
+    let mut rng = Rng::seed_from(seed);
+    (0..n).map(|_| vec![rng.uniform() * 4.0, rng.uniform() * 4.0]).collect()
+}
+
+fn artifacts_for(seed: u64, eps: f64) -> (Fingerprint, Arc<CostArtifacts>) {
+    let p = pts(16, seed);
+    let key = FormulationKey::Balanced;
+    let arts = CostArtifacts::for_sq_euclidean_support(&p, eps, key);
+    (arts.fingerprint(), arts)
+}
+
+/// Many threads race the first lookup of ONE fingerprint: the build
+/// runs exactly once, every thread gets the same resident `Arc`, and
+/// the counters read 1 miss + (threads − 1) hits.
+#[test]
+fn exactly_once_build_per_fingerprint_under_contention() {
+    let threads = 8;
+    let cache = Arc::new(ArtifactCache::new(1 << 30));
+    let builds = Arc::new(AtomicUsize::new(0));
+    let barrier = Arc::new(Barrier::new(threads));
+    let (fp, arts) = artifacts_for(1, 0.1);
+
+    let handles: Vec<_> = (0..threads)
+        .map(|_| {
+            let (cache, builds, barrier, arts) =
+                (cache.clone(), builds.clone(), barrier.clone(), arts.clone());
+            std::thread::spawn(move || {
+                barrier.wait();
+                cache.get_or_build(fp, move || {
+                    builds.fetch_add(1, Ordering::SeqCst);
+                    arts
+                })
+            })
+        })
+        .collect();
+    let shares: Vec<_> = handles.into_iter().map(|h| h.join().unwrap().share()).collect();
+
+    assert_eq!(builds.load(Ordering::SeqCst), 1, "the build must run exactly once");
+    for share in &shares[1..] {
+        assert!(Arc::ptr_eq(&shares[0], share), "all threads must share one artifact");
+    }
+    let stats = cache.stats();
+    assert_eq!(stats.misses, 1, "{stats:?}");
+    assert_eq!(stats.hits, threads as u64 - 1, "{stats:?}");
+    assert_eq!((stats.entries, stats.building), (1, 0), "{stats:?}");
+}
+
+/// Threaded stress across MANY fingerprints at once: every fingerprint
+/// builds exactly once even when all threads sweep all fingerprints
+/// concurrently (different ε values over one support — each its own
+/// fingerprint).
+#[test]
+fn every_fingerprint_builds_exactly_once_across_a_sweep() {
+    let threads = 6;
+    let eps_sweep: Vec<f64> = (1..=8).map(|k| 0.01 * k as f64).collect();
+    let cache = Arc::new(ArtifactCache::new(1 << 30));
+    let support = Arc::new(pts(16, 3));
+    let builds: Arc<Vec<AtomicUsize>> =
+        Arc::new(eps_sweep.iter().map(|_| AtomicUsize::new(0)).collect());
+    let barrier = Arc::new(Barrier::new(threads));
+
+    let handles: Vec<_> = (0..threads)
+        .map(|t| {
+            let (cache, support, builds, barrier, eps_sweep) = (
+                cache.clone(),
+                support.clone(),
+                builds.clone(),
+                barrier.clone(),
+                eps_sweep.clone(),
+            );
+            std::thread::spawn(move || {
+                barrier.wait();
+                // Each thread walks the sweep from a different offset so
+                // the contention pattern varies per fingerprint.
+                for k in 0..eps_sweep.len() {
+                    let idx = (k + t) % eps_sweep.len();
+                    let eps = eps_sweep[idx];
+                    let key = FormulationKey::Balanced;
+                    let fp = Fingerprint::for_supports(&support, &support, None, eps, key);
+                    let (support, builds) = (support.clone(), builds.clone());
+                    let handle = cache.get_or_build(fp, move || {
+                        builds[idx].fetch_add(1, Ordering::SeqCst);
+                        CostArtifacts::for_sq_euclidean_support(&support, eps, key)
+                    });
+                    assert_eq!(handle.artifacts().eps.to_bits(), eps.to_bits());
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    for (idx, count) in builds.iter().enumerate() {
+        assert_eq!(count.load(Ordering::SeqCst), 1, "fingerprint {idx} built more than once");
+    }
+    let stats = cache.stats();
+    let fingerprints = eps_sweep.len() as u64;
+    assert_eq!(stats.misses, fingerprints, "{stats:?}");
+    assert_eq!(stats.hits, fingerprints * (threads as u64 - 1), "{stats:?}");
+    assert_eq!((stats.entries as u64, stats.building), (fingerprints, 0), "{stats:?}");
+}
+
+/// No cross-fingerprint stall: while one ε's build is deliberately held
+/// open, a lookup at ANOTHER ε completes. Under the old
+/// build-under-the-lock design the second lookup blocks on the cache
+/// mutex held across the first build and this test deadlocks.
+#[test]
+fn distinct_eps_builds_overlap() {
+    let cache = Arc::new(ArtifactCache::new(1 << 30));
+    let (fp_slow, arts_slow) = artifacts_for(5, 0.05);
+    let (fp_fast, arts_fast) = artifacts_for(5, 0.1);
+    assert_ne!(fp_slow, fp_fast, "distinct ε must give distinct fingerprints");
+
+    let (entered_tx, entered_rx) = mpsc::channel::<()>();
+    let (release_tx, release_rx) = mpsc::channel::<()>();
+    let slow = {
+        let cache = cache.clone();
+        std::thread::spawn(move || {
+            cache.get_or_build(fp_slow, move || {
+                entered_tx.send(()).unwrap();
+                // Hold the build open until the main thread has proven
+                // it can use the cache concurrently.
+                release_rx.recv().unwrap();
+                arts_slow
+            })
+        })
+    };
+
+    // The slow build is now in flight (and NOT holding the map lock).
+    entered_rx.recv_timeout(Duration::from_secs(30)).expect("slow build never started");
+    let gauge_mid_build = cache.stats();
+    assert_eq!(gauge_mid_build.building, 1, "{gauge_mid_build:?}");
+
+    // A different fingerprint misses, builds, and hits — all while the
+    // slow build is still open. Reaching the release send below IS the
+    // no-stall proof.
+    let fast = cache.get_or_build(fp_fast, || arts_fast.clone());
+    assert!(Arc::ptr_eq(&fast.share(), &arts_fast));
+    let fast_hit = cache.get_or_build(fp_fast, || unreachable!("fast is resident"));
+    assert!(Arc::ptr_eq(&fast_hit.share(), &arts_fast));
+
+    release_tx.send(()).unwrap();
+    let slow_handle = slow.join().unwrap();
+    assert_eq!(slow_handle.artifacts().eps.to_bits(), 0.05f64.to_bits());
+
+    let stats = cache.stats();
+    assert_eq!(stats.misses, 2, "{stats:?}");
+    assert_eq!(stats.hits, 1, "{stats:?}");
+    assert_eq!((stats.entries, stats.building), (2, 0), "{stats:?}");
+}
+
+/// Retry after a poisoned build: the panicking builder clears its slot,
+/// a waiter blocked on that slot wakes and rebuilds, and the cache ends
+/// up healthy (2 misses, artifact resident, nothing stuck building).
+#[test]
+fn waiter_retries_after_a_panicked_build() {
+    let cache = Arc::new(ArtifactCache::new(1 << 30));
+    let (fp, arts) = artifacts_for(9, 0.07);
+    let rebuilds = Arc::new(AtomicUsize::new(0));
+
+    let (entered_tx, entered_rx) = mpsc::channel::<()>();
+    let (release_tx, release_rx) = mpsc::channel::<()>();
+    let poisoned = {
+        let cache = cache.clone();
+        std::thread::spawn(move || {
+            cache.get_or_build(fp, move || {
+                entered_tx.send(()).unwrap();
+                release_rx.recv().unwrap();
+                panic!("simulated build failure");
+            })
+        })
+    };
+    entered_rx.recv_timeout(Duration::from_secs(30)).expect("build never started");
+
+    // A waiter arrives while the doomed build is in flight…
+    let waiter = {
+        let (cache, arts, rebuilds) = (cache.clone(), arts.clone(), rebuilds.clone());
+        std::thread::spawn(move || {
+            cache.get_or_build(fp, move || {
+                rebuilds.fetch_add(1, Ordering::SeqCst);
+                arts
+            })
+        })
+    };
+    // Give the waiter time to block on the building slot (correctness
+    // does not depend on it — arriving after the panic also retries).
+    std::thread::sleep(Duration::from_millis(50));
+
+    release_tx.send(()).unwrap();
+    assert!(poisoned.join().is_err(), "the build panic must reach the builder");
+    let handle = waiter.join().expect("waiter must recover, not deadlock or panic");
+    assert!(Arc::ptr_eq(&handle.share(), &arts));
+    assert_eq!(rebuilds.load(Ordering::SeqCst), 1, "the waiter rebuilds exactly once");
+
+    let stats = cache.stats();
+    assert_eq!(stats.misses, 2, "poisoned + retry: {stats:?}");
+    assert_eq!((stats.entries, stats.building), (1, 0), "{stats:?}");
+    // And the slot is genuinely healthy: the next lookup is a pure hit.
+    let hit = cache.get_or_build(fp, || unreachable!("resident after the retry"));
+    assert!(Arc::ptr_eq(&hit.share(), &arts));
+    assert_eq!(cache.stats().hits, 1, "{:?}", cache.stats());
+}

@@ -2,7 +2,9 @@
 //!
 //! * warm solves (through `CostSource::Shared` / `api::solve_batch`)
 //!   are BITWISE-identical to the cold dense/oracle paths for every
-//!   sketch-based solver, OT + UOT + barycenter;
+//!   sketch-based solver, OT + UOT + barycenter, square and
+//!   RECTANGULAR dense costs alike (the unified `sketch_budget`
+//!   convention makes the upgrade shape-agnostic);
 //! * the `ArtifactCache` LRU never exceeds its byte budget and counts
 //!   hits/misses/evictions;
 //! * different supports never collide on a fingerprint;
@@ -403,31 +405,65 @@ fn shared_handle_rejects_mismatched_eps() {
     assert!(err.to_string().contains("eps"), "{err}");
 }
 
-/// Rectangular dense problems are NOT upgraded: the shared solver arms
-/// resolve sketch budgets against max(n, m) while the dense paper arms
-/// use s₀(a.len()), so an upgrade would silently change the sketch.
-/// They pass through untouched and solve bitwise-identically cold.
+/// Rectangular dense problems upgrade to shared artifacts and stay
+/// bitwise-identical warm vs cold: every sketch solver resolves its
+/// budget through the one `sketch_budget` convention `s₀(max(n, m))`
+/// in every cost arm, so the upgrade cannot change the sketch — for
+/// any shape. Exercises OT and UOT across the sketch family, both the
+/// n < m and n > m orientations.
 #[test]
-fn rectangular_dense_problems_pass_through_unchanged() {
-    let mut rng = Rng::seed_from(0xCA5E_000B);
-    let (n, m) = (18, 30);
-    let src = points(n, &mut rng);
-    let tgt = points(m, &mut rng);
-    let cost = Arc::new(normalize_cost(&sq_euclidean_cost(&src, &tgt)));
-    let problem =
-        OtProblem::balanced(cost, histogram(n, &mut rng), histogram(m, &mut rng), 0.08);
-    let cache = ArtifactCache::new(1 << 30);
-    let shared = api::share_via_cache(&problem, &cache);
-    assert!(matches!(shared.cost, CostSource::Dense(_)), "{:?}", shared.cost);
-    let stats = cache.stats();
-    assert_eq!((stats.hits, stats.misses), (0, 0), "{stats:?}");
-    let spec = SolverSpec::new(Method::SparSink).with_budget(8.0).with_seed(9);
-    let cold = api::solve(&problem, &spec).unwrap();
-    let batch = api::solve_batch_with_cache(std::slice::from_ref(&problem), &spec, &cache)
-        .pop()
-        .unwrap()
-        .unwrap();
-    assert_bitwise("rectangular batch[0] vs solve", &cold, &batch);
+fn rectangular_dense_batches_match_cold_bitwise() {
+    let mut master = Rng::seed_from(0xCA5E_000B);
+    for (case, (n, m)) in [(18usize, 30usize), (30, 18)].into_iter().enumerate() {
+        let seed = master.next_u64();
+        let mut rng = Rng::seed_from(seed);
+        let src = points(n, &mut rng);
+        let tgt = points(m, &mut rng);
+        let cost = Arc::new(normalize_cost(&sq_euclidean_cost(&src, &tgt)));
+        let a = histogram(n, &mut rng);
+        let b = histogram(m, &mut rng);
+        let problems = [
+            OtProblem::balanced(cost.clone(), a.clone(), b.clone(), 0.08),
+            OtProblem::unbalanced(cost.clone(), a, b, 1.0, 0.08),
+        ];
+        for problem in &problems {
+            // The upgrade actually happens for rectangular shapes now…
+            let probe_cache = ArtifactCache::new(1 << 30);
+            let shared = api::share_via_cache(problem, &probe_cache);
+            assert!(
+                matches!(shared.cost, CostSource::Shared(_)),
+                "rectangular dense must upgrade: {:?}",
+                shared.cost
+            );
+            assert_eq!(probe_cache.stats().misses, 1);
+            // …and warm solves stay bitwise-identical to the cold path.
+            for method in [Method::SparSink, Method::RandSink] {
+                let spec = SolverSpec::new(method).with_budget(8.0).with_seed(seed ^ 0x3D);
+                let cold = api::solve(problem, &spec).unwrap();
+                let cache = ArtifactCache::new(1 << 30);
+                let warm =
+                    api::solve_batch_with_cache(std::slice::from_ref(problem), &spec, &cache)
+                        .pop()
+                        .unwrap()
+                        .unwrap();
+                assert_bitwise(&format!("case {case} {n}x{m} {method:?} rect"), &cold, &warm);
+                assert_eq!(cache.stats().misses, 1);
+            }
+            // Nys-Sink's symmetric-PSD factorization requires a shared
+            // square support; it rejects rectangular shapes loudly —
+            // with the IDENTICAL error cold and through the upgrade.
+            let spec = SolverSpec::new(Method::NysSink).with_budget(8.0).with_seed(1);
+            let cold_err = api::solve(problem, &spec).unwrap_err();
+            let cache = ArtifactCache::new(1 << 30);
+            let warm_err =
+                api::solve_batch_with_cache(std::slice::from_ref(problem), &spec, &cache)
+                    .pop()
+                    .unwrap()
+                    .unwrap_err();
+            assert_eq!(cold_err.to_string(), warm_err.to_string());
+            assert!(cold_err.to_string().contains("shared support"), "{cold_err}");
+        }
+    }
 }
 
 /// Sanity: warm solves still read a real matrix — spot-check the
