@@ -1,0 +1,225 @@
+//! `repro bench coordinator`: throughput/latency of the sharded
+//! distance service on the paper's echocardiogram pairwise workload
+//! (Section 6 shape: all frames on one shared pixel grid, an ε sweep
+//! giving the router several cost fingerprints to spread).
+//!
+//! For each shard count the harness runs the SAME job list twice on one
+//! service: a COLD pass (first submission — every fingerprint builds
+//! its cost/kernel artifacts) and a WARM pass (identical resubmission —
+//! every job is an artifact-cache hit), reporting jobs/sec per pass
+//! plus the snapshot p99 and cache/steal counters. Results are
+//! placement-independent, so every configuration returns bitwise-equal
+//! distances — the rows differ only in time.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::coordinator::{
+    CoordinatorConfig, DistanceJob, DistanceService, Measure, Method, ProblemSpec,
+};
+use crate::data::echo::{downsample_frames, generate, EchoConfig, Health};
+use crate::rng::Rng;
+use crate::util::json::Json;
+
+/// Workload + pool parameters for one coordinator bench run.
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    /// Pixel-grid side (each measure has `size²` support points).
+    pub size: usize,
+    /// Frames generated per video (downsampled 3:1 before pairing).
+    pub frames: usize,
+    /// Worker threads of the service under test.
+    pub workers: usize,
+    /// Shard counts to compare (the ISSUE's 1-vs-N contrast).
+    pub shard_counts: Vec<usize>,
+    /// ε sweep: one artifact fingerprint per value, so the router has
+    /// several affinity classes to spread across shards.
+    pub eps_values: Vec<f64>,
+    /// Work stealing on the services under test.
+    pub steal: bool,
+}
+
+impl BenchConfig {
+    /// A minutes-scale configuration for the committed artifact.
+    pub fn quick(workers: usize) -> Self {
+        BenchConfig {
+            size: 24,
+            frames: 18,
+            workers,
+            shard_counts: vec![1, workers.max(2)],
+            eps_values: vec![0.05, 0.1],
+            steal: true,
+        }
+    }
+}
+
+/// The echocardiogram pairwise job list: every kept frame against every
+/// later one, per ε. All measures share ONE grid `Arc`, so jobs of one
+/// ε share one fingerprint (maximal artifact reuse, maximal routing
+/// skew — the stealing stress case).
+fn pairwise_jobs(cfg: &BenchConfig) -> Vec<DistanceJob> {
+    let mut rng = Rng::seed_from(7);
+    let video = generate(
+        &EchoConfig {
+            size: cfg.size,
+            frames: cfg.frames,
+            period: 12.0,
+            health: Health::Normal,
+            noise: 0.01,
+        },
+        &mut rng,
+    );
+    let keep = downsample_frames(&video, 3);
+    let grid: Arc<Vec<Vec<f64>>> = Arc::new(
+        (0..cfg.size * cfg.size)
+            .map(|k| vec![(k % cfg.size) as f64, (k / cfg.size) as f64])
+            .collect(),
+    );
+    let measures: Vec<Measure> = keep
+        .iter()
+        .map(|&i| {
+            let frame = &video.frames[i];
+            let total: f64 = frame.iter().map(|v| v.max(0.0)).sum();
+            let mass: Vec<f64> =
+                frame.iter().map(|v| v.max(0.0) / total.max(f64::MIN_POSITIVE)).collect();
+            Measure { points: grid.clone(), mass: Arc::new(mass) }
+        })
+        .collect();
+    let mut jobs = Vec::new();
+    let mut id = 0u64;
+    for &eps in &cfg.eps_values {
+        for i in 0..measures.len() {
+            for j in (i + 1)..measures.len() {
+                jobs.push(DistanceJob {
+                    id,
+                    source: measures[i].clone(),
+                    target: measures[j].clone(),
+                    method: Method::SparSink,
+                    spec: ProblemSpec { eta: cfg.size as f64 / 7.5, eps, ..Default::default() },
+                    seed: id,
+                });
+                id += 1;
+            }
+        }
+    }
+    jobs
+}
+
+/// Run the bench and return the `BENCH_coordinator.json` document. Also
+/// prints one line per row. Latency/steal fields are cumulative
+/// service-lifetime snapshots at the end of each pass (the histogram
+/// cannot be reset); the cache fields are per-pass deltas.
+pub fn run(cfg: &BenchConfig) -> Json {
+    let jobs = pairwise_jobs(cfg);
+    let mut rows = Vec::new();
+    for &shards in &cfg.shard_counts {
+        let service = DistanceService::start(CoordinatorConfig {
+            workers: cfg.workers,
+            shards,
+            steal: cfg.steal,
+            ..Default::default()
+        });
+        let (mut prev_hits, mut prev_misses) = (0u64, 0u64);
+        for pass in ["cold", "warm"] {
+            let t0 = Instant::now();
+            let results = service.submit_all(jobs.clone()).expect("bench service alive");
+            let wall = t0.elapsed();
+            let failed = results.iter().filter(|r| r.error.is_some()).count();
+            let m = service.metrics();
+            let stolen: u64 = m.shards.iter().map(|s| s.stolen).sum();
+            let jobs_per_sec = jobs.len() as f64 / wall.as_secs_f64().max(1e-9);
+            println!(
+                "coordinator bench: shards {shards} {pass}: {} jobs in {wall:.2?} \
+                 ({jobs_per_sec:.1} jobs/s, p99 {:.1?}, cache {}h/{}m, stolen {stolen})",
+                jobs.len(),
+                m.p99_latency,
+                m.cache.hits - prev_hits,
+                m.cache.misses - prev_misses,
+            );
+            rows.push(Json::obj(vec![
+                ("shards", Json::num(shards as f64)),
+                ("pass", Json::str(pass)),
+                ("jobs", Json::num(jobs.len() as f64)),
+                ("failed", Json::num(failed as f64)),
+                ("wall_ms", Json::num(wall.as_secs_f64() * 1e3)),
+                ("jobs_per_sec", Json::num(jobs_per_sec)),
+                ("p99_us_cumulative", Json::num(m.p99_latency.as_micros() as f64)),
+                ("cache_hits", Json::num((m.cache.hits - prev_hits) as f64)),
+                ("cache_misses", Json::num((m.cache.misses - prev_misses) as f64)),
+                ("stolen_cumulative", Json::num(stolen as f64)),
+            ]));
+            prev_hits = m.cache.hits;
+            prev_misses = m.cache.misses;
+        }
+        service.shutdown();
+    }
+    let pairs = jobs.len() / cfg.eps_values.len().max(1);
+    Json::obj(vec![
+        ("bench", Json::str("coordinator")),
+        (
+            "workload",
+            Json::obj(vec![
+                ("grid", Json::num(cfg.size as f64)),
+                ("frame_pairs", Json::num(pairs as f64)),
+                (
+                    "eps_values",
+                    Json::arr(cfg.eps_values.iter().map(|&e| Json::num(e)).collect()),
+                ),
+                ("jobs_per_pass", Json::num(jobs.len() as f64)),
+                ("workers", Json::num(cfg.workers as f64)),
+                ("steal", Json::Bool(cfg.steal)),
+                ("method", Json::str(Method::SparSink.name())),
+            ]),
+        ),
+        ("rows", Json::arr(rows)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeSet;
+
+    #[test]
+    fn workload_is_deterministic_and_fingerprint_shaped() {
+        let cfg = BenchConfig { size: 8, frames: 9, ..BenchConfig::quick(2) };
+        let a = pairwise_jobs(&cfg);
+        let b = pairwise_jobs(&cfg);
+        assert!(!a.is_empty());
+        assert_eq!(a.len(), b.len());
+        // Deterministic workload: same ids, seeds and masses both times.
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.seed, y.seed);
+            assert_eq!(x.source.mass, y.source.mass);
+        }
+        // One shared grid Arc per run: every job aliases the same points.
+        assert!(Arc::ptr_eq(&a[0].source.points, &a[a.len() - 1].target.points));
+        // One ε class per eps value.
+        let eps: BTreeSet<u64> = a.iter().map(|j| j.spec.eps.to_bits()).collect();
+        assert_eq!(eps.len(), cfg.eps_values.len());
+    }
+
+    #[test]
+    fn tiny_bench_run_produces_rows() {
+        let cfg = BenchConfig {
+            size: 6,
+            frames: 6,
+            workers: 2,
+            shard_counts: vec![1, 2],
+            eps_values: vec![0.1],
+            steal: true,
+        };
+        let doc = run(&cfg);
+        let rows = doc.get("rows").expect("rows").items();
+        // One cold + one warm row per shard count.
+        assert_eq!(rows.len(), 4);
+        for row in rows {
+            assert_eq!(row.get("failed").and_then(Json::as_f64), Some(0.0));
+            assert!(row.get("jobs_per_sec").and_then(Json::as_f64).unwrap() > 0.0);
+        }
+        // The warm pass re-hits what the cold pass built.
+        assert!(rows[1].get("cache_hits").and_then(Json::as_f64).unwrap() > 0.0);
+        assert_eq!(rows[1].get("cache_misses").and_then(Json::as_f64), Some(0.0));
+    }
+}

@@ -1,9 +1,13 @@
 //! From-scratch micro-benchmark harness (the offline image has no
 //! `criterion`). `cargo bench` runs the `benches/*.rs` targets, each of
 //! which uses this module: warmup, timed samples, mean/median/stddev,
-//! and a rendered report.
+//! and a rendered report. The [`coordinator`] arm (`repro bench
+//! coordinator`) instead measures the sharded distance service end to
+//! end and emits `BENCH_coordinator.json`.
 
 use std::time::{Duration, Instant};
+
+pub mod coordinator;
 
 /// One benchmark's measurements.
 #[derive(Clone, Debug)]

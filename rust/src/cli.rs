@@ -79,8 +79,8 @@ pub fn usage() -> String {
              approx run share one kernel build; prints the cache counters\n\
              (hits/misses/evictions, resident entries + in-flight builds,\n\
              bytes vs budget) after both solves\n\
-       serve [--videos V] [--frames F] [--workers W] [--method M] [--eps E]\n\
-             [--backend B] [--threshold T] [--shared-grid]\n\
+       serve [--videos V] [--frames F] [--workers W] [--shards S] [--no-steal]\n\
+             [--method M] [--eps E] [--backend B] [--threshold T] [--shared-grid]\n\
              run the batched WFR distance service; --shared-grid keeps\n\
              every frame on the full pixel grid so all pairwise jobs\n\
              share one support and the coordinator's artifact cache\n\
@@ -92,7 +92,16 @@ pub fn usage() -> String {
              --threshold T (default 0.05) is the per-frame support\n\
              cutoff when --shared-grid is NOT set (pixels below T of\n\
              the frame max are dropped, so each frame gets its own\n\
-             support and cache sharing across frames is incidental)\n\
+             support and cache sharing across frames is incidental);\n\
+             --workers/--shards take 0 = available parallelism (shards\n\
+             clamp to the worker count), --no-steal disables work\n\
+             stealing — batches are routed to shards by their cost\n\
+             fingerprint, so placement never changes results\n\
+       bench coordinator [--workers W] [--shards N] [--size G] [--frames F]\n\
+             [--no-steal] [--out FILE]\n\
+             sharded-service throughput/latency on the echocardiogram\n\
+             pairwise workload: 1 vs N shards, cold vs warm artifact\n\
+             cache; writes BENCH_coordinator.json (or FILE)\n\
        runtime-info                                    PJRT platform + artifact menu (xla feature)\n\
        list                                            list available experiments\n\
      \n\

@@ -1,4 +1,11 @@
 //! Job and result types for the distance service.
+//!
+//! A job's supports double as its placement key: the scheduler routes
+//! batches by the cost [`Fingerprint`](crate::engine::Fingerprint) of
+//! their jobs (support pair + η, ε, formulation), so jobs sharing a
+//! `Measure`'s `Arc`-shared points — a video's frames, a barycenter
+//! support — land on one shard and hit that shard's warm artifacts.
+//! Placement never affects results, only where they are computed.
 
 use std::sync::Arc;
 

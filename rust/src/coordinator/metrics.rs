@@ -100,6 +100,77 @@ impl LatencyHistogram {
     pub fn max(&self) -> Duration {
         Duration::from_micros(self.max_us.load(Ordering::Relaxed))
     }
+
+    /// Fold another histogram's samples into this one (bucket-wise).
+    ///
+    /// The cross-shard merge: each shard records the latency of the jobs
+    /// its workers executed into its own histogram, and the service
+    /// snapshot merges them into one service-wide distribution — the
+    /// same quantiles the single-queue design reported from its single
+    /// histogram.
+    pub fn absorb(&self, other: &LatencyHistogram) {
+        for (mine, theirs) in self.buckets.iter().zip(&other.buckets) {
+            mine.fetch_add(theirs.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
+        self.count.fetch_add(other.count.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.total_us.fetch_add(other.total_us.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.max_us.fetch_max(other.max_us.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+}
+
+/// Point-in-time gauges of one shard of the sharded worker pool
+/// (surfaced in [`MetricsSnapshot::shards`]).
+///
+/// Attribution: `depth`, `routed`, `queued_max` and `stolen_from`
+/// describe the shard's QUEUE (its home batches); `busy`, `stolen`,
+/// `completed`, `failed` and `p99_latency` describe the shard's WORKERS
+/// (including batches they stole from other shards). Summing
+/// `completed`/`failed` across shards therefore reproduces the global
+/// counters exactly, whether or not stealing moved work.
+#[derive(Clone, Debug)]
+pub struct ShardStats {
+    /// Shard index (0-based).
+    pub shard: usize,
+    /// Batches currently queued on this shard.
+    pub depth: usize,
+    /// Peak queue depth observed since start.
+    pub queued_max: u64,
+    /// This shard's workers currently executing a batch.
+    pub busy: u64,
+    /// Batches the scheduler routed to this shard.
+    pub routed: u64,
+    /// Batches this shard's workers stole from other shards.
+    pub stolen: u64,
+    /// Batches other shards' workers stole from this queue.
+    pub stolen_from: u64,
+    /// Jobs completed by this shard's workers.
+    pub completed: u64,
+    /// Jobs failed on this shard's workers.
+    pub failed: u64,
+    /// 99th-percentile latency of jobs executed by this shard's workers
+    /// (bucket upper bound).
+    pub p99_latency: Duration,
+}
+
+impl ShardStats {
+    /// One-line rendering (one per shard in
+    /// [`MetricsSnapshot::render`]).
+    pub fn render(&self) -> String {
+        format!(
+            "shard {}: depth {} (max {})  busy {}  routed {}  stolen {} (lost {})  \
+             completed {}  failed {}  p99 {:.1?}",
+            self.shard,
+            self.depth,
+            self.queued_max,
+            self.busy,
+            self.routed,
+            self.stolen,
+            self.stolen_from,
+            self.completed,
+            self.failed,
+            self.p99_latency
+        )
+    }
 }
 
 /// Point-in-time snapshot of service metrics.
@@ -133,6 +204,15 @@ pub struct MetricsSnapshot {
     pub log_escalations: Vec<(&'static str, u64)>,
     /// Gauge: escalated jobs / completed jobs.
     pub log_escalation_rate: f64,
+    /// Per-shard gauges of the sharded worker pool, one entry per
+    /// shard. Queue-side gauges (`depth`, `routed`, `stolen_from`)
+    /// describe each shard's home queue; worker-side counters (`busy`,
+    /// `stolen`, `completed`, `failed`, `p99_latency`) describe the
+    /// batches its workers actually executed, so the per-shard
+    /// completed/failed counts sum to the global counters above. The
+    /// service-wide latency quantiles are the cross-shard
+    /// [`LatencyHistogram`] merge.
+    pub shards: Vec<ShardStats>,
     /// Shared-cost artifact cache counters/gauges: hits, misses,
     /// evictions, resident entries/bytes, in-flight builds (the
     /// `building` gauge — single-flight slots under construction), and
@@ -155,7 +235,7 @@ impl MetricsSnapshot {
                 .collect::<Vec<_>>()
                 .join(" ")
         };
-        format!(
+        let mut out = format!(
             "jobs: {} submitted / {} completed / {} failed in {} batches\n\
              latency: mean {:.1?}  p50 {:.1?}  p99 {:.1?}  max {:.1?}\n\
              throughput: {:.2} jobs/s\n\
@@ -173,7 +253,12 @@ impl MetricsSnapshot {
             escalations,
             self.log_escalation_rate,
             self.cache.render()
-        )
+        );
+        for shard in &self.shards {
+            out.push('\n');
+            out.push_str(&shard.render());
+        }
+        out
     }
 }
 
@@ -222,6 +307,47 @@ mod tests {
         assert!(q0 >= Duration::from_secs(1), "q0 {q0:?}");
         assert_eq!(q0, h.quantile(0.5));
         assert_eq!(q0, h.quantile(1.0));
+    }
+
+    #[test]
+    fn absorb_merges_bucketwise() {
+        let a = LatencyHistogram::new();
+        let b = LatencyHistogram::new();
+        a.record(Duration::from_micros(100));
+        b.record(Duration::from_millis(10));
+        b.record(Duration::from_millis(20));
+        let merged = LatencyHistogram::new();
+        merged.absorb(&a);
+        merged.absorb(&b);
+        assert_eq!(merged.count(), 3);
+        assert_eq!(merged.max(), b.max());
+        // Mean of the merge is the pooled mean, not the mean of means
+        // (integer-µs division, matching `mean()`).
+        assert_eq!(merged.mean(), Duration::from_micros((100 + 10_000 + 20_000) / 3));
+        // Quantiles span both sources: p0 from `a`, p100 from `b`.
+        assert!(merged.quantile(0.0) <= Duration::from_micros(400));
+        assert!(merged.quantile(1.0) >= Duration::from_millis(10));
+    }
+
+    #[test]
+    fn shard_stats_render_one_line_each() {
+        let s = ShardStats {
+            shard: 3,
+            depth: 2,
+            queued_max: 5,
+            busy: 1,
+            routed: 7,
+            stolen: 4,
+            stolen_from: 2,
+            completed: 40,
+            failed: 1,
+            p99_latency: Duration::from_millis(3),
+        };
+        let line = s.render();
+        assert!(line.starts_with("shard 3:"), "{line}");
+        assert!(line.contains("routed 7"), "{line}");
+        assert!(line.contains("stolen 4 (lost 2)"), "{line}");
+        assert!(!line.contains('\n'), "{line}");
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! The serving coordinator: a batched distance-computation service.
+//! The serving coordinator: a batched, sharded distance-computation
+//! service.
 //!
 //! The paper's echocardiogram pipeline (Section 6) reduces to computing
 //! many pairwise WFR distances between video frames. This module turns
@@ -7,14 +8,23 @@
 //! ```text
 //!   clients ── submit(job) ──▶ bounded queue (backpressure)
 //!                                  │
-//!                             batcher thread
-//!                      groups jobs by (method, size bucket)
+//!                       batcher thread (scheduler)
+//!               groups jobs by (method, size bucket), then
+//!           routes each batch by its cost FINGERPRINT: one
+//!          fingerprint → one shard (round-robin otherwise)
 //!                                  │
-//!                          worker pool (N threads)
-//!              solves each job through `api::solve` (one
-//!            dispatch surface for every registered method)
+//!              ┌───────────┬───────┴───────┬───────────┐
+//!           shard 0     shard 1         shard …     shard S-1
+//!        (bounded queue: FIFO submit, LIFO pop by own workers,
+//!           FIFO pop by stealers — oldest batch steals first)
+//!              │           │               │           │
+//!           worker(s) per shard; an idle worker STEALS the
+//!           oldest batch from the deepest other shard, then
+//!            solves each job through `api::solve` (one
+//!           dispatch surface for every registered method)
 //!                                  │
-//!                       per-job response channels + metrics
+//!                 per-job response channels + metrics
+//!                 (global + per-shard [`ShardStats`])
 //! ```
 //!
 //! Distance (pairwise WFR) and fixed-support barycenter jobs share the
@@ -24,19 +34,31 @@
 //! log-escalation counters.
 //!
 //! * The submission queue is bounded: `submit` blocks once `queue_cap`
-//!   jobs are in flight (backpressure instead of unbounded memory).
+//!   jobs are in flight; the per-shard queues are bounded too, so
+//!   backpressure propagates shard → scheduler → `submit` instead of
+//!   growing memory.
 //! * The batcher flushes a batch when it reaches `max_batch` jobs or
 //!   `batch_window` elapses, whichever comes first — the same policy as
 //!   continuous-batching LLM servers, adapted to solver jobs.
+//! * Fingerprint-affine routing keeps every artifact-cache hit on one
+//!   shard's workers (cache-warm LIFO pop); work stealing bounds tail
+//!   latency when the fingerprint distribution is skewed. Neither
+//!   changes results: solutions are bitwise identical at any
+//!   `shards`/`steal` setting (pinned by the `cache_parity` and
+//!   `thread_determinism` suites).
 //! * Latency/throughput metrics are recorded per job and exposed as a
-//!   histogram snapshot ([`metrics::MetricsSnapshot`]).
+//!   histogram snapshot ([`metrics::MetricsSnapshot`]) with per-shard
+//!   depth/busy/stolen gauges.
 
 mod jobs;
 mod metrics;
+mod scheduler;
 mod service;
+mod shard;
+mod steal;
 
 pub use jobs::{
     BarycenterJob, BarycenterResult, DistanceJob, DistanceResult, Measure, Method, ProblemSpec,
 };
-pub use metrics::{LatencyHistogram, MetricsSnapshot};
+pub use metrics::{LatencyHistogram, MetricsSnapshot, ShardStats};
 pub use service::{CoordinatorConfig, DistanceService};

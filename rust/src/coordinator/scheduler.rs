@@ -1,0 +1,235 @@
+//! Routing + admission: the batcher thread and the fingerprint-affine
+//! shard router.
+//!
+//! The batcher collects queued jobs until `max_batch` or
+//! `batch_window`, groups them by (method, size bucket), and flushes
+//! one [`Batch`] per group — groups sorted by key before ids are
+//! assigned, so an identical submission sequence always yields
+//! identical batch ids (a `HashMap` iteration here used to make ids
+//! vary run to run).
+//!
+//! Routing is FINGERPRINT-AFFINE: each batch carries the content
+//! address ([`Fingerprint`]) of its jobs' cost geometry, and every
+//! batch sharing a fingerprint is routed to the same shard
+//! (`routing_key % shards`). Artifact-cache hits therefore stay
+//! shard-local — no cross-core traffic on the cached kernel, and
+//! single-flight contention never crosses shards — while batches
+//! without a shareable fingerprint (oversized grids that keep the
+//! oracle path) round-robin across shards. The `sketch_budget`
+//! contract makes this safe: placement can never change a sketch, so
+//! routing is purely a locality decision (pinned bitwise by
+//! `cache_parity`).
+
+use std::collections::HashMap;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::jobs::{BarycenterJob, BarycenterResult, DistanceJob, DistanceResult, Method};
+use super::service::{CoordinatorConfig, Shared};
+use super::shard::Shard;
+use crate::engine::{Fingerprint, FormulationKey, SHARED_ARTIFACT_ENTRY_CAP};
+use crate::solvers::backend::ScalingBackend;
+
+/// One queued unit of work. Distance (pairwise WFR) and barycenter jobs
+/// share the queue, the batcher, and the worker pool — they differ only
+/// in how the worker expresses them as an
+/// [`OtProblem`](crate::api::OtProblem).
+pub(crate) enum QueuedJob {
+    /// A pairwise WFR-distance job plus its response channel.
+    Distance {
+        /// The job as submitted.
+        job: DistanceJob,
+        /// Submission time (end-to-end latency baseline).
+        enqueued: Instant,
+        /// Where the worker sends the result.
+        respond: Sender<DistanceResult>,
+    },
+    /// A fixed-support barycenter job plus its response channel.
+    Barycenter {
+        /// The job as submitted.
+        job: BarycenterJob,
+        /// Submission time (end-to-end latency baseline).
+        enqueued: Instant,
+        /// Where the worker sends the result.
+        respond: Sender<BarycenterResult>,
+    },
+}
+
+impl QueuedJob {
+    pub(crate) fn method(&self) -> Method {
+        match self {
+            QueuedJob::Distance { job, .. } => job.method,
+            QueuedJob::Barycenter { job, .. } => job.method,
+        }
+    }
+
+    /// Problem size driving the batching bucket.
+    fn size(&self) -> usize {
+        match self {
+            QueuedJob::Distance { job, .. } => job.source.len().max(job.target.len()),
+            QueuedJob::Barycenter { job, .. } => job.support_len(),
+        }
+    }
+
+    /// Whether this job pinned the log-domain engine itself (such jobs
+    /// are not escalations when they report `BackendKind::LogDomain`).
+    pub(crate) fn forces_log_domain(&self) -> bool {
+        let (method, spec) = match self {
+            QueuedJob::Distance { job, .. } => (job.method, &job.spec),
+            QueuedJob::Barycenter { job, .. } => (job.method, &job.spec),
+        };
+        method == Method::SparSinkLog
+            || matches!(spec.backend, Some(ScalingBackend::LogDomain))
+    }
+
+    /// The content address of this job's cost geometry, when it fits
+    /// [`SHARED_ARTIFACT_ENTRY_CAP`] — the SAME fingerprint the worker
+    /// resolves through the artifact cache (one computation shared by
+    /// the router and the solve path, so routing and caching can never
+    /// disagree). `None` = oversized: the worker keeps the cold oracle
+    /// path and the router falls back to round-robin.
+    pub(crate) fn fingerprint(&self) -> Option<Fingerprint> {
+        match self {
+            QueuedJob::Distance { job, .. } => {
+                let cells = job.source.len() * job.target.len();
+                (cells > 0 && cells <= SHARED_ARTIFACT_ENTRY_CAP).then(|| {
+                    Fingerprint::for_supports(
+                        &job.source.points,
+                        &job.target.points,
+                        Some(job.spec.eta),
+                        job.spec.eps,
+                        FormulationKey::unbalanced(job.spec.lambda),
+                    )
+                })
+            }
+            QueuedJob::Barycenter { job, .. } => {
+                let n = job.support_len();
+                (n > 0 && n * n <= SHARED_ARTIFACT_ENTRY_CAP).then(|| {
+                    Fingerprint::for_supports(
+                        &job.support,
+                        &job.support,
+                        None,
+                        job.spec.eps,
+                        FormulationKey::Barycenter,
+                    )
+                })
+            }
+        }
+    }
+}
+
+/// A flushed group of jobs. The id is assigned by the batcher at flush
+/// time and travels WITH the batch — workers must not re-read the
+/// global counter, which races when several batches are in flight. The
+/// fingerprint is the group's routing affinity (the first job's, when
+/// shareable).
+pub(crate) struct Batch {
+    pub(crate) id: u64,
+    pub(crate) fingerprint: Option<Fingerprint>,
+    pub(crate) jobs: Vec<QueuedJob>,
+}
+
+/// Size bucket: log2 of support size — jobs in a batch have comparable
+/// cost, keeping batch latency predictable.
+fn size_bucket(job: &QueuedJob) -> u32 {
+    let n = job.size().max(1);
+    usize::BITS - n.leading_zeros()
+}
+
+/// The shard router. Batches with a shareable fingerprint are placed by
+/// `routing_key % shards` — a pure function of the content address, so
+/// one fingerprint always lands on one shard; fingerprint-less batches
+/// round-robin for balance.
+struct Router {
+    shards: Vec<Arc<Shard>>,
+    round_robin: usize,
+}
+
+impl Router {
+    fn route(&mut self, batch: Batch) {
+        let slot = match &batch.fingerprint {
+            Some(fp) => (fp.routing_key() % self.shards.len() as u64) as usize,
+            None => {
+                let slot = self.round_robin;
+                self.round_robin = (self.round_robin + 1) % self.shards.len();
+                slot
+            }
+        };
+        self.shards[slot].push(batch);
+    }
+}
+
+/// The batcher thread: collect jobs until `max_batch` or
+/// `batch_window`, then flush groups through the router. Exits when the
+/// submission channel closes (after routing everything still pending).
+pub(crate) fn batcher_loop(
+    rx: Receiver<QueuedJob>,
+    cfg: CoordinatorConfig,
+    shared: Arc<Shared>,
+    shards: Vec<Arc<Shard>>,
+) {
+    let mut router = Router { shards, round_robin: 0 };
+    let mut pending: Vec<QueuedJob> = Vec::new();
+    let mut window_start: Option<Instant> = None;
+    loop {
+        let timeout = match window_start {
+            Some(t0) => cfg
+                .batch_window
+                .checked_sub(t0.elapsed())
+                .unwrap_or(Duration::ZERO),
+            None => Duration::from_millis(50),
+        };
+        match rx.recv_timeout(timeout) {
+            Ok(job) => {
+                if pending.is_empty() {
+                    window_start = Some(Instant::now());
+                }
+                pending.push(job);
+                if pending.len() >= cfg.max_batch {
+                    flush(&mut pending, &mut router, &shared);
+                    window_start = None;
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                if !pending.is_empty() {
+                    flush(&mut pending, &mut router, &shared);
+                    window_start = None;
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                if !pending.is_empty() {
+                    flush(&mut pending, &mut router, &shared);
+                }
+                break;
+            }
+        }
+    }
+}
+
+/// Group pending jobs by (method, size bucket), assign batch ids in
+/// sorted-key order, and route each batch to its shard.
+fn flush(pending: &mut Vec<QueuedJob>, router: &mut Router, shared: &Arc<Shared>) {
+    let mut groups: HashMap<(usize, u32), Vec<QueuedJob>> = HashMap::new();
+    for job in pending.drain(..) {
+        groups
+            .entry((job.method().index(), size_bucket(&job)))
+            .or_default()
+            .push(job);
+    }
+    // Sort groups by key before assigning ids: a `HashMap` iteration
+    // made batch ids for an identical submission sequence vary run to
+    // run (and across shard counts), breaking the determinism contract.
+    let mut groups: Vec<_> = groups.into_iter().collect();
+    groups.sort_by_key(|(key, _)| *key);
+    for (_, jobs) in groups {
+        // Assign the id HERE and carry it with the batch: workers
+        // re-reading the counter would see whatever batch was flushed
+        // most recently, reporting wrong/duplicate ids under
+        // concurrency.
+        let id = shared.batches.fetch_add(1, Ordering::Relaxed) + 1;
+        let fingerprint = jobs.iter().find_map(QueuedJob::fingerprint);
+        router.route(Batch { id, fingerprint, jobs });
+    }
+}

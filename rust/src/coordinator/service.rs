@@ -1,6 +1,7 @@
-//! The distance service: bounded submission queue → batcher → worker
-//! pool, all on std threads (the image has no tokio; the architecture
-//! mirrors a continuous-batching server loop).
+//! The distance service: bounded submission queue → batcher →
+//! fingerprint-affine router → sharded worker pool, all on std threads
+//! (the image has no tokio; the architecture mirrors a
+//! continuous-batching server loop with per-queue worker shards).
 //!
 //! Workers carry NO per-method solver plumbing: every job is expressed
 //! as an [`OtProblem`] — distance jobs as WFR cost/log-kernel oracles +
@@ -11,34 +12,62 @@
 //! each result reports the [`BackendKind`] that actually ran, and
 //! `Auto` escalations from either job shape feed the same per-method
 //! counters.
+//!
+//! Batching and routing live in [`super::scheduler`]; the per-worker
+//! bounded queues in [`super::shard`]; work stealing in
+//! [`super::steal`]. Sharding moves work between workers but never
+//! changes it: artifacts are content-addressed and every solution is a
+//! pure function of its job, so results are bitwise identical at any
+//! shard count, stealing on or off (pinned by `cache_parity` and
+//! `thread_determinism`).
 
-use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 use super::jobs::{
     BarycenterJob, BarycenterResult, DistanceJob, DistanceResult, Method, ProblemSpec,
 };
 use super::metrics::{LatencyHistogram, MetricsSnapshot};
+use super::scheduler::{self, Batch, QueuedJob};
+use super::shard::Shard;
+use super::steal;
 use crate::api::{self, CostSource, EntryOracle, Formulation, OtProblem, SolverSpec};
-use crate::engine::{
-    ArtifactCache, CostArtifacts, Fingerprint, FormulationKey, SHARED_ARTIFACT_ENTRY_CAP,
-};
+use crate::engine::{ArtifactCache, CostArtifacts, Fingerprint};
 use crate::error::{Error, Result};
 use crate::ot::cost::{euclidean, log_gibbs_from_cost, sq_euclidean, wfr_cost_from_distance};
 use crate::ot::uot::wfr_distance_from_objective;
-use crate::solvers::backend::{BackendKind, ScalingBackend};
+use crate::solvers::backend::BackendKind;
 
 const N_METHODS: usize = Method::ALL.len();
+
+/// How long an idle worker parks before re-scanning its own queue and
+/// (with stealing on) the other shards. Bounds steal-discovery latency;
+/// workers are woken immediately when work is routed to THEIR shard.
+const WORKER_PARK: Duration = Duration::from_millis(1);
 
 /// Coordinator configuration.
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
-    /// Worker threads solving jobs.
+    /// Worker threads solving jobs. `0` resolves to
+    /// `std::thread::available_parallelism()` — the same convention as
+    /// `shards`.
     pub workers: usize,
-    /// Maximum jobs in flight before `submit` blocks (backpressure).
+    /// Shards: per-worker bounded batch queues with FIFO-submit /
+    /// LIFO-pop scheduling. Batches are routed fingerprint-affinely
+    /// (one cost fingerprint → one shard, so artifact hits stay
+    /// shard-local); `0` resolves to available parallelism, and the
+    /// count is always clamped to the resolved worker count so every
+    /// shard has at least one worker. Sharding never changes results —
+    /// only where they are computed.
+    pub shards: usize,
+    /// Work stealing: a worker whose shard has drained takes the
+    /// OLDEST batch from the DEEPEST other shard (tail latency).
+    /// Placement-only; results are bitwise identical on or off.
+    pub steal: bool,
+    /// Maximum jobs in flight before `submit` blocks (backpressure);
+    /// also the per-shard queue bound, in batches.
     pub queue_cap: usize,
     /// Flush a batch at this many jobs…
     pub max_batch: usize,
@@ -55,6 +84,8 @@ impl Default for CoordinatorConfig {
     fn default() -> Self {
         CoordinatorConfig {
             workers: crate::pool::num_threads().min(8),
+            shards: 0,
+            steal: true,
             queue_cap: 256,
             max_batch: 16,
             batch_window: Duration::from_millis(5),
@@ -63,132 +94,115 @@ impl Default for CoordinatorConfig {
     }
 }
 
-/// One queued unit of work. Distance (pairwise WFR) and barycenter jobs
-/// share the queue, the batcher, and the worker pool — they differ only
-/// in how the worker expresses them as an [`OtProblem`].
-enum QueuedJob {
-    Distance {
-        job: DistanceJob,
-        enqueued: Instant,
-        respond: Sender<DistanceResult>,
-    },
-    Barycenter {
-        job: BarycenterJob,
-        enqueued: Instant,
-        respond: Sender<BarycenterResult>,
-    },
+fn available_parallelism() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
-impl QueuedJob {
-    fn method(&self) -> Method {
-        match self {
-            QueuedJob::Distance { job, .. } => job.method,
-            QueuedJob::Barycenter { job, .. } => job.method,
+impl CoordinatorConfig {
+    /// The worker count the service will actually start: `workers`,
+    /// with `0` meaning available parallelism.
+    pub fn resolved_workers(&self) -> usize {
+        if self.workers == 0 {
+            available_parallelism()
+        } else {
+            self.workers
         }
     }
 
-    /// Problem size driving the batching bucket.
-    fn size(&self) -> usize {
-        match self {
-            QueuedJob::Distance { job, .. } => job.source.len().max(job.target.len()),
-            QueuedJob::Barycenter { job, .. } => job.support_len(),
-        }
-    }
-
-    /// Whether this job pinned the log-domain engine itself (such jobs
-    /// are not escalations when they report `BackendKind::LogDomain`).
-    fn forces_log_domain(&self) -> bool {
-        let (method, spec) = match self {
-            QueuedJob::Distance { job, .. } => (job.method, &job.spec),
-            QueuedJob::Barycenter { job, .. } => (job.method, &job.spec),
+    /// The shard count the service will actually start: `shards` (`0` =
+    /// available parallelism), clamped to [`Self::resolved_workers`] so
+    /// no shard is left without a worker.
+    pub fn resolved_shards(&self) -> usize {
+        let shards = if self.shards == 0 {
+            available_parallelism()
+        } else {
+            self.shards
         };
-        method == Method::SparSinkLog
-            || matches!(spec.backend, Some(ScalingBackend::LogDomain))
+        shards.min(self.resolved_workers()).max(1)
     }
 }
 
-/// A flushed group of jobs. The id is assigned by the batcher at flush
-/// time and travels WITH the batch — workers must not re-read the global
-/// counter, which races when several batches are in flight.
-struct Batch {
-    id: u64,
-    jobs: Vec<QueuedJob>,
-}
-
-struct Shared {
-    submitted: AtomicU64,
-    completed: AtomicU64,
-    failed: AtomicU64,
-    batches: AtomicU64,
+/// Counters and the artifact cache shared by every service thread.
+/// Latency lives per shard (see [`Shard`]); the snapshot merges the
+/// per-shard histograms.
+pub(crate) struct Shared {
+    pub(crate) submitted: AtomicU64,
+    pub(crate) completed: AtomicU64,
+    pub(crate) failed: AtomicU64,
+    /// Batch-id source; ids are assigned by the batcher at flush time
+    /// in sorted-group order (see [`super::scheduler`]).
+    pub(crate) batches: AtomicU64,
     /// Per-method count of completed jobs whose solution came back from
     /// the log-domain engine WITHOUT the job forcing it (neither
     /// `Method::SparSinkLog` nor a `ProblemSpec::backend` override) —
     /// the `Auto` policy escalated. Indexed by [`Method::index`].
-    escalations: [AtomicU64; N_METHODS],
-    latency: LatencyHistogram,
-    started: Instant,
-    stopping: AtomicBool,
+    pub(crate) escalations: [AtomicU64; N_METHODS],
+    pub(crate) started: Instant,
+    pub(crate) stopping: AtomicBool,
     /// Shared-cost artifact cache (content-addressed, byte-budget LRU,
     /// per-fingerprint single-flight); workers of both job shapes
     /// resolve their geometry through it CONCURRENTLY — a long build on
     /// one fingerprint (one ε, say) never stalls workers hitting or
-    /// building other fingerprints.
-    cache: ArtifactCache,
+    /// building other fingerprints. Fingerprint-affine routing keeps
+    /// each fingerprint's hits on one shard's workers.
+    pub(crate) cache: ArtifactCache,
 }
 
 /// The batched WFR-distance service.
 pub struct DistanceService {
     tx: Option<SyncSender<QueuedJob>>,
     shared: Arc<Shared>,
+    shards: Vec<Arc<Shard>>,
     batcher: Option<std::thread::JoinHandle<()>>,
     workers: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl DistanceService {
-    /// Start the service threads.
+    /// Start the service threads: one batcher/router, and
+    /// `config.resolved_workers()` workers over
+    /// `config.resolved_shards()` shards (worker `w` owns shard
+    /// `w % shards`).
     pub fn start(config: CoordinatorConfig) -> Self {
+        let worker_count = config.resolved_workers();
+        let shard_count = config.resolved_shards();
         let (tx, rx) = sync_channel::<QueuedJob>(config.queue_cap);
-        let (batch_tx, batch_rx) = mpsc::channel::<Batch>();
-        let batch_rx = Arc::new(Mutex::new(batch_rx));
+        let shards: Vec<Arc<Shard>> =
+            (0..shard_count).map(|_| Arc::new(Shard::new(config.queue_cap))).collect();
         let shared = Arc::new(Shared {
             submitted: AtomicU64::new(0),
             completed: AtomicU64::new(0),
             failed: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             escalations: std::array::from_fn(|_| AtomicU64::new(0)),
-            latency: LatencyHistogram::new(),
             started: Instant::now(),
             stopping: AtomicBool::new(false),
             cache: ArtifactCache::new(config.cache_bytes),
         });
 
-        // Batcher: collect jobs until max_batch or batch_window, group by
-        // (method, size bucket) so a batch has homogeneous cost.
+        // Batcher + router: collect jobs until max_batch or
+        // batch_window, group by (method, size bucket), route each
+        // group to its fingerprint-affine shard.
         let batcher = {
             let shared = shared.clone();
+            let shards = shards.clone();
             let cfg = config.clone();
-            std::thread::spawn(move || batcher_loop(rx, batch_tx, cfg, shared))
+            std::thread::spawn(move || scheduler::batcher_loop(rx, cfg, shared, shards))
         };
 
-        // Workers.
-        let workers = (0..config.workers.max(1))
-            .map(|_| {
+        // Workers: each owns one shard (LIFO pop for cache warmth) and,
+        // when stealing is on, relieves the deepest other shard once
+        // its own queue drains.
+        let steal = config.steal;
+        let workers = (0..worker_count)
+            .map(|w| {
                 let shared = shared.clone();
-                let batch_rx = batch_rx.clone();
-                std::thread::spawn(move || loop {
-                    let batch = {
-                        let guard = batch_rx.lock().unwrap();
-                        guard.recv()
-                    };
-                    match batch {
-                        Ok(batch) => run_batch(batch, &shared),
-                        Err(_) => break,
-                    }
-                })
+                let shards = shards.clone();
+                let own = w % shard_count;
+                std::thread::spawn(move || worker_loop(own, &shards, &shared, steal))
             })
             .collect();
 
-        DistanceService { tx: Some(tx), shared, batcher: Some(batcher), workers }
+        DistanceService { tx: Some(tx), shared, shards, batcher: Some(batcher), workers }
     }
 
     fn enqueue(&self, queued: QueuedJob) -> Result<()> {
@@ -247,7 +261,9 @@ impl DistanceService {
             .collect()
     }
 
-    /// Metrics snapshot.
+    /// Metrics snapshot. Service-wide latency quantiles are the
+    /// cross-shard histogram merge; per-shard gauges ride along in
+    /// [`MetricsSnapshot::shards`].
     pub fn metrics(&self) -> MetricsSnapshot {
         let s = &self.shared;
         let elapsed = s.started.elapsed().as_secs_f64().max(1e-9);
@@ -260,18 +276,23 @@ impl DistanceService {
             })
             .collect();
         let escalated: u64 = log_escalations.iter().map(|(_, c)| c).sum();
+        let merged = LatencyHistogram::new();
+        for shard in &self.shards {
+            merged.absorb(&shard.latency);
+        }
         MetricsSnapshot {
             submitted: s.submitted.load(Ordering::Relaxed),
             completed,
             failed: s.failed.load(Ordering::Relaxed),
             batches: s.batches.load(Ordering::Relaxed),
-            mean_latency: s.latency.mean(),
-            p50_latency: s.latency.quantile(0.5),
-            p99_latency: s.latency.quantile(0.99),
-            max_latency: s.latency.max(),
+            mean_latency: merged.mean(),
+            p50_latency: merged.quantile(0.5),
+            p99_latency: merged.quantile(0.99),
+            max_latency: merged.max(),
             throughput: completed as f64 / elapsed,
             log_escalations,
             log_escalation_rate: escalated as f64 / completed.max(1) as f64,
+            shards: self.shards.iter().enumerate().map(|(i, sh)| sh.stats(i)).collect(),
             cache: s.cache.stats(),
         }
     }
@@ -288,6 +309,11 @@ impl DistanceService {
         if let Some(b) = self.batcher.take() {
             let _ = b.join();
         }
+        // The batcher has routed everything; closing the shards (no
+        // further pushes possible) lets workers drain and exit.
+        for shard in &self.shards {
+            shard.close();
+        }
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
@@ -300,90 +326,53 @@ impl Drop for DistanceService {
     }
 }
 
-/// Size bucket: log2 of support size — jobs in a batch have comparable
-/// cost, keeping batch latency predictable.
-fn size_bucket(job: &QueuedJob) -> u32 {
-    let n = job.size().max(1);
-    usize::BITS - n.leading_zeros()
-}
-
-fn batcher_loop(
-    rx: Receiver<QueuedJob>,
-    batch_tx: Sender<Batch>,
-    cfg: CoordinatorConfig,
-    shared: Arc<Shared>,
-) {
-    let mut pending: Vec<QueuedJob> = Vec::new();
-    let mut window_start: Option<Instant> = None;
+/// One worker: LIFO-pop the own shard while it has work; once it
+/// drains, steal the oldest batch from the deepest other shard (when
+/// enabled); exit when the own shard is closed and drained (nothing can
+/// arrive after close — remaining batches elsewhere belong to their own
+/// shards' workers).
+fn worker_loop(own_idx: usize, shards: &[Arc<Shard>], shared: &Arc<Shared>, steal_on: bool) {
+    let own = &shards[own_idx];
     loop {
-        let timeout = match window_start {
-            Some(t0) => cfg
-                .batch_window
-                .checked_sub(t0.elapsed())
-                .unwrap_or(Duration::ZERO),
-            None => Duration::from_millis(50),
-        };
-        match rx.recv_timeout(timeout) {
-            Ok(job) => {
-                if pending.is_empty() {
-                    window_start = Some(Instant::now());
-                }
-                pending.push(job);
-                if pending.len() >= cfg.max_batch {
-                    flush(&mut pending, &batch_tx, &shared);
-                    window_start = None;
-                }
-            }
-            Err(RecvTimeoutError::Timeout) => {
-                if !pending.is_empty() {
-                    flush(&mut pending, &batch_tx, &shared);
-                    window_start = None;
-                }
-            }
-            Err(RecvTimeoutError::Disconnected) => {
-                if !pending.is_empty() {
-                    flush(&mut pending, &batch_tx, &shared);
-                }
-                break;
+        if let Some(batch) = own.pop_own() {
+            execute_batch(batch, own, shared);
+            continue;
+        }
+        if steal_on {
+            if let Some(batch) = steal::steal_for(own_idx, shards) {
+                own.stolen.fetch_add(1, Ordering::Relaxed);
+                execute_batch(batch, own, shared);
+                continue;
             }
         }
+        if own.is_drained() {
+            break;
+        }
+        own.wait_for_work(WORKER_PARK);
     }
 }
 
-fn flush(pending: &mut Vec<QueuedJob>, batch_tx: &Sender<Batch>, shared: &Arc<Shared>) {
-    // Group by (method, size bucket).
-    let mut groups: HashMap<(Method, u32), Vec<QueuedJob>> = HashMap::new();
-    for job in pending.drain(..) {
-        groups
-            .entry((job.method(), size_bucket(&job)))
-            .or_default()
-            .push(job);
-    }
-    for (_, group) in groups {
-        // Assign the id HERE and carry it with the batch: workers
-        // re-reading the counter would see whatever batch was flushed
-        // most recently, reporting wrong/duplicate ids under
-        // concurrency.
-        let id = shared.batches.fetch_add(1, Ordering::Relaxed) + 1;
-        let _ = batch_tx.send(Batch { id, jobs: group });
-    }
-}
-
-/// Book-keeping shared by both job shapes: latency, success/failure
-/// counters, and the per-method `Auto`-escalation counter (a completed
-/// job that came back from the log engine without having pinned it).
+/// Book-keeping shared by both job shapes: latency and success/failure
+/// counters on BOTH the executing shard and the global counters (so
+/// per-shard gauges sum to the global ones), plus the per-method
+/// `Auto`-escalation counter (a completed job that came back from the
+/// log engine without having pinned it).
+#[allow(clippy::too_many_arguments)] // internal book-keeping fan-in, not API
 fn record_outcome(
     shared: &Arc<Shared>,
+    shard: &Shard,
     method: Method,
     forced_log: bool,
     backend: Option<BackendKind>,
     latency: Duration,
     failed: bool,
 ) {
-    shared.latency.record(latency);
+    shard.latency.record(latency);
     if failed {
+        shard.failed.fetch_add(1, Ordering::Relaxed);
         shared.failed.fetch_add(1, Ordering::Relaxed);
     } else {
+        shard.completed.fetch_add(1, Ordering::Relaxed);
         shared.completed.fetch_add(1, Ordering::Relaxed);
         if backend == Some(BackendKind::LogDomain) && !forced_log {
             shared.escalations[method.index()].fetch_add(1, Ordering::Relaxed);
@@ -391,15 +380,22 @@ fn record_outcome(
     }
 }
 
-fn run_batch(batch: Batch, shared: &Arc<Shared>) {
-    let Batch { id: batch_id, jobs } = batch;
+/// Run every job of one batch on the given (executing) shard's
+/// book-keeping. The batch id travels with the batch; each job's cost
+/// fingerprint is recomputed by [`QueuedJob::fingerprint`] — the same
+/// function the router used, so routing and cache lookups agree.
+fn execute_batch(batch: Batch, shard: &Shard, shared: &Arc<Shared>) {
+    shard.busy.fetch_add(1, Ordering::Relaxed);
+    let Batch { id: batch_id, jobs, .. } = batch;
     for queued in jobs {
         let (method, forced_log) = (queued.method(), queued.forces_log_domain());
+        let fingerprint = queued.fingerprint();
         match queued {
             QueuedJob::Distance { job, enqueued, respond } => {
-                let result = solve_job(&job, batch_id, enqueued, &shared.cache);
+                let result = solve_job(&job, fingerprint, batch_id, enqueued, &shared.cache);
                 record_outcome(
                     shared,
+                    shard,
                     method,
                     forced_log,
                     result.backend,
@@ -409,9 +405,11 @@ fn run_batch(batch: Batch, shared: &Arc<Shared>) {
                 let _ = respond.send(result);
             }
             QueuedJob::Barycenter { job, enqueued, respond } => {
-                let result = solve_barycenter_job(job, batch_id, enqueued, &shared.cache);
+                let result =
+                    solve_barycenter_job(job, fingerprint, batch_id, enqueued, &shared.cache);
                 record_outcome(
                     shared,
+                    shard,
                     method,
                     forced_log,
                     result.backend,
@@ -422,24 +420,28 @@ fn run_batch(batch: Batch, shared: &Arc<Shared>) {
             }
         }
     }
+    shard.busy.fetch_sub(1, Ordering::Relaxed);
 }
 
 /// Express one WFR-distance job as an [`OtProblem`] + [`SolverSpec`]
 /// and dispatch it through `api::solve` — the single method-agnostic
 /// solver surface.
 ///
-/// Jobs whose grid fits [`SHARED_ARTIFACT_ENTRY_CAP`] resolve their
-/// geometry through the service's [`ArtifactCache`]: the WFR cost, the
-/// Gibbs kernel and the cost-dependent sampling factor are built once
-/// per (support pair, η, ε, λ) and every other job on the same
-/// fingerprint is a cache hit ("reuse + reweight") — jobs racing the
-/// build block on its single-flight slot, while jobs on other
-/// fingerprints (a many-ε sweep) build and hit unimpeded. Warm
-/// solutions are
+/// Jobs with a shareable `fingerprint` (grid fits
+/// [`SHARED_ARTIFACT_ENTRY_CAP`](crate::engine::SHARED_ARTIFACT_ENTRY_CAP))
+/// resolve their geometry through the service's [`ArtifactCache`]: the
+/// WFR cost, the Gibbs kernel and the cost-dependent sampling factor
+/// are built once per (support pair, η, ε, λ) and every other job on
+/// the same fingerprint is a cache hit ("reuse + reweight") — and since
+/// the router sends every batch on this fingerprint to one shard, those
+/// hits stay shard-local. Jobs racing the build block on its
+/// single-flight slot, while jobs on other fingerprints (a many-ε
+/// sweep) build and hit unimpeded. Warm solutions are
 /// bitwise-identical to the oracle cold path, which oversized jobs keep
 /// (kernel and cost stay entry oracles, never materialized densely).
 fn solve_job(
     job: &DistanceJob,
+    fingerprint: Option<Fingerprint>,
     batch_id: u64,
     enqueued: Instant,
     cache: &ArtifactCache,
@@ -447,22 +449,14 @@ fn solve_job(
     let spec = &job.spec;
     let (eta, eps) = (spec.eta, spec.eps);
     let (rows, cols) = (job.source.len(), job.target.len());
-    let cost_source = if rows * cols > 0 && rows * cols <= SHARED_ARTIFACT_ENTRY_CAP {
-        let key = FormulationKey::unbalanced(spec.lambda);
-        let fingerprint = Fingerprint::for_supports(
-            &job.source.points,
-            &job.target.points,
-            Some(eta),
-            eps,
-            key,
-        );
+    let cost_source = if let Some(fingerprint) = fingerprint {
         let handle = cache.get_or_build(fingerprint, || {
             CostArtifacts::for_wfr_supports(
                 &job.source.points,
                 &job.target.points,
                 eta,
                 eps,
-                key,
+                crate::engine::FormulationKey::unbalanced(spec.lambda),
             )
         });
         CostSource::Shared(handle)
@@ -537,26 +531,30 @@ fn solver_spec_for(method: Method, spec: &ProblemSpec, seed: u64) -> SolverSpec 
 
 /// Express one barycenter job as a barycenter [`OtProblem`] over the
 /// shared support's squared-Euclidean ground cost and dispatch it
-/// through `api::solve`, exactly like the distance path. Jobs fitting
-/// the artifact cap share one cached cost materialization per
+/// through `api::solve`, exactly like the distance path. Jobs with a
+/// shareable `fingerprint` share one cached cost materialization per
 /// (support, ε) — the Spar-IBP sampler otherwise re-derives the ground
 /// cost per (kernel, entry); oversized jobs keep the entry oracle. The
 /// job is consumed so its histograms move into the problem instead of
 /// being copied per solve.
 fn solve_barycenter_job(
     job: BarycenterJob,
+    fingerprint: Option<Fingerprint>,
     batch_id: u64,
     enqueued: Instant,
     cache: &ArtifactCache,
 ) -> BarycenterResult {
     let BarycenterJob { id, support, marginals, weights, method, spec, seed } = job;
     let n = support.len();
-    let cost_source = if n > 0 && n * n <= SHARED_ARTIFACT_ENTRY_CAP {
-        let key = FormulationKey::Barycenter;
-        let fingerprint =
-            Fingerprint::for_supports(&support, &support, None, spec.eps, key);
-        let handle = cache.get_or_build(fingerprint, || {
-            CostArtifacts::for_sq_euclidean_support(&support, spec.eps, key)
+    let cost_source = if let Some(fingerprint) = fingerprint {
+        let support = support.clone();
+        let eps = spec.eps;
+        let handle = cache.get_or_build(fingerprint, move || {
+            CostArtifacts::for_sq_euclidean_support(
+                &support,
+                eps,
+                crate::engine::FormulationKey::Barycenter,
+            )
         });
         CostSource::Shared(handle)
     } else {
@@ -598,12 +596,12 @@ fn solve_barycenter_job(
         },
     }
 }
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::jobs::{Measure, ProblemSpec};
+    use crate::coordinator::jobs::Measure;
     use crate::rng::Rng;
+    use crate::solvers::backend::ScalingBackend;
 
     fn toy_measure(n: usize, seed: u64, mass: f64) -> Measure {
         let mut rng = Rng::seed_from(seed);
@@ -1061,5 +1059,68 @@ mod tests {
         assert!(m.p99_latency >= m.p50_latency);
         assert!(m.throughput > 0.0);
         assert!(!m.render().is_empty());
+    }
+
+    #[test]
+    fn zero_knobs_resolve_to_available_parallelism() {
+        let par = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let cfg = CoordinatorConfig { workers: 0, shards: 0, ..Default::default() };
+        assert_eq!(cfg.resolved_workers(), par);
+        assert_eq!(cfg.resolved_shards(), par);
+        // Explicit knobs pass through…
+        let cfg = CoordinatorConfig { workers: 3, shards: 2, ..Default::default() };
+        assert_eq!(cfg.resolved_workers(), 3);
+        assert_eq!(cfg.resolved_shards(), 2);
+        // …but shards clamp to the worker count: a shard with no worker
+        // would strand its queue when stealing is off.
+        let cfg = CoordinatorConfig { workers: 2, shards: 8, ..Default::default() };
+        assert_eq!(cfg.resolved_shards(), 2);
+    }
+
+    #[test]
+    fn zero_worker_config_starts_and_completes_jobs() {
+        let service = DistanceService::start(CoordinatorConfig {
+            workers: 0,
+            shards: 0,
+            ..Default::default()
+        });
+        let results =
+            service.submit_all((0..4).map(|i| job(i, Method::SparSink, 30)).collect()).unwrap();
+        assert!(results.iter().all(|r| r.error.is_none()), "{results:?}");
+        let m = service.shutdown();
+        assert_eq!(m.completed, 4);
+        let cfg = CoordinatorConfig { workers: 0, shards: 0, ..Default::default() };
+        assert_eq!(m.shards.len(), cfg.resolved_shards());
+    }
+
+    #[test]
+    fn sharded_run_attributes_per_shard_counters_that_sum_to_globals() {
+        for steal in [true, false] {
+            let service = DistanceService::start(CoordinatorConfig {
+                workers: 4,
+                shards: 4,
+                steal,
+                ..Default::default()
+            });
+            let jobs: Vec<DistanceJob> = (0..12).map(|i| job(i, Method::SparSink, 40)).collect();
+            let results = service.submit_all(jobs).unwrap();
+            assert!(results.iter().all(|r| r.error.is_none()), "{results:?}");
+            let m = service.shutdown();
+            assert_eq!(m.shards.len(), 4);
+            let completed: u64 = m.shards.iter().map(|s| s.completed).sum();
+            let failed: u64 = m.shards.iter().map(|s| s.failed).sum();
+            let routed: u64 = m.shards.iter().map(|s| s.routed).sum();
+            assert_eq!(completed, m.completed, "steal={steal}");
+            assert_eq!(failed, m.failed, "steal={steal}");
+            assert_eq!(routed, m.batches, "steal={steal}");
+            assert!(m.shards.iter().all(|s| s.depth == 0), "drained: {:?}", m.shards);
+            // Every stolen batch is debited from some shard's queue.
+            let stolen: u64 = m.shards.iter().map(|s| s.stolen).sum();
+            let stolen_from: u64 = m.shards.iter().map(|s| s.stolen_from).sum();
+            assert_eq!(stolen, stolen_from, "steal={steal}");
+            if !steal {
+                assert_eq!(stolen, 0);
+            }
+        }
     }
 }

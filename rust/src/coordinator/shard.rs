@@ -1,0 +1,238 @@
+//! One shard of the worker pool: a bounded per-worker batch queue with
+//! FIFO-submit / LIFO-pop scheduling, modeled on per-queue database
+//! thread pools.
+//!
+//! The scheduler pushes routed batches at the BACK; the shard's own
+//! workers pop from the BACK too (LIFO), so the batch a worker picks up
+//! is the most recently routed one — the one whose cost fingerprint is
+//! most likely still warm in the artifact cache and the CPU caches.
+//! Stealers (see [`super::steal`]) take from the FRONT: the OLDEST
+//! batch, i.e. the one that has waited longest and dominates tail
+//! latency, while the cache-warm work stays home.
+//!
+//! The queue is bounded (in batches): a full shard blocks the scheduler
+//! thread, which in turn stops draining the submission channel, so
+//! backpressure propagates all the way to `submit` exactly as in the
+//! single-queue design. Gauges (`depth`, `queued_max`, `busy`,
+//! `routed`, `stolen`/`stolen_from`, `completed`/`failed`) and a
+//! per-shard latency histogram feed
+//! [`MetricsSnapshot`](super::MetricsSnapshot) through
+//! [`ShardStats`](super::ShardStats).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+use super::metrics::{LatencyHistogram, ShardStats};
+use super::scheduler::Batch;
+
+/// Queue + lifecycle state behind the shard's mutex.
+struct State {
+    queue: VecDeque<Batch>,
+    /// Set once the scheduler has drained and routed everything; no
+    /// further pushes can arrive after this.
+    closed: bool,
+}
+
+/// One per-worker bounded batch queue plus its gauges (see the module
+/// docs for the scheduling discipline and the attribution rules).
+pub(crate) struct Shard {
+    state: Mutex<State>,
+    /// Signals arriving work or the shard closing.
+    work: Condvar,
+    /// Signals queue space freeing up (for the bounded push).
+    space: Condvar,
+    /// Queue capacity in batches.
+    cap: usize,
+    /// Batches the scheduler routed here.
+    pub(crate) routed: AtomicU64,
+    /// Peak queue depth.
+    pub(crate) queued_max: AtomicU64,
+    /// Batches this shard's workers stole from other shards.
+    pub(crate) stolen: AtomicU64,
+    /// Batches stolen FROM this queue by other shards' workers.
+    pub(crate) stolen_from: AtomicU64,
+    /// Workers of this shard currently executing a batch.
+    pub(crate) busy: AtomicU64,
+    /// Jobs completed by this shard's workers.
+    pub(crate) completed: AtomicU64,
+    /// Jobs failed on this shard's workers.
+    pub(crate) failed: AtomicU64,
+    /// Latency of jobs executed by this shard's workers.
+    pub(crate) latency: LatencyHistogram,
+}
+
+impl Shard {
+    /// An open shard holding at most `cap` batches (minimum 1).
+    pub(crate) fn new(cap: usize) -> Self {
+        Shard {
+            state: Mutex::new(State { queue: VecDeque::new(), closed: false }),
+            work: Condvar::new(),
+            space: Condvar::new(),
+            cap: cap.max(1),
+            routed: AtomicU64::new(0),
+            queued_max: AtomicU64::new(0),
+            stolen: AtomicU64::new(0),
+            stolen_from: AtomicU64::new(0),
+            busy: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            latency: LatencyHistogram::new(),
+        }
+    }
+
+    /// Enqueue a routed batch at the back, blocking while the shard is
+    /// full (bounded queue — this is how backpressure reaches the
+    /// scheduler). Only the scheduler pushes, and it joins before the
+    /// shard closes, so a push can never race `close`.
+    pub(crate) fn push(&self, batch: Batch) {
+        let mut state = self.state.lock().unwrap();
+        while state.queue.len() >= self.cap && !state.closed {
+            state = self.space.wait(state).unwrap();
+        }
+        state.queue.push_back(batch);
+        let depth = state.queue.len() as u64;
+        self.routed.fetch_add(1, Ordering::Relaxed);
+        self.queued_max.fetch_max(depth, Ordering::Relaxed);
+        drop(state);
+        self.work.notify_one();
+    }
+
+    /// LIFO pop for the shard's own workers: the most recently routed
+    /// batch (warmest fingerprints). Never blocks.
+    pub(crate) fn pop_own(&self) -> Option<Batch> {
+        let mut state = self.state.lock().unwrap();
+        let batch = state.queue.pop_back();
+        if batch.is_some() {
+            drop(state);
+            self.space.notify_one();
+        }
+        batch
+    }
+
+    /// FIFO pop for stealers: the oldest queued batch (longest wait —
+    /// the tail-latency victim). Never blocks.
+    pub(crate) fn pop_stolen(&self) -> Option<Batch> {
+        let mut state = self.state.lock().unwrap();
+        let batch = state.queue.pop_front();
+        if batch.is_some() {
+            self.stolen_from.fetch_add(1, Ordering::Relaxed);
+            drop(state);
+            self.space.notify_one();
+        }
+        batch
+    }
+
+    /// Current queue depth (a racy gauge — fine for victim selection
+    /// and metrics).
+    pub(crate) fn depth(&self) -> usize {
+        self.state.lock().unwrap().queue.len()
+    }
+
+    /// Whether the shard has been closed (no further pushes).
+    pub(crate) fn is_closed(&self) -> bool {
+        self.state.lock().unwrap().closed
+    }
+
+    /// Whether the shard is closed AND drained — its workers may exit.
+    pub(crate) fn is_drained(&self) -> bool {
+        let state = self.state.lock().unwrap();
+        state.closed && state.queue.is_empty()
+    }
+
+    /// Park until work arrives, the shard closes, or `timeout` elapses
+    /// (the timeout lets stealing workers re-scan other shards).
+    pub(crate) fn wait_for_work(&self, timeout: Duration) {
+        let state = self.state.lock().unwrap();
+        if !state.queue.is_empty() || state.closed {
+            return;
+        }
+        let _ = self.work.wait_timeout(state, timeout).unwrap();
+    }
+
+    /// Close the shard: wakes every parked worker and unblocks any
+    /// pending bounded push. Called once the scheduler has exited.
+    pub(crate) fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.work.notify_all();
+        self.space.notify_all();
+    }
+
+    /// Point-in-time gauges for [`MetricsSnapshot`](super::MetricsSnapshot).
+    pub(crate) fn stats(&self, shard: usize) -> ShardStats {
+        ShardStats {
+            shard,
+            depth: self.depth(),
+            queued_max: self.queued_max.load(Ordering::Relaxed),
+            busy: self.busy.load(Ordering::Relaxed),
+            routed: self.routed.load(Ordering::Relaxed),
+            stolen: self.stolen.load(Ordering::Relaxed),
+            stolen_from: self.stolen_from.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            p99_latency: self.latency.quantile(0.99),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn empty_batch(id: u64) -> Batch {
+        Batch { id, fingerprint: None, jobs: Vec::new() }
+    }
+
+    #[test]
+    fn fifo_submit_lifo_pop_for_owners_fifo_for_stealers() {
+        let shard = Shard::new(8);
+        for id in 1..=3 {
+            shard.push(empty_batch(id));
+        }
+        assert_eq!(shard.depth(), 3);
+        // Own worker takes the newest…
+        assert_eq!(shard.pop_own().unwrap().id, 3);
+        // …a stealer takes the oldest.
+        assert_eq!(shard.pop_stolen().unwrap().id, 1);
+        assert_eq!(shard.pop_own().unwrap().id, 2);
+        assert!(shard.pop_own().is_none());
+        assert!(shard.pop_stolen().is_none());
+        let stats = shard.stats(0);
+        assert_eq!(stats.routed, 3);
+        assert_eq!(stats.stolen_from, 1);
+        assert_eq!(stats.queued_max, 3);
+        assert_eq!(stats.depth, 0);
+    }
+
+    #[test]
+    fn bounded_push_blocks_until_space_frees() {
+        let shard = std::sync::Arc::new(Shard::new(1));
+        shard.push(empty_batch(1));
+        let pusher = {
+            let shard = shard.clone();
+            std::thread::spawn(move || shard.push(empty_batch(2)))
+        };
+        // The pusher is blocked on the full queue; popping frees it.
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(shard.depth(), 1);
+        assert_eq!(shard.pop_own().unwrap().id, 1);
+        pusher.join().unwrap();
+        assert_eq!(shard.pop_own().unwrap().id, 2);
+    }
+
+    #[test]
+    fn close_wakes_parked_workers_and_marks_drained() {
+        let shard = std::sync::Arc::new(Shard::new(4));
+        assert!(!shard.is_closed());
+        let parked = {
+            let shard = shard.clone();
+            std::thread::spawn(move || shard.wait_for_work(Duration::from_secs(10)))
+        };
+        std::thread::sleep(Duration::from_millis(20));
+        shard.close();
+        parked.join().unwrap(); // woke well before the 10 s timeout
+        assert!(shard.is_closed());
+        assert!(shard.is_drained());
+    }
+}

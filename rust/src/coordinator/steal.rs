@@ -1,0 +1,88 @@
+//! Work stealing across shards, for tail latency.
+//!
+//! Fingerprint-affine routing optimizes cache locality, but a skewed
+//! workload (every job on one support) would leave all but one shard
+//! idle. When a worker's own queue drains, it steals the OLDEST batch
+//! (FIFO end — see [`super::shard`]) from the DEEPEST other shard:
+//! deepest-first relieves the most overloaded queue before lightly
+//! loaded ones, and oldest-first takes exactly the batch dominating the
+//! tail. Stealing moves batches between workers but never changes what
+//! a batch computes — artifacts are content-addressed and solutions
+//! placement-independent — so results stay bitwise identical with
+//! stealing on or off (pinned by `cache_parity`).
+
+use std::sync::Arc;
+
+use super::scheduler::Batch;
+use super::shard::Shard;
+
+/// Steal one batch for the worker that owns shard `own`: victims are
+/// scanned deepest-first (ties break on the lowest shard index, so the
+/// scan order is deterministic), skipping `own` and empty shards.
+/// Returns `None` when every other shard is empty — the caller parks
+/// briefly and retries.
+pub(crate) fn steal_for(own: usize, shards: &[Arc<Shard>]) -> Option<Batch> {
+    let mut candidates: Vec<(usize, usize)> = shards
+        .iter()
+        .enumerate()
+        .filter(|&(idx, _)| idx != own)
+        .map(|(idx, shard)| (shard.depth(), idx))
+        .filter(|&(depth, _)| depth > 0)
+        .collect();
+    // Deepest first; `sort_by` with a reversed depth key keeps the
+    // index ascending within equal depths (sort is stable).
+    candidates.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+    for (_, victim) in candidates {
+        // Depths are racy gauges — the victim may have drained between
+        // the scan and the pop, so fall through to the next candidate.
+        if let Some(batch) = shards[victim].pop_stolen() {
+            return Some(batch);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn empty_batch(id: u64) -> Batch {
+        Batch { id, fingerprint: None, jobs: Vec::new() }
+    }
+
+    fn pool(n: usize) -> Vec<Arc<Shard>> {
+        (0..n).map(|_| Arc::new(Shard::new(16))).collect()
+    }
+
+    #[test]
+    fn steals_oldest_from_deepest_shard() {
+        let shards = pool(3);
+        shards[1].push(empty_batch(10));
+        shards[2].push(empty_batch(20));
+        shards[2].push(empty_batch(21));
+        shards[2].push(empty_batch(22));
+        // Shard 2 is deepest; its OLDEST batch (20) is taken first.
+        assert_eq!(steal_for(0, &shards).unwrap().id, 20);
+        assert_eq!(shards[2].stolen_from.load(std::sync::atomic::Ordering::Relaxed), 1);
+        // Depths now tie at 1 vs 2 → still shard 2, then shard 1.
+        assert_eq!(steal_for(0, &shards).unwrap().id, 21);
+        assert_eq!(steal_for(0, &shards).unwrap().id, 22);
+        assert_eq!(steal_for(0, &shards).unwrap().id, 10);
+        assert!(steal_for(0, &shards).is_none());
+    }
+
+    #[test]
+    fn never_steals_from_its_own_shard() {
+        let shards = pool(2);
+        shards[0].push(empty_batch(1));
+        assert!(steal_for(0, &shards).is_none());
+        assert_eq!(steal_for(1, &shards).unwrap().id, 1);
+    }
+
+    #[test]
+    fn single_shard_pool_has_nothing_to_steal() {
+        let shards = pool(1);
+        shards[0].push(empty_batch(1));
+        assert!(steal_for(0, &shards).is_none());
+    }
+}

@@ -180,6 +180,35 @@ impl Fingerprint {
     pub fn cols(&self) -> usize {
         self.cols as usize
     }
+
+    /// Stable 64-bit routing key for shard placement: mixes both
+    /// support-hash streams with the dimensions, η, ε, and formulation
+    /// bits, so equal fingerprints always produce equal keys (batches
+    /// sharing artifacts land on the same shard) while distinct
+    /// fingerprints — a many-ε sweep, say — spread across shards.
+    /// Deterministic across runs and platforms, unlike `std` hashing:
+    /// shard placement must be reproducible for the determinism wall.
+    pub fn routing_key(&self) -> u64 {
+        let mut h = Hash128::new();
+        h.write_u64(0x524f_5554); // "ROUT" domain separator
+        h.write_u64(self.support[0]);
+        h.write_u64(self.support[1]);
+        h.write_u64(self.rows);
+        h.write_u64(self.cols);
+        h.write_u64(u64::from(self.eta_bits.is_some()));
+        h.write_u64(self.eta_bits.unwrap_or(0));
+        h.write_u64(self.eps_bits);
+        match self.formulation {
+            FormulationKey::Balanced => h.write_u64(1),
+            FormulationKey::Unbalanced { lambda_bits } => {
+                h.write_u64(2);
+                h.write_u64(lambda_bits);
+            }
+            FormulationKey::Barycenter => h.write_u64(3),
+        }
+        let [a, b] = h.finish();
+        a ^ b.rotate_left(32)
+    }
 }
 
 /// The amortizable cost-dependent factor of the unbalanced (Eq. 11)
@@ -455,6 +484,23 @@ mod tests {
             base,
             Fingerprint::for_supports(&a, &a, Some(3.0), 0.05, FormulationKey::Balanced)
         );
+    }
+
+    #[test]
+    fn routing_key_is_a_fingerprint_function() {
+        // Equal fingerprints ⇒ equal routing keys (affinity); distinct
+        // knobs ⇒ distinct keys (spread), up to the 64-bit bound.
+        let a = pts(10, 21);
+        let key = FormulationKey::unbalanced(1.0);
+        let base = Fingerprint::for_supports(&a, &a, Some(3.0), 0.05, key);
+        let again = Fingerprint::for_supports(&a, &a, Some(3.0), 0.05, key);
+        assert_eq!(base.routing_key(), again.routing_key());
+        let eps2 = Fingerprint::for_supports(&a, &a, Some(3.0), 0.06, key);
+        let bal = Fingerprint::for_supports(&a, &a, Some(3.0), 0.05, FormulationKey::Balanced);
+        let bare = Fingerprint::for_supports(&a, &a, None, 0.05, key);
+        assert_ne!(base.routing_key(), eps2.routing_key());
+        assert_ne!(base.routing_key(), bal.routing_key());
+        assert_ne!(base.routing_key(), bare.routing_key());
     }
 
     #[test]

@@ -2,15 +2,17 @@
 //!
 //! Subcommands (see `repro --help`): `experiment` regenerates any paper
 //! figure/table, `solve` runs a one-off synthetic problem, `serve`
-//! exercises the batched WFR distance coordinator, `runtime-info`
-//! inspects the PJRT artifact menu.
+//! exercises the batched WFR distance coordinator, `bench coordinator`
+//! measures the sharded service (1 vs N shards, cold vs warm cache) and
+//! writes `BENCH_coordinator.json`, `runtime-info` inspects the PJRT
+//! artifact menu.
 
 use spar_sink::cli::{usage, Args};
 use spar_sink::experiments::{self, Profile};
 
 const VALUE_KEYS: &[&str] = &[
     "out", "n", "eps", "lambda", "method", "seed", "videos", "frames", "workers", "problem", "s",
-    "d", "backend", "threshold",
+    "d", "backend", "threshold", "shards", "size",
 ];
 
 fn main() {
@@ -19,6 +21,7 @@ fn main() {
         Some("experiment") => cmd_experiment(&args),
         Some("solve") => cmd_solve(&args),
         Some("serve") => cmd_serve(&args),
+        Some("bench") => cmd_bench(&args),
         Some("runtime-info") => cmd_runtime_info(),
         Some("list") => {
             for (id, desc, _) in experiments::registry() {
@@ -211,6 +214,10 @@ fn cmd_serve(args: &Args) -> i32 {
     let videos: usize = args.get_parsed("videos", 2);
     let frames_n: usize = args.get_parsed("frames", 36);
     let workers: usize = args.get_parsed("workers", spar_sink::pool::num_threads().min(8));
+    // 0 = available parallelism, clamped to the worker count (see
+    // CoordinatorConfig::resolved_shards).
+    let shards: usize = args.get_parsed("shards", 0);
+    let steal = !args.flag("no-steal");
     let eps: f64 = args.get_parsed("eps", 0.05);
     // --shared-grid keeps every frame on the full pixel grid (zero-mass
     // pixels included), so all pairwise jobs share ONE support and the
@@ -237,8 +244,15 @@ fn cmd_serve(args: &Args) -> i32 {
     };
     let size = 40;
 
-    println!("starting distance service: {workers} workers, method {}", method.name());
-    let service = DistanceService::start(CoordinatorConfig { workers, ..Default::default() });
+    let config = CoordinatorConfig { workers, shards, steal, ..Default::default() };
+    println!(
+        "starting distance service: {} workers, {} shards (steal {}), method {}",
+        config.resolved_workers(),
+        config.resolved_shards(),
+        if steal { "on" } else { "off" },
+        method.name()
+    );
+    let service = DistanceService::start(config);
     let mut rng = Rng::seed_from(7);
     let mut id = 0u64;
     let t0 = std::time::Instant::now();
@@ -309,6 +323,39 @@ fn cmd_serve(args: &Args) -> i32 {
     println!("total wall time: {:?}", t0.elapsed());
     println!("{}", service.shutdown().render());
     0
+}
+
+fn cmd_bench(args: &Args) -> i32 {
+    use spar_sink::bench::coordinator::{self, BenchConfig};
+
+    let Some(target) = args.positional.first() else {
+        eprintln!("bench requires a target (available: coordinator)");
+        return 2;
+    };
+    if target != "coordinator" {
+        eprintln!("unknown bench target '{target}' (available: coordinator)");
+        return 2;
+    }
+    let workers: usize = args.get_parsed("workers", spar_sink::pool::num_threads().clamp(2, 8));
+    let mut cfg = BenchConfig::quick(workers);
+    cfg.size = args.get_parsed("size", cfg.size);
+    cfg.frames = args.get_parsed("frames", cfg.frames);
+    // The 1-vs-N contrast: always bench one shard against N.
+    let contrast: usize = args.get_parsed("shards", *cfg.shard_counts.last().unwrap());
+    cfg.shard_counts = vec![1, contrast.max(2)];
+    cfg.steal = !args.flag("no-steal");
+    let doc = coordinator::run(&cfg);
+    let path = args.get("out").unwrap_or("BENCH_coordinator.json");
+    match std::fs::write(path, doc.to_string_compact()) {
+        Ok(()) => {
+            println!("[bench rows written to {path}]");
+            0
+        }
+        Err(e) => {
+            eprintln!("could not write {path}: {e}");
+            1
+        }
+    }
 }
 
 #[cfg(feature = "xla")]

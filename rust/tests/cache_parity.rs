@@ -10,7 +10,10 @@
 //! * different supports never collide on a fingerprint;
 //! * the coordinator's pairwise warm path reproduces the legacy oracle
 //!   path bit for bit while building artifacts exactly once per
-//!   (support, η, ε).
+//!   (support, η, ε);
+//! * the SHARDED coordinator is placement-invariant: one submission
+//!   sequence yields bitwise-identical results, identical batch ids and
+//!   identical cache builds at every shard count, stealing on or off.
 //!
 //! Case counts scale with `PROPTEST_CASES` (the CI cache-parity job
 //! runs at 96).
@@ -19,7 +22,7 @@ use std::sync::Arc;
 
 use spar_sink::api::{self, CostSource, EntryOracle, Method, OtProblem, SolverSpec};
 use spar_sink::coordinator::{
-    CoordinatorConfig, DistanceJob, DistanceService, Measure, ProblemSpec,
+    BarycenterJob, CoordinatorConfig, DistanceJob, DistanceService, Measure, ProblemSpec,
 };
 use spar_sink::engine::{ArtifactCache, CostArtifacts, Fingerprint, FormulationKey};
 use spar_sink::linalg::Mat;
@@ -361,6 +364,130 @@ fn coordinator_warm_path_matches_cold_oracle_path_bitwise() {
             r.objective
         );
         assert_eq!(cold.iterations, r.iterations, "job {}", r.id);
+    }
+}
+
+/// The sharded coordinator's invariance wall: the SAME submission
+/// sequence — mixed methods, sizes, ε values and job shapes — produces
+/// bitwise-identical results, identical batch ids and identical
+/// artifact builds at shard counts 1/2/4, stealing on or off. Batch
+/// composition is pinned by `max_batch` = total job count (the flush
+/// fires exactly when the last job arrives) plus a long window, so the
+/// only thing that varies between configurations is placement.
+#[test]
+fn sharded_coordinator_is_shard_count_invariant() {
+    use std::time::Duration;
+
+    let mut rng = Rng::seed_from(0xCA5E_000C);
+    let small: Arc<Vec<Vec<f64>>> = Arc::new(points(24, &mut rng));
+    let big: Arc<Vec<Vec<f64>>> = Arc::new(points(40, &mut rng));
+    let bary_support: Arc<Vec<Vec<f64>>> =
+        Arc::new((0..32).map(|i| vec![i as f64 / 31.0]).collect());
+    let small_masses: Vec<Arc<Vec<f64>>> =
+        (0..4).map(|_| Arc::new(histogram(24, &mut rng))).collect();
+    let big_masses: Vec<Arc<Vec<f64>>> =
+        (0..2).map(|_| Arc::new(histogram(40, &mut rng))).collect();
+    let bary_hists: Vec<Vec<f64>> = (0..3).map(|_| histogram(32, &mut rng)).collect();
+
+    let distance_jobs = || -> Vec<DistanceJob> {
+        let mut jobs = Vec::new();
+        let mut id = 0u64;
+        for &eps in &[0.05, 0.09] {
+            for i in 0..small_masses.len() {
+                for j in (i + 1)..small_masses.len() {
+                    jobs.push(DistanceJob {
+                        id,
+                        source: Measure { points: small.clone(), mass: small_masses[i].clone() },
+                        target: Measure { points: small.clone(), mass: small_masses[j].clone() },
+                        method: Method::SparSink,
+                        spec: ProblemSpec { eta: 3.0, eps, ..Default::default() },
+                        seed: 1000 + id,
+                    });
+                    id += 1;
+                }
+            }
+            // A second, larger support in another size bucket + method.
+            jobs.push(DistanceJob {
+                id,
+                source: Measure { points: big.clone(), mass: big_masses[0].clone() },
+                target: Measure { points: big.clone(), mass: big_masses[1].clone() },
+                method: Method::RandSink,
+                spec: ProblemSpec { eta: 3.0, eps, ..Default::default() },
+                seed: 1000 + id,
+            });
+            id += 1;
+        }
+        jobs
+    };
+    let bary_jobs = || -> Vec<BarycenterJob> {
+        (0..2)
+            .map(|k| BarycenterJob {
+                id: 500 + k,
+                support: bary_support.clone(),
+                marginals: bary_hists.clone(),
+                weights: vec![1.0 / 3.0; 3],
+                method: Method::SparIbp,
+                spec: ProblemSpec { eps: 0.02, s_multiplier: 12.0, ..Default::default() },
+                seed: 77 + k,
+            })
+            .collect()
+    };
+
+    let run = |shards: usize, steal: bool| {
+        let d_jobs = distance_jobs();
+        let b_jobs = bary_jobs();
+        let total = d_jobs.len() + b_jobs.len();
+        let service = DistanceService::start(CoordinatorConfig {
+            workers: 3,
+            shards,
+            steal,
+            max_batch: total,
+            batch_window: Duration::from_secs(30),
+            ..Default::default()
+        });
+        let d_rx: Vec<_> = d_jobs.into_iter().map(|j| service.submit(j).unwrap()).collect();
+        let b_rx: Vec<_> =
+            b_jobs.into_iter().map(|j| service.submit_barycenter(j).unwrap()).collect();
+        let d: Vec<_> = d_rx.into_iter().map(|rx| rx.recv().unwrap()).collect();
+        let b: Vec<_> = b_rx.into_iter().map(|rx| rx.recv().unwrap()).collect();
+        let m = service.shutdown();
+        (d, b, m)
+    };
+
+    let (d0, b0, m0) = run(1, false);
+    assert!(d0.iter().all(|r| r.error.is_none()), "{d0:?}");
+    assert!(b0.iter().all(|r| r.error.is_none()), "{b0:?}");
+    // One flush, one batch per (method, size bucket) group, ids
+    // assigned in sorted-group order by the fixed flush.
+    assert_eq!(m0.batches, 3, "{m0:?}");
+    for shards in [1usize, 2, 4] {
+        for steal in [true, false] {
+            let (d, b, m) = run(shards, steal);
+            let tag = format!("shards {shards} steal {steal}");
+            assert_eq!(m.batches, m0.batches, "{tag}: batch count");
+            assert_eq!(m.cache.misses, m0.cache.misses, "{tag}: artifact builds");
+            assert_eq!(m.shards.len(), shards.min(3), "{tag}: resolved shard count");
+            for (x, y) in d0.iter().zip(&d) {
+                let t = format!("{tag} job {}", x.id);
+                assert_eq!(x.id, y.id, "{t}: order");
+                assert_eq!(x.objective.to_bits(), y.objective.to_bits(), "{t}: objective");
+                assert_eq!(x.distance.to_bits(), y.distance.to_bits(), "{t}: distance");
+                assert_eq!(x.iterations, y.iterations, "{t}: iterations");
+                assert_eq!(x.backend, y.backend, "{t}: backend");
+                assert_eq!(x.batch_id, y.batch_id, "{t}: batch id");
+            }
+            for (x, y) in b0.iter().zip(&b) {
+                let t = format!("{tag} bary {}", x.id);
+                assert_eq!(x.id, y.id, "{t}: order");
+                assert_eq!(x.iterations, y.iterations, "{t}: iterations");
+                assert_eq!(x.backend, y.backend, "{t}: backend");
+                assert_eq!(x.batch_id, y.batch_id, "{t}: batch id");
+                assert_eq!(x.q.len(), y.q.len(), "{t}: q length");
+                for (qa, qb) in x.q.iter().zip(&y.q) {
+                    assert_eq!(qa.to_bits(), qb.to_bits(), "{t}: q entry");
+                }
+            }
+        }
     }
 }
 

@@ -3,7 +3,7 @@
 //! coordinator under load, plus failure injection.
 
 use spar_sink::coordinator::{
-    CoordinatorConfig, DistanceJob, DistanceService, Measure, Method, ProblemSpec,
+    BarycenterJob, CoordinatorConfig, DistanceJob, DistanceService, Measure, Method, ProblemSpec,
 };
 use spar_sink::data::echo::{frame_to_measure, generate, EchoConfig, Health};
 use spar_sink::data::synthetic::{instance, Scenario, SparsityRegime};
@@ -162,6 +162,96 @@ fn coordinator_backpressure_bounded_queue() {
     let metrics = service.shutdown();
     assert_eq!(metrics.submitted, 12);
     assert_eq!(metrics.completed + metrics.failed, 12);
+}
+
+#[test]
+fn per_shard_gauges_sum_to_global_counters_and_render() {
+    // A mixed distance + barycenter run (including one injected
+    // failure) on a 3-shard pool: the per-shard worker-side counters
+    // must sum exactly to the global ones, the queues must be drained,
+    // and `render()` must carry one line per shard.
+    use std::sync::Arc;
+
+    let service = DistanceService::start(CoordinatorConfig {
+        workers: 4,
+        shards: 3,
+        ..Default::default()
+    });
+    let mut rng = Rng::seed_from(0x55);
+    let pts: Vec<Vec<f64>> =
+        (0..30).map(|_| vec![rng.uniform() * 4.0, rng.uniform() * 4.0]).collect();
+    let m = Measure::new(pts, vec![1.0 / 30.0; 30]);
+    // Several ε values → several fingerprints for the router to spread.
+    let mut jobs: Vec<DistanceJob> = [0.04f64, 0.06, 0.08, 0.1]
+        .iter()
+        .enumerate()
+        .map(|(i, &eps)| DistanceJob {
+            id: i as u64,
+            source: m.clone(),
+            target: m.clone(),
+            method: Method::SparSink,
+            spec: ProblemSpec { eta: 3.0, eps, ..Default::default() },
+            seed: 10 + i as u64,
+        })
+        .collect();
+    // One guaranteed failure: disjoint WFR supports.
+    jobs.push(DistanceJob {
+        id: 99,
+        source: Measure::new(vec![vec![0.0, 0.0], vec![1.0, 0.0]], vec![0.6, 0.4]),
+        target: Measure::new(vec![vec![500.0, 500.0], vec![501.0, 500.0]], vec![0.5, 0.5]),
+        method: Method::SparSink,
+        spec: ProblemSpec { eta: 1.0, ..Default::default() },
+        seed: 3,
+    });
+    let support: Arc<Vec<Vec<f64>>> = Arc::new((0..24).map(|i| vec![i as f64 / 23.0]).collect());
+    let hist = |mu: f64| -> Vec<f64> {
+        let w: Vec<f64> = support
+            .iter()
+            .map(|p| (-(p[0] - mu).powi(2) / 0.02).exp() + 1e-4)
+            .collect();
+        let s: f64 = w.iter().sum();
+        w.iter().map(|x| x / s).collect()
+    };
+    let bary_jobs: Vec<BarycenterJob> = (0..2)
+        .map(|k| BarycenterJob {
+            id: 200 + k,
+            support: support.clone(),
+            marginals: vec![hist(0.3), hist(0.7)],
+            weights: vec![0.5, 0.5],
+            method: Method::SparIbp,
+            spec: ProblemSpec { eps: 0.02, s_multiplier: 12.0, ..Default::default() },
+            seed: 40 + k,
+        })
+        .collect();
+
+    let d_results = service.submit_all(jobs).unwrap();
+    let b_results = service.submit_all_barycenters(bary_jobs).unwrap();
+    assert_eq!(d_results.iter().filter(|r| r.error.is_some()).count(), 1);
+    assert!(b_results.iter().all(|r| r.error.is_none()), "{b_results:?}");
+
+    let m = service.shutdown();
+    assert_eq!(m.shards.len(), 3);
+    assert_eq!(m.completed + m.failed, 7);
+    assert_eq!(m.failed, 1);
+    let completed: u64 = m.shards.iter().map(|s| s.completed).sum();
+    let failed: u64 = m.shards.iter().map(|s| s.failed).sum();
+    let routed: u64 = m.shards.iter().map(|s| s.routed).sum();
+    let recorded: u64 = m.shards.iter().map(|s| s.completed + s.failed).sum();
+    assert_eq!(completed, m.completed, "worker-side completions must sum to the global");
+    assert_eq!(failed, m.failed, "worker-side failures must sum to the global");
+    assert_eq!(routed, m.batches, "every flushed batch is routed to exactly one shard");
+    assert_eq!(recorded, m.submitted, "no job lost or double-counted across shards");
+    let stolen: u64 = m.shards.iter().map(|s| s.stolen).sum();
+    let stolen_from: u64 = m.shards.iter().map(|s| s.stolen_from).sum();
+    assert_eq!(stolen, stolen_from, "each theft is debited from exactly one queue");
+    for s in &m.shards {
+        assert_eq!(s.depth, 0, "drained after shutdown: {s:?}");
+        assert_eq!(s.busy, 0, "no worker mid-batch after shutdown: {s:?}");
+    }
+    let rendered = m.render();
+    for s in 0..3 {
+        assert!(rendered.contains(&format!("shard {s}: depth")), "missing shard {s}:\n{rendered}");
+    }
 }
 
 #[test]

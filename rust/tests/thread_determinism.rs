@@ -6,10 +6,18 @@
 //! function of its index, and this wall keeps accidental
 //! accumulation-order dependence from creeping in.
 //!
+//! The coordinator leg repeats the wall one level up: a full sharded
+//! service run (explicit workers + shards, so the pool topology itself
+//! is env-independent) must return bitwise-identical results at every
+//! builder thread count.
+//!
 //! Lives in its own integration binary because it mutates the
 //! `SPAR_SINK_THREADS` process environment; case counts scale with
 //! `PROPTEST_CASES`.
 
+use spar_sink::coordinator::{
+    CoordinatorConfig, DistanceJob, DistanceService, Measure, Method, ProblemSpec,
+};
 use spar_sink::engine::{CostArtifacts, FormulationKey};
 use spar_sink::linalg::Mat;
 use spar_sink::ot::cost::{gibbs_kernel, sq_euclidean_cost, wfr_cost};
@@ -103,4 +111,58 @@ fn parallel_builders_are_thread_count_invariant() {
             }
         }
     }
+
+    // Coordinator leg: the same wall one level up, through the sharded
+    // service. The pool topology is pinned explicitly (workers, shards,
+    // deterministic batch composition via max_batch = job count), so
+    // the ONLY thing the env var changes is the builder thread count —
+    // and the results must not notice.
+    let service_run = || -> Vec<(u64, u64, usize)> {
+        let mut rng = Rng::seed_from(0x7D_0002);
+        let n = 28;
+        let support: std::sync::Arc<Vec<Vec<f64>>> = std::sync::Arc::new(
+            (0..n).map(|_| vec![rng.uniform() * 3.0, rng.uniform() * 3.0]).collect(),
+        );
+        let masses: Vec<std::sync::Arc<Vec<f64>>> = (0..4)
+            .map(|_| {
+                let raw: Vec<f64> = (0..n).map(|_| rng.uniform() + 0.05).collect();
+                let s: f64 = raw.iter().sum();
+                std::sync::Arc::new(raw.iter().map(|x| x / s).collect())
+            })
+            .collect();
+        let mut jobs = Vec::new();
+        let mut id = 0u64;
+        for i in 0..masses.len() {
+            for j in (i + 1)..masses.len() {
+                jobs.push(DistanceJob {
+                    id,
+                    source: Measure { points: support.clone(), mass: masses[i].clone() },
+                    target: Measure { points: support.clone(), mass: masses[j].clone() },
+                    method: Method::SparSink,
+                    spec: ProblemSpec { eta: 3.0, eps: 0.05, ..Default::default() },
+                    seed: 300 + id,
+                });
+                id += 1;
+            }
+        }
+        let total = jobs.len();
+        let service = DistanceService::start(CoordinatorConfig {
+            workers: 2,
+            shards: 2,
+            max_batch: total,
+            batch_window: std::time::Duration::from_secs(30),
+            ..Default::default()
+        });
+        let results = service.submit_all(jobs).unwrap();
+        results.iter().for_each(|r| assert!(r.error.is_none(), "{:?}", r.error));
+        results.into_iter().map(|r| (r.objective.to_bits(), r.batch_id, r.iterations)).collect()
+    };
+    std::env::set_var("SPAR_SINK_THREADS", "1");
+    let serial = service_run();
+    std::env::set_var("SPAR_SINK_THREADS", "3");
+    let three = service_run();
+    std::env::remove_var("SPAR_SINK_THREADS");
+    let dflt = service_run();
+    assert_eq!(serial, three, "coordinator results depend on builder thread count");
+    assert_eq!(serial, dflt, "coordinator results depend on builder thread count");
 }
