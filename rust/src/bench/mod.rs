@@ -112,7 +112,7 @@ impl Bencher {
         let result = BenchResult { name: name.into(), samples };
         println!("{}", result.render());
         self.results.push(result);
-        self.results.last().unwrap()
+        self.results.last().expect("the result was pushed just above")
     }
 
     /// All results so far.

@@ -1,7 +1,9 @@
 //! From-scratch CLI argument parser (the offline image has no `clap`).
 //!
 //! Supports subcommands, `--flag`, `--key value` / `--key=value`, and
-//! positional arguments, with generated usage text.
+//! positional arguments, with generated usage text. Repeated options
+//! are rejected loudly: a silent last-wins `--s 2 --s 5` once masked a
+//! mistyped sweep, so [`Args::parse`] returns an error instead.
 
 use std::collections::HashMap;
 
@@ -21,18 +23,28 @@ pub struct Args {
 impl Args {
     /// Parse from an iterator of tokens (usually `std::env::args().skip(1)`).
     /// `value_keys` lists options that consume the following token.
-    pub fn parse(tokens: impl IntoIterator<Item = String>, value_keys: &[&str]) -> Args {
+    ///
+    /// A repeated option (`--s 2 --s 5`, in either `--key value` or
+    /// `--key=value` form) is an error: silently keeping the last
+    /// value hides typos in long invocations. Repeated bare flags are
+    /// idempotent and stay accepted.
+    pub fn parse(
+        tokens: impl IntoIterator<Item = String>,
+        value_keys: &[&str],
+    ) -> Result<Args, String> {
         let mut args = Args::default();
         let mut it = tokens.into_iter().peekable();
         while let Some(tok) = it.next() {
             if let Some(stripped) = tok.strip_prefix("--") {
                 if let Some((k, v)) = stripped.split_once('=') {
-                    args.options.insert(k.to_string(), v.to_string());
+                    args.insert_option(k, v.to_string())?;
                 } else if value_keys.contains(&stripped)
                     && it.peek().map(|n| !n.starts_with("--")).unwrap_or(false)
                 {
-                    let v = it.next().unwrap();
-                    args.options.insert(stripped.to_string(), v);
+                    match it.next() {
+                        Some(v) => args.insert_option(stripped, v)?,
+                        None => args.flags.push(stripped.to_string()),
+                    }
                 } else {
                     args.flags.push(stripped.to_string());
                 }
@@ -42,7 +54,18 @@ impl Args {
                 args.positional.push(tok);
             }
         }
-        args
+        Ok(args)
+    }
+
+    /// Record `--key value`, rejecting a second occurrence of `key`.
+    fn insert_option(&mut self, key: &str, value: String) -> Result<(), String> {
+        match self.options.insert(key.to_string(), value) {
+            None => Ok(()),
+            Some(previous) => Err(format!(
+                "duplicate option '--{key}' (already given '{previous}'); \
+                 pass each option at most once"
+            )),
+        }
     }
 
     /// Whether bare `--name` was passed.
@@ -102,6 +125,18 @@ pub fn usage() -> String {
              sharded-service throughput/latency on the echocardiogram\n\
              pairwise workload: 1 vs N shards, cold vs warm artifact\n\
              cache; writes BENCH_coordinator.json (or FILE)\n\
+       lint [--root DIR] [--config FILE] [--list-rules]\n\
+             repo-native static contract checks over the rust/src tree\n\
+             (README \"Static contracts\"): budget-convention (every\n\
+             sampling budget goes through solvers::sketch_budget),\n\
+             unordered-iter (no HashMap/HashSet iteration feeding ids,\n\
+             batches, fingerprints, or rendered output), wall-clock (no\n\
+             Instant/SystemTime/available_parallelism in result-affecting\n\
+             modules), lock-unwrap (worker paths use\n\
+             util::sync::lock_unpoisoned), lint-pragma (every\n\
+             `// lint: allow(rule, \"reason\")` carries a reason and still\n\
+             suppresses something). Exits nonzero on any finding;\n\
+             per-rule allowlists live in lint.toml at the repo root\n\
        runtime-info                                    PJRT platform + artifact menu (xla feature)\n\
        list                                            list available experiments\n\
      \n\
@@ -126,6 +161,9 @@ pub fn usage() -> String {
                      `experiment smalleps`); rand-sink stays the\n\
                      multiplicative baseline unless overridden\n\
      \n\
+     Each option may be passed at most once; a repeated option is an\n\
+     error rather than a silent last-wins.\n\
+     \n\
      ENVIRONMENT:\n\
        SPAR_SINK_CACHE_BYTES   byte budget of the global artifact cache\n\
                                (default 512 MiB); the coordinator's cache\n\
@@ -141,6 +179,10 @@ mod tests {
     use super::*;
 
     fn parse(tokens: &[&str]) -> Args {
+        try_parse(tokens).expect("arguments parse")
+    }
+
+    fn try_parse(tokens: &[&str]) -> Result<Args, String> {
         Args::parse(
             tokens.iter().map(|s| s.to_string()),
             &[
@@ -177,5 +219,27 @@ mod tests {
     fn flag_does_not_swallow_positional() {
         let a = parse(&["experiment", "--full", "fig3"]);
         assert_eq!(a.positional, vec!["fig3"]);
+    }
+
+    #[test]
+    fn duplicate_option_is_rejected() {
+        let err = try_parse(&["solve", "--s", "2", "--s", "5"]).expect_err("must reject");
+        assert!(err.contains("duplicate option '--s'"), "{err}");
+        assert!(err.contains('2'), "must name the first value: {err}");
+    }
+
+    #[test]
+    fn duplicate_equals_form_is_rejected() {
+        assert!(try_parse(&["solve", "--eps=0.1", "--eps=0.2"]).is_err());
+        // Mixed forms of the same key are duplicates too.
+        assert!(try_parse(&["solve", "--eps", "0.1", "--eps=0.2"]).is_err());
+    }
+
+    #[test]
+    fn distinct_options_and_repeated_flags_still_parse() {
+        let a = parse(&["solve", "--s", "2", "--n", "100", "--full", "--full"]);
+        assert_eq!(a.get_parsed("s", 0.0), 2.0);
+        assert_eq!(a.get_parsed("n", 0usize), 100);
+        assert!(a.flag("full"));
     }
 }

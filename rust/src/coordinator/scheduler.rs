@@ -221,9 +221,10 @@ fn flush(pending: &mut Vec<QueuedJob>, router: &mut Router, shared: &Arc<Shared>
     // Sort groups by key before assigning ids: a `HashMap` iteration
     // made batch ids for an identical submission sequence vary run to
     // run (and across shard counts), breaking the determinism contract.
-    let mut groups: Vec<_> = groups.into_iter().collect();
-    groups.sort_by_key(|(key, _)| *key);
-    for (_, jobs) in groups {
+    // lint: allow(unordered-iter, "collected into a Vec and sorted by key before ids are assigned")
+    let mut sorted_groups: Vec<_> = groups.into_iter().collect();
+    sorted_groups.sort_by_key(|(key, _)| *key);
+    for (_, jobs) in sorted_groups {
         // Assign the id HERE and carry it with the batch: workers
         // re-reading the counter would see whatever batch was flushed
         // most recently, reporting wrong/duplicate ids under

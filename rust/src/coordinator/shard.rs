@@ -26,6 +26,7 @@ use std::time::Duration;
 
 use super::metrics::{LatencyHistogram, ShardStats};
 use super::scheduler::Batch;
+use crate::util::sync::{lock_unpoisoned, wait_timeout_unpoisoned, wait_unpoisoned};
 
 /// Queue + lifecycle state behind the shard's mutex.
 struct State {
@@ -87,9 +88,9 @@ impl Shard {
     /// scheduler). Only the scheduler pushes, and it joins before the
     /// shard closes, so a push can never race `close`.
     pub(crate) fn push(&self, batch: Batch) {
-        let mut state = self.state.lock().unwrap();
+        let mut state = lock_unpoisoned(&self.state);
         while state.queue.len() >= self.cap && !state.closed {
-            state = self.space.wait(state).unwrap();
+            state = wait_unpoisoned(&self.space, state);
         }
         state.queue.push_back(batch);
         let depth = state.queue.len() as u64;
@@ -102,7 +103,7 @@ impl Shard {
     /// LIFO pop for the shard's own workers: the most recently routed
     /// batch (warmest fingerprints). Never blocks.
     pub(crate) fn pop_own(&self) -> Option<Batch> {
-        let mut state = self.state.lock().unwrap();
+        let mut state = lock_unpoisoned(&self.state);
         let batch = state.queue.pop_back();
         if batch.is_some() {
             drop(state);
@@ -114,7 +115,7 @@ impl Shard {
     /// FIFO pop for stealers: the oldest queued batch (longest wait —
     /// the tail-latency victim). Never blocks.
     pub(crate) fn pop_stolen(&self) -> Option<Batch> {
-        let mut state = self.state.lock().unwrap();
+        let mut state = lock_unpoisoned(&self.state);
         let batch = state.queue.pop_front();
         if batch.is_some() {
             self.stolen_from.fetch_add(1, Ordering::Relaxed);
@@ -127,34 +128,34 @@ impl Shard {
     /// Current queue depth (a racy gauge — fine for victim selection
     /// and metrics).
     pub(crate) fn depth(&self) -> usize {
-        self.state.lock().unwrap().queue.len()
+        lock_unpoisoned(&self.state).queue.len()
     }
 
     /// Whether the shard has been closed (no further pushes).
     pub(crate) fn is_closed(&self) -> bool {
-        self.state.lock().unwrap().closed
+        lock_unpoisoned(&self.state).closed
     }
 
     /// Whether the shard is closed AND drained — its workers may exit.
     pub(crate) fn is_drained(&self) -> bool {
-        let state = self.state.lock().unwrap();
+        let state = lock_unpoisoned(&self.state);
         state.closed && state.queue.is_empty()
     }
 
     /// Park until work arrives, the shard closes, or `timeout` elapses
     /// (the timeout lets stealing workers re-scan other shards).
     pub(crate) fn wait_for_work(&self, timeout: Duration) {
-        let state = self.state.lock().unwrap();
+        let state = lock_unpoisoned(&self.state);
         if !state.queue.is_empty() || state.closed {
             return;
         }
-        let _ = self.work.wait_timeout(state, timeout).unwrap();
+        let _ = wait_timeout_unpoisoned(&self.work, state, timeout);
     }
 
     /// Close the shard: wakes every parked worker and unblocks any
     /// pending bounded push. Called once the scheduler has exited.
     pub(crate) fn close(&self) {
-        self.state.lock().unwrap().closed = true;
+        lock_unpoisoned(&self.state).closed = true;
         self.work.notify_all();
         self.space.notify_all();
     }

@@ -22,6 +22,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 use super::artifacts::{CostArtifacts, CostHandle, Fingerprint};
+use crate::util::sync::{lock_unpoisoned, wait_unpoisoned};
 
 /// Default byte budget for [`global_cache`] (overridable via the
 /// `SPAR_SINK_CACHE_BYTES` env var): 512 MiB.
@@ -125,7 +126,7 @@ struct BuildGuard<'a> {
 
 impl Drop for BuildGuard<'_> {
     fn drop(&mut self) {
-        let mut inner = self.cache.inner.lock().unwrap();
+        let mut inner = lock_unpoisoned(&self.cache.inner);
         if matches!(
             inner.entries.get(&self.fingerprint),
             Some(Slot::Building(s)) if Arc::ptr_eq(s, self.state)
@@ -169,7 +170,7 @@ impl ArtifactCache {
     /// solve paths). Returns `None` for absent fingerprints AND for
     /// builds still in flight — `peek` never blocks.
     pub fn peek(&self, fingerprint: &Fingerprint) -> Option<CostHandle> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock_unpoisoned(&self.inner);
         inner.tick += 1;
         let tick = inner.tick;
         match inner.entries.get_mut(fingerprint) {
@@ -199,7 +200,7 @@ impl ArtifactCache {
         fingerprint: Fingerprint,
         build: impl FnOnce() -> Arc<CostArtifacts>,
     ) -> CostHandle {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock_unpoisoned(&self.inner);
         loop {
             inner.tick += 1;
             let tick = inner.tick;
@@ -226,7 +227,7 @@ impl ArtifactCache {
                                 None => break,
                             }
                         }
-                        inner = state.cond.wait(inner).unwrap();
+                        inner = wait_unpoisoned(&state.cond, inner);
                     }
                 }
                 None => break,
@@ -252,7 +253,7 @@ impl ArtifactCache {
         let bytes = artifacts.bytes();
         let handle = CostHandle::new(artifacts.clone());
 
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock_unpoisoned(&self.inner);
         inner.tick += 1;
         let tick = inner.tick;
         if bytes > self.byte_budget {
@@ -282,6 +283,7 @@ impl ArtifactCache {
             // alone fit the budget. Building slots are never victims.
             let victim = inner
                 .entries
+                // lint: allow(unordered-iter, "min_by_key over unique LRU ticks: exactly one victim regardless of iteration order")
                 .iter()
                 .filter_map(|(fp, slot)| match slot {
                     Slot::Ready(ready) if *fp != fingerprint => Some((*fp, ready.last_used)),
@@ -302,8 +304,9 @@ impl ArtifactCache {
 
     /// Current counters and gauges.
     pub fn stats(&self) -> CacheStats {
-        let inner = self.inner.lock().unwrap();
+        let inner = lock_unpoisoned(&self.inner);
         let (mut entries, mut building) = (0, 0);
+        // lint: allow(unordered-iter, "order-independent counting of slot kinds")
         for slot in inner.entries.values() {
             match slot {
                 Slot::Ready(_) => entries += 1,
@@ -324,7 +327,7 @@ impl ArtifactCache {
     /// Drop every resident artifact (counters are preserved; in-flight
     /// builds keep their slot and publish normally).
     pub fn clear(&self) {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock_unpoisoned(&self.inner);
         inner.entries.retain(|_, slot| matches!(slot, Slot::Building(_)));
         inner.bytes = 0;
     }

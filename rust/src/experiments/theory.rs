@@ -52,7 +52,7 @@ pub fn run(profile: Profile) -> ExperimentOutput {
                 1.0,
                 &mut rng,
             )
-            .unwrap();
+            .expect("the A.2 sampler accepts the synthetic instance");
             // Spectral error of the sketch.
             let dense_sketch = sketch.to_dense_kernel();
             let diff = Mat::from_fn(n, n, |i, j| dense_sketch.get(i, j) - kernel.get(i, j));
@@ -93,14 +93,15 @@ pub fn run(profile: Profile) -> ExperimentOutput {
         let mut prev = f64::NAN;
         for &k in budgets {
             let p = SinkhornParams { delta: 0.0, max_iters: k, strict: false };
-            let (u, v, ..) = sinkhorn_scalings(&kernel, &inst.a, &inst.b, 1.0, &p).unwrap();
+            let (u, v, ..) = sinkhorn_scalings(&kernel, &inst.a, &inst.b, 1.0, &p)
+                .expect("non-strict dense sinkhorn cannot fail on this instance");
             let obj = crate::ot::objective::ot_objective_dense(&kernel, &cost, &u, &v, eps);
             if prev.is_finite() && (obj - prev).abs() <= 1e-3 * prev.abs().max(1e-12) {
                 return k;
             }
             prev = obj;
         }
-        *budgets.last().unwrap()
+        *budgets.last().expect("the budget ladder is non-empty")
     };
     let budgets = [5usize, 10, 20, 40, 80, 160, 320];
     let dense_iters = stabilize_dense(&budgets);
@@ -113,14 +114,14 @@ pub fn run(profile: Profile) -> ExperimentOutput {
         1.0,
         &mut rng,
     )
-    .unwrap();
-    let mut spar_iters = *budgets.last().unwrap();
+    .expect("the A.2 sampler accepts the synthetic instance");
+    let mut spar_iters = *budgets.last().expect("the budget ladder is non-empty");
     let mut prev = f64::NAN;
     for &k in &budgets {
         let p = SinkhornParams { delta: 0.0, max_iters: k, strict: false };
         let (u, v, ..) =
             crate::solvers::sparse_loop::sparse_scalings(&sketch, &inst.a, &inst.b, 1.0, &p)
-                .unwrap();
+                .expect("non-strict sparse scalings cannot fail on this sketch");
         let obj = crate::solvers::sparse_loop::sparse_ot_objective(&sketch, &u, &v, eps);
         if prev.is_finite() && (obj - prev).abs() <= 1e-3 * prev.abs().max(1e-12) {
             spar_iters = k;

@@ -72,6 +72,11 @@
 //! algorithm line-by-line, and `api::solve` for everything else.
 
 #![warn(missing_docs)]
+#![warn(clippy::unwrap_used)]
+// Tests may unwrap freely: a panic IS the failure report there. The
+// allow must come after the warn so it wins under cfg(test); the lib
+// target (production code only) still enforces the warning in CI.
+#![cfg_attr(test, allow(clippy::unwrap_used))]
 
 pub mod api;
 pub mod bench;
@@ -82,6 +87,7 @@ pub mod engine;
 pub mod error;
 pub mod experiments;
 pub mod linalg;
+pub mod lint;
 pub mod metrics;
 pub mod ot;
 pub mod pool;

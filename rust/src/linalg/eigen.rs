@@ -144,7 +144,7 @@ pub fn jacobi_eigen(a: &Mat, max_sweeps: usize, tol: f64) -> (Vec<f64>, Mat) {
         }
     }
     let mut pairs: Vec<(f64, usize)> = (0..n).map(|i| (m.get(i, i), i)).collect();
-    pairs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    pairs.sort_by(|a, b| b.0.total_cmp(&a.0));
     let eigenvalues: Vec<f64> = pairs.iter().map(|(l, _)| *l).collect();
     let eigenvectors = Mat::from_fn(n, n, |k, i| v.get(i, pairs[k].1));
     (eigenvalues, eigenvectors)

@@ -1,0 +1,152 @@
+//! `lint.toml` — per-rule allowlists for the contract-lint pass.
+//!
+//! The format is a deliberately tiny TOML subset (the offline image has
+//! no TOML crate): one `[allow]` table whose keys are rule ids and
+//! whose values are arrays of path strings. A listed path exempts that
+//! file from that rule entirely — reach for it only when a pragma
+//! cannot express the exemption (e.g. feature-gated code that CI never
+//! builds); prefer `// lint: allow(rule, "reason")` at the call site.
+//!
+//! ```toml
+//! # Paths are matched as path suffixes relative to the lint root.
+//! [allow]
+//! lock-unwrap = ["runtime/registry.rs"]
+//! ```
+
+use std::collections::BTreeMap;
+
+/// Parsed `lint.toml`: rule id → exempted path suffixes.
+#[derive(Debug, Default, Clone)]
+pub struct LintConfig {
+    allow: BTreeMap<String, Vec<String>>,
+}
+
+impl LintConfig {
+    /// An empty config: no allowlists, every rule applies everywhere.
+    pub fn empty() -> Self {
+        Self::default()
+    }
+
+    /// Parse the `lint.toml` subset described in the module docs.
+    /// Unknown sections, malformed entries, and unknown rule ids are
+    /// errors — a typo in an allowlist must not silently allow nothing.
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let mut allow: BTreeMap<String, Vec<String>> = BTreeMap::new();
+        let mut in_allow = false;
+        for (idx, raw) in text.lines().enumerate() {
+            let line_no = idx + 1;
+            let line = strip_toml_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(section) = line.strip_prefix('[') {
+                let section = section
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("lint.toml:{line_no}: unterminated section header"))?;
+                if section != "allow" {
+                    return Err(format!(
+                        "lint.toml:{line_no}: unknown section [{section}] (only [allow] exists)"
+                    ));
+                }
+                in_allow = true;
+                continue;
+            }
+            if !in_allow {
+                return Err(format!("lint.toml:{line_no}: entry outside the [allow] section"));
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| format!("lint.toml:{line_no}: expected `rule-id = [\"path\"]`"))?;
+            let rule = key.trim();
+            if !super::rules::RULES.iter().any(|r| r.id == rule) {
+                return Err(format!(
+                    "lint.toml:{line_no}: unknown rule id '{rule}' (see `repro lint --list-rules`)"
+                ));
+            }
+            let paths = parse_string_array(value.trim())
+                .map_err(|e| format!("lint.toml:{line_no}: {e}"))?;
+            allow.entry(rule.to_string()).or_default().extend(paths);
+        }
+        Ok(Self { allow })
+    }
+
+    /// Whether `rule` is allowlisted for `path` (both relative to the
+    /// lint root, forward slashes). Entries match as path suffixes so
+    /// the config works whether the root is `rust/src` or `src`.
+    pub fn allows(&self, rule: &str, path: &str) -> bool {
+        self.allow.get(rule).is_some_and(|paths| {
+            paths
+                .iter()
+                .any(|p| path == p || path.ends_with(&format!("/{p}")))
+        })
+    }
+}
+
+/// Drop a `#` comment, respecting `"`-quoted strings.
+fn strip_toml_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, b) in line.bytes().enumerate() {
+        match b {
+            b'"' => in_str = !in_str,
+            b'#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Parse `["a", "b"]` into its strings.
+fn parse_string_array(value: &str) -> Result<Vec<String>, String> {
+    let inner = value
+        .strip_prefix('[')
+        .and_then(|v| v.strip_suffix(']'))
+        .ok_or_else(|| "expected an array of strings".to_string())?;
+    let mut out = Vec::new();
+    for part in inner.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let s = part
+            .strip_prefix('"')
+            .and_then(|p| p.strip_suffix('"'))
+            .ok_or_else(|| format!("expected a quoted string, got `{part}`"))?;
+        out.push(s.to_string());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_allow_section_and_matches_suffixes() {
+        let cfg = LintConfig::parse(
+            "# comment\n[allow]\nlock-unwrap = [\"runtime/registry.rs\"] # gated\n",
+        )
+        .expect("config parses");
+        assert!(cfg.allows("lock-unwrap", "runtime/registry.rs"));
+        assert!(cfg.allows("lock-unwrap", "src/runtime/registry.rs"));
+        assert!(!cfg.allows("lock-unwrap", "coordinator/shard.rs"));
+        assert!(!cfg.allows("unordered-iter", "runtime/registry.rs"));
+    }
+
+    #[test]
+    fn rejects_unknown_rule_ids_and_sections() {
+        assert!(LintConfig::parse("[allow]\nno-such-rule = [\"x.rs\"]\n").is_err());
+        assert!(LintConfig::parse("[deny]\n").is_err());
+        assert!(LintConfig::parse("lock-unwrap = [\"x.rs\"]\n").is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_arrays() {
+        assert!(LintConfig::parse("[allow]\nlock-unwrap = \"x.rs\"\n").is_err());
+        assert!(LintConfig::parse("[allow]\nlock-unwrap = [x.rs]\n").is_err());
+    }
+
+    #[test]
+    fn empty_config_allows_nothing() {
+        assert!(!LintConfig::empty().allows("lock-unwrap", "a.rs"));
+    }
+}

@@ -1,0 +1,45 @@
+//! Finding type and rendering for the contract-lint pass.
+
+use std::fmt;
+
+/// One lint finding: a contract violation at a specific source line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Path of the offending file, relative to the lint root.
+    pub path: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Rule id (one of [`super::rules::RULES`]).
+    pub rule: &'static str,
+    /// Human-readable explanation of the violation.
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.path, self.line, self.rule, self.message)
+    }
+}
+
+/// Order findings for stable output: by path, then line, then rule id.
+pub fn sort_findings(findings: &mut [Finding]) {
+    findings.sort_by(|a, b| {
+        (a.path.as_str(), a.line, a.rule).cmp(&(b.path.as_str(), b.line, b.rule))
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_as_file_line_rule_message() {
+        let f = Finding {
+            path: "solvers/x.rs".to_string(),
+            line: 7,
+            rule: "budget-convention",
+            message: "m".to_string(),
+        };
+        assert_eq!(f.to_string(), "solvers/x.rs:7: [budget-convention] m");
+    }
+}

@@ -1,0 +1,9 @@
+//! Seeded violation (budget-convention): a hand-rolled sampling budget
+//! that multiplies `s_multiplier` by `s0(..)` directly instead of going
+//! through `solvers::sketch_budget`. Never compiled — pinned by the
+//! lint unit tests under a virtual `solvers/` path.
+
+/// Computes a sketch budget without the one convention entry point.
+pub fn raw_budget(s_multiplier: f64, n: usize) -> usize {
+    (s_multiplier * s0(n)) as usize
+}

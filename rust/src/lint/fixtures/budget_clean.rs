@@ -1,0 +1,7 @@
+//! Clean twin of `budget_bad.rs`: the budget goes through the single
+//! convention entry point, passing the multiplier through untouched.
+
+/// Computes a sketch budget the sanctioned way.
+pub fn good_budget(s_multiplier: f64, n: usize, m: usize) -> usize {
+    crate::solvers::sketch_budget(s_multiplier, n, m)
+}

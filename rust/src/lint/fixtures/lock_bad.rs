@@ -1,0 +1,15 @@
+//! Seeded violation (lock-unwrap): bare `.lock().unwrap()` in a worker
+//! path, inline and as a rustfmt-split chain.
+
+use std::sync::Mutex;
+
+/// Drains a shared queue, double-panicking if a peer ever poisoned it.
+pub fn drain(queue: &Mutex<Vec<u64>>) -> Vec<u64> {
+    let mut guard = queue.lock().unwrap();
+    let len = queue
+        .lock()
+        .unwrap()
+        .len();
+    drop(len);
+    guard.split_off(0)
+}

@@ -1,0 +1,11 @@
+//! Clean twin of `lock_bad.rs`: the poison-recovering helper keeps a
+//! peer's panic from cascading.
+
+use crate::util::sync::lock_unpoisoned;
+use std::sync::Mutex;
+
+/// Drains a shared queue, surviving a poisoned lock.
+pub fn drain(queue: &Mutex<Vec<u64>>) -> Vec<u64> {
+    let mut guard = lock_unpoisoned(queue);
+    guard.split_off(0)
+}

@@ -1,0 +1,11 @@
+//! Seeded violation (lint-pragma): a pragma with no reason string. It
+//! still suppresses the unordered-iter finding under it — suppression
+//! and hygiene are separate — but the missing reason is an error.
+
+use std::collections::HashMap;
+
+/// Counts values; order-irrelevant, but the pragma must say why.
+pub fn count(values: &HashMap<u64, u64>) -> usize {
+    // lint: allow(unordered-iter)
+    values.values().count()
+}

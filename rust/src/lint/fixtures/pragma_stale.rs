@@ -1,0 +1,10 @@
+//! Seeded violations (lint-pragma): a stale pragma whose rule no longer
+//! fires below it, and a pragma naming an unknown rule.
+
+/// Sums slices; the pragmas above and inside are the violations.
+pub fn stable_sum(xs: &[f64]) -> f64 {
+    // lint: allow(wall-clock, "this pragma is stale: nothing below reads a clock")
+    let sum: f64 = xs.iter().sum();
+    // lint: allow(no-such-rule, "unknown rule ids are themselves findings")
+    sum
+}

@@ -1,0 +1,15 @@
+//! Seeded violation (unordered-iter): HashMap storage order feeding id
+//! assembly — exactly the nondeterministic-flush-ids bug class.
+
+use std::collections::HashMap;
+
+/// Assigns ids in whatever order the hasher happens to produce.
+pub fn assign_ids(groups: HashMap<u64, Vec<u32>>) -> Vec<(u64, usize)> {
+    let mut out = Vec::new();
+    for (key, jobs) in groups.iter() {
+        out.push((*key, jobs.len()));
+    }
+    let more: Vec<u64> = groups.keys().copied().collect();
+    drop(more);
+    out
+}

@@ -1,0 +1,13 @@
+//! Clean twin of `unordered_bad.rs`: the iteration is collected and
+//! sorted before anything order-sensitive happens, and the pragma says
+//! so — an honored (non-stale) pragma with a reason.
+
+use std::collections::HashMap;
+
+/// Assigns ids in sorted-key order regardless of hasher state.
+pub fn assign_ids(groups: HashMap<u64, Vec<u32>>) -> Vec<(u64, usize)> {
+    // lint: allow(unordered-iter, "collected and sorted by key before ids are assigned")
+    let mut pairs: Vec<(u64, usize)> = groups.iter().map(|(k, v)| (*k, v.len())).collect();
+    pairs.sort_by_key(|(k, _)| *k);
+    pairs
+}

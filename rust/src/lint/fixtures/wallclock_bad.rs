@@ -1,0 +1,11 @@
+//! Seeded violation (wall-clock): clock and machine-shape reads inside
+//! a result-affecting module.
+
+use std::time::Instant;
+
+/// A solve whose output depends on when and where it ran.
+pub fn timed_solve() -> f64 {
+    let t0 = Instant::now();
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    (threads as f64) + t0.elapsed().as_secs_f64()
+}

@@ -1,0 +1,7 @@
+//! Clean twin of `wallclock_bad.rs`: logical ticks and thread counts
+//! are passed in by the caller, so results cannot depend on the clock.
+
+/// A solve parameterized on caller-owned ticks and parallelism.
+pub fn tick_solve(logical_tick: u64, threads: usize) -> f64 {
+    (logical_tick as f64) * (threads as f64)
+}

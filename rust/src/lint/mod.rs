@@ -1,0 +1,247 @@
+//! Contract-lint: repo-native static analysis for the standing
+//! contracts (ROADMAP "Standing contracts").
+//!
+//! The determinism and budget guarantees this crate reproduces from the
+//! paper — one `solvers::sketch_budget` convention for every sampling
+//! budget, bitwise warm/cold and shard-count parity — are enforced
+//! dynamically by tier-1 tests, but a test can only catch a call site
+//! it already exercises. This pass catches the *new* call site at CI
+//! time instead: `repro lint` walks `rust/src`, applies the token-level
+//! rules in [`rules::RULES`], and exits nonzero on any finding. Two of
+//! the rules encode regressions that were previously found and fixed by
+//! hand (nondeterministic `HashMap` flush ids, poisoned-lock
+//! double-panics), so the registry is the repo's memory of them.
+//!
+//! Suppression is two-tier:
+//! - `// lint: allow(rule-id, "reason")` on the offending line or the
+//!   line directly above suppresses one site; the reason is mandatory
+//!   and a pragma that no longer suppresses anything is itself an
+//!   error (`lint-pragma`), so justifications cannot rot.
+//! - `lint.toml` `[allow]` entries exempt whole files per rule, for
+//!   code a pragma cannot reach (e.g. feature-gated modules CI never
+//!   compiles).
+//!
+//! The scanner is line-based with comment/string stripping and
+//! brace-level scope tracking — no `syn`, no new dependencies, which is
+//! what lets the pass run as `cargo run --release -- lint` in the same
+//! image that builds the crate.
+
+pub mod config;
+pub mod diagnostics;
+pub mod rules;
+pub mod scanner;
+
+pub use config::LintConfig;
+pub use diagnostics::Finding;
+pub use rules::{Rule, RULES};
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+/// Lint one file's source text. `path` must be relative to the lint
+/// root with forward slashes (it drives rule scoping and allowlists).
+pub fn lint_source(path: &str, content: &str, config: &LintConfig) -> Vec<Finding> {
+    let file = scanner::scan(path, content);
+    let mut raw: Vec<Finding> = Vec::new();
+    for rule in RULES {
+        if rule.applies_to(path) && !config.allows(rule.id, path) {
+            (rule.check)(&file, &mut raw);
+        }
+    }
+
+    // Resolve pragmas: a pragma suppresses findings of its rule on its
+    // own line or the line directly below (the annotated statement).
+    let mut honored: BTreeSet<usize> = BTreeSet::new();
+    let mut findings: Vec<Finding> = Vec::new();
+    for finding in raw {
+        let suppressor = file.pragmas.iter().position(|p| {
+            p.rule == finding.rule && (p.line == finding.line || p.line + 1 == finding.line)
+        });
+        match suppressor {
+            Some(i) => {
+                honored.insert(i);
+            }
+            None => findings.push(finding),
+        }
+    }
+
+    // Pragma hygiene (the `lint-pragma` rule): unknown rule ids,
+    // missing reasons, and stale pragmas are findings themselves.
+    if !config.allows(rules::PRAGMA_RULE, path) {
+        for (i, pragma) in file.pragmas.iter().enumerate() {
+            let known = RULES.iter().any(|r| r.id == pragma.rule);
+            if !known {
+                findings.push(Finding {
+                    path: path.to_string(),
+                    line: pragma.line,
+                    rule: rules::PRAGMA_RULE,
+                    message: format!(
+                        "pragma names unknown rule '{}' (see `repro lint --list-rules`)",
+                        pragma.rule
+                    ),
+                });
+                continue;
+            }
+            if pragma.reason.is_none() {
+                findings.push(Finding {
+                    path: path.to_string(),
+                    line: pragma.line,
+                    rule: rules::PRAGMA_RULE,
+                    message: format!(
+                        "pragma for '{}' has no reason; write \
+                         `// lint: allow({}, \"why this site is safe\")`",
+                        pragma.rule, pragma.rule
+                    ),
+                });
+            }
+            if !honored.contains(&i) {
+                findings.push(Finding {
+                    path: path.to_string(),
+                    line: pragma.line,
+                    rule: rules::PRAGMA_RULE,
+                    message: format!(
+                        "stale pragma: rule '{}' no longer fires on the next line; \
+                         delete the pragma",
+                        pragma.rule
+                    ),
+                });
+            }
+        }
+    }
+
+    diagnostics::sort_findings(&mut findings);
+    findings
+}
+
+/// Lint every `.rs` file under `src_root` (sorted walk, so output order
+/// is stable). The `lint/fixtures/` corpus is skipped — those files are
+/// deliberate violations pinned by unit tests.
+pub fn lint_tree(src_root: &Path, config: &LintConfig) -> Result<Vec<Finding>, String> {
+    let mut files: Vec<std::path::PathBuf> = Vec::new();
+    collect_rs_files(src_root, &mut files)?;
+    files.sort();
+    let mut findings = Vec::new();
+    for file in files {
+        let rel = file
+            .strip_prefix(src_root)
+            .map_err(|_| format!("walked outside the root: {}", file.display()))?
+            .to_string_lossy()
+            .replace('\\', "/");
+        if rel.starts_with("lint/fixtures/") {
+            continue;
+        }
+        let content = std::fs::read_to_string(&file)
+            .map_err(|e| format!("read {}: {e}", file.display()))?;
+        findings.extend(lint_source(&rel, &content, config));
+    }
+    diagnostics::sort_findings(&mut findings);
+    Ok(findings)
+}
+
+/// Recursively collect `.rs` files under `dir`.
+fn collect_rs_files(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> Result<(), String> {
+    let entries = std::fs::read_dir(dir).map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|ext| ext == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used)]
+
+    use super::*;
+
+    fn rules_hit(findings: &[Finding]) -> Vec<&'static str> {
+        findings.iter().map(|f| f.rule).collect()
+    }
+
+    /// Lint a fixture under a virtual scoped path with no allowlists.
+    fn lint_fixture(path: &str, src: &str) -> Vec<Finding> {
+        lint_source(path, src, &LintConfig::empty())
+    }
+
+    #[test]
+    fn fixture_budget_bad_fires_and_clean_twin_passes() {
+        let bad = include_str!("fixtures/budget_bad.rs");
+        assert_eq!(rules_hit(&lint_fixture("solvers/fixture.rs", bad)), vec!["budget-convention"]);
+        let clean = lint_fixture("solvers/fixture.rs", include_str!("fixtures/budget_clean.rs"));
+        assert!(clean.is_empty(), "{clean:?}");
+    }
+
+    #[test]
+    fn fixture_budget_bad_is_scope_gated() {
+        // The same text outside solvers//engine/ is not budget-checked.
+        let bad = include_str!("fixtures/budget_bad.rs");
+        let out = lint_fixture("experiments/fixture.rs", bad);
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn fixture_unordered_bad_fires_and_pragmad_twin_passes() {
+        let bad = lint_fixture("coordinator/fixture.rs", include_str!("fixtures/unordered_bad.rs"));
+        assert_eq!(rules_hit(&bad), vec!["unordered-iter", "unordered-iter"]);
+        // The clean twin holds an honored pragma (reason given, rule
+        // still firing underneath) plus a sorted collect — zero
+        // findings, including zero stale-pragma findings.
+        let src = include_str!("fixtures/unordered_clean.rs");
+        let clean = lint_fixture("coordinator/fixture.rs", src);
+        assert!(clean.is_empty(), "{clean:?}");
+    }
+
+    #[test]
+    fn fixture_wallclock_bad_fires_and_clean_twin_passes() {
+        let bad = lint_fixture("ot/fixture.rs", include_str!("fixtures/wallclock_bad.rs"));
+        assert_eq!(rules_hit(&bad), vec!["wall-clock", "wall-clock"]);
+        let clean = lint_fixture("ot/fixture.rs", include_str!("fixtures/wallclock_clean.rs"));
+        assert!(clean.is_empty(), "{clean:?}");
+    }
+
+    #[test]
+    fn fixture_lock_bad_fires_and_helper_twin_passes() {
+        let bad = lint_fixture("pool/fixture.rs", include_str!("fixtures/lock_bad.rs"));
+        assert_eq!(rules_hit(&bad), vec!["lock-unwrap", "lock-unwrap"]);
+        let clean = lint_fixture("pool/fixture.rs", include_str!("fixtures/lock_clean.rs"));
+        assert!(clean.is_empty(), "{clean:?}");
+    }
+
+    #[test]
+    fn fixture_stale_and_unknown_pragmas_are_flagged() {
+        let out = lint_fixture("metrics_fixture.rs", include_str!("fixtures/pragma_stale.rs"));
+        assert_eq!(rules_hit(&out), vec!["lint-pragma", "lint-pragma"]);
+        assert!(out[0].message.contains("stale"), "{}", out[0]);
+        assert!(out[1].message.contains("unknown rule"), "{}", out[1]);
+    }
+
+    #[test]
+    fn fixture_missing_reason_still_suppresses_but_errors() {
+        let src = include_str!("fixtures/pragma_missing_reason.rs");
+        let out = lint_fixture("coordinator/fixture.rs", src);
+        // The underlying unordered-iter finding is suppressed, but the
+        // reasonless pragma is itself an error.
+        assert_eq!(rules_hit(&out), vec!["lint-pragma"]);
+        assert!(out[0].message.contains("no reason"), "{}", out[0]);
+    }
+
+    #[test]
+    fn allowlist_silences_a_rule_for_a_file() {
+        let cfg = LintConfig::parse("[allow]\nlock-unwrap = [\"pool/fixture.rs\"]\n").unwrap();
+        let out = lint_source("pool/fixture.rs", include_str!("fixtures/lock_bad.rs"), &cfg);
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn findings_come_out_sorted() {
+        let out = lint_fixture("pool/fixture.rs", include_str!("fixtures/lock_bad.rs"));
+        let lines: Vec<usize> = out.iter().map(|f| f.line).collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0] < lines[1], "{lines:?}");
+    }
+}

@@ -1,0 +1,514 @@
+//! The contract-rule registry.
+//!
+//! Each rule is a token-level check over [`super::scanner::ScannedFile`]
+//! lines (comments and string literals already blanked). Rules are
+//! scoped to path prefixes relative to the lint root; an empty scope
+//! means the whole tree. Findings can be suppressed per line with
+//! `// lint: allow(rule-id, "reason")` (see [`super::lint_source`]) or
+//! per file via `lint.toml` (see [`super::config::LintConfig`]).
+
+use super::diagnostics::Finding;
+use super::scanner::ScannedFile;
+use std::collections::BTreeSet;
+
+/// One contract rule: id, one-line summary, scope, and checker.
+pub struct Rule {
+    /// Stable rule id, used in diagnostics, pragmas, and `lint.toml`.
+    pub id: &'static str,
+    /// One-line summary shown by `repro lint --list-rules`.
+    pub summary: &'static str,
+    /// Path prefixes (relative to the lint root) the rule applies to;
+    /// empty = every file.
+    pub scope: &'static [&'static str],
+    /// The checker: appends findings for `file` to the output vector.
+    pub check: fn(&ScannedFile, &mut Vec<Finding>),
+}
+
+impl Rule {
+    /// Whether this rule applies to `path` (relative, forward slashes).
+    pub fn applies_to(&self, path: &str) -> bool {
+        self.scope.is_empty() || self.scope.iter().any(|prefix| path.starts_with(prefix))
+    }
+}
+
+/// Rule id for the pragma-hygiene rule, which is implemented by the
+/// driver (it needs suppression results) rather than a checker here.
+pub const PRAGMA_RULE: &str = "lint-pragma";
+
+/// The full registry. `lint-pragma` has no checker function: its
+/// findings (unknown rule, missing reason, stale pragma) are emitted by
+/// [`super::lint_source`] after suppression is resolved.
+pub const RULES: &[Rule] = &[
+    Rule {
+        id: "budget-convention",
+        summary: "sampling budgets in solvers/ and engine/ must go through \
+                  solvers::sketch_budget, not raw s_multiplier * s0(n) arithmetic",
+        scope: &["solvers/", "engine/"],
+        check: check_budget,
+    },
+    Rule {
+        id: "unordered-iter",
+        summary: "no HashMap/HashSet iteration feeding ids, batches, fingerprints, \
+                  or rendered output — sort first or pragma with a reason",
+        scope: &[],
+        check: check_unordered,
+    },
+    Rule {
+        id: "wall-clock",
+        summary: "no Instant::now/SystemTime/available_parallelism in \
+                  result-affecting modules (ot/, solvers/, sparse/, engine/)",
+        scope: &["ot/", "solvers/", "sparse/", "engine/"],
+        check: check_wall_clock,
+    },
+    Rule {
+        id: "lock-unwrap",
+        summary: "worker paths must use util::sync::lock_unpoisoned, not \
+                  .lock().unwrap() — a panicking peer poisons the lock",
+        scope: &["coordinator/", "pool/", "engine/", "runtime/"],
+        check: check_lock_unwrap,
+    },
+    Rule {
+        id: PRAGMA_RULE,
+        summary: "every `// lint: allow` pragma names a known rule, carries a \
+                  reason, and still suppresses something (stale pragmas are errors)",
+        scope: &[],
+        check: check_nothing,
+    },
+];
+
+/// No-op checker for rules implemented by the driver.
+fn check_nothing(_file: &ScannedFile, _out: &mut Vec<Finding>) {}
+
+// ---------------------------------------------------------------------------
+// R1: budget-convention
+// ---------------------------------------------------------------------------
+
+/// Adjacent `s_multiplier`/`*` forms that indicate a hand-rolled budget
+/// (`sketch_budget(s_multiplier, ..)` passes the multiplier through and
+/// stays legal).
+const BUDGET_PRODUCTS: &[&str] =
+    &["s_multiplier *", "* s_multiplier", "s_multiplier*", "*s_multiplier"];
+
+fn check_budget(file: &ScannedFile, out: &mut Vec<Finding>) {
+    for line in &file.lines {
+        // The convention's single implementation is exempt from itself,
+        // and so is test code: tests legitimately compute `mult * s0(n)`
+        // to assert the convention or to drive the legacy raw-budget
+        // entry points.
+        if line.enclosing_fn.as_deref() == Some("sketch_budget") || line.in_test {
+            continue;
+        }
+        let code = line.code.as_str();
+        let hit = has_call_token(code, "s0")
+            || BUDGET_PRODUCTS.iter().any(|p| code.contains(p))
+            || (code.contains(".ceil()") && code.contains("budget"));
+        if hit {
+            out.push(Finding {
+                path: file.path.clone(),
+                line: line.number,
+                rule: "budget-convention",
+                message: "hand-rolled sampling budget; call solvers::sketch_budget \
+                          (s = MULT * s0(max(n, m)))"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+/// Whether `code` contains a call `name(` that is not the tail of a
+/// longer identifier (e.g. `res0(` must not match `s0`).
+fn has_call_token(code: &str, name: &str) -> bool {
+    let pat = format!("{name}(");
+    let mut from = 0;
+    while let Some(pos) = code[from..].find(&pat) {
+        let at = from + pos;
+        let tail_of_ident = code[..at]
+            .bytes()
+            .last()
+            .is_some_and(|b| b.is_ascii_alphanumeric() || b == b'_');
+        if !tail_of_ident {
+            return true;
+        }
+        from = at + 1;
+    }
+    false
+}
+
+// ---------------------------------------------------------------------------
+// R2: unordered-iter
+// ---------------------------------------------------------------------------
+
+/// Method calls that iterate a collection in storage order.
+const ITER_VERBS: &[&str] = &[
+    ".iter()",
+    ".iter_mut()",
+    ".into_iter()",
+    ".keys()",
+    ".values()",
+    ".values_mut()",
+    ".into_keys()",
+    ".into_values()",
+    ".drain(",
+];
+
+/// Type names whose storage order is nondeterministic across runs
+/// (`RandomState` hashing). The `<`/`::` suffixes anchor to type
+/// position so an identifier merely containing the word does not match.
+const UNORDERED_TYPES: &[&str] = &["HashMap<", "HashSet<", "HashMap::", "HashSet::"];
+
+fn check_unordered(file: &ScannedFile, out: &mut Vec<Finding>) {
+    // Pass 1: register every binding (let, field, or parameter) whose
+    // declared type mentions HashMap/HashSet. File-scoped and
+    // flow-insensitive by design — a same-named ordered binding in
+    // another function is a false positive worth a pragma, not a parser.
+    let mut names: BTreeSet<String> = BTreeSet::new();
+    for line in &file.lines {
+        register_unordered_names(&line.code, &mut names);
+    }
+    if names.is_empty() {
+        return;
+    }
+
+    // Pass 2: flag iteration over a registered name, including
+    // rustfmt-split method chains (a line starting with an iteration
+    // verb whose previous code line ends with a registered name).
+    let mut prev_code: Option<&str> = None;
+    for line in &file.lines {
+        let code = line.code.as_str();
+        let trimmed = code.trim();
+        let direct = names.iter().find(|n| line_iterates(n, code));
+        let continuation = || {
+            let prev = prev_code?;
+            if !ITER_VERBS.iter().any(|v| trimmed.starts_with(v)) {
+                return None;
+            }
+            names.iter().find(|n| ends_with_name(prev, n))
+        };
+        if let Some(name) = direct.or_else(continuation) {
+            out.push(Finding {
+                path: file.path.clone(),
+                line: line.number,
+                rule: "unordered-iter",
+                message: format!(
+                    "iteration over unordered collection `{name}`; collect + sort \
+                     before anything order-sensitive, or pragma with a reason"
+                ),
+            });
+        }
+        if !trimmed.is_empty() {
+            prev_code = Some(trimmed);
+        }
+    }
+}
+
+/// Register binding names declared with an unordered type on this line.
+fn register_unordered_names(code: &str, names: &mut BTreeSet<String>) {
+    for ty in UNORDERED_TYPES {
+        let mut from = 0;
+        while let Some(pos) = code[from..].find(ty) {
+            let at = from + pos;
+            let tail_of_ident = code[..at]
+                .bytes()
+                .last()
+                .is_some_and(|b| b.is_ascii_alphanumeric() || b == b'_');
+            if !tail_of_ident {
+                if let Some(name) = binding_name_before(code, at) {
+                    names.insert(name);
+                }
+            }
+            from = at + ty.len();
+        }
+    }
+}
+
+/// The binding name for a type mention at byte `at`: the identifier
+/// before the nearest single `:` whose gap to `at` is all type-ish
+/// characters (`name: HashMap<..>`, `cache: Mutex<HashMap<..>>`), or
+/// the `let [mut] name = ...` pattern when there is no annotation.
+fn binding_name_before(code: &str, at: usize) -> Option<String> {
+    let bytes = code.as_bytes();
+    let mut i = at;
+    while i > 0 {
+        let b = bytes[i - 1];
+        let single_colon = b == b':'
+            && bytes.get(i.wrapping_sub(2)) != Some(&b':')
+            && bytes.get(i) != Some(&b':');
+        if single_colon {
+            return ident_ending_at(code, i - 1);
+        }
+        let type_ish = b.is_ascii_alphanumeric()
+            || matches!(b, b'_' | b' ' | b'<' | b'>' | b'&' | b',' | b'\'' | b':' | b'(' | b')');
+        if !type_ish {
+            break;
+        }
+        i -= 1;
+    }
+    // `let [mut] name = HashMap::new()` with no annotation.
+    let trimmed = code.trim_start();
+    let rest = trimmed.strip_prefix("let ")?;
+    let rest = rest.strip_prefix("mut ").unwrap_or(rest);
+    let eq = rest.find('=')?;
+    let name = rest[..eq].trim();
+    let is_ident = !name.is_empty()
+        && name
+            .bytes()
+            .all(|b| b.is_ascii_alphanumeric() || b == b'_');
+    is_ident.then(|| name.to_string())
+}
+
+/// The identifier whose last character sits just before byte `end`
+/// (skipping trailing spaces).
+fn ident_ending_at(code: &str, end: usize) -> Option<String> {
+    let bytes = code.as_bytes();
+    let mut stop = end;
+    while stop > 0 && bytes[stop - 1] == b' ' {
+        stop -= 1;
+    }
+    let mut start = stop;
+    while start > 0 && (bytes[start - 1].is_ascii_alphanumeric() || bytes[start - 1] == b'_') {
+        start -= 1;
+    }
+    (start < stop).then(|| code[start..stop].to_string())
+}
+
+/// Whether this line iterates the registered binding `name`: either a
+/// `name.iter()`-style call (with an identifier boundary before `name`)
+/// or a `for .. in [&[mut ]]name` loop header.
+fn line_iterates(name: &str, code: &str) -> bool {
+    for verb in ITER_VERBS {
+        let pat = format!("{name}{verb}");
+        let mut from = 0;
+        while let Some(pos) = code[from..].find(&pat) {
+            let at = from + pos;
+            let tail_of_ident = code[..at]
+                .bytes()
+                .last()
+                .is_some_and(|b| b.is_ascii_alphanumeric() || b == b'_');
+            if !tail_of_ident {
+                return true;
+            }
+            from = at + 1;
+        }
+    }
+    // `for x in name {` / `for x in &name` / trailing `name` at EOL.
+    if let Some(for_pos) = find_keyword(code, "for ") {
+        if let Some(in_rel) = find_keyword(&code[for_pos..], " in ") {
+            let rest = code[for_pos + in_rel + 4..].trim_start();
+            let rest = rest.strip_prefix("&mut ").unwrap_or(rest);
+            let rest = rest.strip_prefix('&').unwrap_or(rest);
+            if let Some(after) = rest.strip_prefix(name) {
+                let boundary = !after
+                    .bytes()
+                    .next()
+                    .is_some_and(|b| b.is_ascii_alphanumeric() || b == b'_' || b == b'.');
+                if boundary {
+                    return true;
+                }
+            }
+        }
+    }
+    false
+}
+
+/// Find `word` in `code` with a non-identifier character (or start of
+/// line) before it.
+fn find_keyword(code: &str, word: &str) -> Option<usize> {
+    let mut from = 0;
+    while let Some(pos) = code[from..].find(word) {
+        let at = from + pos;
+        let tail_of_ident = code[..at]
+            .bytes()
+            .last()
+            .is_some_and(|b| b.is_ascii_alphanumeric() || b == b'_');
+        if !tail_of_ident {
+            return Some(at);
+        }
+        from = at + 1;
+    }
+    None
+}
+
+/// Whether `prev` (a trimmed code line) ends with the identifier `name`
+/// at an identifier boundary — the head of a rustfmt-split chain.
+fn ends_with_name(prev: &str, name: &str) -> bool {
+    let Some(head) = prev.strip_suffix(name) else {
+        return false;
+    };
+    !head
+        .bytes()
+        .last()
+        .is_some_and(|b| b.is_ascii_alphanumeric() || b == b'_')
+}
+
+// ---------------------------------------------------------------------------
+// R3: wall-clock
+// ---------------------------------------------------------------------------
+
+/// Tokens that read wall-clock time or machine shape. Inside
+/// result-affecting modules these make outputs depend on when/where the
+/// run happened; timing belongs in metrics/bench/experiments.
+const WALL_CLOCK_TOKENS: &[&str] = &["Instant::now", "SystemTime", "available_parallelism"];
+
+fn check_wall_clock(file: &ScannedFile, out: &mut Vec<Finding>) {
+    for line in &file.lines {
+        for token in WALL_CLOCK_TOKENS {
+            if find_keyword(&line.code, token).is_some() {
+                out.push(Finding {
+                    path: file.path.clone(),
+                    line: line.number,
+                    rule: "wall-clock",
+                    message: format!(
+                        "`{token}` in a result-affecting module; pass ticks/threads \
+                         in from the caller (metrics/bench own timing)"
+                    ),
+                });
+                break;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// R4: lock-unwrap
+// ---------------------------------------------------------------------------
+
+fn check_lock_unwrap(file: &ScannedFile, out: &mut Vec<Finding>) {
+    let mut prev_code: Option<&str> = None;
+    for line in &file.lines {
+        let trimmed = line.code.trim();
+        let split_chain = trimmed.starts_with(".unwrap()")
+            && prev_code.is_some_and(|prev| prev.ends_with(".lock()"));
+        if line.code.contains(".lock().unwrap()") || split_chain {
+            out.push(Finding {
+                path: file.path.clone(),
+                line: line.number,
+                rule: "lock-unwrap",
+                message: "bare .lock().unwrap() panics again on a poisoned lock; \
+                          use util::sync::lock_unpoisoned"
+                    .to_string(),
+            });
+        }
+        if !trimmed.is_empty() {
+            prev_code = Some(trimmed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::scanner::scan;
+
+    fn run(rule_id: &str, path: &str, src: &str) -> Vec<Finding> {
+        let rule = RULES
+            .iter()
+            .find(|r| r.id == rule_id)
+            .expect("rule id exists");
+        let file = scan(path, src);
+        let mut out = Vec::new();
+        (rule.check)(&file, &mut out);
+        out
+    }
+
+    #[test]
+    fn budget_flags_raw_products_and_s0_calls() {
+        let src = "fn f(s_multiplier: f64, n: usize) -> usize {\n\
+                   let s = (s_multiplier * s0(n)).ceil() as usize;\n\
+                   s\n}\n";
+        let hits = run("budget-convention", "solvers/x.rs", src);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].line, 2);
+    }
+
+    #[test]
+    fn budget_allows_sketch_budget_passthrough_and_its_own_body() {
+        let src = "fn sketch_budget(s_multiplier: f64, n: usize, m: usize) -> usize {\n\
+                   (s_multiplier * s0(n.max(m))).ceil() as usize\n\
+                   }\n\
+                   fn f() { let s = sketch_budget(spec.s_multiplier, n, m); }\n";
+        assert!(run("budget-convention", "solvers/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn budget_ignores_longer_identifiers() {
+        assert!(run("budget-convention", "solvers/x.rs", "let y = res0(n);\n").is_empty());
+    }
+
+    #[test]
+    fn budget_exempts_test_modules() {
+        let src = "#[cfg(test)]\n\
+                   mod tests {\n\
+                   fn expected(n: usize) -> f64 { 8.0 * s0(n) }\n\
+                   }\n";
+        assert!(run("budget-convention", "solvers/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unordered_flags_registered_bindings_and_split_chains() {
+        let src = "struct S { entries: HashMap<u64, u32> }\n\
+                   fn f(s: &S) {\n\
+                   for k in s.entries.keys() { use_it(k); }\n\
+                   let v = s\n\
+                   .entries\n\
+                   .iter()\n\
+                   .count();\n\
+                   }\n";
+        let hits = run("unordered-iter", "engine/x.rs", src);
+        let lines: Vec<usize> = hits.iter().map(|h| h.line).collect();
+        assert_eq!(lines, vec![3, 6]);
+    }
+
+    #[test]
+    fn unordered_registers_let_without_annotation_and_for_loops() {
+        let src = "fn f() {\n\
+                   let mut seen = HashSet::new();\n\
+                   for x in &seen { use_it(x); }\n\
+                   }\n";
+        let hits = run("unordered-iter", "a.rs", src);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].line, 3);
+    }
+
+    #[test]
+    fn unordered_ignores_sorted_vec_with_same_words_in_strings() {
+        let src = "fn f() {\n\
+                   let v: Vec<u32> = Vec::new();\n\
+                   println!(\"HashMap<k,v>.iter()\");\n\
+                   for x in &v { use_it(x); }\n\
+                   }\n";
+        assert!(run("unordered-iter", "a.rs", src).is_empty());
+    }
+
+    #[test]
+    fn wall_clock_fires_only_on_real_tokens() {
+        let src = "fn f() { let t = Instant::now(); }\n\
+                   fn g() { let p = std::thread::available_parallelism(); }\n\
+                   fn h() { instant_noodles(); }\n";
+        let hits = run("wall-clock", "ot/x.rs", src);
+        let lines: Vec<usize> = hits.iter().map(|h| h.line).collect();
+        assert_eq!(lines, vec![1, 2]);
+    }
+
+    #[test]
+    fn lock_unwrap_fires_inline_and_across_split_chains() {
+        let src = "fn f(m: &Mutex<u32>) {\n\
+                   let a = m.lock().unwrap();\n\
+                   let b = m\n\
+                   .lock()\n\
+                   .unwrap();\n\
+                   let c = lock_unpoisoned(m);\n\
+                   }\n";
+        let hits = run("lock-unwrap", "pool/x.rs", src);
+        let lines: Vec<usize> = hits.iter().map(|h| h.line).collect();
+        assert_eq!(lines, vec![2, 5]);
+    }
+
+    #[test]
+    fn scopes_gate_rules_to_their_directories() {
+        let budget = RULES.iter().find(|r| r.id == "budget-convention").expect("exists");
+        assert!(budget.applies_to("solvers/spar_sink.rs"));
+        assert!(!budget.applies_to("metrics.rs"));
+        let unordered = RULES.iter().find(|r| r.id == "unordered-iter").expect("exists");
+        assert!(unordered.applies_to("anything/at/all.rs"));
+    }
+}

@@ -1,0 +1,407 @@
+//! Line-based source scanner: strips comments and string/char literals,
+//! tracks brace depth and the innermost enclosing `fn`, and extracts
+//! `// lint: allow(rule, "reason")` pragmas.
+//!
+//! This is deliberately NOT a parser — the contract rules in
+//! [`super::rules`] are token-level conventions (a call name, an
+//! iteration verb, a lock idiom), so a stripped-text view plus
+//! lightweight scope tracking is enough, keeps the pass dependency-free
+//! (no `syn` in the offline image), and makes diagnostics trivially
+//! line-addressable.
+
+/// One source line after stripping: comments and literal contents are
+/// replaced by spaces so column-free token matching cannot fire inside
+/// them.
+pub struct ScannedLine {
+    /// 1-based line number.
+    pub number: usize,
+    /// The line with comments and string/char literal contents blanked.
+    pub code: String,
+    /// Name of the innermost `fn` whose body contains the START of this
+    /// line, when known.
+    pub enclosing_fn: Option<String>,
+    /// Whether a `#[cfg(test)]` attribute has been seen at or above
+    /// this line. Test modules sit at the tail of every file in this
+    /// repo (rustfmt convention), so "everything after the attribute"
+    /// is an accurate test-region approximation for a line-based pass.
+    pub in_test: bool,
+}
+
+/// A `// lint: allow(rule, "reason")` pragma.
+pub struct Pragma {
+    /// 1-based line the pragma comment sits on.
+    pub line: usize,
+    /// The rule id inside `allow(...)`.
+    pub rule: String,
+    /// The reason string, when present and non-empty.
+    pub reason: Option<String>,
+}
+
+/// A fully scanned file: stripped lines plus the pragmas found in its
+/// comments.
+pub struct ScannedFile {
+    /// Path relative to the lint root, forward slashes.
+    pub path: String,
+    /// Stripped lines, in order.
+    pub lines: Vec<ScannedLine>,
+    /// Pragmas, in line order.
+    pub pragmas: Vec<Pragma>,
+}
+
+/// Cross-line lexer state.
+enum Mode {
+    /// Ordinary code.
+    Code,
+    /// Inside a `"..."` string literal.
+    Str,
+    /// Inside an `r"..."` / `r#"..."#` raw string with `hashes` hashes.
+    RawStr { hashes: usize },
+    /// Inside a (possibly nested) `/* ... */` block comment.
+    Block { depth: usize },
+}
+
+/// Scan `content` (the text of one Rust source file) into stripped
+/// lines, scopes, and pragmas. `path` is carried through verbatim for
+/// diagnostics.
+pub fn scan(path: &str, content: &str) -> ScannedFile {
+    let mut mode = Mode::Code;
+    let mut lines = Vec::new();
+    let mut pragmas = Vec::new();
+    // Brace/scope tracking: current depth, the stack of (open depth,
+    // fn name) for bodies of named fns, and a pending fn whose body
+    // brace has not opened yet (signatures span lines).
+    let mut depth = 0usize;
+    let mut fn_stack: Vec<(usize, String)> = Vec::new();
+    let mut pending_fn: Option<String> = None;
+    // Bracket nesting inside a pending signature, so a `;` inside
+    // `[u8; 4]` does not cancel the pending fn.
+    let mut pending_brackets = 0usize;
+    let mut in_test = false;
+
+    for (number, raw) in content.lines().enumerate() {
+        let number = number + 1;
+        let enclosing_fn = fn_stack.last().map(|(_, name)| name.clone());
+        let (code, comment) = strip_line(raw, &mut mode);
+        if code.trim_start().starts_with("#[cfg(test)]") {
+            in_test = true;
+        }
+        if let Some(comment) = comment {
+            if let Some(pragma) = parse_pragma(number, &comment) {
+                pragmas.push(pragma);
+            }
+        }
+
+        // Scope pass over the stripped code.
+        let bytes = code.as_bytes();
+        let mut i = 0;
+        while i < bytes.len() {
+            match bytes[i] {
+                b'{' => {
+                    if let Some(name) = pending_fn.take() {
+                        fn_stack.push((depth, name));
+                        pending_brackets = 0;
+                    }
+                    depth += 1;
+                }
+                b'}' => {
+                    depth = depth.saturating_sub(1);
+                    if fn_stack.last().is_some_and(|(open, _)| *open == depth) {
+                        fn_stack.pop();
+                    }
+                }
+                b'(' | b'[' if pending_fn.is_some() => pending_brackets += 1,
+                b')' | b']' if pending_fn.is_some() => {
+                    pending_brackets = pending_brackets.saturating_sub(1);
+                }
+                b';' if pending_fn.is_some() && pending_brackets == 0 => {
+                    // Trait method declaration without a body.
+                    pending_fn = None;
+                }
+                b'f' if is_keyword_at(&code, i, "fn") => {
+                    if let Some(name) = ident_after(&code, i + 2) {
+                        pending_fn = Some(name);
+                        pending_brackets = 0;
+                    }
+                    i += 1;
+                }
+                _ => {}
+            }
+            i += 1;
+        }
+
+        lines.push(ScannedLine { number, code, enclosing_fn, in_test });
+    }
+
+    ScannedFile { path: path.to_string(), lines, pragmas }
+}
+
+/// Strip one raw line under the running lexer `mode`. Returns the
+/// blanked code text and, when a `//` comment starts on this line, its
+/// text (for pragma parsing).
+fn strip_line(raw: &str, mode: &mut Mode) -> (String, Option<String>) {
+    let mut code = String::with_capacity(raw.len());
+    let mut comment = None;
+    let bytes = raw.as_bytes();
+    let mut i = 0;
+    while i < bytes.len() {
+        match mode {
+            Mode::Block { depth } => {
+                if bytes[i..].starts_with(b"*/") {
+                    *depth -= 1;
+                    i += 2;
+                    if *depth == 0 {
+                        *mode = Mode::Code;
+                    }
+                } else if bytes[i..].starts_with(b"/*") {
+                    *depth += 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+                continue;
+            }
+            Mode::Str => {
+                if bytes[i] == b'\\' {
+                    i += 2;
+                } else if bytes[i] == b'"' {
+                    *mode = Mode::Code;
+                    code.push(' ');
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+                continue;
+            }
+            Mode::RawStr { hashes } => {
+                let closer_len = 1 + *hashes;
+                if bytes[i] == b'"'
+                    && bytes[i + 1..].len() >= *hashes
+                    && bytes[i + 1..i + closer_len].iter().all(|&b| b == b'#')
+                {
+                    i += closer_len;
+                    *mode = Mode::Code;
+                    code.push(' ');
+                } else {
+                    i += 1;
+                }
+                continue;
+            }
+            Mode::Code => {}
+        }
+        // Mode::Code from here on.
+        if bytes[i..].starts_with(b"//") {
+            comment = Some(raw[i..].to_string());
+            break;
+        }
+        if bytes[i..].starts_with(b"/*") {
+            *mode = Mode::Block { depth: 1 };
+            i += 2;
+            continue;
+        }
+        if bytes[i] == b'"' {
+            *mode = Mode::Str;
+            code.push(' ');
+            i += 1;
+            continue;
+        }
+        if bytes[i] == b'r' && !prev_is_ident(bytes, i) {
+            // Possible raw string r"..." / r#"..."#.
+            let mut j = i + 1;
+            while j < bytes.len() && bytes[j] == b'#' {
+                j += 1;
+            }
+            if j < bytes.len() && bytes[j] == b'"' {
+                *mode = Mode::RawStr { hashes: j - i - 1 };
+                code.push(' ');
+                i = j + 1;
+                continue;
+            }
+        }
+        if bytes[i] == b'\'' {
+            // Char literal or lifetime. An escaped or single-char
+            // literal closes with another quote; a lifetime does not.
+            if let Some(consumed) = char_literal_len(&raw[i..]) {
+                code.push(' ');
+                i += consumed;
+                continue;
+            }
+            // Lifetime marker: keep as-is (harmless to token matching).
+            code.push('\'');
+            i += 1;
+            continue;
+        }
+        // Copy one full UTF-8 character.
+        let ch_len = utf8_len(bytes[i]);
+        code.push_str(&raw[i..i + ch_len]);
+        i += ch_len;
+    }
+    (code, comment)
+}
+
+/// Byte length of a char literal starting at a `'`, or `None` when the
+/// quote is a lifetime marker instead.
+fn char_literal_len(s: &str) -> Option<usize> {
+    let bytes = s.as_bytes();
+    if bytes.len() < 3 {
+        return None;
+    }
+    if bytes[1] == b'\\' {
+        // Escaped literal: the byte after the backslash is part of the
+        // escape (covers `'\''` and `'\\'`), then scan to the closing
+        // quote (covers `'\n'`, `'\x41'`, `'\u{..}'`).
+        if bytes.len() < 4 {
+            return None;
+        }
+        let close = s[3..].find('\'')?;
+        return Some(3 + close + 1);
+    }
+    // Unescaped: exactly one character then a closing quote.
+    let mut chars = s[1..].char_indices();
+    let (_, _first) = chars.next()?;
+    match chars.next() {
+        Some((offset, '\'')) => Some(1 + offset + 1),
+        _ => None,
+    }
+}
+
+fn utf8_len(first: u8) -> usize {
+    match first {
+        b if b < 0x80 => 1,
+        b if b >= 0xF0 => 4,
+        b if b >= 0xE0 => 3,
+        _ => 2,
+    }
+}
+
+fn prev_is_ident(bytes: &[u8], i: usize) -> bool {
+    i > 0 && (bytes[i - 1].is_ascii_alphanumeric() || bytes[i - 1] == b'_')
+}
+
+/// Whether `word` starts at byte `i` of `code` with identifier
+/// boundaries on both sides.
+fn is_keyword_at(code: &str, i: usize, word: &str) -> bool {
+    let bytes = code.as_bytes();
+    if !code[i..].starts_with(word) || prev_is_ident(bytes, i) {
+        return false;
+    }
+    match bytes.get(i + word.len()) {
+        Some(&b) => !(b.is_ascii_alphanumeric() || b == b'_'),
+        None => true,
+    }
+}
+
+/// The identifier starting at or after byte `from` (skipping spaces).
+fn ident_after(code: &str, from: usize) -> Option<String> {
+    let rest = code.get(from..)?.trim_start();
+    let end = rest
+        .find(|c: char| !(c.is_ascii_alphanumeric() || c == '_'))
+        .unwrap_or(rest.len());
+    if end == 0 {
+        return None;
+    }
+    Some(rest[..end].to_string())
+}
+
+/// Parse a `// lint: allow(rule, "reason")` pragma. Only a plain `//`
+/// comment whose text STARTS with the pragma counts — doc comments and
+/// prose that merely mention the syntax (this file does) are not
+/// pragmas.
+fn parse_pragma(line: usize, comment: &str) -> Option<Pragma> {
+    let body = comment.strip_prefix("//")?;
+    if body.starts_with('/') || body.starts_with('!') {
+        return None;
+    }
+    let inner = body.trim_start().strip_prefix("lint: allow(")?;
+    let close = inner.find(')')?;
+    let inner = &inner[..close];
+    let (rule, reason) = match inner.split_once(',') {
+        Some((rule, reason)) => (rule, reason),
+        None => (inner, ""),
+    };
+    let reason = reason.trim().trim_matches('"').trim();
+    Some(Pragma {
+        line,
+        rule: rule.trim().to_string(),
+        reason: (!reason.is_empty()).then(|| reason.to_string()),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used)]
+
+    use super::*;
+
+    #[test]
+    fn strips_strings_comments_and_char_literals() {
+        let src =
+            "let x = \"HashMap.iter()\"; // HashMap.iter()\nlet c = '{'; let l: &'a str = s;\n";
+        let file = scan("f.rs", src);
+        assert!(!file.lines[0].code.contains("HashMap"));
+        assert!(!file.lines[1].code.contains('{'));
+        // The lifetime quote must not swallow the rest of the line.
+        assert!(file.lines[1].code.contains("str"));
+    }
+
+    #[test]
+    fn block_comments_span_lines_and_nest() {
+        let src = "a /* x\n /* y */ still comment\n*/ b\n";
+        let file = scan("f.rs", src);
+        assert!(file.lines[0].code.contains('a'));
+        assert!(!file.lines[1].code.contains("still"));
+        assert!(file.lines[2].code.contains('b'));
+    }
+
+    #[test]
+    fn raw_strings_are_blanked() {
+        let src = "let t = r#\"for x in map.iter()\"#; map.keys();\n";
+        let file = scan("f.rs", src);
+        assert!(!file.lines[0].code.contains("iter"));
+        assert!(file.lines[0].code.contains("keys"));
+    }
+
+    #[test]
+    fn tracks_enclosing_fn_across_multiline_signatures() {
+        let src = "\
+fn outer(\n\
+    x: usize,\n\
+) -> usize {\n\
+    let y = x;\n\
+    y\n\
+}\n\
+fn second() {\n\
+    1;\n\
+}\n";
+        let file = scan("f.rs", src);
+        assert_eq!(file.lines[3].enclosing_fn.as_deref(), Some("outer"));
+        assert_eq!(file.lines[7].enclosing_fn.as_deref(), Some("second"));
+        assert_eq!(file.lines[6].enclosing_fn, None);
+    }
+
+    #[test]
+    fn trait_method_declarations_do_not_capture_scope() {
+        let src = "\
+trait T {\n\
+    fn decl(&self, xs: [u8; 4]) -> u8;\n\
+}\n\
+fn real() {\n\
+    2;\n\
+}\n";
+        let file = scan("f.rs", src);
+        assert_eq!(file.lines[4].enclosing_fn.as_deref(), Some("real"));
+    }
+
+    #[test]
+    fn parses_pragmas_with_and_without_reason() {
+        let src = "\
+// lint: allow(unordered-iter, \"sorted right below\")\n\
+let x = 1; // lint: allow(wall-clock)\n";
+        let file = scan("f.rs", src);
+        assert_eq!(file.pragmas.len(), 2);
+        assert_eq!(file.pragmas[0].rule, "unordered-iter");
+        assert_eq!(file.pragmas[0].reason.as_deref(), Some("sorted right below"));
+        assert_eq!(file.pragmas[1].line, 2);
+        assert_eq!(file.pragmas[1].rule, "wall-clock");
+        assert!(file.pragmas[1].reason.is_none());
+    }
+}

@@ -12,16 +12,23 @@ use spar_sink::experiments::{self, Profile};
 
 const VALUE_KEYS: &[&str] = &[
     "out", "n", "eps", "lambda", "method", "seed", "videos", "frames", "workers", "problem", "s",
-    "d", "backend", "threshold", "shards", "size",
+    "d", "backend", "threshold", "shards", "size", "root", "config",
 ];
 
 fn main() {
-    let args = Args::parse(std::env::args().skip(1), VALUE_KEYS);
+    let args = match Args::parse(std::env::args().skip(1), VALUE_KEYS) {
+        Ok(args) => args,
+        Err(e) => {
+            eprintln!("{e}\n\n{}", usage());
+            std::process::exit(2);
+        }
+    };
     let code = match args.command.as_deref() {
         Some("experiment") => cmd_experiment(&args),
         Some("solve") => cmd_solve(&args),
         Some("serve") => cmd_serve(&args),
         Some("bench") => cmd_bench(&args),
+        Some("lint") => cmd_lint(&args),
         Some("runtime-info") => cmd_runtime_info(),
         Some("list") => {
             for (id, desc, _) in experiments::registry() {
@@ -325,6 +332,82 @@ fn cmd_serve(args: &Args) -> i32 {
     0
 }
 
+fn cmd_lint(args: &Args) -> i32 {
+    use spar_sink::lint::{self, LintConfig};
+    use std::path::PathBuf;
+
+    if args.flag("list-rules") {
+        for rule in lint::RULES {
+            let scope =
+                if rule.scope.is_empty() { "all files".to_string() } else { rule.scope.join(" ") };
+            println!("{:<18} [{scope}]\n    {}", rule.id, rule.summary);
+        }
+        return 0;
+    }
+
+    let root: PathBuf = match args.get("root") {
+        Some(dir) => PathBuf::from(dir),
+        // Work from either the repo root or rust/.
+        None => match ["rust/src", "src"]
+            .iter()
+            .map(PathBuf::from)
+            .find(|c| c.join("lib.rs").is_file())
+        {
+            Some(found) => found,
+            None => {
+                eprintln!("could not find the source tree (tried rust/src, src); pass --root DIR");
+                return 2;
+            }
+        },
+    };
+
+    let config_text = match args.get("config") {
+        Some(path) => match std::fs::read_to_string(path) {
+            Ok(text) => Some(text),
+            Err(e) => {
+                eprintln!("read {path}: {e}");
+                return 2;
+            }
+        },
+        // Default: lint.toml looked up from the current directory
+        // toward the repo root; absent means no allowlists.
+        None => ["lint.toml", "../lint.toml", "../../lint.toml"]
+            .iter()
+            .find_map(|cand| std::fs::read_to_string(cand).ok()),
+    };
+    let config = match config_text {
+        None => LintConfig::empty(),
+        Some(text) => match LintConfig::parse(&text) {
+            Ok(config) => config,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        },
+    };
+
+    match lint::lint_tree(&root, &config) {
+        Ok(findings) if findings.is_empty() => {
+            println!("lint clean: {} rules over {}", lint::RULES.len(), root.display());
+            0
+        }
+        Ok(findings) => {
+            for finding in &findings {
+                println!("{finding}");
+            }
+            eprintln!(
+                "{} finding(s); see `repro lint --list-rules` and README \"Static contracts\"",
+                findings.len()
+            );
+            1
+        }
+        Err(e) => {
+            eprintln!("lint error: {e}");
+            2
+        }
+    }
+}
+
 fn cmd_bench(args: &Args) -> i32 {
     use spar_sink::bench::coordinator::{self, BenchConfig};
 
@@ -341,7 +424,8 @@ fn cmd_bench(args: &Args) -> i32 {
     cfg.size = args.get_parsed("size", cfg.size);
     cfg.frames = args.get_parsed("frames", cfg.frames);
     // The 1-vs-N contrast: always bench one shard against N.
-    let contrast: usize = args.get_parsed("shards", *cfg.shard_counts.last().unwrap());
+    let default_contrast = cfg.shard_counts.last().copied().unwrap_or(4);
+    let contrast: usize = args.get_parsed("shards", default_contrast);
     cfg.shard_counts = vec![1, contrast.max(2)];
     cfg.steal = !args.flag("no-steal");
     let doc = coordinator::run(&cfg);

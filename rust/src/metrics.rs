@@ -32,7 +32,7 @@ pub fn standard_error(xs: &[f64]) -> f64 {
 pub fn median(xs: &[f64]) -> f64 {
     assert!(!xs.is_empty());
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let n = v.len();
     if n % 2 == 1 {
         v[n / 2]

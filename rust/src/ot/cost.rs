@@ -146,7 +146,7 @@ pub fn calibrate_eta(
             ds.push(euclidean(x, y));
         }
     }
-    ds.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    ds.sort_by(f64::total_cmp);
     let q = ((target_density * ds.len() as f64) as usize).min(ds.len() - 1);
     let _ = tol;
     // d < π η  ⇔  η > d/π: choose η at the target quantile distance.

@@ -9,6 +9,8 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
+use crate::util::sync::lock_unpoisoned;
+
 /// Number of worker threads to use (respects `SPAR_SINK_THREADS`,
 /// defaults to available parallelism, minimum 1).
 pub fn num_threads() -> usize {
@@ -139,11 +141,14 @@ where
             let partials = &partials;
             scope.spawn(move || {
                 let v = map_chunk(start, end);
-                partials.lock().unwrap().push((w, v));
+                lock_unpoisoned(partials).push((w, v));
             });
         }
     });
-    let mut parts = partials.into_inner().unwrap();
+    // A panicking map_chunk propagates out of the scope join above, so
+    // this is only reachable with every partial pushed; recover the
+    // (intact) buffer even if a late-poisoned flag is set.
+    let mut parts = partials.into_inner().unwrap_or_else(std::sync::PoisonError::into_inner);
     parts.sort_by_key(|(w, _)| *w);
     parts.into_iter().fold(init, |acc, (_, v)| reduce(acc, v))
 }

@@ -69,12 +69,12 @@ pub fn greenkhorn_ot(
         // Greedy pick: argmax rho(a_i, r_i) vs argmax rho(b_j, c_j).
         let (bi, bri) = (0..n)
             .map(|i| (i, rho_dist(a[i], r[i])))
-            .max_by(|x, y| x.1.partial_cmp(&y.1).unwrap())
-            .unwrap();
+            .max_by(|x, y| x.1.total_cmp(&y.1))
+            .expect("marginals are non-empty (dimension-checked at entry)");
         let (bj, bcj) = (0..m)
             .map(|j| (j, rho_dist(b[j], c[j])))
-            .max_by(|x, y| x.1.partial_cmp(&y.1).unwrap())
-            .unwrap();
+            .max_by(|x, y| x.1.total_cmp(&y.1))
+            .expect("marginals are non-empty (dimension-checked at entry)");
         violation = (0..n).map(|i| (r[i] - a[i]).abs()).sum::<f64>()
             + (0..m).map(|j| (c[j] - b[j]).abs()).sum::<f64>();
         if violation <= params.delta {

@@ -35,7 +35,7 @@ impl Default for ScreenkhornParams {
 /// Indices of the `keep` largest values of `score`.
 fn top_indices(score: &[f64], keep: usize) -> Vec<usize> {
     let mut idx: Vec<usize> = (0..score.len()).collect();
-    idx.sort_by(|&i, &j| score[j].partial_cmp(&score[i]).unwrap());
+    idx.sort_by(|&i, &j| score[j].total_cmp(&score[i]));
     let mut out = idx[..keep.min(score.len())].to_vec();
     out.sort_unstable();
     out

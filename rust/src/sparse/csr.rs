@@ -70,7 +70,7 @@ impl CsrMatrix {
                 // Duplicate (row, col): accumulate the kernel value
                 // (with-replacement estimators sum repeated draws); the
                 // ground cost is identical by construction.
-                *kernel.last_mut().unwrap() += t.kernel;
+                *kernel.last_mut().expect("a duplicate always follows a pushed entry") += t.kernel;
                 continue;
             }
             col_idx.push(t.col as u32);

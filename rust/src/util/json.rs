@@ -208,7 +208,8 @@ impl<'a> Parser<'a> {
         ) {
             self.pos += 1;
         }
-        let s = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        let s = std::str::from_utf8(&self.bytes[start..self.pos])
+            .map_err(|_| format!("non-ASCII bytes in number at byte {start}"))?;
         s.parse::<f64>().map(Json::Num).map_err(|e| format!("bad number '{s}': {e}"))
     }
 
@@ -252,7 +253,7 @@ impl<'a> Parser<'a> {
                     // Consume one UTF-8 char.
                     let rest = std::str::from_utf8(&self.bytes[self.pos..])
                         .map_err(|_| "invalid utf-8")?;
-                    let c = rest.chars().next().unwrap();
+                    let c = rest.chars().next().ok_or("unterminated string")?;
                     out.push(c);
                     self.pos += c.len_utf8();
                 }

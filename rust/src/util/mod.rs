@@ -1,5 +1,7 @@
-//! Small utilities: a dependency-free JSON writer for experiment output
-//! and a minimal JSON reader for the artifact manifest.
+//! Small utilities: a dependency-free JSON writer for experiment
+//! output, a minimal JSON reader for the artifact manifest, and
+//! poison-recovering lock helpers for the worker paths.
 
 pub mod json;
+pub mod sync;
 pub mod table;

@@ -1,0 +1,89 @@
+//! Poison-recovering synchronization helpers shared by the coordinator
+//! shards, the worker pool, and the artifact cache.
+//!
+//! ## Why recovering a poisoned lock is sound here
+//!
+//! `std`'s mutex poisoning exists to stop a thread from observing state
+//! that a panicking critical section left half-mutated. Every mutex
+//! that goes through these helpers holds state whose critical sections
+//! are panic-free by construction: queue push/pop, counter bumps, and
+//! map slot insert/remove — never user code, never a solver, never a
+//! kernel build (the artifact cache runs builds OUTSIDE its map lock by
+//! design). A poisoned flag therefore never indicates a broken
+//! invariant; it only records that some OTHER thread panicked while it
+//! happened to hold the guard (e.g. an assert in a test worker). Before
+//! these helpers, that one panic cascaded: every subsequent
+//! `.lock().unwrap()` — including ones running inside `Drop` during
+//! unwinding — double-panicked with a confusing `PoisonError`, aborting
+//! the process and burying the original failure. Recovering the guard
+//! keeps the first panic the only panic.
+//!
+//! The contract-lint rule `lock-unwrap` (see [`crate::lint`]) rejects
+//! bare `.lock().unwrap()` in the coordinator/pool/engine worker paths
+//! so new call sites go through here.
+
+use std::sync::{Condvar, Mutex, MutexGuard};
+use std::time::Duration;
+
+/// Lock `mutex`, recovering the guard if a previous holder panicked.
+///
+/// See the module docs for why recovery is sound for the state guarded
+/// by this crate's mutexes.
+pub fn lock_unpoisoned<T>(mutex: &Mutex<T>) -> MutexGuard<'_, T> {
+    mutex.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Block on `cond` with `guard`, recovering the reacquired guard if the
+/// mutex was poisoned while this thread was parked.
+pub fn wait_unpoisoned<'a, T>(cond: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cond.wait(guard).unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Block on `cond` for at most `timeout`, recovering the reacquired
+/// guard if the mutex was poisoned while this thread was parked. The
+/// timed-out flag is intentionally dropped: every caller re-checks its
+/// predicate after waking regardless of why it woke.
+pub fn wait_timeout_unpoisoned<'a, T>(
+    cond: &Condvar,
+    guard: MutexGuard<'a, T>,
+    timeout: Duration,
+) -> MutexGuard<'a, T> {
+    match cond.wait_timeout(guard, timeout) {
+        Ok((guard, _timed_out)) => guard,
+        Err(poisoned) => poisoned.into_inner().0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn lock_unpoisoned_recovers_after_a_panicking_holder() {
+        let shared = Arc::new(Mutex::new(vec![1u32]));
+        let panicker = {
+            let shared = Arc::clone(&shared);
+            std::thread::spawn(move || {
+                let _guard = lock_unpoisoned(&shared);
+                panic!("poison the lock");
+            })
+        };
+        assert!(panicker.join().is_err());
+        assert!(shared.lock().is_err(), "the mutex must actually be poisoned");
+        // A bare `.lock().unwrap()` would double-panic here; the helper
+        // hands back the (structurally intact) state.
+        let mut guard = lock_unpoisoned(&shared);
+        guard.push(2);
+        assert_eq!(*guard, vec![1, 2]);
+    }
+
+    #[test]
+    fn wait_timeout_unpoisoned_times_out_normally() {
+        let mutex = Mutex::new(0u32);
+        let cond = Condvar::new();
+        let guard = lock_unpoisoned(&mutex);
+        let guard = wait_timeout_unpoisoned(&cond, guard, Duration::from_millis(5));
+        assert_eq!(*guard, 0);
+    }
+}

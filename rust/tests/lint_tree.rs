@@ -1,0 +1,36 @@
+//! Tree-level contract-lint gate: the shipped source must lint clean
+//! under the committed `lint.toml`, mirroring what `repro lint` (and
+//! the CI lint job) runs. A regression that trips any rule in
+//! `spar_sink::lint::RULES` fails `cargo test` before CI even gets to
+//! the dedicated lint step.
+
+use spar_sink::lint::{lint_source, lint_tree, LintConfig};
+use std::path::Path;
+
+fn committed_config(manifest: &Path) -> LintConfig {
+    match std::fs::read_to_string(manifest.join("../lint.toml")) {
+        Ok(text) => LintConfig::parse(&text).expect("committed lint.toml parses"),
+        Err(_) => LintConfig::empty(),
+    }
+}
+
+#[test]
+fn shipped_tree_lints_clean() {
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let findings = lint_tree(&manifest.join("src"), &committed_config(manifest))
+        .expect("tree walk succeeds");
+    assert!(findings.is_empty(), "contract-lint findings on the shipped tree:\n{findings:#?}");
+}
+
+#[test]
+fn fixture_corpus_is_skipped_by_the_walk_but_fires_directly() {
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let fixtures = manifest.join("src/lint/fixtures");
+    assert!(fixtures.join("budget_bad.rs").is_file(), "fixture corpus missing");
+    // `shipped_tree_lints_clean` above passes even though the fixture
+    // files under src/ contain seeded violations — because the walk
+    // skips lint/fixtures/. Linting one directly must still fire.
+    let bad = std::fs::read_to_string(fixtures.join("lock_bad.rs")).expect("fixture readable");
+    let findings = lint_source("pool/fixture.rs", &bad, &LintConfig::empty());
+    assert!(!findings.is_empty(), "seeded fixture must fire when linted directly");
+}
