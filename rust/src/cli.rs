@@ -120,6 +120,21 @@ pub fn usage() -> String {
              clamp to the worker count), --no-steal disables work\n\
              stealing — batches are routed to shards by their cost\n\
              fingerprint, so placement never changes results\n\
+       serve --port P [--addr A] [--workers W] [--shards S] [--no-steal]\n\
+             [--duration SECS]\n\
+             gateway mode: serve the coordinator over HTTP/1.1 instead of\n\
+             running the echo demo (default addr 127.0.0.1, port 8517;\n\
+             --port 0 lets the OS pick). Endpoints: POST /solve and\n\
+             POST /barycenter take JSON jobs and answer the solved result\n\
+             (bitwise-identical to an in-process submission), GET /metrics\n\
+             serves the Prometheus text exposition (spar_sink_* families\n\
+             incl. per-shard and cache gauges), GET /healthz answers\n\
+             200 ok / 503 draining. Admission control instead of stalls:\n\
+             a full submission queue answers 429 Too Many Requests with\n\
+             retry-after, the connection cap answers 503. --duration SECS\n\
+             drains after SECS (in-flight jobs complete, new connections\n\
+             are refused) and prints the final metrics; default runs\n\
+             until killed\n\
        bench coordinator [--workers W] [--shards N] [--size G] [--frames F]\n\
              [--no-steal] [--out FILE]\n\
              sharded-service throughput/latency on the echocardiogram\n\

@@ -260,6 +260,233 @@ impl MetricsSnapshot {
         }
         out
     }
+
+    /// Prometheus text-exposition rendering of the snapshot (what the
+    /// gateway's `/metrics` endpoint serves).
+    ///
+    /// Conventions: every family is prefixed `spar_sink_`, counters end
+    /// in `_total` and gauges do not, durations are seconds
+    /// (`f64::to_string` — shortest round-trip, so scrapes preserve the
+    /// exact values), per-shard samples carry a `{shard="i"}` label,
+    /// per-method escalation counters a `{method="name"}` label, and
+    /// latency stats a `{stat="…"}` label. Output is deterministic for
+    /// a given snapshot — fixed family order, shards in index order,
+    /// escalations in registry order — and pinned verbatim by the
+    /// golden test below.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        counter_family(
+            &mut out,
+            "spar_sink_jobs_submitted_total",
+            "Jobs accepted into the submission queue.",
+            &[(String::new(), self.submitted as f64)],
+        );
+        counter_family(
+            &mut out,
+            "spar_sink_jobs_completed_total",
+            "Jobs completed successfully.",
+            &[(String::new(), self.completed as f64)],
+        );
+        counter_family(
+            &mut out,
+            "spar_sink_jobs_failed_total",
+            "Jobs that returned a per-job error.",
+            &[(String::new(), self.failed as f64)],
+        );
+        counter_family(
+            &mut out,
+            "spar_sink_batches_total",
+            "Batches flushed by the batcher.",
+            &[(String::new(), self.batches as f64)],
+        );
+        gauge_family(
+            &mut out,
+            "spar_sink_job_latency_seconds",
+            "End-to-end job latency (queue + solve); quantiles are histogram bucket upper bounds.",
+            &[
+                ("{stat=\"mean\"}".to_string(), self.mean_latency.as_secs_f64()),
+                ("{stat=\"p50\"}".to_string(), self.p50_latency.as_secs_f64()),
+                ("{stat=\"p99\"}".to_string(), self.p99_latency.as_secs_f64()),
+                ("{stat=\"max\"}".to_string(), self.max_latency.as_secs_f64()),
+            ],
+        );
+        gauge_family(
+            &mut out,
+            "spar_sink_throughput_jobs_per_second",
+            "Completed jobs per second over the service lifetime.",
+            &[(String::new(), self.throughput)],
+        );
+        let escalations: Vec<(String, f64)> = self
+            .log_escalations
+            .iter()
+            .map(|(method, count)| (format!("{{method=\"{method}\"}}"), *count as f64))
+            .collect();
+        counter_family(
+            &mut out,
+            "spar_sink_log_escalations_total",
+            "Completed jobs the Auto policy escalated to the log-domain engine, by method.",
+            &escalations,
+        );
+        gauge_family(
+            &mut out,
+            "spar_sink_log_escalation_rate",
+            "Escalated jobs / completed jobs.",
+            &[(String::new(), self.log_escalation_rate)],
+        );
+
+        let shard_samples = |value: fn(&ShardStats) -> f64| -> Vec<(String, f64)> {
+            self.shards
+                .iter()
+                .map(|s| (format!("{{shard=\"{}\"}}", s.shard), value(s)))
+                .collect()
+        };
+        gauge_family(
+            &mut out,
+            "spar_sink_shard_depth",
+            "Batches currently queued on the shard.",
+            &shard_samples(|s| s.depth as f64),
+        );
+        gauge_family(
+            &mut out,
+            "spar_sink_shard_queued_max",
+            "Peak queue depth observed on the shard since start.",
+            &shard_samples(|s| s.queued_max as f64),
+        );
+        gauge_family(
+            &mut out,
+            "spar_sink_shard_busy",
+            "Workers of the shard currently executing a batch.",
+            &shard_samples(|s| s.busy as f64),
+        );
+        counter_family(
+            &mut out,
+            "spar_sink_shard_routed_total",
+            "Batches the scheduler routed to the shard.",
+            &shard_samples(|s| s.routed as f64),
+        );
+        counter_family(
+            &mut out,
+            "spar_sink_shard_stolen_total",
+            "Batches the shard's workers stole from other shards.",
+            &shard_samples(|s| s.stolen as f64),
+        );
+        counter_family(
+            &mut out,
+            "spar_sink_shard_stolen_from_total",
+            "Batches other shards' workers stole from this shard's queue.",
+            &shard_samples(|s| s.stolen_from as f64),
+        );
+        counter_family(
+            &mut out,
+            "spar_sink_shard_completed_total",
+            "Jobs completed by the shard's workers.",
+            &shard_samples(|s| s.completed as f64),
+        );
+        counter_family(
+            &mut out,
+            "spar_sink_shard_failed_total",
+            "Jobs failed on the shard's workers.",
+            &shard_samples(|s| s.failed as f64),
+        );
+        gauge_family(
+            &mut out,
+            "spar_sink_shard_p99_latency_seconds",
+            "99th-percentile latency of jobs executed by the shard's workers.",
+            &shard_samples(|s| s.p99_latency.as_secs_f64()),
+        );
+
+        counter_family(
+            &mut out,
+            "spar_sink_cache_hits_total",
+            "Artifact-cache lookups served from a resident or in-flight build.",
+            &[(String::new(), self.cache.hits as f64)],
+        );
+        counter_family(
+            &mut out,
+            "spar_sink_cache_misses_total",
+            "Artifact-cache lookups that had to build.",
+            &[(String::new(), self.cache.misses as f64)],
+        );
+        counter_family(
+            &mut out,
+            "spar_sink_cache_evictions_total",
+            "Artifacts dropped to respect the byte budget.",
+            &[(String::new(), self.cache.evictions as f64)],
+        );
+        gauge_family(
+            &mut out,
+            "spar_sink_cache_entries",
+            "Resident artifacts.",
+            &[(String::new(), self.cache.entries as f64)],
+        );
+        gauge_family(
+            &mut out,
+            "spar_sink_cache_building",
+            "In-flight single-flight artifact builds.",
+            &[(String::new(), self.cache.building as f64)],
+        );
+        gauge_family(
+            &mut out,
+            "spar_sink_cache_bytes",
+            "Resident artifact bytes.",
+            &[(String::new(), self.cache.bytes as f64)],
+        );
+        gauge_family(
+            &mut out,
+            "spar_sink_cache_byte_budget_bytes",
+            "Configured artifact-cache byte budget.",
+            &[(String::new(), self.cache.byte_budget as f64)],
+        );
+        out
+    }
+}
+
+/// Append one `# HELP`/`# TYPE` header plus one sample line per
+/// `(labels, value)` pair; `labels` is either empty or a pre-rendered
+/// `{name="value"}` block. A family with no samples still renders its
+/// headers, so the exposition's shape is scrape-stable.
+fn prom_family(out: &mut String, name: &str, kind: &str, help: &str, samples: &[(String, f64)]) {
+    out.push_str("# HELP ");
+    out.push_str(name);
+    out.push(' ');
+    out.push_str(help);
+    out.push_str("\n# TYPE ");
+    out.push_str(name);
+    out.push(' ');
+    out.push_str(kind);
+    out.push('\n');
+    for (labels, value) in samples {
+        out.push_str(name);
+        out.push_str(labels);
+        out.push(' ');
+        out.push_str(&prom_value(*value));
+        out.push('\n');
+    }
+}
+
+fn counter_family(out: &mut String, name: &str, help: &str, samples: &[(String, f64)]) {
+    prom_family(out, name, "counter", help, samples);
+}
+
+fn gauge_family(out: &mut String, name: &str, help: &str, samples: &[(String, f64)]) {
+    prom_family(out, name, "gauge", help, samples);
+}
+
+/// Prometheus sample formatting: integers without a trailing `.0`
+/// (counter idiom), everything else via `f64`'s shortest round-trip
+/// `Display`, non-finite as the spec's literals.
+fn prom_value(x: f64) -> String {
+    if x.is_nan() {
+        "NaN".to_string()
+    } else if x == f64::INFINITY {
+        "+Inf".to_string()
+    } else if x == f64::NEG_INFINITY {
+        "-Inf".to_string()
+    } else if x == x.trunc() && x.abs() < 1e15 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x}")
+    }
 }
 
 #[cfg(test)]
@@ -348,6 +575,191 @@ mod tests {
         assert!(line.contains("routed 7"), "{line}");
         assert!(line.contains("stolen 4 (lost 2)"), "{line}");
         assert!(!line.contains('\n'), "{line}");
+    }
+
+    fn synthetic_snapshot() -> MetricsSnapshot {
+        MetricsSnapshot {
+            submitted: 8,
+            completed: 7,
+            failed: 1,
+            batches: 3,
+            mean_latency: Duration::from_micros(1500),
+            p50_latency: Duration::from_micros(1280),
+            p99_latency: Duration::from_micros(5120),
+            max_latency: Duration::from_millis(6),
+            throughput: 123.5,
+            log_escalations: vec![("spar-sink", 2)],
+            log_escalation_rate: 0.25,
+            shards: vec![
+                ShardStats {
+                    shard: 0,
+                    depth: 2,
+                    queued_max: 5,
+                    busy: 1,
+                    routed: 4,
+                    stolen: 3,
+                    stolen_from: 1,
+                    completed: 6,
+                    failed: 1,
+                    p99_latency: Duration::from_millis(4),
+                },
+                ShardStats {
+                    shard: 1,
+                    depth: 0,
+                    queued_max: 2,
+                    busy: 0,
+                    routed: 2,
+                    stolen: 0,
+                    stolen_from: 3,
+                    completed: 1,
+                    failed: 0,
+                    p99_latency: Duration::from_micros(500),
+                },
+            ],
+            cache: CacheStats {
+                hits: 10,
+                misses: 2,
+                evictions: 1,
+                entries: 1,
+                building: 1,
+                bytes: 2048,
+                byte_budget: 4096,
+            },
+        }
+    }
+
+    /// The golden: the full exposition for a synthetic snapshot, pinned
+    /// verbatim. Metric naming (`spar_sink_` prefix, `_total` suffix on
+    /// counters), `# HELP`/`# TYPE` lines, counter-vs-gauge kinds,
+    /// per-shard `{shard="i"}` and per-method `{method="…"}` labels,
+    /// and second-unit duration formatting are all load-bearing for
+    /// scrapers — any change here is a dashboard-breaking change.
+    #[test]
+    fn prometheus_rendering_matches_the_golden() {
+        let expected = r#"# HELP spar_sink_jobs_submitted_total Jobs accepted into the submission queue.
+# TYPE spar_sink_jobs_submitted_total counter
+spar_sink_jobs_submitted_total 8
+# HELP spar_sink_jobs_completed_total Jobs completed successfully.
+# TYPE spar_sink_jobs_completed_total counter
+spar_sink_jobs_completed_total 7
+# HELP spar_sink_jobs_failed_total Jobs that returned a per-job error.
+# TYPE spar_sink_jobs_failed_total counter
+spar_sink_jobs_failed_total 1
+# HELP spar_sink_batches_total Batches flushed by the batcher.
+# TYPE spar_sink_batches_total counter
+spar_sink_batches_total 3
+# HELP spar_sink_job_latency_seconds End-to-end job latency (queue + solve); quantiles are histogram bucket upper bounds.
+# TYPE spar_sink_job_latency_seconds gauge
+spar_sink_job_latency_seconds{stat="mean"} 0.0015
+spar_sink_job_latency_seconds{stat="p50"} 0.00128
+spar_sink_job_latency_seconds{stat="p99"} 0.00512
+spar_sink_job_latency_seconds{stat="max"} 0.006
+# HELP spar_sink_throughput_jobs_per_second Completed jobs per second over the service lifetime.
+# TYPE spar_sink_throughput_jobs_per_second gauge
+spar_sink_throughput_jobs_per_second 123.5
+# HELP spar_sink_log_escalations_total Completed jobs the Auto policy escalated to the log-domain engine, by method.
+# TYPE spar_sink_log_escalations_total counter
+spar_sink_log_escalations_total{method="spar-sink"} 2
+# HELP spar_sink_log_escalation_rate Escalated jobs / completed jobs.
+# TYPE spar_sink_log_escalation_rate gauge
+spar_sink_log_escalation_rate 0.25
+# HELP spar_sink_shard_depth Batches currently queued on the shard.
+# TYPE spar_sink_shard_depth gauge
+spar_sink_shard_depth{shard="0"} 2
+spar_sink_shard_depth{shard="1"} 0
+# HELP spar_sink_shard_queued_max Peak queue depth observed on the shard since start.
+# TYPE spar_sink_shard_queued_max gauge
+spar_sink_shard_queued_max{shard="0"} 5
+spar_sink_shard_queued_max{shard="1"} 2
+# HELP spar_sink_shard_busy Workers of the shard currently executing a batch.
+# TYPE spar_sink_shard_busy gauge
+spar_sink_shard_busy{shard="0"} 1
+spar_sink_shard_busy{shard="1"} 0
+# HELP spar_sink_shard_routed_total Batches the scheduler routed to the shard.
+# TYPE spar_sink_shard_routed_total counter
+spar_sink_shard_routed_total{shard="0"} 4
+spar_sink_shard_routed_total{shard="1"} 2
+# HELP spar_sink_shard_stolen_total Batches the shard's workers stole from other shards.
+# TYPE spar_sink_shard_stolen_total counter
+spar_sink_shard_stolen_total{shard="0"} 3
+spar_sink_shard_stolen_total{shard="1"} 0
+# HELP spar_sink_shard_stolen_from_total Batches other shards' workers stole from this shard's queue.
+# TYPE spar_sink_shard_stolen_from_total counter
+spar_sink_shard_stolen_from_total{shard="0"} 1
+spar_sink_shard_stolen_from_total{shard="1"} 3
+# HELP spar_sink_shard_completed_total Jobs completed by the shard's workers.
+# TYPE spar_sink_shard_completed_total counter
+spar_sink_shard_completed_total{shard="0"} 6
+spar_sink_shard_completed_total{shard="1"} 1
+# HELP spar_sink_shard_failed_total Jobs failed on the shard's workers.
+# TYPE spar_sink_shard_failed_total counter
+spar_sink_shard_failed_total{shard="0"} 1
+spar_sink_shard_failed_total{shard="1"} 0
+# HELP spar_sink_shard_p99_latency_seconds 99th-percentile latency of jobs executed by the shard's workers.
+# TYPE spar_sink_shard_p99_latency_seconds gauge
+spar_sink_shard_p99_latency_seconds{shard="0"} 0.004
+spar_sink_shard_p99_latency_seconds{shard="1"} 0.0005
+# HELP spar_sink_cache_hits_total Artifact-cache lookups served from a resident or in-flight build.
+# TYPE spar_sink_cache_hits_total counter
+spar_sink_cache_hits_total 10
+# HELP spar_sink_cache_misses_total Artifact-cache lookups that had to build.
+# TYPE spar_sink_cache_misses_total counter
+spar_sink_cache_misses_total 2
+# HELP spar_sink_cache_evictions_total Artifacts dropped to respect the byte budget.
+# TYPE spar_sink_cache_evictions_total counter
+spar_sink_cache_evictions_total 1
+# HELP spar_sink_cache_entries Resident artifacts.
+# TYPE spar_sink_cache_entries gauge
+spar_sink_cache_entries 1
+# HELP spar_sink_cache_building In-flight single-flight artifact builds.
+# TYPE spar_sink_cache_building gauge
+spar_sink_cache_building 1
+# HELP spar_sink_cache_bytes Resident artifact bytes.
+# TYPE spar_sink_cache_bytes gauge
+spar_sink_cache_bytes 2048
+# HELP spar_sink_cache_byte_budget_bytes Configured artifact-cache byte budget.
+# TYPE spar_sink_cache_byte_budget_bytes gauge
+spar_sink_cache_byte_budget_bytes 4096
+"#;
+        let rendered = synthetic_snapshot().render_prometheus();
+        // On mismatch, point at the first diverging line instead of
+        // dumping two 90-line blobs.
+        for (i, (got, want)) in rendered.lines().zip(expected.lines()).enumerate() {
+            assert_eq!(got, want, "first divergence at exposition line {}", i + 1);
+        }
+        assert_eq!(rendered, expected);
+    }
+
+    #[test]
+    fn prometheus_rendering_with_no_shards_or_escalations_keeps_headers() {
+        // Empty per-shard/per-method families still emit HELP/TYPE so
+        // the exposition's family set is scrape-stable from the first
+        // request on.
+        let snapshot = MetricsSnapshot {
+            shards: Vec::new(),
+            log_escalations: Vec::new(),
+            ..synthetic_snapshot()
+        };
+        let text = snapshot.render_prometheus();
+        assert!(text.contains("# TYPE spar_sink_shard_depth gauge\n# HELP"), "{text}");
+        assert!(
+            text.contains("# TYPE spar_sink_log_escalations_total counter\n# HELP"),
+            "{text}"
+        );
+        assert!(!text.contains("{shard="), "{text}");
+    }
+
+    #[test]
+    fn prometheus_values_format_like_the_spec() {
+        assert_eq!(prom_value(0.0), "0");
+        assert_eq!(prom_value(42.0), "42");
+        assert_eq!(prom_value(0.0015), "0.0015");
+        assert_eq!(prom_value(123.5), "123.5");
+        assert_eq!(prom_value(f64::NAN), "NaN");
+        assert_eq!(prom_value(f64::INFINITY), "+Inf");
+        assert_eq!(prom_value(f64::NEG_INFINITY), "-Inf");
+        // Above the exact-integer window the float path takes over.
+        assert_eq!(prom_value(1e18), "1000000000000000000");
     }
 
     #[test]

@@ -34,7 +34,11 @@
 //! log-escalation counters.
 //!
 //! * The submission queue is bounded: `submit` blocks once `queue_cap`
-//!   jobs are in flight; the per-shard queues are bounded too, so
+//!   jobs are in flight, while the non-blocking
+//!   [`DistanceService::try_submit`] refuses with
+//!   [`SubmitRejection::Busy`] instead — the admission-control path
+//!   the HTTP gateway in [`crate::net`] surfaces as
+//!   `429 Too Many Requests`. The per-shard queues are bounded too, so
 //!   backpressure propagates shard → scheduler → `submit` instead of
 //!   growing memory.
 //! * The batcher flushes a batch when it reaches `max_batch` jobs or
@@ -61,4 +65,4 @@ pub use jobs::{
     BarycenterJob, BarycenterResult, DistanceJob, DistanceResult, Measure, Method, ProblemSpec,
 };
 pub use metrics::{LatencyHistogram, MetricsSnapshot, ShardStats};
-pub use service::{CoordinatorConfig, DistanceService};
+pub use service::{CoordinatorConfig, DistanceService, SubmitRejection};

@@ -22,7 +22,7 @@
 //! `thread_determinism`).
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
@@ -122,6 +122,36 @@ impl CoordinatorConfig {
     }
 }
 
+/// Why a non-blocking submission ([`DistanceService::try_submit`] /
+/// [`DistanceService::try_submit_barycenter`]) was refused. The HTTP
+/// gateway maps `Busy` to `429 Too Many Requests` and `Stopped` to
+/// `503 Service Unavailable`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubmitRejection {
+    /// `queue_cap` jobs are already in flight — the blocking
+    /// [`DistanceService::submit`] would park. Transient: back off and
+    /// retry.
+    Busy,
+    /// The service is draining ([`DistanceService::begin_drain`]) or
+    /// its submission channel is gone; no retry will succeed.
+    Stopped,
+}
+
+impl std::fmt::Display for SubmitRejection {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitRejection::Busy => write!(f, "submission queue at capacity (backpressure)"),
+            SubmitRejection::Stopped => write!(f, "service is draining or stopped"),
+        }
+    }
+}
+
+impl From<SubmitRejection> for Error {
+    fn from(rejection: SubmitRejection) -> Self {
+        Error::Coordinator(rejection.to_string())
+    }
+}
+
 /// Counters and the artifact cache shared by every service thread.
 /// Latency lives per shard (see [`Shard`]); the snapshot merges the
 /// per-shard histograms.
@@ -206,6 +236,19 @@ impl DistanceService {
     }
 
     fn enqueue(&self, queued: QueuedJob) -> Result<()> {
+        // Checked BEFORE touching the channel: once a drain (or
+        // shutdown) has begun, a blocking `send` could park forever on
+        // a queue nobody will ever pop again, and a send on the closed
+        // channel would surface as the misleading "queue closed". A
+        // loud refusal is the contract instead — never block, never
+        // panic (pinned by `submission_after_drain_fails_loudly`).
+        if self.shared.stopping.load(Ordering::SeqCst) {
+            return Err(Error::Coordinator(
+                "service is draining: new submissions are refused \
+                 (in-flight jobs still complete)"
+                    .into(),
+            ));
+        }
         self.tx
             .as_ref()
             .ok_or_else(|| Error::Coordinator("service stopped".into()))?
@@ -213,6 +256,25 @@ impl DistanceService {
             .map_err(|_| Error::Coordinator("queue closed".into()))?;
         self.shared.submitted.fetch_add(1, Ordering::Relaxed);
         Ok(())
+    }
+
+    /// Non-blocking [`enqueue`](Self::enqueue): where the blocking path
+    /// parks on a full queue, this refuses with
+    /// [`SubmitRejection::Busy`] — the admission-control primitive the
+    /// HTTP gateway's 429 path is built on.
+    fn try_enqueue(&self, queued: QueuedJob) -> std::result::Result<(), SubmitRejection> {
+        if self.shared.stopping.load(Ordering::SeqCst) {
+            return Err(SubmitRejection::Stopped);
+        }
+        let tx = self.tx.as_ref().ok_or(SubmitRejection::Stopped)?;
+        match tx.try_send(queued) {
+            Ok(()) => {
+                self.shared.submitted.fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            }
+            Err(TrySendError::Full(_)) => Err(SubmitRejection::Busy),
+            Err(TrySendError::Disconnected(_)) => Err(SubmitRejection::Stopped),
+        }
     }
 
     /// Submit a job; blocks when the queue is full (backpressure).
@@ -229,6 +291,49 @@ impl DistanceService {
         let (tx, rx) = mpsc::channel();
         self.enqueue(QueuedJob::Barycenter { job, enqueued: Instant::now(), respond: tx })?;
         Ok(rx)
+    }
+
+    /// Non-blocking [`submit`](Self::submit): refuses instead of
+    /// parking when the bounded submission queue is full
+    /// ([`SubmitRejection::Busy`]) or the service is draining/stopped
+    /// ([`SubmitRejection::Stopped`]). This is the gateway's admission
+    /// control — refuse work that cannot be queued instead of stalling
+    /// the caller's socket.
+    pub fn try_submit(
+        &self,
+        job: DistanceJob,
+    ) -> std::result::Result<Receiver<DistanceResult>, SubmitRejection> {
+        let (tx, rx) = mpsc::channel();
+        self.try_enqueue(QueuedJob::Distance { job, enqueued: Instant::now(), respond: tx })?;
+        Ok(rx)
+    }
+
+    /// Non-blocking [`submit_barycenter`](Self::submit_barycenter);
+    /// same admission semantics as [`try_submit`](Self::try_submit).
+    pub fn try_submit_barycenter(
+        &self,
+        job: BarycenterJob,
+    ) -> std::result::Result<Receiver<BarycenterResult>, SubmitRejection> {
+        let (tx, rx) = mpsc::channel();
+        self.try_enqueue(QueuedJob::Barycenter { job, enqueued: Instant::now(), respond: tx })?;
+        Ok(rx)
+    }
+
+    /// Begin a graceful drain: every subsequent submission — blocking
+    /// or non-blocking, distance or barycenter — returns a loud error
+    /// instead of entering the queue (never blocks, never panics),
+    /// while jobs already accepted keep flowing through the batcher
+    /// and workers and deliver their results on their response
+    /// channels. Call [`shutdown`](Self::shutdown) (or drop the
+    /// service) afterwards to join the threads. Idempotent.
+    pub fn begin_drain(&self) {
+        self.shared.stopping.store(true, Ordering::SeqCst);
+    }
+
+    /// Whether [`begin_drain`](Self::begin_drain) (or a shutdown) has
+    /// been called — new submissions are being refused.
+    pub fn is_draining(&self) -> bool {
+        self.shared.stopping.load(Ordering::SeqCst)
     }
 
     /// Convenience: submit many jobs and wait for all results (order
@@ -1122,5 +1227,122 @@ mod tests {
                 assert_eq!(stolen, 0);
             }
         }
+    }
+
+    #[test]
+    fn submission_after_drain_fails_loudly_without_blocking_or_panicking() {
+        let service = DistanceService::start(CoordinatorConfig {
+            workers: 1,
+            ..Default::default()
+        });
+        // A job accepted before the drain completes normally…
+        let rx = service.submit(job(0, Method::SparSink, 30)).unwrap();
+        assert!(!service.is_draining());
+        service.begin_drain();
+        assert!(service.is_draining());
+        // …while every post-drain submission — blocking and
+        // non-blocking, both job shapes — is refused loudly. A hang
+        // here would time the test out; a panic would fail it.
+        let err = service.submit(job(1, Method::SparSink, 30)).err().expect("must refuse");
+        assert!(err.to_string().contains("draining"), "{err}");
+        let err = service
+            .submit_barycenter(bary_job(2, Method::SparIbp, 0.01, None))
+            .err()
+            .expect("must refuse");
+        assert!(err.to_string().contains("draining"), "{err}");
+        assert_eq!(
+            service.try_submit(job(3, Method::SparSink, 30)).err(),
+            Some(SubmitRejection::Stopped)
+        );
+        assert_eq!(
+            service.try_submit_barycenter(bary_job(4, Method::SparIbp, 0.01, None)).err(),
+            Some(SubmitRejection::Stopped)
+        );
+        // The in-flight job still delivers its result through the
+        // drain, and only it was ever counted as submitted.
+        let r = rx.recv().unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        let m = service.shutdown();
+        assert_eq!(m.submitted, 1);
+        assert_eq!(m.completed, 1);
+    }
+
+    #[test]
+    fn submission_after_shutdown_path_is_the_same_loud_error() {
+        // `Drop`/`shutdown` route through the same stopping flag: a
+        // service whose threads are being stopped behaves exactly like
+        // a drained one (this used to hit the closed channel instead).
+        let service = DistanceService::start(CoordinatorConfig {
+            workers: 1,
+            ..Default::default()
+        });
+        service.begin_drain();
+        let rejection =
+            service.try_submit(job(0, Method::SparSink, 20)).err().expect("must refuse");
+        assert_eq!(rejection, SubmitRejection::Stopped);
+        // The Error conversion used by blocking callers carries the
+        // same human-readable reason.
+        assert!(
+            Error::from(rejection).to_string().contains("draining or stopped"),
+            "{}",
+            Error::from(rejection)
+        );
+        let m = service.shutdown();
+        assert_eq!(m.submitted, 0);
+    }
+
+    #[test]
+    fn try_submit_refuses_busy_when_queue_cap_is_saturated() {
+        // Stalled-worker fixture: one worker, every queue bound at 1
+        // batch, and jobs slow enough (δ = 0 keeps dense Sinkhorn
+        // iterating) that a burst outruns the pipeline. Total capacity
+        // is a handful of jobs (submission channel + batcher in hand +
+        // shard queue + the one executing), so a fast burst of 64 MUST
+        // see `Busy` — and must never block doing so.
+        let service = DistanceService::start(CoordinatorConfig {
+            workers: 1,
+            shards: 1,
+            queue_cap: 1,
+            max_batch: 1,
+            batch_window: Duration::from_millis(1),
+            ..Default::default()
+        });
+        let slow = |id: u64| DistanceJob {
+            id,
+            source: toy_measure(64, 301 + id, 1.0),
+            target: toy_measure(64, 401 + id, 1.2),
+            method: Method::Sinkhorn,
+            spec: ProblemSpec {
+                eta: 3.0,
+                eps: 0.05,
+                delta: 0.0,
+                max_iters: 20_000,
+                ..Default::default()
+            },
+            seed: id,
+        };
+        let mut accepted = Vec::new();
+        let mut saw_busy = false;
+        for id in 0..64 {
+            match service.try_submit(slow(id)) {
+                Ok(rx) => accepted.push(rx),
+                Err(SubmitRejection::Busy) => {
+                    saw_busy = true;
+                    break;
+                }
+                Err(SubmitRejection::Stopped) => panic!("service is running"),
+            }
+        }
+        assert!(saw_busy, "a 64-job burst must saturate a capacity-1 pipeline");
+        assert!(!accepted.is_empty(), "the first try_submit lands in the empty queue");
+        // Backpressure refused the burst without wedging anything:
+        // every accepted job still completes.
+        for rx in accepted {
+            let r = rx.recv().unwrap();
+            assert!(r.error.is_none(), "{:?}", r.error);
+        }
+        let m = service.shutdown();
+        assert_eq!(m.failed, 0);
+        assert_eq!(m.submitted, m.completed);
     }
 }

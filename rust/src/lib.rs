@@ -28,7 +28,10 @@
 //!   [`api::solve_batch`] — warm solves are bitwise-identical to cold
 //!   ones. On top sit the batched distance-and-barycenter
 //!   [`coordinator`] (whose workers share artifacts through the same
-//!   cache and report its gauges in `MetricsSnapshot`), the
+//!   cache and report its gauges in `MetricsSnapshot`), the serve-mode
+//!   HTTP gateway ([`net`]: zero-dependency HTTP/1.1 listener with
+//!   admission control — full queues answer 429 instead of stalling —
+//!   plus a Prometheus `/metrics` endpoint and graceful drain), the
 //!   [`experiments`] harness regenerating every figure/table, and
 //!   (behind the `xla` feature) the PJRT runtime executing the
 //!   AOT-compiled L2/L1 artifacts.
@@ -89,6 +92,7 @@ pub mod experiments;
 pub mod linalg;
 pub mod lint;
 pub mod metrics;
+pub mod net;
 pub mod ot;
 pub mod pool;
 pub mod rng;

@@ -1,0 +1,19 @@
+//! Boundary fixture for the wall-clock rule: serving-layer code that
+//! legitimately reads clocks and machine shape. Under a `net/` path
+//! this must lint clean — timeouts, accept-loop polls, and
+//! thread-count defaults are operational concerns that cannot affect
+//! any solver result. The SAME text under `engine/` must fire once per
+//! token line: inside a result-affecting module these reads make
+//! outputs depend on when/where the run happened.
+
+use std::time::Instant;
+
+/// Stamp the start of a connection, for read-timeout enforcement.
+pub fn connection_started() -> Instant {
+    Instant::now()
+}
+
+/// Default handler-thread cap: one per core, floor of 4.
+pub fn default_connection_cap() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}

@@ -205,6 +205,18 @@ mod tests {
     }
 
     #[test]
+    fn fixture_wallclock_is_legal_in_net_but_not_engine() {
+        // The wall-clock rule stops at the serving boundary: the same
+        // timeout/poll code is clean under net/ (operational, cannot
+        // affect results) and fires line-for-line under engine/.
+        let src = include_str!("fixtures/wallclock_net_ok.rs");
+        let in_net = lint_fixture("net/fixture.rs", src);
+        assert!(in_net.is_empty(), "{in_net:?}");
+        let in_engine = lint_fixture("engine/fixture.rs", src);
+        assert_eq!(rules_hit(&in_engine), vec!["wall-clock", "wall-clock"]);
+    }
+
+    #[test]
     fn fixture_lock_bad_fires_and_helper_twin_passes() {
         let bad = lint_fixture("pool/fixture.rs", include_str!("fixtures/lock_bad.rs"));
         assert_eq!(rules_hit(&bad), vec!["lock-unwrap", "lock-unwrap"]);

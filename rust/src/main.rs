@@ -12,7 +12,7 @@ use spar_sink::experiments::{self, Profile};
 
 const VALUE_KEYS: &[&str] = &[
     "out", "n", "eps", "lambda", "method", "seed", "videos", "frames", "workers", "problem", "s",
-    "d", "backend", "threshold", "shards", "size", "root", "config",
+    "d", "backend", "threshold", "shards", "size", "root", "config", "port", "addr", "duration",
 ];
 
 fn main() {
@@ -210,6 +210,11 @@ fn method_names() -> String {
 }
 
 fn cmd_serve(args: &Args) -> i32 {
+    // `--port`/`--addr` switch serve from the self-driving echo demo to
+    // the HTTP gateway: bind a listener and wait for remote jobs.
+    if args.get("port").is_some() || args.get("addr").is_some() {
+        return cmd_serve_gateway(args);
+    }
     use spar_sink::api::parse_backend;
     use spar_sink::coordinator::{
         CoordinatorConfig, DistanceJob, DistanceService, Measure, Method, ProblemSpec,
@@ -329,6 +334,56 @@ fn cmd_serve(args: &Args) -> i32 {
     }
     println!("total wall time: {:?}", t0.elapsed());
     println!("{}", service.shutdown().render());
+    0
+}
+
+/// `serve --port P [--addr A]`: the HTTP gateway over the coordinator.
+/// Blocks forever by default; `--duration SECS` runs a bounded session
+/// (drain + metrics dump at the end), which is how scripted smoke tests
+/// drive it.
+fn cmd_serve_gateway(args: &Args) -> i32 {
+    use spar_sink::coordinator::{CoordinatorConfig, DistanceService};
+    use spar_sink::net::{Gateway, GatewayConfig};
+    use std::sync::Arc;
+
+    let workers: usize = args.get_parsed("workers", spar_sink::pool::num_threads().min(8));
+    let shards: usize = args.get_parsed("shards", 0);
+    let steal = !args.flag("no-steal");
+    let port: u16 = args.get_parsed("port", 8517);
+    let addr = args.get("addr").unwrap_or("127.0.0.1").to_string();
+    let duration: u64 = args.get_parsed("duration", 0);
+
+    let config = CoordinatorConfig { workers, shards, steal, ..Default::default() };
+    println!(
+        "starting distance service: {} workers, {} shards (steal {})",
+        config.resolved_workers(),
+        config.resolved_shards(),
+        if steal { "on" } else { "off" }
+    );
+    let service = Arc::new(DistanceService::start(config));
+    let gateway = match Gateway::start(
+        Arc::clone(&service),
+        GatewayConfig { addr, port, ..GatewayConfig::default() },
+    ) {
+        Ok(gateway) => gateway,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    println!("gateway listening on http://{}", gateway.local_addr());
+    println!("endpoints: POST /solve, POST /barycenter, GET /metrics, GET /healthz");
+    println!("admission control: full queue answers 429, connection cap answers 503");
+
+    if duration == 0 {
+        // Serve until killed; the process owns no other work.
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(60));
+        }
+    }
+    std::thread::sleep(std::time::Duration::from_secs(duration));
+    println!("duration elapsed; draining (in-flight jobs complete, new ones are refused)");
+    println!("{}", gateway.shutdown().render());
     0
 }
 

@@ -1,0 +1,458 @@
+//! JSON ⇄ job/result codecs for the gateway.
+//!
+//! Decoding is strict where it matters for determinism: every float
+//! passes through [`crate::util::json`]'s shortest-round-trip parser,
+//! so a job encoded by [`distance_job_json`], posted over the wire, and
+//! decoded here carries bit-identical `f64`s — the foundation of the
+//! gateway's bitwise loopback-parity wall
+//! (`tests/gateway_integration.rs`). Structural errors return a plain
+//! `String` the router turns into a `400` with a JSON error body;
+//! nothing here panics on untrusted input (notably, support/mass
+//! lengths are checked *before* [`Measure::new`], which asserts).
+
+use std::sync::Arc;
+
+use crate::api::parse_backend;
+use crate::coordinator::{BarycenterJob, BarycenterResult, DistanceJob, DistanceResult};
+use crate::coordinator::{Measure, Method, ProblemSpec};
+use crate::solvers::backend::{BackendKind, ScalingBackend};
+use crate::util::json::Json;
+
+/// Decode outcome: `Err` is a client-facing message for the 400 body.
+pub type DecodeResult<T> = std::result::Result<T, String>;
+
+fn field<'a>(obj: &'a Json, key: &str) -> DecodeResult<&'a Json> {
+    obj.get(key).ok_or_else(|| format!("missing field '{key}'"))
+}
+
+fn f64_field(obj: &Json, key: &str) -> DecodeResult<f64> {
+    field(obj, key)?.as_f64().ok_or_else(|| format!("field '{key}' must be a number"))
+}
+
+/// Optional numeric field: absent is `None`, present-but-not-a-number
+/// is an error (silently ignoring a typo'd parameter would change the
+/// solve).
+fn opt_f64(obj: &Json, key: &str) -> DecodeResult<Option<f64>> {
+    match obj.get(key) {
+        None => Ok(None),
+        Some(v) => {
+            Ok(Some(v.as_f64().ok_or_else(|| format!("field '{key}' must be a number"))?))
+        }
+    }
+}
+
+fn vec_f64(v: &Json, what: &str) -> DecodeResult<Vec<f64>> {
+    match v {
+        Json::Arr(items) => items
+            .iter()
+            .map(|x| x.as_f64().ok_or_else(|| format!("{what} must contain only numbers")))
+            .collect(),
+        _ => Err(format!("{what} must be an array of numbers")),
+    }
+}
+
+fn points(v: &Json, what: &str) -> DecodeResult<Vec<Vec<f64>>> {
+    match v {
+        Json::Arr(rows) => {
+            rows.iter().map(|row| vec_f64(row, &format!("each point in {what}"))).collect()
+        }
+        _ => Err(format!("{what} must be an array of points")),
+    }
+}
+
+fn measure(obj: &Json, key: &str) -> DecodeResult<Measure> {
+    let m = field(obj, key)?;
+    let pts = points(field(m, "points")?, &format!("'{key}.points'"))?;
+    let mass = vec_f64(field(m, "mass")?, &format!("'{key}.mass'"))?;
+    if pts.is_empty() {
+        return Err(format!("measure '{key}' must have at least one support point"));
+    }
+    if pts.len() != mass.len() {
+        return Err(format!(
+            "measure '{key}': {} points but {} masses",
+            pts.len(),
+            mass.len()
+        ));
+    }
+    Ok(Measure::new(pts, mass))
+}
+
+fn method_field(obj: &Json, default: Method) -> DecodeResult<Method> {
+    match obj.get("method") {
+        None => Ok(default),
+        Some(v) => {
+            let name = v.as_str().ok_or("field 'method' must be a string")?;
+            Method::parse(name).ok_or_else(|| format!("unknown method '{name}'"))
+        }
+    }
+}
+
+/// Decode an optional `spec` object over [`ProblemSpec::default`]: each
+/// field overrides the Section 6 default it names; unknown backends are
+/// refused by name.
+pub fn decode_spec(v: Option<&Json>) -> DecodeResult<ProblemSpec> {
+    let mut spec = ProblemSpec::default();
+    let Some(v) = v else { return Ok(spec) };
+    if !matches!(v, Json::Obj(_)) {
+        return Err("field 'spec' must be an object".into());
+    }
+    if let Some(x) = opt_f64(v, "lambda")? {
+        spec.lambda = x;
+    }
+    if let Some(x) = opt_f64(v, "eps")? {
+        spec.eps = x;
+    }
+    if let Some(x) = opt_f64(v, "eta")? {
+        spec.eta = x;
+    }
+    if let Some(x) = opt_f64(v, "s_multiplier")? {
+        spec.s_multiplier = x;
+    }
+    if let Some(x) = opt_f64(v, "delta")? {
+        spec.delta = x;
+    }
+    if let Some(x) = opt_f64(v, "max_iters")? {
+        spec.max_iters = x as usize;
+    }
+    if let Some(name) = v.get("backend") {
+        let name = name.as_str().ok_or("field 'spec.backend' must be a string")?;
+        spec.backend = Some(parse_backend(name).ok_or_else(|| {
+            format!("unknown backend '{name}' (use auto|multiplicative|log-domain)")
+        })?);
+    }
+    Ok(spec)
+}
+
+/// Decode a `POST /solve` payload into a [`DistanceJob`].
+pub fn decode_distance_job(v: &Json) -> DecodeResult<DistanceJob> {
+    if !matches!(v, Json::Obj(_)) {
+        return Err("payload must be a JSON object".into());
+    }
+    Ok(DistanceJob {
+        id: opt_f64(v, "id")?.unwrap_or(0.0) as u64,
+        source: measure(v, "source")?,
+        target: measure(v, "target")?,
+        method: method_field(v, Method::SparSink)?,
+        spec: decode_spec(v.get("spec"))?,
+        seed: opt_f64(v, "seed")?.unwrap_or(0.0) as u64,
+    })
+}
+
+/// Decode a `POST /barycenter` payload into a [`BarycenterJob`].
+pub fn decode_barycenter_job(v: &Json) -> DecodeResult<BarycenterJob> {
+    if !matches!(v, Json::Obj(_)) {
+        return Err("payload must be a JSON object".into());
+    }
+    let support = points(field(v, "support")?, "'support'")?;
+    if support.is_empty() {
+        return Err("'support' must have at least one point".into());
+    }
+    let marginals: Vec<Vec<f64>> = match field(v, "marginals")? {
+        Json::Arr(rows) => rows
+            .iter()
+            .map(|row| vec_f64(row, "each histogram in 'marginals'"))
+            .collect::<DecodeResult<_>>()?,
+        _ => return Err("'marginals' must be an array of histograms".into()),
+    };
+    if marginals.is_empty() {
+        return Err("'marginals' must have at least one histogram".into());
+    }
+    for (i, m) in marginals.iter().enumerate() {
+        if m.len() != support.len() {
+            return Err(format!(
+                "marginal {i} has {} entries but the support has {} points",
+                m.len(),
+                support.len()
+            ));
+        }
+    }
+    let weights = match v.get("weights") {
+        None => vec![1.0 / marginals.len() as f64; marginals.len()],
+        Some(w) => {
+            let w = vec_f64(w, "'weights'")?;
+            if w.len() != marginals.len() {
+                return Err(format!(
+                    "{} weights for {} marginals",
+                    w.len(),
+                    marginals.len()
+                ));
+            }
+            w
+        }
+    };
+    Ok(BarycenterJob {
+        id: opt_f64(v, "id")?.unwrap_or(0.0) as u64,
+        support: Arc::new(support),
+        marginals,
+        weights,
+        method: method_field(v, Method::SparIbp)?,
+        spec: decode_spec(v.get("spec"))?,
+        seed: opt_f64(v, "seed")?.unwrap_or(0.0) as u64,
+    })
+}
+
+/// Wire name of an executed backend.
+pub fn backend_name(kind: BackendKind) -> &'static str {
+    match kind {
+        BackendKind::Multiplicative => "multiplicative",
+        BackendKind::LogDomain => "log-domain",
+    }
+}
+
+/// Wire name of a requested backend policy.
+pub fn scaling_backend_name(backend: &ScalingBackend) -> &'static str {
+    match backend {
+        ScalingBackend::Multiplicative => "multiplicative",
+        ScalingBackend::LogDomain => "log-domain",
+        ScalingBackend::Auto { .. } => "auto",
+    }
+}
+
+/// Encode a measure as `{"points": [[..]], "mass": [..]}`.
+pub fn measure_json(m: &Measure) -> Json {
+    Json::obj(vec![
+        (
+            "points",
+            Json::arr(
+                m.points
+                    .iter()
+                    .map(|p| Json::arr(p.iter().map(|x| Json::num(*x)).collect()))
+                    .collect(),
+            ),
+        ),
+        ("mass", Json::arr(m.mass.iter().map(|x| Json::num(*x)).collect())),
+    ])
+}
+
+/// Encode a [`ProblemSpec`] (the `backend` key appears only when set).
+pub fn spec_json(spec: &ProblemSpec) -> Json {
+    let mut pairs = vec![
+        ("lambda", Json::num(spec.lambda)),
+        ("eps", Json::num(spec.eps)),
+        ("eta", Json::num(spec.eta)),
+        ("s_multiplier", Json::num(spec.s_multiplier)),
+        ("delta", Json::num(spec.delta)),
+        ("max_iters", Json::num(spec.max_iters as f64)),
+    ];
+    if let Some(backend) = &spec.backend {
+        pairs.push(("backend", Json::str(scaling_backend_name(backend))));
+    }
+    Json::obj(pairs)
+}
+
+/// Encode a [`DistanceJob`] as a `POST /solve` payload.
+pub fn distance_job_json(job: &DistanceJob) -> Json {
+    Json::obj(vec![
+        ("id", Json::num(job.id as f64)),
+        ("source", measure_json(&job.source)),
+        ("target", measure_json(&job.target)),
+        ("method", Json::str(job.method.name())),
+        ("spec", spec_json(&job.spec)),
+        ("seed", Json::num(job.seed as f64)),
+    ])
+}
+
+/// Encode a [`BarycenterJob`] as a `POST /barycenter` payload.
+pub fn barycenter_job_json(job: &BarycenterJob) -> Json {
+    Json::obj(vec![
+        ("id", Json::num(job.id as f64)),
+        (
+            "support",
+            Json::arr(
+                job.support
+                    .iter()
+                    .map(|p| Json::arr(p.iter().map(|x| Json::num(*x)).collect()))
+                    .collect(),
+            ),
+        ),
+        (
+            "marginals",
+            Json::arr(
+                job.marginals
+                    .iter()
+                    .map(|m| Json::arr(m.iter().map(|x| Json::num(*x)).collect()))
+                    .collect(),
+            ),
+        ),
+        ("weights", Json::arr(job.weights.iter().map(|x| Json::num(*x)).collect())),
+        ("method", Json::str(job.method.name())),
+        ("spec", spec_json(&job.spec)),
+        ("seed", Json::num(job.seed as f64)),
+    ])
+}
+
+/// Encode a [`DistanceResult`] for the response body.
+pub fn distance_result_json(result: &DistanceResult) -> Json {
+    let mut pairs = vec![
+        ("id", Json::num(result.id as f64)),
+        ("distance", Json::num(result.distance)),
+        ("objective", Json::num(result.objective)),
+        ("iterations", Json::num(result.iterations as f64)),
+        (
+            "backend",
+            match result.backend {
+                Some(kind) => Json::str(backend_name(kind)),
+                None => Json::Null,
+            },
+        ),
+        ("latency_seconds", Json::num(result.latency.as_secs_f64())),
+        ("batch_id", Json::num(result.batch_id as f64)),
+    ];
+    if let Some(error) = &result.error {
+        pairs.push(("error", Json::str(error.as_str())));
+    }
+    Json::obj(pairs)
+}
+
+/// Encode a [`BarycenterResult`] for the response body.
+pub fn barycenter_result_json(result: &BarycenterResult) -> Json {
+    let mut pairs = vec![
+        ("id", Json::num(result.id as f64)),
+        ("q", Json::arr(result.q.iter().map(|x| Json::num(*x)).collect())),
+        ("iterations", Json::num(result.iterations as f64)),
+        ("converged", Json::Bool(result.converged)),
+        (
+            "backend",
+            match result.backend {
+                Some(kind) => Json::str(backend_name(kind)),
+                None => Json::Null,
+            },
+        ),
+        ("latency_seconds", Json::num(result.latency.as_secs_f64())),
+        ("batch_id", Json::num(result.batch_id as f64)),
+    ];
+    if let Some(error) = &result.error {
+        pairs.push(("error", Json::str(error.as_str())));
+    }
+    Json::obj(pairs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_measure(offset: f64) -> Measure {
+        Measure::new(
+            vec![vec![offset, 0.25 + offset], vec![offset + 1.0, offset + 0.125]],
+            vec![0.5, 0.5],
+        )
+    }
+
+    #[test]
+    fn distance_job_round_trips_bitwise() {
+        let job = DistanceJob {
+            id: 42,
+            source: toy_measure(0.1),
+            target: toy_measure(0.7),
+            method: Method::SparSink,
+            spec: ProblemSpec {
+                eps: 0.037,
+                backend: Some(ScalingBackend::LogDomain),
+                ..ProblemSpec::default()
+            },
+            seed: 9,
+        };
+        let wire = distance_job_json(&job).to_string_compact();
+        let back = decode_distance_job(&Json::parse(&wire).unwrap()).unwrap();
+        assert_eq!(back.id, 42);
+        assert_eq!(back.seed, 9);
+        assert_eq!(back.method, Method::SparSink);
+        assert_eq!(back.spec.eps.to_bits(), job.spec.eps.to_bits());
+        assert_eq!(back.spec.delta.to_bits(), job.spec.delta.to_bits());
+        assert!(matches!(back.spec.backend, Some(ScalingBackend::LogDomain)));
+        for (a, b) in back.source.points.iter().zip(job.source.points.iter()) {
+            for (x, y) in a.iter().zip(b.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        for (x, y) in back.target.mass.iter().zip(job.target.mass.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn barycenter_job_round_trips_and_defaults_uniform_weights() {
+        let job = BarycenterJob {
+            id: 7,
+            support: Arc::new(vec![vec![0.0], vec![0.5], vec![1.0]]),
+            marginals: vec![vec![0.6, 0.2, 0.2], vec![0.1, 0.3, 0.6]],
+            weights: vec![0.5, 0.5],
+            method: Method::SparIbp,
+            spec: ProblemSpec::default(),
+            seed: 3,
+        };
+        let wire = barycenter_job_json(&job).to_string_compact();
+        let back = decode_barycenter_job(&Json::parse(&wire).unwrap()).unwrap();
+        assert_eq!(back.marginals, job.marginals);
+        assert_eq!(back.weights, job.weights);
+        assert_eq!(back.method, Method::SparIbp);
+
+        // Weights omitted → uniform over the marginals.
+        let minimal = Json::parse(
+            r#"{"support": [[0.0], [1.0]], "marginals": [[0.5, 0.5], [0.25, 0.75]]}"#,
+        )
+        .unwrap();
+        let decoded = decode_barycenter_job(&minimal).unwrap();
+        assert_eq!(decoded.weights, vec![0.5, 0.5]);
+        assert_eq!(decoded.method, Method::SparIbp);
+    }
+
+    #[test]
+    fn structural_errors_name_the_offending_field() {
+        let cases: Vec<(&str, &str)> = vec![
+            (r#"{"target": {"points": [[0]], "mass": [1]}}"#, "missing field 'source'"),
+            (
+                r#"{"source": {"points": [[0], [1]], "mass": [1]},
+                    "target": {"points": [[0]], "mass": [1]}}"#,
+                "2 points but 1 masses",
+            ),
+            (
+                r#"{"source": {"points": [], "mass": []},
+                    "target": {"points": [[0]], "mass": [1]}}"#,
+                "at least one support point",
+            ),
+            (
+                r#"{"source": {"points": [[0]], "mass": [1]},
+                    "target": {"points": [[0]], "mass": [1]},
+                    "method": "teleport"}"#,
+                "unknown method 'teleport'",
+            ),
+            (
+                r#"{"source": {"points": [[0]], "mass": [1]},
+                    "target": {"points": [[0]], "mass": [1]},
+                    "spec": {"backend": "gpu"}}"#,
+                "unknown backend 'gpu'",
+            ),
+            (
+                r#"{"source": {"points": [[0]], "mass": [1]},
+                    "target": {"points": [[0]], "mass": [1]},
+                    "spec": {"eps": "small"}}"#,
+                "field 'eps' must be a number",
+            ),
+        ];
+        for (raw, needle) in cases {
+            let err = decode_distance_job(&Json::parse(raw).unwrap())
+                .expect_err(needle);
+            assert!(err.contains(needle), "'{err}' should contain '{needle}'");
+        }
+        let err = decode_barycenter_job(
+            &Json::parse(r#"{"support": [[0.0], [1.0]], "marginals": [[0.5, 0.5, 0.5]]}"#)
+                .unwrap(),
+        )
+        .expect_err("length mismatch");
+        assert!(err.contains("3 entries but the support has 2 points"), "{err}");
+    }
+
+    #[test]
+    fn backend_names_round_trip_through_parse_backend() {
+        for backend in
+            [ScalingBackend::Multiplicative, ScalingBackend::LogDomain, ScalingBackend::default()]
+        {
+            let name = scaling_backend_name(&backend);
+            let parsed = parse_backend(name).unwrap();
+            assert_eq!(scaling_backend_name(&parsed), name);
+        }
+        assert_eq!(backend_name(BackendKind::Multiplicative), "multiplicative");
+        assert_eq!(backend_name(BackendKind::LogDomain), "log-domain");
+    }
+}

@@ -1,0 +1,317 @@
+//! The serve-mode gateway: a bounded TCP accept loop in front of one
+//! [`DistanceService`].
+//!
+//! Lifecycle and admission control, in one place:
+//!
+//! * **Accept loop** — a single non-blocking listener thread polling at
+//!   [`ACCEPT_POLL`]. Each admitted connection gets its own handler
+//!   thread (connections are few and long-lived relative to jobs; the
+//!   per-job fan-out happens inside the coordinator, not here).
+//! * **Connection cap** — at most [`GatewayConfig::max_connections`]
+//!   handlers at once; excess connections are answered `503` and closed
+//!   immediately, so the cap can never wedge the listener.
+//! * **Queue backpressure** — handlers submit through
+//!   [`DistanceService::try_submit`]; a full coordinator queue is a
+//!   `429` answered by [`super::router`], never a parked thread.
+//! * **Graceful drain** — [`Gateway::drain`] stops the listener, flips
+//!   the service to refuse new work, and waits for in-flight handlers
+//!   (whose jobs complete normally) before returning. `Drop` drains
+//!   too, so a gateway can never outlive its scope half-alive.
+//!
+//! Everything is std: `TcpListener` + threads, no async runtime.
+
+use std::io::{BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::coordinator::DistanceService;
+use crate::error::{Error, Result};
+use crate::net::http::{read_request, HttpLimits};
+use crate::net::response::Response;
+use crate::net::router;
+use crate::util::sync::{lock_unpoisoned, wait_timeout_unpoisoned};
+
+/// How often the accept loop re-checks the drain flag between polls of
+/// the non-blocking listener.
+const ACCEPT_POLL: Duration = Duration::from_millis(5);
+
+/// Gateway tuning. `Default` binds an OS-picked loopback port — the
+/// right setting for tests; the CLI overrides `addr`/`port`.
+#[derive(Clone, Debug)]
+pub struct GatewayConfig {
+    /// Bind address (default loopback).
+    pub addr: String,
+    /// Bind port; `0` lets the OS pick (reported by
+    /// [`Gateway::local_addr`]).
+    pub port: u16,
+    /// Maximum concurrently served connections; excess connections are
+    /// refused with `503` instead of queueing.
+    pub max_connections: usize,
+    /// Parser size caps, per request.
+    pub limits: HttpLimits,
+    /// Socket read timeout: an idle keep-alive connection is closed
+    /// after this long, so drain never waits on a silent peer.
+    pub read_timeout: Duration,
+}
+
+impl Default for GatewayConfig {
+    fn default() -> Self {
+        GatewayConfig {
+            addr: "127.0.0.1".to_string(),
+            port: 0,
+            max_connections: 64,
+            limits: HttpLimits::default(),
+            read_timeout: Duration::from_secs(5),
+        }
+    }
+}
+
+/// Shared connection bookkeeping between the accept loop, the handler
+/// threads, and `drain`.
+struct Lifecycle {
+    /// Set once by `drain`: the accept loop exits and handlers answer
+    /// `503` to new jobs.
+    draining: AtomicBool,
+    /// Live handler-thread count, guarded so `drain` can wait on it.
+    active: Mutex<usize>,
+    /// Signaled whenever a handler exits.
+    idle: Condvar,
+    /// Connections refused at the `max_connections` cap (diagnostics).
+    rejected_at_cap: AtomicU64,
+}
+
+/// Decrements the active-connection count when a handler thread exits,
+/// panic or not — `drain` must never wait on a connection that died.
+struct ConnectionGuard {
+    lifecycle: Arc<Lifecycle>,
+}
+
+impl Drop for ConnectionGuard {
+    fn drop(&mut self) {
+        let mut active = lock_unpoisoned(&self.lifecycle.active);
+        *active = active.saturating_sub(1);
+        drop(active);
+        self.lifecycle.idle.notify_all();
+    }
+}
+
+/// A running HTTP gateway over one [`DistanceService`]. See the module
+/// docs for the lifecycle; construction is [`Gateway::start`].
+pub struct Gateway {
+    service: Arc<DistanceService>,
+    lifecycle: Arc<Lifecycle>,
+    addr: SocketAddr,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl Gateway {
+    /// Bind the listener and start the accept loop. The service is
+    /// shared: in-process callers may keep submitting alongside the
+    /// gateway through the same `Arc`.
+    pub fn start(service: Arc<DistanceService>, config: GatewayConfig) -> Result<Gateway> {
+        let listener = match TcpListener::bind((config.addr.as_str(), config.port)) {
+            Ok(listener) => listener,
+            Err(e) => {
+                let msg = format!("gateway bind {}:{}: {e}", config.addr, config.port);
+                return Err(Error::Coordinator(msg));
+            }
+        };
+        let addr = listener
+            .local_addr()
+            .map_err(|e| Error::Coordinator(format!("gateway local_addr: {e}")))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| Error::Coordinator(format!("gateway set_nonblocking: {e}")))?;
+        let lifecycle = Arc::new(Lifecycle {
+            draining: AtomicBool::new(false),
+            active: Mutex::new(0),
+            idle: Condvar::new(),
+            rejected_at_cap: AtomicU64::new(0),
+        });
+        let accept = {
+            let service = Arc::clone(&service);
+            let lifecycle = Arc::clone(&lifecycle);
+            let config = config.clone();
+            std::thread::Builder::new()
+                .name("gateway-accept".to_string())
+                .spawn(move || accept_loop(listener, service, lifecycle, config))
+                .map_err(|e| Error::Coordinator(format!("gateway accept thread: {e}")))?
+        };
+        Ok(Gateway { service, lifecycle, addr, accept: Some(accept) })
+    }
+
+    /// The bound address (resolves port `0` to the OS-picked port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Connections refused at the connection cap so far.
+    pub fn rejected_at_cap(&self) -> u64 {
+        self.lifecycle.rejected_at_cap.load(Ordering::Relaxed)
+    }
+
+    /// Graceful drain: stop accepting, refuse new submissions, and wait
+    /// for in-flight connections (their jobs complete normally).
+    /// Idempotent — second and later calls return immediately.
+    pub fn drain(&mut self) {
+        self.lifecycle.draining.store(true, Ordering::SeqCst);
+        self.service.begin_drain();
+        if let Some(accept) = self.accept.take() {
+            // Joining drops the listener: the OS refuses new
+            // connections from here on.
+            let _ = accept.join();
+        }
+        let mut active = lock_unpoisoned(&self.lifecycle.active);
+        while *active > 0 {
+            active = wait_timeout_unpoisoned(
+                &self.lifecycle.idle,
+                active,
+                Duration::from_millis(50),
+            );
+        }
+    }
+
+    /// Drain, then report the service's final metrics. The service
+    /// `Arc` may still be shared with in-process callers; this reads
+    /// the snapshot rather than consuming the service.
+    pub fn shutdown(mut self) -> crate::coordinator::MetricsSnapshot {
+        self.drain();
+        self.service.metrics()
+    }
+}
+
+impl Drop for Gateway {
+    fn drop(&mut self) {
+        self.drain();
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    service: Arc<DistanceService>,
+    lifecycle: Arc<Lifecycle>,
+    config: GatewayConfig,
+) {
+    loop {
+        if lifecycle.draining.load(Ordering::SeqCst) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let admitted = {
+                    let mut active = lock_unpoisoned(&lifecycle.active);
+                    if *active >= config.max_connections {
+                        false
+                    } else {
+                        *active += 1;
+                        true
+                    }
+                };
+                if !admitted {
+                    lifecycle.rejected_at_cap.fetch_add(1, Ordering::Relaxed);
+                    refuse_at_capacity(stream);
+                    continue;
+                }
+                let guard = ConnectionGuard { lifecycle: Arc::clone(&lifecycle) };
+                let service = Arc::clone(&service);
+                let lifecycle = Arc::clone(&lifecycle);
+                let config = config.clone();
+                let spawned = std::thread::Builder::new()
+                    .name("gateway-conn".to_string())
+                    .spawn(move || {
+                        let _guard = guard;
+                        handle_connection(stream, &service, &lifecycle, &config);
+                    });
+                // Spawn failure drops `guard` here, releasing the slot.
+                drop(spawned);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => std::thread::sleep(ACCEPT_POLL),
+        }
+    }
+}
+
+/// Answer `503` on a connection refused at the connection cap. Best
+/// effort: the peer may already be gone.
+fn refuse_at_capacity(mut stream: TcpStream) {
+    let _ = Response::error(503, "connection capacity reached").write_to(&mut stream);
+    let _ = stream.flush();
+}
+
+/// Serve one connection: parse → route → respond, looping while the
+/// client keeps the connection alive (pipelined requests included).
+fn handle_connection(
+    stream: TcpStream,
+    service: &DistanceService,
+    lifecycle: &Lifecycle,
+    config: &GatewayConfig,
+) {
+    // Accepted sockets can inherit the listener's non-blocking flag on
+    // some platforms; handlers want plain blocking reads with a
+    // timeout.
+    if stream.set_nonblocking(false).is_err() {
+        return;
+    }
+    let _ = stream.set_read_timeout(Some(config.read_timeout));
+    let _ = stream.set_nodelay(true);
+    let Ok(mut writer) = stream.try_clone() else {
+        return;
+    };
+    let mut reader = BufReader::new(stream);
+    loop {
+        match read_request(&mut reader, &config.limits) {
+            Ok(request) => {
+                let draining = lifecycle.draining.load(Ordering::SeqCst);
+                let response = router::handle(service, &request, draining);
+                let close = response.close || !request.keep_alive();
+                if response.write_to(&mut writer).is_err() || close {
+                    return;
+                }
+            }
+            Err(err) => {
+                if let Some(status) = err.status() {
+                    let _ = Response::error(status, &err.message()).write_to(&mut writer);
+                }
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::CoordinatorConfig;
+    use std::io::Read;
+
+    #[test]
+    fn capacity_zero_refuses_every_connection_with_503() {
+        let service = Arc::new(DistanceService::start(CoordinatorConfig {
+            workers: 1,
+            shards: 1,
+            ..CoordinatorConfig::default()
+        }));
+        let mut gateway = Gateway::start(
+            Arc::clone(&service),
+            GatewayConfig { max_connections: 0, ..GatewayConfig::default() },
+        )
+        .unwrap();
+        let mut stream = TcpStream::connect(gateway.local_addr()).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let mut raw = String::new();
+        stream.read_to_string(&mut raw).unwrap();
+        assert!(raw.starts_with("HTTP/1.1 503 "), "{raw}");
+        assert!(gateway.rejected_at_cap() >= 1);
+        gateway.drain();
+        drop(gateway);
+        if let Ok(service) = Arc::try_unwrap(service) {
+            service.shutdown();
+        }
+    }
+}

@@ -1,0 +1,432 @@
+//! Hand-rolled HTTP/1.1 request parsing with hard size caps.
+//!
+//! The offline image has no hyper/tokio, and the gateway needs only a
+//! narrow slice of HTTP: request line, headers, `Content-Length`
+//! bodies, keep-alive, pipelining. Everything is read through bounded
+//! loops — a peer can never make the parser buffer more than
+//! [`HttpLimits`] allows, which is the protocol-layer half of the
+//! gateway's admission-control story (the coordinator-queue half is
+//! `try_submit`). Parsing is transport-agnostic (`BufRead`), so the
+//! hardening corpus below runs the exact production code path with no
+//! sockets.
+
+use std::io::{BufRead, Read};
+
+/// Size caps applied while parsing one request. Exceeding a cap is a
+/// protocol error with a definite status code — never an allocation.
+#[derive(Clone, Debug)]
+pub struct HttpLimits {
+    /// Longest accepted request line (method + target + version), in
+    /// bytes, terminator excluded.
+    pub max_request_line: usize,
+    /// Longest accepted single header line, in bytes.
+    pub max_header_line: usize,
+    /// Maximum number of header lines.
+    pub max_headers: usize,
+    /// Largest accepted `Content-Length` body, in bytes.
+    pub max_body: usize,
+}
+
+impl Default for HttpLimits {
+    fn default() -> Self {
+        HttpLimits {
+            max_request_line: 8 * 1024,
+            max_header_line: 8 * 1024,
+            max_headers: 64,
+            max_body: 4 * 1024 * 1024,
+        }
+    }
+}
+
+/// One parsed request. Header names are lowercased at parse time;
+/// values keep their bytes verbatim (surrounding whitespace trimmed).
+#[derive(Clone, Debug)]
+pub struct Request {
+    /// Request method, verbatim (`GET`, `POST`, …).
+    pub method: String,
+    /// Request target (path plus optional query), verbatim.
+    pub path: String,
+    /// `(lowercased-name, value)` pairs in arrival order. A `Vec`, not
+    /// a map: arrival order is preserved and iteration is
+    /// deterministic (the `unordered-iter` contract applies to all
+    /// files, this one included).
+    pub headers: Vec<(String, String)>,
+    /// The `Content-Length` body (empty when the header is absent).
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// First value of header `name` (give it lowercased), if present.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+    }
+
+    /// Whether the client asked to keep the connection open: HTTP/1.1
+    /// defaults to keep-alive unless `Connection: close` was sent.
+    pub fn keep_alive(&self) -> bool {
+        !matches!(self.header("connection"), Some(v) if v.eq_ignore_ascii_case("close"))
+    }
+}
+
+/// Why parsing failed. [`ParseError::status`] maps each protocol
+/// violation to the response the connection should send before
+/// closing; `None` means the peer is gone mid-request and no response
+/// can be delivered.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ParseError {
+    /// Clean end of stream at a request boundary (zero bytes read):
+    /// the client closed an idle connection. Not a protocol error.
+    Eof,
+    /// The stream ended mid-request — request line, headers, or a
+    /// declared body cut short. No response is possible.
+    Truncated,
+    /// Malformed request line (wrong token count or not UTF-8).
+    BadRequestLine(String),
+    /// A version other than HTTP/1.0 or HTTP/1.1.
+    UnsupportedVersion(String),
+    /// Request line longer than [`HttpLimits::max_request_line`].
+    RequestLineTooLong,
+    /// One header line longer than [`HttpLimits::max_header_line`], or
+    /// more than [`HttpLimits::max_headers`] lines.
+    HeadersTooLarge,
+    /// A header line without a `:` or with an empty name.
+    BadHeader(String),
+    /// `Content-Length` that does not parse as a base-10 integer.
+    BadContentLength(String),
+    /// Declared body larger than [`HttpLimits::max_body`].
+    BodyTooLarge {
+        /// What `Content-Length` declared.
+        declared: usize,
+        /// The configured cap it exceeded.
+        cap: usize,
+    },
+    /// Transport error from the underlying reader (includes read
+    /// timeouts on idle keep-alive connections).
+    Io(String),
+}
+
+impl ParseError {
+    /// The HTTP status the connection should answer with before
+    /// closing, or `None` when no response can reach the peer.
+    pub fn status(&self) -> Option<u16> {
+        match self {
+            ParseError::Eof | ParseError::Truncated | ParseError::Io(_) => None,
+            ParseError::BadRequestLine(_)
+            | ParseError::BadHeader(_)
+            | ParseError::BadContentLength(_) => Some(400),
+            ParseError::UnsupportedVersion(_) => Some(505),
+            ParseError::RequestLineTooLong | ParseError::HeadersTooLarge => Some(431),
+            ParseError::BodyTooLarge { .. } => Some(413),
+        }
+    }
+
+    /// Human-readable detail for the JSON error body.
+    pub fn message(&self) -> String {
+        match self {
+            ParseError::Eof => "connection closed".to_string(),
+            ParseError::Truncated => "request truncated mid-stream".to_string(),
+            ParseError::BadRequestLine(line) => format!("malformed request line '{line}'"),
+            ParseError::UnsupportedVersion(v) => {
+                format!("unsupported version '{v}' (use HTTP/1.1)")
+            }
+            ParseError::RequestLineTooLong => "request line exceeds the size cap".to_string(),
+            ParseError::HeadersTooLarge => "headers exceed the size caps".to_string(),
+            ParseError::BadHeader(line) => format!("malformed header line '{line}'"),
+            ParseError::BadContentLength(v) => format!("bad content-length '{v}'"),
+            ParseError::BodyTooLarge { declared, cap } => {
+                format!("declared body of {declared} bytes exceeds the {cap}-byte cap")
+            }
+            ParseError::Io(e) => format!("transport error: {e}"),
+        }
+    }
+}
+
+/// Parse exactly one request from `reader`. Repeated calls on one
+/// reader parse pipelined requests back to back — the parser consumes
+/// exactly one request's bytes per call, so connection state stays
+/// consistent across a mixed sequence (pinned by the hardening corpus
+/// below and socket-side by `tests/gateway_integration.rs`).
+pub fn read_request<R: BufRead>(
+    reader: &mut R,
+    limits: &HttpLimits,
+) -> Result<Request, ParseError> {
+    let line = match read_line_bounded(
+        reader,
+        limits.max_request_line,
+        ParseError::RequestLineTooLong,
+    )? {
+        None => return Err(ParseError::Eof),
+        Some(line) => line,
+    };
+    let line = String::from_utf8(line)
+        .map_err(|_| ParseError::BadRequestLine("<non-UTF-8 bytes>".into()))?;
+    let mut parts = line.split_whitespace();
+    let (method, path, version) = match (parts.next(), parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(p), Some(v), None) => (m, p, v),
+        _ => return Err(ParseError::BadRequestLine(line.clone())),
+    };
+    if version != "HTTP/1.1" && version != "HTTP/1.0" {
+        return Err(ParseError::UnsupportedVersion(version.to_string()));
+    }
+    let (method, path) = (method.to_string(), path.to_string());
+
+    let mut headers: Vec<(String, String)> = Vec::new();
+    loop {
+        let header = read_line_bounded(reader, limits.max_header_line, ParseError::HeadersTooLarge)?
+            .ok_or(ParseError::Truncated)?;
+        if header.is_empty() {
+            break;
+        }
+        if headers.len() >= limits.max_headers {
+            return Err(ParseError::HeadersTooLarge);
+        }
+        let header =
+            String::from_utf8(header).map_err(|_| ParseError::BadHeader("<non-UTF-8>".into()))?;
+        let Some((name, value)) = header.split_once(':') else {
+            return Err(ParseError::BadHeader(header.clone()));
+        };
+        let name = name.trim();
+        if name.is_empty() {
+            return Err(ParseError::BadHeader(header.clone()));
+        }
+        headers.push((name.to_ascii_lowercase(), value.trim().to_string()));
+    }
+
+    let mut request = Request { method, path, headers, body: Vec::new() };
+    if let Some(declared) = request.header("content-length") {
+        let declared: usize = declared
+            .parse()
+            .map_err(|_| ParseError::BadContentLength(declared.to_string()))?;
+        // Refused BEFORE allocating: the declaration alone rejects the
+        // request, so an attacker cannot make the gateway reserve the
+        // buffer first.
+        if declared > limits.max_body {
+            return Err(ParseError::BodyTooLarge { declared, cap: limits.max_body });
+        }
+        let mut body = vec![0u8; declared];
+        read_exact_or_truncated(reader, &mut body)?;
+        request.body = body;
+    }
+    Ok(request)
+}
+
+/// Read one CRLF- or LF-terminated line of at most `cap` bytes
+/// (terminator excluded). `Ok(None)` is clean EOF before any byte —
+/// the caller decides whether that is a request boundary or a
+/// truncation. Byte-at-a-time through the `BufRead` buffer: unlike
+/// `read_until`, growth is capped.
+fn read_line_bounded<R: BufRead>(
+    reader: &mut R,
+    cap: usize,
+    overflow: ParseError,
+) -> Result<Option<Vec<u8>>, ParseError> {
+    let mut line: Vec<u8> = Vec::new();
+    loop {
+        let mut byte = [0u8; 1];
+        match reader.read(&mut byte) {
+            Ok(0) => {
+                return if line.is_empty() { Ok(None) } else { Err(ParseError::Truncated) };
+            }
+            Ok(_) => {
+                if byte[0] == b'\n' {
+                    if line.last() == Some(&b'\r') {
+                        line.pop();
+                    }
+                    return Ok(Some(line));
+                }
+                if line.len() >= cap {
+                    return Err(overflow);
+                }
+                line.push(byte[0]);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(ParseError::Io(e.to_string())),
+        }
+    }
+}
+
+/// Fill `buf` completely or report [`ParseError::Truncated`].
+fn read_exact_or_truncated<R: BufRead>(reader: &mut R, buf: &mut [u8]) -> Result<(), ParseError> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match reader.read(&mut buf[filled..]) {
+            Ok(0) => return Err(ParseError::Truncated),
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(ParseError::Io(e.to_string())),
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    fn parse(raw: &[u8]) -> Result<Request, ParseError> {
+        read_request(&mut BufReader::new(raw), &HttpLimits::default())
+    }
+
+    #[test]
+    fn parses_a_simple_get() {
+        let req = parse(b"GET /healthz HTTP/1.1\r\nHost: gw\r\n\r\n").unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/healthz");
+        assert_eq!(req.header("host"), Some("gw"));
+        assert!(req.keep_alive());
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn parses_a_post_with_body_and_lf_only_lines() {
+        let req = parse(b"POST /solve HTTP/1.1\ncontent-length: 4\n\nwxyz").unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.body, b"wxyz");
+    }
+
+    #[test]
+    fn connection_close_disables_keep_alive() {
+        let req = parse(b"GET / HTTP/1.1\r\nConnection: Close\r\n\r\n").unwrap();
+        assert!(!req.keep_alive());
+        // HTTP/1.0 without the header keeps the 1.1 default here; the
+        // router never upgrades the response version, so this is safe.
+        let req = parse(b"GET / HTTP/1.0\r\n\r\n").unwrap();
+        assert_eq!(req.method, "GET");
+    }
+
+    /// The hardening corpus: every malformed-input arm asserts the
+    /// exact variant AND the exact status code the connection must
+    /// answer with, table-driven so new arms are one line each.
+    #[test]
+    fn malformed_inputs_map_to_exact_statuses() {
+        let oversized_line = format!("GET /{} HTTP/1.1\r\n\r\n", "a".repeat(9000));
+        let many_headers = {
+            let mut raw = String::from("GET / HTTP/1.1\r\n");
+            for i in 0..80 {
+                raw.push_str(&format!("x-h-{i}: v\r\n"));
+            }
+            raw.push_str("\r\n");
+            raw
+        };
+        let long_header = format!("GET / HTTP/1.1\r\nx-big: {}\r\n\r\n", "b".repeat(9000));
+        let cases: Vec<(&str, Vec<u8>, ParseError, Option<u16>)> = vec![
+            ("empty stream", b"".to_vec(), ParseError::Eof, None),
+            (
+                "garbage request line",
+                b"GARBAGE\r\n\r\n".to_vec(),
+                ParseError::BadRequestLine("GARBAGE".into()),
+                Some(400),
+            ),
+            (
+                "four-token request line",
+                b"GET / extra HTTP/1.1\r\n\r\n".to_vec(),
+                ParseError::BadRequestLine("GET / extra HTTP/1.1".into()),
+                Some(400),
+            ),
+            (
+                "http/2 preface",
+                b"GET / HTTP/2\r\n\r\n".to_vec(),
+                ParseError::UnsupportedVersion("HTTP/2".into()),
+                Some(505),
+            ),
+            (
+                "oversized request line",
+                oversized_line.into_bytes(),
+                ParseError::RequestLineTooLong,
+                Some(431),
+            ),
+            (
+                "oversized header line",
+                long_header.into_bytes(),
+                ParseError::HeadersTooLarge,
+                Some(431),
+            ),
+            (
+                "too many headers",
+                many_headers.into_bytes(),
+                ParseError::HeadersTooLarge,
+                Some(431),
+            ),
+            (
+                "header without a colon",
+                b"GET / HTTP/1.1\r\nNoColonHere\r\n\r\n".to_vec(),
+                ParseError::BadHeader("NoColonHere".into()),
+                Some(400),
+            ),
+            (
+                "empty header name",
+                b"GET / HTTP/1.1\r\n: v\r\n\r\n".to_vec(),
+                ParseError::BadHeader(": v".into()),
+                Some(400),
+            ),
+            (
+                "non-numeric content-length",
+                b"POST /solve HTTP/1.1\r\ncontent-length: abc\r\n\r\n".to_vec(),
+                ParseError::BadContentLength("abc".into()),
+                Some(400),
+            ),
+            (
+                "oversized declared body",
+                b"POST /solve HTTP/1.1\r\ncontent-length: 99999999\r\n\r\n".to_vec(),
+                ParseError::BodyTooLarge { declared: 99_999_999, cap: 4 * 1024 * 1024 },
+                Some(413),
+            ),
+            (
+                "truncated body",
+                b"POST /solve HTTP/1.1\r\ncontent-length: 10\r\n\r\nwxyz".to_vec(),
+                ParseError::Truncated,
+                None,
+            ),
+            (
+                "truncated headers",
+                b"GET / HTTP/1.1\r\nHost: gw\r\n".to_vec(),
+                ParseError::Truncated,
+                None,
+            ),
+        ];
+        for (name, raw, expected, status) in cases {
+            let err = parse(&raw).expect_err(name);
+            assert_eq!(err, expected, "{name}");
+            assert_eq!(err.status(), status, "{name}");
+            assert!(!err.message().is_empty(), "{name}");
+        }
+    }
+
+    #[test]
+    fn pipelined_requests_parse_back_to_back() {
+        // Two requests on one stream: each call consumes exactly one
+        // request's bytes, the second sees a clean boundary, and the
+        // third call reports plain EOF — the consistent-connection
+        // contract the keep-alive loop relies on.
+        let raw: &[u8] = b"POST /solve HTTP/1.1\r\ncontent-length: 3\r\n\r\nabc\
+                           GET /metrics HTTP/1.1\r\n\r\n";
+        let mut reader = BufReader::new(raw);
+        let limits = HttpLimits::default();
+        let first = read_request(&mut reader, &limits).unwrap();
+        assert_eq!((first.method.as_str(), first.body.as_slice()), ("POST", &b"abc"[..]));
+        let second = read_request(&mut reader, &limits).unwrap();
+        assert_eq!((second.method.as_str(), second.path.as_str()), ("GET", "/metrics"));
+        assert_eq!(read_request(&mut reader, &limits), Err(ParseError::Eof));
+    }
+
+    #[test]
+    fn an_error_does_not_poison_custom_limits() {
+        // Tight custom caps: the request that fits parses, the one
+        // that does not is refused with the configured cap reported.
+        let limits =
+            HttpLimits { max_request_line: 64, max_header_line: 32, max_headers: 4, max_body: 8 };
+        let ok = read_request(
+            &mut BufReader::new(&b"POST /s HTTP/1.1\r\ncontent-length: 8\r\n\r\n12345678"[..]),
+            &limits,
+        )
+        .unwrap();
+        assert_eq!(ok.body.len(), 8);
+        let err = read_request(
+            &mut BufReader::new(&b"POST /s HTTP/1.1\r\ncontent-length: 9\r\n\r\n123456789"[..]),
+            &limits,
+        )
+        .expect_err("nine bytes over an eight-byte cap");
+        assert_eq!(err, ParseError::BodyTooLarge { declared: 9, cap: 8 });
+    }
+}

@@ -1,0 +1,50 @@
+//! Serve-mode HTTP front end for the coordinator (`repro serve --port`).
+//!
+//! A zero-dependency HTTP/1.1 gateway over the batched
+//! [`DistanceService`](crate::coordinator::DistanceService): clients
+//! `POST /solve` and `POST /barycenter` JSON jobs, scrape Prometheus
+//! text from `GET /metrics`, and probe `GET /healthz`. The layering is
+//! deliberately boring —
+//!
+//! ```text
+//!   TcpListener ── accept loop (bounded, non-blocking poll)
+//!        │               [gateway]
+//!   per-connection thread: parse → route → respond, keep-alive loop
+//!        │        [http]      [router]     [response]
+//!   JSON body ⇄ DistanceJob / BarycenterJob          [codec]
+//!        │
+//!   DistanceService::try_submit  →  429 when the queue is full
+//! ```
+//!
+//! — so each layer is testable without the ones below it: the parser
+//! hardening corpus runs on byte slices, the router tests on an
+//! in-process service, and only `tests/gateway_integration.rs` opens
+//! real sockets.
+//!
+//! Two properties carry the module's weight:
+//!
+//! * **Admission control over backpressure.** Every path that could
+//!   block on a saturated system instead answers a status code: full
+//!   coordinator queue → `429`, connection cap → `503`, draining →
+//!   `503`, oversized request → `413`/`431`. The accept loop never
+//!   parks behind the solver.
+//! * **Bitwise transparency.** A job round-tripped through the wire
+//!   codec solves to bit-identical results as an in-process submission
+//!   (floats survive JSON via shortest-round-trip formatting), so
+//!   putting the gateway in front of the coordinator cannot change any
+//!   reproduced number. Pinned by the loopback-parity test wall.
+//!
+//! Unlike the solver layers ([`crate::ot`], [`crate::engine`], …), this
+//! module is free to read wall clocks (timeouts, polls) — the
+//! contract-lint wall-clock rule deliberately stops at the serving
+//! boundary (see [`crate::lint`]).
+
+pub mod codec;
+pub mod gateway;
+pub mod http;
+pub mod response;
+pub mod router;
+
+pub use gateway::{Gateway, GatewayConfig};
+pub use http::{HttpLimits, ParseError, Request};
+pub use response::Response;

@@ -1,0 +1,133 @@
+//! HTTP response assembly: status + reason, a small header set, and a
+//! body, written in one buffered pass. The gateway emits exactly three
+//! content shapes — compact JSON, a JSON error object, and the
+//! Prometheus text page — so three constructors cover the surface.
+
+use std::io::Write;
+
+use crate::util::json::Json;
+
+/// Canonical reason phrase for the status codes the gateway emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        505 => "HTTP Version Not Supported",
+        _ => "Unknown",
+    }
+}
+
+/// One response, ready to serialize. `close` ends the connection after
+/// the write — protocol errors always close (the stream position may be
+/// unreliable after a malformed request), success responses keep alive.
+#[derive(Clone, Debug)]
+pub struct Response {
+    /// HTTP status code.
+    pub status: u16,
+    /// `Content-Type` header value.
+    pub content_type: &'static str,
+    /// Response body bytes.
+    pub body: Vec<u8>,
+    /// Whether the connection closes after this response.
+    pub close: bool,
+    /// Extra headers (e.g. `allow` on 405, `retry-after` on 429).
+    pub extra: Vec<(&'static str, String)>,
+}
+
+impl Response {
+    /// A JSON response. Error statuses (≥ 400) close the connection.
+    pub fn json(status: u16, payload: &Json) -> Response {
+        Response {
+            status,
+            content_type: "application/json",
+            body: payload.to_string_compact().into_bytes(),
+            close: status >= 400,
+            extra: Vec::new(),
+        }
+    }
+
+    /// A JSON error body `{"error": message}` with the given status.
+    pub fn error(status: u16, message: &str) -> Response {
+        Response::json(status, &Json::obj(vec![("error", Json::str(message))]))
+    }
+
+    /// A plain-text response (the `/metrics` exposition page).
+    pub fn text(status: u16, content_type: &'static str, body: String) -> Response {
+        Response {
+            status,
+            content_type,
+            body: body.into_bytes(),
+            close: status >= 400,
+            extra: Vec::new(),
+        }
+    }
+
+    /// Attach an extra header (builder-style).
+    pub fn with_header(mut self, name: &'static str, value: String) -> Response {
+        self.extra.push((name, value));
+        self
+    }
+
+    /// Serialize status line, headers, and body to `writer` and flush.
+    pub fn write_to<W: Write>(&self, writer: &mut W) -> std::io::Result<()> {
+        write!(writer, "HTTP/1.1 {} {}\r\n", self.status, reason(self.status))?;
+        write!(writer, "content-type: {}\r\n", self.content_type)?;
+        write!(writer, "content-length: {}\r\n", self.body.len())?;
+        for (name, value) in &self.extra {
+            write!(writer, "{name}: {value}\r\n")?;
+        }
+        if self.close {
+            writer.write_all(b"connection: close\r\n")?;
+        }
+        writer.write_all(b"\r\n")?;
+        writer.write_all(&self.body)?;
+        writer.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serializes_a_json_success() {
+        let mut out: Vec<u8> = Vec::new();
+        Response::json(200, &Json::obj(vec![("ok", Json::Bool(true))]))
+            .write_to(&mut out)
+            .unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
+        assert!(text.contains("content-type: application/json\r\n"), "{text}");
+        assert!(text.contains("content-length: 11\r\n"), "{text}");
+        assert!(!text.contains("connection: close"), "{text}");
+        assert!(text.ends_with("\r\n\r\n{\"ok\":true}"), "{text}");
+    }
+
+    #[test]
+    fn errors_close_and_carry_a_json_body() {
+        let mut out: Vec<u8> = Vec::new();
+        let resp = Response::error(429, "busy").with_header("retry-after", "1".to_string());
+        assert!(resp.close);
+        resp.write_to(&mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"), "{text}");
+        assert!(text.contains("retry-after: 1\r\n"), "{text}");
+        assert!(text.contains("connection: close\r\n"), "{text}");
+        assert!(text.ends_with("{\"error\":\"busy\"}"), "{text}");
+    }
+
+    #[test]
+    fn reason_phrases_cover_the_gateway_statuses() {
+        for status in [200, 400, 404, 405, 413, 429, 431, 500, 503, 505] {
+            assert_ne!(reason(status), "Unknown", "{status}");
+        }
+        assert_eq!(reason(418), "Unknown");
+    }
+}

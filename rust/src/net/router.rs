@@ -1,0 +1,203 @@
+//! Request routing: one parsed [`Request`] in, one [`Response`] out.
+//!
+//! The route table is the gateway's contract surface:
+//!
+//! | method | path          | behavior                                        |
+//! |--------|---------------|-------------------------------------------------|
+//! | POST   | `/solve`      | decode a distance job, `try_submit`, wait, JSON |
+//! | POST   | `/barycenter` | same for fixed-support barycenters              |
+//! | GET    | `/metrics`    | Prometheus text exposition of the snapshot      |
+//! | GET    | `/healthz`    | `200 ok` serving / `503 draining`               |
+//!
+//! Admission control is the load-bearing part: submissions go through
+//! [`DistanceService::try_submit`], so a full coordinator queue answers
+//! `429 Too Many Requests` (with `retry-after`) instead of parking the
+//! connection thread — the accept loop never stalls behind a saturated
+//! solver (pinned by `tests/gateway_integration.rs`).
+
+use crate::coordinator::{DistanceService, SubmitRejection};
+use crate::net::codec;
+use crate::net::http::Request;
+use crate::net::response::Response;
+use crate::util::json::Json;
+
+/// Dispatch one request against the service. `draining` is the
+/// gateway's lifecycle flag: while set, probes answer `503` and no new
+/// jobs are admitted (in-flight jobs still complete).
+pub fn handle(service: &DistanceService, req: &Request, draining: bool) -> Response {
+    let path = req.path.split('?').next().unwrap_or("");
+    match (req.method.as_str(), path) {
+        ("GET", "/healthz") => healthz(draining),
+        ("GET", "/metrics") => {
+            Response::text(200, "text/plain; version=0.0.4", service.metrics().render_prometheus())
+        }
+        ("POST", "/solve") => submit_distance(service, req, draining),
+        ("POST", "/barycenter") => submit_barycenter(service, req, draining),
+        (_, "/healthz" | "/metrics") => method_not_allowed("GET"),
+        (_, "/solve" | "/barycenter") => method_not_allowed("POST"),
+        _ => Response::error(404, &format!("no such endpoint '{path}'")),
+    }
+}
+
+fn healthz(draining: bool) -> Response {
+    if draining {
+        Response::json(503, &Json::obj(vec![("status", Json::str("draining"))]))
+    } else {
+        Response::json(200, &Json::obj(vec![("status", Json::str("ok"))]))
+    }
+}
+
+fn method_not_allowed(allow: &'static str) -> Response {
+    Response::error(405, &format!("method not allowed (use {allow})"))
+        .with_header("allow", allow.to_string())
+}
+
+/// Parse the request body as a JSON document (strict UTF-8, non-empty).
+fn parse_body(req: &Request) -> Result<Json, Response> {
+    if req.body.is_empty() {
+        return Err(Response::error(400, "missing JSON body"));
+    }
+    let text = std::str::from_utf8(&req.body)
+        .map_err(|_| Response::error(400, "body is not valid UTF-8"))?;
+    Json::parse(text).map_err(|e| Response::error(400, &format!("bad JSON payload: {e}")))
+}
+
+/// Map a refused submission to its wire status: `Busy` is the
+/// transient 429 (retry after backing off), `Stopped` the terminal 503.
+fn rejected(rejection: SubmitRejection) -> Response {
+    match rejection {
+        SubmitRejection::Busy => {
+            Response::error(429, &rejection.to_string()).with_header("retry-after", "1".to_string())
+        }
+        SubmitRejection::Stopped => Response::error(503, &rejection.to_string()),
+    }
+}
+
+fn submit_distance(service: &DistanceService, req: &Request, draining: bool) -> Response {
+    if draining {
+        return rejected(SubmitRejection::Stopped);
+    }
+    let payload = match parse_body(req) {
+        Ok(v) => v,
+        Err(resp) => return resp,
+    };
+    let job = match codec::decode_distance_job(&payload) {
+        Ok(job) => job,
+        Err(e) => return Response::error(400, &e),
+    };
+    match service.try_submit(job) {
+        Ok(rx) => match rx.recv() {
+            Ok(result) => Response::json(200, &codec::distance_result_json(&result)),
+            Err(_) => Response::error(500, "worker dropped the response channel"),
+        },
+        Err(rejection) => rejected(rejection),
+    }
+}
+
+fn submit_barycenter(service: &DistanceService, req: &Request, draining: bool) -> Response {
+    if draining {
+        return rejected(SubmitRejection::Stopped);
+    }
+    let payload = match parse_body(req) {
+        Ok(v) => v,
+        Err(resp) => return resp,
+    };
+    let job = match codec::decode_barycenter_job(&payload) {
+        Ok(job) => job,
+        Err(e) => return Response::error(400, &e),
+    };
+    match service.try_submit_barycenter(job) {
+        Ok(rx) => match rx.recv() {
+            Ok(result) => Response::json(200, &codec::barycenter_result_json(&result)),
+            Err(_) => Response::error(500, "worker dropped the response channel"),
+        },
+        Err(rejection) => rejected(rejection),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::CoordinatorConfig;
+
+    fn small_service() -> DistanceService {
+        DistanceService::start(CoordinatorConfig {
+            workers: 1,
+            shards: 1,
+            ..CoordinatorConfig::default()
+        })
+    }
+
+    fn request(method: &str, path: &str, body: &[u8]) -> Request {
+        Request {
+            method: method.to_string(),
+            path: path.to_string(),
+            headers: Vec::new(),
+            body: body.to_vec(),
+        }
+    }
+
+    fn body_json(resp: &Response) -> Json {
+        Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn unknown_paths_and_wrong_methods_have_exact_statuses() {
+        let service = small_service();
+        let resp = handle(&service, &request("GET", "/nope", b""), false);
+        assert_eq!(resp.status, 404);
+        let resp = handle(&service, &request("DELETE", "/solve", b""), false);
+        assert_eq!(resp.status, 405);
+        assert_eq!(resp.extra, vec![("allow", "POST".to_string())]);
+        let resp = handle(&service, &request("POST", "/metrics", b""), false);
+        assert_eq!(resp.status, 405);
+        assert_eq!(resp.extra, vec![("allow", "GET".to_string())]);
+        service.shutdown();
+    }
+
+    #[test]
+    fn bad_payloads_answer_400_with_a_json_error_body() {
+        let service = small_service();
+        for body in [&b""[..], b"not json", b"{\"source\": 1}"] {
+            let resp = handle(&service, &request("POST", "/solve", body), false);
+            assert_eq!(resp.status, 400, "{body:?}");
+            let err = body_json(&resp);
+            assert!(err.get("error").and_then(|e| e.as_str()).is_some(), "{body:?}");
+        }
+        service.shutdown();
+    }
+
+    #[test]
+    fn healthz_reports_the_drain_state_and_draining_refuses_jobs() {
+        let service = small_service();
+        assert_eq!(handle(&service, &request("GET", "/healthz", b""), false).status, 200);
+        let resp = handle(&service, &request("GET", "/healthz", b""), true);
+        assert_eq!(resp.status, 503);
+        assert_eq!(body_json(&resp).get("status").unwrap().as_str(), Some("draining"));
+        let resp = handle(&service, &request("POST", "/solve", b"{}"), true);
+        assert_eq!(resp.status, 503);
+        service.shutdown();
+    }
+
+    #[test]
+    fn solve_round_trips_through_the_codec() {
+        let service = small_service();
+        let payload = br#"{
+            "id": 5,
+            "source": {"points": [[0.0], [1.0]], "mass": [0.5, 0.5]},
+            "target": {"points": [[0.25], [0.75]], "mass": [0.5, 0.5]},
+            "method": "sinkhorn",
+            "spec": {"eps": 0.1, "max_iters": 200}
+        }"#;
+        let resp = handle(&service, &request("POST", "/solve", payload), false);
+        assert_eq!(resp.status, 200);
+        let result = body_json(&resp);
+        assert_eq!(result.get("id").unwrap().as_f64(), Some(5.0));
+        assert!(result.get("error").is_none());
+        let distance = result.get("distance").unwrap().as_f64().unwrap();
+        assert!(distance.is_finite() && distance >= 0.0);
+        // Query strings are stripped before matching.
+        assert_eq!(handle(&service, &request("GET", "/healthz?verbose=1", b""), false).status, 200);
+        service.shutdown();
+    }
+}

@@ -1,0 +1,437 @@
+//! The serve-mode gateway's contract wall — real sockets end to end:
+//!
+//! * a job posted over loopback solves BITWISE-identically to the same
+//!   job submitted in-process (OT and barycenter alike): the HTTP layer
+//!   cannot change any reproduced number;
+//! * N concurrent clients each get their own correct answer;
+//! * a saturated coordinator queue answers `429 Too Many Requests`
+//!   without stalling the accept loop (health probes keep working);
+//! * graceful drain completes in-flight jobs and then refuses new
+//!   connections;
+//! * `/metrics` serves well-formed Prometheus text whose counters match
+//!   the service's real state;
+//! * protocol errors carry their exact status codes over the wire.
+//!
+//! Runs in the CI cache-parity job (release) alongside the determinism
+//! suites.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+use spar_sink::coordinator::{
+    BarycenterJob, CoordinatorConfig, DistanceJob, DistanceService, Measure, Method, ProblemSpec,
+};
+use spar_sink::net::codec;
+use spar_sink::net::{Gateway, GatewayConfig};
+use spar_sink::util::json::Json;
+
+// ---------------------------------------------------------------- helpers
+
+struct HttpResponse {
+    status: u16,
+    headers: Vec<(String, String)>,
+    body: Vec<u8>,
+}
+
+impl HttpResponse {
+    fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+    }
+
+    fn json(&self) -> Json {
+        Json::parse(std::str::from_utf8(&self.body).expect("utf-8 body")).expect("json body")
+    }
+}
+
+fn read_response<R: BufRead>(reader: &mut R) -> HttpResponse {
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line).expect("status line");
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("bad status line '{status_line}'"));
+    let mut headers = Vec::new();
+    loop {
+        let mut line = String::new();
+        reader.read_line(&mut line).expect("header line");
+        let line = line.trim_end();
+        if line.is_empty() {
+            break;
+        }
+        let (name, value) = line.split_once(':').expect("header colon");
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+    let length: usize = headers
+        .iter()
+        .find(|(k, _)| k == "content-length")
+        .and_then(|(_, v)| v.parse().ok())
+        .unwrap_or(0);
+    let mut body = vec![0u8; length];
+    reader.read_exact(&mut body).expect("body");
+    HttpResponse { status, headers, body }
+}
+
+/// One request/response round trip on a fresh connection
+/// (`connection: close`, so the handler releases its slot right away).
+fn request(addr: SocketAddr, method: &str, path: &str, body: &[u8]) -> HttpResponse {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(120))).expect("timeout");
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nconnection: close\r\ncontent-length: {}\r\n\r\n",
+        body.len()
+    )
+    .expect("request head");
+    stream.write_all(body).expect("request body");
+    read_response(&mut BufReader::new(stream))
+}
+
+fn post_json(addr: SocketAddr, path: &str, payload: &Json) -> HttpResponse {
+    request(addr, "POST", path, payload.to_string_compact().as_bytes())
+}
+
+fn bits(v: &Json, key: &str) -> u64 {
+    v.get(key)
+        .and_then(Json::as_f64)
+        .unwrap_or_else(|| panic!("missing numeric field '{key}'"))
+        .to_bits()
+}
+
+// ----------------------------------------------------------- job fixtures
+
+fn toy_measure(seed: u64, n: usize, mass: f64) -> Measure {
+    let mut rng = spar_sink::rng::Rng::seed_from(seed);
+    let points: Vec<Vec<f64>> =
+        (0..n).map(|_| vec![rng.uniform() * 10.0, rng.uniform() * 10.0]).collect();
+    let mut weights: Vec<f64> = (0..n).map(|_| rng.uniform() + 0.1).collect();
+    let total: f64 = weights.iter().sum();
+    weights.iter_mut().for_each(|w| *w *= mass / total);
+    Measure::new(points, weights)
+}
+
+fn distance_job(id: u64) -> DistanceJob {
+    DistanceJob {
+        id,
+        source: toy_measure(1000 + id, 40, 1.0),
+        target: toy_measure(2000 + id, 40, 1.2),
+        method: Method::SparSink,
+        spec: ProblemSpec { eta: 3.0, eps: 0.05, ..ProblemSpec::default() },
+        seed: 42 + id,
+    }
+}
+
+fn barycenter_job(id: u64) -> BarycenterJob {
+    let n = 32;
+    let support: Vec<Vec<f64>> = (0..n).map(|i| vec![i as f64 / (n - 1) as f64]).collect();
+    let bump = |mu: f64| -> Vec<f64> {
+        let raw: Vec<f64> =
+            support.iter().map(|p| (-(p[0] - mu).powi(2) / 0.01).exp() + 1e-4).collect();
+        let total: f64 = raw.iter().sum();
+        raw.iter().map(|x| x / total).collect()
+    };
+    BarycenterJob {
+        id,
+        marginals: vec![bump(0.25), bump(0.75)],
+        support: Arc::new(support),
+        weights: vec![0.5, 0.5],
+        method: Method::SparIbp,
+        spec: ProblemSpec { eps: 0.01, s_multiplier: 40.0, ..ProblemSpec::default() },
+        seed: 7,
+    }
+}
+
+/// A job that holds its worker for a long time: δ = 0 never converges,
+/// so the solver runs the full iteration budget.
+fn stalled_worker_job(id: u64) -> DistanceJob {
+    DistanceJob {
+        id,
+        source: toy_measure(1, 64, 1.0),
+        target: toy_measure(2, 64, 1.2),
+        method: Method::Sinkhorn,
+        spec: ProblemSpec {
+            eps: 0.05,
+            eta: 3.0,
+            delta: 0.0,
+            max_iters: 40_000,
+            ..ProblemSpec::default()
+        },
+        seed: 0,
+    }
+}
+
+fn small_gateway(config: CoordinatorConfig) -> Gateway {
+    let service = Arc::new(DistanceService::start(config));
+    Gateway::start(service, GatewayConfig::default()).expect("gateway start")
+}
+
+fn default_coordinator() -> CoordinatorConfig {
+    CoordinatorConfig { workers: 2, shards: 1, ..CoordinatorConfig::default() }
+}
+
+// ----------------------------------------------------------------- tests
+
+#[test]
+fn loopback_round_trip_is_bitwise_equal_to_in_process_submit() {
+    // Same job twice: once over the wire, once through a separate
+    // in-process reference service. Results are pure functions of the
+    // job (the determinism walls pin that), so any drift here is the
+    // HTTP layer corrupting a float.
+    let gateway = small_gateway(default_coordinator());
+    let reference = DistanceService::start(default_coordinator());
+
+    let job = distance_job(1);
+    let expected = reference.submit(job.clone()).unwrap().recv().unwrap();
+    assert!(expected.error.is_none(), "{:?}", expected.error);
+    let resp = post_json(gateway.local_addr(), "/solve", &codec::distance_job_json(&job));
+    assert_eq!(resp.status, 200);
+    let wire = resp.json();
+    assert_eq!(bits(&wire, "distance"), expected.distance.to_bits());
+    assert_eq!(bits(&wire, "objective"), expected.objective.to_bits());
+    assert_eq!(wire.get("backend").unwrap().as_str(), Some("multiplicative"));
+    assert!(wire.get("error").is_none());
+
+    let bary = barycenter_job(2);
+    let expected = reference.submit_barycenter(bary.clone()).unwrap().recv().unwrap();
+    assert!(expected.error.is_none(), "{:?}", expected.error);
+    let resp = post_json(gateway.local_addr(), "/barycenter", &codec::barycenter_job_json(&bary));
+    assert_eq!(resp.status, 200);
+    let wire = resp.json();
+    let q = wire.get("q").unwrap().items();
+    assert_eq!(q.len(), expected.q.len());
+    for (sent, got) in q.iter().zip(expected.q.iter()) {
+        assert_eq!(sent.as_f64().unwrap().to_bits(), got.to_bits());
+    }
+
+    reference.shutdown();
+    gateway.shutdown();
+}
+
+#[test]
+fn concurrent_clients_all_get_correct_answers() {
+    let gateway = small_gateway(CoordinatorConfig {
+        workers: 4,
+        shards: 2,
+        ..CoordinatorConfig::default()
+    });
+    let addr = gateway.local_addr();
+    let clients: Vec<_> = (0..8)
+        .map(|id| {
+            std::thread::spawn(move || {
+                let job = distance_job(id);
+                let resp = post_json(addr, "/solve", &codec::distance_job_json(&job));
+                assert_eq!(resp.status, 200, "client {id}");
+                let result = resp.json();
+                assert_eq!(result.get("id").unwrap().as_f64(), Some(id as f64), "client {id}");
+                assert!(result.get("error").is_none(), "client {id}");
+                let distance = result.get("distance").unwrap().as_f64().unwrap();
+                assert!(distance.is_finite() && distance >= 0.0, "client {id}: {distance}");
+            })
+        })
+        .collect();
+    for client in clients {
+        client.join().expect("client thread");
+    }
+    let metrics = gateway.shutdown();
+    assert_eq!(metrics.completed, 8);
+    assert_eq!(metrics.failed, 0);
+}
+
+#[test]
+fn keep_alive_connection_serves_pipelined_requests() {
+    let gateway = small_gateway(default_coordinator());
+    let mut stream = TcpStream::connect(gateway.local_addr()).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(120))).expect("timeout");
+
+    // Two identical solves written back to back on ONE connection
+    // before reading anything: the handler must answer both, in order,
+    // with identical bits (same job → same result).
+    let payload = codec::distance_job_json(&distance_job(3)).to_string_compact();
+    for _ in 0..2 {
+        write!(
+            stream,
+            "POST /solve HTTP/1.1\r\ncontent-length: {}\r\n\r\n{payload}",
+            payload.len()
+        )
+        .expect("pipelined request");
+    }
+    let mut reader = BufReader::new(stream);
+    let first = read_response(&mut reader);
+    let second = read_response(&mut reader);
+    assert_eq!((first.status, second.status), (200, 200));
+    assert_eq!(bits(&first.json(), "distance"), bits(&second.json(), "distance"));
+    assert_eq!(bits(&first.json(), "objective"), bits(&second.json(), "objective"));
+
+    // Release the connection before draining: the handler is parked in
+    // read_request waiting for a third request until we hang up.
+    drop(reader);
+    let metrics = gateway.shutdown();
+    assert_eq!(metrics.completed, 2);
+}
+
+#[test]
+fn saturated_queue_answers_429_without_stalling_the_accept_loop() {
+    // A deliberately tiny pipeline: 1 worker, queue_cap 1, batches of
+    // 1, and jobs that hold the worker for the full iteration budget.
+    // Total in-flight capacity is a handful of jobs; a burst of 10 must
+    // split into some 200s and some 429s — and NEVER a stall.
+    let gateway = small_gateway(CoordinatorConfig {
+        workers: 1,
+        shards: 1,
+        queue_cap: 1,
+        max_batch: 1,
+        batch_window: Duration::from_millis(1),
+        ..CoordinatorConfig::default()
+    });
+    let addr = gateway.local_addr();
+
+    let barrier = Arc::new(Barrier::new(10));
+    let clients: Vec<_> = (0..10u64)
+        .map(|id| {
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                let payload =
+                    codec::distance_job_json(&stalled_worker_job(id)).to_string_compact();
+                // Connect first, then fire all bodies at once: the
+                // submissions hit the queue within microseconds of each
+                // other, far faster than any job completes.
+                let mut stream = TcpStream::connect(addr).expect("connect");
+                stream.set_read_timeout(Some(Duration::from_secs(300))).expect("timeout");
+                barrier.wait();
+                write!(
+                    stream,
+                    "POST /solve HTTP/1.1\r\nconnection: close\r\ncontent-length: {}\r\n\r\n{payload}",
+                    payload.len()
+                )
+                .expect("request");
+                read_response(&mut BufReader::new(stream)).status
+            })
+        })
+        .collect();
+    let statuses: Vec<u16> = clients.into_iter().map(|c| c.join().expect("client")).collect();
+
+    assert!(statuses.iter().any(|&s| s == 429), "no backpressure rejection in {statuses:?}");
+    assert!(statuses.iter().any(|&s| s == 200), "no accepted job in {statuses:?}");
+    assert!(statuses.iter().all(|&s| s == 200 || s == 429), "unexpected status in {statuses:?}");
+
+    // The accept loop stayed responsive through the saturation burst.
+    assert_eq!(request(addr, "GET", "/healthz", b"").status, 200);
+
+    let metrics = gateway.shutdown();
+    let accepted = statuses.iter().filter(|&&s| s == 200).count() as u64;
+    assert_eq!(metrics.completed, accepted);
+    assert_eq!(metrics.failed, 0);
+}
+
+#[test]
+fn graceful_drain_completes_in_flight_and_refuses_new_connections() {
+    let gateway = small_gateway(CoordinatorConfig {
+        workers: 1,
+        shards: 1,
+        ..CoordinatorConfig::default()
+    });
+    let addr = gateway.local_addr();
+
+    let in_flight = std::thread::spawn(move || {
+        let job = codec::distance_job_json(&stalled_worker_job(77));
+        post_json(addr, "/solve", &job)
+    });
+    // Let the job reach the coordinator before draining.
+    std::thread::sleep(Duration::from_millis(300));
+    let metrics = gateway.shutdown();
+
+    // Drain returned only after the in-flight job finished — and the
+    // client got its full answer, not a torn connection.
+    let resp = in_flight.join().expect("in-flight client");
+    assert_eq!(resp.status, 200);
+    assert_eq!(resp.json().get("id").unwrap().as_f64(), Some(77.0));
+    assert_eq!(metrics.completed, 1);
+
+    // New connections are refused outright (the listener is gone). On
+    // the off chance the OS still completes the handshake, the socket
+    // must deliver zero bytes — never a served request.
+    match TcpStream::connect_timeout(&addr, Duration::from_secs(2)) {
+        Err(_) => {}
+        Ok(mut stream) => {
+            stream.set_read_timeout(Some(Duration::from_secs(5))).expect("timeout");
+            let _ = stream.write_all(b"GET /healthz HTTP/1.1\r\nconnection: close\r\n\r\n");
+            let mut sink = Vec::new();
+            let bytes = stream.read_to_end(&mut sink).unwrap_or(0);
+            assert_eq!(bytes, 0, "served a request after drain: {sink:?}");
+        }
+    }
+}
+
+#[test]
+fn metrics_endpoint_exposes_prometheus_text() {
+    let gateway = small_gateway(default_coordinator());
+    let addr = gateway.local_addr();
+    for id in 0..3 {
+        let resp = post_json(addr, "/solve", &codec::distance_job_json(&distance_job(id)));
+        assert_eq!(resp.status, 200);
+    }
+
+    let resp = request(addr, "GET", "/metrics", b"");
+    assert_eq!(resp.status, 200);
+    assert_eq!(resp.header("content-type"), Some("text/plain; version=0.0.4"));
+    let text = String::from_utf8(resp.body.clone()).expect("utf-8 exposition");
+
+    // Scrape-then-parse: every non-comment line is `name[{labels}] value`
+    // with a spar_sink_-prefixed name and a parseable float value.
+    let mut samples = 0;
+    for line in text.lines() {
+        if line.starts_with('#') {
+            assert!(
+                line.starts_with("# HELP spar_sink_") || line.starts_with("# TYPE spar_sink_"),
+                "{line}"
+            );
+            continue;
+        }
+        let (name, value) = line.rsplit_once(' ').unwrap_or_else(|| panic!("bad line '{line}'"));
+        assert!(name.starts_with("spar_sink_"), "{line}");
+        assert!(value.parse::<f64>().is_ok(), "{line}");
+        samples += 1;
+    }
+    assert!(samples >= 20, "only {samples} samples in:\n{text}");
+
+    // The counters reflect the service's actual state.
+    let completed = text
+        .lines()
+        .find(|l| l.starts_with("spar_sink_jobs_completed_total "))
+        .and_then(|l| l.rsplit_once(' '))
+        .and_then(|(_, v)| v.parse::<f64>().ok())
+        .expect("jobs_completed_total sample");
+    assert_eq!(completed, 3.0);
+    assert!(text.contains("# TYPE spar_sink_jobs_completed_total counter"), "{text}");
+    assert!(text.contains("spar_sink_shard_completed_total{shard=\"0\"}"), "{text}");
+
+    gateway.shutdown();
+}
+
+#[test]
+fn protocol_errors_carry_exact_statuses_over_the_wire() {
+    let gateway = small_gateway(default_coordinator());
+    let addr = gateway.local_addr();
+
+    assert_eq!(request(addr, "GET", "/no-such-endpoint", b"").status, 404);
+    let resp = request(addr, "DELETE", "/solve", b"");
+    assert_eq!(resp.status, 405);
+    assert_eq!(resp.header("allow"), Some("POST"));
+
+    let resp = request(addr, "POST", "/solve", b"this is not json");
+    assert_eq!(resp.status, 400);
+    assert!(resp.json().get("error").unwrap().as_str().unwrap().contains("bad JSON"));
+
+    // Header overflow straight over the socket: 431 and the connection
+    // closes.
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(120))).expect("timeout");
+    write!(stream, "GET /healthz HTTP/1.1\r\nx-big: {}\r\n\r\n", "x".repeat(9000))
+        .expect("oversized header");
+    let resp = read_response(&mut BufReader::new(stream));
+    assert_eq!(resp.status, 431);
+
+    gateway.shutdown();
+}
