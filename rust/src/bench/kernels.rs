@@ -1,0 +1,274 @@
+//! `repro bench kernels`: the kernel-level hot-loop trajectory.
+//!
+//! An n-sweep over the loops the paper's Õ(n) claim lives or dies on:
+//!
+//! * **dense-build** — the tiled `sq_euclidean_cost` / `gibbs_kernel`
+//!   builders (O(n²), the setup cost every dense baseline pays);
+//! * **sparse-lse** — `CsrMatrix::row_lse` / `col_lse`, the log engine's
+//!   per-iteration O(nnz) sweeps over the materialized log-kernel;
+//! * **mult-scaling** — the fused multiplicative sparse loop vs the
+//!   log-domain loop at a fixed iteration count (δ = 0 so neither stops
+//!   early: pure per-iteration cost, not convergence speed);
+//! * **solve** — end-to-end `api::solve` for sinkhorn vs spar-sink vs
+//!   spar-sink-log on the same balanced problem.
+//!
+//! Emits `BENCH_kernels.json` (same convention as
+//! `BENCH_coordinator.json`): the committed artifact is a schema seed —
+//! regenerate on real hardware and report deltas in the PR.
+
+use std::hint::black_box;
+
+use crate::api::{self, Method, OtProblem, SolverSpec};
+use crate::linalg::Mat;
+use crate::ot::cost::{gibbs_kernel, normalize_cost, sq_euclidean_cost};
+use crate::ot::sinkhorn::SinkhornParams;
+use crate::rng::Rng;
+use crate::solvers::log_sparse::log_sparse_scalings;
+use crate::solvers::sketch_budget;
+use crate::solvers::sparse_loop::sparse_scalings;
+use crate::sparse::{poisson_sparsify_ot, CsrMatrix};
+use crate::util::json::Json;
+
+use super::{BenchResult, Bencher};
+
+/// Workload parameters for one kernel bench run.
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    /// Support sizes to sweep (square n × n problems).
+    pub sizes: Vec<usize>,
+    /// Entropic regularization ε (cost normalized to max 1).
+    pub eps: f64,
+    /// Sketch budget multiplier (`s = s_multiplier · s₀(n)` via
+    /// [`sketch_budget`]).
+    pub s_multiplier: f64,
+    /// Fixed iteration count for the mult-vs-log scaling contrast.
+    pub scaling_iters: usize,
+    /// Use the low-budget [`Bencher::quick`] runner.
+    pub quick: bool,
+}
+
+impl BenchConfig {
+    /// The default sweep for the committed artifact.
+    pub fn full() -> Self {
+        BenchConfig {
+            sizes: vec![200, 400, 800],
+            eps: 0.05,
+            s_multiplier: 2.0,
+            scaling_iters: 20,
+            quick: false,
+        }
+    }
+
+    /// A seconds-scale configuration for CI smoke runs.
+    pub fn quick() -> Self {
+        BenchConfig {
+            sizes: vec![64, 128],
+            eps: 0.05,
+            s_multiplier: 2.0,
+            scaling_iters: 5,
+            quick: true,
+        }
+    }
+}
+
+/// One n-sized problem instance shared by every group: deterministic
+/// 2-d point clouds, normalized squared-Euclidean cost, Gibbs kernel,
+/// uniform-ish marginals, and an importance sketch at the standard
+/// budget. Everything is seeded, so reruns measure the same work.
+struct Fixture {
+    n: usize,
+    xs: Vec<Vec<f64>>,
+    ys: Vec<Vec<f64>>,
+    cost: Mat,
+    a: Vec<f64>,
+    b: Vec<f64>,
+    sketch: CsrMatrix,
+}
+
+impl Fixture {
+    fn build(n: usize, cfg: &BenchConfig) -> Self {
+        let mut rng = Rng::seed_from(41 + n as u64);
+        let point = |rng: &mut Rng| vec![rng.uniform(), rng.uniform()];
+        let xs: Vec<Vec<f64>> = (0..n).map(|_| point(&mut rng)).collect();
+        let ys: Vec<Vec<f64>> = (0..n).map(|_| point(&mut rng)).collect();
+        let cost = normalize_cost(&sq_euclidean_cost(&xs, &ys));
+        let kernel = gibbs_kernel(&cost, cfg.eps);
+        let mass = |rng: &mut Rng| {
+            let w: Vec<f64> = (0..n).map(|_| 0.5 + rng.uniform()).collect();
+            let total: f64 = w.iter().sum();
+            w.into_iter().map(|x| x / total).collect::<Vec<f64>>()
+        };
+        let a = mass(&mut rng);
+        let b = mass(&mut rng);
+        let s = sketch_budget(cfg.s_multiplier, n, n);
+        let (sketch, _) = poisson_sparsify_ot(
+            |i, j| kernel.get(i, j),
+            |i, j| cost.get(i, j),
+            &a,
+            &b,
+            s,
+            1.0,
+            &mut rng,
+        )
+        .expect("bench fixture sketch");
+        Fixture { n, xs, ys, cost, a, b, sketch }
+    }
+}
+
+/// One emitted row: the group/name/n identity plus the bench stats.
+fn row(group: &str, fx: &Fixture, nnz: usize, r: &BenchResult) -> Json {
+    Json::obj(vec![
+        ("group", Json::str(group)),
+        ("name", Json::str(r.name.clone())),
+        ("n", Json::num(fx.n as f64)),
+        ("nnz", Json::num(nnz as f64)),
+        ("mean_us", Json::num(r.mean().as_secs_f64() * 1e6)),
+        ("median_us", Json::num(r.median().as_secs_f64() * 1e6)),
+        ("sd_us", Json::num(r.stddev().as_secs_f64() * 1e6)),
+        ("samples", Json::num(r.samples.len() as f64)),
+    ])
+}
+
+/// Run the kernel bench sweep and return the `BENCH_kernels.json`
+/// document. Prints one line per benchmark as it completes.
+pub fn run(cfg: &BenchConfig) -> Json {
+    let mut rows = Vec::new();
+    for &n in &cfg.sizes {
+        let fx = Fixture::build(n, cfg);
+        let dense_nnz = n * n;
+        let sparse_nnz = fx.sketch.nnz();
+        let mut b = if cfg.quick {
+            Bencher::quick()
+        } else {
+            Bencher::default()
+        };
+
+        // dense-build: the tiled O(n²) builders.
+        let r = b.bench(format!("dense-build/sq_euclidean_cost/n={n}"), || {
+            black_box(sq_euclidean_cost(black_box(&fx.xs), black_box(&fx.ys)));
+        });
+        rows.push(row("dense-build", &fx, dense_nnz, r));
+        let r = b.bench(format!("dense-build/gibbs_kernel/n={n}"), || {
+            black_box(gibbs_kernel(black_box(&fx.cost), cfg.eps));
+        });
+        rows.push(row("dense-build", &fx, dense_nnz, r));
+
+        // sparse-lse: the log engine's O(nnz) per-iteration sweeps.
+        let g: Vec<f64> = (0..n).map(|j| (j as f64 * 0.37).sin()).collect();
+        let r = b.bench(format!("sparse-lse/row_lse/n={n}"), || {
+            black_box(fx.sketch.row_lse(black_box(&g)));
+        });
+        rows.push(row("sparse-lse", &fx, sparse_nnz, r));
+        let r = b.bench(format!("sparse-lse/col_lse/n={n}"), || {
+            black_box(fx.sketch.col_lse(black_box(&g)));
+        });
+        rows.push(row("sparse-lse", &fx, sparse_nnz, r));
+
+        // mult-scaling: fused multiplicative loop vs log loop at a
+        // fixed iteration count (δ = 0 disables early stopping).
+        let params = SinkhornParams { delta: 0.0, max_iters: cfg.scaling_iters, strict: false };
+        let r = b.bench(format!("mult-scaling/sparse_scalings/n={n}"), || {
+            black_box(
+                sparse_scalings(black_box(&fx.sketch), &fx.a, &fx.b, 1.0, &params)
+                    .expect("mult scaling runs"),
+            );
+        });
+        rows.push(row("mult-scaling", &fx, sparse_nnz, r));
+        let r = b.bench(format!("mult-scaling/log_sparse_scalings/n={n}"), || {
+            black_box(
+                log_sparse_scalings(black_box(&fx.sketch), &fx.a, &fx.b, 1.0, cfg.eps, &params)
+                    .expect("log scaling runs"),
+            );
+        });
+        rows.push(row("mult-scaling", &fx, sparse_nnz, r));
+
+        // solve: end-to-end API solves, dense baseline vs the sketches.
+        for method in [Method::Sinkhorn, Method::SparSink, Method::SparSinkLog] {
+            let problem =
+                OtProblem::balanced(fx.cost.clone(), fx.a.clone(), fx.b.clone(), cfg.eps);
+            let spec = SolverSpec::new(method)
+                .with_budget(cfg.s_multiplier)
+                .with_seed(17 + fx.n as u64);
+            let r = b.bench(format!("solve/{}/n={n}", method.name()), || {
+                black_box(api::solve(black_box(&problem), &spec).expect("bench solve"));
+            });
+            let nnz = if method == Method::Sinkhorn {
+                dense_nnz
+            } else {
+                sparse_nnz
+            };
+            rows.push(row("solve", &fx, nnz, r));
+        }
+    }
+    Json::obj(vec![
+        ("bench", Json::str("kernels")),
+        (
+            "workload",
+            Json::obj(vec![
+                ("sizes", Json::arr(cfg.sizes.iter().map(|&n| Json::num(n as f64)).collect())),
+                ("eps", Json::num(cfg.eps)),
+                ("s_multiplier", Json::num(cfg.s_multiplier)),
+                ("scaling_iters", Json::num(cfg.scaling_iters as f64)),
+                ("quick", Json::Bool(cfg.quick)),
+            ]),
+        ),
+        ("rows", Json::arr(rows)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixture_is_deterministic() {
+        // A generous multiplier keeps the expected sketch size well
+        // above zero at this tiny n (s₀(16) ≈ 0.9, so the standard 2.0
+        // would make the nonempty assertion a coin flip).
+        let cfg = BenchConfig { sizes: vec![16], s_multiplier: 50.0, ..BenchConfig::quick() };
+        let a = Fixture::build(16, &cfg);
+        let b = Fixture::build(16, &cfg);
+        assert_eq!(a.cost.as_slice(), b.cost.as_slice());
+        assert_eq!(a.sketch.nnz(), b.sketch.nnz());
+        assert_eq!(a.a, b.a);
+        assert!(a.sketch.nnz() > 0);
+        assert!(a.sketch.nnz() < 16 * 16);
+    }
+
+    #[test]
+    fn tiny_sweep_covers_every_group_and_method() {
+        // s_multiplier is generous for the same reason as above: at
+        // n = 12 the standard budget rounds to an almost-empty sketch.
+        let cfg = BenchConfig {
+            sizes: vec![12],
+            eps: 0.05,
+            s_multiplier: 25.0,
+            scaling_iters: 2,
+            quick: true,
+        };
+        let doc = run(&cfg);
+        assert_eq!(doc.get("bench").and_then(Json::as_str), Some("kernels"));
+        let rows = doc.get("rows").expect("rows").items();
+        // 2 dense-build + 2 sparse-lse + 2 mult-scaling + 3 solve rows.
+        assert_eq!(rows.len(), 9);
+        for group in ["dense-build", "sparse-lse", "mult-scaling", "solve"] {
+            assert!(
+                rows.iter().any(|r| r.get("group").and_then(Json::as_str) == Some(group)),
+                "missing group {group}"
+            );
+        }
+        for method in ["sinkhorn", "spar-sink", "spar-sink-log"] {
+            assert!(
+                rows.iter().any(|r| {
+                    r.get("name").and_then(Json::as_str).is_some_and(|s| s.contains(method))
+                }),
+                "missing solve method {method}"
+            );
+        }
+        for r in &rows {
+            assert_eq!(r.get("n").and_then(Json::as_f64), Some(12.0));
+            assert!(r.get("samples").and_then(Json::as_f64).unwrap_or(0.0) >= 1.0);
+            assert!(r.get("mean_us").and_then(Json::as_f64).unwrap_or(-1.0) >= 0.0);
+        }
+    }
+}

@@ -3,11 +3,14 @@
 //! which uses this module: warmup, timed samples, mean/median/stddev,
 //! and a rendered report. The [`coordinator`] arm (`repro bench
 //! coordinator`) instead measures the sharded distance service end to
-//! end and emits `BENCH_coordinator.json`.
+//! end and emits `BENCH_coordinator.json`; the [`kernels`] arm
+//! (`repro bench kernels`) n-sweeps the dense/sparse hot loops and
+//! emits `BENCH_kernels.json`.
 
 use std::time::{Duration, Instant};
 
 pub mod coordinator;
+pub mod kernels;
 
 /// One benchmark's measurements.
 #[derive(Clone, Debug)]
@@ -32,15 +35,21 @@ impl BenchResult {
         v[v.len() / 2]
     }
 
-    /// Sample standard deviation.
+    /// Sample standard deviation (Bessel-corrected, dividing by n−1).
+    /// Zero when fewer than two samples exist — a single measurement
+    /// has no spread estimate.
     pub fn stddev(&self) -> Duration {
+        let n = self.samples.len();
+        if n <= 1 {
+            return Duration::ZERO;
+        }
         let mean = self.mean().as_secs_f64();
         let var = self
             .samples
             .iter()
             .map(|d| (d.as_secs_f64() - mean).powi(2))
             .sum::<f64>()
-            / self.samples.len().max(1) as f64;
+            / (n - 1) as f64;
         Duration::from_secs_f64(var.sqrt())
     }
 
@@ -164,5 +173,21 @@ mod tests {
         };
         let r = b.bench("capped", || {});
         assert!(r.samples.len() <= 4);
+    }
+
+    #[test]
+    fn stddev_is_sample_not_population() {
+        let r = BenchResult {
+            name: "sd".into(),
+            samples: vec![Duration::from_secs(1), Duration::from_secs(3)],
+        };
+        // Sample sd of {1, 3}: sqrt(((1-2)² + (3-2)²) / (2-1)) = sqrt(2).
+        let want = 2.0f64.sqrt();
+        assert!((r.stddev().as_secs_f64() - want).abs() < 1e-9);
+        // Degenerate sizes have no spread estimate.
+        let one = BenchResult { name: "one".into(), samples: vec![Duration::from_secs(5)] };
+        assert_eq!(one.stddev(), Duration::ZERO);
+        let none = BenchResult { name: "none".into(), samples: vec![] };
+        assert_eq!(none.stddev(), Duration::ZERO);
     }
 }

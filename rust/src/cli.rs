@@ -140,6 +140,13 @@ pub fn usage() -> String {
              sharded-service throughput/latency on the echocardiogram\n\
              pairwise workload: 1 vs N shards, cold vs warm artifact\n\
              cache; writes BENCH_coordinator.json (or FILE)\n\
+       bench kernels [--quick] [--eps E] [--s MULT] [--out FILE]\n\
+             kernel-level hot-loop n-sweep: tiled dense cost/Gibbs\n\
+             builders, sparse row/col log-sum-exp, fused multiplicative\n\
+             vs log-domain scaling at fixed iterations, and end-to-end\n\
+             sinkhorn vs spar-sink vs spar-sink-log solves; writes\n\
+             BENCH_kernels.json (or FILE). --quick runs the CI\n\
+             seconds-scale smoke sweep\n\
        lint [--root DIR] [--config FILE] [--list-rules]\n\
              repo-native static contract checks over the rust/src tree\n\
              (README \"Static contracts\"): budget-convention (every\n\

@@ -1,0 +1,22 @@
+//! Boundary fixture for the wall-clock rule at the bench seam:
+//! harness code that times kernels with `Instant::now` and sizes its
+//! runner off machine shape. Under a `bench/` path (e.g. the
+//! `bench/kernels.rs` hot-loop arm) this must lint clean — the harness
+//! OWNS timing; measurements never feed back into solver results. The
+//! SAME text under `sparse/` or `ot/` must fire once per token line:
+//! a clock read inside the kernels being measured would make results
+//! depend on when/where the run happened.
+
+use std::time::{Duration, Instant};
+
+/// Time one closure invocation, the harness's innermost measurement.
+pub fn time_once(f: impl FnOnce()) -> Duration {
+    let t0 = Instant::now();
+    f();
+    t0.elapsed()
+}
+
+/// Default sample cap: scale with the core count, floor of 8.
+pub fn default_sample_cap() -> usize {
+    std::thread::available_parallelism().map(|n| n.get() * 4).unwrap_or(8)
+}

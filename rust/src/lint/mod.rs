@@ -217,6 +217,20 @@ mod tests {
     }
 
     #[test]
+    fn fixture_wallclock_is_legal_in_bench_but_not_sparse_or_ot() {
+        // The bench harness owns timing: the kernels arm's measurement
+        // code is clean under bench/, while the same clock reads fire
+        // line-for-line inside the kernels it measures (sparse/, ot/).
+        let src = include_str!("fixtures/wallclock_bench_ok.rs");
+        let in_bench = lint_fixture("bench/kernels.rs", src);
+        assert!(in_bench.is_empty(), "{in_bench:?}");
+        let in_sparse = lint_fixture("sparse/fixture.rs", src);
+        assert_eq!(rules_hit(&in_sparse), vec!["wall-clock", "wall-clock"]);
+        let in_ot = lint_fixture("ot/fixture.rs", src);
+        assert_eq!(rules_hit(&in_ot), vec!["wall-clock", "wall-clock"]);
+    }
+
+    #[test]
     fn fixture_lock_bad_fires_and_helper_twin_passes() {
         let bad = lint_fixture("pool/fixture.rs", include_str!("fixtures/lock_bad.rs"));
         assert_eq!(rules_hit(&bad), vec!["lock-unwrap", "lock-unwrap"]);

@@ -467,11 +467,14 @@ fn cmd_bench(args: &Args) -> i32 {
     use spar_sink::bench::coordinator::{self, BenchConfig};
 
     let Some(target) = args.positional.first() else {
-        eprintln!("bench requires a target (available: coordinator)");
+        eprintln!("bench requires a target (available: coordinator, kernels)");
         return 2;
     };
+    if target == "kernels" {
+        return cmd_bench_kernels(args);
+    }
     if target != "coordinator" {
-        eprintln!("unknown bench target '{target}' (available: coordinator)");
+        eprintln!("unknown bench target '{target}' (available: coordinator, kernels)");
         return 2;
     }
     let workers: usize = args.get_parsed("workers", spar_sink::pool::num_threads().clamp(2, 8));
@@ -485,6 +488,30 @@ fn cmd_bench(args: &Args) -> i32 {
     cfg.steal = !args.flag("no-steal");
     let doc = coordinator::run(&cfg);
     let path = args.get("out").unwrap_or("BENCH_coordinator.json");
+    match std::fs::write(path, doc.to_string_compact()) {
+        Ok(()) => {
+            println!("[bench rows written to {path}]");
+            0
+        }
+        Err(e) => {
+            eprintln!("could not write {path}: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_bench_kernels(args: &Args) -> i32 {
+    use spar_sink::bench::kernels::{self, BenchConfig};
+
+    let mut cfg = if args.flag("quick") {
+        BenchConfig::quick()
+    } else {
+        BenchConfig::full()
+    };
+    cfg.eps = args.get_parsed("eps", cfg.eps);
+    cfg.s_multiplier = args.get_parsed("s", cfg.s_multiplier);
+    let doc = kernels::run(&cfg);
+    let path = args.get("out").unwrap_or("BENCH_kernels.json");
     match std::fs::write(path, doc.to_string_compact()) {
         Ok(()) => {
             println!("[bench rows written to {path}]");

@@ -21,17 +21,57 @@ pub fn sq_euclidean(x: &[f64], y: &[f64]) -> f64 {
     x.iter().zip(y).map(|(a, b)| (a - b) * (a - b)).sum()
 }
 
+/// Tile height (rows) of the blocked dense builders. One tile of
+/// `TILE_ROWS × TILE_COLS` f64 values (32 KiB) fits comfortably in L1
+/// alongside the source points it reads.
+pub const TILE_ROWS: usize = 32;
+
+/// Tile width (columns) of the blocked dense builders: the column strip
+/// re-traversed for each row of a tile, sized so the strip of `ys`
+/// points stays cache-resident across the tile's rows.
+pub const TILE_COLS: usize = 128;
+
+/// Run `f(i, j0, seg)` over fixed-size cache tiles of an `n × m`
+/// row-major buffer: `seg` is the slice of row `i` covering columns
+/// `j0 .. j0 + seg.len()`.
+///
+/// The tile grid is fixed by [`TILE_ROWS`]/[`TILE_COLS`] and the block
+/// order is independent of thread count (workers split whole row-bands
+/// via [`pool::parallel_fill_row_tiles`]); every entry is written
+/// exactly once by a pure function of its (i, j), so tiling cannot
+/// change a single bit relative to the naive row sweep — pinned by
+/// `parallel_builders_match_from_fn`, the tiled-builder property test,
+/// and the `thread_determinism` wall.
+fn fill_tiled<F>(data: &mut [f64], m: usize, f: F)
+where
+    F: Fn(usize, usize, &mut [f64]) + Sync,
+{
+    pool::parallel_fill_row_tiles(data, m, TILE_ROWS, |r0, r1, slab| {
+        let mut j0 = 0;
+        while j0 < m {
+            let j1 = (j0 + TILE_COLS).min(m);
+            for i in r0..r1 {
+                let base = (i - r0) * m;
+                f(i, j0, &mut slab[base + j0..base + j1]);
+            }
+            j0 = j1;
+        }
+    });
+}
+
 /// Pairwise squared-Euclidean cost matrix `C_ij = ||x_i - y_j||²`.
 ///
-/// Row loops run on [`pool::parallel_fill_rows`]: each row is one
-/// worker's contiguous write and every entry is an independent function
-/// of (i, j), so the result is bit-identical for any thread count.
+/// Blocked into [`TILE_ROWS`]`×`[`TILE_COLS`] cache tiles via
+/// [`fill_tiled`]: the `ys` strip of a tile stays hot across its rows.
+/// Every entry is an independent function of (i, j) and the tile grid
+/// is thread-count independent, so the result is bit-identical for any
+/// thread count and to the untiled row sweep.
 pub fn sq_euclidean_cost(xs: &[Vec<f64>], ys: &[Vec<f64>]) -> Mat {
     let (n, m) = (xs.len(), ys.len());
     let mut data = vec![0.0; n * m];
-    pool::parallel_fill_rows(&mut data, m, |i, row| {
+    fill_tiled(&mut data, m, |i, j0, seg| {
         let x = &xs[i];
-        for (out, y) in row.iter_mut().zip(ys) {
+        for (out, y) in seg.iter_mut().zip(&ys[j0..]) {
             *out = sq_euclidean(x, y);
         }
     });
@@ -64,14 +104,14 @@ pub fn wfr_kernel_from_distance(d: f64, eta: f64, eps: f64) -> f64 {
 }
 
 /// Pairwise WFR cost matrix from supports (Euclidean ground distance).
-/// Parallel over rows like [`sq_euclidean_cost`], bit-deterministic for
-/// any thread count.
+/// Cache-tiled like [`sq_euclidean_cost`], bit-deterministic for any
+/// thread count and bitwise-equal to the untiled row sweep.
 pub fn wfr_cost(xs: &[Vec<f64>], ys: &[Vec<f64>], eta: f64) -> Mat {
     let (n, m) = (xs.len(), ys.len());
     let mut data = vec![0.0; n * m];
-    pool::parallel_fill_rows(&mut data, m, |i, row| {
+    fill_tiled(&mut data, m, |i, j0, seg| {
         let x = &xs[i];
-        for (out, y) in row.iter_mut().zip(ys) {
+        for (out, y) in seg.iter_mut().zip(&ys[j0..]) {
             *out = wfr_cost_from_distance(euclidean(x, y), eta);
         }
     });
@@ -79,12 +119,13 @@ pub fn wfr_cost(xs: &[Vec<f64>], ys: &[Vec<f64>], eta: f64) -> Mat {
 }
 
 /// Gibbs kernel `K = exp(-C / ε)`, mapping `C = ∞` to exactly 0.
-/// Parallel over rows, bit-deterministic for any thread count.
+/// Cache-tiled like [`sq_euclidean_cost`], bit-deterministic for any
+/// thread count and bitwise-equal to the untiled row sweep.
 pub fn gibbs_kernel(cost: &Mat, eps: f64) -> Mat {
     let (n, m) = (cost.rows(), cost.cols());
     let mut data = vec![0.0; n * m];
-    pool::parallel_fill_rows(&mut data, m, |i, row| {
-        for (out, &c) in row.iter_mut().zip(cost.row(i)) {
+    fill_tiled(&mut data, m, |i, j0, seg| {
+        for (out, &c) in seg.iter_mut().zip(&cost.row(i)[j0..]) {
             *out = if c.is_infinite() { 0.0 } else { (-c / eps).exp() };
         }
     });
@@ -266,6 +307,21 @@ mod tests {
         // Empty shapes are fine.
         assert_eq!(sq_euclidean_cost(&pts, &[]).cols(), 0);
         assert_eq!(sq_euclidean_cost(&[], &tgt).rows(), 0);
+    }
+
+    #[test]
+    fn tiled_builders_match_reference_at_tile_boundaries() {
+        for &n in &[TILE_ROWS - 1, TILE_ROWS, TILE_ROWS + 1] {
+            for &m in &[TILE_COLS - 1, TILE_COLS, TILE_COLS + 1] {
+                let xs: Vec<Vec<f64>> =
+                    (0..n).map(|i| vec![(i as f64 * 0.618).fract()]).collect();
+                let ys: Vec<Vec<f64>> =
+                    (0..m).map(|j| vec![(j as f64 * 0.383).fract()]).collect();
+                let c = sq_euclidean_cost(&xs, &ys);
+                let c_ref = Mat::from_fn(n, m, |i, j| sq_euclidean(&xs[i], &ys[j]));
+                assert_eq!(c.as_slice(), c_ref.as_slice(), "{n}x{m}");
+            }
+        }
     }
 
     #[test]

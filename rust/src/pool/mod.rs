@@ -84,6 +84,76 @@ impl<T> Copy for SendPtr<T> {}
 unsafe impl<T> Send for SendPtr<T> {}
 unsafe impl<T> Sync for SendPtr<T> {}
 
+/// [`parallel_map`] with chunk-local scratch state: `init()` runs once
+/// per worker chunk and the resulting value is threaded through every
+/// `f(&mut scratch, i)` call in that chunk. This is the allocation
+/// hoist for per-item temporary buffers — the fused streaming-LSE row
+/// sweep reuses one scratch vector across all rows of a chunk instead
+/// of allocating per row. `f` must not let results depend on scratch
+/// *contents* carried across items (only capacity), or chunk boundaries
+/// would leak into outputs.
+pub fn parallel_map_init<T, S, FI, F>(len: usize, init: FI, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    FI: Fn() -> S + Sync,
+    F: Fn(&mut S, usize) -> T + Sync,
+{
+    let mut out = vec![T::default(); len];
+    {
+        let out_ptr = SendPtr(out.as_mut_ptr());
+        parallel_chunks(len, |start, end| {
+            // SAFETY: chunks are disjoint, each index written exactly
+            // once, and the vector outlives the scope.
+            let p = out_ptr;
+            let mut scratch = init();
+            for i in start..end {
+                unsafe { *p.0.add(i) = f(&mut scratch, i) };
+            }
+        });
+    }
+    out
+}
+
+/// Tiled variant of [`parallel_fill_rows`]: rows are grouped into
+/// fixed-height blocks of `tile_rows` (the last block may be shorter)
+/// and `f(row_start, row_end, slab)` writes one whole block into its
+/// contiguous slab of `(row_end - row_start) * width` elements.
+///
+/// Block boundaries depend only on the total row count — never on the
+/// worker count — and workers own contiguous runs of whole blocks, so
+/// any builder whose entries are independent functions of their index
+/// stays bit-identical across `SPAR_SINK_THREADS` (the same contract
+/// as [`parallel_fill_rows`], pinned by the `thread_determinism` wall).
+/// The block shape is what lets the dense cost/Gibbs builders loop
+/// column tiles inside a row block for cache locality.
+pub fn parallel_fill_row_tiles<T, F>(out: &mut [T], width: usize, tile_rows: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, usize, &mut [T]) + Sync,
+{
+    if width == 0 || out.is_empty() {
+        return;
+    }
+    assert!(tile_rows > 0, "tile height must be positive");
+    assert_eq!(out.len() % width, 0, "buffer is not a whole number of rows");
+    let rows = out.len() / width;
+    let tiles = rows.div_ceil(tile_rows);
+    let ptr = SendPtr(out.as_mut_ptr());
+    parallel_chunks(tiles, |start, end| {
+        for t in start..end {
+            let r0 = t * tile_rows;
+            let r1 = (r0 + tile_rows).min(rows);
+            // SAFETY: blocks are disjoint contiguous slices of `out`,
+            // each written by exactly one worker, and `out` outlives
+            // the scoped threads inside `parallel_chunks`.
+            let slab = unsafe {
+                std::slice::from_raw_parts_mut(ptr.0.add(r0 * width), (r1 - r0) * width)
+            };
+            f(r0, r1, slab);
+        }
+    });
+}
+
 /// Fill `out` (a whole number of `width`-sized rows) in parallel:
 /// `f(i, row)` writes row `i` into its disjoint slice. Built on
 /// [`parallel_chunks`], so rows are split into contiguous per-worker
@@ -231,6 +301,43 @@ mod tests {
         parallel_chunks(0, |_, _| panic!("must not run"));
         let out = parallel_map(1, |i| i + 1);
         assert_eq!(out, vec![1]);
+    }
+
+    #[test]
+    fn map_init_matches_map_and_reuses_scratch() {
+        let want = parallel_map(301, |i| i * 3);
+        let got = parallel_map_init(301, Vec::<usize>::new, |scratch, i| {
+            scratch.clear();
+            scratch.extend(0..3);
+            i * scratch.len()
+        });
+        assert_eq!(got, want);
+        assert_eq!(parallel_map_init(0, || (), |(), i| i), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn fill_row_tiles_covers_every_entry_once() {
+        // Tile heights straddling the row count, including the
+        // boundary cases tile-1 / tile / tile+1 rows.
+        for rows in [1usize, 6, 7, 8, 23] {
+            for tile in [1usize, 7, 32] {
+                let width = 5;
+                let mut out = vec![0usize; rows * width];
+                parallel_fill_row_tiles(&mut out, width, tile, |r0, r1, slab| {
+                    assert_eq!(slab.len(), (r1 - r0) * width);
+                    for (k, v) in slab.iter_mut().enumerate() {
+                        *v = r0 * width + k + 1;
+                    }
+                });
+                for (k, v) in out.iter().enumerate() {
+                    assert_eq!(*v, k + 1, "rows {rows} tile {tile}");
+                }
+            }
+        }
+        // Degenerate shapes are no-ops.
+        parallel_fill_row_tiles(&mut [] as &mut [usize], 4, 8, |_, _, _| panic!("must not run"));
+        let mut some = vec![0usize; 3];
+        parallel_fill_row_tiles(&mut some, 0, 8, |_, _, _| panic!("must not run"));
     }
 
     #[test]

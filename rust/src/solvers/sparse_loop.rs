@@ -48,20 +48,32 @@ pub fn sparse_scalings(
     let mut v_prev = vec![1.0; m];
     let mut displacement = f64::INFINITY;
     let mut iters = 0;
+    // `rho == 1.0` (balanced OT) is loop-invariant: hoist the branch so
+    // the fused update closures stay branch-free on the hot path.
+    let unbalanced = rho != 1.0;
     while iters < params.max_iters {
         iters += 1;
         u_prev.copy_from_slice(&u);
         v_prev.copy_from_slice(&v);
-        let kv = sketch.matvec(&v);
-        for i in 0..n {
-            let val = sketch_div(a[i], kv[i]);
-            u[i] = if rho == 1.0 { val } else { val.powf(rho) };
-        }
-        let ktu = sketch.matvec_t(&u);
-        for j in 0..m {
-            let val = sketch_div(b[j], ktu[j]);
-            v[j] = if rho == 1.0 { val } else { val.powf(rho) };
-        }
+        // Fused matvec + elementwise divide: one pass over the CSR
+        // arrays per half-update, no per-iteration allocation, values
+        // bitwise-identical to the unfused matvec-then-divide sequence.
+        sketch.matvec_map_into(&v, &mut u, |i, kv| {
+            let val = sketch_div(a[i], kv);
+            if unbalanced {
+                val.powf(rho)
+            } else {
+                val
+            }
+        });
+        sketch.matvec_t_map_into(&u, &mut v, |j, ktu| {
+            let val = sketch_div(b[j], ktu);
+            if unbalanced {
+                val.powf(rho)
+            } else {
+                val
+            }
+        });
         if u.iter().chain(v.iter()).any(|x| !x.is_finite()) {
             return Err(Error::Numerical(format!(
                 "sparse scalings diverged at iteration {iters}"

@@ -10,6 +10,8 @@
 //! [`CsrMatrix::row_lse`] / [`CsrMatrix::col_lse`] log-sum-exp
 //! primitives without ever forming a kernel entry.
 
+use std::sync::OnceLock;
+
 use crate::error::{Error, Result};
 use crate::ot::barycenter::KernelOp;
 use crate::pool;
@@ -31,6 +33,12 @@ pub struct CsrMatrix {
     /// `None` means "derive from `kernel`" — correct whenever the kernel
     /// values did not underflow.
     log_kernel: Option<Vec<f64>>,
+    /// Derived `ln K̃` values, materialized lazily on the first
+    /// log-domain sweep when no explicit `log_kernel` is stored. The
+    /// LSE hot loops stream this array directly, so `ln` is computed
+    /// once per stored entry over the matrix lifetime — never inside a
+    /// scaling sweep.
+    derived_logk: OnceLock<Vec<f64>>,
 }
 
 /// One sampled entry during construction.
@@ -85,7 +93,16 @@ impl CsrMatrix {
                 row_ptr[r] = row_ptr[r - 1];
             }
         }
-        Ok(CsrMatrix { rows, cols, row_ptr, col_idx, kernel, cost, log_kernel: None })
+        Ok(CsrMatrix {
+            rows,
+            cols,
+            row_ptr,
+            col_idx,
+            kernel,
+            cost,
+            log_kernel: None,
+            derived_logk: OnceLock::new(),
+        })
     }
 
     /// Build directly from per-row entry lists (already sorted by column).
@@ -107,7 +124,16 @@ impl CsrMatrix {
             }
             row_ptr.push(col_idx.len());
         }
-        CsrMatrix { rows, cols, row_ptr, col_idx, kernel, cost, log_kernel: None }
+        CsrMatrix {
+            rows,
+            cols,
+            row_ptr,
+            col_idx,
+            kernel,
+            cost,
+            log_kernel: None,
+            derived_logk: OnceLock::new(),
+        }
     }
 
     /// Build from per-row entry lists carrying explicit log-kernel
@@ -137,7 +163,16 @@ impl CsrMatrix {
             }
             row_ptr.push(col_idx.len());
         }
-        CsrMatrix { rows, cols, row_ptr, col_idx, kernel, cost, log_kernel: Some(log_kernel) }
+        CsrMatrix {
+            rows,
+            cols,
+            row_ptr,
+            col_idx,
+            kernel,
+            cost,
+            log_kernel: Some(log_kernel),
+            derived_logk: OnceLock::new(),
+        }
     }
 
     /// Whether explicit log-kernel values are stored (vs derived).
@@ -145,21 +180,33 @@ impl CsrMatrix {
         self.log_kernel.is_some()
     }
 
+    /// `ln K̃` for every stored entry, as one contiguous slice aligned
+    /// with `col_idx`/`kernel`/`cost` (structure-of-arrays layout).
+    ///
+    /// Explicit log values (from [`CsrMatrix::from_rows_logk`]) are
+    /// returned directly; otherwise the logs are derived from `kernel`
+    /// exactly once, on first use, and cached for the matrix lifetime —
+    /// so the LSE sweeps never call `ln` inside their hot loops.
+    /// Underflowed (zero) kernel values map to −∞, matching the old
+    /// per-entry derivation bit for bit.
+    pub fn log_kernel_values(&self) -> &[f64] {
+        match &self.log_kernel {
+            Some(lk) => lk,
+            None => self.derived_logk.get_or_init(|| {
+                self.kernel
+                    .iter()
+                    .map(|&k| if k > 0.0 { k.ln() } else { f64::NEG_INFINITY })
+                    .collect()
+            }),
+        }
+    }
+
     /// `ln K̃` for stored entry index `e` (derived from `kernel` when no
-    /// explicit log values are stored).
+    /// explicit log values are stored). Hot loops should hoist
+    /// [`CsrMatrix::log_kernel_values`] instead of calling this per entry.
     #[inline(always)]
     fn log_kernel_at(&self, e: usize) -> f64 {
-        match &self.log_kernel {
-            Some(lk) => lk[e],
-            None => {
-                let k = self.kernel[e];
-                if k > 0.0 {
-                    k.ln()
-                } else {
-                    f64::NEG_INFINITY
-                }
-            }
-        }
+        self.log_kernel_values()[e]
     }
 
     /// Number of rows.
@@ -234,30 +281,85 @@ impl CsrMatrix {
         )
     }
 
+    /// Fused `out[i] = f(i, (K̃ x)_i)`: one pass over the CSR arrays
+    /// with the elementwise post-map applied at write-back, into a
+    /// caller-owned buffer (zero allocation per call). The accumulation
+    /// order per row is exactly [`CsrMatrix::matvec`]'s, so the result
+    /// is bitwise-identical to `matvec` followed by a map, at every
+    /// thread count.
+    pub fn matvec_map_into<F>(&self, x: &[f64], out: &mut [f64], f: F)
+    where
+        F: Fn(usize, f64) -> f64 + Sync,
+    {
+        assert_eq!(x.len(), self.cols, "sparse matvec dimension mismatch");
+        assert_eq!(out.len(), self.rows, "sparse matvec output length mismatch");
+        let row_ptr = &self.row_ptr;
+        let col_idx = &self.col_idx;
+        let vals = &self.kernel;
+        pool::parallel_fill_rows(out, 1, |i, cell| {
+            let lo = row_ptr[i];
+            let hi = row_ptr[i + 1];
+            let mut acc = 0.0;
+            for k in lo..hi {
+                acc += vals[k] * x[col_idx[k] as usize];
+            }
+            cell[0] = f(i, acc);
+        });
+    }
+
+    /// Fused `out[j] = f(j, (K̃ᵀ x)_j)` — the transpose twin of
+    /// [`CsrMatrix::matvec_map_into`]. The gather is exactly
+    /// [`CsrMatrix::matvec_t`] (deterministic chunked fold); only the
+    /// elementwise post-map is fused into the write-back, so the result
+    /// is bitwise-identical to `matvec_t` followed by a map.
+    pub fn matvec_t_map_into<F>(&self, x: &[f64], out: &mut [f64], f: F)
+    where
+        F: Fn(usize, f64) -> f64,
+    {
+        assert_eq!(out.len(), self.cols, "sparse matvec_t output length mismatch");
+        let acc = self.matvec_t(x);
+        for (j, (o, v)) in out.iter_mut().zip(acc).enumerate() {
+            *o = f(j, v);
+        }
+    }
+
     /// Row-wise log-sum-exp over stored entries:
     /// `y_i = log Σ_{j ∈ row i} exp(ln K̃_ij + g_j)` — the log-domain
     /// analogue of `matvec` (`(K̃ e^g)_i = e^{y_i}`), O(nnz) and parallel
     /// over row blocks. Rows with no entries (or whose every term is
     /// −∞) yield −∞, mirroring the `sketch_div` empty-row convention.
     /// `g` values may be −∞ (absent columns) but must not be +∞/NaN.
+    ///
+    /// The sweep is a single fused pass over the structure-of-arrays
+    /// CSR layout: each term `ln K̃ + g[col]` is gathered exactly once
+    /// (tracking the running max as it lands in a chunk-reused scratch
+    /// buffer), then summed as `exp(t − max)` over the contiguous
+    /// scratch. −∞ terms need no branch — they flow through `exp` to 0.
+    /// This is bitwise-identical to the classic two-pass max-then-sum
+    /// reference (same terms, same order, same operations), which the
+    /// `fused_row_lse_matches_two_pass_reference` test pins.
     pub fn row_lse(&self, g: &[f64]) -> Vec<f64> {
         assert_eq!(g.len(), self.cols, "sparse row_lse dimension mismatch");
-        pool::parallel_map(self.rows, |i| {
-            let lo = self.row_ptr[i];
-            let hi = self.row_ptr[i + 1];
+        let row_ptr = &self.row_ptr;
+        let col_idx = &self.col_idx;
+        let lk = self.log_kernel_values();
+        pool::parallel_map_init(self.rows, Vec::<f64>::new, |terms, i| {
+            let lo = row_ptr[i];
+            let hi = row_ptr[i + 1];
+            terms.clear();
             let mut max = f64::NEG_INFINITY;
             for e in lo..hi {
-                let t = self.log_kernel_at(e) + g[self.col_idx[e] as usize];
+                let t = lk[e] + g[col_idx[e] as usize];
                 if t > max {
                     max = t;
                 }
+                terms.push(t);
             }
             if max == f64::NEG_INFINITY {
                 return f64::NEG_INFINITY;
             }
             let mut acc = 0.0;
-            for e in lo..hi {
-                let t = self.log_kernel_at(e) + g[self.col_idx[e] as usize];
+            for &t in terms.iter() {
                 acc += (t - max).exp();
             }
             max + acc.ln()
@@ -272,6 +374,7 @@ impl CsrMatrix {
     pub fn col_lse(&self, f: &[f64]) -> Vec<f64> {
         assert_eq!(f.len(), self.rows, "sparse col_lse dimension mismatch");
         let cols = self.cols;
+        let lk = self.log_kernel_values();
         let (mx, sm) = pool::parallel_fold(
             self.rows,
             |start, end| {
@@ -282,7 +385,7 @@ impl CsrMatrix {
                         continue;
                     }
                     for e in self.row_ptr[i]..self.row_ptr[i + 1] {
-                        let t = self.log_kernel_at(e) + f[i];
+                        let t = lk[e] + f[i];
                         if t == f64::NEG_INFINITY {
                             continue;
                         }
@@ -605,6 +708,119 @@ mod tests {
             if *w > 0.0 {
                 assert!((lse.exp() - w).abs() < 1e-10 * w.max(1.0));
             }
+        }
+    }
+
+    /// Classic two-pass scalar LSE over one row: max sweep, then a
+    /// separate sum sweep re-gathering every term. This is the
+    /// pre-fusion `row_lse` body, kept as the bitwise reference.
+    fn row_lse_two_pass(m: &CsrMatrix, g: &[f64]) -> Vec<f64> {
+        let lk = m.log_kernel_values();
+        (0..m.rows())
+            .map(|i| {
+                let lo = m.row_ptr[i];
+                let hi = m.row_ptr[i + 1];
+                let mut max = f64::NEG_INFINITY;
+                for e in lo..hi {
+                    let t = lk[e] + g[m.col_idx[e] as usize];
+                    if t > max {
+                        max = t;
+                    }
+                }
+                if max == f64::NEG_INFINITY {
+                    return f64::NEG_INFINITY;
+                }
+                let mut acc = 0.0;
+                for e in lo..hi {
+                    let t = lk[e] + g[m.col_idx[e] as usize];
+                    acc += (t - max).exp();
+                }
+                max + acc.ln()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fused_row_lse_matches_two_pass_reference() {
+        let mut rng = crate::rng::Rng::seed_from(2024);
+        for (rows, cols, density) in [(1, 1, 1.0), (7, 5, 0.5), (40, 33, 0.2), (16, 64, 0.7)] {
+            let mut entries = vec![Vec::new(); rows];
+            for row in entries.iter_mut() {
+                for j in 0..cols {
+                    if rng.bernoulli(density) {
+                        row.push((j as u32, rng.uniform() * 2.0, rng.uniform()));
+                    }
+                }
+            }
+            let m = CsrMatrix::from_rows(rows, cols, entries);
+            let g: Vec<f64> = (0..cols).map(|_| (rng.uniform() - 0.5) * 8.0).collect();
+            let want = row_lse_two_pass(&m, &g);
+            let got = m.row_lse(&g);
+            for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "row {i} ({rows}x{cols})");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_row_lse_handles_all_neg_infinity_rows() {
+        // Row 0: every term masked by a −∞ potential. Row 1: empty.
+        // Row 2: underflowed (zero) kernel values → derived logs are −∞.
+        let m = CsrMatrix::from_rows(
+            3,
+            2,
+            vec![vec![(0, 1.0, 0.0)], vec![], vec![(0, 0.0, 0.0), (1, 0.0, 0.0)]],
+        );
+        let g = [f64::NEG_INFINITY, 0.5];
+        let want = row_lse_two_pass(&m, &g);
+        let got = m.row_lse(&g);
+        for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "row {i}");
+        }
+        assert_eq!(got[0], f64::NEG_INFINITY);
+        assert_eq!(got[1], f64::NEG_INFINITY);
+        assert_eq!(got[2], f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn log_kernel_values_materializes_once_and_matches_per_entry_ln() {
+        let m = CsrMatrix::from_rows(
+            2,
+            2,
+            vec![vec![(0, 2.0, 0.0), (1, 0.0, 0.0)], vec![(1, 0.25, 0.0)]],
+        );
+        let first = m.log_kernel_values().as_ptr();
+        let lk = m.log_kernel_values();
+        // Same cached allocation on every call.
+        assert_eq!(first, lk.as_ptr());
+        assert_eq!(lk.len(), m.nnz());
+        assert_eq!(lk[0].to_bits(), 2.0f64.ln().to_bits());
+        assert_eq!(lk[1], f64::NEG_INFINITY);
+        assert_eq!(lk[2].to_bits(), 0.25f64.ln().to_bits());
+        // Explicit log storage is returned verbatim, not re-derived.
+        let e = CsrMatrix::from_rows_logk(1, 1, vec![vec![(0, 0.0, -900.0, 0.0)]]);
+        assert_eq!(e.log_kernel_values(), &[-900.0]);
+    }
+
+    #[test]
+    fn matvec_map_into_matches_unfused_sequence() {
+        let m = example();
+        let x = [0.5, 2.0, 1.5];
+        let a = [0.2, 0.3, 0.5];
+        let post = |i: usize, v: f64| if v == 0.0 { 0.0 } else { a[i] / v };
+        let mv = m.matvec(&x);
+        let want: Vec<f64> = mv.iter().enumerate().map(|(i, &v)| post(i, v)).collect();
+        let mut got = vec![0.0; m.rows()];
+        m.matvec_map_into(&x, &mut got, post);
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.to_bits(), w.to_bits());
+        }
+        let mvt = m.matvec_t(&x);
+        let want_t: Vec<f64> = mvt.iter().enumerate().map(|(j, &v)| post(j, v)).collect();
+        let mut got_t = vec![0.0; m.cols()];
+        m.matvec_t_map_into(&x, &mut got_t, post);
+        for (g, w) in got_t.iter().zip(&want_t) {
+            assert_eq!(g.to_bits(), w.to_bits());
         }
     }
 }

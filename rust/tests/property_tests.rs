@@ -8,7 +8,10 @@
 use spar_sink::api::{self, Method, OtProblem, SolverSpec};
 use spar_sink::linalg::{l1_diff, Mat};
 use spar_sink::metrics::s0;
-use spar_sink::ot::cost::{gibbs_kernel, sq_euclidean_cost, wfr_cost_from_distance};
+use spar_sink::ot::cost::{
+    euclidean, gibbs_kernel, sq_euclidean, sq_euclidean_cost, wfr_cost, wfr_cost_from_distance,
+    TILE_COLS, TILE_ROWS,
+};
 use spar_sink::ot::log_barycenter::log_ibp_barycenter;
 use spar_sink::ot::objective::{kl_divergence, plan_marginals_dense};
 use spar_sink::ot::sinkhorn::{sinkhorn_scalings, transport_plan, SinkhornParams};
@@ -391,5 +394,63 @@ fn prop_log_ibp_permutation_equivariant() {
             sup < 1e-8,
             "case {case} seed {seed} eps {eps:.2e}: equivariance sup gap {sup}"
         );
+    }
+}
+
+/// Property: the cache-tiled dense builders (`sq_euclidean_cost`,
+/// `wfr_cost`, `gibbs_kernel`) are bitwise-equal to a naive scalar
+/// row sweep over every shape, with the sampled sizes concentrated on
+/// the tile boundaries (tile−1, tile, tile+1) where blocking bugs
+/// live. Rectangular shapes included. Thread-count invariance of the
+/// same builders (`SPAR_SINK_THREADS` ∈ {1, 3, default}) is pinned by
+/// the single-binary `thread_determinism` wall, which owns that env
+/// var.
+#[test]
+fn prop_tiled_builders_bitwise_equal_naive_reference() {
+    let mut master = Rng::seed_from(0x100B);
+    // Tile-boundary biased size draw: t−1, t, t+1, or anything in
+    // [1, 2t) covering sub-tile, exact-tile, and multi-tile extents.
+    let boundary = |t: usize, rng: &mut Rng| match rng.gen_range(4) {
+        0 => t - 1,
+        1 => t,
+        2 => t + 1,
+        _ => 1 + rng.gen_range(2 * t),
+    };
+    for case in 0..cases() {
+        let seed = master.next_u64();
+        let mut rng = Rng::seed_from(seed);
+        let n = boundary(TILE_ROWS, &mut rng);
+        let m = boundary(TILE_COLS, &mut rng);
+        let d = 1 + rng.gen_range(3);
+        let pt = |rng: &mut Rng| -> Vec<f64> { (0..d).map(|_| rng.uniform()).collect() };
+        let xs: Vec<Vec<f64>> = (0..n).map(|_| pt(&mut rng)).collect();
+        let ys: Vec<Vec<f64>> = (0..m).map(|_| pt(&mut rng)).collect();
+        let check = |got: &Mat, want: &Mat, what: &str| {
+            for (e, (a, b)) in got.as_slice().iter().zip(want.as_slice()).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "case {case} seed {seed} {what} {n}x{m}: entry {e} differs ({a} vs {b})"
+                );
+            }
+        };
+        let c = sq_euclidean_cost(&xs, &ys);
+        let c_ref = Mat::from_fn(n, m, |i, j| sq_euclidean(&xs[i], &ys[j]));
+        check(&c, &c_ref, "sq_euclidean_cost");
+        let eta = 0.2 + rng.uniform();
+        let w = wfr_cost(&xs, &ys, eta);
+        let w_ref =
+            Mat::from_fn(n, m, |i, j| wfr_cost_from_distance(euclidean(&xs[i], &ys[j]), eta));
+        check(&w, &w_ref, "wfr_cost");
+        let eps = 0.05 + rng.uniform() * 0.3;
+        let g = gibbs_kernel(&w, eps);
+        let g_ref = w_ref.map(|c| {
+            if c.is_infinite() {
+                0.0
+            } else {
+                (-c / eps).exp()
+            }
+        });
+        check(&g, &g_ref, "gibbs_kernel");
     }
 }

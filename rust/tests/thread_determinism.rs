@@ -20,7 +20,10 @@ use spar_sink::coordinator::{
 };
 use spar_sink::engine::{CostArtifacts, FormulationKey};
 use spar_sink::linalg::Mat;
-use spar_sink::ot::cost::{gibbs_kernel, sq_euclidean_cost, wfr_cost};
+use spar_sink::ot::cost::{
+    euclidean, gibbs_kernel, sq_euclidean, sq_euclidean_cost, wfr_cost, wfr_cost_from_distance,
+    TILE_COLS, TILE_ROWS,
+};
 use spar_sink::rng::Rng;
 
 const CASES: usize = 12;
@@ -109,6 +112,49 @@ fn parallel_builders_are_thread_count_invariant() {
                     "{tag}: uot factor {x} vs {y}"
                 );
             }
+        }
+    }
+
+    // Tiled-builder leg: the cache-tiled builders must reproduce the
+    // scalar `Mat::from_fn` reference — the pre-tiling output — bitwise
+    // at every thread count, on the tile-boundary and rectangular
+    // shapes where blocking bugs live.
+    let tile_shapes = [
+        (TILE_ROWS - 1, TILE_COLS - 1),
+        (TILE_ROWS, TILE_COLS),
+        (TILE_ROWS + 1, TILE_COLS + 1),
+        (2 * TILE_ROWS + 5, 9),
+        (5, 2 * TILE_COLS + 3),
+    ];
+    for &(n, m) in &tile_shapes {
+        let mut rng = Rng::seed_from(0x7D_0003 ^ (((n as u64) << 16) | m as u64));
+        let xs: Vec<Vec<f64>> =
+            (0..n).map(|_| vec![rng.uniform() * 3.0, rng.uniform() * 3.0]).collect();
+        let ys: Vec<Vec<f64>> =
+            (0..m).map(|_| vec![rng.uniform() * 3.0, rng.uniform() * 3.0]).collect();
+        let (eta, eps) = (0.7, 0.05);
+        let sq_ref = Mat::from_fn(n, m, |i, j| sq_euclidean(&xs[i], &ys[j]));
+        let wfr_ref =
+            Mat::from_fn(n, m, |i, j| wfr_cost_from_distance(euclidean(&xs[i], &ys[j]), eta));
+        let gibbs_ref = wfr_ref.map(|c| {
+            if c.is_infinite() {
+                0.0
+            } else {
+                (-c / eps).exp()
+            }
+        });
+        for threads in [Some("1"), Some("3"), None] {
+            match threads {
+                Some(t) => std::env::set_var("SPAR_SINK_THREADS", t),
+                None => std::env::remove_var("SPAR_SINK_THREADS"),
+            }
+            let tag = format!("tiled {n}x{m} threads {threads:?}");
+            let sq = sq_euclidean_cost(&xs, &ys);
+            assert_same_bits(&format!("{tag}: sq_euclidean_cost"), &sq, &sq_ref);
+            let wfr = wfr_cost(&xs, &ys, eta);
+            assert_same_bits(&format!("{tag}: wfr_cost"), &wfr, &wfr_ref);
+            let gibbs = gibbs_kernel(&wfr, eps);
+            assert_same_bits(&format!("{tag}: gibbs_kernel"), &gibbs, &gibbs_ref);
         }
     }
 
