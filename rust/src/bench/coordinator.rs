@@ -56,24 +56,19 @@ impl BenchConfig {
 /// The echocardiogram pairwise job list: every kept frame against every
 /// later one, per ε. All measures share ONE grid `Arc`, so jobs of one
 /// ε share one fingerprint (maximal artifact reuse, maximal routing
-/// skew — the stealing stress case).
-fn pairwise_jobs(cfg: &BenchConfig) -> Vec<DistanceJob> {
+/// skew — the stealing stress case). Deterministic in its arguments —
+/// public because it is ALSO the replay workload of the gateway load
+/// generator ([`crate::net`] loadgen and `repro bench gateway`), so
+/// serving benchmarks and coordinator benchmarks stress the same jobs.
+pub fn pairwise_jobs(size: usize, frames: usize, eps_values: &[f64]) -> Vec<DistanceJob> {
     let mut rng = Rng::seed_from(7);
     let video = generate(
-        &EchoConfig {
-            size: cfg.size,
-            frames: cfg.frames,
-            period: 12.0,
-            health: Health::Normal,
-            noise: 0.01,
-        },
+        &EchoConfig { size, frames, period: 12.0, health: Health::Normal, noise: 0.01 },
         &mut rng,
     );
     let keep = downsample_frames(&video, 3);
     let grid: Arc<Vec<Vec<f64>>> = Arc::new(
-        (0..cfg.size * cfg.size)
-            .map(|k| vec![(k % cfg.size) as f64, (k / cfg.size) as f64])
-            .collect(),
+        (0..size * size).map(|k| vec![(k % size) as f64, (k / size) as f64]).collect(),
     );
     let measures: Vec<Measure> = keep
         .iter()
@@ -87,7 +82,7 @@ fn pairwise_jobs(cfg: &BenchConfig) -> Vec<DistanceJob> {
         .collect();
     let mut jobs = Vec::new();
     let mut id = 0u64;
-    for &eps in &cfg.eps_values {
+    for &eps in eps_values {
         for i in 0..measures.len() {
             for j in (i + 1)..measures.len() {
                 jobs.push(DistanceJob {
@@ -95,7 +90,7 @@ fn pairwise_jobs(cfg: &BenchConfig) -> Vec<DistanceJob> {
                     source: measures[i].clone(),
                     target: measures[j].clone(),
                     method: Method::SparSink,
-                    spec: ProblemSpec { eta: cfg.size as f64 / 7.5, eps, ..Default::default() },
+                    spec: ProblemSpec { eta: size as f64 / 7.5, eps, ..Default::default() },
                     seed: id,
                 });
                 id += 1;
@@ -110,7 +105,7 @@ fn pairwise_jobs(cfg: &BenchConfig) -> Vec<DistanceJob> {
 /// service-lifetime snapshots at the end of each pass (the histogram
 /// cannot be reset); the cache fields are per-pass deltas.
 pub fn run(cfg: &BenchConfig) -> Json {
-    let jobs = pairwise_jobs(cfg);
+    let jobs = pairwise_jobs(cfg.size, cfg.frames, &cfg.eps_values);
     let mut rows = Vec::new();
     for &shards in &cfg.shard_counts {
         let service = DistanceService::start(CoordinatorConfig {
@@ -183,8 +178,8 @@ mod tests {
     #[test]
     fn workload_is_deterministic_and_fingerprint_shaped() {
         let cfg = BenchConfig { size: 8, frames: 9, ..BenchConfig::quick(2) };
-        let a = pairwise_jobs(&cfg);
-        let b = pairwise_jobs(&cfg);
+        let a = pairwise_jobs(cfg.size, cfg.frames, &cfg.eps_values);
+        let b = pairwise_jobs(cfg.size, cfg.frames, &cfg.eps_values);
         assert!(!a.is_empty());
         assert_eq!(a.len(), b.len());
         // Deterministic workload: same ids, seeds and masses both times.

@@ -1,0 +1,187 @@
+//! `repro bench gateway`: serving throughput/latency of the balancer +
+//! gateway stack under the replay load generator, emitting
+//! `BENCH_gateway.json`.
+//!
+//! Three scenario families on one machine, all loopback:
+//!
+//! * `direct` — loadgen straight at one gateway (the single-process
+//!   baseline the balancer rows are read against).
+//! * `balanced-N` — the same load through a [`Balancer`] fronting N
+//!   gateway backends; the fingerprint-affine router keeps each ε
+//!   class's artifact cache warm on one backend.
+//! * `saturated` — a deliberately starved gateway (one worker, queue
+//!   cap 1, batch size 1) driven directly, so the report's 429 rate is
+//!   exercised, not just zero. (Through the balancer a 429 is retried
+//!   internally and clients see 200 or a budget-exhausted 503 — that
+//!   policy is pinned by `tests/balancer_integration.rs`, not here.)
+//!
+//! Rows carry the [`LoadReport`](crate::net::loadgen::LoadReport)
+//! counters; numbers are hardware-dependent, but `failed_other` and
+//! `io_errors` should be 0 in every scenario on a healthy stack.
+
+use std::time::Duration;
+
+use crate::coordinator::CoordinatorConfig;
+use crate::net::balancer::{Balancer, BalancerConfig};
+use crate::net::gateway::spawn_backends;
+use crate::net::loadgen::{self, LoadgenConfig};
+use crate::util::json::Json;
+
+/// Workload + topology parameters for one gateway bench run.
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    /// Worker threads per backend service.
+    pub workers: usize,
+    /// Workload pixel-grid side (`size²` support points per measure).
+    pub size: usize,
+    /// Workload frames per video (downsampled 3:1 before pairing).
+    pub frames: usize,
+    /// Workload ε sweep (affinity classes for the balancer to place).
+    pub eps_values: Vec<f64>,
+    /// Requests per scenario.
+    pub jobs: usize,
+    /// Concurrent loadgen clients.
+    pub clients: usize,
+    /// Backend counts for the `balanced-N` scenarios.
+    pub backend_counts: Vec<usize>,
+}
+
+impl BenchConfig {
+    /// A minutes-scale configuration for the committed artifact.
+    pub fn quick(workers: usize) -> Self {
+        BenchConfig {
+            workers,
+            size: 12,
+            frames: 12,
+            eps_values: vec![0.05, 0.1],
+            jobs: 48,
+            clients: 4,
+            backend_counts: vec![1, 2],
+        }
+    }
+}
+
+/// One scenario: stand the topology up, replay the workload, tear it
+/// down, return the row.
+fn scenario(
+    name: &str,
+    cfg: &BenchConfig,
+    backend_config: &CoordinatorConfig,
+    backends: usize,
+    balanced: bool,
+) -> Json {
+    let mut gateways = spawn_backends(backends, backend_config).expect("bench backends start");
+    let mut balancer = None;
+    let target = if balanced {
+        let b = Balancer::start(BalancerConfig {
+            backends: gateways.iter().map(|g| g.local_addr().to_string()).collect(),
+            ..BalancerConfig::default()
+        })
+        .expect("bench balancer starts");
+        let addr = b.local_addr().to_string();
+        balancer = Some(b);
+        addr
+    } else {
+        gateways[0].local_addr().to_string()
+    };
+    let report = loadgen::run(&LoadgenConfig {
+        addr: target,
+        clients: cfg.clients,
+        jobs: cfg.jobs,
+        size: cfg.size,
+        frames: cfg.frames,
+        eps_values: cfg.eps_values.clone(),
+        ..LoadgenConfig::default()
+    })
+    .expect("bench loadgen runs");
+    println!("gateway bench: {name}: {}", report.render());
+    if let Some(mut b) = balancer.take() {
+        b.drain();
+    }
+    for gateway in &mut gateways {
+        gateway.drain();
+    }
+    let Json::Obj(mut row) = report.json() else {
+        unreachable!("LoadReport::json renders an object")
+    };
+    row.insert("scenario".to_string(), Json::str(name));
+    row.insert("backends".to_string(), Json::num(backends as f64));
+    row.insert("clients".to_string(), Json::num(cfg.clients as f64));
+    Json::Obj(row)
+}
+
+/// Run the bench and return the `BENCH_gateway.json` document. Also
+/// prints one line per scenario.
+pub fn run(cfg: &BenchConfig) -> Json {
+    let backend_config =
+        CoordinatorConfig { workers: cfg.workers, shards: 1, ..CoordinatorConfig::default() };
+    let mut rows = Vec::new();
+    rows.push(scenario("direct", cfg, &backend_config, 1, false));
+    for &n in &cfg.backend_counts {
+        rows.push(scenario(&format!("balanced-{n}"), cfg, &backend_config, n.max(1), true));
+    }
+    // The starved topology, driven directly: admission control must
+    // answer 429 under this load, and loadgen must count every one.
+    let starved = CoordinatorConfig {
+        workers: 1,
+        shards: 1,
+        queue_cap: 1,
+        max_batch: 1,
+        batch_window: Duration::from_millis(1),
+        ..CoordinatorConfig::default()
+    };
+    rows.push(scenario("saturated", cfg, &starved, 1, false));
+    Json::obj(vec![
+        ("bench", Json::str("gateway")),
+        (
+            "workload",
+            Json::obj(vec![
+                ("grid", Json::num(cfg.size as f64)),
+                (
+                    "eps_values",
+                    Json::arr(cfg.eps_values.iter().map(|&e| Json::num(e)).collect()),
+                ),
+                ("jobs_per_scenario", Json::num(cfg.jobs as f64)),
+                ("clients", Json::num(cfg.clients as f64)),
+                ("workers_per_backend", Json::num(cfg.workers as f64)),
+            ]),
+        ),
+        ("rows", Json::arr(rows)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_bench_run_produces_schema_shaped_rows() {
+        let cfg = BenchConfig {
+            workers: 2,
+            size: 6,
+            frames: 6,
+            eps_values: vec![0.1],
+            jobs: 4,
+            clients: 2,
+            backend_counts: vec![2],
+        };
+        let doc = run(&cfg);
+        assert_eq!(doc.get("bench").and_then(Json::as_str), Some("gateway"));
+        let rows = doc.get("rows").expect("rows").items();
+        // direct + balanced-2 + saturated.
+        assert_eq!(rows.len(), 3);
+        for row in rows {
+            for key in
+                ["scenario", "backends", "sent", "ok", "rejected_429", "rate_429", "p99_us"]
+            {
+                assert!(row.get(key).is_some(), "row missing '{key}'");
+            }
+            // Every request is answered with HTTP in every scenario —
+            // saturation shows up as 429s, never as socket errors.
+            assert_eq!(row.get("io_errors").and_then(Json::as_f64), Some(0.0));
+        }
+        // The healthy scenarios complete everything.
+        assert_eq!(rows[0].get("ok").and_then(Json::as_f64), Some(4.0));
+        assert_eq!(rows[1].get("ok").and_then(Json::as_f64), Some(4.0));
+    }
+}

@@ -5,11 +5,14 @@
 //! coordinator`) instead measures the sharded distance service end to
 //! end and emits `BENCH_coordinator.json`; the [`kernels`] arm
 //! (`repro bench kernels`) n-sweeps the dense/sparse hot loops and
-//! emits `BENCH_kernels.json`.
+//! emits `BENCH_kernels.json`; the [`gateway`] arm (`repro bench
+//! gateway`) replays the same workload over HTTP through the balancer
+//! and emits `BENCH_gateway.json`.
 
 use std::time::{Duration, Instant};
 
 pub mod coordinator;
+pub mod gateway;
 pub mod kernels;
 
 /// One benchmark's measurements.

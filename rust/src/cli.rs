@@ -135,6 +135,18 @@ pub fn usage() -> String {
              drains after SECS (in-flight jobs complete, new connections\n\
              are refused) and prints the final metrics; default runs\n\
              until killed\n\
+       balance --backends A,B,... [--port P] [--addr H] [--duration SECS]\n\
+             fingerprint-affine load balancer over N gateway backends\n\
+             (start each with `serve --port`): jobs route by their cost\n\
+             fingerprint so one ε class keeps hitting one backend's\n\
+             artifact cache, fingerprint-less jobs round-robin, and\n\
+             bodies relay verbatim in both directions — results through\n\
+             the balancer are bitwise-identical to a direct submission.\n\
+             /healthz probes evict dead backends and re-admit recovered\n\
+             ones; 429/503 answers retry within a bounded budget\n\
+             (honoring retry-after), and budget exhaustion is a loud\n\
+             503, never a hang. GET /metrics serves per-backend\n\
+             spar_sink_balancer_* families\n\
        bench coordinator [--workers W] [--shards N] [--size G] [--frames F]\n\
              [--no-steal] [--out FILE]\n\
              sharded-service throughput/latency on the echocardiogram\n\
@@ -147,6 +159,14 @@ pub fn usage() -> String {
              sinkhorn vs spar-sink vs spar-sink-log solves; writes\n\
              BENCH_kernels.json (or FILE). --quick runs the CI\n\
              seconds-scale smoke sweep\n\
+       bench gateway [--quick] [--workers W] [--jobs N] [--clients C]\n\
+             [--size G] [--out FILE]\n\
+             serving throughput/latency via the replay load generator:\n\
+             loadgen drives the echocardiogram pairwise workload at a\n\
+             direct gateway, at a balancer over 1 and 2 backends, and\n\
+             at a deliberately starved backend (nonzero 429 rate), and\n\
+             reports throughput, 429 rate, and p50/p99 per scenario;\n\
+             writes BENCH_gateway.json (or FILE)\n\
        lint [--root DIR] [--config FILE] [--list-rules]\n\
              repo-native static contract checks over the rust/src tree\n\
              (README \"Static contracts\"): budget-convention (every\n\

@@ -9,6 +9,7 @@
 
 use std::sync::Arc;
 
+use crate::engine::{Fingerprint, FormulationKey, SHARED_ARTIFACT_ENTRY_CAP};
 use crate::solvers::backend::{BackendKind, ScalingBackend};
 
 /// Which solver executes a job: the coordinator dispatches every method
@@ -99,6 +100,28 @@ pub struct DistanceJob {
     pub seed: u64,
 }
 
+impl DistanceJob {
+    /// The content address of this job's cost geometry, when it fits
+    /// [`SHARED_ARTIFACT_ENTRY_CAP`] — the SAME fingerprint the worker
+    /// resolves through the artifact cache, computed once and shared by
+    /// the shard router, the multi-process balancer
+    /// ([`crate::net`]), and the solve path, so routing and caching can
+    /// never disagree. `None` = oversized or empty: the worker keeps
+    /// the cold oracle path and routers fall back to round-robin.
+    pub fn routing_fingerprint(&self) -> Option<Fingerprint> {
+        let cells = self.source.len() * self.target.len();
+        (cells > 0 && cells <= SHARED_ARTIFACT_ENTRY_CAP).then(|| {
+            Fingerprint::for_supports(
+                &self.source.points,
+                &self.target.points,
+                Some(self.spec.eta),
+                self.spec.eps,
+                FormulationKey::unbalanced(self.spec.lambda),
+            )
+        })
+    }
+}
+
 /// A fixed-support Wasserstein-barycenter job: input histograms living
 /// on one shared support, combined with simplex weights. Dispatched to
 /// the barycenter-capable methods (`sinkhorn` = exact IBP, `spar-ibp` =
@@ -128,6 +151,23 @@ impl BarycenterJob {
     /// Support size (the problem dimension n).
     pub fn support_len(&self) -> usize {
         self.support.len()
+    }
+
+    /// Barycenter analogue of
+    /// [`DistanceJob::routing_fingerprint`]: the shared support against
+    /// itself under the barycenter formulation, when `n²` fits the
+    /// shared-artifact cap.
+    pub fn routing_fingerprint(&self) -> Option<Fingerprint> {
+        let n = self.support_len();
+        (n > 0 && n * n <= SHARED_ARTIFACT_ENTRY_CAP).then(|| {
+            Fingerprint::for_supports(
+                &self.support,
+                &self.support,
+                None,
+                self.spec.eps,
+                FormulationKey::Barycenter,
+            )
+        })
     }
 }
 

@@ -173,6 +173,56 @@ impl ShardStats {
     }
 }
 
+/// Per-backend counters of the multi-process balancer
+/// ([`crate::net`] `Balancer`), surfaced both on the balancer's own
+/// `/metrics` page ([`render_balancer_prometheus`]) and in
+/// [`MetricsSnapshot::balancer`] (empty for a plain single-process
+/// coordinator — the families still render headers-only, so the
+/// exposition's family set is scrape-stable either way).
+#[derive(Clone, Debug)]
+pub struct BalancerBackendStats {
+    /// Backend index (0-based, the affinity modulus position).
+    pub backend: usize,
+    /// The backend's address as configured (`host:port`).
+    pub addr: String,
+    /// Whether the balancer currently routes to this backend.
+    pub healthy: bool,
+    /// Jobs routed here by fingerprint affinity (home slot).
+    pub routed_affine: u64,
+    /// Fingerprint-less or failed-over jobs routed here round-robin.
+    pub routed_round_robin: u64,
+    /// Proxied requests this backend answered with a 2xx.
+    pub completed: u64,
+    /// Proxied requests retried after this backend answered 429/503 or
+    /// failed at the socket level.
+    pub retried: u64,
+    /// Health transitions healthy → evicted (failed probe, proxied 503,
+    /// or IO error).
+    pub evictions: u64,
+    /// Health transitions evicted → healthy (a `/healthz` probe
+    /// succeeded again).
+    pub readmissions: u64,
+}
+
+impl BalancerBackendStats {
+    /// One-line rendering (one per backend in the `balance` summary).
+    pub fn render(&self) -> String {
+        format!(
+            "backend {} ({}): {}  affine {}  round-robin {}  completed {}  retried {}  \
+             evicted {}  readmitted {}",
+            self.backend,
+            self.addr,
+            if self.healthy { "healthy" } else { "evicted" },
+            self.routed_affine,
+            self.routed_round_robin,
+            self.completed,
+            self.retried,
+            self.evictions,
+            self.readmissions
+        )
+    }
+}
+
 /// Point-in-time snapshot of service metrics.
 #[derive(Clone, Debug)]
 pub struct MetricsSnapshot {
@@ -221,6 +271,10 @@ pub struct MetricsSnapshot {
     /// for every other job — including jobs that arrived while the
     /// build was in flight and blocked on its slot.
     pub cache: CacheStats,
+    /// Per-backend balancer counters — populated only when the snapshot
+    /// comes from a multi-process `Balancer`; a plain coordinator
+    /// leaves it empty and the balancer families render headers-only.
+    pub balancer: Vec<BalancerBackendStats>,
 }
 
 impl MetricsSnapshot {
@@ -437,8 +491,83 @@ impl MetricsSnapshot {
             "Configured artifact-cache byte budget.",
             &[(String::new(), self.cache.byte_budget as f64)],
         );
+        balancer_families(&mut out, &self.balancer);
         out
     }
+}
+
+/// Prometheus rendering of just the balancer families — what the
+/// balancer's own `/metrics` endpoint serves (it has no coordinator of
+/// its own, so the full [`MetricsSnapshot`] exposition would be all
+/// zeros). Same family names, kinds and `{backend="i"}` labels as the
+/// tail of [`MetricsSnapshot::render_prometheus`], pinned by the same
+/// golden test.
+pub fn render_balancer_prometheus(backends: &[BalancerBackendStats]) -> String {
+    let mut out = String::new();
+    balancer_families(&mut out, backends);
+    out
+}
+
+/// The balancer family block shared by [`render_balancer_prometheus`]
+/// and the snapshot exposition. Every family renders its HELP/TYPE
+/// headers even with no backends, keeping the exposition scrape-stable.
+fn balancer_families(out: &mut String, backends: &[BalancerBackendStats]) {
+    gauge_family(
+        out,
+        "spar_sink_balancer_backend_healthy",
+        "Whether the balancer currently routes to the backend (1) or has evicted it (0).",
+        &backends
+            .iter()
+            .map(|b| {
+                (
+                    format!("{{backend=\"{}\",addr=\"{}\"}}", b.backend, b.addr),
+                    if b.healthy { 1.0 } else { 0.0 },
+                )
+            })
+            .collect::<Vec<_>>(),
+    );
+    let backend_samples = |value: fn(&BalancerBackendStats) -> f64| -> Vec<(String, f64)> {
+        backends
+            .iter()
+            .map(|b| (format!("{{backend=\"{}\"}}", b.backend), value(b)))
+            .collect()
+    };
+    counter_family(
+        out,
+        "spar_sink_balancer_affine_routed_total",
+        "Jobs the balancer routed to the backend by fingerprint affinity (home slot).",
+        &backend_samples(|b| b.routed_affine as f64),
+    );
+    counter_family(
+        out,
+        "spar_sink_balancer_round_robin_routed_total",
+        "Fingerprint-less or failed-over jobs the balancer routed to the backend round-robin.",
+        &backend_samples(|b| b.routed_round_robin as f64),
+    );
+    counter_family(
+        out,
+        "spar_sink_balancer_completed_total",
+        "Proxied requests the backend answered with a 2xx.",
+        &backend_samples(|b| b.completed as f64),
+    );
+    counter_family(
+        out,
+        "spar_sink_balancer_retries_total",
+        "Proxied requests retried after the backend answered 429/503 or failed at the socket.",
+        &backend_samples(|b| b.retried as f64),
+    );
+    counter_family(
+        out,
+        "spar_sink_balancer_evictions_total",
+        "Health transitions healthy -> evicted (failed probe, proxied 503, or IO error).",
+        &backend_samples(|b| b.evictions as f64),
+    );
+    counter_family(
+        out,
+        "spar_sink_balancer_readmissions_total",
+        "Health transitions evicted -> healthy (a /healthz probe succeeded again).",
+        &backend_samples(|b| b.readmissions as f64),
+    );
 }
 
 /// Append one `# HELP`/`# TYPE` header plus one sample line per
@@ -625,6 +754,30 @@ mod tests {
                 bytes: 2048,
                 byte_budget: 4096,
             },
+            balancer: vec![
+                BalancerBackendStats {
+                    backend: 0,
+                    addr: "127.0.0.1:9101".to_string(),
+                    healthy: true,
+                    routed_affine: 5,
+                    routed_round_robin: 1,
+                    completed: 6,
+                    retried: 1,
+                    evictions: 0,
+                    readmissions: 0,
+                },
+                BalancerBackendStats {
+                    backend: 1,
+                    addr: "127.0.0.1:9102".to_string(),
+                    healthy: false,
+                    routed_affine: 2,
+                    routed_round_robin: 0,
+                    completed: 1,
+                    retried: 0,
+                    evictions: 1,
+                    readmissions: 1,
+                },
+            ],
         }
     }
 
@@ -720,6 +873,34 @@ spar_sink_cache_bytes 2048
 # HELP spar_sink_cache_byte_budget_bytes Configured artifact-cache byte budget.
 # TYPE spar_sink_cache_byte_budget_bytes gauge
 spar_sink_cache_byte_budget_bytes 4096
+# HELP spar_sink_balancer_backend_healthy Whether the balancer currently routes to the backend (1) or has evicted it (0).
+# TYPE spar_sink_balancer_backend_healthy gauge
+spar_sink_balancer_backend_healthy{backend="0",addr="127.0.0.1:9101"} 1
+spar_sink_balancer_backend_healthy{backend="1",addr="127.0.0.1:9102"} 0
+# HELP spar_sink_balancer_affine_routed_total Jobs the balancer routed to the backend by fingerprint affinity (home slot).
+# TYPE spar_sink_balancer_affine_routed_total counter
+spar_sink_balancer_affine_routed_total{backend="0"} 5
+spar_sink_balancer_affine_routed_total{backend="1"} 2
+# HELP spar_sink_balancer_round_robin_routed_total Fingerprint-less or failed-over jobs the balancer routed to the backend round-robin.
+# TYPE spar_sink_balancer_round_robin_routed_total counter
+spar_sink_balancer_round_robin_routed_total{backend="0"} 1
+spar_sink_balancer_round_robin_routed_total{backend="1"} 0
+# HELP spar_sink_balancer_completed_total Proxied requests the backend answered with a 2xx.
+# TYPE spar_sink_balancer_completed_total counter
+spar_sink_balancer_completed_total{backend="0"} 6
+spar_sink_balancer_completed_total{backend="1"} 1
+# HELP spar_sink_balancer_retries_total Proxied requests retried after the backend answered 429/503 or failed at the socket.
+# TYPE spar_sink_balancer_retries_total counter
+spar_sink_balancer_retries_total{backend="0"} 1
+spar_sink_balancer_retries_total{backend="1"} 0
+# HELP spar_sink_balancer_evictions_total Health transitions healthy -> evicted (failed probe, proxied 503, or IO error).
+# TYPE spar_sink_balancer_evictions_total counter
+spar_sink_balancer_evictions_total{backend="0"} 0
+spar_sink_balancer_evictions_total{backend="1"} 1
+# HELP spar_sink_balancer_readmissions_total Health transitions evicted -> healthy (a /healthz probe succeeded again).
+# TYPE spar_sink_balancer_readmissions_total counter
+spar_sink_balancer_readmissions_total{backend="0"} 0
+spar_sink_balancer_readmissions_total{backend="1"} 1
 "#;
         let rendered = synthetic_snapshot().render_prometheus();
         // On mismatch, point at the first diverging line instead of
@@ -738,6 +919,7 @@ spar_sink_cache_byte_budget_bytes 4096
         let snapshot = MetricsSnapshot {
             shards: Vec::new(),
             log_escalations: Vec::new(),
+            balancer: Vec::new(),
             ..synthetic_snapshot()
         };
         let text = snapshot.render_prometheus();
@@ -747,6 +929,33 @@ spar_sink_cache_byte_budget_bytes 4096
             "{text}"
         );
         assert!(!text.contains("{shard="), "{text}");
+        // Balancer families behave the same: a coordinator with no
+        // balancer keeps the headers but emits no samples.
+        assert!(
+            text.contains("# TYPE spar_sink_balancer_backend_healthy gauge\n# HELP"),
+            "{text}"
+        );
+        assert!(!text.contains("{backend="), "{text}");
+    }
+
+    #[test]
+    fn balancer_metrics_page_is_the_snapshot_tail() {
+        // The balancer's own /metrics page and the snapshot exposition
+        // render the SAME family block — one source of truth, so the
+        // golden above pins both.
+        let snapshot = synthetic_snapshot();
+        let page = render_balancer_prometheus(&snapshot.balancer);
+        assert!(snapshot.render_prometheus().ends_with(&page));
+        assert!(page.starts_with("# HELP spar_sink_balancer_backend_healthy"));
+        assert!(page.contains("spar_sink_balancer_readmissions_total{backend=\"1\"} 1\n"));
+    }
+
+    #[test]
+    fn balancer_backend_stats_render_one_line_each() {
+        let line = synthetic_snapshot().balancer[1].render();
+        assert!(line.starts_with("backend 1 (127.0.0.1:9102): evicted"), "{line}");
+        assert!(line.contains("readmitted 1"), "{line}");
+        assert!(!line.contains('\n'), "{line}");
     }
 
     #[test]

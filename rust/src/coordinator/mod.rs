@@ -64,5 +64,8 @@ mod steal;
 pub use jobs::{
     BarycenterJob, BarycenterResult, DistanceJob, DistanceResult, Measure, Method, ProblemSpec,
 };
-pub use metrics::{LatencyHistogram, MetricsSnapshot, ShardStats};
+pub use metrics::{
+    render_balancer_prometheus, BalancerBackendStats, LatencyHistogram, MetricsSnapshot,
+    ShardStats,
+};
 pub use service::{CoordinatorConfig, DistanceService, SubmitRejection};

@@ -29,7 +29,7 @@ use std::time::{Duration, Instant};
 use super::jobs::{BarycenterJob, BarycenterResult, DistanceJob, DistanceResult, Method};
 use super::service::{CoordinatorConfig, Shared};
 use super::shard::Shard;
-use crate::engine::{Fingerprint, FormulationKey, SHARED_ARTIFACT_ENTRY_CAP};
+use crate::engine::Fingerprint;
 use crate::solvers::backend::ScalingBackend;
 
 /// One queued unit of work. Distance (pairwise WFR) and barycenter jobs
@@ -84,38 +84,18 @@ impl QueuedJob {
             || matches!(spec.backend, Some(ScalingBackend::LogDomain))
     }
 
-    /// The content address of this job's cost geometry, when it fits
-    /// [`SHARED_ARTIFACT_ENTRY_CAP`] — the SAME fingerprint the worker
-    /// resolves through the artifact cache (one computation shared by
-    /// the router and the solve path, so routing and caching can never
-    /// disagree). `None` = oversized: the worker keeps the cold oracle
-    /// path and the router falls back to round-robin.
+    /// The content address of this job's cost geometry — delegates to
+    /// the job types' public
+    /// [`routing_fingerprint`](DistanceJob::routing_fingerprint), the
+    /// ONE computation shared by this router, the worker's cache
+    /// lookup, and the multi-process balancer in [`crate::net`], so
+    /// routing and caching can never disagree. `None` = oversized: the
+    /// worker keeps the cold oracle path and the router falls back to
+    /// round-robin.
     pub(crate) fn fingerprint(&self) -> Option<Fingerprint> {
         match self {
-            QueuedJob::Distance { job, .. } => {
-                let cells = job.source.len() * job.target.len();
-                (cells > 0 && cells <= SHARED_ARTIFACT_ENTRY_CAP).then(|| {
-                    Fingerprint::for_supports(
-                        &job.source.points,
-                        &job.target.points,
-                        Some(job.spec.eta),
-                        job.spec.eps,
-                        FormulationKey::unbalanced(job.spec.lambda),
-                    )
-                })
-            }
-            QueuedJob::Barycenter { job, .. } => {
-                let n = job.support_len();
-                (n > 0 && n * n <= SHARED_ARTIFACT_ENTRY_CAP).then(|| {
-                    Fingerprint::for_supports(
-                        &job.support,
-                        &job.support,
-                        None,
-                        job.spec.eps,
-                        FormulationKey::Barycenter,
-                    )
-                })
-            }
+            QueuedJob::Distance { job, .. } => job.routing_fingerprint(),
+            QueuedJob::Barycenter { job, .. } => job.routing_fingerprint(),
         }
     }
 }

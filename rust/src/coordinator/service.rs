@@ -399,6 +399,7 @@ impl DistanceService {
             log_escalation_rate: escalated as f64 / completed.max(1) as f64,
             shards: self.shards.iter().enumerate().map(|(i, sh)| sh.stats(i)).collect(),
             cache: s.cache.stats(),
+            balancer: Vec::new(),
         }
     }
 

@@ -2,10 +2,13 @@
 //!
 //! Subcommands (see `repro --help`): `experiment` regenerates any paper
 //! figure/table, `solve` runs a one-off synthetic problem, `serve`
-//! exercises the batched WFR distance coordinator, `bench coordinator`
-//! measures the sharded service (1 vs N shards, cold vs warm cache) and
-//! writes `BENCH_coordinator.json`, `runtime-info` inspects the PJRT
-//! artifact menu.
+//! exercises the batched WFR distance coordinator (or its HTTP gateway
+//! with `--port`), `balance` fronts N gateways with the
+//! fingerprint-affine load balancer, `bench coordinator` measures the
+//! sharded service (1 vs N shards, cold vs warm cache) and writes
+//! `BENCH_coordinator.json`, `bench gateway` replays the serving
+//! workload over HTTP and writes `BENCH_gateway.json`, `runtime-info`
+//! inspects the PJRT artifact menu.
 
 use spar_sink::cli::{usage, Args};
 use spar_sink::experiments::{self, Profile};
@@ -13,6 +16,7 @@ use spar_sink::experiments::{self, Profile};
 const VALUE_KEYS: &[&str] = &[
     "out", "n", "eps", "lambda", "method", "seed", "videos", "frames", "workers", "problem", "s",
     "d", "backend", "threshold", "shards", "size", "root", "config", "port", "addr", "duration",
+    "backends", "jobs", "clients",
 ];
 
 fn main() {
@@ -27,6 +31,7 @@ fn main() {
         Some("experiment") => cmd_experiment(&args),
         Some("solve") => cmd_solve(&args),
         Some("serve") => cmd_serve(&args),
+        Some("balance") => cmd_balance(&args),
         Some("bench") => cmd_bench(&args),
         Some("lint") => cmd_lint(&args),
         Some("runtime-info") => cmd_runtime_info(),
@@ -387,6 +392,59 @@ fn cmd_serve_gateway(args: &Args) -> i32 {
     0
 }
 
+/// `balance --backends A,B,... [--port P]`: the fingerprint-affine load
+/// balancer over already-running gateway backends. Blocks forever by
+/// default; `--duration SECS` runs a bounded session, draining at the
+/// end — the scripted-smoke-test shape, mirroring `serve --port`.
+fn cmd_balance(args: &Args) -> i32 {
+    use spar_sink::net::{Balancer, BalancerConfig};
+
+    // One comma-separated value: `Args::parse` rejects repeated
+    // options, so `--backends a --backends b` is already a loud error.
+    let Some(list) = args.get("backends") else {
+        eprintln!("balance requires --backends HOST:PORT[,HOST:PORT...]");
+        return 2;
+    };
+    let backends: Vec<String> =
+        list.split(',').map(str::trim).filter(|s| !s.is_empty()).map(String::from).collect();
+    let port: u16 = args.get_parsed("port", 8518);
+    let addr = args.get("addr").unwrap_or("127.0.0.1").to_string();
+    let duration: u64 = args.get_parsed("duration", 0);
+
+    let mut balancer = match Balancer::start(BalancerConfig {
+        addr,
+        port,
+        backends,
+        ..BalancerConfig::default()
+    }) {
+        Ok(balancer) => balancer,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    println!("balancer listening on http://{}", balancer.local_addr());
+    for stats in balancer.stats() {
+        println!("{}", stats.render());
+    }
+    println!("routing: jobs by cost fingerprint (slot = key mod backends), else round-robin");
+    println!("health: /healthz probes evict and re-admit backends; retries are budgeted");
+
+    if duration == 0 {
+        // Balance until killed; the process owns no other work.
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(60));
+        }
+    }
+    std::thread::sleep(std::time::Duration::from_secs(duration));
+    println!("duration elapsed; draining (in-flight proxies complete, new ones are refused)");
+    balancer.drain();
+    for stats in balancer.stats() {
+        println!("{}", stats.render());
+    }
+    0
+}
+
 fn cmd_lint(args: &Args) -> i32 {
     use spar_sink::lint::{self, LintConfig};
     use std::path::PathBuf;
@@ -467,14 +525,17 @@ fn cmd_bench(args: &Args) -> i32 {
     use spar_sink::bench::coordinator::{self, BenchConfig};
 
     let Some(target) = args.positional.first() else {
-        eprintln!("bench requires a target (available: coordinator, kernels)");
+        eprintln!("bench requires a target (available: coordinator, kernels, gateway)");
         return 2;
     };
     if target == "kernels" {
         return cmd_bench_kernels(args);
     }
+    if target == "gateway" {
+        return cmd_bench_gateway(args);
+    }
     if target != "coordinator" {
-        eprintln!("unknown bench target '{target}' (available: coordinator, kernels)");
+        eprintln!("unknown bench target '{target}' (available: coordinator, kernels, gateway)");
         return 2;
     }
     let workers: usize = args.get_parsed("workers", spar_sink::pool::num_threads().clamp(2, 8));
@@ -512,6 +573,36 @@ fn cmd_bench_kernels(args: &Args) -> i32 {
     cfg.s_multiplier = args.get_parsed("s", cfg.s_multiplier);
     let doc = kernels::run(&cfg);
     let path = args.get("out").unwrap_or("BENCH_kernels.json");
+    match std::fs::write(path, doc.to_string_compact()) {
+        Ok(()) => {
+            println!("[bench rows written to {path}]");
+            0
+        }
+        Err(e) => {
+            eprintln!("could not write {path}: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_bench_gateway(args: &Args) -> i32 {
+    use spar_sink::bench::gateway::{self, BenchConfig};
+
+    let workers: usize = args.get_parsed("workers", spar_sink::pool::num_threads().clamp(2, 8));
+    let mut cfg = BenchConfig::quick(workers);
+    if args.flag("quick") {
+        // The CI smoke shape: enough jobs to exercise every scenario,
+        // small enough to finish in seconds.
+        cfg.jobs = 16;
+        cfg.clients = 2;
+        cfg.size = 8;
+        cfg.frames = 9;
+    }
+    cfg.size = args.get_parsed("size", cfg.size);
+    cfg.jobs = args.get_parsed("jobs", cfg.jobs);
+    cfg.clients = args.get_parsed("clients", cfg.clients);
+    let doc = gateway::run(&cfg);
+    let path = args.get("out").unwrap_or("BENCH_gateway.json");
     match std::fs::write(path, doc.to_string_compact()) {
         Ok(()) => {
             println!("[bench rows written to {path}]");

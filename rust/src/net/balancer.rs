@@ -1,0 +1,707 @@
+//! The multi-process front end: a fingerprint-affine load balancer
+//! over N backend gateways.
+//!
+//! ```text
+//!   clients ──▶ Balancer (accept loop, same admission control
+//!        │       as the gateway: connection cap → 503)
+//!        │
+//!        │  POST /solve | /barycenter
+//!        │  decode a LOCAL copy → routing_fingerprint()
+//!        │  home = routing_key() % backend count
+//!        ▼
+//!   ┌─ backend 0 ─┐  ┌─ backend 1 ─┐     ┌─ backend N-1 ─┐
+//!   │ gateway +   │  │ gateway +   │  …  │ gateway +     │
+//!   │ coordinator │  │ coordinator │     │ coordinator   │
+//!   │ + own cache │  │ + own cache │     │ + own cache   │
+//!   └─────────────┘  └─────────────┘     └───────────────┘
+//! ```
+//!
+//! Three properties carry this module's weight:
+//!
+//! * **Affinity keeps caches warm.** Every job with a shareable cost
+//!   fingerprint is routed by `routing_key() % N` — the SAME
+//!   computation the in-process shard router uses
+//!   ([`routing_fingerprint`](crate::coordinator::DistanceJob::routing_fingerprint)),
+//!   one layer up. A given
+//!   geometry therefore always lands on the same backend, whose
+//!   `ArtifactCache` already holds its kernel: K distinct fingerprints
+//!   cost K cache builds across the whole fleet, not K × N.
+//!   Fingerprint-less jobs (oversized grids) round-robin.
+//! * **Bitwise transparency.** The balancer decodes a local copy of
+//!   the body only to compute the fingerprint; what it forwards is the
+//!   ORIGINAL request body, byte for byte, and what it returns is the
+//!   backend's response body, byte for byte. Placement can never
+//!   change a reproduced number (pinned by the parity leg of
+//!   `tests/balancer_integration.rs`).
+//! * **Bounded failover, loud exhaustion.** 429 answers honor
+//!   `retry-after` (clamped to [`BalancerConfig::backoff_cap`]); 503
+//!   answers and socket errors evict the backend and fail over
+//!   immediately; `/healthz` probes re-admit an evicted backend when
+//!   it recovers. When [`BalancerConfig::retry_budget`] attempts are
+//!   spent, the client gets an explicit `503` naming the budget — the
+//!   balancer never hangs and never silently drops an accepted job.
+
+use std::io::{BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::coordinator::{render_balancer_prometheus, BalancerBackendStats};
+use crate::error::{Error, Result};
+use crate::net::client::{self, ClientResponse};
+use crate::net::codec;
+use crate::net::http::{read_request, HttpLimits, Request};
+use crate::net::response::Response;
+use crate::util::json::Json;
+use crate::util::sync::{lock_unpoisoned, wait_timeout_unpoisoned};
+
+/// How often the accept loop re-checks the drain flag between polls of
+/// the non-blocking listener.
+const ACCEPT_POLL: Duration = Duration::from_millis(5);
+
+/// Granularity at which sleeping loops (probe interval, retry backoff)
+/// re-check the drain flag, so drains stay prompt.
+const SLEEP_SLICE: Duration = Duration::from_millis(10);
+
+/// Balancer tuning. `Default` binds an OS-picked loopback port and
+/// carries test-friendly probe/retry settings; the CLI overrides
+/// `addr`/`port`/`backends`.
+#[derive(Clone, Debug)]
+pub struct BalancerConfig {
+    /// Bind address (default loopback).
+    pub addr: String,
+    /// Bind port; `0` lets the OS pick (reported by
+    /// [`Balancer::local_addr`]).
+    pub port: u16,
+    /// Backend gateway addresses (`host:port`), in slot order. The
+    /// affinity modulus is this list's LENGTH, so the mapping
+    /// fingerprint → slot is stable regardless of which backends are
+    /// currently healthy.
+    pub backends: Vec<String>,
+    /// Maximum concurrently served client connections; excess
+    /// connections are refused with `503`, exactly like the gateway.
+    pub max_connections: usize,
+    /// Parser size caps per client request.
+    pub limits: HttpLimits,
+    /// Client-side socket read timeout (idle keep-alive connections).
+    pub read_timeout: Duration,
+    /// How often each backend's `/healthz` is probed for
+    /// eviction/re-admission.
+    pub probe_interval: Duration,
+    /// Per-probe socket timeout (connect and read).
+    pub probe_timeout: Duration,
+    /// Upstream connect timeout for proxied jobs.
+    pub connect_timeout: Duration,
+    /// Upstream response timeout for proxied jobs (a solve can be
+    /// slow; this guards against a wedged backend, not a busy one).
+    pub upstream_timeout: Duration,
+    /// Total attempts per proxied job (first try included). Exhaustion
+    /// is a loud `503`, never a hang.
+    pub retry_budget: usize,
+    /// Backoff before retrying a `429` that carried no `retry-after`.
+    pub retry_backoff: Duration,
+    /// Upper clamp on any honored `retry-after` backoff.
+    pub backoff_cap: Duration,
+}
+
+impl Default for BalancerConfig {
+    fn default() -> Self {
+        BalancerConfig {
+            addr: "127.0.0.1".to_string(),
+            port: 0,
+            backends: Vec::new(),
+            max_connections: 64,
+            limits: HttpLimits::default(),
+            read_timeout: Duration::from_secs(5),
+            probe_interval: Duration::from_millis(200),
+            probe_timeout: Duration::from_secs(1),
+            connect_timeout: Duration::from_secs(1),
+            upstream_timeout: Duration::from_secs(120),
+            retry_budget: 4,
+            retry_backoff: Duration::from_millis(100),
+            backoff_cap: Duration::from_secs(2),
+        }
+    }
+}
+
+/// Live state + counters of one backend slot.
+struct Backend {
+    /// Slot index (the affinity modulus position).
+    index: usize,
+    /// The address as configured (metrics label).
+    label: String,
+    /// The resolved socket address probes and proxied jobs dial.
+    addr: SocketAddr,
+    /// Whether the balancer currently routes here.
+    healthy: AtomicBool,
+    routed_affine: AtomicU64,
+    routed_round_robin: AtomicU64,
+    completed: AtomicU64,
+    retried: AtomicU64,
+    evictions: AtomicU64,
+    readmissions: AtomicU64,
+}
+
+impl Backend {
+    /// Mark unhealthy; counts the transition (idempotent while down).
+    fn evict(&self) {
+        if self.healthy.swap(false, Ordering::SeqCst) {
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Mark healthy; counts the transition (idempotent while up).
+    fn readmit(&self) {
+        if !self.healthy.swap(true, Ordering::SeqCst) {
+            self.readmissions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn stats(&self) -> BalancerBackendStats {
+        BalancerBackendStats {
+            backend: self.index,
+            addr: self.label.clone(),
+            healthy: self.healthy.load(Ordering::SeqCst),
+            routed_affine: self.routed_affine.load(Ordering::Relaxed),
+            routed_round_robin: self.routed_round_robin.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            retried: self.retried.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            readmissions: self.readmissions.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Shared state between the accept loop, handler threads, the probe
+/// thread and `drain` (the balancer's analogue of the gateway's
+/// lifecycle).
+struct Shared {
+    backends: Vec<Backend>,
+    /// Round-robin cursor for fingerprint-less jobs.
+    round_robin: AtomicUsize,
+    /// Set once by `drain`: accept loop and probe thread exit,
+    /// handlers answer `503` to new jobs.
+    draining: AtomicBool,
+    /// Live handler-thread count, guarded so `drain` can wait on it.
+    active: Mutex<usize>,
+    /// Signaled whenever a handler exits.
+    idle: Condvar,
+    /// Connections refused at the `max_connections` cap.
+    rejected_at_cap: AtomicU64,
+    config: BalancerConfig,
+}
+
+/// Decrements the active-connection count when a handler exits, panic
+/// or not.
+struct ConnectionGuard {
+    shared: Arc<Shared>,
+}
+
+impl Drop for ConnectionGuard {
+    fn drop(&mut self) {
+        let mut active = lock_unpoisoned(&self.shared.active);
+        *active = active.saturating_sub(1);
+        drop(active);
+        self.shared.idle.notify_all();
+    }
+}
+
+/// A running balancer. See the module docs for the routing contract;
+/// construction is [`Balancer::start`].
+pub struct Balancer {
+    shared: Arc<Shared>,
+    addr: SocketAddr,
+    accept: Option<JoinHandle<()>>,
+    probe: Option<JoinHandle<()>>,
+}
+
+impl Balancer {
+    /// Resolve the backend addresses, bind the front listener, and
+    /// start the accept and probe threads. Backends start healthy (the
+    /// first failed probe or proxied request evicts them). At least one
+    /// backend is required; an unresolvable address is a loud startup
+    /// error, not a permanently dead slot.
+    pub fn start(config: BalancerConfig) -> Result<Balancer> {
+        if config.backends.is_empty() {
+            return Err(Error::Coordinator("balancer needs at least one backend".into()));
+        }
+        if config.retry_budget == 0 {
+            return Err(Error::Coordinator("balancer retry budget must be at least 1".into()));
+        }
+        let mut backends = Vec::with_capacity(config.backends.len());
+        for (index, label) in config.backends.iter().enumerate() {
+            let addr = label
+                .to_socket_addrs()
+                .map_err(|e| Error::Coordinator(format!("backend '{label}': {e}")))?
+                .next()
+                .ok_or_else(|| {
+                    Error::Coordinator(format!("backend '{label}' resolved to no address"))
+                })?;
+            backends.push(Backend {
+                index,
+                label: label.clone(),
+                addr,
+                healthy: AtomicBool::new(true),
+                routed_affine: AtomicU64::new(0),
+                routed_round_robin: AtomicU64::new(0),
+                completed: AtomicU64::new(0),
+                retried: AtomicU64::new(0),
+                evictions: AtomicU64::new(0),
+                readmissions: AtomicU64::new(0),
+            });
+        }
+        let listener = match TcpListener::bind((config.addr.as_str(), config.port)) {
+            Ok(listener) => listener,
+            Err(e) => {
+                let msg = format!("balancer bind {}:{}: {e}", config.addr, config.port);
+                return Err(Error::Coordinator(msg));
+            }
+        };
+        let addr = listener
+            .local_addr()
+            .map_err(|e| Error::Coordinator(format!("balancer local_addr: {e}")))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| Error::Coordinator(format!("balancer set_nonblocking: {e}")))?;
+        let shared = Arc::new(Shared {
+            backends,
+            round_robin: AtomicUsize::new(0),
+            draining: AtomicBool::new(false),
+            active: Mutex::new(0),
+            idle: Condvar::new(),
+            rejected_at_cap: AtomicU64::new(0),
+            config,
+        });
+        let accept = {
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("balancer-accept".to_string())
+                .spawn(move || accept_loop(listener, shared))
+                .map_err(|e| Error::Coordinator(format!("balancer accept thread: {e}")))?
+        };
+        let probe = {
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("balancer-probe".to_string())
+                .spawn(move || probe_loop(&shared))
+                .map_err(|e| Error::Coordinator(format!("balancer probe thread: {e}")))?
+        };
+        Ok(Balancer { shared, addr, accept: Some(accept), probe: Some(probe) })
+    }
+
+    /// The bound front address (resolves port `0` to the OS pick).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Connections refused at the connection cap so far.
+    pub fn rejected_at_cap(&self) -> u64 {
+        self.shared.rejected_at_cap.load(Ordering::Relaxed)
+    }
+
+    /// Per-backend counters, in slot order — what `/metrics` renders
+    /// and what the integration wall asserts on.
+    pub fn stats(&self) -> Vec<BalancerBackendStats> {
+        self.shared.backends.iter().map(Backend::stats).collect()
+    }
+
+    /// Graceful drain: stop accepting and probing, refuse new jobs,
+    /// and wait for in-flight connections (their proxied jobs complete
+    /// normally). Idempotent.
+    pub fn drain(&mut self) {
+        self.shared.draining.store(true, Ordering::SeqCst);
+        if let Some(accept) = self.accept.take() {
+            let _ = accept.join();
+        }
+        if let Some(probe) = self.probe.take() {
+            let _ = probe.join();
+        }
+        let mut active = lock_unpoisoned(&self.shared.active);
+        while *active > 0 {
+            active =
+                wait_timeout_unpoisoned(&self.shared.idle, active, Duration::from_millis(50));
+        }
+    }
+}
+
+impl Drop for Balancer {
+    fn drop(&mut self) {
+        self.drain();
+    }
+}
+
+/// Sleep `total` in [`SLEEP_SLICE`] steps, bailing early on drain.
+fn interruptible_sleep(shared: &Shared, total: Duration) {
+    let mut remaining = total;
+    while !remaining.is_zero() && !shared.draining.load(Ordering::SeqCst) {
+        let step = remaining.min(SLEEP_SLICE);
+        std::thread::sleep(step);
+        remaining = remaining.saturating_sub(step);
+    }
+}
+
+/// The health-probe loop: every `probe_interval`, hit each backend's
+/// `/healthz`. `200` re-admits, anything else (including a refused
+/// connection or a `503 draining`) evicts. This is the ONLY
+/// re-admission path — proxied traffic can evict but never re-admit,
+/// so one good probe is required before an evicted backend sees jobs
+/// again.
+fn probe_loop(shared: &Shared) {
+    while !shared.draining.load(Ordering::SeqCst) {
+        for backend in &shared.backends {
+            let healthy = matches!(
+                client::request(
+                    backend.addr,
+                    "GET",
+                    "/healthz",
+                    None,
+                    shared.config.probe_timeout,
+                    shared.config.probe_timeout,
+                ),
+                Ok(ClientResponse { status: 200, .. })
+            );
+            if healthy {
+                backend.readmit();
+            } else {
+                backend.evict();
+            }
+        }
+        interruptible_sleep(shared, shared.config.probe_interval);
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    loop {
+        if shared.draining.load(Ordering::SeqCst) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let admitted = {
+                    let mut active = lock_unpoisoned(&shared.active);
+                    if *active >= shared.config.max_connections {
+                        false
+                    } else {
+                        *active += 1;
+                        true
+                    }
+                };
+                if !admitted {
+                    shared.rejected_at_cap.fetch_add(1, Ordering::Relaxed);
+                    refuse_at_capacity(stream);
+                    continue;
+                }
+                let guard = ConnectionGuard { shared: Arc::clone(&shared) };
+                let shared = Arc::clone(&shared);
+                let spawned = std::thread::Builder::new()
+                    .name("balancer-conn".to_string())
+                    .spawn(move || {
+                        let _guard = guard;
+                        handle_connection(stream, &shared);
+                    });
+                // Spawn failure drops `guard` here, releasing the slot.
+                drop(spawned);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => std::thread::sleep(ACCEPT_POLL),
+        }
+    }
+}
+
+/// Answer `503` on a connection refused at the connection cap.
+fn refuse_at_capacity(mut stream: TcpStream) {
+    let _ = Response::error(503, "connection capacity reached").write_to(&mut stream);
+    let _ = stream.flush();
+}
+
+/// Serve one client connection: parse → route/proxy → respond, looping
+/// while the client keeps the connection alive.
+fn handle_connection(stream: TcpStream, shared: &Shared) {
+    if stream.set_nonblocking(false).is_err() {
+        return;
+    }
+    let _ = stream.set_read_timeout(Some(shared.config.read_timeout));
+    let _ = stream.set_nodelay(true);
+    let Ok(mut writer) = stream.try_clone() else {
+        return;
+    };
+    let mut reader = BufReader::new(stream);
+    loop {
+        match read_request(&mut reader, &shared.config.limits) {
+            Ok(request) => {
+                let response = route(shared, &request);
+                let close = response.close || !request.keep_alive();
+                if response.write_to(&mut writer).is_err() || close {
+                    return;
+                }
+            }
+            Err(err) => {
+                if let Some(status) = err.status() {
+                    let _ = Response::error(status, &err.message()).write_to(&mut writer);
+                }
+                return;
+            }
+        }
+    }
+}
+
+/// The balancer's route table — the same surface as the gateway's
+/// router, with `/solve` and `/barycenter` proxied instead of solved.
+fn route(shared: &Shared, req: &Request) -> Response {
+    let path = req.path.split('?').next().unwrap_or("");
+    match (req.method.as_str(), path) {
+        ("GET", "/healthz") => healthz(shared),
+        ("GET", "/metrics") => {
+            let stats: Vec<BalancerBackendStats> =
+                shared.backends.iter().map(Backend::stats).collect();
+            Response::text(200, "text/plain; version=0.0.4", render_balancer_prometheus(&stats))
+        }
+        ("POST", "/solve") => proxy_job(shared, req, "/solve", JobKind::Distance),
+        ("POST", "/barycenter") => proxy_job(shared, req, "/barycenter", JobKind::Barycenter),
+        (_, "/healthz" | "/metrics") => method_not_allowed("GET"),
+        (_, "/solve" | "/barycenter") => method_not_allowed("POST"),
+        _ => Response::error(404, &format!("no such endpoint '{path}'")),
+    }
+}
+
+/// `200 ok` while at least one backend is routable and the balancer is
+/// not draining; `503` otherwise (probes in front of the balancer see
+/// the fleet's aggregate health).
+fn healthz(shared: &Shared) -> Response {
+    if shared.draining.load(Ordering::SeqCst) {
+        return Response::json(503, &Json::obj(vec![("status", Json::str("draining"))]));
+    }
+    let healthy =
+        shared.backends.iter().filter(|b| b.healthy.load(Ordering::SeqCst)).count();
+    if healthy == 0 {
+        return Response::json(
+            503,
+            &Json::obj(vec![("status", Json::str("no healthy backends"))]),
+        );
+    }
+    Response::json(
+        200,
+        &Json::obj(vec![
+            ("status", Json::str("ok")),
+            ("healthy_backends", Json::num(healthy as f64)),
+        ]),
+    )
+}
+
+fn method_not_allowed(allow: &'static str) -> Response {
+    Response::error(405, &format!("method not allowed (use {allow})"))
+        .with_header("allow", allow.to_string())
+}
+
+/// Which job endpoint a proxied request targets (fingerprints are
+/// computed with the matching decoder so balancer affinity and the
+/// backend's own shard router always agree).
+#[derive(Clone, Copy)]
+enum JobKind {
+    Distance,
+    Barycenter,
+}
+
+/// Decode a LOCAL copy of the body just far enough to compute the
+/// routing fingerprint. Decode failures answer `400` here with the
+/// same codec error a backend would produce — a malformed job never
+/// spends retry budget.
+fn routing_slot(shared: &Shared, req: &Request, kind: JobKind) -> Result2<Option<usize>> {
+    if req.body.is_empty() {
+        return Err(Response::error(400, "missing JSON body"));
+    }
+    let Ok(text) = std::str::from_utf8(&req.body) else {
+        return Err(Response::error(400, "body is not valid UTF-8"));
+    };
+    let payload = match Json::parse(text) {
+        Ok(payload) => payload,
+        Err(e) => return Err(Response::error(400, &format!("bad JSON payload: {e}"))),
+    };
+    let fingerprint = match kind {
+        JobKind::Distance => match codec::decode_distance_job(&payload) {
+            Ok(job) => job.routing_fingerprint(),
+            Err(e) => return Err(Response::error(400, &e)),
+        },
+        JobKind::Barycenter => match codec::decode_barycenter_job(&payload) {
+            Ok(job) => job.routing_fingerprint(),
+            Err(e) => return Err(Response::error(400, &e)),
+        },
+    };
+    Ok(fingerprint.map(|f| (f.routing_key() % shared.backends.len() as u64) as usize))
+}
+
+/// Internal early-return plumbing: `Err` is a ready client response.
+type Result2<T> = std::result::Result<T, Response>;
+
+/// Pick the backend for one attempt: the home slot when it is healthy
+/// (affine), otherwise the first healthy slot scanning forward
+/// (failover, counted round-robin); fingerprint-less jobs start from
+/// the round-robin cursor. `None` = no healthy backend at all.
+fn pick_backend<'a>(shared: &'a Shared, home: Option<usize>) -> Option<(&'a Backend, bool)> {
+    let n = shared.backends.len();
+    let start = match home {
+        Some(slot) => slot,
+        None => shared.round_robin.fetch_add(1, Ordering::Relaxed) % n,
+    };
+    for offset in 0..n {
+        let backend = &shared.backends[(start + offset) % n];
+        if backend.healthy.load(Ordering::SeqCst) {
+            let affine = home == Some(backend.index);
+            return Some((backend, affine));
+        }
+    }
+    None
+}
+
+/// Proxy one job: route by fingerprint, forward the ORIGINAL body
+/// verbatim, and relay the backend's response verbatim. Retries are
+/// bounded by `retry_budget`; see the module docs for the 429/503/IO
+/// policy.
+fn proxy_job(shared: &Shared, req: &Request, path: &str, kind: JobKind) -> Response {
+    if shared.draining.load(Ordering::SeqCst) {
+        return Response::error(503, "balancer is draining");
+    }
+    let home = match routing_slot(shared, req, kind) {
+        Ok(home) => home,
+        Err(response) => return response,
+    };
+    let mut last_error = String::new();
+    for _ in 0..shared.config.retry_budget {
+        let Some((backend, affine)) = pick_backend(shared, home) else {
+            return Response::error(503, "no healthy backends");
+        };
+        if affine {
+            backend.routed_affine.fetch_add(1, Ordering::Relaxed);
+        } else {
+            backend.routed_round_robin.fetch_add(1, Ordering::Relaxed);
+        }
+        match client::request(
+            backend.addr,
+            "POST",
+            path,
+            Some(&req.body),
+            shared.config.connect_timeout,
+            shared.config.upstream_timeout,
+        ) {
+            Ok(upstream) if upstream.status == 429 => {
+                backend.retried.fetch_add(1, Ordering::Relaxed);
+                last_error = format!(
+                    "backend {} ({}) answered 429",
+                    backend.index, backend.label
+                );
+                // Saturation is transient: honor retry-after (clamped),
+                // keep the backend healthy, try again.
+                let backoff = upstream
+                    .retry_after()
+                    .unwrap_or(shared.config.retry_backoff)
+                    .min(shared.config.backoff_cap);
+                interruptible_sleep(shared, backoff);
+            }
+            Ok(upstream) if upstream.status == 503 => {
+                backend.retried.fetch_add(1, Ordering::Relaxed);
+                backend.evict();
+                last_error = format!(
+                    "backend {} ({}) answered 503 (evicted)",
+                    backend.index, backend.label
+                );
+                // Draining/stopped is not transient for THIS backend:
+                // evict it and fail over immediately.
+            }
+            Ok(upstream) => {
+                if upstream.status < 400 {
+                    backend.completed.fetch_add(1, Ordering::Relaxed);
+                }
+                // 2xx results and deterministic client errors (400,
+                // 413, …) relay verbatim — retrying them cannot
+                // change the answer.
+                return relay(&upstream);
+            }
+            Err(e) => {
+                backend.retried.fetch_add(1, Ordering::Relaxed);
+                backend.evict();
+                last_error = format!(
+                    "backend {} ({}) failed: {e} (evicted)",
+                    backend.index, backend.label
+                );
+            }
+        }
+    }
+    Response::error(
+        503,
+        &format!(
+            "retry budget exhausted after {} attempts; last error: {last_error}",
+            shared.config.retry_budget
+        ),
+    )
+}
+
+/// Relay an upstream response to the client byte-for-byte, mapping the
+/// content-type onto the gateway's static vocabulary and preserving
+/// `retry-after` when present.
+fn relay(upstream: &ClientResponse) -> Response {
+    let content_type: &'static str = match upstream.header("content-type") {
+        Some("application/json") | None => "application/json",
+        Some("text/plain; version=0.0.4") => "text/plain; version=0.0.4",
+        Some(_) => "application/octet-stream",
+    };
+    let mut response = Response {
+        status: upstream.status,
+        content_type,
+        body: upstream.body.clone(),
+        close: upstream.status >= 400,
+        extra: Vec::new(),
+    };
+    if let Some(retry_after) = upstream.header("retry-after") {
+        response = response.with_header("retry-after", retry_after.to_string());
+    }
+    response
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn start_refuses_an_empty_backend_list_and_a_zero_budget() {
+        assert!(Balancer::start(BalancerConfig::default()).is_err());
+        let err = Balancer::start(BalancerConfig {
+            backends: vec!["127.0.0.1:1".to_string()],
+            retry_budget: 0,
+            ..BalancerConfig::default()
+        });
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn start_refuses_an_unresolvable_backend_loudly() {
+        let err = Balancer::start(BalancerConfig {
+            backends: vec!["not-an-address".to_string()],
+            ..BalancerConfig::default()
+        })
+        .err()
+        .expect("must not start");
+        assert!(err.to_string().contains("not-an-address"), "{err}");
+    }
+
+    #[test]
+    fn relay_preserves_body_bytes_and_retry_after() {
+        let upstream = ClientResponse {
+            status: 429,
+            headers: vec![
+                ("content-type".to_string(), "application/json".to_string()),
+                ("retry-after".to_string(), "1".to_string()),
+            ],
+            body: b"{\"error\":\"busy\"}".to_vec(),
+        };
+        let relayed = relay(&upstream);
+        assert_eq!(relayed.status, 429);
+        assert_eq!(relayed.body, upstream.body);
+        assert_eq!(relayed.extra, vec![("retry-after", "1".to_string())]);
+        assert!(relayed.close);
+    }
+}

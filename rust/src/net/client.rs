@@ -1,0 +1,198 @@
+//! Minimal HTTP/1.1 client for loopback service-to-service calls: the
+//! balancer's proxy leg and health probes, and the load generator's
+//! replay connections.
+//!
+//! Deliberately narrow, mirroring [`super::http`] on the other side of
+//! the wire: one request per connection (`connection: close`), bodies
+//! delimited by `content-length`, bounded reads everywhere. No TLS, no
+//! chunked encoding, no redirects — the peers are our own gateways.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+/// Largest accepted response head line and body. A misbehaving peer can
+/// never make a client buffer more than this.
+const MAX_LINE: usize = 16 * 1024;
+const MAX_BODY: usize = 16 * 1024 * 1024;
+
+/// One parsed upstream response: status, lowercased headers in arrival
+/// order, and the raw body bytes (relayed verbatim by the balancer —
+/// the bitwise-transparency contract rides on never re-encoding them).
+#[derive(Clone, Debug)]
+pub struct ClientResponse {
+    /// HTTP status code.
+    pub status: u16,
+    /// `(lowercased-name, value)` pairs in arrival order.
+    pub headers: Vec<(String, String)>,
+    /// Response body bytes, verbatim.
+    pub body: Vec<u8>,
+}
+
+impl ClientResponse {
+    /// First value of header `name` (give it lowercased), if present.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+    }
+
+    /// The `retry-after` delay, when present and parseable (seconds
+    /// form only — our gateways never emit the HTTP-date form).
+    pub fn retry_after(&self) -> Option<Duration> {
+        let seconds: f64 = self.header("retry-after")?.trim().parse().ok()?;
+        (seconds.is_finite() && seconds >= 0.0).then(|| Duration::from_secs_f64(seconds))
+    }
+}
+
+/// Perform one request against `addr` and read the full response. The
+/// connection is fresh and closed afterwards (`connection: close`), so
+/// every call observes the peer's current accept/drain state. `body`
+/// is sent as `application/json` when present.
+pub fn request(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: Option<&[u8]>,
+    connect_timeout: Duration,
+    io_timeout: Duration,
+) -> std::io::Result<ClientResponse> {
+    let mut stream = TcpStream::connect_timeout(&addr, connect_timeout)?;
+    stream.set_read_timeout(Some(io_timeout))?;
+    stream.set_write_timeout(Some(io_timeout))?;
+    let _ = stream.set_nodelay(true);
+    let mut head = format!("{method} {path} HTTP/1.1\r\nhost: {addr}\r\nconnection: close\r\n");
+    if let Some(body) = body {
+        head.push_str("content-type: application/json\r\n");
+        head.push_str(&format!("content-length: {}\r\n", body.len()));
+    }
+    head.push_str("\r\n");
+    stream.write_all(head.as_bytes())?;
+    if let Some(body) = body {
+        stream.write_all(body)?;
+    }
+    stream.flush()?;
+    read_response(&mut BufReader::new(stream))
+}
+
+fn bad_data(what: &str) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, what.to_string())
+}
+
+/// Parse one response from `reader`: status line, headers, then a
+/// `content-length` body (or read-to-close when the header is absent).
+pub fn read_response<R: BufRead>(reader: &mut R) -> std::io::Result<ClientResponse> {
+    let line = read_line(reader)?.ok_or_else(|| bad_data("empty response"))?;
+    let mut parts = line.split_whitespace();
+    let status: u16 = match (parts.next(), parts.next()) {
+        (Some(version), Some(code)) if version.starts_with("HTTP/1.") => {
+            code.parse().map_err(|_| bad_data("bad status code"))?
+        }
+        _ => return Err(bad_data("bad status line")),
+    };
+    let mut headers: Vec<(String, String)> = Vec::new();
+    loop {
+        let line = read_line(reader)?.ok_or_else(|| bad_data("truncated headers"))?;
+        if line.is_empty() {
+            break;
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(bad_data("malformed header line"));
+        };
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+    let response = ClientResponse { status, headers, body: Vec::new() };
+    let body = match response.header("content-length") {
+        Some(declared) => {
+            let declared: usize =
+                declared.parse().map_err(|_| bad_data("bad content-length"))?;
+            if declared > MAX_BODY {
+                return Err(bad_data("response body exceeds the size cap"));
+            }
+            let mut body = vec![0u8; declared];
+            reader.read_exact(&mut body)?;
+            body
+        }
+        None => {
+            let mut body = Vec::new();
+            reader.take(MAX_BODY as u64 + 1).read_to_end(&mut body)?;
+            if body.len() > MAX_BODY {
+                return Err(bad_data("response body exceeds the size cap"));
+            }
+            body
+        }
+    };
+    Ok(ClientResponse { body, ..response })
+}
+
+/// One CRLF/LF-terminated line of at most [`MAX_LINE`] bytes
+/// (terminator excluded); `Ok(None)` is EOF before any byte.
+fn read_line<R: BufRead>(reader: &mut R) -> std::io::Result<Option<String>> {
+    let mut line: Vec<u8> = Vec::new();
+    loop {
+        let mut byte = [0u8; 1];
+        match reader.read(&mut byte) {
+            Ok(0) => {
+                return if line.is_empty() {
+                    Ok(None)
+                } else {
+                    Err(bad_data("truncated line"))
+                };
+            }
+            Ok(_) => {
+                if byte[0] == b'\n' {
+                    if line.last() == Some(&b'\r') {
+                        line.pop();
+                    }
+                    let line =
+                        String::from_utf8(line).map_err(|_| bad_data("non-UTF-8 head"))?;
+                    return Ok(Some(line));
+                }
+                if line.len() >= MAX_LINE {
+                    return Err(bad_data("head line exceeds the size cap"));
+                }
+                line.push(byte[0]);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_a_gateway_style_response() {
+        let raw: &[u8] = b"HTTP/1.1 429 Too Many Requests\r\ncontent-type: application/json\r\n\
+                           content-length: 16\r\nretry-after: 1\r\n\r\n{\"error\":\"busy\"}";
+        let resp = read_response(&mut BufReader::new(raw)).unwrap();
+        assert_eq!(resp.status, 429);
+        assert_eq!(resp.header("content-type"), Some("application/json"));
+        assert_eq!(resp.retry_after(), Some(Duration::from_secs(1)));
+        assert_eq!(resp.body, b"{\"error\":\"busy\"}");
+    }
+
+    #[test]
+    fn missing_content_length_reads_to_close() {
+        let raw: &[u8] = b"HTTP/1.1 200 OK\r\n\r\npartial";
+        let resp = read_response(&mut BufReader::new(raw)).unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.body, b"partial");
+        assert!(resp.retry_after().is_none());
+    }
+
+    #[test]
+    fn malformed_heads_are_loud_io_errors() {
+        for raw in [
+            &b""[..],
+            b"NOT HTTP\r\n\r\n",
+            b"HTTP/1.1 abc\r\n\r\n",
+            b"HTTP/1.1 200 OK\r\nno-colon-here\r\n\r\n",
+            b"HTTP/1.1 200 OK\r\ncontent-length: xyz\r\n\r\n",
+            b"HTTP/1.1 200 OK\r\ncontent-length: 99\r\n\r\nshort",
+        ] {
+            let err = read_response(&mut BufReader::new(raw));
+            assert!(err.is_err(), "{raw:?}");
+        }
+    }
+}

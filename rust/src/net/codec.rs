@@ -25,18 +25,33 @@ fn field<'a>(obj: &'a Json, key: &str) -> DecodeResult<&'a Json> {
     obj.get(key).ok_or_else(|| format!("missing field '{key}'"))
 }
 
+/// A number that is actually usable as a job parameter: the JSON
+/// parser's `str::parse::<f64>` happily yields `inf` for an oversized
+/// literal like `1e999`, and a NaN/∞ smuggled into a mass or parameter
+/// would poison the solve (or trip `Measure::new`'s assert) far from
+/// the request — reject it here, naming the field.
+fn finite(x: f64, name: impl FnOnce() -> String) -> DecodeResult<f64> {
+    if x.is_finite() {
+        Ok(x)
+    } else {
+        Err(format!("{} must be a finite number", name()))
+    }
+}
+
 fn f64_field(obj: &Json, key: &str) -> DecodeResult<f64> {
-    field(obj, key)?.as_f64().ok_or_else(|| format!("field '{key}' must be a number"))
+    let x = field(obj, key)?.as_f64().ok_or_else(|| format!("field '{key}' must be a number"))?;
+    finite(x, || format!("field '{key}'"))
 }
 
 /// Optional numeric field: absent is `None`, present-but-not-a-number
-/// is an error (silently ignoring a typo'd parameter would change the
-/// solve).
+/// (or non-finite) is an error (silently ignoring a typo'd parameter
+/// would change the solve).
 fn opt_f64(obj: &Json, key: &str) -> DecodeResult<Option<f64>> {
     match obj.get(key) {
         None => Ok(None),
         Some(v) => {
-            Ok(Some(v.as_f64().ok_or_else(|| format!("field '{key}' must be a number"))?))
+            let x = v.as_f64().ok_or_else(|| format!("field '{key}' must be a number"))?;
+            Ok(Some(finite(x, || format!("field '{key}'"))?))
         }
     }
 }
@@ -45,7 +60,11 @@ fn vec_f64(v: &Json, what: &str) -> DecodeResult<Vec<f64>> {
     match v {
         Json::Arr(items) => items
             .iter()
-            .map(|x| x.as_f64().ok_or_else(|| format!("{what} must contain only numbers")))
+            .map(|x| {
+                let x =
+                    x.as_f64().ok_or_else(|| format!("{what} must contain only numbers"))?;
+                finite(x, || what.to_string())
+            })
             .collect(),
         _ => Err(format!("{what} must be an array of numbers")),
     }
@@ -428,6 +447,32 @@ mod tests {
                     "target": {"points": [[0]], "mass": [1]},
                     "spec": {"eps": "small"}}"#,
                 "field 'eps' must be a number",
+            ),
+            // Non-finite floats: the JSON number parser turns the
+            // oversized literal 1e999 into f64::INFINITY, which used to
+            // sail through into `Measure::new` / the solver. The decode
+            // layer now refuses it, naming the field.
+            (
+                r#"{"source": {"points": [[0]], "mass": [1e999]},
+                    "target": {"points": [[0]], "mass": [1]}}"#,
+                "'source.mass' must be a finite number",
+            ),
+            (
+                r#"{"source": {"points": [[1e999]], "mass": [1]},
+                    "target": {"points": [[0]], "mass": [1]}}"#,
+                "each point in 'source.points' must be a finite number",
+            ),
+            (
+                r#"{"source": {"points": [[0]], "mass": [1]},
+                    "target": {"points": [[0]], "mass": [1]},
+                    "spec": {"eps": 1e999}}"#,
+                "field 'eps' must be a finite number",
+            ),
+            (
+                r#"{"source": {"points": [[0]], "mass": [1]},
+                    "target": {"points": [[0]], "mass": [1]},
+                    "spec": {"eta": -1e999}}"#,
+                "field 'eta' must be a finite number",
             ),
         ];
         for (raw, needle) in cases {

@@ -27,7 +27,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use crate::coordinator::DistanceService;
+use crate::coordinator::{CoordinatorConfig, DistanceService};
 use crate::error::{Error, Result};
 use crate::net::http::{read_request, HttpLimits};
 use crate::net::response::Response;
@@ -75,6 +75,11 @@ struct Lifecycle {
     /// Set once by `drain`: the accept loop exits and handlers answer
     /// `503` to new jobs.
     draining: AtomicBool,
+    /// Set by [`Gateway::begin_drain`]: handlers answer `503` to new
+    /// jobs and `/healthz` reports draining, but the accept loop keeps
+    /// running — the probe-visible half of a drain, so a balancer can
+    /// observe the refusals instead of connection errors.
+    refusing: AtomicBool,
     /// Live handler-thread count, guarded so `drain` can wait on it.
     active: Mutex<usize>,
     /// Signaled whenever a handler exits.
@@ -127,6 +132,7 @@ impl Gateway {
             .map_err(|e| Error::Coordinator(format!("gateway set_nonblocking: {e}")))?;
         let lifecycle = Arc::new(Lifecycle {
             draining: AtomicBool::new(false),
+            refusing: AtomicBool::new(false),
             active: Mutex::new(0),
             idle: Condvar::new(),
             rejected_at_cap: AtomicU64::new(0),
@@ -151,6 +157,20 @@ impl Gateway {
     /// Connections refused at the connection cap so far.
     pub fn rejected_at_cap(&self) -> u64 {
         self.lifecycle.rejected_at_cap.load(Ordering::Relaxed)
+    }
+
+    /// Flip the gateway (and its service) into refusing mode WITHOUT
+    /// stopping the accept loop: `/healthz` answers `503 draining`,
+    /// new jobs are refused with `503`, and in-flight jobs still
+    /// complete and deliver their responses. This is the probe-visible
+    /// half of a graceful drain — a balancer in front sees refusals it
+    /// can react to (evict, fail over) rather than connection errors —
+    /// pinned by the fault-injection wall in
+    /// `tests/balancer_integration.rs`. Call [`drain`](Self::drain)
+    /// (or drop the gateway) to actually stop serving. Idempotent.
+    pub fn begin_drain(&self) {
+        self.lifecycle.refusing.store(true, Ordering::SeqCst);
+        self.service.begin_drain();
     }
 
     /// Graceful drain: stop accepting, refuse new submissions, and wait
@@ -187,6 +207,21 @@ impl Drop for Gateway {
     fn drop(&mut self) {
         self.drain();
     }
+}
+
+/// Stand up `n` independent backend gateways on OS-picked loopback
+/// ports, each over its OWN coordinator (separate queue, workers and
+/// artifact cache) built from `config` — the multi-process topology the
+/// balancer fronts, inside one test or bench binary. The gateways are
+/// fully isolated from one another: the only thing they share is the
+/// process. Tear down by dropping (each gateway drains itself).
+pub fn spawn_backends(n: usize, config: &CoordinatorConfig) -> Result<Vec<Gateway>> {
+    (0..n)
+        .map(|_| {
+            let service = Arc::new(DistanceService::start(config.clone()));
+            Gateway::start(service, GatewayConfig::default())
+        })
+        .collect()
 }
 
 fn accept_loop(
@@ -267,7 +302,8 @@ fn handle_connection(
     loop {
         match read_request(&mut reader, &config.limits) {
             Ok(request) => {
-                let draining = lifecycle.draining.load(Ordering::SeqCst);
+                let draining = lifecycle.draining.load(Ordering::SeqCst)
+                    || lifecycle.refusing.load(Ordering::SeqCst);
                 let response = router::handle(service, &request, draining);
                 let close = response.close || !request.keep_alive();
                 if response.write_to(&mut writer).is_err() || close {

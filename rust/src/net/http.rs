@@ -93,6 +93,16 @@ pub enum ParseError {
     BadHeader(String),
     /// `Content-Length` that does not parse as a base-10 integer.
     BadContentLength(String),
+    /// More than one `Content-Length` header (identical or not). The
+    /// message is ambiguous about where the body ends — two parsers
+    /// picking different values is the classic request-smuggling
+    /// vector, so the request is refused outright.
+    DuplicateContentLength {
+        /// The first declared value.
+        first: String,
+        /// The second declared value (conflicting or a duplicate).
+        second: String,
+    },
     /// Declared body larger than [`HttpLimits::max_body`].
     BodyTooLarge {
         /// What `Content-Length` declared.
@@ -113,7 +123,8 @@ impl ParseError {
             ParseError::Eof | ParseError::Truncated | ParseError::Io(_) => None,
             ParseError::BadRequestLine(_)
             | ParseError::BadHeader(_)
-            | ParseError::BadContentLength(_) => Some(400),
+            | ParseError::BadContentLength(_)
+            | ParseError::DuplicateContentLength { .. } => Some(400),
             ParseError::UnsupportedVersion(_) => Some(505),
             ParseError::RequestLineTooLong | ParseError::HeadersTooLarge => Some(431),
             ParseError::BodyTooLarge { .. } => Some(413),
@@ -133,6 +144,9 @@ impl ParseError {
             ParseError::HeadersTooLarge => "headers exceed the size caps".to_string(),
             ParseError::BadHeader(line) => format!("malformed header line '{line}'"),
             ParseError::BadContentLength(v) => format!("bad content-length '{v}'"),
+            ParseError::DuplicateContentLength { first, second } => {
+                format!("conflicting content-length headers '{first}' and '{second}'")
+            }
             ParseError::BodyTooLarge { declared, cap } => {
                 format!("declared body of {declared} bytes exceeds the {cap}-byte cap")
             }
@@ -193,7 +207,23 @@ pub fn read_request<R: BufRead>(
     }
 
     let mut request = Request { method, path, headers, body: Vec::new() };
-    if let Some(declared) = request.header("content-length") {
+    // All `Content-Length` occurrences, not `Request::header` (which
+    // returns the first match and used to let a second, conflicting
+    // declaration ride along silently — the smuggling ambiguity the
+    // `DuplicateContentLength` arm refuses).
+    let lengths: Vec<&str> = request
+        .headers
+        .iter()
+        .filter(|(name, _)| name == "content-length")
+        .map(|(_, value)| value.as_str())
+        .collect();
+    if lengths.len() > 1 {
+        return Err(ParseError::DuplicateContentLength {
+            first: lengths[0].to_string(),
+            second: lengths[1].to_string(),
+        });
+    }
+    if let Some(&declared) = lengths.first() {
         let declared: usize = declared
             .parse()
             .map_err(|_| ParseError::BadContentLength(declared.to_string()))?;
@@ -373,6 +403,20 @@ mod tests {
                 Some(413),
             ),
             (
+                "duplicate identical content-length",
+                b"POST /solve HTTP/1.1\r\ncontent-length: 3\r\ncontent-length: 3\r\n\r\nabc"
+                    .to_vec(),
+                ParseError::DuplicateContentLength { first: "3".into(), second: "3".into() },
+                Some(400),
+            ),
+            (
+                "conflicting content-length",
+                b"POST /solve HTTP/1.1\r\ncontent-length: 4\r\ncontent-length: 9999\r\n\r\nwxyz"
+                    .to_vec(),
+                ParseError::DuplicateContentLength { first: "4".into(), second: "9999".into() },
+                Some(400),
+            ),
+            (
                 "truncated body",
                 b"POST /solve HTTP/1.1\r\ncontent-length: 10\r\n\r\nwxyz".to_vec(),
                 ParseError::Truncated,
@@ -390,6 +434,52 @@ mod tests {
             assert_eq!(err, expected, "{name}");
             assert_eq!(err.status(), status, "{name}");
             assert!(!err.message().is_empty(), "{name}");
+        }
+    }
+
+    /// Decode-error extension of the corpus: full POST byte streams
+    /// whose HTTP layer is well-formed but whose JSON body must be
+    /// refused by the codec with an error naming the offending field —
+    /// the exact two-layer path the gateway's `400` body takes. The
+    /// non-finite rows pin the fix for `1e999`-style literals, which
+    /// the JSON number parser turns into `f64::INFINITY` and the codec
+    /// used to pass straight into `Measure::new`.
+    #[test]
+    fn well_formed_posts_with_poisoned_bodies_name_the_field() {
+        let cases: Vec<(&str, &str, &str)> = vec![
+            (
+                "infinite mass literal",
+                r#"{"source": {"points": [[0]], "mass": [1e999]},
+                    "target": {"points": [[0]], "mass": [1]}}"#,
+                "'source.mass' must be a finite number",
+            ),
+            (
+                "negative-infinite support coordinate",
+                r#"{"source": {"points": [[0]], "mass": [1]},
+                    "target": {"points": [[-1e999]], "mass": [1]}}"#,
+                "each point in 'target.points' must be a finite number",
+            ),
+            (
+                "infinite spec parameter",
+                r#"{"source": {"points": [[0]], "mass": [1]},
+                    "target": {"points": [[0]], "mass": [1]},
+                    "spec": {"lambda": 1e999}}"#,
+                "field 'lambda' must be a finite number",
+            ),
+        ];
+        for (name, body, needle) in cases {
+            let raw = format!(
+                "POST /solve HTTP/1.1\r\ncontent-length: {}\r\n\r\n{}",
+                body.len(),
+                body
+            );
+            let request = parse(raw.as_bytes()).expect(name);
+            let json = crate::util::json::Json::parse(
+                std::str::from_utf8(&request.body).expect(name),
+            )
+            .expect(name);
+            let err = crate::net::codec::decode_distance_job(&json).expect_err(name);
+            assert!(err.contains(needle), "{name}: '{err}' should contain '{needle}'");
         }
     }
 

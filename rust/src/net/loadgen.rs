@@ -1,0 +1,252 @@
+//! Replay load generator: drive the echocardiogram pairwise workload
+//! against any gateway or balancer address and measure serving
+//! behavior under saturation.
+//!
+//! The workload is the SAME deterministic job list the coordinator
+//! bench uses ([`crate::bench::coordinator::pairwise_jobs`]), encoded
+//! once through the wire codec and replayed by N client threads over
+//! fresh connections (`connection: close` — every request observes the
+//! peer's current admission state). The report separates the outcomes
+//! the serving stack distinguishes: `200` completions, `429`
+//! admission-control rejections (the saturation signal), other HTTP
+//! failures, and socket-level errors, plus p50/p99 latency over every
+//! answered request. `repro bench gateway` wraps this into
+//! `BENCH_gateway.json`.
+
+use std::net::{SocketAddr, ToSocketAddrs};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
+
+use crate::bench::coordinator::pairwise_jobs;
+use crate::coordinator::LatencyHistogram;
+use crate::error::{Error, Result};
+use crate::net::client;
+use crate::net::codec;
+use crate::util::json::Json;
+
+/// Replay parameters. `Default` is a seconds-scale smoke load; the CLI
+/// and the gateway bench override the counts.
+#[derive(Clone, Debug)]
+pub struct LoadgenConfig {
+    /// Target address (`host:port`) of a gateway or balancer.
+    pub addr: String,
+    /// Concurrent client threads.
+    pub clients: usize,
+    /// Total requests to send (the workload list is cycled).
+    pub jobs: usize,
+    /// Workload pixel-grid side (`size²` support points per measure).
+    pub size: usize,
+    /// Workload frames per video (downsampled 3:1 before pairing).
+    pub frames: usize,
+    /// Workload ε sweep — one cost fingerprint per value, so affinity
+    /// routing has several classes to place.
+    pub eps_values: Vec<f64>,
+    /// Per-request connect timeout.
+    pub connect_timeout: Duration,
+    /// Per-request response timeout.
+    pub io_timeout: Duration,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            addr: "127.0.0.1:0".to_string(),
+            clients: 4,
+            jobs: 64,
+            size: 12,
+            frames: 12,
+            eps_values: vec![0.05, 0.1],
+            connect_timeout: Duration::from_secs(1),
+            io_timeout: Duration::from_secs(120),
+        }
+    }
+}
+
+/// What one replay run observed.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    /// Requests sent (= [`LoadgenConfig::jobs`] unless the run errored
+    /// out early).
+    pub sent: u64,
+    /// `200` responses (job solved and delivered).
+    pub ok: u64,
+    /// `429` admission-control rejections.
+    pub rejected_429: u64,
+    /// Other HTTP error responses (`400`, `503`, …).
+    pub failed_other: u64,
+    /// Requests that died at the socket level (no HTTP response).
+    pub io_errors: u64,
+    /// Wall-clock time of the whole replay.
+    pub wall: Duration,
+    /// `200` responses per second of wall time.
+    pub throughput: f64,
+    /// `429` responses / requests sent.
+    pub rate_429: f64,
+    /// Median latency over answered requests (bucket upper bound).
+    pub p50: Duration,
+    /// 99th-percentile latency over answered requests.
+    pub p99: Duration,
+}
+
+impl LoadReport {
+    /// One-line human rendering (printed by the CLI and bench arms).
+    pub fn render(&self) -> String {
+        format!(
+            "{} sent: {} ok / {} busy(429) / {} failed / {} io errors in {:.2?} \
+             ({:.1} jobs/s, 429 rate {:.3}, p50 {:.1?}, p99 {:.1?})",
+            self.sent,
+            self.ok,
+            self.rejected_429,
+            self.failed_other,
+            self.io_errors,
+            self.wall,
+            self.throughput,
+            self.rate_429,
+            self.p50,
+            self.p99
+        )
+    }
+
+    /// The report as a `BENCH_gateway.json` row fragment.
+    pub fn json(&self) -> Json {
+        Json::obj(vec![
+            ("sent", Json::num(self.sent as f64)),
+            ("ok", Json::num(self.ok as f64)),
+            ("rejected_429", Json::num(self.rejected_429 as f64)),
+            ("failed_other", Json::num(self.failed_other as f64)),
+            ("io_errors", Json::num(self.io_errors as f64)),
+            ("wall_ms", Json::num(self.wall.as_secs_f64() * 1e3)),
+            ("throughput_jobs_per_sec", Json::num(self.throughput)),
+            ("rate_429", Json::num(self.rate_429)),
+            ("p50_us", Json::num(self.p50.as_micros() as f64)),
+            ("p99_us", Json::num(self.p99.as_micros() as f64)),
+        ])
+    }
+}
+
+/// Run one replay: encode the workload once, fan it out over
+/// `config.clients` threads, and aggregate the outcome counters. The
+/// job list is cycled when `config.jobs` exceeds it — cycling is what
+/// makes warm-cache behavior visible, since repeats share fingerprints
+/// with their first occurrence.
+pub fn run(config: &LoadgenConfig) -> Result<LoadReport> {
+    let addr: SocketAddr = config
+        .addr
+        .to_socket_addrs()
+        .map_err(|e| Error::Coordinator(format!("loadgen target '{}': {e}", config.addr)))?
+        .next()
+        .ok_or_else(|| {
+            Error::Coordinator(format!("loadgen target '{}' resolved to no address", config.addr))
+        })?;
+    let bodies: Vec<Vec<u8>> =
+        pairwise_jobs(config.size, config.frames, &config.eps_values)
+            .iter()
+            .map(|job| codec::distance_job_json(job).to_string_compact().into_bytes())
+            .collect();
+    if bodies.is_empty() {
+        return Err(Error::Coordinator("loadgen workload is empty".into()));
+    }
+
+    let cursor = AtomicUsize::new(0);
+    let ok = AtomicU64::new(0);
+    let rejected = AtomicU64::new(0);
+    let failed = AtomicU64::new(0);
+    let io_errors = AtomicU64::new(0);
+    let latency = LatencyHistogram::new();
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for _ in 0..config.clients.max(1) {
+            scope.spawn(|| loop {
+                let k = cursor.fetch_add(1, Ordering::Relaxed);
+                if k >= config.jobs {
+                    return;
+                }
+                let body = &bodies[k % bodies.len()];
+                let sent_at = Instant::now();
+                match client::request(
+                    addr,
+                    "POST",
+                    "/solve",
+                    Some(body),
+                    config.connect_timeout,
+                    config.io_timeout,
+                ) {
+                    Ok(response) => {
+                        latency.record(sent_at.elapsed());
+                        match response.status {
+                            200 => ok.fetch_add(1, Ordering::Relaxed),
+                            429 => rejected.fetch_add(1, Ordering::Relaxed),
+                            _ => failed.fetch_add(1, Ordering::Relaxed),
+                        };
+                    }
+                    Err(_) => {
+                        io_errors.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed();
+    let sent = config.jobs as u64;
+    let ok = ok.into_inner();
+    let rejected_429 = rejected.into_inner();
+    Ok(LoadReport {
+        sent,
+        ok,
+        rejected_429,
+        failed_other: failed.into_inner(),
+        io_errors: io_errors.into_inner(),
+        wall,
+        throughput: ok as f64 / wall.as_secs_f64().max(1e-9),
+        rate_429: rejected_429 as f64 / sent.max(1) as f64,
+        p50: latency.quantile(0.5),
+        p99: latency.quantile(0.99),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::CoordinatorConfig;
+    use crate::net::gateway::spawn_backends;
+
+    #[test]
+    fn replays_against_a_live_gateway_and_counts_outcomes() {
+        let mut backends = spawn_backends(
+            1,
+            &CoordinatorConfig { workers: 2, shards: 1, ..CoordinatorConfig::default() },
+        )
+        .unwrap();
+        let report = run(&LoadgenConfig {
+            addr: backends[0].local_addr().to_string(),
+            clients: 2,
+            jobs: 6,
+            size: 6,
+            frames: 6,
+            eps_values: vec![0.1],
+            ..LoadgenConfig::default()
+        })
+        .unwrap();
+        assert_eq!(report.sent, 6);
+        assert_eq!(report.ok, 6, "{}", report.render());
+        assert_eq!(report.io_errors, 0);
+        assert!(report.throughput > 0.0);
+        assert!(report.p50 <= report.p99);
+        // The JSON fragment carries every counter the schema check
+        // asserts on.
+        let row = report.json();
+        for key in ["sent", "ok", "rejected_429", "rate_429", "p50_us", "p99_us"] {
+            assert!(row.get(key).is_some(), "{key}");
+        }
+        backends[0].drain();
+    }
+
+    #[test]
+    fn unresolvable_target_is_a_loud_error() {
+        let err = run(&LoadgenConfig {
+            addr: "not-an-address".to_string(),
+            ..LoadgenConfig::default()
+        });
+        assert!(err.is_err());
+    }
+}

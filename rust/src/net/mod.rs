@@ -1,4 +1,6 @@
-//! Serve-mode HTTP front end for the coordinator (`repro serve --port`).
+//! Serve-mode HTTP front ends for the coordinator: the single-process
+//! gateway (`repro serve --port`) and the multi-process
+//! fingerprint-affine balancer (`repro balance --backends`).
 //!
 //! A zero-dependency HTTP/1.1 gateway over the batched
 //! [`DistanceService`](crate::coordinator::DistanceService): clients
@@ -7,6 +9,11 @@
 //! deliberately boring —
 //!
 //! ```text
+//!              clients / loadgen replay            [loadgen]
+//!                       │
+//!   Balancer ── affinity route + health probes + retry/failover
+//!        │          [balancer]  ⇄  HTTP client leg  [client]
+//!        ▼ (× N backends, same wire protocol either way)
 //!   TcpListener ── accept loop (bounded, non-blocking poll)
 //!        │               [gateway]
 //!   per-connection thread: parse → route → respond, keep-alive loop
@@ -18,8 +25,11 @@
 //!
 //! — so each layer is testable without the ones below it: the parser
 //! hardening corpus runs on byte slices, the router tests on an
-//! in-process service, and only `tests/gateway_integration.rs` opens
-//! real sockets.
+//! in-process service, and only `tests/gateway_integration.rs` /
+//! `tests/balancer_integration.rs` open real sockets. The balancer
+//! speaks the gateway's own protocol on both legs, so clients cannot
+//! tell one process from N, and relays job bodies verbatim, so the
+//! gateway's bitwise-transparency contract extends through it.
 //!
 //! Two properties carry the module's weight:
 //!
@@ -39,12 +49,17 @@
 //! contract-lint wall-clock rule deliberately stops at the serving
 //! boundary (see [`crate::lint`]).
 
+pub mod balancer;
+pub mod client;
 pub mod codec;
 pub mod gateway;
 pub mod http;
+pub mod loadgen;
 pub mod response;
 pub mod router;
 
+pub use balancer::{Balancer, BalancerConfig};
 pub use gateway::{Gateway, GatewayConfig};
 pub use http::{HttpLimits, ParseError, Request};
+pub use loadgen::{LoadReport, LoadgenConfig};
 pub use response::Response;

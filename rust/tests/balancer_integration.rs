@@ -1,0 +1,495 @@
+//! The balancer's contract wall — real sockets, real multi-process
+//! topology (N gateway backends in one test binary, each with its own
+//! coordinator and artifact cache):
+//!
+//! * fingerprint affinity is cache locality: K distinct-fingerprint
+//!   jobs replayed over 2 backends cost exactly K artifact builds
+//!   fleet-wide (scraped from each backend's own `/metrics`), not 2K;
+//! * a job through the balancer solves BITWISE-identically to the same
+//!   job submitted in-process — the extra hop cannot change a number;
+//! * killing a backend mid-burst loses no accepted job: every client
+//!   that got a `200` got a real answer, and later jobs fail over;
+//! * a drained backend is evicted on its first `503` and re-admitted by
+//!   the health probe once a replacement listens on the same port,
+//!   while the in-flight job it was solving completes normally;
+//! * retry-budget exhaustion is a loud, prompt `503` — never a hang.
+//!
+//! Runs in the CI cache-parity job (release) alongside the gateway
+//! wall.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use spar_sink::coordinator::{
+    BarycenterJob, CoordinatorConfig, DistanceJob, DistanceService, Measure, Method, ProblemSpec,
+};
+use spar_sink::net::codec;
+use spar_sink::net::gateway::spawn_backends;
+use spar_sink::net::{Balancer, BalancerConfig, Gateway, GatewayConfig};
+use spar_sink::util::json::Json;
+
+// ---------------------------------------------------------------- helpers
+
+struct HttpResponse {
+    status: u16,
+    body: Vec<u8>,
+}
+
+impl HttpResponse {
+    fn json(&self) -> Json {
+        Json::parse(std::str::from_utf8(&self.body).expect("utf-8 body")).expect("json body")
+    }
+
+    fn text(&self) -> String {
+        String::from_utf8(self.body.clone()).expect("utf-8 body")
+    }
+}
+
+fn read_response<R: BufRead>(reader: &mut R) -> HttpResponse {
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line).expect("status line");
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("bad status line '{status_line}'"));
+    let mut length = 0usize;
+    loop {
+        let mut line = String::new();
+        reader.read_line(&mut line).expect("header line");
+        let line = line.trim_end();
+        if line.is_empty() {
+            break;
+        }
+        let (name, value) = line.split_once(':').expect("header colon");
+        if name.trim().eq_ignore_ascii_case("content-length") {
+            length = value.trim().parse().expect("content-length value");
+        }
+    }
+    let mut body = vec![0u8; length];
+    reader.read_exact(&mut body).expect("body");
+    HttpResponse { status, body }
+}
+
+/// One request/response round trip on a fresh connection. The long
+/// timeout covers stalled-worker jobs held deliberately in flight.
+fn request(addr: SocketAddr, method: &str, path: &str, body: &[u8]) -> HttpResponse {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(300))).expect("timeout");
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nconnection: close\r\ncontent-length: {}\r\n\r\n",
+        body.len()
+    )
+    .expect("request head");
+    stream.write_all(body).expect("request body");
+    read_response(&mut BufReader::new(stream))
+}
+
+fn post_json(addr: SocketAddr, path: &str, payload: &Json) -> HttpResponse {
+    request(addr, "POST", path, payload.to_string_compact().as_bytes())
+}
+
+fn bits(v: &Json, key: &str) -> u64 {
+    v.get(key)
+        .and_then(Json::as_f64)
+        .unwrap_or_else(|| panic!("missing numeric field '{key}'"))
+        .to_bits()
+}
+
+/// The value of an unlabeled sample `name <value>` on a Prometheus
+/// text page.
+fn prom_value(page: &str, name: &str) -> f64 {
+    page.lines()
+        .find_map(|line| line.strip_prefix(name).and_then(|rest| rest.strip_prefix(' ')))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(|| panic!("no sample '{name}' in:\n{page}"))
+}
+
+fn scrape(addr: SocketAddr) -> String {
+    let resp = request(addr, "GET", "/metrics", b"");
+    assert_eq!(resp.status, 200);
+    resp.text()
+}
+
+// ----------------------------------------------------------- job fixtures
+
+fn toy_measure(seed: u64, n: usize, mass: f64) -> Measure {
+    let mut rng = spar_sink::rng::Rng::seed_from(seed);
+    let points: Vec<Vec<f64>> =
+        (0..n).map(|_| vec![rng.uniform() * 10.0, rng.uniform() * 10.0]).collect();
+    let mut weights: Vec<f64> = (0..n).map(|_| rng.uniform() + 0.1).collect();
+    let total: f64 = weights.iter().sum();
+    weights.iter_mut().for_each(|w| *w *= mass / total);
+    Measure::new(points, weights)
+}
+
+/// Distinct `id`s give distinct supports, hence distinct fingerprints.
+fn distance_job(id: u64) -> DistanceJob {
+    DistanceJob {
+        id,
+        source: toy_measure(1000 + id, 40, 1.0),
+        target: toy_measure(2000 + id, 40, 1.2),
+        method: Method::SparSink,
+        spec: ProblemSpec { eta: 3.0, eps: 0.05, ..ProblemSpec::default() },
+        seed: 42 + id,
+    }
+}
+
+fn barycenter_job(id: u64) -> BarycenterJob {
+    let n = 32;
+    let support: Vec<Vec<f64>> = (0..n).map(|i| vec![i as f64 / (n - 1) as f64]).collect();
+    let bump = |mu: f64| -> Vec<f64> {
+        let raw: Vec<f64> =
+            support.iter().map(|p| (-(p[0] - mu).powi(2) / 0.01).exp() + 1e-4).collect();
+        let total: f64 = raw.iter().sum();
+        raw.iter().map(|x| x / total).collect()
+    };
+    BarycenterJob {
+        id,
+        marginals: vec![bump(0.25), bump(0.75)],
+        support: Arc::new(support),
+        weights: vec![0.5, 0.5],
+        method: Method::SparIbp,
+        spec: ProblemSpec { eps: 0.01, s_multiplier: 40.0, ..ProblemSpec::default() },
+        seed: 7,
+    }
+}
+
+/// A job that holds its worker for a long time: δ = 0 never converges,
+/// so the solver runs the full iteration budget.
+fn stalled_worker_job(id: u64) -> DistanceJob {
+    DistanceJob {
+        id,
+        source: toy_measure(1, 64, 1.0),
+        target: toy_measure(2, 64, 1.2),
+        method: Method::Sinkhorn,
+        spec: ProblemSpec {
+            eps: 0.05,
+            eta: 3.0,
+            delta: 0.0,
+            max_iters: 40_000,
+            ..ProblemSpec::default()
+        },
+        seed: 0,
+    }
+}
+
+fn default_coordinator() -> CoordinatorConfig {
+    CoordinatorConfig { workers: 2, shards: 1, ..CoordinatorConfig::default() }
+}
+
+/// A balancer over `backends` with test-speed probes and backoffs.
+fn balancer_over(backends: &[Gateway]) -> Balancer {
+    Balancer::start(BalancerConfig {
+        backends: backends.iter().map(|g| g.local_addr().to_string()).collect(),
+        probe_interval: Duration::from_millis(50),
+        retry_backoff: Duration::from_millis(10),
+        backoff_cap: Duration::from_millis(40),
+        ..BalancerConfig::default()
+    })
+    .expect("balancer start")
+}
+
+// ----------------------------------------------------------------- tests
+
+#[test]
+fn affinity_keeps_fleet_cache_misses_at_the_distinct_fingerprint_count() {
+    // K distinct fingerprints, each job replayed 3 times over 2
+    // backends. Affinity pins every fingerprint to ONE backend, so the
+    // fleet builds exactly K artifact sets; round-robin replays would
+    // rebuild on the other backend and the fleet-wide miss count would
+    // drift toward 2K.
+    const K: u64 = 4;
+    let mut backends = spawn_backends(2, &default_coordinator()).expect("backends start");
+    let mut balancer = balancer_over(&backends);
+    let addr = balancer.local_addr();
+
+    let mut first_bits: Vec<(u64, u64)> = Vec::new();
+    for round in 0..3 {
+        for id in 0..K {
+            let resp = post_json(addr, "/solve", &codec::distance_job_json(&distance_job(id)));
+            assert_eq!(resp.status, 200, "round {round} job {id}");
+            let wire = resp.json();
+            assert!(wire.get("error").is_none(), "round {round} job {id}");
+            let got = (bits(&wire, "distance"), bits(&wire, "objective"));
+            if round == 0 {
+                first_bits.push(got);
+            } else {
+                // Replays land on the same backend's warm cache and
+                // come back bitwise-equal.
+                assert_eq!(first_bits[id as usize], got, "round {round} job {id}");
+            }
+        }
+    }
+
+    // Scraped from each backend's OWN metrics page: per-service caches,
+    // summed fleet-wide.
+    let fleet_misses: f64 = backends
+        .iter()
+        .map(|g| prom_value(&scrape(g.local_addr()), "spar_sink_cache_misses_total"))
+        .sum();
+    assert_eq!(fleet_misses, K as f64, "affinity must build each fingerprint exactly once");
+
+    // Every post had a fingerprint and a healthy home slot: all affine,
+    // none round-robin.
+    let stats = balancer.stats();
+    assert_eq!(stats.iter().map(|s| s.routed_affine).sum::<u64>(), 3 * K);
+    assert_eq!(stats.iter().map(|s| s.routed_round_robin).sum::<u64>(), 0);
+    assert_eq!(stats.iter().map(|s| s.completed).sum::<u64>(), 3 * K);
+
+    // The balancer's own /metrics page serves the per-backend families.
+    let page = scrape(addr);
+    for backend in 0..2 {
+        assert!(
+            page.contains(&format!("spar_sink_balancer_backend_healthy{{backend=\"{backend}\"")),
+            "{page}"
+        );
+    }
+
+    balancer.drain();
+    for gateway in &mut backends {
+        gateway.drain();
+    }
+}
+
+#[test]
+fn balancer_round_trip_is_bitwise_equal_to_in_process_submit() {
+    // Same jobs through (a) an in-process reference service and (b) the
+    // balancer → gateway → coordinator chain. Results are pure
+    // functions of the job, so any drift is a proxy layer corrupting a
+    // float.
+    let mut backends = spawn_backends(2, &default_coordinator()).expect("backends start");
+    let reference = DistanceService::start(default_coordinator());
+    let mut balancer = balancer_over(&backends);
+    let addr = balancer.local_addr();
+
+    for id in 0..3 {
+        let job = distance_job(id);
+        let expected = reference.submit(job.clone()).unwrap().recv().unwrap();
+        assert!(expected.error.is_none(), "{:?}", expected.error);
+        let resp = post_json(addr, "/solve", &codec::distance_job_json(&job));
+        assert_eq!(resp.status, 200);
+        let wire = resp.json();
+        assert_eq!(bits(&wire, "distance"), expected.distance.to_bits(), "job {id}");
+        assert_eq!(bits(&wire, "objective"), expected.objective.to_bits(), "job {id}");
+    }
+
+    let bary = barycenter_job(9);
+    let expected = reference.submit_barycenter(bary.clone()).unwrap().recv().unwrap();
+    assert!(expected.error.is_none(), "{:?}", expected.error);
+    let resp = post_json(addr, "/barycenter", &codec::barycenter_job_json(&bary));
+    assert_eq!(resp.status, 200);
+    let q = resp.json().get("q").expect("barycenter q").items().to_vec();
+    assert_eq!(q.len(), expected.q.len());
+    for (sent, got) in q.iter().zip(expected.q.iter()) {
+        assert_eq!(sent.as_f64().unwrap().to_bits(), got.to_bits());
+    }
+
+    reference.shutdown();
+    balancer.drain();
+    for gateway in &mut backends {
+        gateway.drain();
+    }
+}
+
+#[test]
+fn backend_kill_mid_burst_loses_no_accepted_job_and_fails_over() {
+    let mut backends = spawn_backends(2, &default_coordinator()).expect("backends start");
+    let mut balancer = balancer_over(&backends);
+    let addr = balancer.local_addr();
+
+    // 6 clients, 4 jobs each, while the main thread kills backend 1
+    // partway through. The contract: every response is a 200 carrying
+    // the right job id — a kill may slow a job down (failover + retry)
+    // but may never lose or corrupt one.
+    let clients: Vec<_> = (0..6u64)
+        .map(|client| {
+            std::thread::spawn(move || {
+                for round in 0..4u64 {
+                    let id = client * 4 + round;
+                    let resp =
+                        post_json(addr, "/solve", &codec::distance_job_json(&distance_job(id)));
+                    assert_eq!(resp.status, 200, "client {client} round {round}");
+                    let wire = resp.json();
+                    assert_eq!(
+                        wire.get("id").and_then(Json::as_f64),
+                        Some(id as f64),
+                        "client {client} round {round}"
+                    );
+                    assert!(wire.get("error").is_none(), "client {client} round {round}");
+                    let distance = wire.get("distance").and_then(Json::as_f64).unwrap();
+                    assert!(distance.is_finite() && distance >= 0.0, "job {id}: {distance}");
+                }
+            })
+        })
+        .collect();
+
+    // Kill one backend mid-burst: its drop drains gracefully (in-flight
+    // proxied jobs complete) and then its listener is gone, so later
+    // attempts evict it and fail over.
+    std::thread::sleep(Duration::from_millis(100));
+    drop(backends.remove(1));
+    for client in clients {
+        client.join().expect("burst client");
+    }
+
+    // The survivor keeps serving through the balancer.
+    let resp = post_json(addr, "/solve", &codec::distance_job_json(&distance_job(99)));
+    assert_eq!(resp.status, 200);
+
+    // The dead backend is evicted (by a failed proxy attempt or by the
+    // health probe — whichever saw it first).
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        let stats = balancer.stats();
+        if !stats[1].healthy {
+            assert!(stats[1].evictions >= 1);
+            break;
+        }
+        assert!(Instant::now() < deadline, "backend 1 never evicted: {stats:?}");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    // 24 burst jobs + 1 failover probe job, all completed somewhere.
+    let stats = balancer.stats();
+    assert_eq!(stats.iter().map(|s| s.completed).sum::<u64>(), 25);
+
+    balancer.drain();
+    backends[0].drain();
+}
+
+#[test]
+fn drain_evicts_completes_in_flight_and_probe_readmits_on_recovery() {
+    let mut backends = spawn_backends(1, &default_coordinator()).expect("backend starts");
+    let gateway = backends.remove(0);
+    let port = gateway.local_addr().port();
+    let mut balancer = balancer_over(std::slice::from_ref(&gateway));
+    let addr = balancer.local_addr();
+
+    // Sanity: the chain serves before the fault.
+    assert_eq!(
+        post_json(addr, "/solve", &codec::distance_job_json(&distance_job(0))).status,
+        200
+    );
+
+    // Park a long job in flight through the balancer, then put the
+    // backend into probe-visible drain: its accept loop keeps answering
+    // (503 to new jobs) while in-flight work completes.
+    let in_flight = std::thread::spawn(move || {
+        post_json(addr, "/solve", &codec::distance_job_json(&stalled_worker_job(1)))
+    });
+    std::thread::sleep(Duration::from_millis(300));
+    gateway.begin_drain();
+
+    // A new job meets the draining backend: first 503 evicts it, and
+    // with no other backend the balancer answers a loud 503 instead of
+    // hanging.
+    let resp = post_json(addr, "/solve", &codec::distance_job_json(&distance_job(2)));
+    assert_eq!(resp.status, 503);
+    let stats = balancer.stats();
+    assert!(stats[0].evictions >= 1, "{stats:?}");
+    assert!(!stats[0].healthy, "{stats:?}");
+
+    // The fault injection cost the in-flight job nothing.
+    let resp = in_flight.join().expect("in-flight client");
+    assert_eq!(resp.status, 200);
+    assert_eq!(resp.json().get("id").and_then(Json::as_f64), Some(1.0));
+
+    // Recovery: retire the drained process and stand a fresh one up on
+    // the SAME port (the balancer's backend list is fixed at start).
+    drop(gateway);
+    let service = Arc::new(DistanceService::start(default_coordinator()));
+    let replacement = Gateway::start(
+        service,
+        GatewayConfig { port, ..GatewayConfig::default() },
+    )
+    .expect("replacement gateway binds the vacated port");
+
+    // The health probe is the only re-admission path; wait for it.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let stats = balancer.stats();
+        if stats[0].healthy {
+            assert!(stats[0].readmissions >= 1, "{stats:?}");
+            break;
+        }
+        assert!(Instant::now() < deadline, "backend never re-admitted: {stats:?}");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // Jobs route to the replacement again.
+    let resp = post_json(addr, "/solve", &codec::distance_job_json(&distance_job(3)));
+    assert_eq!(resp.status, 200);
+
+    balancer.drain();
+    drop(replacement);
+}
+
+#[test]
+fn retry_budget_exhaustion_is_a_loud_503_not_a_hang() {
+    // One deliberately starved backend: 1 worker, queue of 1, batches
+    // of 1, occupied by never-converging jobs — it answers 429 for as
+    // long as the test cares to ask.
+    let mut backends = spawn_backends(
+        1,
+        &CoordinatorConfig {
+            workers: 1,
+            shards: 1,
+            queue_cap: 1,
+            max_batch: 1,
+            batch_window: Duration::from_millis(1),
+            ..CoordinatorConfig::default()
+        },
+    )
+    .expect("backend starts");
+    let backend_addr = backends[0].local_addr();
+    let occupiers: Vec<_> = (0..4u64)
+        .map(|id| {
+            std::thread::spawn(move || {
+                post_json(
+                    backend_addr,
+                    "/solve",
+                    &codec::distance_job_json(&stalled_worker_job(id)),
+                )
+                .status
+            })
+        })
+        .collect();
+    // Let the occupiers saturate the pipeline before measuring.
+    std::thread::sleep(Duration::from_millis(300));
+
+    let mut balancer = Balancer::start(BalancerConfig {
+        backends: vec![backend_addr.to_string()],
+        retry_budget: 2,
+        retry_backoff: Duration::from_millis(10),
+        backoff_cap: Duration::from_millis(40),
+        ..BalancerConfig::default()
+    })
+    .expect("balancer start");
+
+    let t0 = Instant::now();
+    let resp =
+        post_json(balancer.local_addr(), "/solve", &codec::distance_job_json(&distance_job(5)));
+    let elapsed = t0.elapsed();
+    assert_eq!(resp.status, 503);
+    let error = resp.json().get("error").and_then(Json::as_str).expect("error body").to_string();
+    assert!(error.contains("retry budget exhausted after 2 attempts"), "{error}");
+    assert!(error.contains("429"), "{error}");
+    // Loud means prompt: two attempts with clamped backoff, not a
+    // wait-for-the-queue hang.
+    assert!(elapsed < Duration::from_secs(30), "{elapsed:?}");
+
+    // Saturation never evicts: 429 is a healthy backend saying "later".
+    let stats = balancer.stats();
+    assert_eq!(stats[0].evictions, 0, "{stats:?}");
+    assert!(stats[0].healthy, "{stats:?}");
+    assert!(stats[0].retried >= 2, "{stats:?}");
+
+    balancer.drain();
+    for status in occupiers.into_iter().map(|c| c.join().expect("occupier")) {
+        assert!(status == 200 || status == 429, "{status}");
+    }
+    backends[0].drain();
+}
